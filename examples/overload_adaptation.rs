@@ -1,0 +1,61 @@
+//! Scenario: a traffic spike hits the source (paper §IV.B scenario ii).
+//!
+//! Poisson arrivals step through rising mean rates; Algorithm 4 adapts the
+//! early-exit threshold so *all* traffic is admitted, trading accuracy for
+//! throughput. Prints the threshold/queue trace per rate — the mechanism
+//! behind the paper's Figs 5–6.
+//!
+//! Run: `cargo run --release --example overload_adaptation -- [--model resnetl --use-ae]`
+
+use anyhow::Result;
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::cli::Args;
+use mdi_exit::coordinator::{run_from_artifacts, AdmissionMode, ExperimentConfig};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let model = args.str_or("model", "mobilenetv2l").to_string();
+    let use_ae = args.bool_or("use-ae", false)?;
+    let topology = args.str_or("topology", "3-node-mesh").to_string();
+
+    let manifest = Manifest::load(mdi_exit::artifacts_dir())?;
+    println!("overload_adaptation: {model} on {topology} (Alg. 4, Poisson arrivals)");
+    println!(
+        "\n{:>10} {:>10} {:>10} {:>10} {:>12} {:>10}",
+        "rate(Hz)", "final T_e", "accuracy", "tput(Hz)", "p95 lat(ms)", "exit@1"
+    );
+
+    for rate in [10.0, 25.0, 50.0, 100.0, 200.0, 400.0] {
+        let mut cfg = ExperimentConfig::new(
+            &model,
+            &topology,
+            AdmissionMode::AdaptiveThreshold {
+                rate_hz: rate,
+                initial_t_e: 0.9,
+                t_e_min: 0.05,
+            },
+        );
+        cfg.use_ae = use_ae;
+        cfg.duration_s = 45.0;
+        cfg.warmup_s = 15.0;
+        cfg.compute_scale = 0.125;
+        let mut r = run_from_artifacts(cfg, &manifest)?;
+        println!(
+            "{:>10.0} {:>10.3} {:>10.4} {:>10.1} {:>12.2} {:>10.2}",
+            rate,
+            r.final_t_e.unwrap_or(f64::NAN),
+            r.accuracy(),
+            r.throughput_hz(),
+            r.latency.p95() * 1e3,
+            r.exit_fractions().first().copied().unwrap_or(0.0),
+        );
+    }
+
+    println!(
+        "\nExpected shape (paper Figs 5–6): as the rate grows, T_e falls, more\n\
+         samples exit at point 1, and accuracy degrades gracefully instead of\n\
+         queues growing without bound."
+    );
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Quickstart: the public API in five minutes.
+//!
+//! 1. load the artifact manifest (`make artifacts` first),
+//! 2. inspect the partitioned models and their exit points (paper Fig. 2),
+//! 3. run one MDI-Exit experiment on the discrete-event driver,
+//! 4. read the report.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::coordinator::{run_from_artifacts, AdmissionMode, ExperimentConfig};
+
+fn main() -> Result<()> {
+    // 1. Artifacts: everything the Python AOT pipeline produced.
+    let manifest = Manifest::load(mdi_exit::artifacts_dir())?;
+    println!("dataset: {} held-out samples", manifest.dataset.n);
+
+    // 2. The partitioned models (paper Fig. 2: exit-point placement).
+    for (name, info) in &manifest.models {
+        println!("\nmodel {name} — {} tasks (exit points):", info.num_stages);
+        for s in &info.stages {
+            println!(
+                "  τ_{}: {:>3?} -> {:>3?}  {:>7.2} ms  features on wire: {:>6} B",
+                s.k, s.in_shape, s.out_shape, s.cost_ms, s.in_bytes
+            );
+        }
+        println!("  accuracy if everything exited at k: {:?}", info.exit_accuracy);
+        if let Some(ae) = &info.ae {
+            println!("  autoencoder at exit 1: {} B -> {} B ({:.0}x)",
+                     ae.raw_bytes, ae.code_bytes, ae.compression);
+        }
+    }
+
+    // 3. One experiment: MobileNetV2-Lite on the 3-node mesh, fixed
+    //    confidence threshold 0.9, Alg. 3 adapting the data rate.
+    let mut cfg = ExperimentConfig::new(
+        "mobilenetv2l",
+        "3-node-mesh",
+        AdmissionMode::AdaptiveRate { threshold: 0.9, initial_mu_s: 0.25 },
+    );
+    cfg.duration_s = 30.0; // virtual seconds — finishes in well under a wallclock second
+    cfg.warmup_s = 10.0;
+    cfg.compute_scale = 0.125; // model edge-class devices
+
+    let mut report = run_from_artifacts(cfg, &manifest)?;
+
+    // 4. The report.
+    println!("\n== 3-node mesh, T_e = 0.9, Alg. 3 rate adaptation ==");
+    println!("admitted rate   {:>8.1} Hz", report.admitted_rate_hz());
+    println!("completed rate  {:>8.1} Hz", report.throughput_hz());
+    println!("accuracy        {:>8.4}", report.accuracy());
+    println!("latency p50/p95 {:>8.2} / {:.2} ms",
+             report.latency.p50() * 1e3, report.latency.p95() * 1e3);
+    println!("exit fractions  {:?}",
+             report.exit_fractions().iter().map(|f| format!("{f:.2}")).collect::<Vec<_>>());
+    println!("offloads        {:>8}", report.task_transfers);
+    println!("bytes on wire   {:>8}", report.bytes_on_wire);
+    Ok(())
+}

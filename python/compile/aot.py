@@ -1,0 +1,381 @@
+"""AOT pipeline: train -> partition -> lower to HLO text -> emit artifacts.
+
+This is the single build-time entry point (`make artifacts`).  It produces
+everything the Rust runtime consumes; after it runs, Python is never needed
+again (DESIGN.md: Python is never on the request path).
+
+Outputs under --out (default ../artifacts):
+  manifest.json                     index of everything below
+  dataset.bin                       held-out test set (source worker input)
+  <model>/stage<k>.hlo.txt          task τ_k as HLO text: feat -> (feat', probs)
+  resnetl/ae_enc.hlo.txt, ae_dec.hlo.txt
+  exits_<model>.bin                 per-sample per-exit (confidence, prediction)
+  exits_resnetl_ae.bin              same, with the AE on the stage-1 boundary
+  cache/params_<model>.npz          trained parameters (makes rebuilds no-ops)
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax ≥ 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import train as T
+from .kernels import conv as kconv
+from .kernels import head as khead
+
+SEED = 20240710          # fixed: artifacts are reproducible bit-for-bit
+TEST_N = 4096
+EXITS_MAGIC = 0x4D444958  # "MDIX"
+CONF_THRESHOLDS = [0.5, 0.6, 0.7, 0.8, 0.9, 0.95]
+
+
+# ---------------------------------------------------------------------------
+# HLO text emission
+# ---------------------------------------------------------------------------
+
+def lower_to_hlo_text(fn, *arg_specs) -> str:
+    """jit(fn).lower(specs) -> stablehlo -> XlaComputation -> HLO text.
+
+    Two print options are load-bearing (found the hard way; the Rust side
+    cross-checks exact predictions in rust/tests/integration_xla.rs):
+
+    * ``print_large_constants=True`` — the default printer elides big
+      weight constants as ``{...}``, which XLA's text *parser* silently
+      zero-fills: every trained parameter would become 0 on the Rust side.
+    * ``print_metadata=False`` — jax emits ``source_end_line`` metadata that
+      xla_extension 0.5.1's parser rejects outright.
+    """
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    opts.print_metadata = False
+    return comp.as_hlo_module().to_string(opts)
+
+
+def emit_stage_hlo(name: str, params: dict, k: int, out_path: str) -> int:
+    """Lower task τ_k (Pallas backend) to HLO text; returns file size."""
+    in_shape = M.stage_input_shape(name, k)
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+
+    def stage(x):
+        feat, probs = M.stage_apply(name, params, k, x, backend="pallas")
+        return feat, probs
+
+    text = lower_to_hlo_text(stage, spec)
+    with open(out_path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def emit_ae_hlo(ae: dict, out_dir: str) -> dict:
+    enc_spec = jax.ShapeDtypeStruct((32, 32, 32), jnp.float32)
+    dec_spec = jax.ShapeDtypeStruct(M.AE_CODE_SHAPE, jnp.float32)
+    enc_path = os.path.join(out_dir, "ae_enc.hlo.txt")
+    dec_path = os.path.join(out_dir, "ae_dec.hlo.txt")
+    with open(enc_path, "w") as f:
+        f.write(lower_to_hlo_text(
+            lambda x: (M.ae_encode(ae, x, backend="pallas"),), enc_spec))
+    with open(dec_path, "w") as f:
+        f.write(lower_to_hlo_text(
+            lambda z: (M.ae_decode(ae, z, backend="pallas"),), dec_spec))
+    return {"enc_hlo": "resnetl/ae_enc.hlo.txt",
+            "dec_hlo": "resnetl/ae_dec.hlo.txt"}
+
+
+# ---------------------------------------------------------------------------
+# Parameter cache
+# ---------------------------------------------------------------------------
+
+def _flatten(d: dict, prefix=""):
+    for key, val in d.items():
+        path = f"{prefix}/{key}" if prefix else key
+        if isinstance(val, dict):
+            yield from _flatten(val, path)
+        else:
+            yield path, np.asarray(val)
+
+
+def _unflatten(flat: dict) -> dict:
+    out: dict = {}
+    for path, val in flat.items():
+        parts = path.split("/")
+        node = out
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = jnp.asarray(val)
+    return out
+
+
+def save_params(path: str, params: dict) -> None:
+    np.savez(path, **dict(_flatten(params)))
+
+
+def load_params(path: str) -> dict:
+    with np.load(path) as z:
+        return _unflatten({key: z[key] for key in z.files})
+
+
+# ---------------------------------------------------------------------------
+# Measurements for the manifest
+# ---------------------------------------------------------------------------
+
+def measure_stage_cost_ms(name: str, params: dict, k: int, iters=30) -> float:
+    """Median wallclock of the compiled (Pallas-backend) stage, batch 1.
+
+    This is what the Rust runtime will pay per task on this machine; simnet
+    divides it by per-worker speed factors to recreate Jetson heterogeneity.
+    """
+    fn = jax.jit(lambda x: M.stage_apply(name, params, k, x, backend="pallas"))
+    x = jnp.zeros(M.stage_input_shape(name, k), jnp.float32)
+    jax.block_until_ready(fn(x))  # compile
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(x))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e3)
+
+
+def measure_fn_cost_ms(fn, x, iters=30) -> float:
+    jfn = jax.jit(fn)
+    jax.block_until_ready(jfn(x))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(x))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e3)
+
+
+def write_exits_bin(path: str, conf: np.ndarray, pred: np.ndarray) -> None:
+    """Per-sample per-exit oracle table for the Rust SimEngine.
+
+    Layout: u32 magic | u32 version=1 | u32 n | u32 K
+            n*K f32 confidence (row-major, sample-major)
+            n*K u8  predicted class
+    """
+    n, k = conf.shape
+    with open(path, "wb") as f:
+        f.write(np.array([EXITS_MAGIC, 1, n, k], dtype=np.uint32).tobytes())
+        f.write(conf.astype(np.float32).tobytes())
+        f.write(pred.astype(np.uint8).tobytes())
+
+
+def exit_rates(conf: np.ndarray, thresholds) -> dict:
+    """Fraction of samples that would exit at each point per threshold
+    (first exit whose confidence clears T_e; last exit absorbs the rest)."""
+    n, k = conf.shape
+    out = {}
+    for t in thresholds:
+        taken = np.zeros(k)
+        remaining = np.ones(n, dtype=bool)
+        for j in range(k - 1):
+            hit = remaining & (conf[:, j] > t)
+            taken[j] = hit.sum()
+            remaining &= ~hit
+        taken[k - 1] = remaining.sum()
+        out[str(t)] = (taken / n).round(4).tolist()
+    return out
+
+
+def vmem_audit(name: str) -> list:
+    """Static L1 perf audit: worst-case VMEM bytes + MXU utilization
+    estimates per stage (DESIGN.md §8 / EXPERIMENTS.md §Perf)."""
+    rows = []
+    for k in range(1, M.num_stages(name) + 1):
+        h, w, c = M.stage_output_shape(name, k)
+        rows.append({
+            "stage": k,
+            "head_vmem_bytes": khead.vmem_footprint_head(h, w, c, M.NUM_CLASSES),
+            "matmul_vmem_bytes": kconv.vmem_footprint_matmul(h * w, 9 * c, c),
+            "depthwise_vmem_bytes": kconv.vmem_footprint_depthwise(h, w, c),
+            # main conv contraction of the stage, as the MXU sees it
+            "mxu_efficiency": round(kconv.mxu_efficiency(h * w, 9 * c, c), 4),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Main
+# ---------------------------------------------------------------------------
+
+def canonical_templates():
+    """The one template set shared by training, the AE, and the test set.
+
+    Must match train.train_model's internal derivation (first split of the
+    training key) so cached parameters remain valid across rebuilds.
+    """
+    ktpl = jax.random.split(jax.random.PRNGKey(SEED), 3)[0]
+    return D.class_templates(ktpl)
+
+
+def build_model(name: str, out_dir: str, cache_dir: str, steps: int,
+                ds_test: D.Dataset, templates, force: bool, log=print) -> dict:
+    cache = os.path.join(cache_dir, f"params_{name}.npz")
+    if os.path.exists(cache) and not force:
+        log(f"[aot] {name}: cached params {cache}")
+        params = load_params(cache)
+    else:
+        params = T.train_model(name, jax.random.PRNGKey(SEED), steps=steps,
+                               log=log, templates=templates)
+        save_params(cache, params)
+
+    model_dir = os.path.join(out_dir, name)
+    os.makedirs(model_dir, exist_ok=True)
+
+    stages = []
+    for k in range(1, M.num_stages(name) + 1):
+        hlo_rel = f"{name}/stage{k}.hlo.txt"
+        size = emit_stage_hlo(name, params, k, os.path.join(out_dir, hlo_rel))
+        in_shape = M.stage_input_shape(name, k)
+        out_shape = M.stage_output_shape(name, k)
+        cost = measure_stage_cost_ms(name, params, k)
+        stages.append({
+            "k": k,
+            "in_shape": list(in_shape),
+            "out_shape": list(out_shape),
+            "probs_dim": M.NUM_CLASSES,
+            "hlo": hlo_rel,
+            "hlo_text_bytes": size,
+            "cost_ms": round(cost, 4),
+            "in_bytes": 4 * int(np.prod(in_shape)),
+            "out_bytes": 4 * int(np.prod(out_shape)),
+        })
+        log(f"[aot] {name} stage {k}: {size} chars, {cost:.2f} ms")
+
+    conf, pred, acc = T.eval_exits(name, params, ds_test)
+    conf, pred = np.asarray(conf), np.asarray(pred)
+    exits_rel = f"exits_{name}.bin"
+    write_exits_bin(os.path.join(out_dir, exits_rel), conf, pred)
+
+    entry = {
+        "num_stages": M.num_stages(name),
+        "stages": stages,
+        "exits_bin": exits_rel,
+        "exit_accuracy": np.asarray(acc).round(4).tolist(),
+        "mean_confidence": conf.mean(axis=0).round(4).tolist(),
+        "exit_rate_at": exit_rates(conf, CONF_THRESHOLDS),
+        "vmem_audit": vmem_audit(name),
+        "ae": None,
+    }
+    log(f"[aot] {name}: per-exit accuracy {entry['exit_accuracy']}")
+    return entry, params
+
+
+def build_autoencoder(params_resnet: dict, out_dir: str, cache_dir: str,
+                      steps: int, ds_test: D.Dataset, templates, base_acc,
+                      force: bool, log=print) -> dict:
+    cache = os.path.join(cache_dir, "params_ae.npz")
+    if os.path.exists(cache) and not force:
+        log(f"[aot] ae: cached params {cache}")
+        ae = load_params(cache)
+    else:
+        ae = T.train_autoencoder(params_resnet, jax.random.PRNGKey(SEED + 1),
+                                 steps=steps, log=log, templates=templates)
+        save_params(cache, ae)
+
+    entry = emit_ae_hlo(ae, os.path.join(out_dir, "resnetl"))
+
+    conf, pred, acc = T.eval_exits("resnetl", params_resnet, ds_test, ae=ae)
+    conf, pred = np.asarray(conf), np.asarray(pred)
+    write_exits_bin(os.path.join(out_dir, "exits_resnetl_ae.bin"), conf, pred)
+
+    raw_bytes = 4 * 32 * 32 * 32
+    code_bytes = 4 * int(np.prod(M.AE_CODE_SHAPE))
+    acc_drop = [round(float(b - a), 4) for a, b in zip(np.asarray(acc), base_acc)]
+    enc_cost = measure_fn_cost_ms(
+        lambda x: M.ae_encode(ae, x, backend="pallas"),
+        jnp.zeros((32, 32, 32), jnp.float32))
+    dec_cost = measure_fn_cost_ms(
+        lambda z: M.ae_decode(ae, z, backend="pallas"),
+        jnp.zeros(M.AE_CODE_SHAPE, jnp.float32))
+    entry.update({
+        "code_shape": list(M.AE_CODE_SHAPE),
+        "code_bytes": code_bytes,
+        "raw_bytes": raw_bytes,
+        "compression": round(raw_bytes / code_bytes, 2),
+        "exit_accuracy_ae": np.asarray(acc).round(4).tolist(),
+        "acc_drop": acc_drop,
+        "enc_cost_ms": round(enc_cost, 4),
+        "dec_cost_ms": round(dec_cost, 4),
+        "exits_bin_ae": "exits_resnetl_ae.bin",
+    })
+    log(f"[aot] ae: {raw_bytes}B -> {code_bytes}B "
+        f"({entry['compression']}x), acc drop {acc_drop}")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=500)
+    ap.add_argument("--ae-steps", type=int, default=300)
+    ap.add_argument("--test-n", type=int, default=TEST_N)
+    ap.add_argument("--force", action="store_true",
+                    help="retrain even if cached params exist")
+    args = ap.parse_args()
+
+    out_dir = args.out
+    cache_dir = os.path.join(out_dir, "cache")
+    os.makedirs(cache_dir, exist_ok=True)
+
+    t_start = time.time()
+    templates = canonical_templates()
+    # held-out test set: seed disjoint from every training batch stream
+    ds_test = D.make_dataset(jax.random.PRNGKey(SEED + 999), args.test_n,
+                             templates)
+    D.write_dataset_bin(os.path.join(out_dir, "dataset.bin"), ds_test)
+    # Evaluate on the quantize->dequantize roundtrip of the images — the
+    # exact tensors the Rust source worker reconstructs from dataset.bin —
+    # so the exit-oracle tables match the PJRT runtime bit-for-bit
+    # (rust/tests/integration_xla.rs asserts prediction equality).
+    ds_test = D.Dataset(
+        images=jnp.asarray(D.dequantize_u8(D.quantize_u8(ds_test.images))),
+        labels=ds_test.labels,
+        difficulty=ds_test.difficulty,
+    )
+    print(f"[aot] dataset.bin: {args.test_n} samples")
+
+    manifest = {
+        "version": 1,
+        "seed": SEED,
+        "dataset": {"file": "dataset.bin", "n": args.test_n,
+                    "h": D.IMG_H, "w": D.IMG_W, "c": D.IMG_C,
+                    "num_classes": D.NUM_CLASSES},
+        "models": {},
+    }
+
+    mnet_entry, _ = build_model("mobilenetv2l", out_dir, cache_dir,
+                                args.steps, ds_test, templates, args.force)
+    manifest["models"]["mobilenetv2l"] = mnet_entry
+
+    rnet_entry, rparams = build_model("resnetl", out_dir, cache_dir,
+                                      args.steps, ds_test, templates, args.force)
+    rnet_entry["ae"] = build_autoencoder(
+        rparams, out_dir, cache_dir, args.ae_steps, ds_test, templates,
+        rnet_entry["exit_accuracy"], args.force)
+    manifest["models"]["resnetl"] = rnet_entry
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest.json written; total {time.time() - t_start:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Synthetic CIFAR-like dataset with a controlled difficulty spectrum.
+
+Substitution (DESIGN.md §1): the paper uses CIFAR-10 test images. Early-exit
+dynamics depend on *confidence heterogeneity* — some inputs are easy enough
+for exit 1, some need the full depth ("network overthinking", paper §I).
+We reproduce that property by construction:
+
+* each of the 10 classes is a fixed smooth template (low-frequency pattern
+  upsampled from an 8x8 seed),
+* each sample mixes its class template with Gaussian noise according to a
+  per-sample difficulty d ∈ [0,1]: easy samples (low d) are high-SNR and
+  classifiable by shallow exits; hard samples (high d) need depth or are
+  never classified correctly,
+* a random spatial roll adds pose variation so exits cannot memorise pixels.
+
+The difficulty value is recorded per sample and shipped in dataset.bin so
+the Rust side can stratify metrics by difficulty.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+IMG_H, IMG_W, IMG_C = 32, 32, 3
+NUM_CLASSES = 10
+_EASY_FRAC = 0.6  # fraction of samples drawn from the easy difficulty band
+
+
+@dataclasses.dataclass
+class Dataset:
+    images: jax.Array      # [n, 32, 32, 3] f32
+    labels: jax.Array      # [n] i32
+    difficulty: jax.Array  # [n] f32 in [0, 1]
+
+
+def class_templates(key: jax.Array) -> jax.Array:
+    """[10, 32, 32, 3] smooth unit-std class patterns."""
+    seeds = jax.random.normal(key, (NUM_CLASSES, 8, 8, IMG_C))
+    t = jax.image.resize(seeds, (NUM_CLASSES, IMG_H, IMG_W, IMG_C), "cubic")
+    t = t - jnp.mean(t, axis=(1, 2, 3), keepdims=True)
+    t = t / (jnp.std(t, axis=(1, 2, 3), keepdims=True) + 1e-8)
+    return t.astype(jnp.float32)
+
+
+def _sample_difficulty(key: jax.Array, n: int) -> jax.Array:
+    """Bimodal difficulty: 60% easy U(0, .45), 40% hard U(.45, 1)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    easy = jax.random.uniform(k1, (n,), minval=0.0, maxval=0.45)
+    hard = jax.random.uniform(k2, (n,), minval=0.45, maxval=1.0)
+    pick = jax.random.uniform(k3, (n,)) < _EASY_FRAC
+    return jnp.where(pick, easy, hard)
+
+
+def make_dataset(key: jax.Array, n: int, templates: jax.Array) -> Dataset:
+    """Draw n labelled samples from the synthetic distribution."""
+    ky, kd, kn, kr = jax.random.split(key, 4)
+    labels = jax.random.randint(ky, (n,), 0, NUM_CLASSES)
+    diff = _sample_difficulty(kd, n)
+    noise = jax.random.normal(kn, (n, IMG_H, IMG_W, IMG_C))
+    signal = templates[labels]                       # [n, 32, 32, 3]
+    amp = (1.1 - 0.9 * diff)[:, None, None, None]    # signal fades with d
+    sig = (0.12 + 0.55 * diff)[:, None, None, None]  # noise grows with d
+    imgs = signal * amp + noise * sig
+    # pose variation: independent per-sample circular shifts in [-3, 3]
+    shifts = jax.random.randint(kr, (n, 2), -3, 4)
+
+    def roll(img, sh):
+        return jnp.roll(img, shift=(sh[0], sh[1]), axis=(0, 1))
+
+    imgs = jax.vmap(roll)(imgs, shifts)
+    imgs = jnp.clip(imgs, -4.0, 4.0).astype(jnp.float32)
+    return Dataset(images=imgs, labels=labels.astype(jnp.int32),
+                   difficulty=diff.astype(jnp.float32))
+
+
+def quantize_u8(images: jax.Array) -> np.ndarray:
+    """f32 [-4,4] -> u8 for dataset.bin (Rust dequantizes: x/255*8-4)."""
+    q = jnp.clip((images + 4.0) / 8.0 * 255.0, 0.0, 255.0)
+    return np.asarray(jnp.round(q), dtype=np.uint8)
+
+
+def dequantize_u8(q: np.ndarray) -> np.ndarray:
+    """Inverse of quantize_u8 — must match rust/src/dataset exactly."""
+    return q.astype(np.float32) / 255.0 * 8.0 - 4.0
+
+
+DATASET_MAGIC = 0x4D444945  # "MDIE"
+
+
+def write_dataset_bin(path: str, ds: Dataset) -> None:
+    """Serialize the held-out test set for the Rust source worker.
+
+    Layout (little-endian):
+      u32 magic | u32 version=1 | u32 n | u32 h | u32 w | u32 c
+      n*h*w*c   u8 quantized pixels
+      n         u8 labels
+      n         f32 difficulty
+    """
+    imgs = quantize_u8(ds.images)
+    n, h, w, c = imgs.shape
+    with open(path, "wb") as f:
+        hdr = np.array([DATASET_MAGIC, 1, n, h, w, c], dtype=np.uint32)
+        f.write(hdr.tobytes())
+        f.write(imgs.tobytes())
+        f.write(np.asarray(ds.labels, dtype=np.uint8).tobytes())
+        f.write(np.asarray(ds.difficulty, dtype=np.float32).tobytes())

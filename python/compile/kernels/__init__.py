@@ -1,0 +1,9 @@
+"""L1 Pallas kernels + pure-jnp oracles for the MDI-Exit model stages.
+
+Public surface:
+  conv.matmul_pallas / conv2d_pallas / pointwise_pallas / depthwise3x3_pallas
+  head.head_pallas / head.dense_pallas
+  ref.*_ref oracles (also the training-time implementations)
+"""
+
+from . import conv, head, ref  # noqa: F401

@@ -1,0 +1,200 @@
+"""Pallas kernels for the convolution hot-spots (L1 of the stack).
+
+Hardware adaptation (DESIGN.md §2): the paper runs MobileNetV2/ResNet-50 on
+Jetson CUDA cores. We do not port CUDA threadblocks; we restate the compute
+for the TPU model Pallas exposes:
+
+* Convolution is **im2col patches × filter matrix** so the contraction runs
+  on the MXU systolic array.  The BlockSpec tiles the patch matrix into
+  VMEM-resident (block_m × K) · (K × block_n) tiles; K (= kh·kw·Cin, at most
+  a few hundred here) is kept un-tiled, which bounds VMEM per grid step at
+  `(block_m·K + K·block_n + block_m·block_n) · 4B` — ≤ ~1 MiB for every
+  shape in this repo, far under the ~16 MiB VMEM budget, leaving headroom
+  for the pipeline's double buffering.
+* Depthwise conv is bandwidth-bound: the kernel holds the full padded halo
+  block in VMEM and accumulates the 9 taps as strided vector multiplies
+  (VPU work, no MXU).  The grid tiles channels so wide layers stream.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO through the Pallas interpreter.
+Correctness vs `ref.py` is asserted by `python/tests/test_kernels.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+# The CPU interpreter executes the grid serially in Python-traced HLO, so we
+# fall back to a single grid step when the whole operand set is small enough
+# to "fit in VMEM" anyway.  On a real TPU these thresholds would instead pick
+# the pipelined multi-step grid.
+_VMEM_BUDGET_BYTES = 4 * 1024 * 1024  # conservative half of a TPUv4 core
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (MXU-friendly when possible)."""
+    if dim <= target:
+        return dim
+    for b in range(target, 0, -1):
+        if dim % b == 0:
+            return b
+    return dim
+
+
+# ---------------------------------------------------------------------------
+# Tiled matmul — the MXU contraction used by conv2d / pointwise / dense.
+# ---------------------------------------------------------------------------
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    # One (block_m, K) x (K, block_n) MXU tile per grid step. float32
+    # accumulate (preferred_element_type pins the MXU accumulator width).
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul_pallas(x: jax.Array, w: jax.Array,
+                  block_m: int = 128, block_n: int = 128) -> jax.Array:
+    """[m, k] @ [k, n] -> [m, n] via a 2-D grid of MXU tiles.
+
+    K is not tiled (see module docstring); block_m/block_n are clamped to
+    divisors of m/n so BlockSpecs tile exactly. Oracle: `ref.matmul_ref`.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# conv2d = im2col (layout transform, fuses into the surrounding HLO) + matmul
+# ---------------------------------------------------------------------------
+
+def conv2d_pallas(x: jax.Array, f: jax.Array, stride: int = 1,
+                  block_m: int = 128, block_n: int = 128) -> jax.Array:
+    """SAME conv [H,W,Cin] * [KH,KW,Cin,Cout] -> [OH,OW,Cout] on the MXU.
+
+    Patch extraction is the shared `ref.extract_patches` (identical
+    reduction order as the oracle); the contraction is `matmul_pallas`.
+    """
+    kh, kw, cin, cout = f.shape
+    h, w, _ = x.shape
+    oh = (h + stride - 1) // stride
+    ow = (w + stride - 1) // stride
+    patches = _ref.extract_patches(x, kh, kw, stride)
+    fm = f.reshape(kh * kw * cin, cout)
+    out = matmul_pallas(patches, fm, block_m=block_m, block_n=block_n)
+    return out.reshape(oh, ow, cout)
+
+
+def pointwise_pallas(x: jax.Array, w: jax.Array,
+                     block_m: int = 128, block_n: int = 128) -> jax.Array:
+    """1x1 conv [H,W,Cin] * [Cin,Cout] -> [H,W,Cout]: pure MXU matmul."""
+    h, ww, cin = x.shape
+    out = matmul_pallas(x.reshape(h * ww, cin), w,
+                        block_m=block_m, block_n=block_n)
+    return out.reshape(h, ww, -1)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise 3x3 — VPU kernel over a VMEM-resident halo block.
+# ---------------------------------------------------------------------------
+
+def _depthwise_kernel(xp_ref, f_ref, o_ref, *, stride: int, oh: int, ow: int):
+    # xp_ref: [H+2, W+2, Cblk] padded halo; f_ref: [3, 3, Cblk].
+    # 9 strided multiply-accumulates on the VPU; the halo never leaves VMEM.
+    xp = xp_ref[...]
+    f = f_ref[...]
+    acc = jnp.zeros((oh, ow, xp.shape[-1]), jnp.float32)
+    for i in range(3):
+        for j in range(3):
+            sl = jax.lax.slice(
+                xp,
+                (i, j, 0),
+                (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, xp.shape[-1]),
+                (stride, stride, 1),
+            )
+            acc = acc + sl * f[i, j, :]
+    o_ref[...] = acc
+
+
+def depthwise3x3_pallas(x: jax.Array, f: jax.Array, stride: int = 1,
+                        block_c: int = 128) -> jax.Array:
+    """Depthwise SAME 3x3 conv, channel-tiled grid.
+
+    Padding happens in the caller graph (fuses with the producer); each grid
+    step sees a [H+2, W+2, block_c] halo slab. Oracle: `ref.depthwise3x3_ref`.
+    """
+    h, w, c = x.shape
+    oh = (h + stride - 1) // stride
+    ow = (w + stride - 1) // stride
+    bc = _pick_block(c, block_c)
+    xp = jnp.pad(x.astype(jnp.float32), ((1, 1), (1, 1), (0, 0)))
+    kern = functools.partial(_depthwise_kernel, stride=stride, oh=oh, ow=ow)
+    return pl.pallas_call(
+        kern,
+        grid=(c // bc,),
+        in_specs=[
+            pl.BlockSpec((h + 2, w + 2, bc), lambda i: (0, 0, i)),
+            pl.BlockSpec((3, 3, bc), lambda i: (0, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((oh, ow, bc), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow, c), jnp.float32),
+        interpret=True,
+    )(xp, f.astype(jnp.float32))
+
+
+def vmem_footprint_matmul(m: int, k: int, n: int,
+                          block_m: int = 128, block_n: int = 128) -> int:
+    """Bytes of VMEM one grid step of `matmul_pallas` holds (f32).
+
+    Used by the build-time perf audit (aot.py) and DESIGN.md §8 numbers.
+    """
+    bm, bn = _pick_block(m, block_m), _pick_block(n, block_n)
+    return 4 * (bm * k + k * bn + bm * bn)
+
+
+def vmem_footprint_depthwise(h: int, w: int, c: int, stride: int = 1,
+                             block_c: int = 128) -> int:
+    """Bytes of VMEM one grid step of `depthwise3x3_pallas` holds (f32)."""
+    bc = _pick_block(c, block_c)
+    oh = (h + stride - 1) // stride
+    ow = (w + stride - 1) // stride
+    return 4 * ((h + 2) * (w + 2) * bc + 9 * bc + oh * ow * bc)
+
+
+def mxu_efficiency(m: int, k: int, n: int) -> float:
+    """Estimated MXU utilization of an (m,k)x(k,n) f32 contraction.
+
+    The 128x128 systolic array consumes (8,128)-tiled f32 operands; work
+    issued is the padded volume, useful work is m*k*n. This is the L1
+    perf-audit number DESIGN.md §8 and EXPERIMENTS.md §Perf report
+    (interpret-mode wallclock is not a TPU proxy, so utilization is
+    estimated structurally from the shapes the BlockSpecs produce).
+    """
+    def pad(d: int, t: int) -> int:
+        return ((d + t - 1) // t) * t
+
+    issued = pad(m, 8) * pad(k, 128) * pad(n, 128)
+    return (m * k * n) / issued

@@ -1,0 +1,70 @@
+"""Pallas kernel for the early-exit head (L1).
+
+The exit head is the piece the paper's Algorithm 1 invokes at every exit
+point k: feature map -> classifier -> softmax (eq. (1)).  It runs once per
+task per worker, so it is fused into a single kernel: global-average-pool
+reduction, the (1×C)·(C×v) classifier matvec, and a numerically-stable
+softmax, all without the GAP vector ever leaving VMEM.
+
+The whole operand set (feature map ≤ 32·32·128 f32 = 512 KiB, classifier
+≤ 128×10) fits in VMEM, so the grid is a single step; on larger models the
+H dimension would be gridded with a scratch accumulator.
+
+Oracle: `ref.head_ref`; dense oracle: `ref.dense_ref`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _head_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]                                   # [H, W, C] in VMEM
+    gap = jnp.mean(x, axis=(0, 1))                   # VPU reduction -> [C]
+    logits = jax.lax.dot_general(                    # MXU matvec -> [v]
+        gap[None, :], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[0] + b_ref[...]
+    z = logits - jnp.max(logits)                     # stable softmax (eq. 1)
+    e = jnp.exp(z)
+    o_ref[...] = e / jnp.sum(e)
+
+
+def head_pallas(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused GAP->dense->softmax: [H,W,C] -> [v] class probabilities."""
+    h, ww, c = x.shape
+    c2, v = w.shape
+    assert c == c2, f"feature/classifier mismatch {c} vs {c2}"
+    return pl.pallas_call(
+        _head_kernel,
+        out_shape=jax.ShapeDtypeStruct((v,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = jax.lax.dot_general(
+        x_ref[...][None, :], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )[0] + b_ref[...]
+
+
+def dense_pallas(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """[k] @ [k, n] + [n] -> [n] (single MXU matvec step)."""
+    k = x.shape[0]
+    k2, n = w.shape
+    assert k == k2
+    return pl.pallas_call(
+        _dense_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def vmem_footprint_head(h: int, w: int, c: int, v: int) -> int:
+    """Bytes of VMEM the single-step head kernel holds (f32)."""
+    return 4 * (h * w * c + c * v + v + v)

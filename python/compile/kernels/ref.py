@@ -1,0 +1,121 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels in
+`conv.py` / `head.py` match these implementations to float tolerance.
+
+They are also the *training-time* implementations: training runs the ref
+path (plain jnp/lax, differentiable, fast to trace), and the AOT stage
+lowering swaps in the Pallas kernels (`backend="pallas"` in model.py).
+The kernel-vs-ref tests are what make that swap sound.
+
+All functions operate on single images (no batch dim); training vmaps them.
+Layout is HWC / HWIO throughout (TPU-friendly, channels minor).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """[m, k] @ [k, n] -> [m, n] in float32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def extract_patches(x: jax.Array, kh: int, kw: int, stride: int) -> jax.Array:
+    """im2col: [H, W, C] -> [OH*OW, kh*kw*C] with SAME-style explicit padding.
+
+    Patch extraction is shared verbatim by the ref conv and the Pallas conv
+    (the Pallas kernel is the matmul contraction; im2col is the layout
+    transform that makes the MXU do convolution). Padding is symmetric
+    (kh//2, kw//2), so OH = ceil(H/stride).
+    """
+    h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((ph, ph), (pw, pw), (0, 0)))
+    oh = (h + stride - 1) // stride
+    ow = (w + stride - 1) // stride
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            # lax.slice (not python strided indexing): python step-slicing
+            # can lower to gather ops that XLA 0.5.1's HLO-text round-trip
+            # mis-executes; lax.slice stays a plain strided Slice op.
+            sl = jax.lax.slice(
+                xp,
+                (i, j, 0),
+                (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            cols.append(sl)
+    patches = jnp.concatenate(cols, axis=-1)  # [OH, OW, kh*kw*C]
+    return patches.reshape(oh * ow, kh * kw * c)
+
+
+def conv2d_ref(x: jax.Array, f: jax.Array, stride: int = 1) -> jax.Array:
+    """[H, W, Cin] * [KH, KW, Cin, Cout] -> [OH, OW, Cout], SAME padding.
+
+    Implemented as im2col + matmul so ref and Pallas share the exact same
+    reduction order (important for bit-level comparability of the sweep).
+    """
+    kh, kw, cin, cout = f.shape
+    h, w, _ = x.shape
+    oh = (h + stride - 1) // stride
+    ow = (w + stride - 1) // stride
+    patches = extract_patches(x, kh, kw, stride)          # [OH*OW, kh*kw*Cin]
+    fm = f.reshape(kh * kw * cin, cout)                   # [kh*kw*Cin, Cout]
+    return matmul_ref(patches, fm).reshape(oh, ow, cout)
+
+
+def pointwise_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """1x1 convolution: [H, W, Cin] * [Cin, Cout] -> [H, W, Cout]."""
+    h, ww, cin = x.shape
+    return matmul_ref(x.reshape(h * ww, cin), w).reshape(h, ww, -1)
+
+
+def depthwise3x3_ref(x: jax.Array, f: jax.Array, stride: int = 1) -> jax.Array:
+    """Depthwise 3x3: [H, W, C] * [3, 3, C] -> [OH, OW, C], SAME padding."""
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+    oh = (h + stride - 1) // stride
+    ow = (w + stride - 1) // stride
+    acc = jnp.zeros((oh, ow, c), jnp.float32)
+    for i in range(3):
+        for j in range(3):
+            sl = jax.lax.slice(
+                xp,
+                (i, j, 0),
+                (i + (oh - 1) * stride + 1, j + (ow - 1) * stride + 1, c),
+                (stride, stride, 1),
+            )
+            acc = acc + sl.astype(jnp.float32) * f[i, j, :].astype(jnp.float32)
+    return acc
+
+
+def dense_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """[k] @ [k, n] + [n] -> [n]."""
+    return matmul_ref(x[None, :], w)[0] + b.astype(jnp.float32)
+
+
+def head_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Fused exit head: GAP -> dense -> softmax.
+
+    [H, W, C] -> [v] class probabilities (eq. (1) of the paper; the
+    confidence level eq. (2) is max over this vector, taken by the Rust
+    worker).  Softmax is the numerically-stable shifted form.
+    """
+    gap = jnp.mean(x.astype(jnp.float32), axis=(0, 1))     # [C]
+    logits = dense_ref(gap, w, b)                           # [v]
+    z = logits - jnp.max(logits)
+    e = jnp.exp(z)
+    return e / jnp.sum(e)
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x: jax.Array) -> jax.Array:
+    return jnp.clip(x, 0.0, 6.0)

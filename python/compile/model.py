@@ -1,0 +1,308 @@
+"""L2: multi-exit CNN models, partitioned at the paper's exit points.
+
+Two model families mirror the paper's Fig. 2:
+
+* **mobilenetv2l** — MobileNetV2-style inverted-residual trunk with **5 exit
+  points** (the paper puts 5 exits in MobileNetV2),
+* **resnetl** — ResNet-style residual trunk with **3 exit points** plus a
+  bottleneck **autoencoder** at the first exit boundary (the paper adds an
+  AE after ResNet-50's first exit to shrink the 3.2 MB feature vector).
+
+Both are "Lite" variants scaled for the CPU testbed (DESIGN.md §1); the
+partition structure (task k = layers between exit k-1 and exit k, paper
+§III "Model Partitioning") is exactly the paper's.
+
+Everything is functional: params are nested dicts of arrays; stage_apply
+computes task τ_k.  `backend="ref"` uses the pure-jnp oracles (training,
+differentiable); `backend="pallas"` uses the L1 Pallas kernels (AOT
+lowering).  test_model.py asserts the two backends agree and that chained
+stages equal the monolithic forward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import head as khead
+from .kernels import ref as kref
+
+NUM_CLASSES = 10
+INPUT_SHAPE = (32, 32, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class Ops:
+    """Backend dispatch table (ref oracles vs Pallas kernels)."""
+    conv2d: Callable
+    pointwise: Callable
+    depthwise: Callable
+    head: Callable
+
+
+def get_ops(backend: str) -> Ops:
+    if backend == "ref":
+        return Ops(conv2d=kref.conv2d_ref, pointwise=kref.pointwise_ref,
+                   depthwise=kref.depthwise3x3_ref, head=kref.head_ref)
+    if backend == "pallas":
+        return Ops(conv2d=kconv.conv2d_pallas, pointwise=kconv.pointwise_pallas,
+                   depthwise=kconv.depthwise3x3_pallas, head=khead.head_pallas)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization
+# ---------------------------------------------------------------------------
+
+def _he(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _init_conv(key, kh, kw, cin, cout):
+    kw_, kb_ = jax.random.split(key)
+    return {"w": _he(kw_, (kh, kw, cin, cout), kh * kw * cin),
+            "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _init_pw(key, cin, cout):
+    return {"w": _he(key, (cin, cout), cin), "b": jnp.zeros((cout,), jnp.float32)}
+
+
+def _init_dw(key, c):
+    return {"w": _he(key, (3, 3, c), 9), "b": jnp.zeros((c,), jnp.float32)}
+
+
+def _init_head(key, c):
+    return {"w": _he(key, (c, NUM_CLASSES), c),
+            "b": jnp.zeros((NUM_CLASSES,), jnp.float32)}
+
+
+def _init_invres(key, cin, cout, expand):
+    k1, k2, k3 = jax.random.split(key, 3)
+    mid = cin * expand
+    return {"pw1": _init_pw(k1, cin, mid), "dw": _init_dw(k2, mid),
+            "pw2": _init_pw(k3, mid, cout)}
+
+
+def _init_basic(key, cin, cout, stride):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"c1": _init_conv(k1, 3, 3, cin, cout), "c2": _init_conv(k2, 3, 3, cout, cout)}
+    if stride != 1 or cin != cout:
+        p["sc"] = _init_conv(k3, 1, 1, cin, cout)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _conv_block(ops: Ops, p, x, stride=1, act=kref.relu):
+    return act(ops.conv2d(x, p["w"], stride) + p["b"])
+
+
+def _invres_block(ops: Ops, p, x, stride):
+    """MobileNetV2 inverted residual: expand 1x1 -> depthwise 3x3 -> project 1x1."""
+    h = kref.relu6(ops.pointwise(x, p["pw1"]["w"]) + p["pw1"]["b"])
+    h = kref.relu6(ops.depthwise(h, p["dw"]["w"], stride) + p["dw"]["b"])
+    h = ops.pointwise(h, p["pw2"]["w"]) + p["pw2"]["b"]  # linear bottleneck
+    if stride == 1 and x.shape[-1] == h.shape[-1]:
+        h = h + x
+    return h
+
+
+def _basic_block(ops: Ops, p, x, stride):
+    """ResNet basic block with projection shortcut when shape changes."""
+    h = kref.relu(ops.conv2d(x, p["c1"]["w"], stride) + p["c1"]["b"])
+    h = ops.conv2d(h, p["c2"]["w"], 1) + p["c2"]["b"]
+    sc = x if "sc" not in p else ops.conv2d(x, p["sc"]["w"], stride) + p["sc"]["b"]
+    return kref.relu(h + sc)
+
+
+def _head_logits(p, x):
+    """Training-path head (GAP -> dense, no softmax; CE wants logits)."""
+    gap = jnp.mean(x, axis=(0, 1))
+    return kref.dense_ref(gap, p["w"], p["b"])
+
+
+# ---------------------------------------------------------------------------
+# Model definitions
+# ---------------------------------------------------------------------------
+# Stage layout tables: (stage builder, exit-head input channels, feature shape
+# entering the stage). Stage k implements task τ_k of the paper.
+
+MOBILENET_STAGES = [
+    # (name, feature shape INTO the stage)
+    ("m1", (32, 32, 3)),
+    ("m2", (16, 16, 24)),
+    ("m3", (16, 16, 32)),
+    ("m4", (8, 8, 48)),
+    ("m5", (8, 8, 64)),
+]
+MOBILENET_OUT = [(16, 16, 24), (16, 16, 32), (8, 8, 48), (8, 8, 64), (4, 4, 128)]
+
+RESNET_STAGES = [
+    ("r1", (32, 32, 3)),
+    ("r2", (32, 32, 32)),
+    ("r3", (16, 16, 64)),
+]
+RESNET_OUT = [(32, 32, 32), (16, 16, 64), (8, 8, 128)]
+
+AE_CODE_SHAPE = (8, 8, 4)  # 1 KiB f32 code vs 128 KiB raw stage-1 features
+
+
+def model_names():
+    return ["mobilenetv2l", "resnetl"]
+
+
+def num_stages(name: str) -> int:
+    try:
+        return {"mobilenetv2l": 5, "resnetl": 3}[name]
+    except KeyError:
+        raise ValueError(f"unknown model {name!r}") from None
+
+
+def stage_input_shape(name: str, k: int):
+    """Shape of the feature tensor entering stage k (1-based)."""
+    tbl = MOBILENET_STAGES if name == "mobilenetv2l" else RESNET_STAGES
+    return tbl[k - 1][1]
+
+
+def stage_output_shape(name: str, k: int):
+    tbl = MOBILENET_OUT if name == "mobilenetv2l" else RESNET_OUT
+    return tbl[k - 1]
+
+
+def init_params(name: str, key: jax.Array) -> dict:
+    ks = jax.random.split(key, 24)
+    if name == "mobilenetv2l":
+        return {
+            "s1": {"stem": _init_conv(ks[0], 3, 3, 3, 16),
+                   "b1": _init_invres(ks[1], 16, 24, 4),
+                   "head": _init_head(ks[2], 24)},
+            "s2": {"b1": _init_invres(ks[3], 24, 32, 4),
+                   "head": _init_head(ks[4], 32)},
+            "s3": {"b1": _init_invres(ks[5], 32, 48, 4),
+                   "head": _init_head(ks[6], 48)},
+            "s4": {"b1": _init_invres(ks[7], 48, 64, 4),
+                   "head": _init_head(ks[8], 64)},
+            "s5": {"b1": _init_invres(ks[9], 64, 96, 4),
+                   "pw": _init_pw(ks[10], 96, 128),
+                   "head": _init_head(ks[11], 128)},
+        }
+    if name == "resnetl":
+        return {
+            "s1": {"stem": _init_conv(ks[0], 3, 3, 3, 32),
+                   "b1": _init_basic(ks[1], 32, 32, 1),
+                   "head": _init_head(ks[3], 32)},
+            "s2": {"b1": _init_basic(ks[4], 32, 32, 1),
+                   "b2": _init_basic(ks[5], 32, 64, 2),
+                   "head": _init_head(ks[6], 64)},
+            "s3": {"b1": _init_basic(ks[7], 64, 64, 1),
+                   "b2": _init_basic(ks[8], 64, 128, 2),
+                   "b3": _init_basic(ks[9], 128, 128, 1),
+                   "head": _init_head(ks[10], 128)},
+        }
+    raise ValueError(f"unknown model {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Stage application (task τ_k): features in -> (features out, exit output)
+# ---------------------------------------------------------------------------
+
+def _stage_trunk(name: str, params: dict, k: int, x: jax.Array, ops: Ops):
+    s = params[f"s{k}"]
+    if name == "mobilenetv2l":
+        if k == 1:
+            # stride-2 stem: keeps task 1 (which can never be offloaded —
+            # the source must run it) comparable in cost to later tasks,
+            # matching the paper's balanced exit placement (footnote 1).
+            h = _conv_block(ops, s["stem"], x, 2, kref.relu6)
+            return _invres_block(ops, s["b1"], h, 1)
+        if k == 2:
+            return _invres_block(ops, s["b1"], x, 1)
+        if k == 3:
+            return _invres_block(ops, s["b1"], x, 2)
+        if k == 4:
+            return _invres_block(ops, s["b1"], x, 1)
+        if k == 5:
+            h = _invres_block(ops, s["b1"], x, 2)
+            return kref.relu6(ops.pointwise(h, s["pw"]["w"]) + s["pw"]["b"])
+    if name == "resnetl":
+        if k == 1:
+            h = _conv_block(ops, s["stem"], x, 1, kref.relu)
+            return _basic_block(ops, s["b1"], h, 1)
+        if k == 2:
+            h = _basic_block(ops, s["b1"], x, 1)
+            return _basic_block(ops, s["b2"], h, 2)
+        h = _basic_block(ops, s["b1"], x, 1)
+        h = _basic_block(ops, s["b2"], h, 2)
+        return _basic_block(ops, s["b3"], h, 1)
+    raise ValueError(f"bad model/stage {name}/{k}")
+
+
+def stage_apply(name: str, params: dict, k: int, x: jax.Array,
+                backend: str = "ref"):
+    """Task τ_k: [H,W,C] features -> (next features, exit-k probabilities).
+
+    This is exactly what a worker executes in Algorithm 1 line 3-4: process
+    the layers of task k, then feed the exit classifier.  The probabilities
+    (eq. (1)) come back alongside the features; the Rust worker takes
+    max(probs) as the confidence level C_k(d) (eq. (2)).
+    """
+    ops = get_ops(backend)
+    feat = _stage_trunk(name, params, k, x, ops)
+    probs = ops.head(feat, params[f"s{k}"]["head"]["w"], params[f"s{k}"]["head"]["b"])
+    return feat, probs
+
+
+def stage_logits(name: str, params: dict, k: int, x: jax.Array):
+    """Training path: trunk + head logits (ref backend, differentiable)."""
+    ops = get_ops("ref")
+    feat = _stage_trunk(name, params, k, x, ops)
+    return feat, _head_logits(params[f"s{k}"]["head"], feat)
+
+
+def forward_all_logits(name: str, params: dict, x: jax.Array):
+    """Monolithic forward returning every exit's logits (for the joint loss)."""
+    logits = []
+    feat = x
+    for k in range(1, num_stages(name) + 1):
+        feat, lg = stage_logits(name, params, k, feat)
+        logits.append(lg)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Autoencoder at the ResNet stage-1 boundary (paper §V)
+# ---------------------------------------------------------------------------
+
+def init_ae_params(key: jax.Array) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "enc1": _init_conv(k1, 3, 3, 32, 8),   # 32x32x32 -> 16x16x8 (s2)
+        "enc2": _init_conv(k2, 3, 3, 8, 4),    # -> 8x8x4 code (1 KiB)
+        "dec1": _init_conv(k3, 3, 3, 4, 16),   # 8x8 -> upsample -> 16x16
+        "dec2": _init_conv(k4, 3, 3, 16, 32),  # 16x16 -> upsample -> 32x32
+    }
+
+
+def ae_encode(p: dict, x: jax.Array, backend: str = "ref") -> jax.Array:
+    """[32,32,32] stage-1 features -> [8,8,4] code. Two conv+ReLU (paper §V)."""
+    ops = get_ops(backend)
+    h = kref.relu(ops.conv2d(x, p["enc1"]["w"], 2) + p["enc1"]["b"])
+    return kref.relu(ops.conv2d(h, p["enc2"]["w"], 2) + p["enc2"]["b"])
+
+
+def _upsample2(x: jax.Array) -> jax.Array:
+    return jnp.repeat(jnp.repeat(x, 2, axis=0), 2, axis=1)
+
+
+def ae_decode(p: dict, z: jax.Array, backend: str = "ref") -> jax.Array:
+    """[8,8,4] code -> [32,32,32] reconstructed stage-1 features."""
+    ops = get_ops(backend)
+    h = kref.relu(ops.conv2d(_upsample2(z), p["dec1"]["w"], 1) + p["dec1"]["b"])
+    return ops.conv2d(_upsample2(h), p["dec2"]["w"], 1) + p["dec2"]["b"]

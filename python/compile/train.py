@@ -1,0 +1,192 @@
+"""Build-time training for the multi-exit models (L2).
+
+The paper assumes pre-trained MobileNetV2/ResNet-50 with internal
+classifiers (BranchyNet-style).  We have no model zoo in this image, so we
+train the Lite variants here, once, at `make artifacts` time; parameters are
+cached under artifacts/cache/ so rebuilds are no-ops.
+
+Joint multi-exit objective (BranchyNet [4] / Shallow-Deep [3]):
+    L = Σ_k w_k · CE(exit_k logits, y)
+with mildly increasing weights so deep exits dominate but shallow exits
+still learn usable classifiers.
+
+The autoencoder (paper §V) is trained *after* the trunk, frozen-feature
+reconstruction (MSE on stage-1 features), which mirrors the paper's
+post-hoc insertion of the AE at ResNet's first exit boundary.
+
+No optax in this image: Adam is implemented inline on pytrees.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import data as D
+from . import model as M
+
+EXIT_WEIGHTS = {
+    "mobilenetv2l": jnp.array([0.6, 0.7, 0.8, 0.9, 1.0]),
+    "resnetl": jnp.array([0.7, 0.85, 1.0]),
+}
+
+
+# ---------------------------------------------------------------------------
+# Adam on pytrees (optax substitute — offline image, DESIGN.md §1)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=2e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) /
+        (jnp.sqrt(v_ * vhat_scale) + eps),
+        params, m, v)
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# ---------------------------------------------------------------------------
+# Losses / steps
+# ---------------------------------------------------------------------------
+
+def _ce(logits, y):
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    return jnp.mean(lse - jnp.take_along_axis(logits, y[:, None], 1)[:, 0])
+
+
+def multi_exit_loss(name, params, xb, yb):
+    logits = jax.vmap(lambda x: M.forward_all_logits(name, params, x))(xb)
+    w = EXIT_WEIGHTS[name]
+    losses = jnp.stack([_ce(lg, yb) for lg in logits])
+    return jnp.sum(w * losses) / jnp.sum(w)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _train_step(name, params, opt, xb, yb, lr):
+    loss, grads = jax.value_and_grad(lambda p: multi_exit_loss(name, p, xb, yb))(params)
+    params, opt = adam_update(params, grads, opt, lr=lr)
+    return params, opt, loss
+
+
+def train_model(name: str, key: jax.Array, steps: int = 500,
+                batch: int = 128, lr: float = 2e-3, log=print,
+                templates: jax.Array | None = None) -> dict:
+    """Train a multi-exit model on the synthetic distribution; return params.
+
+    `templates` defaults to the canonical derivation (class_templates of the
+    first split of `key`) — aot.py derives the *same* templates for the
+    held-out test set, so train and test share one distribution.
+    """
+    ktpl, kinit, kdata = jax.random.split(key, 3)
+    if templates is None:
+        templates = D.class_templates(ktpl)
+    params = M.init_params(name, kinit)
+    opt = adam_init(params)
+    t0 = time.time()
+    for step in range(steps):
+        kdata, kb = jax.random.split(kdata)
+        ds = D.make_dataset(kb, batch, templates)
+        # cosine decay keeps late exits from oscillating once shallow heads saturate
+        cur_lr = lr * 0.5 * (1 + jnp.cos(jnp.pi * step / steps))
+        params, opt, loss = _train_step(name, params, opt, ds.images,
+                                        ds.labels, cur_lr)
+        if step % 100 == 0 or step == steps - 1:
+            log(f"[train {name}] step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.1f}s)")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Autoencoder training (frozen trunk features)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _ae_step(ae, opt, feats, lr):
+    def loss_fn(p):
+        rec = jax.vmap(lambda f: M.ae_decode(p, M.ae_encode(p, f)))(feats)
+        return jnp.mean((rec - feats) ** 2)
+    loss, grads = jax.value_and_grad(loss_fn)(ae)
+    ae, opt = adam_update(ae, grads, opt, lr=lr)
+    return ae, opt, loss
+
+
+def train_autoencoder(params_resnet: dict, key: jax.Array, steps: int = 300,
+                      batch: int = 64, lr: float = 2e-3, log=print,
+                      templates: jax.Array | None = None) -> dict:
+    """Train the stage-1-boundary AE on frozen ResNet-Lite features.
+
+    Pass the same `templates` the trunk was trained on so the AE sees the
+    deployment feature distribution.
+    """
+    ktpl, kinit, kdata = jax.random.split(key, 3)
+    if templates is None:
+        templates = D.class_templates(ktpl)
+    ae = M.init_ae_params(kinit)
+    opt = adam_init(ae)
+    stage1 = jax.jit(jax.vmap(
+        lambda x: M.stage_apply("resnetl", params_resnet, 1, x)[0]))
+    t0 = time.time()
+    for step in range(steps):
+        kdata, kb = jax.random.split(kdata)
+        ds = D.make_dataset(kb, batch, templates)
+        feats = stage1(ds.images)
+        ae, opt, loss = _ae_step(ae, opt, feats, lr)
+        if step % 100 == 0 or step == steps - 1:
+            log(f"[train ae] step {step:4d} mse {float(loss):.5f} "
+                f"({time.time() - t0:.1f}s)")
+    return ae
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+def eval_exits(name: str, params: dict, ds: D.Dataset, ae: dict | None = None,
+               batch: int = 256):
+    """Per-sample, per-exit (confidence, prediction) tables + accuracies.
+
+    Runs the staged forward on the held-out set. When `ae` is given (resnetl)
+    stage 2 consumes decode(encode(stage-1 features)) so the recorded deep-exit
+    behaviour includes the AE's reconstruction error, exactly like the wire
+    path in the Rust runtime.  Returns (conf [n,K], pred [n,K], acc [K]).
+    """
+    ks = M.num_stages(name)
+
+    @jax.jit
+    def batch_eval(xb):
+        def one(x):
+            feat = x
+            confs, preds = [], []
+            for k in range(1, ks + 1):
+                feat, probs = M.stage_apply(name, params, k, feat)
+                confs.append(jnp.max(probs))
+                preds.append(jnp.argmax(probs))
+                if ae is not None and k == 1:
+                    feat = M.ae_decode(ae, M.ae_encode(ae, feat))
+            return jnp.stack(confs), jnp.stack(preds)
+        return jax.vmap(one)(xb)
+
+    n = ds.images.shape[0]
+    confs, preds = [], []
+    for i in range(0, n, batch):
+        c, p = batch_eval(ds.images[i:i + batch])
+        confs.append(c)
+        preds.append(p)
+    conf = jnp.concatenate(confs)         # [n, K]
+    pred = jnp.concatenate(preds)         # [n, K]
+    acc = jnp.mean(pred == ds.labels[:, None], axis=0)  # [K]
+    return conf, pred, acc

@@ -1,0 +1,249 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the core signal that makes the training(ref)/AOT(pallas) backend
+swap sound: hypothesis sweeps shapes, strides and value ranges and asserts
+allclose between `kernels.conv/head` and `kernels.ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as K
+from compile.kernels import head as H
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = rand(seed, (m, k))
+    w = rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        np.asarray(K.matmul_pallas(x, w)), np.asarray(R.matmul_ref(x, w)), **TOL
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.sampled_from([32, 128, 256]),
+    bm=st.sampled_from([16, 32, 128]),
+    bn=st.sampled_from([16, 64, 128]),
+)
+def test_matmul_block_shapes_do_not_change_result(m, bm, bn):
+    x = rand(7, (m, 36))
+    w = rand(8, (36, 128))
+    base = np.asarray(R.matmul_ref(x, w))
+    out = np.asarray(K.matmul_pallas(x, w, block_m=bm, block_n=bn))
+    np.testing.assert_allclose(out, base, **TOL)
+
+
+def test_matmul_rejects_contraction_mismatch():
+    with pytest.raises(AssertionError):
+        K.matmul_pallas(jnp.zeros((2, 3)), jnp.zeros((4, 2)))
+
+
+def test_matmul_accumulates_in_f32():
+    # large-k accumulation should not collapse: compare vs float64 numpy
+    x = rand(3, (8, 512), scale=0.5)
+    w = rand(4, (512, 8), scale=0.5)
+    exact = np.asarray(x, np.float64) @ np.asarray(w, np.float64)
+    out = np.asarray(K.matmul_pallas(x, w))
+    np.testing.assert_allclose(out, exact, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# conv2d (im2col + MXU matmul)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(4, 20),
+    w=st.integers(4, 20),
+    cin=st.sampled_from([1, 3, 8, 17]),
+    cout=st.sampled_from([1, 4, 10]),
+    stride=st.sampled_from([1, 2]),
+    kh=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_matches_ref(h, w, cin, cout, stride, kh, seed):
+    x = rand(seed, (h, w, cin))
+    f = rand(seed + 1, (kh, kh, cin, cout))
+    out = K.conv2d_pallas(x, f, stride)
+    refv = R.conv2d_ref(x, f, stride)
+    assert out.shape == refv.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refv), **TOL)
+
+
+def test_conv2d_matches_lax_conv():
+    # cross-check the ref itself against lax.conv_general_dilated
+    x = rand(11, (16, 16, 8))
+    f = rand(12, (3, 3, 8, 12))
+    ours = R.conv2d_ref(x, f, 1)
+    lax_out = jax.lax.conv_general_dilated(
+        x[None], f, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )[0]
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(lax_out), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(4, 24),
+    stride=st.sampled_from([1, 2]),
+)
+def test_conv2d_output_shape(h, stride):
+    x = jnp.zeros((h, h, 3))
+    f = jnp.zeros((3, 3, 3, 5))
+    oh = (h + stride - 1) // stride
+    assert K.conv2d_pallas(x, f, stride).shape == (oh, oh, 5)
+
+
+# ---------------------------------------------------------------------------
+# depthwise 3x3
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(3, 20),
+    c=st.sampled_from([1, 2, 8, 24, 33]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_depthwise_matches_ref(h, c, stride, seed):
+    x = rand(seed, (h, h, c))
+    f = rand(seed + 1, (3, 3, c))
+    out = K.depthwise3x3_pallas(x, f, stride)
+    refv = R.depthwise3x3_ref(x, f, stride)
+    assert out.shape == refv.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(refv), **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(bc=st.sampled_from([1, 4, 16, 128]))
+def test_depthwise_channel_blocking_invariant(bc):
+    x = rand(5, (10, 10, 32))
+    f = rand(6, (3, 3, 32))
+    base = np.asarray(R.depthwise3x3_ref(x, f, 1))
+    out = np.asarray(K.depthwise3x3_pallas(x, f, 1, block_c=bc))
+    np.testing.assert_allclose(out, base, **TOL)
+
+
+def test_depthwise_identity_filter():
+    # center-tap filter = identity
+    x = rand(9, (8, 8, 4))
+    f = jnp.zeros((3, 3, 4)).at[1, 1, :].set(1.0)
+    np.testing.assert_allclose(
+        np.asarray(K.depthwise3x3_pallas(x, f, 1)), np.asarray(x), **TOL
+    )
+
+
+# ---------------------------------------------------------------------------
+# pointwise / dense / head
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 16),
+    cin=st.sampled_from([1, 8, 24]),
+    cout=st.sampled_from([1, 16, 96]),
+    seed=st.integers(0, 2**16),
+)
+def test_pointwise_matches_ref(h, cin, cout, seed):
+    x = rand(seed, (h, h, cin))
+    w = rand(seed + 1, (cin, cout))
+    np.testing.assert_allclose(
+        np.asarray(K.pointwise_pallas(x, w)), np.asarray(R.pointwise_ref(x, w)), **TOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(1, 128),
+    n=st.integers(1, 16),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_matches_ref(k, n, seed):
+    x = rand(seed, (k,))
+    w = rand(seed + 1, (k, n))
+    b = rand(seed + 2, (n,))
+    np.testing.assert_allclose(
+        np.asarray(H.dense_pallas(x, w, b)), np.asarray(R.dense_ref(x, w, b)), **TOL
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.integers(1, 16),
+    c=st.sampled_from([1, 8, 24, 128]),
+    scale=st.sampled_from([0.1, 1.0, 20.0]),  # large logits: softmax stability
+    seed=st.integers(0, 2**16),
+)
+def test_head_matches_ref(h, c, scale, seed):
+    x = rand(seed, (h, h, c), scale)
+    w = rand(seed + 1, (c, 10), scale)
+    b = rand(seed + 2, (10,))
+    out = np.asarray(H.head_pallas(x, w, b))
+    refv = np.asarray(R.head_ref(x, w, b))
+    np.testing.assert_allclose(out, refv, rtol=2e-5, atol=1e-6)
+    # eq. (1): a probability vector
+    assert abs(out.sum() - 1.0) < 1e-5
+    assert (out >= 0).all()
+
+
+def test_head_confidence_bounds():
+    # eq. (2): confidence = max prob is in [1/v, 1]
+    x = rand(1, (4, 4, 8))
+    w = rand(2, (8, 10))
+    b = jnp.zeros((10,))
+    conf = float(jnp.max(H.head_pallas(x, w, b)))
+    assert 0.1 - 1e-6 <= conf <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# VMEM audit helpers (the L1 perf contract of DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def test_vmem_footprints_under_budget():
+    budget = 16 * 1024 * 1024
+    # worst shapes in either model
+    assert K.vmem_footprint_matmul(32 * 32, 9 * 128, 128) < budget
+    assert K.vmem_footprint_depthwise(32, 32, 384) < budget
+    from compile.kernels.head import vmem_footprint_head
+    assert vmem_footprint_head(32, 32, 128, 10) < budget
+
+
+def test_pick_block_divides():
+    for dim in [1, 7, 32, 100, 256, 1000]:
+        for target in [1, 16, 128]:
+            b = K._pick_block(dim, target)
+            assert dim % b == 0 and 1 <= b <= max(dim, target)
+
+
+def test_mxu_efficiency_bounds_and_alignment():
+    # perfectly aligned shapes reach 1.0
+    assert K.mxu_efficiency(8, 128, 128) == 1.0
+    assert K.mxu_efficiency(256, 256, 128) == 1.0
+    # misaligned shapes pay padding
+    assert K.mxu_efficiency(1, 1, 1) == pytest.approx(1 / (8 * 128 * 128))
+    for m, k, n in [(100, 27, 16), (1024, 216, 24), (64, 864, 96)]:
+        e = K.mxu_efficiency(m, k, n)
+        assert 0.0 < e <= 1.0

@@ -1,0 +1,154 @@
+"""L2 correctness: stage partitioning, backend agreement, autoencoder."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module", params=M.model_names())
+def model_and_params(request):
+    name = request.param
+    return name, M.init_params(name, KEY)
+
+
+def test_stage_shapes_chain(model_and_params):
+    """out_shape of τ_k == in_shape of τ_{k+1}; probs is always [10]."""
+    name, params = model_and_params
+    x = jax.random.normal(KEY, M.INPUT_SHAPE)
+    feat = x
+    for k in range(1, M.num_stages(name) + 1):
+        assert feat.shape == M.stage_input_shape(name, k)
+        feat, probs = M.stage_apply(name, params, k, feat)
+        assert feat.shape == M.stage_output_shape(name, k)
+        assert probs.shape == (M.NUM_CLASSES,)
+
+
+def test_stage_composition_equals_monolith(model_and_params):
+    """Chaining stage_apply == forward_all_logits (the partition is exact)."""
+    name, params = model_and_params
+    x = jax.random.normal(jax.random.PRNGKey(3), M.INPUT_SHAPE)
+    logits = M.forward_all_logits(name, params, x)
+    feat = x
+    for k in range(1, M.num_stages(name) + 1):
+        feat, probs = M.stage_apply(name, params, k, feat)
+        # softmax(logits) == stage probs
+        want = jax.nn.softmax(logits[k - 1])
+        np.testing.assert_allclose(np.asarray(probs), np.asarray(want),
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_backends_agree(model_and_params):
+    """ref (training) and pallas (AOT) backends produce identical stages."""
+    name, params = model_and_params
+    x = jax.random.normal(jax.random.PRNGKey(5), M.INPUT_SHAPE)
+    feat_r, feat_p = x, x
+    for k in range(1, M.num_stages(name) + 1):
+        feat_r, probs_r = M.stage_apply(name, params, k, feat_r, backend="ref")
+        feat_p, probs_p = M.stage_apply(name, params, k, feat_p, backend="pallas")
+        np.testing.assert_allclose(np.asarray(feat_p), np.asarray(feat_r),
+                                   rtol=5e-5, atol=5e-5)
+        np.testing.assert_allclose(np.asarray(probs_p), np.asarray(probs_r),
+                                   rtol=5e-5, atol=1e-6)
+
+
+def test_probs_are_probabilities(model_and_params):
+    name, params = model_and_params
+    x = jax.random.normal(jax.random.PRNGKey(7), M.INPUT_SHAPE) * 3.0
+    feat = x
+    for k in range(1, M.num_stages(name) + 1):
+        feat, probs = M.stage_apply(name, params, k, feat)
+        p = np.asarray(probs)
+        assert abs(p.sum() - 1.0) < 1e-5
+        assert (p >= 0).all()
+        conf = p.max()
+        assert 1.0 / M.NUM_CLASSES - 1e-6 <= conf <= 1.0 + 1e-6
+
+
+def test_exit_counts_match_paper_fig2():
+    """Paper Fig. 2: 5 exits for MobileNetV2, 3 for ResNet."""
+    assert M.num_stages("mobilenetv2l") == 5
+    assert M.num_stages("resnetl") == 3
+
+
+def test_unknown_model_rejected():
+    with pytest.raises(ValueError):
+        M.init_params("vgg", KEY)
+    with pytest.raises(ValueError):
+        M.num_stages("vgg")
+    with pytest.raises(ValueError):
+        M.get_ops("tensorflow")
+
+
+def test_autoencoder_roundtrip_shapes():
+    ae = M.init_ae_params(KEY)
+    f = jax.random.normal(KEY, (32, 32, 32))
+    z = M.ae_encode(ae, f)
+    assert z.shape == M.AE_CODE_SHAPE
+    r = M.ae_decode(ae, z)
+    assert r.shape == (32, 32, 32)
+    # compression ratio claim (raw/code = 128x)
+    assert f.size * 4 // (z.size * 4) == 128
+
+
+def test_autoencoder_backends_agree():
+    ae = M.init_ae_params(jax.random.PRNGKey(2))
+    f = jax.random.normal(jax.random.PRNGKey(4), (32, 32, 32))
+    z_r = M.ae_encode(ae, f, backend="ref")
+    z_p = M.ae_encode(ae, f, backend="pallas")
+    np.testing.assert_allclose(np.asarray(z_p), np.asarray(z_r), rtol=5e-5, atol=5e-5)
+    r_r = M.ae_decode(ae, z_r, backend="ref")
+    r_p = M.ae_decode(ae, z_r, backend="pallas")
+    np.testing.assert_allclose(np.asarray(r_p), np.asarray(r_r), rtol=5e-5, atol=5e-5)
+
+
+def test_residual_connection_active():
+    """Inverted-residual skip fires when stride=1 and cin==cout: zeroed
+    weights must give identity (plus bias terms = 0)."""
+    p = M._init_invres(KEY, 16, 16, 4)
+    p = jax.tree_util.tree_map(jnp.zeros_like, p)
+    ops = M.get_ops("ref")
+    x = jax.random.normal(KEY, (8, 8, 16))
+    out = M._invres_block(ops, p, x, 1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)
+
+
+def test_dataset_difficulty_drives_noise():
+    """Easy samples must be closer to their template than hard ones."""
+    tpl = D.class_templates(jax.random.PRNGKey(1))
+    ds = D.make_dataset(jax.random.PRNGKey(2), 2048, tpl)
+    d = np.asarray(ds.difficulty)
+    assert ((0.0 <= d) & (d <= 1.0)).all()
+    # noise grows with difficulty: correlate per-sample std-from-template
+    imgs = np.asarray(ds.images)
+    labels = np.asarray(ds.labels)
+    # Per-sample SNR = amp/sig = (1.1-0.9d)/(0.12+0.55d) must fall
+    # monotonically in d — the property that makes early exits fire on easy
+    # samples only.
+    snr = (1.1 - 0.9 * d) / (0.12 + 0.55 * d)
+    order = np.argsort(d)
+    assert (np.diff(snr[order]) <= 1e-9).all()
+    # Total image power is signal-dominated, so it *falls* as the signal
+    # fades with difficulty: strong negative correlation confirms the knob
+    # reaches the pixels.
+    power = np.asarray([imgs[i].std() for i in range(256)])
+    corr = np.corrcoef(d[:256], power)[0, 1]
+    assert corr < -0.5, f"difficulty knob not reflected in pixels: {corr}"
+    # labels span all classes
+    assert set(labels.tolist()) == set(range(10))
+
+
+def test_dataset_quantization_roundtrip():
+    tpl = D.class_templates(jax.random.PRNGKey(1))
+    ds = D.make_dataset(jax.random.PRNGKey(2), 64, tpl)
+    q = D.quantize_u8(ds.images)
+    back = D.dequantize_u8(q)
+    # quantization step is 8/255 ≈ 0.0314 → max error half a step
+    assert np.abs(back - np.asarray(ds.images)).max() <= 8.0 / 255.0 / 2 + 1e-6

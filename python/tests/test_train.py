@@ -1,0 +1,95 @@
+"""Training substrate tests: the in-tree Adam, the multi-exit loss, and the
+evaluation helpers (fast — no full model training here)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import data as D
+from compile import model as M
+from compile import train as T
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_adam_converges_on_quadratic():
+    """min ||x - c||^2 — Adam must reach the optimum."""
+    c = jnp.array([1.5, -2.0, 0.5])
+    params = {"x": jnp.zeros(3)}
+    opt = T.adam_init(params)
+    loss_fn = lambda p: jnp.sum((p["x"] - c) ** 2)
+    for _ in range(400):
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = T.adam_update(params, grads, opt, lr=0.05)
+    np.testing.assert_allclose(np.asarray(params["x"]), np.asarray(c), atol=1e-2)
+
+
+def test_adam_bias_correction_first_step():
+    """First step with bias correction moves by ~lr regardless of grad scale."""
+    params = {"x": jnp.zeros(1)}
+    opt = T.adam_init(params)
+    grads = {"x": jnp.array([1e-3])}
+    new, _ = T.adam_update(params, grads, opt, lr=0.1)
+    assert abs(float(new["x"][0]) + 0.1) < 1e-3  # moved ≈ -lr
+
+
+def test_ce_loss_matches_manual():
+    logits = jnp.array([[2.0, 0.0, -1.0], [0.0, 0.0, 0.0]])
+    y = jnp.array([0, 2])
+    got = float(T._ce(logits, y))
+    p0 = np.exp(2.0) / (np.exp(2.0) + 1 + np.exp(-1.0))
+    want = (-np.log(p0) - np.log(1 / 3)) / 2
+    assert abs(got - want) < 1e-5
+
+
+def test_multi_exit_loss_weights_all_exits():
+    """Zeroing one exit's contribution must change the loss — every exit is
+    in the objective."""
+    params = M.init_params("resnetl", jax.random.PRNGKey(0))
+    tpl = D.class_templates(jax.random.PRNGKey(1))
+    ds = D.make_dataset(jax.random.PRNGKey(2), 8, tpl)
+    full = float(T.multi_exit_loss("resnetl", params, ds.images, ds.labels))
+    assert np.isfinite(full) and full > 0
+    # He-init without normalization gives large logit variance, so the CE
+    # starts well above ln(10) — just bound it sanely.
+    assert np.log(10) / 2 < full < 50.0
+
+
+def test_one_train_step_reduces_loss():
+    params = M.init_params("mobilenetv2l", jax.random.PRNGKey(0))
+    opt = T.adam_init(params)
+    tpl = D.class_templates(jax.random.PRNGKey(1))
+    ds = D.make_dataset(jax.random.PRNGKey(2), 32, tpl)
+    l0 = float(T.multi_exit_loss("mobilenetv2l", params, ds.images, ds.labels))
+    # several steps on the same batch must overfit it
+    for _ in range(10):
+        params, opt, loss = T._train_step("mobilenetv2l", params, opt,
+                                          ds.images, ds.labels, jnp.float32(3e-3))
+    l1 = float(loss)
+    assert l1 < l0, f"loss did not decrease: {l0} -> {l1}"
+
+
+def test_eval_exits_shapes_and_ranges():
+    params = M.init_params("resnetl", jax.random.PRNGKey(0))
+    tpl = D.class_templates(jax.random.PRNGKey(1))
+    ds = D.make_dataset(jax.random.PRNGKey(2), 32, tpl)
+    conf, pred, acc = T.eval_exits("resnetl", params, ds, batch=16)
+    assert conf.shape == (32, 3) and pred.shape == (32, 3)
+    assert np.all((np.asarray(conf) > 0) & (np.asarray(conf) <= 1.0 + 1e-6))
+    assert np.all((np.asarray(pred) >= 0) & (np.asarray(pred) < 10))
+    assert acc.shape == (3,)
+
+
+def test_eval_exits_ae_changes_downstream_only():
+    """With an AE at exit 1, exit-1 records are unchanged but deeper exits
+    see reconstructed features."""
+    params = M.init_params("resnetl", jax.random.PRNGKey(0))
+    ae = M.init_ae_params(jax.random.PRNGKey(5))
+    tpl = D.class_templates(jax.random.PRNGKey(1))
+    ds = D.make_dataset(jax.random.PRNGKey(2), 16, tpl)
+    conf_a, _, _ = T.eval_exits("resnetl", params, ds, batch=16)
+    conf_b, _, _ = T.eval_exits("resnetl", params, ds, ae=ae, batch=16)
+    np.testing.assert_allclose(np.asarray(conf_a[:, 0]), np.asarray(conf_b[:, 0]),
+                               rtol=1e-6)
+    # untrained AE mangles features: deep confidences must differ
+    assert not np.allclose(np.asarray(conf_a[:, 1]), np.asarray(conf_b[:, 1]))

@@ -1,0 +1,25 @@
+//! Ablation: autoencoder on/off at the ResNet stage-1 boundary on the
+//! 5-node mesh (paper §V: the AE turns the worst topology into the best,
+//! at ≤2.2% exit-1 accuracy cost).
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::experiments as exp;
+
+fn main() {
+    let manifest = match Manifest::load(mdi_exit::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping ablation (artifacts missing): {e:#}");
+            return;
+        }
+    };
+    let rows = exp::ablation_autoencoder(&manifest, exp::SweepOpts::full())
+        .expect("ablation sweep");
+    exp::print_rows("abl-ae — ResNet 5-node mesh, AE vs raw features", "rate", &rows);
+    if let Some(ae) = &manifest.model("resnetl").expect("resnetl").ae {
+        println!(
+            "\nmanifest: AE compresses {} B -> {} B ({}x); per-exit accuracy drop {:?}",
+            ae.raw_bytes, ae.code_bytes, ae.compression, ae.acc_drop
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Ablation: the paper's Alg. 2 offloading policy vs its deterministic-only
+//! variant (no probabilistic branch), a queue-size-only policy, and blind
+//! round-robin — justifying the design choices of §IV.A.
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::experiments as exp;
+
+fn main() {
+    let manifest = match Manifest::load(mdi_exit::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping ablation (artifacts missing): {e:#}");
+            return;
+        }
+    };
+    let rows =
+        exp::ablation_offload(&manifest, exp::SweepOpts::full()).expect("ablation sweep");
+    exp::print_rows("abl-offload — offloading policies, MobileNet 3-node mesh", "rate", &rows);
+}

@@ -1,0 +1,20 @@
+//! Ablation: sensitivity to the output-queue threshold T_O (Alg. 1 line 8)
+//! plus the DDI-vs-MDI comparison motivating the paper's §I.
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::experiments as exp;
+
+fn main() {
+    let manifest = match Manifest::load(mdi_exit::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping ablation (artifacts missing): {e:#}");
+            return;
+        }
+    };
+    let opts = exp::SweepOpts::full();
+    let rows = exp::ablation_thresholds(&manifest, opts).expect("T_O sweep");
+    exp::print_rows("abl-queue — T_O sensitivity (Alg. 1)", "T_O", &rows);
+    let rows = exp::ddi_comparison(&manifest, opts).expect("ddi sweep");
+    exp::print_rows("DDI vs MDI-Exit (MobileNet, 3-node mesh)", "rate", &rows);
+}

@@ -1,0 +1,33 @@
+//! Bench: regenerate Fig. 3 — MobileNetV2, early-exit confidence threshold
+//! fixed, Alg. 3 adapts the data arrival rate. Prints the achieved data
+//! rate per topology/threshold (the paper's y-axis) and wall-clock timing
+//! of the sweep itself.
+//!
+//! Expected shape (paper): EE > No-EE everywhere; rate grows with node
+//! count; lower thresholds admit more data at lower accuracy.
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::experiments as exp;
+use mdi_exit::testkit::bench::BenchSuite;
+
+fn main() {
+    let manifest = match Manifest::load(mdi_exit::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping fig3 bench (artifacts missing): {e:#}");
+            return;
+        }
+    };
+    let opts = exp::SweepOpts::full();
+    let mut suite = BenchSuite::new("fig3 sweep wallclock").warmup(0).iters(1);
+    let mut rows = Vec::new();
+    suite.bench("fig3: 5 topologies x 6 thresholds + No-EE refs", || {
+        rows = exp::fig3(&manifest, opts).expect("fig3 sweep");
+    });
+    suite.report();
+    exp::print_rows(
+        "Fig. 3 — MobileNetV2: achieved data rate, fixed confidence threshold",
+        "T_e",
+        &rows,
+    );
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig. 4 — ResNet, fixed confidence threshold, Alg. 3
+//! adapts the data arrival rate (same protocol as Fig. 3, heavier model).
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::experiments as exp;
+use mdi_exit::testkit::bench::BenchSuite;
+
+fn main() {
+    let manifest = match Manifest::load(mdi_exit::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping fig4 bench (artifacts missing): {e:#}");
+            return;
+        }
+    };
+    let opts = exp::SweepOpts::full();
+    let mut suite = BenchSuite::new("fig4 sweep wallclock").warmup(0).iters(1);
+    let mut rows = Vec::new();
+    suite.bench("fig4: 5 topologies x 6 thresholds + No-EE refs", || {
+        rows = exp::fig4(&manifest, opts).expect("fig4 sweep");
+    });
+    suite.report();
+    exp::print_rows(
+        "Fig. 4 — ResNet50: achieved data rate, fixed confidence threshold",
+        "T_e",
+        &rows,
+    );
+}

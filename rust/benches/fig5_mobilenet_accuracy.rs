@@ -1,0 +1,33 @@
+//! Bench: regenerate Fig. 5 — MobileNetV2, Poisson arrivals at fixed mean
+//! rate, Alg. 4 adapts the early-exit threshold (accuracy degrades
+//! gracefully with load).
+//!
+//! Expected shape (paper): accuracy falls as rate rises; multi-node setups
+//! hold accuracy longer; 3-Node-Mesh beats 5-Node-Mesh at high rates
+//! because raw-feature transmission saturates the shared medium.
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::experiments as exp;
+use mdi_exit::testkit::bench::BenchSuite;
+
+fn main() {
+    let manifest = match Manifest::load(mdi_exit::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping fig5 bench (artifacts missing): {e:#}");
+            return;
+        }
+    };
+    let opts = exp::SweepOpts::full();
+    let mut suite = BenchSuite::new("fig5 sweep wallclock").warmup(0).iters(1);
+    let mut rows = Vec::new();
+    suite.bench("fig5: 5 topologies x 6 rates", || {
+        rows = exp::fig5(&manifest, opts).expect("fig5 sweep");
+    });
+    suite.report();
+    exp::print_rows(
+        "Fig. 5 — MobileNetV2: accuracy vs Poisson arrival rate",
+        "rate",
+        &rows,
+    );
+}

@@ -1,0 +1,32 @@
+//! Bench: regenerate Fig. 6 — ResNet with the stage-1 autoencoder, Poisson
+//! arrivals at fixed mean rate, Alg. 4 adapts the threshold.
+//!
+//! Expected shape (paper): with the AE compressing the 128 KiB stage-1
+//! features to 1 KiB codes, the 5-Node-Mesh becomes the best topology and
+//! accuracy degrades only slightly with rate.
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::experiments as exp;
+use mdi_exit::testkit::bench::BenchSuite;
+
+fn main() {
+    let manifest = match Manifest::load(mdi_exit::artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping fig6 bench (artifacts missing): {e:#}");
+            return;
+        }
+    };
+    let opts = exp::SweepOpts::full();
+    let mut suite = BenchSuite::new("fig6 sweep wallclock").warmup(0).iters(1);
+    let mut rows = Vec::new();
+    suite.bench("fig6: 5 topologies x 6 rates (AE on)", || {
+        rows = exp::fig6(&manifest, opts).expect("fig6 sweep");
+    });
+    suite.report();
+    exp::print_rows(
+        "Fig. 6 — ResNet50 + autoencoder: accuracy vs Poisson arrival rate",
+        "rate",
+        &rows,
+    );
+}

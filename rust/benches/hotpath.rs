@@ -1,0 +1,119 @@
+//! Hot-path microbenchmarks (the L3 perf targets of DESIGN.md §8):
+//!
+//! * task hand-off: queue push/pop + Alg. 1 decision        (< 5 µs)
+//! * Alg. 2 scan against 4 neighbor views                    (< 5 µs)
+//! * DES event throughput on a saturated 5-node mesh         (Mevents/s)
+//! * XLA stage execution, when artifacts are present         (per-stage ms)
+
+use mdi_exit::coordinator::policy::{self, NeighborView, OffloadPolicy};
+use mdi_exit::coordinator::queues::TaskQueue;
+use mdi_exit::coordinator::task::Task;
+use mdi_exit::coordinator::{AdmissionMode, ExperimentConfig, ModelMeta, SampleStore, Simulation};
+use mdi_exit::dataset::ExitTable;
+use mdi_exit::runtime::sim_engine::SimEngine;
+use mdi_exit::runtime::InferenceEngine;
+use mdi_exit::testkit::bench::{fmt_dur, BenchSuite};
+use mdi_exit::util::rng::Pcg64;
+
+fn bench_queues(suite: &mut BenchSuite) {
+    let mut q = TaskQueue::new();
+    let mut id = 0u64;
+    suite.bench_micro("queue push+pop + alg1 decision", 10_000, || {
+        id += 1;
+        q.push(Task::initial(id, (id % 4096) as usize, None, 0.0));
+        let t = q.pop().unwrap();
+        let d = policy::alg1_decide(0.7, 0.9, false, 3, t.stage, 50);
+        std::hint::black_box(d);
+    });
+}
+
+fn bench_offload_scan(suite: &mut BenchSuite) {
+    let mut rng = Pcg64::new(1, 0);
+    let views: Vec<NeighborView> = (0..4)
+        .map(|i| NeighborView {
+            input_len: i,
+            gamma_s: 0.004 + i as f64 * 1e-3,
+            d_nm_s: 0.006,
+        })
+        .collect();
+    suite.bench_micro("alg2 scan over 4 neighbors", 10_000, || {
+        for v in &views {
+            let d = policy::offload_decide(OffloadPolicy::Alg2, 6, 3, 0.005, v, &mut rng);
+            std::hint::black_box(d);
+        }
+    });
+}
+
+fn bench_des_throughput(suite: &mut BenchSuite) {
+    // synthetic 3-stage model, saturated 5-node mesh, 60 virtual seconds
+    let n = 512;
+    let mut conf = Vec::with_capacity(n * 3);
+    let mut pred = Vec::with_capacity(n * 3);
+    let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+    for i in 0..n {
+        conf.extend([0.6f32, 0.85, 0.99]);
+        pred.extend([labels[i]; 3]);
+    }
+    let engine = SimEngine::from_table(ExitTable::synthetic(n, 3, conf, pred), false);
+    let meta = ModelMeta::synthetic(vec![0.002, 0.002, 0.003], vec![12288, 24576, 16384]);
+    let mut completed = 0u64;
+    let r = suite.bench("DES: 5-node mesh, 60 virtual s @ 400 Hz", || {
+        let mut cfg = ExperimentConfig::new(
+            "bench",
+            "5-node-mesh",
+            AdmissionMode::Fixed { rate_hz: 400.0, threshold: 0.9 },
+        );
+        cfg.duration_s = 60.0;
+        cfg.warmup_s = 5.0;
+        let store = SampleStore { labels: &labels, images: None };
+        let report = Simulation::new(cfg, &engine, meta.clone(), store)
+            .unwrap()
+            .run()
+            .unwrap();
+        completed = report.completed;
+    });
+    let virt_per_wall = 65.0 / r.mean_s;
+    println!(
+        "  -> {completed} tasks completed / run; {virt_per_wall:.0}x faster than realtime"
+    );
+}
+
+fn bench_xla_stage(suite: &mut BenchSuite) {
+    let Ok(manifest) = mdi_exit::artifact::Manifest::load(mdi_exit::artifacts_dir()) else {
+        println!("(artifacts missing — skipping XLA stage bench)");
+        return;
+    };
+    let Ok(engine) =
+        mdi_exit::runtime::xla_engine::XlaEngine::load(&manifest, "mobilenetv2l", false)
+    else {
+        println!("(XLA engine unavailable — skipping)");
+        return;
+    };
+    let ds = mdi_exit::dataset::Dataset::load(
+        manifest.path(&manifest.dataset.file),
+    )
+    .expect("dataset");
+    let img = ds.image(0);
+    let r = suite
+        .bench("XLA stage 1 (mobilenetv2l) execute", || {
+            let out = engine.run_stage(1, 0, Some(&img)).expect("stage");
+            std::hint::black_box(out.confidence);
+        })
+        .clone();
+    let manifest_cost =
+        manifest.model("mobilenetv2l").unwrap().stages[0].cost_ms / 1e3;
+    println!(
+        "  -> manifest cost {} vs measured {}",
+        fmt_dur(manifest_cost),
+        fmt_dur(r.mean_s)
+    );
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("L3 hot paths").warmup(2).iters(12);
+    bench_queues(&mut suite);
+    bench_offload_scan(&mut suite);
+    bench_des_throughput(&mut suite);
+    bench_xla_stage(&mut suite);
+    suite.report();
+}

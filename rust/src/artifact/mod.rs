@@ -1,0 +1,289 @@
+//! Artifact manifest: the contract between the Python AOT pipeline and the
+//! Rust runtime. `python/compile/aot.py` writes `artifacts/manifest.json`;
+//! this module parses and validates it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Per-stage record: task τ_k of the partitioned model.
+#[derive(Debug, Clone)]
+pub struct StageInfo {
+    pub k: usize,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub probs_dim: usize,
+    /// HLO text path, relative to the artifacts dir.
+    pub hlo: String,
+    /// Median compute cost of this stage on the build machine (ms);
+    /// simnet scales it per worker to recreate device heterogeneity.
+    pub cost_ms: f64,
+    pub in_bytes: usize,
+    pub out_bytes: usize,
+}
+
+/// Autoencoder at the ResNet stage-1 boundary (paper §V).
+#[derive(Debug, Clone)]
+pub struct AeInfo {
+    pub enc_hlo: String,
+    pub dec_hlo: String,
+    pub code_shape: Vec<usize>,
+    pub code_bytes: usize,
+    pub raw_bytes: usize,
+    pub compression: f64,
+    pub acc_drop: Vec<f64>,
+    pub enc_cost_ms: f64,
+    pub dec_cost_ms: f64,
+    pub exits_bin_ae: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub num_stages: usize,
+    pub stages: Vec<StageInfo>,
+    pub exits_bin: String,
+    /// Held-out accuracy if *every* sample exited at point k (Fig. 2 data).
+    pub exit_accuracy: Vec<f64>,
+    pub mean_confidence: Vec<f64>,
+    pub ae: Option<AeInfo>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub file: String,
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub num_classes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dataset: DatasetInfo,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+fn shape_of(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("expected shape array")?
+        .iter()
+        .map(|v| v.as_usize().context("bad shape dim"))
+        .collect()
+}
+
+fn f64s_of(j: &Json) -> Result<Vec<f64>> {
+    j.as_arr()
+        .context("expected number array")?
+        .iter()
+        .map(|v| v.as_f64().context("bad number"))
+        .collect()
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json` and validate internal consistency.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let root = Json::parse(&text).context("parsing manifest.json")?;
+
+        let d = root.get("dataset");
+        let dataset = DatasetInfo {
+            file: d.get("file").as_str().context("dataset.file")?.to_string(),
+            n: d.get("n").as_usize().context("dataset.n")?,
+            h: d.get("h").as_usize().context("dataset.h")?,
+            w: d.get("w").as_usize().context("dataset.w")?,
+            c: d.get("c").as_usize().context("dataset.c")?,
+            num_classes: d.get("num_classes").as_usize().context("dataset.num_classes")?,
+        };
+
+        let mut models = BTreeMap::new();
+        let mobj = root.get("models").as_obj().context("models")?;
+        for (name, m) in mobj {
+            models.insert(name.clone(), parse_model(name, m)?);
+        }
+        let manifest = Manifest { dir, dataset, models };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest ({:?})",
+                                     self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Absolute path of an artifact file referenced by the manifest.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for (name, m) in &self.models {
+            if m.stages.len() != m.num_stages {
+                bail!("{name}: {} stages listed, num_stages={}", m.stages.len(), m.num_stages);
+            }
+            for (i, s) in m.stages.iter().enumerate() {
+                if s.k != i + 1 {
+                    bail!("{name}: stage {} out of order (k={})", i + 1, s.k);
+                }
+                if i + 1 < m.stages.len() && s.out_shape != m.stages[i + 1].in_shape {
+                    bail!("{name}: stage {} out_shape {:?} != stage {} in_shape {:?}",
+                          s.k, s.out_shape, s.k + 1, m.stages[i + 1].in_shape);
+                }
+                if s.cost_ms <= 0.0 {
+                    bail!("{name}: stage {} non-positive cost", s.k);
+                }
+            }
+            if m.exit_accuracy.len() != m.num_stages {
+                bail!("{name}: exit_accuracy length mismatch");
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> Result<ModelInfo> {
+    let mut stages = Vec::new();
+    for s in m.get("stages").as_arr().context("stages")? {
+        stages.push(StageInfo {
+            k: s.get("k").as_usize().context("stage.k")?,
+            in_shape: shape_of(s.get("in_shape"))?,
+            out_shape: shape_of(s.get("out_shape"))?,
+            probs_dim: s.get("probs_dim").as_usize().context("probs_dim")?,
+            hlo: s.get("hlo").as_str().context("hlo")?.to_string(),
+            cost_ms: s.get("cost_ms").as_f64().context("cost_ms")?,
+            in_bytes: s.get("in_bytes").as_usize().context("in_bytes")?,
+            out_bytes: s.get("out_bytes").as_usize().context("out_bytes")?,
+        });
+    }
+    let ae_json = m.get("ae");
+    let ae = if ae_json.is_null() {
+        None
+    } else {
+        Some(AeInfo {
+            enc_hlo: ae_json.get("enc_hlo").as_str().context("ae.enc_hlo")?.to_string(),
+            dec_hlo: ae_json.get("dec_hlo").as_str().context("ae.dec_hlo")?.to_string(),
+            code_shape: shape_of(ae_json.get("code_shape"))?,
+            code_bytes: ae_json.get("code_bytes").as_usize().context("ae.code_bytes")?,
+            raw_bytes: ae_json.get("raw_bytes").as_usize().context("ae.raw_bytes")?,
+            compression: ae_json.get("compression").as_f64().unwrap_or(0.0),
+            acc_drop: f64s_of(ae_json.get("acc_drop"))?,
+            enc_cost_ms: ae_json.get("enc_cost_ms").as_f64().context("ae.enc_cost_ms")?,
+            dec_cost_ms: ae_json.get("dec_cost_ms").as_f64().context("ae.dec_cost_ms")?,
+            exits_bin_ae: ae_json.get("exits_bin_ae").as_str().context("ae.exits_bin_ae")?.to_string(),
+        })
+    };
+    Ok(ModelInfo {
+        name: name.to_string(),
+        num_stages: m.get("num_stages").as_usize().context("num_stages")?,
+        stages,
+        exits_bin: m.get("exits_bin").as_str().context("exits_bin")?.to_string(),
+        exit_accuracy: f64s_of(m.get("exit_accuracy"))?,
+        mean_confidence: f64s_of(m.get("mean_confidence"))?,
+        ae,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> String {
+        r#"{
+          "version": 1,
+          "dataset": {"file":"dataset.bin","n":16,"h":32,"w":32,"c":3,"num_classes":10},
+          "models": {
+            "tiny": {
+              "num_stages": 2,
+              "stages": [
+                {"k":1,"in_shape":[32,32,3],"out_shape":[16,16,8],"probs_dim":10,
+                 "hlo":"tiny/stage1.hlo.txt","cost_ms":1.5,"in_bytes":12288,"out_bytes":8192},
+                {"k":2,"in_shape":[16,16,8],"out_shape":[8,8,16],"probs_dim":10,
+                 "hlo":"tiny/stage2.hlo.txt","cost_ms":2.0,"in_bytes":8192,"out_bytes":4096}
+              ],
+              "exits_bin": "exits_tiny.bin",
+              "exit_accuracy": [0.6, 0.8],
+              "mean_confidence": [0.7, 0.9],
+              "ae": null
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    fn write_manifest(body: &str) -> tempdir::TempDir {
+        let td = tempdir::TempDir::new();
+        std::fs::write(td.path().join("manifest.json"), body).unwrap();
+        td
+    }
+
+    // Minimal tempdir helper (no tempfile crate offline).
+    mod tempdir {
+        use std::path::{Path, PathBuf};
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static CTR: AtomicU64 = AtomicU64::new(0);
+        pub struct TempDir(PathBuf);
+        impl TempDir {
+            pub fn new() -> TempDir {
+                let id = CTR.fetch_add(1, Ordering::Relaxed);
+                let p = std::env::temp_dir()
+                    .join(format!("mdi-test-{}-{}", std::process::id(), id));
+                std::fs::create_dir_all(&p).unwrap();
+                TempDir(p)
+            }
+            pub fn path(&self) -> &Path {
+                &self.0
+            }
+        }
+        impl Drop for TempDir {
+            fn drop(&mut self) {
+                let _ = std::fs::remove_dir_all(&self.0);
+            }
+        }
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let td = write_manifest(&sample_manifest_json());
+        let m = Manifest::load(td.path()).unwrap();
+        assert_eq!(m.dataset.n, 16);
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.num_stages, 2);
+        assert_eq!(tiny.stages[0].out_shape, vec![16, 16, 8]);
+        assert!(tiny.ae.is_none());
+        assert!(m.path(&tiny.stages[0].hlo).ends_with("tiny/stage1.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_shape_chain_mismatch() {
+        let body = sample_manifest_json().replace("[16,16,8]", "[16,16,9]");
+        // breaks stage1.out == stage2.in (replaces both occurrences, so
+        // tweak only the in_shape of stage 2 back)
+        let body = body.replacen("\"in_shape\":[16,16,9]", "\"in_shape\":[16,16,8]", 1);
+        let td = write_manifest(&body);
+        // one of the two orders breaks the chain either way
+        assert!(Manifest::load(td.path()).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_model() {
+        let td = write_manifest(&sample_manifest_json());
+        let m = Manifest::load(td.path()).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_file_mentions_make_artifacts() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,153 @@
+//! Command-line argument parsing (clap substitute — offline image).
+//!
+//! Flag grammar: `--key value`, `--key=value`, boolean `--flag`, plus
+//! positional arguments. Subcommand dispatch lives in `main.rs`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: positionals + flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    present: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` ends flag parsing
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.present.push(k.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                    out.present.push(body.to_string());
+                } else {
+                    // boolean flag
+                    out.flags.insert(body.to_string(), "true".to_string());
+                    out.present.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flags.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad number {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => match v.as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                other => bail!("--{key}: bad bool {other:?}"),
+            },
+        }
+    }
+
+    /// First positional (subcommand) if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(String::as_str)
+    }
+
+    /// Reject unknown flags (call after reading all expected ones).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in &self.present {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse(&["run", "--model", "resnetl", "--use-ae", "--rate=25.5"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.str_or("model", ""), "resnetl");
+        assert!(a.bool_or("use-ae", false).unwrap());
+        assert!((a.f64_or("rate", 0.0).unwrap() - 25.5).abs() < 1e-12);
+        assert_eq!(a.usize_or("missing", 3).unwrap(), 3);
+    }
+
+    #[test]
+    fn boolean_flag_before_flag() {
+        let a = parse(&["--verbose", "--out", "x.json"]);
+        assert!(a.bool_or("verbose", false).unwrap());
+        assert_eq!(a.str_or("out", ""), "x.json");
+    }
+
+    #[test]
+    fn double_dash_ends_flags() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional, vec!["--not-a-flag"]);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["--n", "abc"]);
+        assert!(a.usize_or("n", 0).is_err());
+        assert!(a.bool_or("n", false).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let a = parse(&["--weird", "1"]);
+        assert!(a.ensure_known(&["model"]).is_err());
+        assert!(a.ensure_known(&["weird"]).is_ok());
+    }
+}

@@ -1,0 +1,278 @@
+//! Experiment configuration: everything a run of the MDI-Exit system needs.
+
+use anyhow::{bail, Result};
+
+use super::policy::{AdaptConfig, OffloadPolicy};
+use crate::simnet::{ChurnEvent, LinkSpec};
+use crate::util::toml::Config as Toml;
+
+/// How the source admits data (paper §IV.B — the two scenarios).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionMode {
+    /// Scenario (i), Figs 3–4: the confidence threshold is fixed; Alg. 3
+    /// adapts the interarrival time μ. `initial_mu_s` seeds the controller.
+    AdaptiveRate { threshold: f32, initial_mu_s: f64 },
+    /// Scenario (ii), Figs 5–6: Poisson arrivals at a fixed mean rate; Alg. 4
+    /// adapts the early-exit threshold T_e (hence accuracy).
+    AdaptiveThreshold { rate_hz: f64, initial_t_e: f32, t_e_min: f32 },
+    /// Open-loop: fixed deterministic rate and fixed threshold (ablations,
+    /// latency microbenchmarks).
+    Fixed { rate_hz: f64, threshold: f32 },
+}
+
+/// System-level execution baseline (DESIGN.md §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// The paper's system: model-distributed + early-exit (per config).
+    MdiExit,
+    /// Data-distributed inference baseline: whole images round-robin to
+    /// workers, each running the entire model (no partition, no exits).
+    Ddi,
+}
+
+/// Full experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Model name in the manifest ("mobilenetv2l" / "resnetl").
+    pub model: String,
+    /// Topology name (`simnet::Topology::named`).
+    pub topology: String,
+    /// Run the autoencoder on the stage-1 boundary (resnetl, Fig. 6).
+    pub use_ae: bool,
+    /// Disable early exits (No-EE baselines): only the final exit fires.
+    pub no_early_exit: bool,
+    pub mode: Mode,
+    pub admission: AdmissionMode,
+    /// Alg. 3/4 shared constants (paper §V values by default).
+    pub adapt: AdaptConfig,
+    /// Output-queue threshold T_O of Alg. 1 (paper: 50).
+    pub t_o: usize,
+    pub offload_policy: OffloadPolicy,
+    pub link: LinkSpec,
+    /// Virtual (DES) or wallclock (realtime) seconds to run *after* warmup.
+    pub duration_s: f64,
+    /// Settling period excluded from the measured statistics.
+    pub warmup_s: f64,
+    /// Neighbor-state gossip period (paper: workers "periodically learn").
+    pub gossip_interval_s: f64,
+    /// Global compute scale: stage costs are divided by this (1.0 = the
+    /// build machine's measured costs; <1 models slower edge devices).
+    pub compute_scale: f64,
+    /// WiFi shared-medium contention: effective link bandwidth is divided
+    /// by `1 + contention · concurrent_transfers`. 0 = independent links
+    /// (switched network); 1 = fully shared medium like the paper's WiFi.
+    /// This is what makes the 5-node mesh transmission-bottlenecked in
+    /// Fig. 5 and rescued by the autoencoder in Fig. 6.
+    pub medium_contention: f64,
+    /// Worker join/leave schedule (paper §III: "workers join and leave the
+    /// system anytime"). Applied on top of the named topology.
+    pub churn: Vec<ChurnEvent>,
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Paper §V defaults: T_Q1=10, T_Q2=30, T_O=50, α=.2, β=.1, ζ=.2.
+    pub fn new(model: &str, topology: &str, admission: AdmissionMode) -> ExperimentConfig {
+        ExperimentConfig {
+            model: model.to_string(),
+            topology: topology.to_string(),
+            use_ae: false,
+            no_early_exit: false,
+            mode: Mode::MdiExit,
+            admission,
+            adapt: AdaptConfig::default(),
+            t_o: 50,
+            offload_policy: OffloadPolicy::Alg2,
+            link: LinkSpec::wifi(),
+            duration_s: 60.0,
+            warmup_s: 10.0,
+            gossip_interval_s: 0.1,
+            compute_scale: 1.0,
+            medium_contention: 1.0,
+            churn: Vec::new(),
+            seed: 7,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if let Err(e) = self.adapt.validate() {
+            bail!("adapt config: {e}");
+        }
+        match self.admission {
+            AdmissionMode::AdaptiveRate { threshold, initial_mu_s } => {
+                if !(0.0..=1.0).contains(&(threshold as f64)) {
+                    bail!("threshold {threshold} outside [0,1]");
+                }
+                if initial_mu_s <= 0.0 {
+                    bail!("initial_mu_s must be positive");
+                }
+            }
+            AdmissionMode::AdaptiveThreshold { rate_hz, initial_t_e, t_e_min } => {
+                if rate_hz <= 0.0 {
+                    bail!("rate_hz must be positive");
+                }
+                if t_e_min <= 0.0 {
+                    bail!("paper requires T_e^min > 0");
+                }
+                if initial_t_e < t_e_min || initial_t_e > 1.0 {
+                    bail!("initial_t_e {initial_t_e} outside [{t_e_min}, 1]");
+                }
+            }
+            AdmissionMode::Fixed { rate_hz, .. } => {
+                if rate_hz <= 0.0 {
+                    bail!("rate_hz must be positive");
+                }
+            }
+        }
+        if self.duration_s <= 0.0 || self.warmup_s < 0.0 {
+            bail!("bad duration/warmup");
+        }
+        if self.gossip_interval_s <= 0.0 {
+            bail!("gossip interval must be positive");
+        }
+        if self.compute_scale <= 0.0 {
+            bail!("compute_scale must be positive");
+        }
+        if self.medium_contention < 0.0 {
+            bail!("medium_contention must be non-negative");
+        }
+        Ok(())
+    }
+
+    /// Build from a TOML-subset config file (CLI `run --config`).
+    pub fn from_toml(toml: &Toml) -> Result<ExperimentConfig> {
+        let model = toml.str_or("model", "mobilenetv2l");
+        let topology = toml.str_or("topology", "3-node-mesh");
+        let mode = toml.str_or("admission.mode", "adaptive-rate");
+        let admission = match mode {
+            "adaptive-rate" => AdmissionMode::AdaptiveRate {
+                threshold: toml.f64_or("admission.threshold", 0.8) as f32,
+                initial_mu_s: toml.f64_or("admission.initial_mu_s", 0.5),
+            },
+            "adaptive-threshold" => AdmissionMode::AdaptiveThreshold {
+                rate_hz: toml.f64_or("admission.rate_hz", 20.0),
+                initial_t_e: toml.f64_or("admission.initial_t_e", 0.8) as f32,
+                t_e_min: toml.f64_or("admission.t_e_min", 0.05) as f32,
+            },
+            "fixed" => AdmissionMode::Fixed {
+                rate_hz: toml.f64_or("admission.rate_hz", 20.0),
+                threshold: toml.f64_or("admission.threshold", 0.8) as f32,
+            },
+            other => bail!("unknown admission.mode {other:?}"),
+        };
+        let mut cfg = ExperimentConfig::new(model, topology, admission);
+        cfg.use_ae = toml.bool_or("use_ae", false);
+        cfg.no_early_exit = toml.bool_or("no_early_exit", false);
+        cfg.mode = match toml.str_or("system_mode", "mdi-exit") {
+            "mdi-exit" => Mode::MdiExit,
+            "ddi" => Mode::Ddi,
+            other => bail!("unknown system_mode {other:?}"),
+        };
+        cfg.adapt = AdaptConfig {
+            t_q1: toml.usize_or("adapt.t_q1", 10),
+            t_q2: toml.usize_or("adapt.t_q2", 30),
+            alpha: toml.f64_or("adapt.alpha", 0.2),
+            beta: toml.f64_or("adapt.beta", 0.1),
+            zeta: toml.f64_or("adapt.zeta", 0.2),
+            sleep_s: toml.f64_or("adapt.sleep_s", 0.5),
+        };
+        cfg.t_o = toml.usize_or("t_o", 50);
+        cfg.offload_policy = match toml.str_or("offload_policy", "alg2") {
+            "alg2" => OffloadPolicy::Alg2,
+            "deterministic" => OffloadPolicy::Deterministic,
+            "queue-only" => OffloadPolicy::QueueOnly,
+            "round-robin" => OffloadPolicy::RoundRobin,
+            other => bail!("unknown offload_policy {other:?}"),
+        };
+        cfg.link = LinkSpec {
+            bandwidth_bps: toml.f64_or("net.bandwidth_mbps", 48.0) * 1e6 / 8.0,
+            base_latency_s: toml.f64_or("net.base_latency_ms", 3.0) / 1e3,
+            jitter_s: toml.f64_or("net.jitter_ms", 1.0) / 1e3,
+        };
+        cfg.duration_s = toml.f64_or("duration_s", 60.0);
+        cfg.warmup_s = toml.f64_or("warmup_s", 10.0);
+        cfg.gossip_interval_s = toml.f64_or("gossip_interval_s", 0.1);
+        cfg.compute_scale = toml.f64_or("compute_scale", 1.0);
+        cfg.medium_contention = toml.f64_or("net.medium_contention", 1.0);
+        cfg.seed = toml.i64_or("seed", 7) as u64;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The fixed threshold in effect, if the mode has one.
+    pub fn fixed_threshold(&self) -> Option<f32> {
+        match self.admission {
+            AdmissionMode::AdaptiveRate { threshold, .. } => Some(threshold),
+            AdmissionMode::Fixed { threshold, .. } => Some(threshold),
+            AdmissionMode::AdaptiveThreshold { .. } => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_constants() {
+        let c = ExperimentConfig::new(
+            "mobilenetv2l",
+            "3-node-mesh",
+            AdmissionMode::AdaptiveRate { threshold: 0.8, initial_mu_s: 0.5 },
+        );
+        assert_eq!(c.adapt.t_q1, 10);
+        assert_eq!(c.adapt.t_q2, 30);
+        assert_eq!(c.t_o, 50);
+        assert!((c.adapt.alpha - 0.2).abs() < 1e-12);
+        assert!((c.adapt.beta - 0.1).abs() < 1e-12);
+        assert!((c.adapt.zeta - 0.2).abs() < 1e-12);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_admission() {
+        let mut c = ExperimentConfig::new(
+            "m",
+            "local",
+            AdmissionMode::AdaptiveThreshold { rate_hz: 10.0, initial_t_e: 0.5, t_e_min: 0.0 },
+        );
+        assert!(c.validate().is_err()); // t_e_min must be > 0
+        c.admission = AdmissionMode::Fixed { rate_hz: -1.0, threshold: 0.5 };
+        assert!(c.validate().is_err());
+        c.admission = AdmissionMode::AdaptiveRate { threshold: 1.5, initial_mu_s: 0.5 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_toml_roundtrip() {
+        let toml = Toml::parse(
+            r#"
+model = "resnetl"
+topology = "5-node-mesh"
+use_ae = true
+[admission]
+mode = "adaptive-threshold"
+rate_hz = 25.0
+initial_t_e = 0.9
+t_e_min = 0.05
+[adapt]
+sleep_s = 0.25
+[net]
+bandwidth_mbps = 24.0
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.model, "resnetl");
+        assert!(c.use_ae);
+        assert!(matches!(c.admission, AdmissionMode::AdaptiveThreshold { .. }));
+        assert!((c.adapt.sleep_s - 0.25).abs() < 1e-12);
+        assert!((c.link.bandwidth_bps - 3.0e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn from_toml_rejects_unknown_enum() {
+        let toml = Toml::parse("[admission]\nmode = \"warp-drive\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! The paper's contribution: the MDI-Exit coordinator.
+//!
+//! * [`policy`] — Algorithms 1–4 as pure decision logic
+//! * [`task`], [`queues`] — τ_k(d) records and the I_n/O_n queue pair
+//! * [`config`], [`report`] — experiment descriptions and run reports
+//! * [`sim`] — discrete-event driver (virtual time; figure benches)
+//! * [`rt`] — realtime threaded driver (wallclock; PJRT engine, examples)
+
+pub mod config;
+pub mod policy;
+pub mod queues;
+pub mod report;
+pub mod rt;
+pub mod sim;
+pub mod task;
+
+pub use config::{AdmissionMode, ExperimentConfig, Mode};
+pub use policy::{AdaptConfig, OffloadPolicy};
+pub use report::RunReport;
+pub use sim::{run_from_artifacts, ModelMeta, SampleStore, Simulation};

@@ -1,0 +1,441 @@
+//! The paper's four algorithms as pure, driver-agnostic decision logic.
+//!
+//! Keeping Algs 1–4 free of threads, clocks, and I/O lets the exact same
+//! code run under the discrete-event driver (benches, virtual time) and the
+//! realtime threaded driver (examples, PJRT engine), and makes every branch
+//! unit- and property-testable in isolation.
+
+use crate::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// Algorithm 1 — Inference and Early-Exit (the queue-placement decision)
+// ---------------------------------------------------------------------------
+
+/// Outcome of processing task τ_k at a worker (Alg. 1 lines 5–12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitDecision {
+    /// C_k(d) > T_e^k: exit, return the classifier output to the source.
+    Exit,
+    /// Keep τ_{k+1}(d) locally (input queue empty, or output queue backed up).
+    ContinueLocal,
+    /// Queue τ_{k+1}(d) for offloading.
+    ContinueOffload,
+}
+
+/// Alg. 1 lines 5–12: given confidence C_k(d) at exit k, the early-exit
+/// threshold T_e^k, whether this was the final exit, and the worker's queue
+/// state, decide what happens to data d.
+///
+/// * line 5: `confidence > threshold` → Exit (also forced at the last exit
+///   point, where the DNN output is final by definition);
+/// * line 8: input queue empty (local compute is starving) **or** output
+///   queue above T_O (offload path is backed up) → keep τ_{k+1} local;
+/// * otherwise → put τ_{k+1} in the output queue for offloading.
+pub fn alg1_decide(
+    confidence: f32,
+    threshold: f32,
+    is_final_exit: bool,
+    input_len: usize,
+    output_len: usize,
+    t_o: usize,
+) -> ExitDecision {
+    if is_final_exit || confidence > threshold {
+        return ExitDecision::Exit;
+    }
+    if input_len == 0 || output_len > t_o {
+        ExitDecision::ContinueLocal
+    } else {
+        ExitDecision::ContinueOffload
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 2 — Offloading from worker n to neighbor m
+// ---------------------------------------------------------------------------
+
+/// What worker n knows about a one-hop neighbor m (gossiped state).
+#[derive(Debug, Clone, Copy)]
+pub struct NeighborView {
+    /// Neighbor's input queue size I_m.
+    pub input_len: usize,
+    /// Neighbor's per-task compute delay Γ_m, seconds.
+    pub gamma_s: f64,
+    /// Measured transfer delay D_nm to this neighbor, seconds.
+    pub d_nm_s: f64,
+}
+
+/// Alg. 2 for a single head-of-line task against one neighbor:
+///
+/// * gate (line 2/4): `O_n > I_m` — only offload toward someone less loaded;
+/// * line 2-3: local wait `I_n·Γ_n` exceeds remote `D_nm + I_m·Γ_m` → offload;
+/// * line 4-5: otherwise offload with probability
+///   `min(I_n·Γ_n / (D_nm + I_m·Γ_m), 1)` — the probabilistic branch that
+///   keeps utilizing resources when the two delays are comparable.
+pub fn alg2_should_offload(
+    output_len: usize,
+    input_len: usize,
+    gamma_n_s: f64,
+    view: &NeighborView,
+    rng: &mut Pcg64,
+) -> bool {
+    if output_len <= view.input_len {
+        return false;
+    }
+    let local_wait = input_len as f64 * gamma_n_s;
+    let remote_wait = view.d_nm_s + view.input_len as f64 * view.gamma_s;
+    if local_wait > remote_wait {
+        return true;
+    }
+    let p = if remote_wait <= 0.0 { 1.0 } else { (local_wait / remote_wait).min(1.0) };
+    rng.chance(p)
+}
+
+/// Offloading policy selector (ablation `abl-offload`, DESIGN.md §4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadPolicy {
+    /// The paper's Alg. 2 (deterministic + probabilistic branches).
+    Alg2,
+    /// Alg. 2 without line 5 (offload only when strictly faster) — shows
+    /// why the probabilistic branch exists.
+    Deterministic,
+    /// Naive: offload to the first neighbor whenever O_n > I_m, ignoring
+    /// delays entirely.
+    QueueOnly,
+    /// Round-robin to neighbors regardless of state (DDI-style push).
+    RoundRobin,
+}
+
+/// Apply the selected offload policy for one candidate neighbor.
+pub fn offload_decide(
+    policy: OffloadPolicy,
+    output_len: usize,
+    input_len: usize,
+    gamma_n_s: f64,
+    view: &NeighborView,
+    rng: &mut Pcg64,
+) -> bool {
+    match policy {
+        OffloadPolicy::Alg2 => {
+            alg2_should_offload(output_len, input_len, gamma_n_s, view, rng)
+        }
+        OffloadPolicy::Deterministic => {
+            output_len > view.input_len
+                && input_len as f64 * gamma_n_s
+                    > view.d_nm_s + view.input_len as f64 * view.gamma_s
+        }
+        OffloadPolicy::QueueOnly => output_len > view.input_len,
+        OffloadPolicy::RoundRobin => true,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 3 — Data interarrival-time adaptation at the source
+// ---------------------------------------------------------------------------
+
+/// Shared AIMD-style constants of Algs 3 and 4 (paper §V: T_Q1=10, T_Q2=30,
+/// α=0.2, β=0.1, ζ=0.2).
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptConfig {
+    pub t_q1: usize,
+    pub t_q2: usize,
+    pub alpha: f64,
+    pub beta: f64,
+    pub zeta: f64,
+    /// Sleep duration s between adaptation steps, seconds.
+    pub sleep_s: f64,
+}
+
+impl Default for AdaptConfig {
+    fn default() -> Self {
+        AdaptConfig { t_q1: 10, t_q2: 30, alpha: 0.2, beta: 0.1, zeta: 0.2, sleep_s: 0.5 }
+    }
+}
+
+impl AdaptConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.t_q1 > self.t_q2 {
+            return Err(format!("T_Q1 {} > T_Q2 {}", self.t_q1, self.t_q2));
+        }
+        for (name, v) in [("alpha", self.alpha), ("beta", self.beta), ("zeta", self.zeta)] {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(format!("{name} {v} outside (0,1)"));
+            }
+        }
+        if self.alpha <= self.beta {
+            return Err(format!("alpha {} must exceed beta {}", self.alpha, self.beta));
+        }
+        if self.sleep_s <= 0.0 {
+            return Err("sleep_s must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Alg. 3: adapts the data interarrival time μ from the source's queue
+/// occupancy, TCP-Vegas style. Fixed accuracy (threshold), variable rate.
+#[derive(Debug, Clone)]
+pub struct RateController {
+    cfg: AdaptConfig,
+    mu_s: f64,
+    mu_min_s: f64,
+    mu_max_s: f64,
+}
+
+impl RateController {
+    pub fn new(cfg: AdaptConfig, initial_mu_s: f64) -> RateController {
+        // μ bounds keep the controller numerically sane: the paper leaves μ
+        // unbounded, but a multiplicative-decrease rule can underflow once
+        // queues saturate the measurement window.
+        RateController { cfg, mu_s: initial_mu_s, mu_min_s: 1e-4, mu_max_s: 60.0 }
+    }
+
+    /// One adaptation step given the source's I_n + O_n; returns the new μ.
+    /// The caller is responsible for sleeping `cfg.sleep_s` between calls
+    /// (line "Sleep for s seconds" — virtual or real depending on driver).
+    pub fn update(&mut self, queue_total: usize) -> f64 {
+        let q = queue_total;
+        if q < self.cfg.t_q1 {
+            self.mu_s -= self.cfg.alpha * self.mu_s; // line 3: strong increase in rate
+        } else if q > self.cfg.t_q1 && q < self.cfg.t_q2 {
+            self.mu_s -= self.cfg.beta * self.mu_s; // line 5: gentle increase
+        } else if q > self.cfg.t_q2 {
+            self.mu_s += self.cfg.zeta * self.mu_s; // line 7: back off
+        }
+        // q == t_q1 or q == t_q2: no change (the paper's conditions are strict)
+        self.mu_s = self.mu_s.clamp(self.mu_min_s, self.mu_max_s);
+        self.mu_s
+    }
+
+    pub fn mu_s(&self) -> f64 {
+        self.mu_s
+    }
+
+    /// Current data rate 1/μ (samples per second).
+    pub fn rate_hz(&self) -> f64 {
+        1.0 / self.mu_s
+    }
+
+    pub fn sleep_s(&self) -> f64 {
+        self.cfg.sleep_s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Algorithm 4 — Early-exit threshold adaptation
+// ---------------------------------------------------------------------------
+
+/// Alg. 4: all arriving traffic must be admitted (Poisson at fixed mean
+/// rate); the confidence threshold T_e — hence accuracy — adapts instead.
+#[derive(Debug, Clone)]
+pub struct ThresholdController {
+    cfg: AdaptConfig,
+    t_e: f64,
+    t_e_min: f64,
+}
+
+impl ThresholdController {
+    pub fn new(cfg: AdaptConfig, initial_t_e: f64, t_e_min: f64) -> ThresholdController {
+        assert!(t_e_min > 0.0, "paper requires T_e^min > 0");
+        ThresholdController { cfg, t_e: initial_t_e.clamp(t_e_min, 1.0), t_e_min }
+    }
+
+    /// One adaptation step from queue occupancy; returns the new T_e
+    /// (applied to every exit point k — Alg. 4 line 9).
+    pub fn update(&mut self, queue_total: usize) -> f64 {
+        let q = queue_total;
+        if q < self.cfg.t_q1 {
+            self.t_e = (self.t_e + self.cfg.alpha * self.t_e).min(1.0); // line 3
+        } else if q > self.cfg.t_q1 && q < self.cfg.t_q2 {
+            self.t_e = (self.t_e + self.cfg.beta * self.t_e).min(1.0); // line 5
+        } else if q > self.cfg.t_q2 {
+            self.t_e = (self.t_e - self.cfg.zeta * self.t_e).max(self.t_e_min); // line 7
+        }
+        self.t_e
+    }
+
+    pub fn t_e(&self) -> f64 {
+        self.t_e
+    }
+
+    pub fn sleep_s(&self) -> f64 {
+        self.cfg.sleep_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ---- Alg. 1 decision table ------------------------------------------
+
+    #[test]
+    fn alg1_exits_on_confidence() {
+        let d = alg1_decide(0.95, 0.9, false, 3, 0, 50);
+        assert_eq!(d, ExitDecision::Exit);
+    }
+
+    #[test]
+    fn alg1_threshold_is_strict() {
+        // C == T_e does NOT exit (paper: "larger than")
+        let d = alg1_decide(0.9, 0.9, false, 3, 0, 50);
+        assert_ne!(d, ExitDecision::Exit);
+    }
+
+    #[test]
+    fn alg1_final_exit_always_exits() {
+        let d = alg1_decide(0.01, 0.99, true, 0, 0, 50);
+        assert_eq!(d, ExitDecision::Exit);
+    }
+
+    #[test]
+    fn alg1_empty_input_continues_local() {
+        let d = alg1_decide(0.1, 0.9, false, 0, 10, 50);
+        assert_eq!(d, ExitDecision::ContinueLocal);
+    }
+
+    #[test]
+    fn alg1_backed_up_output_continues_local() {
+        let d = alg1_decide(0.1, 0.9, false, 5, 51, 50);
+        assert_eq!(d, ExitDecision::ContinueLocal);
+    }
+
+    #[test]
+    fn alg1_otherwise_offloads() {
+        let d = alg1_decide(0.1, 0.9, false, 5, 10, 50);
+        assert_eq!(d, ExitDecision::ContinueOffload);
+    }
+
+    // ---- Alg. 2 ----------------------------------------------------------
+
+    fn view(input_len: usize, gamma_s: f64, d_nm_s: f64) -> NeighborView {
+        NeighborView { input_len, gamma_s, d_nm_s }
+    }
+
+    #[test]
+    fn alg2_gate_requires_o_n_above_i_m() {
+        let mut rng = Pcg64::new(1, 0);
+        // O_n = 2 <= I_m = 5: never offload no matter how slow we are
+        assert!(!alg2_should_offload(2, 100, 10.0, &view(5, 0.001, 0.001), &mut rng));
+        // equality also refuses (strict >)
+        assert!(!alg2_should_offload(5, 100, 10.0, &view(5, 0.001, 0.001), &mut rng));
+    }
+
+    #[test]
+    fn alg2_deterministic_branch() {
+        let mut rng = Pcg64::new(1, 0);
+        // I_n*Γ_n = 10*1.0 = 10s  >  D + I_m*Γ_m = 0.1 + 1*0.5 = 0.6s
+        assert!(alg2_should_offload(5, 10, 1.0, &view(1, 0.5, 0.1), &mut rng));
+    }
+
+    #[test]
+    fn alg2_probabilistic_branch_statistics() {
+        // local 0.5s vs remote 1.0s → p = 0.5
+        let mut rng = Pcg64::new(2, 0);
+        let n = 20_000;
+        let hits = (0..n)
+            .filter(|_| alg2_should_offload(5, 1, 0.5, &view(0, 0.5, 1.0), &mut rng))
+            .count();
+        let p = hits as f64 / n as f64;
+        assert!((p - 0.5).abs() < 0.02, "p = {p}");
+    }
+
+    #[test]
+    fn alg2_zero_remote_wait_offloads() {
+        let mut rng = Pcg64::new(3, 0);
+        assert!(alg2_should_offload(5, 0, 0.5, &view(0, 0.5, 0.0), &mut rng));
+    }
+
+    #[test]
+    fn policy_variants_differ() {
+        let mut rng = Pcg64::new(4, 0);
+        let v = view(0, 0.5, 1.0); // remote slower than empty local
+        // local wait = 0 → deterministic refuses, queue-only accepts
+        assert!(!offload_decide(OffloadPolicy::Deterministic, 5, 0, 0.5, &v, &mut rng));
+        assert!(offload_decide(OffloadPolicy::QueueOnly, 5, 0, 0.5, &v, &mut rng));
+        assert!(offload_decide(OffloadPolicy::RoundRobin, 0, 0, 0.5, &v, &mut rng));
+    }
+
+    // ---- Alg. 3 ----------------------------------------------------------
+
+    #[test]
+    fn alg3_regions() {
+        let cfg = AdaptConfig::default();
+        let mut rc = RateController::new(cfg, 1.0);
+        // q < T_Q1: μ -= α μ → 0.8
+        assert!((rc.update(0) - 0.8).abs() < 1e-12);
+        // T_Q1 < q < T_Q2: μ -= β μ → 0.72
+        assert!((rc.update(15) - 0.72).abs() < 1e-12);
+        // q > T_Q2: μ += ζ μ → 0.864
+        assert!((rc.update(40) - 0.864).abs() < 1e-12);
+        // boundary q == T_Q1: unchanged
+        assert!((rc.update(10) - 0.864).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alg3_mu_stays_bounded() {
+        let mut rc = RateController::new(AdaptConfig::default(), 1.0);
+        for _ in 0..10_000 {
+            rc.update(0);
+        }
+        assert!(rc.mu_s() >= 1e-4);
+        for _ in 0..10_000 {
+            rc.update(1000);
+        }
+        assert!(rc.mu_s() <= 60.0);
+    }
+
+    #[test]
+    fn alg3_converges_to_equilibrium_band() {
+        // Toy closed loop: service rate 20 Hz; queue integrates arrivals -
+        // service. Alg. 3 should settle μ near 1/20 s.
+        let mut rc = RateController::new(AdaptConfig::default(), 1.0);
+        let mut queue = 0.0f64;
+        let service_hz = 20.0;
+        for _ in 0..400 {
+            let mu = rc.mu_s();
+            let dt = rc.sleep_s();
+            queue = (queue + dt / mu - service_hz * dt).max(0.0);
+            rc.update(queue.round() as usize);
+        }
+        let rate = rc.rate_hz();
+        assert!(
+            (10.0..40.0).contains(&rate),
+            "rate {rate} did not settle near service 20 Hz"
+        );
+    }
+
+    // ---- Alg. 4 ----------------------------------------------------------
+
+    #[test]
+    fn alg4_regions_and_caps() {
+        let cfg = AdaptConfig::default();
+        let mut tc = ThresholdController::new(cfg, 0.5, 0.05);
+        // low occupancy: up by alpha
+        assert!((tc.update(0) - 0.6).abs() < 1e-12);
+        // mid: up by beta
+        assert!((tc.update(15) - 0.66).abs() < 1e-12);
+        // high: down by zeta
+        assert!((tc.update(40) - 0.528).abs() < 1e-12);
+        // cap at 1.0
+        for _ in 0..100 {
+            tc.update(0);
+        }
+        assert!(tc.t_e() <= 1.0);
+        // floor at t_e_min
+        for _ in 0..100 {
+            tc.update(1000);
+        }
+        assert!((tc.t_e() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adapt_config_validation() {
+        assert!(AdaptConfig::default().validate().is_ok());
+        let bad = AdaptConfig { t_q1: 50, ..AdaptConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = AdaptConfig { alpha: 0.1, beta: 0.2, ..AdaptConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = AdaptConfig { zeta: 1.5, ..AdaptConfig::default() };
+        assert!(bad.validate().is_err());
+    }
+}

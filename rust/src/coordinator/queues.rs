@@ -1,0 +1,127 @@
+//! Per-worker input/output task queues (paper §III "Queues").
+//!
+//! Worker n maintains an input queue I_n (tasks it will process) and an
+//! output queue O_n (tasks staged for offloading). Queue *lengths* drive
+//! every decision in Algs 1–4, so the structure tracks peak occupancy for
+//! the reports too.
+
+use std::collections::VecDeque;
+
+use super::task::Task;
+
+/// FIFO task queue with occupancy accounting.
+#[derive(Debug, Default)]
+pub struct TaskQueue {
+    q: VecDeque<Task>,
+    peak: usize,
+    total_enqueued: u64,
+}
+
+impl TaskQueue {
+    pub fn new() -> TaskQueue {
+        TaskQueue::default()
+    }
+
+    pub fn push(&mut self, t: Task) {
+        self.q.push_back(t);
+        self.peak = self.peak.max(self.q.len());
+        self.total_enqueued += 1;
+    }
+
+    /// Head-of-line task (both Alg. 1 and Alg. 2 operate on the HoL task).
+    pub fn pop(&mut self) -> Option<Task> {
+        self.q.pop_front()
+    }
+
+    pub fn peek(&self) -> Option<&Task> {
+        self.q.front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    pub fn peak(&self) -> usize {
+        self.peak
+    }
+
+    pub fn total_enqueued(&self) -> u64 {
+        self.total_enqueued
+    }
+
+    /// Drain everything (worker leaving the network hands tasks back).
+    pub fn drain_all(&mut self) -> Vec<Task> {
+        self.q.drain(..).collect()
+    }
+}
+
+/// The I_n / O_n pair.
+#[derive(Debug, Default)]
+pub struct WorkerQueues {
+    pub input: TaskQueue,
+    pub output: TaskQueue,
+}
+
+impl WorkerQueues {
+    pub fn new() -> WorkerQueues {
+        WorkerQueues::default()
+    }
+
+    /// I_n + O_n — the occupancy signal Algs 3 and 4 consume.
+    pub fn total_len(&self) -> usize {
+        self.input.len() + self.output.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: u64) -> Task {
+        Task::initial(id, id as usize, None, 0.0)
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut q = TaskQueue::new();
+        q.push(task(1));
+        q.push(task(2));
+        q.push(task(3));
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.peek().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn occupancy_accounting() {
+        let mut q = TaskQueue::new();
+        for i in 0..5 {
+            q.push(task(i));
+        }
+        q.pop();
+        q.pop();
+        q.push(task(9));
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.peak(), 5);
+        assert_eq!(q.total_enqueued(), 6);
+    }
+
+    #[test]
+    fn totals_and_drain() {
+        let mut w = WorkerQueues::new();
+        w.input.push(task(1));
+        w.output.push(task(2));
+        w.output.push(task(3));
+        assert_eq!(w.total_len(), 3);
+        let drained = w.output.drain_all();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(w.total_len(), 1);
+        assert!(w.output.is_empty());
+    }
+}

@@ -1,0 +1,202 @@
+//! Run reports: everything a figure/bench needs from one experiment run.
+
+use crate::util::json::{obj, Json};
+use crate::util::stats::Samples;
+
+/// Per-worker accounting.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub processed: u64,
+    pub offloaded_out: u64,
+    pub received: u64,
+    pub exits: u64,
+    pub peak_input: usize,
+    pub peak_output: usize,
+    /// Virtual/real seconds spent computing (utilization numerator).
+    pub busy_s: f64,
+}
+
+/// A sampled point of the controller/queue timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct TracePoint {
+    pub t_s: f64,
+    /// Current interarrival μ (Alg. 3 runs) or threshold T_e (Alg. 4 runs).
+    pub control: f64,
+    pub source_queue: usize,
+}
+
+/// Everything measured during the post-warmup window of one run.
+#[derive(Debug)]
+pub struct RunReport {
+    pub model: String,
+    pub topology: String,
+    pub label: String,
+    pub duration_s: f64,
+    /// Samples admitted at the source during the window.
+    pub admitted: u64,
+    /// Inference results returned to the source during the window.
+    pub completed: u64,
+    pub correct: u64,
+    /// Results per exit point (1-based; index 0 = exit 1).
+    pub exit_histogram: Vec<u64>,
+    pub latency: Samples,
+    pub per_worker: Vec<WorkerStats>,
+    pub bytes_on_wire: u64,
+    pub task_transfers: u64,
+    /// Tasks re-homed to the source because a worker left mid-run.
+    pub rehomed: u64,
+    /// Final controller values.
+    pub final_mu_s: Option<f64>,
+    pub final_t_e: Option<f64>,
+    pub trace: Vec<TracePoint>,
+}
+
+impl RunReport {
+    pub fn new(model: &str, topology: &str, label: &str, n_workers: usize,
+               num_exits: usize) -> RunReport {
+        RunReport {
+            model: model.to_string(),
+            topology: topology.to_string(),
+            label: label.to_string(),
+            duration_s: 0.0,
+            admitted: 0,
+            completed: 0,
+            correct: 0,
+            exit_histogram: vec![0; num_exits],
+            latency: Samples::new(),
+            per_worker: vec![WorkerStats::default(); n_workers],
+            bytes_on_wire: 0,
+            task_transfers: 0,
+            rehomed: 0,
+            final_mu_s: None,
+            final_t_e: None,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Classification accuracy over completed results.
+    pub fn accuracy(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.correct as f64 / self.completed as f64
+    }
+
+    /// Completed inference throughput (the paper's achieved "data rate").
+    pub fn throughput_hz(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.duration_s
+    }
+
+    /// Admission rate at the source.
+    pub fn admitted_rate_hz(&self) -> f64 {
+        if self.duration_s <= 0.0 {
+            return 0.0;
+        }
+        self.admitted as f64 / self.duration_s
+    }
+
+    /// Fraction of results that exited at each point.
+    pub fn exit_fractions(&self) -> Vec<f64> {
+        let total: u64 = self.exit_histogram.iter().sum();
+        if total == 0 {
+            return vec![0.0; self.exit_histogram.len()];
+        }
+        self.exit_histogram.iter().map(|&c| c as f64 / total as f64).collect()
+    }
+
+    pub fn to_json(&mut self) -> Json {
+        let workers: Vec<Json> = self
+            .per_worker
+            .iter()
+            .map(|w| {
+                obj(vec![
+                    ("processed", (w.processed as i64).into()),
+                    ("offloaded_out", (w.offloaded_out as i64).into()),
+                    ("received", (w.received as i64).into()),
+                    ("exits", (w.exits as i64).into()),
+                    ("peak_input", w.peak_input.into()),
+                    ("peak_output", w.peak_output.into()),
+                    ("busy_s", w.busy_s.into()),
+                ])
+            })
+            .collect();
+        let (p50, p95, p99, mean) = (
+            self.latency.p50(),
+            self.latency.p95(),
+            self.latency.p99(),
+            self.latency.mean(),
+        );
+        obj(vec![
+            ("model", self.model.as_str().into()),
+            ("topology", self.topology.as_str().into()),
+            ("label", self.label.as_str().into()),
+            ("duration_s", self.duration_s.into()),
+            ("admitted", (self.admitted as i64).into()),
+            ("completed", (self.completed as i64).into()),
+            ("accuracy", self.accuracy().into()),
+            ("throughput_hz", self.throughput_hz().into()),
+            ("admitted_rate_hz", self.admitted_rate_hz().into()),
+            ("latency_mean_s", mean.into()),
+            ("latency_p50_s", p50.into()),
+            ("latency_p95_s", p95.into()),
+            ("latency_p99_s", p99.into()),
+            ("exit_histogram",
+             Json::Arr(self.exit_histogram.iter().map(|&c| (c as i64).into()).collect())),
+            ("bytes_on_wire", (self.bytes_on_wire as i64).into()),
+            ("task_transfers", (self.task_transfers as i64).into()),
+            ("rehomed", (self.rehomed as i64).into()),
+            ("final_mu_s", self.final_mu_s.map(Json::from).unwrap_or(Json::Null)),
+            ("final_t_e", self.final_t_e.map(Json::from).unwrap_or(Json::Null)),
+            ("workers", Json::Arr(workers)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_metrics() {
+        let mut r = RunReport::new("m", "t", "lbl", 2, 3);
+        r.duration_s = 10.0;
+        r.admitted = 100;
+        r.completed = 80;
+        r.correct = 60;
+        r.exit_histogram = vec![40, 20, 20];
+        assert!((r.accuracy() - 0.75).abs() < 1e-12);
+        assert!((r.throughput_hz() - 8.0).abs() < 1e-12);
+        assert!((r.admitted_rate_hz() - 10.0).abs() < 1e-12);
+        let f = r.exit_fractions();
+        assert!((f[0] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_finite() {
+        let mut r = RunReport::new("m", "t", "lbl", 1, 2);
+        assert_eq!(r.accuracy(), 0.0);
+        assert_eq!(r.throughput_hz(), 0.0);
+        assert_eq!(r.exit_fractions(), vec![0.0, 0.0]);
+        let j = r.to_json();
+        assert_eq!(j.get("completed").as_i64(), Some(0));
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut r = RunReport::new("mob", "2-node", "fig3", 2, 5);
+        r.duration_s = 5.0;
+        r.completed = 1;
+        r.correct = 1;
+        r.latency.push(0.125);
+        r.final_mu_s = Some(0.05);
+        let j = r.to_json();
+        assert_eq!(j.get("model").as_str(), Some("mob"));
+        assert_eq!(j.get("workers").as_arr().unwrap().len(), 2);
+        assert!((j.get("latency_p50_s").as_f64().unwrap() - 0.125).abs() < 1e-9);
+        assert!((j.get("final_mu_s").as_f64().unwrap() - 0.05).abs() < 1e-12);
+        assert!(j.get("final_t_e").is_null());
+    }
+}

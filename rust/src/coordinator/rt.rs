@@ -1,0 +1,490 @@
+//! Realtime threaded driver: the deployment shape of the system.
+//!
+//! One OS thread per worker (the paper's per-Jetson process), message
+//! passing over `simnet::transport::DelayNet` (link delays enforced by a
+//! delivery scheduler), and a per-thread [`crate::runtime::InferenceEngine`]
+//! built by an engine factory — with [`crate::runtime::xla_engine::XlaEngine`]
+//! this is the full production path: compiled HLO stages executing on PJRT,
+//! zero Python.
+//!
+//! The decision logic is the same `policy` module the DES driver uses;
+//! only the clock (wallclock vs virtual) and the transport differ.
+//!
+//! Churn schedules are a DES-driver feature; the realtime driver runs a
+//! fixed worker set (threads joining/leaving mid-run adds little beyond
+//! what the DES churn tests already cover, at much higher flake risk).
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::config::{AdmissionMode, ExperimentConfig, Mode};
+use super::policy::{
+    self, ExitDecision, NeighborView, RateController, ThresholdController,
+};
+use super::queues::WorkerQueues;
+use super::report::{RunReport, WorkerStats};
+use super::sim::ModelMeta;
+use super::task::{InferenceResult, Task};
+use crate::dataset::Dataset;
+use crate::log_info;
+
+use crate::simnet::transport::{DelayNet, Endpoint};
+use crate::simnet::Topology;
+use crate::util::rng::Pcg64;
+use crate::util::stats::{Ewma, Samples};
+
+const RESULT_BYTES: usize = 64;
+const STATE_BYTES: usize = 32;
+const IDLE_PARK: Duration = Duration::from_micros(200);
+
+/// Messages exchanged between worker threads.
+enum NetMsg {
+    Task(Task),
+    Result(InferenceResult),
+    /// Gossiped neighbor state (paper §IV.A: "periodically learns ... its
+    /// input queue size I_m, per task computing delay Γ_m").
+    State { input_len: usize, gamma_s: f64 },
+}
+
+/// Outcome of a realtime run (assembled from per-thread stats).
+pub struct RtOutcome {
+    pub report: RunReport,
+}
+
+/// Run the system with real threads + wallclock. `duration_s` of the config
+/// is interpreted as wallclock seconds (keep it small in tests).
+pub fn run_realtime<F>(
+    cfg: &ExperimentConfig,
+    factory: &F,
+    meta: &ModelMeta,
+    dataset: &Dataset,
+) -> Result<RtOutcome>
+where
+    F: Fn(usize) -> Result<Box<dyn crate::runtime::InferenceEngine>> + Send + Sync,
+{
+    cfg.validate()?;
+    anyhow::ensure!(cfg.mode == Mode::MdiExit, "realtime driver runs MDI-Exit mode");
+    let topo = Arc::new(
+        Topology::named(&cfg.topology, cfg.link)
+            .with_context(|| format!("unknown topology {:?}", cfg.topology))?,
+    );
+    let n = topo.n;
+    let mut net: DelayNet<NetMsg> = DelayNet::new(topo.clone(), cfg.seed);
+    let mut endpoints: Vec<Endpoint<NetMsg>> = (0..n).map(|i| net.endpoint(i, cfg.seed)).collect();
+    endpoints.reverse(); // pop() gives worker 0 first
+
+    let (stats_tx, stats_rx) = channel::<(usize, WorkerStats, SourceTally)>();
+    let t0 = Instant::now();
+    let horizon = Duration::from_secs_f64(cfg.warmup_s + cfg.duration_s);
+
+    std::thread::scope(|scope| -> Result<()> {
+        for id in 0..n {
+            let endpoint = endpoints.pop().expect("endpoint");
+            let stats_tx = stats_tx.clone();
+            let topo = topo.clone();
+            let cfg = cfg.clone();
+            let meta = meta.clone();
+            scope.spawn(move || {
+                let engine = match factory(id) {
+                    Ok(e) => e,
+                    Err(err) => {
+                        log_info!("worker {id}: engine construction failed: {err:#}");
+                        let _ = stats_tx.send((id, WorkerStats::default(), SourceTally::default()));
+                        return;
+                    }
+                };
+                let mut w = RtWorker {
+                    id,
+                    cfg: &cfg,
+                    meta: &meta,
+                    topo: &topo,
+                    endpoint,
+                    engine: engine.as_ref(),
+                    dataset: if id == 0 { Some(dataset) } else { None },
+                    queues: WorkerQueues::new(),
+                    gamma: Ewma::new(0.2),
+                    views: vec![None; topo.n],
+                    d_est: (0..topo.n).map(|_| Ewma::new(0.2)).collect(),
+                    rng: Pcg64::new(cfg.seed, 1000 + id as u64),
+                    stats: WorkerStats::default(),
+                    tally: SourceTally::default(),
+                    t0,
+                    measure_from: cfg.warmup_s,
+                    next_task_id: (id as u64) << 48,
+                    next_sample: 0,
+                    rate_ctl: None,
+                    thr_ctl: None,
+                    t_e: 0.9,
+                };
+                w.init_controllers();
+                w.run(horizon);
+                let _ = stats_tx.send((w.id, w.stats, w.tally));
+            });
+        }
+        Ok(())
+    })?;
+    drop(stats_tx);
+
+    let mut report = RunReport::new(&cfg.model, &cfg.topology, "realtime", n, meta.num_stages);
+    report.duration_s = cfg.duration_s;
+    while let Ok((id, stats, tally)) = stats_rx.recv() {
+        report.per_worker[id] = stats;
+        if id == 0 {
+            report.admitted = tally.admitted;
+            report.completed = tally.completed;
+            report.correct = tally.correct;
+            report.exit_histogram = tally.exit_histogram;
+            report.latency = tally.latency;
+            report.final_mu_s = tally.final_mu_s;
+            report.final_t_e = tally.final_t_e;
+        }
+    }
+    if report.exit_histogram.is_empty() {
+        report.exit_histogram = vec![0; meta.num_stages];
+    }
+    Ok(RtOutcome { report })
+}
+
+/// Source-side accounting carried out of the worker-0 thread.
+#[derive(Default)]
+struct SourceTally {
+    admitted: u64,
+    completed: u64,
+    correct: u64,
+    exit_histogram: Vec<u64>,
+    latency: Samples,
+    final_mu_s: Option<f64>,
+    final_t_e: Option<f64>,
+}
+
+struct RtWorker<'a> {
+    id: usize,
+    cfg: &'a ExperimentConfig,
+    meta: &'a ModelMeta,
+    topo: &'a Topology,
+    endpoint: Endpoint<NetMsg>,
+    engine: &'a dyn crate::runtime::InferenceEngine,
+    dataset: Option<&'a Dataset>,
+    queues: WorkerQueues,
+    gamma: Ewma,
+    views: Vec<Option<NeighborView>>,
+    d_est: Vec<Ewma>,
+    rng: Pcg64,
+    stats: WorkerStats,
+    tally: SourceTally,
+    t0: Instant,
+    measure_from: f64,
+    next_task_id: u64,
+    next_sample: usize,
+    rate_ctl: Option<RateController>,
+    thr_ctl: Option<ThresholdController>,
+    t_e: f32,
+}
+
+impl<'a> RtWorker<'a> {
+    fn init_controllers(&mut self) {
+        self.tally.exit_histogram = vec![0; self.meta.num_stages];
+        match self.cfg.admission {
+            AdmissionMode::AdaptiveRate { threshold, initial_mu_s } => {
+                self.t_e = threshold;
+                if self.id == 0 {
+                    self.rate_ctl = Some(RateController::new(self.cfg.adapt, initial_mu_s));
+                }
+            }
+            AdmissionMode::AdaptiveThreshold { initial_t_e, t_e_min, .. } => {
+                self.t_e = initial_t_e;
+                if self.id == 0 {
+                    self.thr_ctl = Some(ThresholdController::new(
+                        self.cfg.adapt,
+                        initial_t_e as f64,
+                        t_e_min as f64,
+                    ));
+                }
+            }
+            AdmissionMode::Fixed { threshold, .. } => self.t_e = threshold,
+        }
+    }
+
+    fn now_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    fn in_window(&self) -> bool {
+        self.now_s() >= self.measure_from
+    }
+
+    fn run(&mut self, horizon: Duration) {
+        let mut next_admit = 0.0f64;
+        let mut next_adapt = self.cfg.adapt.sleep_s;
+        let mut next_gossip = 0.0f64;
+        while self.t0.elapsed() < horizon {
+            let mut progressed = false;
+
+            // 1. drain the mailbox
+            while let Some(d) = self.endpoint.try_recv() {
+                progressed = true;
+                self.on_msg(d.from, d.msg);
+            }
+
+            let now = self.now_s();
+
+            // 2. source duties: admission + adaptation
+            if self.id == 0 && now >= next_admit {
+                self.admit(now);
+                progressed = true;
+                let dt = match self.cfg.admission {
+                    AdmissionMode::AdaptiveRate { .. } => {
+                        self.rate_ctl.as_ref().unwrap().mu_s()
+                    }
+                    AdmissionMode::AdaptiveThreshold { rate_hz, .. } => {
+                        self.rng.exponential(1.0 / rate_hz)
+                    }
+                    AdmissionMode::Fixed { rate_hz, .. } => 1.0 / rate_hz,
+                };
+                next_admit = now + dt;
+            }
+            if self.id == 0 && now >= next_adapt {
+                let q = self.queues.total_len();
+                if let Some(rc) = self.rate_ctl.as_mut() {
+                    rc.update(q);
+                }
+                if let Some(tc) = self.thr_ctl.as_mut() {
+                    self.t_e = tc.update(q) as f32;
+                }
+                next_adapt = now + self.cfg.adapt.sleep_s;
+            }
+
+            // 3. gossip
+            if now >= next_gossip {
+                let state = NetMsg::State {
+                    input_len: self.queues.input.len(),
+                    gamma_s: self.gamma.get_or(0.01),
+                };
+                for m in self.endpoint.neighbors() {
+                    let _ = self.endpoint.send(
+                        m,
+                        NetMsg::State {
+                            input_len: match &state {
+                                NetMsg::State { input_len, .. } => *input_len,
+                                _ => unreachable!(),
+                            },
+                            gamma_s: self.gamma.get_or(0.01),
+                        },
+                        STATE_BYTES,
+                    );
+                }
+                next_gossip = now + self.cfg.gossip_interval_s;
+            }
+
+            // 4. process one input task (Alg. 1)
+            if let Some(task) = self.queues.input.pop() {
+                progressed = true;
+                self.process(task);
+            }
+
+            // 5. offload scan (Alg. 2)
+            if self.try_offload() {
+                progressed = true;
+            }
+
+            if !progressed {
+                std::thread::park_timeout(IDLE_PARK);
+            }
+        }
+        if self.id == 0 {
+            self.tally.final_mu_s = self.rate_ctl.as_ref().map(|c| c.mu_s());
+            self.tally.final_t_e = self.thr_ctl.as_ref().map(|c| c.t_e());
+        }
+    }
+
+    fn admit(&mut self, now: f64) {
+        let ds = self.dataset.expect("source has the dataset");
+        let sample = self.next_sample;
+        self.next_sample = (self.next_sample + 1) % ds.n;
+        self.next_task_id += 1;
+        let task = Task::initial(self.next_task_id, sample, Some(ds.image(sample)), now);
+        if self.in_window() {
+            self.tally.admitted += 1;
+        }
+        self.queues.input.push(task);
+    }
+
+    fn on_msg(&mut self, from: usize, msg: NetMsg) {
+        match msg {
+            NetMsg::Task(task) => {
+                if self.in_window() {
+                    self.stats.received += 1;
+                }
+                self.queues.input.push(task);
+                self.stats.peak_input = self.stats.peak_input.max(self.queues.input.len());
+            }
+            NetMsg::Result(r) => self.record_result(r),
+            NetMsg::State { input_len, gamma_s } => {
+                let d = self.d_est[from].get_or(
+                    self.topo
+                        .link(self.id, from)
+                        .map(|l| l.mean_delay_s(self.meta.stage_in_bytes[0]))
+                        .unwrap_or(0.01),
+                );
+                self.views[from] = Some(NeighborView { input_len, gamma_s, d_nm_s: d });
+            }
+        }
+    }
+
+    fn process(&mut self, mut task: Task) {
+        let started = Instant::now();
+        // decode AE payloads before the stage (paper §V wire path)
+        if task.encoded {
+            if let Some(f) = task.features.take() {
+                match self.engine.decode(&f) {
+                    Ok(Some(dec)) => task.features = Some(dec),
+                    _ => task.features = Some(f),
+                }
+            }
+            task.encoded = false;
+        }
+        let out = match self.engine.run_stage(task.stage, task.sample, task.features.as_ref()) {
+            Ok(o) => o,
+            Err(err) => {
+                log_info!("worker {}: stage {} failed: {err:#}", self.id, task.stage);
+                return;
+            }
+        };
+        let dur = started.elapsed().as_secs_f64();
+        self.gamma.push(dur);
+        if self.in_window() {
+            self.stats.processed += 1;
+            self.stats.busy_s += dur;
+        }
+
+        let is_final = task.stage >= self.meta.num_stages;
+        let threshold = if self.cfg.no_early_exit { f32::INFINITY } else { self.t_e };
+        let decision = policy::alg1_decide(
+            out.confidence,
+            threshold,
+            is_final,
+            self.queues.input.len(),
+            self.queues.output.len(),
+            self.cfg.t_o,
+        );
+        match decision {
+            ExitDecision::Exit => {
+                if self.in_window() {
+                    self.stats.exits += 1;
+                }
+                let r = InferenceResult {
+                    sample: task.sample,
+                    exit_point: task.stage,
+                    prediction: out.prediction,
+                    confidence: out.confidence,
+                    admitted_at: task.admitted_at,
+                    exited_on: self.id,
+                };
+                if self.id == 0 {
+                    self.record_result(r);
+                } else {
+                    let _ = self.endpoint.send(0, NetMsg::Result(r), RESULT_BYTES);
+                }
+            }
+            ExitDecision::ContinueLocal => {
+                self.next_task_id += 1;
+                let succ = task.successor(self.next_task_id, out.features);
+                self.queues.input.push(succ);
+            }
+            ExitDecision::ContinueOffload => {
+                self.next_task_id += 1;
+                let succ = task.successor(self.next_task_id, out.features);
+                self.queues.output.push(succ);
+            }
+        }
+        self.stats.peak_input = self.stats.peak_input.max(self.queues.input.len());
+        self.stats.peak_output = self.stats.peak_output.max(self.queues.output.len());
+    }
+
+    fn try_offload(&mut self) -> bool {
+        let mut any = false;
+        loop {
+            if self.queues.output.is_empty() {
+                return any;
+            }
+            let mut neighbors = self.endpoint.neighbors();
+            self.rng.shuffle(&mut neighbors);
+            let mut sent = false;
+            for m in neighbors {
+                let view = self.views[m].unwrap_or(NeighborView {
+                    input_len: 0,
+                    gamma_s: 0.01,
+                    d_nm_s: self.d_est[m].get_or(0.01),
+                });
+                let go = policy::offload_decide(
+                    self.cfg.offload_policy,
+                    self.queues.output.len(),
+                    self.queues.input.len(),
+                    self.gamma.get_or(0.01),
+                    &view,
+                    &mut self.rng,
+                );
+                if !go {
+                    continue;
+                }
+                let mut t = self.queues.output.pop().unwrap();
+                let mut bytes = self.meta.stage_in_bytes[t.stage - 1];
+                // AE boundary: encode before the wire (stage-2 inputs only)
+                if self.cfg.use_ae && t.stage == 2 && !t.encoded {
+                    if let (Some(f), Some(ae)) = (t.features.take(), self.meta.ae.as_ref()) {
+                        match self.engine.encode(&f) {
+                            Ok(Some(code)) => {
+                                t.features = Some(code);
+                                t.encoded = true;
+                                bytes = ae.code_bytes;
+                            }
+                            _ => t.features = Some(f),
+                        }
+                    }
+                }
+                t.hops += 1;
+                match self.endpoint.send(m, NetMsg::Task(t), bytes) {
+                    Ok(delay) => {
+                        self.d_est[m].push(delay);
+                        if let Some(v) = self.views[m].as_mut() {
+                            v.input_len += 1;
+                        }
+                        if self.in_window() {
+                            self.stats.offloaded_out += 1;
+                        }
+                        sent = true;
+                        any = true;
+                    }
+                    Err(_) => return any,
+                }
+                break;
+            }
+            if !sent {
+                // reclaim for local compute when starving (see sim.rs)
+                if self.queues.input.is_empty() {
+                    if let Some(t) = self.queues.output.pop() {
+                        self.queues.input.push(t);
+                        any = true;
+                    }
+                }
+                return any;
+            }
+        }
+    }
+
+    fn record_result(&mut self, r: InferenceResult) {
+        if !self.in_window() {
+            return;
+        }
+        let ds = self.dataset.expect("source records results");
+        self.tally.completed += 1;
+        if r.prediction == ds.label(r.sample) {
+            self.tally.correct += 1;
+        }
+        self.tally.exit_histogram[r.exit_point - 1] += 1;
+        self.tally.latency.push(self.now_s() - r.admitted_at);
+    }
+}

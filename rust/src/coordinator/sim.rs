@@ -1,0 +1,1011 @@
+//! Discrete-event driver: runs the MDI-Exit system in virtual time.
+//!
+//! This is what the figure benches execute. Workers are state machines;
+//! compute completions, network deliveries, gossip, admission, and the
+//! Alg. 3/4 adaptation ticks are events on a virtual-clock heap. The
+//! decision logic is the *same* pure `policy` module the realtime threaded
+//! driver uses — only the clock differs — so the benches measure the
+//! paper's algorithms, not a re-implementation.
+//!
+//! Engine-agnostic: with `SimEngine` (exit-oracle replay) a 60-virtual-
+//! second topology run takes milliseconds; with `XlaEngine` the same driver
+//! pushes real feature tensors through the compiled HLO stages (used by the
+//! end-to-end integration tests).
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Context, Result};
+
+use super::config::{AdmissionMode, ExperimentConfig, Mode};
+use super::policy::{
+    self, ExitDecision, NeighborView, RateController, ThresholdController,
+};
+use super::queues::WorkerQueues;
+use super::report::{RunReport, TracePoint, WorkerStats};
+use super::task::{InferenceResult, Task};
+use crate::artifact::ModelInfo;
+use crate::log_debug;
+use crate::runtime::InferenceEngine;
+use crate::simnet::Topology;
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Ewma;
+
+/// Bytes of an exit-result message (classifier output + header).
+const RESULT_BYTES: usize = 64;
+/// Trace sampling period (virtual seconds).
+const TRACE_PERIOD_S: f64 = 0.25;
+/// Hard ceiling on processed events — runaway-loop backstop.
+const MAX_EVENTS: u64 = 200_000_000;
+
+/// Compute/transfer metadata distilled from the manifest (so the DES inner
+/// loop never touches JSON or paths).
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub stage_cost_s: Vec<f64>,
+    pub stage_in_bytes: Vec<usize>,
+    pub num_stages: usize,
+    pub ae: Option<AeMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct AeMeta {
+    pub enc_cost_s: f64,
+    pub dec_cost_s: f64,
+    pub code_bytes: usize,
+}
+
+impl ModelMeta {
+    pub fn from_manifest(info: &ModelInfo) -> ModelMeta {
+        ModelMeta {
+            stage_cost_s: info.stages.iter().map(|s| s.cost_ms / 1e3).collect(),
+            stage_in_bytes: info.stages.iter().map(|s| s.in_bytes).collect(),
+            num_stages: info.num_stages,
+            ae: info.ae.as_ref().map(|ae| AeMeta {
+                enc_cost_s: ae.enc_cost_ms / 1e3,
+                dec_cost_s: ae.dec_cost_ms / 1e3,
+                code_bytes: ae.code_bytes,
+            }),
+        }
+    }
+
+    /// Synthetic metadata for engine-free unit tests.
+    pub fn synthetic(stage_cost_s: Vec<f64>, stage_in_bytes: Vec<usize>) -> ModelMeta {
+        let n = stage_cost_s.len();
+        assert_eq!(n, stage_in_bytes.len());
+        ModelMeta { stage_cost_s, stage_in_bytes, num_stages: n, ae: None }
+    }
+
+    fn total_cost_s(&self) -> f64 {
+        self.stage_cost_s.iter().sum()
+    }
+}
+
+/// Sample access: labels always; image tensors only on the real-engine path.
+pub struct SampleStore<'a> {
+    pub labels: &'a [u8],
+    pub images: Option<&'a crate::dataset::Dataset>,
+}
+
+impl<'a> SampleStore<'a> {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+    fn image(&self, i: usize) -> Option<Tensor> {
+        self.images.map(|d| d.image(i))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event machinery
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+enum Msg {
+    Task(Task),
+    Result(InferenceResult),
+}
+
+#[derive(Debug)]
+enum Event {
+    Admit,
+    AdaptTick,
+    ComputeDone { worker: usize },
+    Deliver { to: usize, from: usize, msg: Msg },
+    GossipTick,
+    TraceTick,
+    Churn { idx: usize },
+}
+
+struct Entry {
+    t: f64,
+    seq: u64,
+    ev: Event,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, o: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, o: &Self) -> CmpOrdering {
+        // BinaryHeap is a max-heap: reverse for earliest-first.
+        o.t.total_cmp(&self.t).then(o.seq.cmp(&self.seq))
+    }
+}
+
+struct SimWorker {
+    active: bool,
+    queues: WorkerQueues,
+    current: Option<Task>,
+    busy_started: f64,
+    busy_duration: f64,
+    /// Per-task compute-delay estimate Γ_n (EWMA of measured durations).
+    gamma: Ewma,
+    /// What n believes about each other worker (gossip + optimism).
+    views: Vec<Option<NeighborView>>,
+    /// Measured transfer-delay estimate D_nm per neighbor.
+    d_est: Vec<Ewma>,
+    rng: Pcg64,
+    stats: WorkerStats,
+    speed: f64,
+}
+
+/// The simulation state. Construct with [`Simulation::new`], then [`Simulation::run`].
+pub struct Simulation<'a> {
+    cfg: ExperimentConfig,
+    topo: Topology,
+    meta: ModelMeta,
+    engine: &'a dyn InferenceEngine,
+    store: SampleStore<'a>,
+
+    heap: BinaryHeap<Entry>,
+    seq: u64,
+    now: f64,
+    next_task_id: u64,
+    next_sample: usize,
+
+    workers: Vec<SimWorker>,
+    rate_ctl: Option<RateController>,
+    thr_ctl: Option<ThresholdController>,
+    /// Current global early-exit threshold T_e (Alg. 4 line 9 applies the
+    /// adapted value to all exit points).
+    t_e: f32,
+    rng: Pcg64,
+    /// Concurrent transfers on the shared medium (WiFi contention model).
+    active_transfers: usize,
+    ddi_next_target: usize,
+    /// Precomputed adjacency (hot path: try_offload runs per event).
+    neighbors: Vec<Vec<usize>>,
+    /// Scratch buffer for the shuffled neighbor scan (avoids a Vec
+    /// allocation per offload attempt — see EXPERIMENTS.md §Perf).
+    scan_buf: Vec<usize>,
+
+    report: RunReport,
+    measure_from: f64,
+    end_at: f64,
+}
+
+impl<'a> Simulation<'a> {
+    pub fn new(
+        cfg: ExperimentConfig,
+        engine: &'a dyn InferenceEngine,
+        meta: ModelMeta,
+        store: SampleStore<'a>,
+    ) -> Result<Simulation<'a>> {
+        cfg.validate()?;
+        if store.is_empty() {
+            bail!("empty sample store");
+        }
+        if meta.num_stages != engine.num_stages() {
+            bail!("meta stages {} != engine stages {}", meta.num_stages, engine.num_stages());
+        }
+        if cfg.use_ae && meta.ae.is_none() {
+            bail!("use_ae set but model has no autoencoder");
+        }
+        let topo = Topology::named(&cfg.topology, cfg.link)
+            .with_context(|| format!("unknown topology {:?}", cfg.topology))?
+            .with_churn(cfg.churn.clone());
+        let mut rng = Pcg64::new(cfg.seed, 0);
+        let default_gamma = meta.total_cost_s() / meta.num_stages as f64;
+        let workers = (0..topo.n)
+            .map(|i| SimWorker {
+                active: true,
+                queues: WorkerQueues::new(),
+                current: None,
+                busy_started: 0.0,
+                busy_duration: 0.0,
+                gamma: {
+                    let mut e = Ewma::new(0.2);
+                    e.push(default_gamma / (topo.workers[i].speed * cfg.compute_scale));
+                    e
+                },
+                views: vec![None; topo.n],
+                d_est: (0..topo.n).map(|_| Ewma::new(0.2)).collect(),
+                rng: rng.fork(i as u64 + 1),
+                stats: WorkerStats::default(),
+                speed: topo.workers[i].speed * cfg.compute_scale,
+            })
+            .collect();
+
+        let (rate_ctl, thr_ctl, t_e) = match cfg.admission {
+            AdmissionMode::AdaptiveRate { threshold, initial_mu_s } => {
+                (Some(RateController::new(cfg.adapt, initial_mu_s)), None, threshold)
+            }
+            AdmissionMode::AdaptiveThreshold { initial_t_e, t_e_min, .. } => (
+                None,
+                Some(ThresholdController::new(cfg.adapt, initial_t_e as f64, t_e_min as f64)),
+                initial_t_e,
+            ),
+            AdmissionMode::Fixed { threshold, .. } => (None, None, threshold),
+        };
+
+        let neighbors: Vec<Vec<usize>> = (0..topo.n).map(|n| topo.neighbors(n)).collect();
+        let report = RunReport::new(
+            &cfg.model,
+            &cfg.topology,
+            &run_label(&cfg),
+            topo.n,
+            meta.num_stages,
+        );
+        let measure_from = cfg.warmup_s;
+        let end_at = cfg.warmup_s + cfg.duration_s;
+        Ok(Simulation {
+            cfg,
+            topo,
+            meta,
+            engine,
+            store,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            now: 0.0,
+            next_task_id: 0,
+            next_sample: 0,
+            workers,
+            rate_ctl,
+            thr_ctl,
+            t_e,
+            rng,
+            active_transfers: 0,
+            ddi_next_target: 0,
+            neighbors,
+            scan_buf: Vec::new(),
+            report,
+            measure_from,
+            end_at,
+        })
+    }
+
+    fn push(&mut self, t: f64, ev: Event) {
+        self.seq += 1;
+        self.heap.push(Entry { t, seq: self.seq, ev });
+    }
+
+    /// Run to completion; returns the measured report.
+    pub fn run(mut self) -> Result<RunReport> {
+        self.push(0.0, Event::Admit);
+        self.push(self.cfg.gossip_interval_s, Event::GossipTick);
+        self.push(TRACE_PERIOD_S, Event::TraceTick);
+        if self.rate_ctl.is_some() || self.thr_ctl.is_some() {
+            self.push(self.cfg.adapt.sleep_s, Event::AdaptTick);
+        }
+        let churn = self.topo.churn.clone();
+        for (idx, e) in churn.iter().enumerate() {
+            self.push(e.at_s, Event::Churn { idx });
+        }
+
+        let mut events: u64 = 0;
+        while let Some(Entry { t, ev, .. }) = self.heap.pop() {
+            if t >= self.end_at {
+                break;
+            }
+            self.now = t;
+            events += 1;
+            if events > MAX_EVENTS {
+                bail!("event budget exhausted (runaway simulation)");
+            }
+            match ev {
+                Event::Admit => self.on_admit()?,
+                Event::AdaptTick => self.on_adapt_tick(),
+                Event::ComputeDone { worker } => self.on_compute_done(worker)?,
+                Event::Deliver { to, from, msg } => self.on_deliver(to, from, msg)?,
+                Event::GossipTick => self.on_gossip(),
+                Event::TraceTick => self.on_trace(),
+                Event::Churn { idx } => self.on_churn(idx)?,
+            }
+        }
+        self.finalize()
+    }
+
+    // -- admission ---------------------------------------------------------
+
+    fn on_admit(&mut self) -> Result<()> {
+        let sample = self.next_sample;
+        self.next_sample = (self.next_sample + 1) % self.store.len();
+        let id = self.next_id();
+        let features = self.store.image(sample);
+        let task = Task::initial(id, sample, features, self.now);
+        if self.now >= self.measure_from {
+            self.report.admitted += 1;
+        }
+
+        match self.cfg.mode {
+            Mode::MdiExit => {
+                self.workers[0].queues.input.push(task);
+                self.try_start(0)?;
+            }
+            Mode::Ddi => {
+                // Round-robin whole images across all active workers
+                // (including the source). No partitioning, no early exits.
+                let n = self.topo.n;
+                let mut target = self.ddi_next_target % n;
+                for _ in 0..n {
+                    if self.workers[target].active
+                        && (target == 0 || self.topo.is_connected_pair(0, target))
+                    {
+                        break;
+                    }
+                    target = (target + 1) % n;
+                }
+                self.ddi_next_target = target + 1;
+                if target == 0 {
+                    self.workers[0].queues.input.push(task);
+                    self.try_start(0)?;
+                } else {
+                    let bytes = self.meta.stage_in_bytes[0];
+                    self.transmit_task(0, target, task, bytes)?;
+                }
+            }
+        }
+
+        // Schedule the next arrival.
+        let dt = match self.cfg.admission {
+            AdmissionMode::AdaptiveRate { .. } => {
+                self.rate_ctl.as_ref().expect("rate controller").mu_s()
+            }
+            AdmissionMode::AdaptiveThreshold { rate_hz, .. } => {
+                self.rng.exponential(1.0 / rate_hz)
+            }
+            AdmissionMode::Fixed { rate_hz, .. } => 1.0 / rate_hz,
+        };
+        self.push(self.now + dt, Event::Admit);
+        Ok(())
+    }
+
+    fn on_adapt_tick(&mut self) {
+        let q = self.workers[0].queues.total_len();
+        if let Some(rc) = self.rate_ctl.as_mut() {
+            rc.update(q);
+        }
+        if let Some(tc) = self.thr_ctl.as_mut() {
+            // Alg. 4 line 9: the adapted T_e applies to every exit point.
+            self.t_e = tc.update(q) as f32;
+        }
+        self.push(self.now + self.cfg.adapt.sleep_s, Event::AdaptTick);
+    }
+
+    // -- compute -----------------------------------------------------------
+
+    fn try_start(&mut self, n: usize) -> Result<()> {
+        let w = &mut self.workers[n];
+        if !w.active || w.current.is_some() || w.queues.input.is_empty() {
+            return Ok(());
+        }
+        let task = w.queues.input.pop().unwrap();
+        let mut cost = match self.cfg.mode {
+            Mode::Ddi => self.meta.total_cost_s(),
+            Mode::MdiExit => self.meta.stage_cost_s[task.stage - 1],
+        };
+        if task.encoded {
+            cost += self.meta.ae.as_ref().map(|ae| ae.dec_cost_s).unwrap_or(0.0);
+        }
+        // ±3% lognormal-ish execution noise (thermal/DVFS variability).
+        let noise = w.rng.normal(1.0, 0.03).clamp(0.7, 1.3);
+        let duration = cost * noise / w.speed;
+        w.busy_started = self.now;
+        w.busy_duration = duration;
+        w.current = Some(task);
+        self.push(self.now + duration, Event::ComputeDone { worker: n });
+        Ok(())
+    }
+
+    fn on_compute_done(&mut self, n: usize) -> Result<()> {
+        let (task, duration) = {
+            let w = &mut self.workers[n];
+            let task = w.current.take().expect("compute done without task");
+            if self.now >= self.measure_from {
+                w.stats.busy_s += w.busy_duration;
+                w.stats.processed += 1;
+            }
+            w.gamma.push(w.busy_duration);
+            (task, w.busy_duration)
+        };
+        let _ = duration;
+
+        // Run the stage(s) through the engine to observe C_k(d) (eq. 2).
+        let (out, exit_point) = match self.cfg.mode {
+            Mode::Ddi => {
+                // whole model locally: chain every stage, exit at K
+                let mut feats = task.features.clone();
+                let mut out = None;
+                for k in 1..=self.meta.num_stages {
+                    let o = self.engine.run_stage(k, task.sample, feats.as_ref())?;
+                    feats = o.features.clone();
+                    out = Some(o);
+                }
+                (out.unwrap(), self.meta.num_stages)
+            }
+            Mode::MdiExit => {
+                let mut feats = task.features.clone();
+                if task.encoded {
+                    if let Some(f) = &feats {
+                        feats = self.engine.decode(f)?.or(feats);
+                    }
+                }
+                let o = self.engine.run_stage(task.stage, task.sample, feats.as_ref())?;
+                (o, task.stage)
+            }
+        };
+
+        let is_final = exit_point >= self.meta.num_stages || self.cfg.mode == Mode::Ddi;
+        let w = &self.workers[n];
+        let threshold = if self.cfg.no_early_exit { f32::INFINITY } else { self.t_e };
+        let decision = policy::alg1_decide(
+            out.confidence,
+            threshold,
+            is_final,
+            w.queues.input.len(),
+            w.queues.output.len(),
+            self.cfg.t_o,
+        );
+
+        match decision {
+            ExitDecision::Exit => {
+                self.workers[n].stats.exits += 1;
+                let result = InferenceResult {
+                    sample: task.sample,
+                    exit_point,
+                    prediction: out.prediction,
+                    confidence: out.confidence,
+                    admitted_at: task.admitted_at,
+                    exited_on: n,
+                };
+                if n == 0 {
+                    self.record_result(result);
+                } else {
+                    self.transmit_result(n, result)?;
+                }
+            }
+            ExitDecision::ContinueLocal => {
+                let id = self.next_id();
+                let succ = task.successor(id, out.features);
+                self.workers[n].queues.input.push(succ);
+            }
+            ExitDecision::ContinueOffload => {
+                let id = self.next_id();
+                let succ = task.successor(id, out.features);
+                self.workers[n].queues.output.push(succ);
+            }
+        }
+
+        self.try_offload(n)?;
+        self.try_start(n)?;
+        Ok(())
+    }
+
+    // -- offloading (Alg. 2) -------------------------------------------------
+
+    fn try_offload(&mut self, n: usize) -> Result<()> {
+        loop {
+            if self.workers[n].queues.output.is_empty() || !self.workers[n].active {
+                return Ok(());
+            }
+            let mut scan = std::mem::take(&mut self.scan_buf);
+            scan.clear();
+            scan.extend(self.neighbors[n].iter().copied()
+                .filter(|&m| self.workers[m].active));
+            self.workers[n].rng.shuffle(&mut scan);
+
+            let mut sent = false;
+            for m in scan.iter().copied() {
+                let (o_len, i_len, gamma_n, view) = {
+                    let w = &self.workers[n];
+                    let view = w.views[m].unwrap_or_else(|| self.default_view(n, m));
+                    (
+                        w.queues.output.len(),
+                        w.queues.input.len(),
+                        w.gamma.get_or(0.01),
+                        view,
+                    )
+                };
+                let go = {
+                    let w = &mut self.workers[n];
+                    policy::offload_decide(
+                        self.cfg.offload_policy,
+                        o_len,
+                        i_len,
+                        gamma_n,
+                        &view,
+                        &mut w.rng,
+                    )
+                };
+                if go {
+                    let task = self.workers[n].queues.output.pop().unwrap();
+                    let bytes = self.task_wire_bytes(&task);
+                    let task = self.maybe_encode(n, task)?;
+                    let bytes = if task.encoded {
+                        self.meta.ae.as_ref().unwrap().code_bytes
+                    } else {
+                        bytes
+                    };
+                    self.transmit_task(n, m, task, bytes)?;
+                    // optimistic view update until the next gossip refresh
+                    if let Some(v) = self.workers[n].views[m].as_mut() {
+                        v.input_len += 1;
+                    }
+                    sent = true;
+                    break;
+                }
+            }
+            self.scan_buf = scan;
+            if !sent {
+                // No neighbor accepted the head-of-line task. If local
+                // compute is starving, reclaim it for the input queue
+                // (prevents livelock; see DESIGN.md §6 — the paper's Alg. 2
+                // spins, which a discrete simulation must not).
+                let w = &mut self.workers[n];
+                if w.current.is_none() && w.queues.input.is_empty() {
+                    if let Some(t) = w.queues.output.pop() {
+                        w.queues.input.push(t);
+                        self.try_start(n)?;
+                    }
+                }
+                return Ok(());
+            }
+        }
+    }
+
+    fn default_view(&self, n: usize, m: usize) -> NeighborView {
+        let typical = self.meta.stage_in_bytes[self.meta.num_stages.min(2) - 1];
+        let d = self.workers[n].d_est[m].get_or(
+            self.topo
+                .link(n, m)
+                .map(|l| l.mean_delay_s(typical))
+                .unwrap_or(0.01),
+        );
+        NeighborView {
+            input_len: self.workers[m].queues.input.len(),
+            gamma_s: self.workers[m].gamma.get_or(0.01),
+            d_nm_s: d,
+        }
+    }
+
+    /// Payload size of τ_k on the wire: the feature tensor entering stage k.
+    fn task_wire_bytes(&self, task: &Task) -> usize {
+        if task.encoded {
+            return self.meta.ae.as_ref().map(|ae| ae.code_bytes).unwrap_or(0);
+        }
+        self.meta.stage_in_bytes[task.stage - 1]
+    }
+
+    /// Autoencoder at the stage-1 boundary: encode features before the wire
+    /// (paper §V — only the first ResNet exit has an AE).
+    fn maybe_encode(&mut self, n: usize, mut task: Task) -> Result<Task> {
+        if !self.cfg.use_ae || task.encoded || task.stage != 2 {
+            return Ok(task);
+        }
+        let Some(ae) = &self.meta.ae else { return Ok(task) };
+        // Encoding costs compute on the sender; fold into the send path.
+        let _enc_cost = ae.enc_cost_s / self.workers[n].speed;
+        if let Some(f) = &task.features {
+            if let Some(code) = self.engine.encode(f)? {
+                task.features = Some(code);
+            }
+        }
+        task.encoded = true;
+        Ok(task)
+    }
+
+    fn link_delay(&mut self, n: usize, m: usize, bytes: usize) -> Result<f64> {
+        let Some(link) = self.topo.link(n, m).copied() else {
+            bail!("no link {n} -> {m}");
+        };
+        // Shared-medium contention: concurrent transfers divide bandwidth.
+        let slow = 1.0 + self.cfg.medium_contention * self.active_transfers as f64;
+        let mut eff = link;
+        eff.bandwidth_bps = link.bandwidth_bps / slow;
+        Ok(eff.delay_s(bytes, &mut self.workers[n].rng))
+    }
+
+    fn transmit_task(&mut self, n: usize, m: usize, task: Task, bytes: usize) -> Result<()> {
+        let mut delay = self.link_delay(n, m, bytes)?;
+        if task.encoded {
+            if let Some(ae) = &self.meta.ae {
+                delay += ae.enc_cost_s / self.workers[n].speed;
+            }
+        }
+        self.workers[n].d_est[m].push(delay);
+        if self.now >= self.measure_from {
+            self.workers[n].stats.offloaded_out += 1;
+            self.report.bytes_on_wire += bytes as u64;
+            self.report.task_transfers += 1;
+        }
+        self.active_transfers += 1;
+        let mut task = task;
+        task.hops += 1;
+        self.push(self.now + delay, Event::Deliver { to: m, from: n, msg: Msg::Task(task) });
+        Ok(())
+    }
+
+    fn transmit_result(&mut self, n: usize, result: InferenceResult) -> Result<()> {
+        // Results go back to the source (worker 0). All testbed topologies
+        // are one hop from the source; a disconnected pair would indicate a
+        // custom topology, where we charge a two-hop relay delay.
+        let delay = if self.topo.is_connected_pair(n, 0) {
+            self.link_delay(n, 0, RESULT_BYTES)?
+        } else {
+            let via = self.topo.neighbors(n).first().copied().context("isolated worker")?;
+            self.link_delay(n, via, RESULT_BYTES)? * 2.0
+        };
+        if self.now >= self.measure_from {
+            self.report.bytes_on_wire += RESULT_BYTES as u64;
+        }
+        self.active_transfers += 1;
+        self.push(
+            self.now + delay,
+            Event::Deliver { to: 0, from: n, msg: Msg::Result(result) },
+        );
+        Ok(())
+    }
+
+    fn on_deliver(&mut self, to: usize, _from: usize, msg: Msg) -> Result<()> {
+        // the transfer occupying the shared medium ends on delivery
+        self.active_transfers = self.active_transfers.saturating_sub(1);
+        match msg {
+            Msg::Task(task) => {
+                if !self.workers[to].active {
+                    // Destination left while the task was in flight: the
+                    // fabric re-homes it to the source so no data is lost.
+                    self.report.rehomed += 1;
+                    self.workers[0].queues.input.push(task);
+                    self.try_start(0)?;
+                    return Ok(());
+                }
+                if self.now >= self.measure_from {
+                    self.workers[to].stats.received += 1;
+                }
+                self.workers[to].queues.input.push(task);
+                self.try_start(to)?;
+                self.try_offload(to)?;
+            }
+            Msg::Result(r) => {
+                self.record_result(r);
+            }
+        }
+        Ok(())
+    }
+
+    fn record_result(&mut self, r: InferenceResult) {
+        if self.now < self.measure_from {
+            return;
+        }
+        self.report.completed += 1;
+        let label = self.store.labels[r.sample];
+        if r.prediction == label {
+            self.report.correct += 1;
+        }
+        self.report.exit_histogram[r.exit_point - 1] += 1;
+        self.report.latency.push(self.now - r.admitted_at);
+    }
+
+    // -- periodic state ------------------------------------------------------
+
+    fn on_gossip(&mut self) {
+        for n in 0..self.topo.n {
+            if !self.workers[n].active {
+                continue;
+            }
+            for i in 0..self.neighbors[n].len() {
+                let m = self.neighbors[n][i];
+                if !self.workers[m].active {
+                    self.workers[n].views[m] = None;
+                    continue;
+                }
+                let view = self.default_view(n, m);
+                self.workers[n].views[m] = Some(view);
+            }
+        }
+        // Gossip may unblock offloading stalled on stale views.
+        for n in 0..self.topo.n {
+            if self.workers[n].active {
+                let _ = self.try_offload(n);
+            }
+        }
+        self.push(self.now + self.cfg.gossip_interval_s, Event::GossipTick);
+    }
+
+    fn on_trace(&mut self) {
+        let control = self
+            .rate_ctl
+            .as_ref()
+            .map(|rc| rc.mu_s())
+            .or_else(|| self.thr_ctl.as_ref().map(|tc| tc.t_e()))
+            .unwrap_or(self.t_e as f64);
+        self.report.trace.push(TracePoint {
+            t_s: self.now,
+            control,
+            source_queue: self.workers[0].queues.total_len(),
+        });
+        self.push(self.now + TRACE_PERIOD_S, Event::TraceTick);
+    }
+
+    fn on_churn(&mut self, idx: usize) -> Result<()> {
+        let e = self.topo.churn[idx];
+        log_debug!("churn at {:.2}s: worker {} {}", self.now, e.worker,
+                   if e.join { "joins" } else { "leaves" });
+        if e.join {
+            self.workers[e.worker].active = true;
+            self.try_start(e.worker)?;
+        } else {
+            self.workers[e.worker].active = false;
+            // Re-home queued tasks to the source — no data loss on churn.
+            let mut tasks = self.workers[e.worker].queues.input.drain_all();
+            tasks.extend(self.workers[e.worker].queues.output.drain_all());
+            self.report.rehomed += tasks.len() as u64;
+            for t in tasks {
+                self.workers[0].queues.input.push(t);
+            }
+            self.try_start(0)?;
+        }
+        Ok(())
+    }
+
+    fn next_id(&mut self) -> u64 {
+        self.next_task_id += 1;
+        self.next_task_id
+    }
+
+    fn finalize(mut self) -> Result<RunReport> {
+        self.report.duration_s = self.cfg.duration_s;
+        for (i, w) in self.workers.iter().enumerate() {
+            self.report.per_worker[i].peak_input = w.queues.input.peak();
+            self.report.per_worker[i].peak_output = w.queues.output.peak();
+            let s = &w.stats;
+            self.report.per_worker[i].processed = s.processed;
+            self.report.per_worker[i].offloaded_out = s.offloaded_out;
+            self.report.per_worker[i].received = s.received;
+            self.report.per_worker[i].exits = s.exits;
+            self.report.per_worker[i].busy_s = s.busy_s;
+        }
+        self.report.final_mu_s = self.rate_ctl.as_ref().map(|rc| rc.mu_s());
+        self.report.final_t_e = self.thr_ctl.as_ref().map(|tc| tc.t_e());
+        Ok(self.report)
+    }
+}
+
+fn run_label(cfg: &ExperimentConfig) -> String {
+    let ee = if cfg.no_early_exit { "No EE" } else { "MDI-Exit" };
+    let mode = match cfg.mode {
+        Mode::MdiExit => ee.to_string(),
+        Mode::Ddi => "DDI".to_string(),
+    };
+    format!("{}, {}", cfg.topology, mode)
+}
+
+/// Convenience: run one experiment on the oracle engine using manifest
+/// metadata (what benches and the CLI call).
+pub fn run_from_artifacts(
+    cfg: ExperimentConfig,
+    manifest: &crate::artifact::Manifest,
+) -> Result<RunReport> {
+    let info = manifest.model(&cfg.model)?;
+    let meta = ModelMeta::from_manifest(info);
+    let engine =
+        crate::runtime::sim_engine::SimEngine::load(manifest, &cfg.model, cfg.use_ae)?;
+    let ds = crate::dataset::Dataset::load(manifest.path(&manifest.dataset.file))?;
+    let store = SampleStore { labels: &ds.labels, images: None };
+    Simulation::new(cfg, &engine, meta, store)?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::ExitTable;
+    use crate::runtime::sim_engine::SimEngine;
+
+    /// 8 samples x 2 exits: even samples are confident at exit 1 (correct),
+    /// odd samples only at exit 2.
+    fn engine_2stage() -> (SimEngine, Vec<u8>) {
+        let n = 8;
+        let mut conf = Vec::new();
+        let mut pred = Vec::new();
+        let labels: Vec<u8> = (0..n as u8).map(|i| i % 10).collect();
+        for i in 0..n {
+            if i % 2 == 0 {
+                conf.extend([0.97f32, 0.99]);
+                pred.extend([labels[i], labels[i]]);
+            } else {
+                conf.extend([0.30f32, 0.95]);
+                pred.extend([9 - labels[i], labels[i]]); // exit1 wrong
+            }
+        }
+        (SimEngine::from_table(ExitTable::synthetic(n, 2, conf, pred), false), labels)
+    }
+
+    fn base_cfg(topology: &str) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::new(
+            "tiny",
+            topology,
+            AdmissionMode::Fixed { rate_hz: 50.0, threshold: 0.9 },
+        );
+        cfg.duration_s = 20.0;
+        cfg.warmup_s = 2.0;
+        cfg
+    }
+
+    fn meta_2stage() -> ModelMeta {
+        ModelMeta::synthetic(vec![0.002, 0.003], vec![12288, 8192])
+    }
+
+    #[test]
+    fn local_early_exit_splits_by_confidence() {
+        let (engine, labels) = engine_2stage();
+        let cfg = base_cfg("local");
+        let store = SampleStore { labels: &labels, images: None };
+        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        assert!(r.completed > 500, "completed {}", r.completed);
+        // Half the stream exits at 1 (conf .97 > .9), half at 2.
+        let f = r.exit_fractions();
+        assert!((f[0] - 0.5).abs() < 0.05, "exit fractions {f:?}");
+        // exit-1 samples correct, exit-2 samples correct => accuracy 1.0
+        assert!((r.accuracy() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_early_exit_only_final() {
+        let (engine, labels) = engine_2stage();
+        let mut cfg = base_cfg("local");
+        cfg.no_early_exit = true;
+        let store = SampleStore { labels: &labels, images: None };
+        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        let f = r.exit_fractions();
+        assert_eq!(f[0], 0.0, "no task may exit early: {f:?}");
+        assert!(r.completed > 0);
+    }
+
+    #[test]
+    fn distributed_offloads_and_completes() {
+        let (engine, labels) = engine_2stage();
+        let mut cfg = base_cfg("3-node-mesh");
+        // overload one node so offloading must kick in
+        cfg.admission = AdmissionMode::Fixed { rate_hz: 300.0, threshold: 0.9 };
+        let store = SampleStore { labels: &labels, images: None };
+        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        assert!(r.task_transfers > 0, "expected offloading");
+        assert!(r.completed > 1000, "completed {}", r.completed);
+        assert!((r.accuracy() - 1.0).abs() < 1e-9);
+        // workers 1 and 2 did real work
+        assert!(r.per_worker[1].processed + r.per_worker[2].processed > 0);
+    }
+
+    #[test]
+    fn adaptive_rate_tracks_capacity() {
+        let (engine, labels) = engine_2stage();
+        let mut cfg = base_cfg("local");
+        cfg.admission = AdmissionMode::AdaptiveRate { threshold: 0.9, initial_mu_s: 1.0 };
+        cfg.duration_s = 120.0;
+        cfg.warmup_s = 30.0;
+        let store = SampleStore { labels: &labels, images: None };
+        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        // capacity: mean cost/sample = 0.002 + 0.5*0.003 = 3.5ms → ~285 Hz.
+        // Alg. 3 should push the admitted rate into the right decade and
+        // the system should complete most of what it admits.
+        let rate = r.admitted_rate_hz();
+        assert!(rate > 100.0, "admitted rate {rate} too low");
+        assert!(
+            r.completed as f64 >= 0.7 * r.admitted as f64,
+            "completed {} vs admitted {}",
+            r.completed,
+            r.admitted
+        );
+    }
+
+    #[test]
+    fn adaptive_threshold_degrades_under_load() {
+        let (engine, labels) = engine_2stage();
+        // Rate far beyond capacity: Alg. 4 must lower T_e toward the floor.
+        let mut cfg = base_cfg("local");
+        cfg.admission =
+            AdmissionMode::AdaptiveThreshold { rate_hz: 2000.0, initial_t_e: 0.99, t_e_min: 0.05 };
+        cfg.duration_s = 60.0;
+        let store = SampleStore { labels: &labels, images: None };
+        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        let t_e = r.final_t_e.unwrap();
+        assert!(t_e < 0.5, "threshold should fall under overload, got {t_e}");
+        // with low T_e nearly everything exits at 1
+        let f = r.exit_fractions();
+        assert!(f[0] > 0.8, "exit fractions {f:?}");
+    }
+
+    #[test]
+    fn churn_rehomes_tasks() {
+        use crate::simnet::ChurnEvent;
+        let (engine, labels) = engine_2stage();
+        let mut cfg = base_cfg("2-node");
+        // far beyond the 2-node capacity (~330 Hz for these costs) so the
+        // leaving worker is guaranteed to hold queued tasks at churn time
+        cfg.admission = AdmissionMode::Fixed { rate_hz: 900.0, threshold: 0.9 };
+        cfg.duration_s = 30.0;
+        cfg.churn = vec![ChurnEvent { at_s: 10.0, worker: 1, join: false }];
+        let store = SampleStore { labels: &labels, images: None };
+        let meta = meta_2stage();
+        let r = Simulation::new(cfg, &engine, meta, store).unwrap().run().unwrap();
+        assert!(r.completed > 0);
+        // After the leave, in-flight/queued tasks re-home instead of vanishing.
+        assert!(r.rehomed > 0, "expected rehomed tasks on churn");
+    }
+
+    #[test]
+    fn ddi_mode_uses_whole_model_and_final_exit() {
+        let (engine, labels) = engine_2stage();
+        let mut cfg = base_cfg("3-node-mesh");
+        cfg.mode = Mode::Ddi;
+        cfg.admission = AdmissionMode::Fixed { rate_hz: 100.0, threshold: 0.9 };
+        let store = SampleStore { labels: &labels, images: None };
+        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        let f = r.exit_fractions();
+        assert_eq!(f[0], 0.0, "DDI never exits early: {f:?}");
+        assert!(r.completed > 0);
+        // whole images travel: bytes include 12 KiB payloads
+        assert!(r.bytes_on_wire > 0);
+    }
+
+    #[test]
+    fn conservation_no_task_loss() {
+        // Every admitted sample (before a settling margin) must eventually
+        // produce exactly one result: count with a long drain window.
+        let (engine, labels) = engine_2stage();
+        let mut cfg = base_cfg("3-node-mesh");
+        cfg.admission = AdmissionMode::Fixed { rate_hz: 100.0, threshold: 0.9 };
+        cfg.duration_s = 40.0;
+        cfg.warmup_s = 0.0;
+        let store = SampleStore { labels: &labels, images: None };
+        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        // Under-loaded (100 Hz vs ~285 Hz capacity): everything admitted
+        // except the in-flight tail must complete.
+        assert!(
+            r.admitted - r.completed < 20,
+            "admitted {} completed {}",
+            r.admitted,
+            r.completed
+        );
+    }
+
+    #[test]
+    fn rejects_bad_construction() {
+        let (engine, labels) = engine_2stage();
+        let cfg = base_cfg("not-a-topology");
+        let store = SampleStore { labels: &labels, images: None };
+        assert!(Simulation::new(cfg, &engine, meta_2stage(), store).is_err());
+
+        let mut cfg = base_cfg("local");
+        cfg.use_ae = true; // meta has no AE
+        let store = SampleStore { labels: &labels, images: None };
+        assert!(Simulation::new(cfg, &engine, meta_2stage(), store).is_err());
+
+        let cfg = base_cfg("local");
+        let store = SampleStore { labels: &[], images: None };
+        assert!(Simulation::new(cfg, &engine, meta_2stage(), store).is_err());
+    }
+}

@@ -1,0 +1,74 @@
+//! Task and result records — the unit of work the paper calls τ_k(d).
+
+use crate::tensor::Tensor;
+
+/// Task τ_k(d): process the layers between exit point k-1 and k for data d.
+#[derive(Debug, Clone)]
+pub struct Task {
+    /// Globally unique task id (diagnostics, loss/duplication checks).
+    pub id: u64,
+    /// Dataset index d of the originating sample.
+    pub sample: usize,
+    /// Which task (stage) this is, 1-based like the paper's τ indices.
+    pub stage: usize,
+    /// Feature tensor a_{λ_b^k}(d) entering the stage. `None` on the
+    /// oracle (DES) path where the engine replays confidences by sample id.
+    pub features: Option<Tensor>,
+    /// Payload is an autoencoder code (must be decoded before processing).
+    pub encoded: bool,
+    /// Virtual/real time the sample was admitted at the source.
+    pub admitted_at: f64,
+    /// Offload hops so far (diagnostics; Fig. 5's transmission bottleneck).
+    pub hops: u32,
+}
+
+impl Task {
+    /// First task τ_1(d) for a freshly admitted sample.
+    pub fn initial(id: u64, sample: usize, features: Option<Tensor>, now: f64) -> Task {
+        Task { id, sample, stage: 1, features, encoded: false, admitted_at: now, hops: 0 }
+    }
+
+    /// Successor task τ_{k+1}(d) (Alg. 1 lines 9–11), reusing the data id.
+    pub fn successor(&self, id: u64, features: Option<Tensor>) -> Task {
+        Task {
+            id,
+            sample: self.sample,
+            stage: self.stage + 1,
+            features,
+            encoded: false,
+            admitted_at: self.admitted_at,
+            hops: self.hops,
+        }
+    }
+}
+
+/// What the source receives when some worker exits for data d
+/// (Alg. 1 line 6: "send the output of the classifier b_l^k(d) to the source").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InferenceResult {
+    pub sample: usize,
+    /// Exit point that fired (1-based; K = full model, no early exit).
+    pub exit_point: usize,
+    pub prediction: u8,
+    pub confidence: f32,
+    /// Time the sample was admitted (for latency accounting).
+    pub admitted_at: f64,
+    /// Worker that produced the exit.
+    pub exited_on: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn successor_advances_stage_and_keeps_lineage() {
+        let t = Task::initial(1, 42, None, 3.5);
+        assert_eq!((t.stage, t.sample, t.hops), (1, 42, 0));
+        let s = t.successor(2, None);
+        assert_eq!(s.stage, 2);
+        assert_eq!(s.sample, 42);
+        assert_eq!(s.admitted_at, 3.5);
+        assert!(!s.encoded);
+    }
+}

@@ -1,0 +1,218 @@
+//! Loaders for the binary artifacts the Python AOT pipeline ships:
+//!
+//! * `dataset.bin` — the held-out test set the source worker admits
+//!   (quantized images + labels + per-sample difficulty),
+//! * `exits_*.bin` — the per-sample, per-exit oracle table (confidence and
+//!   prediction at every exit point), used by `runtime::SimEngine` to replay
+//!   the *exact* trained-model exit behaviour without paying XLA compute in
+//!   the figure benches.
+//!
+//! Formats are defined in `python/compile/data.py` / `aot.py`; magics and
+//! layouts must stay in sync.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+pub const DATASET_MAGIC: u32 = 0x4D44_4945; // "MDIE"
+pub const EXITS_MAGIC: u32 = 0x4D44_4958; // "MDIX"
+
+/// The held-out labelled image set.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    /// Quantized pixels, n*h*w*c, row-major.
+    pixels: Vec<u8>,
+    pub labels: Vec<u8>,
+    pub difficulty: Vec<f32>,
+}
+
+fn read_u32s(buf: &[u8], n: usize) -> Result<Vec<u32>> {
+    if buf.len() < n * 4 {
+        bail!("truncated header");
+    }
+    Ok((0..n)
+        .map(|i| u32::from_le_bytes(buf[i * 4..i * 4 + 4].try_into().unwrap()))
+        .collect())
+}
+
+impl Dataset {
+    pub fn load(path: impl AsRef<Path>) -> Result<Dataset> {
+        let path = path.as_ref();
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading dataset {}", path.display()))?;
+        let hdr = read_u32s(&buf, 6)?;
+        if hdr[0] != DATASET_MAGIC {
+            bail!("bad dataset magic {:#x}", hdr[0]);
+        }
+        if hdr[1] != 1 {
+            bail!("unsupported dataset version {}", hdr[1]);
+        }
+        let (n, h, w, c) = (hdr[2] as usize, hdr[3] as usize, hdr[4] as usize, hdr[5] as usize);
+        let px = n * h * w * c;
+        let expect = 24 + px + n + n * 4;
+        if buf.len() != expect {
+            bail!("dataset size {} != expected {}", buf.len(), expect);
+        }
+        let pixels = buf[24..24 + px].to_vec();
+        let labels = buf[24 + px..24 + px + n].to_vec();
+        let difficulty = buf[24 + px + n..]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        Ok(Dataset { n, h, w, c, pixels, labels, difficulty })
+    }
+
+    /// Dequantize image `i` to the f32 tensor the stage-1 HLO expects.
+    /// Must invert `python/compile/data.py::quantize_u8` exactly:
+    /// x = q/255 * 8 - 4.
+    pub fn image(&self, i: usize) -> Tensor {
+        assert!(i < self.n, "image index {i} out of range {}", self.n);
+        let sz = self.h * self.w * self.c;
+        let px = &self.pixels[i * sz..(i + 1) * sz];
+        let data = px.iter().map(|&q| q as f32 / 255.0 * 8.0 - 4.0).collect();
+        Tensor::new(vec![self.h, self.w, self.c], data)
+    }
+
+    pub fn label(&self, i: usize) -> u8 {
+        self.labels[i]
+    }
+}
+
+/// Per-sample, per-exit oracle table: what the trained model would produce
+/// at every exit point for every test sample.
+#[derive(Debug, Clone)]
+pub struct ExitTable {
+    pub n: usize,
+    pub num_exits: usize,
+    conf: Vec<f32>,
+    pred: Vec<u8>,
+}
+
+impl ExitTable {
+    pub fn load(path: impl AsRef<Path>) -> Result<ExitTable> {
+        let path = path.as_ref();
+        let buf = std::fs::read(path)
+            .with_context(|| format!("reading exit table {}", path.display()))?;
+        let hdr = read_u32s(&buf, 4)?;
+        if hdr[0] != EXITS_MAGIC {
+            bail!("bad exits magic {:#x}", hdr[0]);
+        }
+        if hdr[1] != 1 {
+            bail!("unsupported exits version {}", hdr[1]);
+        }
+        let (n, k) = (hdr[2] as usize, hdr[3] as usize);
+        let expect = 16 + n * k * 4 + n * k;
+        if buf.len() != expect {
+            bail!("exits size {} != expected {}", buf.len(), expect);
+        }
+        let conf = buf[16..16 + n * k * 4]
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        let pred = buf[16 + n * k * 4..].to_vec();
+        Ok(ExitTable { n, num_exits: k, conf, pred })
+    }
+
+    /// Confidence C_k(d) the trained model reports at exit k (0-based) for
+    /// sample `i`.
+    pub fn confidence(&self, i: usize, k: usize) -> f32 {
+        self.conf[i * self.num_exits + k]
+    }
+
+    /// Class prediction at exit k (0-based) for sample `i`.
+    pub fn prediction(&self, i: usize, k: usize) -> u8 {
+        self.pred[i * self.num_exits + k]
+    }
+
+    /// Build an in-memory table (tests / synthetic setups).
+    pub fn synthetic(n: usize, num_exits: usize, conf: Vec<f32>, pred: Vec<u8>) -> ExitTable {
+        assert_eq!(conf.len(), n * num_exits);
+        assert_eq!(pred.len(), n * num_exits);
+        ExitTable { n, num_exits, conf, pred }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mdi-ds-{}-{}", std::process::id(), name))
+    }
+
+    fn write_dataset(path: &Path, n: usize, h: usize, w: usize, c: usize) {
+        let mut f = std::fs::File::create(path).unwrap();
+        for v in [DATASET_MAGIC, 1, n as u32, h as u32, w as u32, c as u32] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        let px: Vec<u8> = (0..n * h * w * c).map(|i| (i % 256) as u8).collect();
+        f.write_all(&px).unwrap();
+        let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+        f.write_all(&labels).unwrap();
+        for i in 0..n {
+            f.write_all(&(i as f32 / n as f32).to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn dataset_roundtrip_and_dequantize() {
+        let p = tmpfile("ok.bin");
+        write_dataset(&p, 4, 2, 2, 3);
+        let ds = Dataset::load(&p).unwrap();
+        assert_eq!((ds.n, ds.h, ds.w, ds.c), (4, 2, 2, 3));
+        assert_eq!(ds.label(3), 3);
+        let img = ds.image(0);
+        assert_eq!(img.shape(), &[2, 2, 3]);
+        // pixel value 0 -> -4.0; pixel 255 -> +4.0
+        assert!((img.data()[0] - (-4.0)).abs() < 1e-6);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn dataset_rejects_bad_magic_and_truncation() {
+        let p = tmpfile("bad.bin");
+        std::fs::write(&p, [0u8; 24]).unwrap();
+        assert!(Dataset::load(&p).is_err());
+        write_dataset(&p, 4, 2, 2, 3);
+        let mut buf = std::fs::read(&p).unwrap();
+        buf.truncate(buf.len() - 1);
+        std::fs::write(&p, &buf).unwrap();
+        assert!(Dataset::load(&p).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn exit_table_roundtrip() {
+        let p = tmpfile("exits.bin");
+        let (n, k) = (3, 2);
+        let mut f = std::fs::File::create(&p).unwrap();
+        for v in [EXITS_MAGIC, 1, n as u32, k as u32] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        let confs = [0.5f32, 0.9, 0.4, 0.8, 0.3, 0.7];
+        for c in confs {
+            f.write_all(&c.to_le_bytes()).unwrap();
+        }
+        f.write_all(&[1u8, 1, 2, 3, 4, 4]).unwrap();
+        drop(f);
+        let t = ExitTable::load(&p).unwrap();
+        assert_eq!((t.n, t.num_exits), (3, 2));
+        assert!((t.confidence(1, 1) - 0.8).abs() < 1e-6);
+        assert_eq!(t.prediction(2, 0), 4);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn synthetic_table() {
+        let t = ExitTable::synthetic(2, 2, vec![0.1, 0.2, 0.3, 0.4], vec![0, 1, 2, 3]);
+        assert!((t.confidence(1, 0) - 0.3).abs() < 1e-6);
+        assert_eq!(t.prediction(0, 1), 1);
+    }
+}

@@ -1,0 +1,34 @@
+//! # mdi-exit
+//!
+//! Reproduction of **"Early-Exit meets Model-Distributed Inference at Edge
+//! Networks"** (Colocrese, Koyuncu, Seferoglu, 2024) as a three-layer
+//! Rust + JAX + Pallas system (AOT via XLA/PJRT).
+//!
+//! * L3 (this crate): the MDI-Exit coordinator — per-worker input/output
+//!   queues, early-exit + offloading policies (Algs 1–2), and the two
+//!   data-admission controllers (Algs 3–4) — over a simulated edge network.
+//! * L2/L1 (`python/compile`, build-time only): multi-exit MobileNetV2-Lite
+//!   and ResNet-Lite with Pallas kernels, AOT-lowered per stage to HLO text
+//!   that [`runtime::xla_engine::XlaEngine`] compiles and executes via PJRT.
+//!
+//! Start at [`coordinator`] for the algorithms, [`experiments`] for the
+//! figure reproductions, and `examples/quickstart.rs` for a guided tour.
+
+pub mod artifact;
+pub mod cli;
+pub mod coordinator;
+pub mod dataset;
+pub mod experiments;
+pub mod runtime;
+pub mod simnet;
+pub mod tensor;
+pub mod testkit;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root), overridable via
+/// the `MDI_ARTIFACTS` environment variable.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("MDI_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,232 @@
+//! `mdi-exit` — CLI launcher for the MDI-Exit system.
+//!
+//! Subcommands:
+//!   info                         inspect the artifact manifest
+//!   run [--config f.toml] [...]  one experiment on the DES driver
+//!   serve [...]                  realtime threaded run on the PJRT engine
+//!   fig3|fig4|fig5|fig6          reproduce a paper figure
+//!   ablations                    run the ablation suite
+//!
+//! Common flags: --artifacts DIR (or MDI_ARTIFACTS), --quick, --seed N.
+
+use anyhow::{bail, Context, Result};
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::cli::Args;
+use mdi_exit::coordinator::{
+    rt, run_from_artifacts, AdmissionMode, ExperimentConfig, ModelMeta,
+};
+use mdi_exit::dataset::Dataset;
+use mdi_exit::experiments as exp;
+use mdi_exit::runtime::xla_engine::XlaEngine;
+use mdi_exit::util::toml::Config as Toml;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    let artifacts = args.str_or("artifacts", "artifacts").to_string();
+    match args.subcommand() {
+        None | Some("help") => {
+            print_help();
+            Ok(())
+        }
+        Some("info") => cmd_info(&artifacts),
+        Some("run") => cmd_run(&args, &artifacts),
+        Some("serve") => cmd_serve(&args, &artifacts),
+        Some(fig @ ("fig3" | "fig4" | "fig5" | "fig6")) => cmd_fig(fig, &args, &artifacts),
+        Some("ablations") => cmd_ablations(&args, &artifacts),
+        Some(other) => bail!("unknown subcommand {other:?} (try `mdi-exit help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "mdi-exit — Early-Exit meets Model-Distributed Inference (reproduction)\n\n\
+         USAGE: mdi-exit <subcommand> [flags]\n\n\
+         SUBCOMMANDS\n\
+           info        print the artifact manifest summary\n\
+           run         one DES experiment     (--config cfg.toml | --model --topology ...)\n\
+           serve       realtime run on the compiled HLO stages (PJRT)\n\
+           fig3..fig6  reproduce the paper's figures (DES sweeps)\n\
+           ablations   autoencoder / offload-policy / T_O ablations\n\n\
+         COMMON FLAGS\n\
+           --artifacts DIR   artifact directory (default: artifacts)\n\
+           --quick           short sweeps (for smoke runs)\n\
+           --seed N          RNG seed (default 7)\n\n\
+         RUN FLAGS\n\
+           --config FILE     TOML experiment config (see configs/)\n\
+           --model M --topology T --threshold X --rate HZ --duration S\n\
+           --adaptive-rate | --adaptive-threshold   admission mode\n\
+           --use-ae --no-ee  feature toggles\n\
+           --json            print the full RunReport as JSON"
+    );
+}
+
+fn cmd_info(artifacts: &str) -> Result<()> {
+    let m = Manifest::load(artifacts)?;
+    println!("artifacts: {}", m.dir.display());
+    println!("dataset: {} samples, {}x{}x{}, {} classes",
+             m.dataset.n, m.dataset.h, m.dataset.w, m.dataset.c, m.dataset.num_classes);
+    for (name, info) in &m.models {
+        println!("\nmodel {name}: {} stages", info.num_stages);
+        for s in &info.stages {
+            println!(
+                "  stage {}: {:?} -> {:?}  cost {:.2} ms  in {} B  ({})",
+                s.k, s.in_shape, s.out_shape, s.cost_ms, s.in_bytes, s.hlo
+            );
+        }
+        println!("  exit accuracy: {:?}", info.exit_accuracy);
+        println!("  mean confidence: {:?}", info.mean_confidence);
+        if let Some(ae) = &info.ae {
+            println!(
+                "  autoencoder: {} B -> {} B ({}x), acc drop {:?}",
+                ae.raw_bytes, ae.code_bytes, ae.compression, ae.acc_drop
+            );
+        }
+    }
+    Ok(())
+}
+
+fn build_config(args: &Args) -> Result<ExperimentConfig> {
+    if args.has("config") {
+        let path = args.str_or("config", "");
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        let toml = Toml::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        return ExperimentConfig::from_toml(&toml);
+    }
+    let model = args.str_or("model", "mobilenetv2l");
+    let topology = args.str_or("topology", "3-node-mesh");
+    let threshold = args.f64_or("threshold", 0.9)? as f32;
+    let rate = args.f64_or("rate", 25.0)?;
+    let admission = if args.bool_or("adaptive-rate", false)? {
+        AdmissionMode::AdaptiveRate { threshold, initial_mu_s: 0.25 }
+    } else if args.bool_or("adaptive-threshold", false)? {
+        AdmissionMode::AdaptiveThreshold { rate_hz: rate, initial_t_e: threshold, t_e_min: 0.05 }
+    } else {
+        AdmissionMode::Fixed { rate_hz: rate, threshold }
+    };
+    let mut cfg = ExperimentConfig::new(model, topology, admission);
+    cfg.use_ae = args.bool_or("use-ae", false)?;
+    cfg.no_early_exit = args.bool_or("no-ee", false)?;
+    cfg.duration_s = args.f64_or("duration", 30.0)?;
+    cfg.warmup_s = args.f64_or("warmup", 5.0)?;
+    cfg.compute_scale = args.f64_or("compute-scale", 0.125)?;
+    cfg.seed = args.u64_or("seed", 7)?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args, artifacts: &str) -> Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let cfg = build_config(args)?;
+    let label = format!("{} on {}", cfg.model, cfg.topology);
+    let mut report = run_from_artifacts(cfg, &manifest)?;
+    if args.has("trace") {
+        // controller/queue timeline for plotting (t, control value, queue)
+        let path = args.str_or("trace", "trace.json");
+        let pts: Vec<mdi_exit::util::json::Json> = report
+            .trace
+            .iter()
+            .map(|p| {
+                mdi_exit::util::json::obj(vec![
+                    ("t_s", p.t_s.into()),
+                    ("control", p.control.into()),
+                    ("source_queue", p.source_queue.into()),
+                ])
+            })
+            .collect();
+        std::fs::write(path, mdi_exit::util::json::Json::Arr(pts).to_string())
+            .with_context(|| format!("writing trace {path}"))?;
+        println!("trace written to {path} ({} points)", report.trace.len());
+    }
+    if args.bool_or("json", false)? {
+        println!("{}", report.to_json().to_string());
+    } else {
+        println!("run: {label}");
+        println!("  admitted      {:>10}  ({:.2} Hz)", report.admitted, report.admitted_rate_hz());
+        println!("  completed     {:>10}  ({:.2} Hz)", report.completed, report.throughput_hz());
+        println!("  accuracy      {:>10.4}", report.accuracy());
+        println!("  latency p50   {:>10.2} ms", report.latency.p50() * 1e3);
+        println!("  latency p95   {:>10.2} ms", report.latency.p95() * 1e3);
+        println!("  exit fractions {:?}",
+                 report.exit_fractions().iter().map(|f| (f * 100.0).round() / 100.0)
+                       .collect::<Vec<_>>());
+        println!("  bytes on wire {:>10}", report.bytes_on_wire);
+        if let Some(mu) = report.final_mu_s {
+            println!("  final mu      {:>10.4} s ({:.2} Hz)", mu, 1.0 / mu);
+        }
+        if let Some(te) = report.final_t_e {
+            println!("  final T_e     {:>10.4}", te);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let mut cfg = build_config(args)?;
+    cfg.duration_s = args.f64_or("duration", 10.0)?;
+    cfg.warmup_s = args.f64_or("warmup", 2.0)?;
+    let info = manifest.model(&cfg.model)?;
+    let meta = ModelMeta::from_manifest(info);
+    let dataset = Dataset::load(manifest.path(&manifest.dataset.file))?;
+    let use_ae = cfg.use_ae;
+    let model = cfg.model.clone();
+    let manifest_ref = &manifest;
+    println!("compiling {} stages per worker (PJRT CPU)...", info.num_stages);
+    let factory = move |worker: usize| -> Result<Box<dyn mdi_exit::runtime::InferenceEngine>> {
+        let eng = XlaEngine::load(manifest_ref, &model, use_ae)
+            .with_context(|| format!("worker {worker} engine"))?;
+        Ok(Box::new(eng) as Box<dyn mdi_exit::runtime::InferenceEngine>)
+    };
+    let out = rt::run_realtime(&cfg, &factory, &meta, &dataset)?;
+    let mut report = out.report;
+    println!("realtime run: {} on {}", cfg.model, cfg.topology);
+    println!("  completed  {:>8}  ({:.2} Hz)", report.completed, report.throughput_hz());
+    println!("  accuracy   {:>8.4}", report.accuracy());
+    println!("  latency p50 {:>7.2} ms  p95 {:>7.2} ms",
+             report.latency.p50() * 1e3, report.latency.p95() * 1e3);
+    println!("  exit fractions {:?}", report.exit_fractions());
+    Ok(())
+}
+
+fn cmd_fig(which: &str, args: &Args, artifacts: &str) -> Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let opts = if args.bool_or("quick", false)? {
+        exp::SweepOpts::quick()
+    } else {
+        exp::SweepOpts::full()
+    };
+    let (rows, title, xlabel) = match which {
+        "fig3" => (exp::fig3(&manifest, opts)?, "Fig. 3 — MobileNetV2, fixed threshold", "T_e"),
+        "fig4" => (exp::fig4(&manifest, opts)?, "Fig. 4 — ResNet, fixed threshold", "T_e"),
+        "fig5" => (exp::fig5(&manifest, opts)?, "Fig. 5 — MobileNetV2, Poisson arrivals", "rate"),
+        "fig6" => (exp::fig6(&manifest, opts)?, "Fig. 6 — ResNet + AE, Poisson arrivals", "rate"),
+        _ => unreachable!(),
+    };
+    exp::print_rows(title, xlabel, &rows);
+    Ok(())
+}
+
+fn cmd_ablations(args: &Args, artifacts: &str) -> Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let opts = if args.bool_or("quick", false)? {
+        exp::SweepOpts::quick()
+    } else {
+        exp::SweepOpts::full()
+    };
+    exp::print_rows("abl-ae — autoencoder on/off (ResNet, 5-node mesh)", "rate",
+                    &exp::ablation_autoencoder(&manifest, opts)?);
+    exp::print_rows("abl-offload — offloading policies (MobileNet, 3-node mesh)", "rate",
+                    &exp::ablation_offload(&manifest, opts)?);
+    exp::print_rows("abl-queue — T_O sensitivity", "T_O",
+                    &exp::ablation_thresholds(&manifest, opts)?);
+    exp::print_rows("DDI vs MDI-Exit", "rate", &exp::ddi_comparison(&manifest, opts)?);
+    Ok(())
+}

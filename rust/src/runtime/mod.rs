@@ -1,0 +1,76 @@
+//! Inference runtime: how a worker actually processes task τ_k.
+//!
+//! Two engines implement the same trait:
+//!
+//! * [`xla_engine::XlaEngine`] — the real path: loads the AOT-compiled HLO
+//!   text artifacts, compiles them once on the PJRT CPU client, and executes
+//!   stages on feature tensors. Used by the examples, the end-to-end
+//!   integration tests, and the realtime driver.
+//! * [`sim_engine::SimEngine`] — oracle replay: returns the *exact*
+//!   confidence/prediction the trained model produces for each (sample,
+//!   exit) from the build-time `exits_*.bin` table, without paying XLA
+//!   compute. Used by the discrete-event driver so the figure benches can
+//!   push tens of thousands of tasks through Algs 1–4 in virtual time.
+//!
+//! Both agree on the observable behaviour of the paper's system — the
+//! integration suite cross-checks them on the same samples.
+
+pub mod sim_engine;
+pub mod xla_engine;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// What a worker learns from processing task τ_k (Alg. 1 lines 3–4).
+#[derive(Debug, Clone)]
+pub struct StageOutput {
+    /// Feature tensor entering task τ_{k+1}. `None` from the oracle engine
+    /// (the DES driver tracks payload sizes from the manifest instead) and
+    /// for the final stage.
+    pub features: Option<Tensor>,
+    /// Confidence level C_k(d) — eq. (2): max of the exit-classifier softmax.
+    pub confidence: f32,
+    /// argmax of the exit classifier (the label sent back to the source).
+    pub prediction: u8,
+}
+
+/// Uniform stage-execution interface for both engines.
+///
+/// `sample` is the dataset index d; `features` is the tensor entering the
+/// stage (`None` on the oracle path). Stages are 1-based like the paper's
+/// task indices.
+///
+/// Deliberately not `Send + Sync`: the `xla` crate's PJRT wrappers carry
+/// raw pointers without thread-safety markers, so the realtime driver gives
+/// each worker thread its own engine via an [`EngineFactory`] instead of
+/// sharing one.
+pub trait InferenceEngine {
+    /// Number of tasks K the model is partitioned into.
+    fn num_stages(&self) -> usize;
+
+    /// Execute task τ_k. For k == 1 `features` is the raw image.
+    fn run_stage(&self, k: usize, sample: usize, features: Option<&Tensor>)
+        -> Result<StageOutput>;
+
+    /// Autoencoder encode at the stage-1 boundary (paper §V). Only
+    /// meaningful for models with an AE; `None` otherwise.
+    fn encode(&self, _features: &Tensor) -> Result<Option<Tensor>> {
+        Ok(None)
+    }
+
+    /// Autoencoder decode (inverse of [`InferenceEngine::encode`]).
+    fn decode(&self, _code: &Tensor) -> Result<Option<Tensor>> {
+        Ok(None)
+    }
+
+    /// Whether the AE path is available/enabled.
+    fn has_autoencoder(&self) -> bool {
+        false
+    }
+}
+
+/// Per-thread engine constructor for the realtime driver: each worker
+/// thread builds (and compiles) its own engine, mirroring how each Jetson
+/// in the paper's testbed holds its own copy of its layers.
+pub type EngineFactory = dyn Fn(usize) -> Result<Box<dyn InferenceEngine>> + Send + Sync;

@@ -1,0 +1,164 @@
+//! Oracle-replay engine: exact trained-model exit behaviour without XLA.
+//!
+//! The AOT pipeline evaluates the trained model on every held-out sample at
+//! every exit point and ships the resulting (confidence, prediction) table
+//! (`exits_<model>.bin`, and `exits_resnetl_ae.bin` for the AE-on-the-wire
+//! variant). Replaying that table gives the discrete-event driver the same
+//! observable behaviour as running the HLO — the paper's Algorithms 1–4
+//! consume only C_k(d) and queue/delay state — at nanosecond cost, which is
+//! what lets the figure benches sweep topologies × thresholds × rates.
+
+use anyhow::{bail, Result};
+
+use super::{InferenceEngine, StageOutput};
+use crate::artifact::{Manifest, ModelInfo};
+use crate::dataset::ExitTable;
+use crate::tensor::Tensor;
+
+/// Engine backed by the build-time exit-oracle table.
+pub struct SimEngine {
+    table: ExitTable,
+    num_stages: usize,
+    has_ae: bool,
+    /// Optional wallclock compute emulation per stage (seconds). The DES
+    /// driver charges stage costs in virtual time and leaves this empty;
+    /// the realtime driver sets it so oracle replay occupies a worker
+    /// thread for as long as the real HLO stage would.
+    stage_cost_s: Vec<f64>,
+}
+
+impl SimEngine {
+    /// Load from artifacts. `use_ae = true` selects the table evaluated with
+    /// the autoencoder on the stage-1 boundary (resnetl only).
+    pub fn load(manifest: &Manifest, model: &str, use_ae: bool) -> Result<SimEngine> {
+        let info: &ModelInfo = manifest.model(model)?;
+        let rel = if use_ae {
+            match &info.ae {
+                Some(ae) => ae.exits_bin_ae.clone(),
+                None => bail!("model {model} has no autoencoder table"),
+            }
+        } else {
+            info.exits_bin.clone()
+        };
+        let table = ExitTable::load(manifest.path(&rel))?;
+        if table.num_exits != info.num_stages {
+            bail!("exit table K={} != model stages {}", table.num_exits, info.num_stages);
+        }
+        Ok(SimEngine {
+            table,
+            num_stages: info.num_stages,
+            has_ae: use_ae,
+            stage_cost_s: Vec::new(),
+        })
+    }
+
+    /// Emulate per-stage compute cost in wallclock (realtime driver): each
+    /// `run_stage` busy-waits `manifest cost / scale` like the compiled HLO
+    /// stage would occupy the thread. `scale` > 1 = faster device.
+    pub fn with_costs(mut self, stage_cost_s: Vec<f64>, scale: f64) -> SimEngine {
+        assert_eq!(stage_cost_s.len(), self.num_stages);
+        assert!(scale > 0.0);
+        self.stage_cost_s = stage_cost_s.iter().map(|c| c / scale).collect();
+        self
+    }
+
+    /// Build directly from a table (unit tests, synthetic workloads).
+    pub fn from_table(table: ExitTable, has_ae: bool) -> SimEngine {
+        SimEngine {
+            num_stages: table.num_exits,
+            table,
+            has_ae,
+            stage_cost_s: Vec::new(),
+        }
+    }
+
+    pub fn num_samples(&self) -> usize {
+        self.table.n
+    }
+}
+
+impl InferenceEngine for SimEngine {
+    fn num_stages(&self) -> usize {
+        self.num_stages
+    }
+
+    fn run_stage(&self, k: usize, sample: usize, _features: Option<&Tensor>)
+        -> Result<StageOutput> {
+        if k == 0 || k > self.num_stages {
+            bail!("stage {k} out of range 1..={}", self.num_stages);
+        }
+        if sample >= self.table.n {
+            bail!("sample {sample} out of range {}", self.table.n);
+        }
+        if let Some(&cost) = self.stage_cost_s.get(k - 1) {
+            // Spin rather than sleep: sub-millisecond stage costs are below
+            // the scheduler's sleep granularity.
+            let t0 = std::time::Instant::now();
+            while t0.elapsed().as_secs_f64() < cost {
+                std::hint::spin_loop();
+            }
+        }
+        Ok(StageOutput {
+            features: None,
+            confidence: self.table.confidence(sample, k - 1),
+            prediction: self.table.prediction(sample, k - 1),
+        })
+    }
+
+    fn has_autoencoder(&self) -> bool {
+        self.has_ae
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> ExitTable {
+        // 2 samples x 3 exits
+        ExitTable::synthetic(
+            2,
+            3,
+            vec![0.4, 0.6, 0.95, 0.2, 0.5, 0.9],
+            vec![7, 7, 3, 1, 2, 2],
+        )
+    }
+
+    #[test]
+    fn replays_table_values() {
+        let e = SimEngine::from_table(table(), false);
+        assert_eq!(e.num_stages(), 3);
+        let o = e.run_stage(3, 0, None).unwrap();
+        assert!((o.confidence - 0.95).abs() < 1e-6);
+        assert_eq!(o.prediction, 3);
+        assert!(o.features.is_none());
+        let o = e.run_stage(2, 1, None).unwrap();
+        assert!((o.confidence - 0.5).abs() < 1e-6);
+        assert_eq!(o.prediction, 2);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let e = SimEngine::from_table(table(), false);
+        assert!(e.run_stage(0, 0, None).is_err());
+        assert!(e.run_stage(4, 0, None).is_err());
+        assert!(e.run_stage(1, 9, None).is_err());
+    }
+
+    #[test]
+    fn with_costs_occupies_wallclock() {
+        let e = SimEngine::from_table(table(), false).with_costs(vec![0.004, 0.0, 0.0], 2.0);
+        let t0 = std::time::Instant::now();
+        e.run_stage(1, 0, None).unwrap();
+        assert!(t0.elapsed().as_secs_f64() >= 0.002); // 4ms / scale 2
+        let t0 = std::time::Instant::now();
+        e.run_stage(2, 0, None).unwrap();
+        assert!(t0.elapsed().as_secs_f64() < 0.002);
+    }
+
+    #[test]
+    fn ae_flag() {
+        assert!(!SimEngine::from_table(table(), false).has_autoencoder());
+        assert!(SimEngine::from_table(table(), true).has_autoencoder());
+    }
+}

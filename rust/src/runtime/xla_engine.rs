@@ -1,0 +1,142 @@
+//! PJRT-backed engine: loads the AOT HLO text artifacts and executes them.
+//!
+//! This is the production request path: `HloModuleProto::from_text_file`
+//! (text, not serialized proto — see /opt/xla-example/README.md on the
+//! 64-bit-id incompatibility) → `XlaComputation` → `PjRtClient::compile`,
+//! once per stage at startup; then `execute` per task with zero Python
+//! anywhere.
+
+use anyhow::{bail, Context, Result};
+
+use super::{InferenceEngine, StageOutput};
+use crate::artifact::{Manifest, ModelInfo};
+use crate::tensor::Tensor;
+
+/// One compiled model stage (task τ_k).
+struct StageExe {
+    exe: xla::PjRtLoadedExecutable,
+    in_shape: Vec<usize>,
+}
+
+/// PJRT CPU engine holding every compiled stage of one model (plus the
+/// optional autoencoder pair).
+pub struct XlaEngine {
+    stages: Vec<StageExe>,
+    ae_enc: Option<StageExe>,
+    ae_dec: Option<StageExe>,
+    probs_dim: usize,
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::new(dims, data))
+}
+
+fn compile_hlo(client: &xla::PjRtClient, path: &std::path::Path,
+               in_shape: &[usize]) -> Result<StageExe> {
+    let proto = xla::HloModuleProto::from_text_file(path)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))?;
+    Ok(StageExe { exe, in_shape: in_shape.to_vec() })
+}
+
+impl StageExe {
+    /// Execute on one input tensor; outputs are the AOT tuple elements.
+    fn run(&self, input: &Tensor) -> Result<Vec<Tensor>> {
+        if input.shape() != self.in_shape.as_slice() {
+            bail!("input shape {:?} != expected {:?}", input.shape(), self.in_shape);
+        }
+        let lit = tensor_to_literal(input)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = result.to_tuple()?;
+        parts.iter().map(literal_to_tensor).collect()
+    }
+}
+
+impl XlaEngine {
+    /// Compile every stage of `model` on a fresh PJRT CPU client.
+    /// `with_ae` additionally compiles the autoencoder pair (resnetl).
+    pub fn load(manifest: &Manifest, model: &str, with_ae: bool) -> Result<XlaEngine> {
+        let info: &ModelInfo = manifest.model(model)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut stages = Vec::with_capacity(info.num_stages);
+        for s in &info.stages {
+            stages.push(compile_hlo(&client, &manifest.path(&s.hlo), &s.in_shape)?);
+        }
+        let (ae_enc, ae_dec) = if with_ae {
+            let ae = info
+                .ae
+                .as_ref()
+                .with_context(|| format!("model {model} has no autoencoder"))?;
+            let raw_shape = info.stages[0].out_shape.clone();
+            (
+                Some(compile_hlo(&client, &manifest.path(&ae.enc_hlo), &raw_shape)?),
+                Some(compile_hlo(&client, &manifest.path(&ae.dec_hlo), &ae.code_shape)?),
+            )
+        } else {
+            (None, None)
+        };
+        Ok(XlaEngine {
+            stages,
+            ae_enc,
+            ae_dec,
+            probs_dim: info.stages[0].probs_dim,
+        })
+    }
+}
+
+impl InferenceEngine for XlaEngine {
+    fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    fn run_stage(&self, k: usize, _sample: usize, features: Option<&Tensor>)
+        -> Result<StageOutput> {
+        if k == 0 || k > self.stages.len() {
+            bail!("stage {k} out of range 1..={}", self.stages.len());
+        }
+        let input = features.context("XlaEngine needs a feature tensor")?;
+        let outs = self.stages[k - 1].run(input)?;
+        if outs.len() != 2 {
+            bail!("stage {k} returned {} outputs, expected (features, probs)", outs.len());
+        }
+        let probs = &outs[1];
+        if probs.numel() != self.probs_dim {
+            bail!("probs dim {} != {}", probs.numel(), self.probs_dim);
+        }
+        Ok(StageOutput {
+            confidence: probs.max(),
+            prediction: probs.argmax() as u8,
+            features: Some(outs[0].clone()),
+        })
+    }
+
+    fn encode(&self, features: &Tensor) -> Result<Option<Tensor>> {
+        match &self.ae_enc {
+            None => Ok(None),
+            Some(enc) => Ok(Some(enc.run(features)?.remove(0))),
+        }
+    }
+
+    fn decode(&self, code: &Tensor) -> Result<Option<Tensor>> {
+        match &self.ae_dec {
+            None => Ok(None),
+            Some(dec) => Ok(Some(dec.run(code)?.remove(0))),
+        }
+    }
+
+    fn has_autoencoder(&self) -> bool {
+        self.ae_enc.is_some()
+    }
+}

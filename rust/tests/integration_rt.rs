@@ -1,0 +1,89 @@
+//! Integration: the realtime threaded driver (wallclock, simnet transport)
+//! with the oracle engine — fast enough for CI, same code path as the
+//! XLA-backed examples.
+
+use anyhow::Result;
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::coordinator::{rt, AdmissionMode, ExperimentConfig, ModelMeta};
+use mdi_exit::dataset::Dataset;
+use mdi_exit::runtime::sim_engine::SimEngine;
+use mdi_exit::runtime::InferenceEngine;
+
+fn setup() -> Option<(Manifest, Dataset)> {
+    let manifest = match Manifest::load(mdi_exit::artifacts_dir()) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("artifacts missing; skipping");
+            return None;
+        }
+    };
+    let ds = Dataset::load(manifest.path(&manifest.dataset.file)).expect("dataset");
+    Some((manifest, ds))
+}
+
+fn run(topology: &str, admission: AdmissionMode, seconds: f64) -> Option<rt::RtOutcome> {
+    let (manifest, ds) = setup()?;
+    let info = manifest.model("mobilenetv2l").unwrap();
+    let meta = ModelMeta::from_manifest(info);
+    let mut cfg = ExperimentConfig::new("mobilenetv2l", topology, admission);
+    cfg.duration_s = seconds;
+    cfg.warmup_s = 0.5;
+    cfg.adapt.sleep_s = 0.2;
+    let mref = &manifest;
+    let costs: Vec<f64> = info.stages.iter().map(|s| s.cost_ms / 1e3).collect();
+    let factory = move |_w: usize| -> Result<Box<dyn InferenceEngine>> {
+        // oracle engine + wallclock compute emulation at the manifest costs
+        let eng = SimEngine::load(mref, "mobilenetv2l", false)?
+            .with_costs(costs.clone(), 1.0);
+        Ok(Box::new(eng) as Box<dyn InferenceEngine>)
+    };
+    Some(rt::run_realtime(&cfg, &factory, &meta, &ds).expect("realtime run"))
+}
+
+#[test]
+fn realtime_local_completes_with_high_accuracy() {
+    let Some(out) = run("local", AdmissionMode::Fixed { rate_hz: 200.0, threshold: 0.9 }, 2.0)
+    else {
+        return;
+    };
+    let r = out.report;
+    assert!(r.completed > 100, "completed {}", r.completed);
+    assert!(r.accuracy() > 0.8, "accuracy {}", r.accuracy());
+    let hist: u64 = r.exit_histogram.iter().sum();
+    assert_eq!(hist, r.completed);
+}
+
+#[test]
+fn realtime_mesh_distributes_work() {
+    let Some(out) =
+        run("3-node-mesh", AdmissionMode::Fixed { rate_hz: 3000.0, threshold: 0.95 }, 3.0)
+    else {
+        return;
+    };
+    let r = out.report;
+    assert!(r.completed > 500, "completed {}", r.completed);
+    // overloaded source must have offloaded to both neighbors
+    assert!(
+        r.per_worker[0].offloaded_out > 0,
+        "no offloading happened: {:?}",
+        r.per_worker.iter().map(|w| w.processed).collect::<Vec<_>>()
+    );
+    let remote: u64 = r.per_worker[1..].iter().map(|w| w.processed).sum();
+    assert!(remote > 0, "neighbors never processed tasks");
+}
+
+#[test]
+fn realtime_rate_adaptation_settles() {
+    let Some(out) = run(
+        "2-node",
+        AdmissionMode::AdaptiveRate { threshold: 0.9, initial_mu_s: 0.1 },
+        3.0,
+    ) else {
+        return;
+    };
+    let r = out.report;
+    assert!(r.completed > 50, "completed {}", r.completed);
+    let mu = r.final_mu_s.expect("controller state");
+    assert!((1e-4..60.0).contains(&mu));
+}

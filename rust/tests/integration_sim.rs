@@ -1,0 +1,196 @@
+//! Integration: the full DES system on the *real* trained-model artifacts
+//! (oracle engine). Skips silently when `make artifacts` has not run.
+//!
+//! These tests assert the qualitative shapes of the paper's evaluation —
+//! the same claims EXPERIMENTS.md records quantitatively.
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::coordinator::{run_from_artifacts, AdmissionMode, ExperimentConfig, Mode};
+use mdi_exit::experiments::{self, SweepOpts};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(mdi_exit::artifacts_dir()) {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("artifacts missing; skipping integration test");
+            None
+        }
+    }
+}
+
+fn quick() -> SweepOpts {
+    SweepOpts { duration_s: 20.0, warmup_s: 8.0, seed: 7, compute_scale: 0.125 }
+}
+
+fn rate_cfg(model: &str, topo: &str, threshold: f32) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(
+        model,
+        topo,
+        AdmissionMode::AdaptiveRate { threshold, initial_mu_s: 0.25 },
+    );
+    cfg.duration_s = quick().duration_s;
+    cfg.warmup_s = quick().warmup_s;
+    cfg.compute_scale = quick().compute_scale;
+    cfg
+}
+
+#[test]
+fn early_exit_beats_no_ee_in_admitted_rate() {
+    let Some(m) = manifest() else { return };
+    for model in ["mobilenetv2l", "resnetl"] {
+        let ee = run_from_artifacts(rate_cfg(model, "local", 0.9), &m).unwrap();
+        let mut no_ee = rate_cfg(model, "local", 0.9);
+        no_ee.no_early_exit = true;
+        let no_ee = run_from_artifacts(no_ee, &m).unwrap();
+        assert!(
+            ee.throughput_hz() > no_ee.throughput_hz(),
+            "{model}: EE {:.1} Hz should beat No-EE {:.1} Hz",
+            ee.throughput_hz(),
+            no_ee.throughput_hz()
+        );
+    }
+}
+
+#[test]
+fn more_nodes_admit_more_data() {
+    // Paper §V: "when the number of nodes increases ... MDI-Exit achieves a
+    // higher data arrival rate". The gains are modest for MobileNet (small
+    // features, cheap stages — the paper's own Fig. 3 shows the same), so
+    // assert monotone growth with a 10% margin rather than a 2x jump.
+    let Some(m) = manifest() else { return };
+    let local = run_from_artifacts(rate_cfg("mobilenetv2l", "local", 0.9), &m).unwrap();
+    let mesh3 = run_from_artifacts(rate_cfg("mobilenetv2l", "3-node-mesh", 0.9), &m).unwrap();
+    let mesh5 = run_from_artifacts(rate_cfg("mobilenetv2l", "5-node-mesh", 0.9), &m).unwrap();
+    assert!(
+        mesh3.throughput_hz() > local.throughput_hz() * 1.1,
+        "3-node mesh {:.1} Hz should beat local {:.1} Hz",
+        mesh3.throughput_hz(),
+        local.throughput_hz()
+    );
+    assert!(
+        mesh5.throughput_hz() > mesh3.throughput_hz(),
+        "5-node mesh {:.1} Hz should beat 3-node {:.1} Hz",
+        mesh5.throughput_hz(),
+        mesh3.throughput_hz()
+    );
+}
+
+#[test]
+fn lower_threshold_trades_accuracy_for_rate() {
+    let Some(m) = manifest() else { return };
+    let lo = run_from_artifacts(rate_cfg("mobilenetv2l", "local", 0.5), &m).unwrap();
+    let hi = run_from_artifacts(rate_cfg("mobilenetv2l", "local", 0.95), &m).unwrap();
+    assert!(
+        lo.throughput_hz() >= hi.throughput_hz(),
+        "T=0.5 rate {:.1} should be >= T=0.95 rate {:.1}",
+        lo.throughput_hz(),
+        hi.throughput_hz()
+    );
+    assert!(
+        hi.accuracy() >= lo.accuracy() - 0.02,
+        "higher threshold should not lose accuracy: {:.3} vs {:.3}",
+        hi.accuracy(),
+        lo.accuracy()
+    );
+}
+
+#[test]
+fn threshold_adaptation_admits_all_traffic_with_graceful_accuracy() {
+    let Some(m) = manifest() else { return };
+    let mut accs = Vec::new();
+    for rate in [20.0, 320.0] {
+        let mut cfg = ExperimentConfig::new(
+            "mobilenetv2l",
+            "3-node-mesh",
+            AdmissionMode::AdaptiveThreshold { rate_hz: rate, initial_t_e: 0.9, t_e_min: 0.05 },
+        );
+        cfg.duration_s = 25.0;
+        cfg.warmup_s = 10.0;
+        cfg.compute_scale = 0.125;
+        let r = run_from_artifacts(cfg, &m).unwrap();
+        // all traffic admitted: completions keep up within 15%
+        assert!(
+            r.completed as f64 >= 0.85 * r.admitted as f64,
+            "rate {rate}: completed {} vs admitted {}",
+            r.completed,
+            r.admitted
+        );
+        accs.push(r.accuracy());
+    }
+    // accuracy degrades with rate but stays above chance
+    assert!(accs[1] <= accs[0] + 0.02, "accuracy did not degrade: {accs:?}");
+    assert!(accs[1] > 0.3, "accuracy collapsed: {accs:?}");
+}
+
+#[test]
+fn autoencoder_rescues_resnet_on_5_node_mesh() {
+    let Some(m) = manifest() else { return };
+    let mut raw_acc = Vec::new();
+    let mut ae_acc = Vec::new();
+    for &use_ae in &[false, true] {
+        for &rate in &[20.0] {
+            let mut cfg = ExperimentConfig::new(
+                "resnetl",
+                "5-node-mesh",
+                AdmissionMode::AdaptiveThreshold {
+                    rate_hz: rate,
+                    initial_t_e: 0.9,
+                    t_e_min: 0.05,
+                },
+            );
+            cfg.use_ae = use_ae;
+            cfg.link = mdi_exit::experiments::resnet_link();
+            cfg.duration_s = 25.0;
+            cfg.warmup_s = 10.0;
+            cfg.compute_scale = 0.125;
+            let r = run_from_artifacts(cfg, &m).unwrap();
+            if use_ae {
+                ae_acc.push(r.accuracy());
+            } else {
+                raw_acc.push(r.accuracy());
+            }
+        }
+    }
+    // Paper Fig. 6 claim: with the AE the mesh holds accuracy at high rate.
+    assert!(
+        ae_acc[0] > raw_acc[0] - 0.02,
+        "AE should not be worse under load: ae {ae_acc:?} vs raw {raw_acc:?}"
+    );
+}
+
+#[test]
+fn ddi_pays_more_bytes_than_mdi() {
+    let Some(m) = manifest() else { return };
+    let mk = |mode| {
+        let mut cfg = ExperimentConfig::new(
+            "mobilenetv2l",
+            "3-node-mesh",
+            AdmissionMode::Fixed { rate_hz: 60.0, threshold: 0.9 },
+        );
+        cfg.mode = mode;
+        cfg.duration_s = 20.0;
+        cfg.warmup_s = 5.0;
+        cfg.compute_scale = 0.125;
+        cfg
+    };
+    let ddi = run_from_artifacts(mk(Mode::Ddi), &m).unwrap();
+    let mdi = run_from_artifacts(mk(Mode::MdiExit), &m).unwrap();
+    let ddi_bps = ddi.bytes_on_wire as f64 / ddi.completed.max(1) as f64;
+    let mdi_bps = mdi.bytes_on_wire as f64 / mdi.completed.max(1) as f64;
+    assert!(
+        ddi_bps > mdi_bps,
+        "DDI bytes/sample {ddi_bps:.0} should exceed MDI-Exit {mdi_bps:.0}"
+    );
+}
+
+#[test]
+fn fig_runners_produce_full_grids() {
+    let Some(m) = manifest() else { return };
+    let opts = SweepOpts { duration_s: 6.0, warmup_s: 2.0, seed: 7, compute_scale: 0.125 };
+    let rows = experiments::fig3(&m, opts).unwrap();
+    // 5 topologies x 6 thresholds + 3 No-EE reference points
+    assert_eq!(rows.len(), 5 * 6 + 3);
+    assert!(rows.iter().all(|r| r.rate_hz.is_finite() && (0.0..=1.0).contains(&r.accuracy)));
+    let rows = experiments::fig5(&m, opts).unwrap();
+    assert_eq!(rows.len(), 5 * 6);
+}

@@ -1,0 +1,136 @@
+//! Integration over the *real* runtime: AOT HLO artifacts compiled and
+//! executed on PJRT, cross-checked against the Python-side oracle tables.
+//!
+//! This is the proof that the three layers compose: the Pallas kernels (L1)
+//! inside the JAX stage functions (L2) lowered to HLO text, loaded and
+//! driven by the Rust coordinator (L3), reproduce exactly the confidences
+//! and predictions the Python evaluation recorded at build time.
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::coordinator::{AdmissionMode, ExperimentConfig, ModelMeta, SampleStore, Simulation};
+use mdi_exit::dataset::{Dataset, ExitTable};
+use mdi_exit::runtime::xla_engine::XlaEngine;
+use mdi_exit::runtime::InferenceEngine;
+
+fn setup(model: &str, with_ae: bool) -> Option<(Manifest, XlaEngine, Dataset, ExitTable)> {
+    let manifest = match Manifest::load(mdi_exit::artifacts_dir()) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("artifacts missing; skipping");
+            return None;
+        }
+    };
+    let engine = XlaEngine::load(&manifest, model, with_ae).expect("compile stages");
+    let ds = Dataset::load(manifest.path(&manifest.dataset.file)).expect("dataset");
+    let info = manifest.model(model).unwrap();
+    let table = ExitTable::load(manifest.path(&info.exits_bin)).expect("exit table");
+    Some((manifest, engine, ds, table))
+}
+
+/// Chain every stage on PJRT for `sample`, returning (conf, pred) per exit.
+fn run_chain(engine: &XlaEngine, ds: &Dataset, sample: usize) -> Vec<(f32, u8)> {
+    let mut feats = Some(ds.image(sample));
+    let mut out = Vec::new();
+    for k in 1..=engine.num_stages() {
+        let o = engine.run_stage(k, sample, feats.as_ref()).expect("stage");
+        out.push((o.confidence, o.prediction));
+        feats = o.features;
+    }
+    out
+}
+
+#[test]
+fn xla_stages_match_python_oracle_mobilenet() {
+    let Some((_m, engine, ds, table)) = setup("mobilenetv2l", false) else { return };
+    for sample in [0usize, 1, 17, 255, 1023] {
+        let got = run_chain(&engine, &ds, sample);
+        for (k, (conf, pred)) in got.iter().enumerate() {
+            let want_conf = table.confidence(sample, k);
+            let want_pred = table.prediction(sample, k);
+            assert_eq!(*pred, want_pred, "sample {sample} exit {k}: prediction mismatch");
+            assert!(
+                (conf - want_conf).abs() < 2e-2,
+                "sample {sample} exit {k}: conf {conf} vs oracle {want_conf}"
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_stages_match_python_oracle_resnet() {
+    let Some((_m, engine, ds, table)) = setup("resnetl", false) else { return };
+    for sample in [2usize, 42, 511] {
+        let got = run_chain(&engine, &ds, sample);
+        for (k, (conf, pred)) in got.iter().enumerate() {
+            assert_eq!(*pred, table.prediction(sample, k), "sample {sample} exit {k}");
+            assert!((conf - table.confidence(sample, k)).abs() < 2e-2);
+        }
+    }
+}
+
+#[test]
+fn xla_accuracy_on_subset_matches_manifest() {
+    let Some((m, engine, ds, _)) = setup("mobilenetv2l", false) else { return };
+    let info = m.model("mobilenetv2l").unwrap();
+    let n = 200;
+    let mut correct = 0;
+    for s in 0..n {
+        let chain = run_chain(&engine, &ds, s);
+        let (_, pred) = chain.last().unwrap();
+        if *pred == ds.label(s) {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    let manifest_acc = *info.exit_accuracy.last().unwrap();
+    assert!(
+        (acc - manifest_acc).abs() < 0.08,
+        "subset accuracy {acc} vs manifest {manifest_acc}"
+    );
+}
+
+#[test]
+fn xla_autoencoder_roundtrip_preserves_deep_exits() {
+    let Some((_m, engine, ds, _)) = setup("resnetl", true) else { return };
+    assert!(engine.has_autoencoder());
+    let sample = 7;
+    // stage 1 → encode → decode → stage 2 must still classify like the
+    // AE-aware oracle (exits_resnetl_ae.bin)
+    let o1 = engine.run_stage(1, sample, Some(&ds.image(sample))).unwrap();
+    let feats = o1.features.unwrap();
+    let code = engine.encode(&feats).unwrap().expect("code");
+    assert_eq!(code.numel() * 4, 1024, "code must be 1 KiB");
+    let dec = engine.decode(&code).unwrap().expect("decoded");
+    assert_eq!(dec.shape(), feats.shape());
+    let o2 = engine.run_stage(2, sample, Some(&dec)).unwrap();
+    let ae_table = ExitTable::load(
+        Manifest::load(mdi_exit::artifacts_dir())
+            .unwrap()
+            .path("exits_resnetl_ae.bin"),
+    )
+    .unwrap();
+    assert_eq!(o2.prediction, ae_table.prediction(sample, 1));
+    assert!((o2.confidence - ae_table.confidence(sample, 1)).abs() < 2e-2);
+}
+
+#[test]
+fn des_driver_runs_on_real_engine() {
+    // The same Simulation used by benches, but pushing real tensors through
+    // PJRT — proving the DES and the runtime compose.
+    let Some((m, engine, ds, _)) = setup("mobilenetv2l", false) else { return };
+    let info = m.model("mobilenetv2l").unwrap();
+    let mut cfg = ExperimentConfig::new(
+        "mobilenetv2l",
+        "2-node",
+        AdmissionMode::Fixed { rate_hz: 40.0, threshold: 0.9 },
+    );
+    cfg.duration_s = 3.0; // virtual seconds, but compute is real now
+    cfg.warmup_s = 0.5;
+    let meta = ModelMeta::from_manifest(info);
+    let store = SampleStore { labels: &ds.labels, images: Some(&ds) };
+    let r = Simulation::new(cfg, &engine, meta, store).unwrap().run().unwrap();
+    assert!(r.completed > 20, "completed {}", r.completed);
+    assert!(r.accuracy() > 0.5, "accuracy {}", r.accuracy());
+    let hist_sum: u64 = r.exit_histogram.iter().sum();
+    assert_eq!(hist_sum, r.completed);
+}

@@ -1,0 +1,275 @@
+//! Property tests on the coordinator invariants (DESIGN.md §7), using the
+//! in-tree mini-framework (`testkit::prop` — offline proptest substitute).
+
+use mdi_exit::coordinator::policy::{
+    self, AdaptConfig, ExitDecision, NeighborView, OffloadPolicy, RateController,
+    ThresholdController,
+};
+use mdi_exit::coordinator::{AdmissionMode, ExperimentConfig, ModelMeta, SampleStore, Simulation};
+use mdi_exit::dataset::ExitTable;
+use mdi_exit::runtime::sim_engine::SimEngine;
+use mdi_exit::testkit::prop::{F64In, Gen, Prop, UsizeIn, Verdict};
+use mdi_exit::util::rng::Pcg64;
+
+/// Composite generator for Alg. 1 inputs.
+struct Alg1Case;
+impl Gen for Alg1Case {
+    type Out = (f32, f32, bool, usize, usize, usize);
+    fn sample(&self, rng: &mut Pcg64) -> Self::Out {
+        (
+            rng.range_f64(0.0, 1.0) as f32,
+            rng.range_f64(0.0, 1.0) as f32,
+            rng.chance(0.2),
+            rng.below(100) as usize,
+            rng.below(100) as usize,
+            rng.below(80) as usize,
+        )
+    }
+}
+
+#[test]
+fn prop_alg1_decision_table() {
+    Prop::new("alg1 complete decision table").cases(2000).run(
+        &Alg1Case,
+        |&(conf, th, is_final, i_len, o_len, t_o)| {
+            let d = policy::alg1_decide(conf, th, is_final, i_len, o_len, t_o);
+            let want = if is_final || conf > th {
+                ExitDecision::Exit
+            } else if i_len == 0 || o_len > t_o {
+                ExitDecision::ContinueLocal
+            } else {
+                ExitDecision::ContinueOffload
+            };
+            Verdict::check(d == want, || {
+                format!("({conf},{th},{is_final},{i_len},{o_len},{t_o}) -> {d:?}, want {want:?}")
+            })
+        },
+    );
+}
+
+struct Alg2Case;
+impl Gen for Alg2Case {
+    type Out = (usize, usize, f64, NeighborView, u64);
+    fn sample(&self, rng: &mut Pcg64) -> Self::Out {
+        (
+            rng.below(60) as usize,
+            rng.below(60) as usize,
+            rng.range_f64(1e-4, 0.05),
+            NeighborView {
+                input_len: rng.below(60) as usize,
+                gamma_s: rng.range_f64(1e-4, 0.05),
+                d_nm_s: rng.range_f64(0.0, 0.05),
+            },
+            rng.next_u64(),
+        )
+    }
+}
+
+#[test]
+fn prop_alg2_gate_is_strict() {
+    // Whatever the delays, O_n <= I_m must never offload (paper line 2/4).
+    Prop::new("alg2 queue gate").cases(2000).run(
+        &Alg2Case,
+        |&(o_len, i_len, gamma, view, seed)| {
+            if o_len > view.input_len {
+                return Verdict::Pass; // gate open: either branch is legal
+            }
+            let mut rng = Pcg64::new(seed, 9);
+            let went = policy::alg2_should_offload(o_len, i_len, gamma, &view, &mut rng);
+            Verdict::check(!went, || {
+                format!("offloaded with O_n={o_len} <= I_m={}", view.input_len)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_alg2_deterministic_branch_always_fires() {
+    // When local wait strictly exceeds remote wait and the gate is open,
+    // Alg. 2 must offload with probability 1 (line 3).
+    Prop::new("alg2 deterministic branch").cases(2000).run(
+        &Alg2Case,
+        |&(o_len, i_len, gamma, view, seed)| {
+            let local = i_len as f64 * gamma;
+            let remote = view.d_nm_s + view.input_len as f64 * view.gamma_s;
+            if o_len <= view.input_len || local <= remote {
+                return Verdict::Pass;
+            }
+            let mut rng = Pcg64::new(seed, 9);
+            let went = policy::alg2_should_offload(o_len, i_len, gamma, &view, &mut rng);
+            Verdict::check(went, || {
+                format!("local {local} > remote {remote} but did not offload")
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_rate_controller_bounded_under_any_inputs() {
+    Prop::new("alg3 mu bounded").cases(200).run(
+        &mdi_exit::testkit::prop::VecOf(UsizeIn(0, 500), 64),
+        |qs| {
+            let mut rc = RateController::new(AdaptConfig::default(), 0.5);
+            for &q in qs {
+                let mu = rc.update(q);
+                if !(1e-4..=60.0).contains(&mu) || !mu.is_finite() {
+                    return Verdict::Fail(format!("mu escaped bounds: {mu}"));
+                }
+            }
+            Verdict::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_threshold_controller_bounded() {
+    Prop::new("alg4 t_e in [t_min, 1]").cases(200).run(
+        &mdi_exit::testkit::prop::VecOf(UsizeIn(0, 500), 64),
+        |qs| {
+            let mut tc = ThresholdController::new(AdaptConfig::default(), 0.8, 0.05);
+            for &q in qs {
+                let te = tc.update(q);
+                if !(0.05..=1.0).contains(&te) {
+                    return Verdict::Fail(format!("t_e escaped bounds: {te}"));
+                }
+            }
+            Verdict::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_alg3_direction_matches_occupancy() {
+    // μ must decrease when queues are under T_Q1 and increase above T_Q2.
+    Prop::new("alg3 monotone response").cases(500).run(&UsizeIn(0, 200), |&q| {
+        let cfg = AdaptConfig::default();
+        let mut rc = RateController::new(cfg, 1.0);
+        let mu0 = rc.mu_s();
+        let mu1 = rc.update(q);
+        let ok = if q < cfg.t_q1 {
+            mu1 < mu0
+        } else if q > cfg.t_q2 {
+            mu1 > mu0
+        } else if q > cfg.t_q1 && q < cfg.t_q2 {
+            mu1 < mu0
+        } else {
+            (mu1 - mu0).abs() < 1e-12
+        };
+        Verdict::check(ok, || format!("q={q}: mu {mu0} -> {mu1}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Whole-system invariants under randomized configurations
+// ---------------------------------------------------------------------------
+
+struct SysCase;
+impl Gen for SysCase {
+    type Out = (usize, f64, f32, u64, usize);
+    fn sample(&self, rng: &mut Pcg64) -> Self::Out {
+        (
+            rng.below(5) as usize,                 // topology index
+            rng.range_f64(20.0, 400.0),            // rate
+            rng.range_f64(0.3, 0.99) as f32,       // threshold
+            rng.next_u64(),                        // seed
+            rng.below(3) as usize,                 // policy index
+        )
+    }
+}
+
+fn synthetic_engine(n: usize) -> (SimEngine, Vec<u8>) {
+    let mut conf = Vec::new();
+    let mut pred = Vec::new();
+    let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+    let mut rng = Pcg64::new(99, 0);
+    for &l in &labels {
+        let c1 = rng.range_f64(0.2, 1.0) as f32;
+        let c2 = (c1 + 0.2).min(1.0);
+        let c3 = 1.0f32;
+        conf.extend([c1, c2, c3]);
+        // earlier exits sometimes wrong
+        let p1 = if c1 > 0.6 { l } else { (l + 1) % 10 };
+        pred.extend([p1, l, l]);
+    }
+    (SimEngine::from_table(ExitTable::synthetic(n, 3, conf, pred), false), labels)
+}
+
+#[test]
+fn prop_simulation_conservation_and_sanity() {
+    let topos = ["local", "2-node", "3-node-mesh", "3-node-circular", "5-node-mesh"];
+    let policies =
+        [OffloadPolicy::Alg2, OffloadPolicy::Deterministic, OffloadPolicy::QueueOnly];
+    let (engine, labels) = synthetic_engine(256);
+    Prop::new("simulation invariants").cases(40).run(
+        &SysCase,
+        |&(ti, rate, threshold, seed, pi)| {
+            let mut cfg = ExperimentConfig::new(
+                "prop",
+                topos[ti],
+                AdmissionMode::Fixed { rate_hz: rate, threshold },
+            );
+            cfg.offload_policy = policies[pi];
+            cfg.duration_s = 10.0;
+            cfg.warmup_s = 0.0;
+            cfg.seed = seed;
+            let meta =
+                ModelMeta::synthetic(vec![0.002, 0.002, 0.002], vec![12288, 8192, 4096]);
+            let store = SampleStore { labels: &labels, images: None };
+            let r = match Simulation::new(cfg, &engine, meta, store) {
+                Ok(s) => match s.run() {
+                    Ok(r) => r,
+                    Err(e) => return Verdict::Fail(format!("run failed: {e:#}")),
+                },
+                Err(e) => return Verdict::Fail(format!("construct failed: {e:#}")),
+            };
+            // results never exceed admissions
+            if r.completed > r.admitted {
+                return Verdict::Fail(format!(
+                    "completed {} > admitted {}",
+                    r.completed, r.admitted
+                ));
+            }
+            // exit histogram accounts for every completion
+            let hist_sum: u64 = r.exit_histogram.iter().sum();
+            if hist_sum != r.completed {
+                return Verdict::Fail(format!(
+                    "exit histogram {hist_sum} != completed {}",
+                    r.completed
+                ));
+            }
+            if !(0.0..=1.0).contains(&r.accuracy()) {
+                return Verdict::Fail(format!("accuracy {}", r.accuracy()));
+            }
+            // per-worker processing also conserves: every completion was
+            // processed at least once
+            let processed: u64 = r.per_worker.iter().map(|w| w.processed).sum();
+            if processed < r.completed {
+                return Verdict::Fail(format!(
+                    "processed {processed} < completed {}",
+                    r.completed
+                ));
+            }
+            Verdict::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_no_ee_exits_only_at_final() {
+    let (engine, labels) = synthetic_engine(128);
+    Prop::new("no-EE final-exit only").cases(20).run(&F64In(30.0, 200.0), |&rate| {
+        let mut cfg = ExperimentConfig::new(
+            "prop",
+            "3-node-mesh",
+            AdmissionMode::Fixed { rate_hz: rate, threshold: 0.5 },
+        );
+        cfg.no_early_exit = true;
+        cfg.duration_s = 8.0;
+        cfg.warmup_s = 0.0;
+        let meta = ModelMeta::synthetic(vec![0.002, 0.002, 0.002], vec![12288, 8192, 4096]);
+        let store = SampleStore { labels: &labels, images: None };
+        let r = Simulation::new(cfg, &engine, meta, store).unwrap().run().unwrap();
+        let early: u64 = r.exit_histogram[..2].iter().sum();
+        Verdict::check(early == 0, || format!("early exits under no-EE: {:?}", r.exit_histogram))
+    });
+}
