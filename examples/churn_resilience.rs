@@ -11,11 +11,14 @@
 use anyhow::Result;
 
 use mdi_exit::artifact::Manifest;
-use mdi_exit::coordinator::{run_from_artifacts, AdmissionMode, ExperimentConfig};
+use mdi_exit::coordinator::{AdmissionMode, ExperimentConfig, Run, RunReport};
 use mdi_exit::simnet::ChurnEvent;
 
 fn main() -> Result<()> {
     let manifest = Manifest::load(mdi_exit::artifacts_dir())?;
+    let run = |cfg: ExperimentConfig| -> Result<RunReport> {
+        Run::builder().config(cfg).manifest(&manifest).execute()
+    };
 
     let mut base = ExperimentConfig::new(
         "mobilenetv2l",
@@ -31,7 +34,7 @@ fn main() -> Result<()> {
              "scenario", "tput(Hz)", "accuracy", "p95(ms)", "rehomed");
 
     // Stable reference run.
-    let mut stable = run_from_artifacts(base.clone(), &manifest)?;
+    let mut stable = run(base.clone())?;
     println!("{:<28} {:>10.1} {:>10.4} {:>10.2} {:>10}",
              "stable (no churn)", stable.throughput_hz(), stable.accuracy(),
              stable.latency.p95() * 1e3, stable.rehomed);
@@ -43,7 +46,7 @@ fn main() -> Result<()> {
         ChurnEvent { at_s: 25.0, worker: 4, join: false },
         ChurnEvent { at_s: 45.0, worker: 3, join: true },
     ];
-    let mut r = run_from_artifacts(churny, &manifest)?;
+    let mut r = run(churny)?;
     println!("{:<28} {:>10.1} {:>10.4} {:>10.2} {:>10}",
              "leave@20s,25s join@45s", r.throughput_hz(), r.accuracy(),
              r.latency.p95() * 1e3, r.rehomed);
@@ -53,7 +56,7 @@ fn main() -> Result<()> {
     worst.churn = (1..5)
         .map(|w| ChurnEvent { at_s: 15.0 + w as f64, worker: w, join: false })
         .collect();
-    let mut w = run_from_artifacts(worst, &manifest)?;
+    let mut w = run(worst)?;
     println!("{:<28} {:>10.1} {:>10.4} {:>10.2} {:>10}",
              "all non-source leave", w.throughput_hz(), w.accuracy(),
              w.latency.p95() * 1e3, w.rehomed);

@@ -2,10 +2,13 @@
 //! on a real workload.
 //!
 //! A simulated edge camera (worker 0) admits held-out test images under the
-//! paper's Alg. 3 rate adaptation. Every worker is a real OS thread running
-//! the **compiled HLO stages on PJRT** (`XlaEngine`) — the Pallas kernels
-//! lowered by `python/compile/aot.py`, executing with zero Python — and
-//! tasks move between threads over the delay-enforcing simnet transport.
+//! paper's Alg. 3 rate adaptation. Every worker is a real OS thread driven
+//! by the same `WorkerCore` the DES benches exercise — here through
+//! `Run::builder().driver(Driver::Realtime)` — with tasks moving between
+//! threads over the delay-enforcing simnet transport. With the `pjrt`
+//! feature the per-worker engine is the compiled HLO stages on PJRT (the
+//! Pallas kernels lowered by `python/compile/aot.py`, zero Python);
+//! otherwise it falls back to oracle replay with wallclock cost emulation.
 //!
 //! Reports admitted/completed rate, accuracy, per-exit histogram, and
 //! latency percentiles; recorded in EXPERIMENTS.md §End-to-end.
@@ -17,9 +20,7 @@ use anyhow::{Context, Result};
 
 use mdi_exit::artifact::Manifest;
 use mdi_exit::cli::Args;
-use mdi_exit::coordinator::{rt, AdmissionMode, ExperimentConfig, ModelMeta};
-use mdi_exit::dataset::Dataset;
-use mdi_exit::runtime::xla_engine::XlaEngine;
+use mdi_exit::coordinator::{AdmissionMode, Driver, ExperimentConfig, Run};
 use mdi_exit::runtime::InferenceEngine;
 
 fn main() -> Result<()> {
@@ -31,8 +32,6 @@ fn main() -> Result<()> {
 
     let manifest = Manifest::load(mdi_exit::artifacts_dir())?;
     let info = manifest.model(&model)?;
-    let meta = ModelMeta::from_manifest(info);
-    let dataset = Dataset::load(manifest.path(&manifest.dataset.file))?;
 
     let mut cfg = ExperimentConfig::new(
         &model,
@@ -44,20 +43,24 @@ fn main() -> Result<()> {
     cfg.adapt.sleep_s = 0.25;
 
     println!("edge_camera: {model} on {topology}, T_e = {threshold}, {seconds}s wallclock");
-    println!("compiling {} HLO stages per worker on PJRT CPU...", info.num_stages);
+    println!("building {} stages per worker...", info.num_stages);
     let manifest_ref = &manifest;
     let model_name = model.clone();
     let factory = move |worker: usize| -> Result<Box<dyn InferenceEngine>> {
         let t0 = std::time::Instant::now();
-        let eng = XlaEngine::load(manifest_ref, &model_name, false)
+        let eng = mdi_exit::runtime::default_engine(manifest_ref, &model_name, false)
             .with_context(|| format!("worker {worker}"))?;
-        eprintln!("  worker {worker}: {} stages compiled in {:.2}s",
+        eprintln!("  worker {worker}: {} stages ready in {:.2}s",
                   eng.num_stages(), t0.elapsed().as_secs_f64());
-        Ok(Box::new(eng) as Box<dyn InferenceEngine>)
+        Ok(eng)
     };
 
-    let out = rt::run_realtime(&cfg, &factory, &meta, &dataset)?;
-    let mut r = out.report;
+    let mut r = Run::builder()
+        .config(cfg.clone())
+        .manifest(&manifest)
+        .engine_factory(factory)
+        .driver(Driver::Realtime)
+        .execute()?;
 
     println!("\n== end-to-end results (measured window: {:.1}s) ==", cfg.duration_s);
     println!("admitted        {:>8}  ({:.1} Hz)", r.admitted, r.admitted_rate_hz());

@@ -11,7 +11,7 @@ use anyhow::Result;
 
 use mdi_exit::artifact::Manifest;
 use mdi_exit::cli::Args;
-use mdi_exit::coordinator::{run_from_artifacts, AdmissionMode, ExperimentConfig};
+use mdi_exit::coordinator::{AdmissionMode, ExperimentConfig, Run};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -40,7 +40,7 @@ fn main() -> Result<()> {
         cfg.duration_s = 45.0;
         cfg.warmup_s = 15.0;
         cfg.compute_scale = 0.125;
-        let mut r = run_from_artifacts(cfg, &manifest)?;
+        let mut r = Run::builder().config(cfg).manifest(&manifest).execute()?;
         println!(
             "{:>10.0} {:>10.3} {:>10.4} {:>10.1} {:>12.2} {:>10.2}",
             rate,

@@ -2,15 +2,22 @@
 //!
 //! 1. load the artifact manifest (`make artifacts` first),
 //! 2. inspect the partitioned models and their exit points (paper Fig. 2),
-//! 3. run one MDI-Exit experiment on the discrete-event driver,
+//! 3. describe one MDI-Exit experiment and launch it through the `Run`
+//!    builder on the discrete-event driver,
 //! 4. read the report.
+//!
+//! The same builder drives both execution media: swap
+//! `.driver(Driver::Des)` for `.driver(Driver::Realtime)` and the identical
+//! `WorkerCore` decision logic runs on OS threads in wallclock time (see
+//! `examples/edge_camera.rs`). Everything not supplied explicitly — model
+//! metadata, engine, dataset — is derived from the manifest.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use anyhow::Result;
 
 use mdi_exit::artifact::Manifest;
-use mdi_exit::coordinator::{run_from_artifacts, AdmissionMode, ExperimentConfig};
+use mdi_exit::coordinator::{AdmissionMode, Driver, ExperimentConfig, Run};
 
 fn main() -> Result<()> {
     // 1. Artifacts: everything the Python AOT pipeline produced.
@@ -34,7 +41,9 @@ fn main() -> Result<()> {
     }
 
     // 3. One experiment: MobileNetV2-Lite on the 3-node mesh, fixed
-    //    confidence threshold 0.9, Alg. 3 adapting the data rate.
+    //    confidence threshold 0.9, Alg. 3 adapting the data rate. The
+    //    config describes *what* to run; the builder picks up the model
+    //    metadata, oracle engine, and sample store from the manifest.
     let mut cfg = ExperimentConfig::new(
         "mobilenetv2l",
         "3-node-mesh",
@@ -44,7 +53,11 @@ fn main() -> Result<()> {
     cfg.warmup_s = 10.0;
     cfg.compute_scale = 0.125; // model edge-class devices
 
-    let mut report = run_from_artifacts(cfg, &manifest)?;
+    let mut report = Run::builder()
+        .config(cfg)
+        .manifest(&manifest)
+        .driver(Driver::Des) // the default; Driver::Realtime uses threads
+        .execute()?;
 
     // 4. The report.
     println!("\n== 3-node mesh, T_e = 0.9, Alg. 3 rate adaptation ==");

@@ -1,20 +1,36 @@
 //! The paper's contribution: the MDI-Exit coordinator.
 //!
 //! * [`policy`] — Algorithms 1–4 as pure decision logic
+//! * [`worker`] — the clock-agnostic [`WorkerCore`]: one events-in /
+//!   actions-out state machine (queues, estimators, controllers, stats)
+//!   shared verbatim by both drivers
 //! * [`task`], [`queues`] — τ_k(d) records and the I_n/O_n queue pair
 //! * [`config`], [`report`] — experiment descriptions and run reports
+//! * [`run`] — the [`Run`] builder façade: pick [`Driver::Des`] or
+//!   [`Driver::Realtime`], everything else stays identical
 //! * [`sim`] — discrete-event driver (virtual time; figure benches)
-//! * [`rt`] — realtime threaded driver (wallclock; PJRT engine, examples)
+//! * `rt` — realtime threaded driver (wallclock; PJRT engine, examples),
+//!   reached through [`Run`]
+//!
+//! The split mirrors what the paper claims: Algs 1–4 are medium-agnostic.
+//! Drivers own clocks and transports; [`WorkerCore`] owns every decision,
+//! so new scenarios (schedulers, workloads, queue disciplines) land once.
 
 pub mod config;
 pub mod policy;
 pub mod queues;
 pub mod report;
-pub mod rt;
+mod rt;
+pub mod run;
 pub mod sim;
 pub mod task;
+pub mod worker;
 
 pub use config::{AdmissionMode, ExperimentConfig, Mode};
 pub use policy::{AdaptConfig, OffloadPolicy};
 pub use report::RunReport;
-pub use sim::{run_from_artifacts, ModelMeta, SampleStore, Simulation};
+pub use run::{Driver, Run, RunBuilder};
+pub use sim::{SampleStore, Simulation};
+pub use worker::{
+    Action, AeMeta, Clock, ModelMeta, Payload, TaskOrigin, VirtualClock, WallClock, WorkerCore,
+};

@@ -3,86 +3,86 @@
 //! One OS thread per worker (the paper's per-Jetson process), message
 //! passing over `simnet::transport::DelayNet` (link delays enforced by a
 //! delivery scheduler), and a per-thread [`crate::runtime::InferenceEngine`]
-//! built by an engine factory — with [`crate::runtime::xla_engine::XlaEngine`]
-//! this is the full production path: compiled HLO stages executing on PJRT,
-//! zero Python.
+//! built by an engine factory — with the PJRT engine (`pjrt` feature) this
+//! is the full production path: compiled HLO stages, zero Python.
 //!
-//! The decision logic is the same `policy` module the DES driver uses;
-//! only the clock (wallclock vs virtual) and the transport differ.
+//! All decisions live in the shared [`super::worker::WorkerCore`]; this
+//! driver maps the core's [`Action`]s onto the threaded medium: `Send`
+//! becomes an endpoint send with real delivery delay, `StartCompute`
+//! becomes a wallclock engine call whose measured duration feeds back into
+//! `on_compute_done`. Only the clock ([`WallClock`] vs virtual) and the
+//! transport differ from the DES driver.
 //!
-//! Churn schedules are a DES-driver feature; the realtime driver runs a
-//! fixed worker set (threads joining/leaving mid-run adds little beyond
-//! what the DES churn tests already cover, at much higher flake risk).
+//! Churn schedules work here too (a payoff of the unified core): every
+//! thread walks the same `cfg.churn` timeline against its own core, so a
+//! leaving worker re-homes its queued tasks to the source over the wire and
+//! its peers stop offloading to it.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::config::{AdmissionMode, ExperimentConfig, Mode};
-use super::policy::{
-    self, ExitDecision, NeighborView, RateController, ThresholdController,
-};
-use super::queues::WorkerQueues;
-use super::report::{RunReport, WorkerStats};
-use super::sim::ModelMeta;
+use super::config::{ExperimentConfig, Mode};
+use super::report::RunReport;
 use super::task::{InferenceResult, Task};
+use super::worker::{
+    execute_task, Action, Clock, ModelMeta, Payload, TaskOrigin, WallClock, WorkerCore,
+};
 use crate::dataset::Dataset;
 use crate::log_info;
-
+use crate::runtime::InferenceEngine;
 use crate::simnet::transport::{DelayNet, Endpoint};
-use crate::simnet::Topology;
-use crate::util::rng::Pcg64;
-use crate::util::stats::{Ewma, Samples};
+use crate::simnet::{ChurnEvent, Topology};
+use crate::util::stats::Samples;
 
-const RESULT_BYTES: usize = 64;
-const STATE_BYTES: usize = 32;
 const IDLE_PARK: Duration = Duration::from_micros(200);
 
-/// Messages exchanged between worker threads.
+/// Messages exchanged between worker threads (the wire form of
+/// [`Payload`], plus the churn re-homing path).
 enum NetMsg {
     Task(Task),
+    /// A task handed back to the source by a leaving worker.
+    Rehome(Task),
     Result(InferenceResult),
-    /// Gossiped neighbor state (paper §IV.A: "periodically learns ... its
-    /// input queue size I_m, per task computing delay Γ_m").
-    State { input_len: usize, gamma_s: f64 },
-}
-
-/// Outcome of a realtime run (assembled from per-thread stats).
-pub struct RtOutcome {
-    pub report: RunReport,
+    State { input_len: usize, gamma_s: f64, t_e: f32 },
 }
 
 /// Run the system with real threads + wallclock. `duration_s` of the config
-/// is interpreted as wallclock seconds (keep it small in tests).
-pub fn run_realtime<F>(
+/// is interpreted as wallclock seconds (keep it small in tests). Called via
+/// [`super::run::Run`].
+// Note: the factory type is spelled inline rather than via the
+// `runtime::EngineFactory` alias — the alias carries the `'static`
+// object-lifetime default from its definition site, which would reject the
+// builder's borrow-scoped factories; inline, the lifetime elides to the
+// reference's.
+pub(super) fn run_realtime(
     cfg: &ExperimentConfig,
-    factory: &F,
+    factory: &(dyn Fn(usize) -> Result<Box<dyn InferenceEngine>> + Send + Sync),
     meta: &ModelMeta,
     dataset: &Dataset,
-) -> Result<RtOutcome>
-where
-    F: Fn(usize) -> Result<Box<dyn crate::runtime::InferenceEngine>> + Send + Sync,
-{
+) -> Result<RunReport> {
     cfg.validate()?;
     anyhow::ensure!(cfg.mode == Mode::MdiExit, "realtime driver runs MDI-Exit mode");
     let topo = Arc::new(
         Topology::named(&cfg.topology, cfg.link)
-            .with_context(|| format!("unknown topology {:?}", cfg.topology))?,
+            .with_context(|| format!("unknown topology {:?}", cfg.topology))?
+            .with_churn(cfg.churn.clone()),
     );
     let n = topo.n;
     let mut net: DelayNet<NetMsg> = DelayNet::new(topo.clone(), cfg.seed);
-    let mut endpoints: Vec<Endpoint<NetMsg>> = (0..n).map(|i| net.endpoint(i, cfg.seed)).collect();
-    endpoints.reverse(); // pop() gives worker 0 first
+    let mut endpoints: Vec<Option<Endpoint<NetMsg>>> =
+        (0..n).map(|i| Some(net.endpoint(i, cfg.seed))).collect();
 
-    let (stats_tx, stats_rx) = channel::<(usize, WorkerStats, SourceTally)>();
+    let (stats_tx, stats_rx) = channel::<(usize, super::report::WorkerStats, SourceTally)>();
     let t0 = Instant::now();
     let horizon = Duration::from_secs_f64(cfg.warmup_s + cfg.duration_s);
 
     std::thread::scope(|scope| -> Result<()> {
         for id in 0..n {
-            let endpoint = endpoints.pop().expect("endpoint");
+            let endpoint = endpoints[id].take().expect("endpoint taken once");
             let stats_tx = stats_tx.clone();
             let topo = topo.clone();
             let cfg = cfg.clone();
@@ -92,36 +92,38 @@ where
                     Ok(e) => e,
                     Err(err) => {
                         log_info!("worker {id}: engine construction failed: {err:#}");
-                        let _ = stats_tx.send((id, WorkerStats::default(), SourceTally::default()));
+                        let _ = stats_tx.send((
+                            id,
+                            super::report::WorkerStats::default(),
+                            SourceTally::default(),
+                        ));
                         return;
                     }
+                };
+                let mut churn: Vec<ChurnEvent> = cfg.churn.clone();
+                churn.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+                let tally = SourceTally {
+                    exit_histogram: vec![0; meta.num_stages],
+                    ..SourceTally::default()
                 };
                 let mut w = RtWorker {
                     id,
                     cfg: &cfg,
                     meta: &meta,
-                    topo: &topo,
+                    core: WorkerCore::new(id, &cfg, meta.clone(), &topo, dataset.n),
                     endpoint,
                     engine: engine.as_ref(),
-                    dataset: if id == 0 { Some(dataset) } else { None },
-                    queues: WorkerQueues::new(),
-                    gamma: Ewma::new(0.2),
-                    views: vec![None; topo.n],
-                    d_est: (0..topo.n).map(|_| Ewma::new(0.2)).collect(),
-                    rng: Pcg64::new(cfg.seed, 1000 + id as u64),
-                    stats: WorkerStats::default(),
-                    tally: SourceTally::default(),
-                    t0,
-                    measure_from: cfg.warmup_s,
-                    next_task_id: (id as u64) << 48,
-                    next_sample: 0,
-                    rate_ctl: None,
-                    thr_ctl: None,
-                    t_e: 0.9,
+                    dataset: (id == 0).then_some(dataset),
+                    clock: WallClock::new(t0),
+                    tally,
+                    pending: None,
+                    churn,
+                    churn_idx: 0,
                 };
-                w.init_controllers();
                 w.run(horizon);
-                let _ = stats_tx.send((w.id, w.stats, w.tally));
+                let id = w.id;
+                let (stats, tally) = w.finish();
+                let _ = stats_tx.send((id, stats, tally));
             });
         }
         Ok(())
@@ -138,6 +140,7 @@ where
             report.correct = tally.correct;
             report.exit_histogram = tally.exit_histogram;
             report.latency = tally.latency;
+            report.rehomed = tally.rehomed;
             report.final_mu_s = tally.final_mu_s;
             report.final_t_e = tally.final_t_e;
         }
@@ -145,7 +148,7 @@ where
     if report.exit_histogram.is_empty() {
         report.exit_histogram = vec![0; meta.num_stages];
     }
-    Ok(RtOutcome { report })
+    Ok(report)
 }
 
 /// Source-side accounting carried out of the worker-0 thread.
@@ -156,6 +159,7 @@ struct SourceTally {
     correct: u64,
     exit_histogram: Vec<u64>,
     latency: Samples,
+    rehomed: u64,
     final_mu_s: Option<f64>,
     final_t_e: Option<f64>,
 }
@@ -164,63 +168,29 @@ struct RtWorker<'a> {
     id: usize,
     cfg: &'a ExperimentConfig,
     meta: &'a ModelMeta,
-    topo: &'a Topology,
+    core: WorkerCore,
     endpoint: Endpoint<NetMsg>,
     engine: &'a dyn crate::runtime::InferenceEngine,
     dataset: Option<&'a Dataset>,
-    queues: WorkerQueues,
-    gamma: Ewma,
-    views: Vec<Option<NeighborView>>,
-    d_est: Vec<Ewma>,
-    rng: Pcg64,
-    stats: WorkerStats,
+    clock: WallClock,
     tally: SourceTally,
-    t0: Instant,
-    measure_from: f64,
-    next_task_id: u64,
-    next_sample: usize,
-    rate_ctl: Option<RateController>,
-    thr_ctl: Option<ThresholdController>,
-    t_e: f32,
+    /// Task handed out by a `StartCompute` action, executed one per loop
+    /// iteration so admission/gossip/mailbox stay responsive.
+    pending: Option<Task>,
+    churn: Vec<ChurnEvent>,
+    churn_idx: usize,
 }
 
 impl<'a> RtWorker<'a> {
-    fn init_controllers(&mut self) {
-        self.tally.exit_histogram = vec![0; self.meta.num_stages];
-        match self.cfg.admission {
-            AdmissionMode::AdaptiveRate { threshold, initial_mu_s } => {
-                self.t_e = threshold;
-                if self.id == 0 {
-                    self.rate_ctl = Some(RateController::new(self.cfg.adapt, initial_mu_s));
-                }
-            }
-            AdmissionMode::AdaptiveThreshold { initial_t_e, t_e_min, .. } => {
-                self.t_e = initial_t_e;
-                if self.id == 0 {
-                    self.thr_ctl = Some(ThresholdController::new(
-                        self.cfg.adapt,
-                        initial_t_e as f64,
-                        t_e_min as f64,
-                    ));
-                }
-            }
-            AdmissionMode::Fixed { threshold, .. } => self.t_e = threshold,
-        }
-    }
-
-    fn now_s(&self) -> f64 {
-        self.t0.elapsed().as_secs_f64()
-    }
-
-    fn in_window(&self) -> bool {
-        self.now_s() >= self.measure_from
+    fn in_window(&self, now: f64) -> bool {
+        now >= self.cfg.warmup_s
     }
 
     fn run(&mut self, horizon: Duration) {
         let mut next_admit = 0.0f64;
         let mut next_adapt = self.cfg.adapt.sleep_s;
         let mut next_gossip = 0.0f64;
-        while self.t0.elapsed() < horizon {
+        while self.clock.now() < horizon.as_secs_f64() {
             let mut progressed = false;
 
             // 1. drain the mailbox
@@ -229,65 +199,62 @@ impl<'a> RtWorker<'a> {
                 self.on_msg(d.from, d.msg);
             }
 
-            let now = self.now_s();
+            let now = self.clock.now();
 
-            // 2. source duties: admission + adaptation
-            if self.id == 0 && now >= next_admit {
-                self.admit(now);
+            // 2. churn timeline (every thread walks the shared schedule
+            //    against its own core)
+            while self.churn_idx < self.churn.len() && self.churn[self.churn_idx].at_s <= now {
+                let e = self.churn[self.churn_idx];
+                self.churn_idx += 1;
+                let acts = self.core.on_churn(now, e.worker, e.join);
+                self.dispatch(acts);
                 progressed = true;
-                let dt = match self.cfg.admission {
-                    AdmissionMode::AdaptiveRate { .. } => {
-                        self.rate_ctl.as_ref().unwrap().mu_s()
-                    }
-                    AdmissionMode::AdaptiveThreshold { rate_hz, .. } => {
-                        self.rng.exponential(1.0 / rate_hz)
-                    }
-                    AdmissionMode::Fixed { rate_hz, .. } => 1.0 / rate_hz,
-                };
+            }
+
+            // 3. source duties: admission + adaptation
+            if self.id == 0 && now >= next_admit {
+                let (mut task, dt) = self.core.poll_admission(now);
+                let ds = self.dataset.expect("source has the dataset");
+                task.features = Some(ds.image(task.sample));
+                if self.in_window(now) {
+                    self.tally.admitted += 1;
+                }
+                let acts = self.core.on_task(now, task, TaskOrigin::Admitted);
+                self.dispatch(acts);
                 next_admit = now + dt;
+                progressed = true;
             }
             if self.id == 0 && now >= next_adapt {
-                let q = self.queues.total_len();
-                if let Some(rc) = self.rate_ctl.as_mut() {
-                    rc.update(q);
-                }
-                if let Some(tc) = self.thr_ctl.as_mut() {
-                    self.t_e = tc.update(q) as f32;
-                }
+                let acts = self.core.on_adapt_tick(now);
+                self.dispatch(acts);
                 next_adapt = now + self.cfg.adapt.sleep_s;
             }
 
-            // 3. gossip
+            // 4. gossip
             if now >= next_gossip {
-                let state = NetMsg::State {
-                    input_len: self.queues.input.len(),
-                    gamma_s: self.gamma.get_or(0.01),
-                };
-                for m in self.endpoint.neighbors() {
-                    let _ = self.endpoint.send(
-                        m,
-                        NetMsg::State {
-                            input_len: match &state {
-                                NetMsg::State { input_len, .. } => *input_len,
-                                _ => unreachable!(),
-                            },
-                            gamma_s: self.gamma.get_or(0.01),
-                        },
-                        STATE_BYTES,
-                    );
-                }
+                let acts = self.core.on_gossip_tick(now);
+                self.dispatch(acts);
                 next_gossip = now + self.cfg.gossip_interval_s;
             }
 
-            // 4. process one input task (Alg. 1)
-            if let Some(task) = self.queues.input.pop() {
+            // 5. run one task through the engine (Alg. 1 on completion)
+            if let Some(mut task) = self.pending.take() {
                 progressed = true;
-                self.process(task);
-            }
-
-            // 5. offload scan (Alg. 2)
-            if self.try_offload() {
-                progressed = true;
+                let started = Instant::now();
+                match execute_task(self.engine, self.cfg.mode, self.meta.num_stages, &mut task)
+                {
+                    Ok((out, exit_point)) => {
+                        let dur = started.elapsed().as_secs_f64();
+                        let now = self.clock.now();
+                        let acts = self.core.on_compute_done(now, task, out, exit_point, dur);
+                        self.dispatch(acts);
+                    }
+                    Err(err) => {
+                        log_info!("worker {}: stage {} failed: {err:#}", self.id, task.stage);
+                        let acts = self.core.abort_compute();
+                        self.dispatch(acts);
+                    }
+                }
             }
 
             if !progressed {
@@ -295,188 +262,95 @@ impl<'a> RtWorker<'a> {
             }
         }
         if self.id == 0 {
-            self.tally.final_mu_s = self.rate_ctl.as_ref().map(|c| c.mu_s());
-            self.tally.final_t_e = self.thr_ctl.as_ref().map(|c| c.t_e());
+            self.tally.final_mu_s = self.core.final_mu_s();
+            self.tally.final_t_e = self.core.final_t_e();
         }
     }
 
-    fn admit(&mut self, now: f64) {
-        let ds = self.dataset.expect("source has the dataset");
-        let sample = self.next_sample;
-        self.next_sample = (self.next_sample + 1) % ds.n;
-        self.next_task_id += 1;
-        let task = Task::initial(self.next_task_id, sample, Some(ds.image(sample)), now);
-        if self.in_window() {
-            self.tally.admitted += 1;
+    /// Map core actions onto the threaded medium.
+    fn dispatch(&mut self, actions: Vec<Action>) {
+        let mut q: VecDeque<Action> = actions.into();
+        while let Some(a) = q.pop_front() {
+            match a {
+                Action::StartCompute { task, .. } => {
+                    debug_assert!(self.pending.is_none(), "core double-started compute");
+                    self.pending = Some(task);
+                }
+                Action::Send { to, payload, mut bytes, needs_encode } => {
+                    // Only task transfers feed the D_nm estimator — gossip
+                    // and result messages are tiny and would bias Alg. 2's
+                    // transfer-delay term (the DES driver does the same).
+                    let is_task = matches!(payload, Payload::Task(_));
+                    let msg = match payload {
+                        Payload::Task(mut task) => {
+                            if needs_encode {
+                                if let Some(f) = task.features.take() {
+                                    match self.engine.encode(&f) {
+                                        Ok(Some(code)) => task.features = Some(code),
+                                        _ => {
+                                            // Ship raw on encode failure so
+                                            // the receiver can still decode;
+                                            // charge the raw size, not the
+                                            // AE code size.
+                                            task.features = Some(f);
+                                            task.encoded = false;
+                                            bytes =
+                                                self.meta.stage_in_bytes[task.stage - 1];
+                                        }
+                                    }
+                                }
+                            }
+                            NetMsg::Task(task)
+                        }
+                        Payload::Result(r) => NetMsg::Result(r),
+                        Payload::State { input_len, gamma_s, t_e } => {
+                            NetMsg::State { input_len, gamma_s, t_e }
+                        }
+                    };
+                    // An Err means the fabric already shut down (end of
+                    // run): drop the message, as the seed driver did.
+                    if let Ok(delay) = self.endpoint.send(to, msg, bytes) {
+                        if is_task {
+                            self.core.note_transfer_delay(to, delay);
+                        }
+                    }
+                }
+                Action::RecordResult { result } => self.record_result(result),
+                Action::Rehome { task } => {
+                    if self.id == 0 {
+                        // Source re-homing to itself (shouldn't happen —
+                        // the source never churns) — just requeue.
+                        let now = self.clock.now();
+                        let acts = self.core.on_task(now, task, TaskOrigin::Rehomed);
+                        q.extend(acts);
+                    } else {
+                        let bytes = self.core.task_wire_bytes(&task);
+                        let _ = self.endpoint.send(0, NetMsg::Rehome(task), bytes);
+                    }
+                }
+            }
         }
-        self.queues.input.push(task);
     }
 
     fn on_msg(&mut self, from: usize, msg: NetMsg) {
-        match msg {
-            NetMsg::Task(task) => {
-                if self.in_window() {
-                    self.stats.received += 1;
-                }
-                self.queues.input.push(task);
-                self.stats.peak_input = self.stats.peak_input.max(self.queues.input.len());
+        let now = self.clock.now();
+        let acts = match msg {
+            NetMsg::Task(task) => self.core.on_task(now, task, TaskOrigin::Wire),
+            NetMsg::Rehome(task) => {
+                self.tally.rehomed += 1;
+                self.core.on_task(now, task, TaskOrigin::Rehomed)
             }
-            NetMsg::Result(r) => self.record_result(r),
-            NetMsg::State { input_len, gamma_s } => {
-                let d = self.d_est[from].get_or(
-                    self.topo
-                        .link(self.id, from)
-                        .map(|l| l.mean_delay_s(self.meta.stage_in_bytes[0]))
-                        .unwrap_or(0.01),
-                );
-                self.views[from] = Some(NeighborView { input_len, gamma_s, d_nm_s: d });
-            }
-        }
-    }
-
-    fn process(&mut self, mut task: Task) {
-        let started = Instant::now();
-        // decode AE payloads before the stage (paper §V wire path)
-        if task.encoded {
-            if let Some(f) = task.features.take() {
-                match self.engine.decode(&f) {
-                    Ok(Some(dec)) => task.features = Some(dec),
-                    _ => task.features = Some(f),
-                }
-            }
-            task.encoded = false;
-        }
-        let out = match self.engine.run_stage(task.stage, task.sample, task.features.as_ref()) {
-            Ok(o) => o,
-            Err(err) => {
-                log_info!("worker {}: stage {} failed: {err:#}", self.id, task.stage);
-                return;
+            NetMsg::Result(r) => self.core.on_result(now, r),
+            NetMsg::State { input_len, gamma_s, t_e } => {
+                self.core.on_gossip(now, from, input_len, gamma_s, t_e)
             }
         };
-        let dur = started.elapsed().as_secs_f64();
-        self.gamma.push(dur);
-        if self.in_window() {
-            self.stats.processed += 1;
-            self.stats.busy_s += dur;
-        }
-
-        let is_final = task.stage >= self.meta.num_stages;
-        let threshold = if self.cfg.no_early_exit { f32::INFINITY } else { self.t_e };
-        let decision = policy::alg1_decide(
-            out.confidence,
-            threshold,
-            is_final,
-            self.queues.input.len(),
-            self.queues.output.len(),
-            self.cfg.t_o,
-        );
-        match decision {
-            ExitDecision::Exit => {
-                if self.in_window() {
-                    self.stats.exits += 1;
-                }
-                let r = InferenceResult {
-                    sample: task.sample,
-                    exit_point: task.stage,
-                    prediction: out.prediction,
-                    confidence: out.confidence,
-                    admitted_at: task.admitted_at,
-                    exited_on: self.id,
-                };
-                if self.id == 0 {
-                    self.record_result(r);
-                } else {
-                    let _ = self.endpoint.send(0, NetMsg::Result(r), RESULT_BYTES);
-                }
-            }
-            ExitDecision::ContinueLocal => {
-                self.next_task_id += 1;
-                let succ = task.successor(self.next_task_id, out.features);
-                self.queues.input.push(succ);
-            }
-            ExitDecision::ContinueOffload => {
-                self.next_task_id += 1;
-                let succ = task.successor(self.next_task_id, out.features);
-                self.queues.output.push(succ);
-            }
-        }
-        self.stats.peak_input = self.stats.peak_input.max(self.queues.input.len());
-        self.stats.peak_output = self.stats.peak_output.max(self.queues.output.len());
-    }
-
-    fn try_offload(&mut self) -> bool {
-        let mut any = false;
-        loop {
-            if self.queues.output.is_empty() {
-                return any;
-            }
-            let mut neighbors = self.endpoint.neighbors();
-            self.rng.shuffle(&mut neighbors);
-            let mut sent = false;
-            for m in neighbors {
-                let view = self.views[m].unwrap_or(NeighborView {
-                    input_len: 0,
-                    gamma_s: 0.01,
-                    d_nm_s: self.d_est[m].get_or(0.01),
-                });
-                let go = policy::offload_decide(
-                    self.cfg.offload_policy,
-                    self.queues.output.len(),
-                    self.queues.input.len(),
-                    self.gamma.get_or(0.01),
-                    &view,
-                    &mut self.rng,
-                );
-                if !go {
-                    continue;
-                }
-                let mut t = self.queues.output.pop().unwrap();
-                let mut bytes = self.meta.stage_in_bytes[t.stage - 1];
-                // AE boundary: encode before the wire (stage-2 inputs only)
-                if self.cfg.use_ae && t.stage == 2 && !t.encoded {
-                    if let (Some(f), Some(ae)) = (t.features.take(), self.meta.ae.as_ref()) {
-                        match self.engine.encode(&f) {
-                            Ok(Some(code)) => {
-                                t.features = Some(code);
-                                t.encoded = true;
-                                bytes = ae.code_bytes;
-                            }
-                            _ => t.features = Some(f),
-                        }
-                    }
-                }
-                t.hops += 1;
-                match self.endpoint.send(m, NetMsg::Task(t), bytes) {
-                    Ok(delay) => {
-                        self.d_est[m].push(delay);
-                        if let Some(v) = self.views[m].as_mut() {
-                            v.input_len += 1;
-                        }
-                        if self.in_window() {
-                            self.stats.offloaded_out += 1;
-                        }
-                        sent = true;
-                        any = true;
-                    }
-                    Err(_) => return any,
-                }
-                break;
-            }
-            if !sent {
-                // reclaim for local compute when starving (see sim.rs)
-                if self.queues.input.is_empty() {
-                    if let Some(t) = self.queues.output.pop() {
-                        self.queues.input.push(t);
-                        any = true;
-                    }
-                }
-                return any;
-            }
-        }
+        self.dispatch(acts);
     }
 
     fn record_result(&mut self, r: InferenceResult) {
-        if !self.in_window() {
+        let now = self.clock.now();
+        if !self.in_window(now) {
             return;
         }
         let ds = self.dataset.expect("source records results");
@@ -485,6 +359,10 @@ impl<'a> RtWorker<'a> {
             self.tally.correct += 1;
         }
         self.tally.exit_histogram[r.exit_point - 1] += 1;
-        self.tally.latency.push(self.now_s() - r.admitted_at);
+        self.tally.latency.push(now - r.admitted_at);
+    }
+
+    fn finish(self) -> (super::report::WorkerStats, SourceTally) {
+        (self.core.into_stats(), self.tally)
     }
 }

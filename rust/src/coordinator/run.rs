@@ -1,0 +1,257 @@
+//! The public run façade: one builder for both drivers.
+//!
+//! ```ignore
+//! // DES sweep from artifacts (what the figure benches do):
+//! let report = Run::builder()
+//!     .config(cfg)
+//!     .manifest(&manifest)
+//!     .execute()?;
+//!
+//! // Realtime threads on a per-worker engine factory:
+//! let report = Run::builder()
+//!     .config(cfg)
+//!     .model(meta)
+//!     .engine_factory(|worker| Ok(Box::new(make_engine(worker)?) as _))
+//!     .dataset(&ds)
+//!     .driver(Driver::Realtime)
+//!     .execute()?;
+//!
+//! // Engine-free unit run (synthetic oracle + labels only):
+//! let report = Run::builder()
+//!     .config(cfg)
+//!     .model(ModelMeta::synthetic(costs, bytes))
+//!     .engine(&sim_engine)
+//!     .labels(&labels)
+//!     .execute()?;
+//! ```
+//!
+//! Everything unspecified is derived from the manifest: the model metadata
+//! from `cfg.model`, the oracle [`SimEngine`](crate::runtime::sim_engine::SimEngine)
+//! as the engine (with wallclock cost emulation on the realtime driver),
+//! and the held-out dataset as the sample store. Both drivers execute the
+//! same [`super::worker::WorkerCore`]; picking [`Driver::Des`] or
+//! [`Driver::Realtime`] only changes the clock and the transport.
+
+use anyhow::{Context, Result};
+
+use super::config::ExperimentConfig;
+use super::report::RunReport;
+use super::rt;
+use super::sim::{SampleStore, Simulation};
+use super::worker::ModelMeta;
+use crate::artifact::Manifest;
+use crate::dataset::Dataset;
+use crate::runtime::{sim_engine::SimEngine, InferenceEngine};
+
+/// Which execution medium carries the run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Driver {
+    /// Discrete-event simulation in virtual time (default; milliseconds of
+    /// wallclock per virtual minute on the oracle engine).
+    #[default]
+    Des,
+    /// One OS thread per worker, wallclock time, delay-enforcing transport.
+    /// `cfg.duration_s` is real seconds — keep it small in tests.
+    Realtime,
+}
+
+type FactoryBox<'a> =
+    Box<dyn Fn(usize) -> Result<Box<dyn InferenceEngine>> + Send + Sync + 'a>;
+
+/// Entry point: [`Run::builder`].
+pub struct Run;
+
+impl Run {
+    pub fn builder<'a>() -> RunBuilder<'a> {
+        RunBuilder {
+            cfg: None,
+            meta: None,
+            manifest: None,
+            engine: None,
+            factory: None,
+            dataset: None,
+            labels: None,
+            images: None,
+            driver: Driver::Des,
+        }
+    }
+}
+
+/// Accumulates the pieces of a run; see the module docs for recipes.
+pub struct RunBuilder<'a> {
+    cfg: Option<ExperimentConfig>,
+    meta: Option<ModelMeta>,
+    manifest: Option<&'a Manifest>,
+    engine: Option<&'a dyn InferenceEngine>,
+    factory: Option<FactoryBox<'a>>,
+    dataset: Option<&'a Dataset>,
+    labels: Option<&'a [u8]>,
+    images: Option<&'a Dataset>,
+    driver: Driver,
+}
+
+impl<'a> RunBuilder<'a> {
+    /// The experiment description (required).
+    pub fn config(mut self, cfg: ExperimentConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Artifact manifest to derive defaults from: model metadata, oracle
+    /// engine, dataset.
+    pub fn manifest(mut self, manifest: &'a Manifest) -> Self {
+        self.manifest = Some(manifest);
+        self
+    }
+
+    /// Explicit model metadata (otherwise derived from the manifest).
+    pub fn model(mut self, meta: ModelMeta) -> Self {
+        self.meta = Some(meta);
+        self
+    }
+
+    /// Explicit shared engine (DES driver only — the realtime driver needs
+    /// a per-thread factory because engines are deliberately not `Send`).
+    pub fn engine(mut self, engine: &'a dyn InferenceEngine) -> Self {
+        self.engine = Some(engine);
+        self
+    }
+
+    /// Per-worker engine constructor. The realtime driver calls it once per
+    /// worker thread; the DES driver calls it once (worker 0) and shares.
+    pub fn engine_factory<F>(mut self, factory: F) -> Self
+    where
+        F: Fn(usize) -> Result<Box<dyn InferenceEngine>> + Send + Sync + 'a,
+    {
+        self.factory = Some(Box::new(factory));
+        self
+    }
+
+    /// Full labelled dataset (realtime driver admission / DES real-engine
+    /// path; otherwise loaded from the manifest).
+    pub fn dataset(mut self, dataset: &'a Dataset) -> Self {
+        self.dataset = Some(dataset);
+        self
+    }
+
+    /// Labels-only sample store for engine-free DES runs (the oracle
+    /// replays confidences by sample id; no image tensors needed).
+    pub fn labels(mut self, labels: &'a [u8]) -> Self {
+        self.labels = Some(labels);
+        self
+    }
+
+    /// Image source for DES runs on a real engine.
+    pub fn images(mut self, images: &'a Dataset) -> Self {
+        self.images = Some(images);
+        self
+    }
+
+    pub fn driver(mut self, driver: Driver) -> Self {
+        self.driver = driver;
+        self
+    }
+
+    /// Resolve defaults and run to completion.
+    pub fn execute(self) -> Result<RunReport> {
+        let cfg = self.cfg.context("Run::builder(): .config(...) is required")?;
+        let meta = match self.meta {
+            Some(m) => m,
+            None => {
+                let manifest = self
+                    .manifest
+                    .context("Run::builder(): need .model(meta) or .manifest(...)")?;
+                ModelMeta::from_manifest(manifest.model(&cfg.model)?)
+            }
+        };
+
+        // Dataset: explicit, or loaded from the manifest when a driver
+        // needs one and only labels were not provided.
+        let owned_dataset: Option<Dataset> = match (self.dataset, self.driver, self.labels) {
+            (Some(_), _, _) => None,
+            (None, Driver::Realtime, _) | (None, Driver::Des, None) => {
+                let manifest = self.manifest.context(
+                    "Run::builder(): need .dataset(...)/.labels(...) or .manifest(...)",
+                )?;
+                Some(Dataset::load(manifest.path(&manifest.dataset.file))?)
+            }
+            (None, Driver::Des, Some(_)) => None,
+        };
+        let dataset: Option<&Dataset> = self.dataset.or(owned_dataset.as_ref());
+
+        match self.driver {
+            Driver::Des => {
+                anyhow::ensure!(
+                    self.engine.is_none() || self.factory.is_none(),
+                    "Run::builder(): .engine(...) and .engine_factory(...) are \
+                     mutually exclusive — the DES driver would silently ignore \
+                     the factory"
+                );
+                let store = SampleStore {
+                    labels: match self.labels {
+                        Some(l) => l,
+                        None => &dataset.expect("resolved above").labels,
+                    },
+                    // An explicitly supplied dataset carries its images
+                    // (real-engine path); a manifest-derived one stays
+                    // labels-only, as the oracle engine never reads tensors.
+                    images: self.images.or(self.dataset),
+                };
+                // Engine: explicit ref, factory product, or the oracle.
+                let from_factory: Option<Box<dyn InferenceEngine>> =
+                    match (&self.engine, &self.factory) {
+                        (None, Some(f)) => Some(f(0)?),
+                        _ => None,
+                    };
+                let owned_engine: Option<SimEngine> =
+                    if self.engine.is_none() && from_factory.is_none() {
+                        let manifest = self.manifest.context(
+                            "Run::builder(): need .engine(...)/.engine_factory(...) \
+                             or .manifest(...)",
+                        )?;
+                        Some(SimEngine::load(manifest, &cfg.model, cfg.use_ae)?)
+                    } else {
+                        None
+                    };
+                let engine: &dyn InferenceEngine = match (&self.engine, &from_factory) {
+                    (Some(e), _) => *e,
+                    (None, Some(b)) => b.as_ref(),
+                    (None, None) => owned_engine.as_ref().expect("resolved above"),
+                };
+                Simulation::new(cfg, engine, meta, store)?.run()
+            }
+            Driver::Realtime => {
+                anyhow::ensure!(
+                    self.engine.is_none(),
+                    "Run::builder(): .engine(...) cannot drive the realtime driver \
+                     (engines are not Send; each worker thread needs its own) — \
+                     use .engine_factory(...) instead"
+                );
+                anyhow::ensure!(
+                    self.labels.is_none() && self.images.is_none(),
+                    "Run::builder(): .labels(...)/.images(...) are DES-only — the \
+                     realtime driver admits from a full .dataset(...)"
+                );
+                let dataset = dataset.expect("resolved above");
+                match self.factory {
+                    Some(f) => rt::run_realtime(&cfg, &f, &meta, dataset),
+                    None => {
+                        // Default: the best engine this build offers (PJRT
+                        // stages under the `pjrt` feature, oracle replay
+                        // with wallclock cost emulation otherwise).
+                        let manifest = self.manifest.context(
+                            "Run::builder(): realtime needs .engine_factory(...) \
+                             or .manifest(...)",
+                        )?;
+                        let model = cfg.model.clone();
+                        let use_ae = cfg.use_ae;
+                        let f = move |_worker: usize| -> Result<Box<dyn InferenceEngine>> {
+                            crate::runtime::default_engine(manifest, &model, use_ae)
+                        };
+                        rt::run_realtime(&cfg, &f, &meta, dataset)
+                    }
+                }
+            }
+        }
+    }
+}

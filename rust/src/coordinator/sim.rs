@@ -1,86 +1,42 @@
 //! Discrete-event driver: runs the MDI-Exit system in virtual time.
 //!
-//! This is what the figure benches execute. Workers are state machines;
-//! compute completions, network deliveries, gossip, admission, and the
-//! Alg. 3/4 adaptation ticks are events on a virtual-clock heap. The
-//! decision logic is the *same* pure `policy` module the realtime threaded
-//! driver uses — only the clock differs — so the benches measure the
-//! paper's algorithms, not a re-implementation.
+//! This is what the figure benches execute. All decisions live in the
+//! shared [`super::worker::WorkerCore`]; this driver only owns the
+//! *medium*: a virtual-clock event heap, link-delay sampling with
+//! shared-medium contention, and report accounting. Each event advances
+//! the [`VirtualClock`], feeds the owning core, and maps the returned
+//! [`Action`]s back onto the heap:
+//!
+//! * `StartCompute` → a `ComputeDone` event after the estimated cost;
+//! * `Send` → a `Deliver` event after the sampled link delay (gossip
+//!   `State` payloads are delivered out-of-band, as the seed driver did);
+//! * `RecordResult` / `Rehome` → report bookkeeping.
 //!
 //! Engine-agnostic: with `SimEngine` (exit-oracle replay) a 60-virtual-
-//! second topology run takes milliseconds; with `XlaEngine` the same driver
-//! pushes real feature tensors through the compiled HLO stages (used by the
-//! end-to-end integration tests).
+//! second topology run takes milliseconds; with the PJRT engine the same
+//! driver pushes real feature tensors through the compiled HLO stages.
 
 use std::cmp::Ordering as CmpOrdering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use anyhow::{bail, Context, Result};
 
-use super::config::{AdmissionMode, ExperimentConfig, Mode};
-use super::policy::{
-    self, ExitDecision, NeighborView, RateController, ThresholdController,
-};
-use super::queues::WorkerQueues;
-use super::report::{RunReport, TracePoint, WorkerStats};
+use super::config::ExperimentConfig;
+use super::report::{RunReport, TracePoint};
 use super::task::{InferenceResult, Task};
-use crate::artifact::ModelInfo;
+use super::worker::{
+    execute_task, Action, Clock, Payload, TaskOrigin, VirtualClock, WorkerCore,
+};
 use crate::log_debug;
 use crate::runtime::InferenceEngine;
 use crate::simnet::Topology;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
-use crate::util::stats::Ewma;
 
-/// Bytes of an exit-result message (classifier output + header).
-const RESULT_BYTES: usize = 64;
 /// Trace sampling period (virtual seconds).
 const TRACE_PERIOD_S: f64 = 0.25;
 /// Hard ceiling on processed events — runaway-loop backstop.
 const MAX_EVENTS: u64 = 200_000_000;
-
-/// Compute/transfer metadata distilled from the manifest (so the DES inner
-/// loop never touches JSON or paths).
-#[derive(Debug, Clone)]
-pub struct ModelMeta {
-    pub stage_cost_s: Vec<f64>,
-    pub stage_in_bytes: Vec<usize>,
-    pub num_stages: usize,
-    pub ae: Option<AeMeta>,
-}
-
-#[derive(Debug, Clone)]
-pub struct AeMeta {
-    pub enc_cost_s: f64,
-    pub dec_cost_s: f64,
-    pub code_bytes: usize,
-}
-
-impl ModelMeta {
-    pub fn from_manifest(info: &ModelInfo) -> ModelMeta {
-        ModelMeta {
-            stage_cost_s: info.stages.iter().map(|s| s.cost_ms / 1e3).collect(),
-            stage_in_bytes: info.stages.iter().map(|s| s.in_bytes).collect(),
-            num_stages: info.num_stages,
-            ae: info.ae.as_ref().map(|ae| AeMeta {
-                enc_cost_s: ae.enc_cost_ms / 1e3,
-                dec_cost_s: ae.dec_cost_ms / 1e3,
-                code_bytes: ae.code_bytes,
-            }),
-        }
-    }
-
-    /// Synthetic metadata for engine-free unit tests.
-    pub fn synthetic(stage_cost_s: Vec<f64>, stage_in_bytes: Vec<usize>) -> ModelMeta {
-        let n = stage_cost_s.len();
-        assert_eq!(n, stage_in_bytes.len());
-        ModelMeta { stage_cost_s, stage_in_bytes, num_stages: n, ae: None }
-    }
-
-    fn total_cost_s(&self) -> f64 {
-        self.stage_cost_s.iter().sum()
-    }
-}
 
 /// Sample access: labels always; image tensors only on the real-engine path.
 pub struct SampleStore<'a> {
@@ -114,7 +70,7 @@ enum Msg {
 enum Event {
     Admit,
     AdaptTick,
-    ComputeDone { worker: usize },
+    ComputeDone { worker: usize, task: Task, duration: f64 },
     Deliver { to: usize, from: usize, msg: Msg },
     GossipTick,
     TraceTick,
@@ -145,52 +101,24 @@ impl Ord for Entry {
     }
 }
 
-struct SimWorker {
-    active: bool,
-    queues: WorkerQueues,
-    current: Option<Task>,
-    busy_started: f64,
-    busy_duration: f64,
-    /// Per-task compute-delay estimate Γ_n (EWMA of measured durations).
-    gamma: Ewma,
-    /// What n believes about each other worker (gossip + optimism).
-    views: Vec<Option<NeighborView>>,
-    /// Measured transfer-delay estimate D_nm per neighbor.
-    d_est: Vec<Ewma>,
-    rng: Pcg64,
-    stats: WorkerStats,
-    speed: f64,
-}
-
-/// The simulation state. Construct with [`Simulation::new`], then [`Simulation::run`].
+/// The simulation state. Construct with [`Simulation::new`], then
+/// [`Simulation::run`] — or use [`super::run::Run`] which wraps both.
 pub struct Simulation<'a> {
     cfg: ExperimentConfig,
     topo: Topology,
-    meta: ModelMeta,
+    meta: super::worker::ModelMeta,
     engine: &'a dyn InferenceEngine,
     store: SampleStore<'a>,
 
     heap: BinaryHeap<Entry>,
     seq: u64,
-    now: f64,
-    next_task_id: u64,
-    next_sample: usize,
+    clock: VirtualClock,
 
-    workers: Vec<SimWorker>,
-    rate_ctl: Option<RateController>,
-    thr_ctl: Option<ThresholdController>,
-    /// Current global early-exit threshold T_e (Alg. 4 line 9 applies the
-    /// adapted value to all exit points).
-    t_e: f32,
-    rng: Pcg64,
+    workers: Vec<WorkerCore>,
     /// Concurrent transfers on the shared medium (WiFi contention model).
     active_transfers: usize,
-    ddi_next_target: usize,
-    /// Precomputed adjacency (hot path: try_offload runs per event).
-    neighbors: Vec<Vec<usize>>,
-    /// Scratch buffer for the shuffled neighbor scan (avoids a Vec
-    /// allocation per offload attempt — see EXPERIMENTS.md §Perf).
-    scan_buf: Vec<usize>,
+    /// Jitter sampling for link delays (the cores own the decision RNGs).
+    link_rng: Pcg64,
 
     report: RunReport,
     measure_from: f64,
@@ -201,7 +129,7 @@ impl<'a> Simulation<'a> {
     pub fn new(
         cfg: ExperimentConfig,
         engine: &'a dyn InferenceEngine,
-        meta: ModelMeta,
+        meta: super::worker::ModelMeta,
         store: SampleStore<'a>,
     ) -> Result<Simulation<'a>> {
         cfg.validate()?;
@@ -217,41 +145,9 @@ impl<'a> Simulation<'a> {
         let topo = Topology::named(&cfg.topology, cfg.link)
             .with_context(|| format!("unknown topology {:?}", cfg.topology))?
             .with_churn(cfg.churn.clone());
-        let mut rng = Pcg64::new(cfg.seed, 0);
-        let default_gamma = meta.total_cost_s() / meta.num_stages as f64;
         let workers = (0..topo.n)
-            .map(|i| SimWorker {
-                active: true,
-                queues: WorkerQueues::new(),
-                current: None,
-                busy_started: 0.0,
-                busy_duration: 0.0,
-                gamma: {
-                    let mut e = Ewma::new(0.2);
-                    e.push(default_gamma / (topo.workers[i].speed * cfg.compute_scale));
-                    e
-                },
-                views: vec![None; topo.n],
-                d_est: (0..topo.n).map(|_| Ewma::new(0.2)).collect(),
-                rng: rng.fork(i as u64 + 1),
-                stats: WorkerStats::default(),
-                speed: topo.workers[i].speed * cfg.compute_scale,
-            })
+            .map(|i| WorkerCore::new(i, &cfg, meta.clone(), &topo, store.len()))
             .collect();
-
-        let (rate_ctl, thr_ctl, t_e) = match cfg.admission {
-            AdmissionMode::AdaptiveRate { threshold, initial_mu_s } => {
-                (Some(RateController::new(cfg.adapt, initial_mu_s)), None, threshold)
-            }
-            AdmissionMode::AdaptiveThreshold { initial_t_e, t_e_min, .. } => (
-                None,
-                Some(ThresholdController::new(cfg.adapt, initial_t_e as f64, t_e_min as f64)),
-                initial_t_e,
-            ),
-            AdmissionMode::Fixed { threshold, .. } => (None, None, threshold),
-        };
-
-        let neighbors: Vec<Vec<usize>> = (0..topo.n).map(|n| topo.neighbors(n)).collect();
         let report = RunReport::new(
             &cfg.model,
             &cfg.topology,
@@ -261,6 +157,7 @@ impl<'a> Simulation<'a> {
         );
         let measure_from = cfg.warmup_s;
         let end_at = cfg.warmup_s + cfg.duration_s;
+        let link_rng = Pcg64::new(cfg.seed, 7777);
         Ok(Simulation {
             cfg,
             topo,
@@ -269,22 +166,22 @@ impl<'a> Simulation<'a> {
             store,
             heap: BinaryHeap::new(),
             seq: 0,
-            now: 0.0,
-            next_task_id: 0,
-            next_sample: 0,
+            clock: VirtualClock::new(),
             workers,
-            rate_ctl,
-            thr_ctl,
-            t_e,
-            rng,
             active_transfers: 0,
-            ddi_next_target: 0,
-            neighbors,
-            scan_buf: Vec::new(),
+            link_rng,
             report,
             measure_from,
             end_at,
         })
+    }
+
+    fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn in_window(&self) -> bool {
+        self.now() >= self.measure_from
     }
 
     fn push(&mut self, t: f64, ev: Event) {
@@ -297,7 +194,7 @@ impl<'a> Simulation<'a> {
         self.push(0.0, Event::Admit);
         self.push(self.cfg.gossip_interval_s, Event::GossipTick);
         self.push(TRACE_PERIOD_S, Event::TraceTick);
-        if self.rate_ctl.is_some() || self.thr_ctl.is_some() {
+        if self.workers[0].has_controller() {
             self.push(self.cfg.adapt.sleep_s, Event::AdaptTick);
         }
         let churn = self.topo.churn.clone();
@@ -310,17 +207,19 @@ impl<'a> Simulation<'a> {
             if t >= self.end_at {
                 break;
             }
-            self.now = t;
+            self.clock.set(t);
             events += 1;
             if events > MAX_EVENTS {
                 bail!("event budget exhausted (runaway simulation)");
             }
             match ev {
                 Event::Admit => self.on_admit()?,
-                Event::AdaptTick => self.on_adapt_tick(),
-                Event::ComputeDone { worker } => self.on_compute_done(worker)?,
+                Event::AdaptTick => self.on_adapt_tick()?,
+                Event::ComputeDone { worker, task, duration } => {
+                    self.on_compute_done(worker, task, duration)?
+                }
                 Event::Deliver { to, from, msg } => self.on_deliver(to, from, msg)?,
-                Event::GossipTick => self.on_gossip(),
+                Event::GossipTick => self.on_gossip_tick()?,
                 Event::TraceTick => self.on_trace(),
                 Event::Churn { idx } => self.on_churn(idx)?,
             }
@@ -328,293 +227,208 @@ impl<'a> Simulation<'a> {
         self.finalize()
     }
 
-    // -- admission ---------------------------------------------------------
+    // -- action dispatch ------------------------------------------------------
+
+    /// Map core actions onto the virtual medium. Out-of-band consequences
+    /// (gossip delivery, re-homing) feed further core calls, so this runs a
+    /// worklist until quiescent.
+    fn dispatch(&mut self, worker: usize, actions: Vec<Action>) -> Result<()> {
+        let mut q: VecDeque<(usize, Action)> =
+            actions.into_iter().map(|a| (worker, a)).collect();
+        while let Some((n, a)) = q.pop_front() {
+            let now = self.now();
+            match a {
+                Action::StartCompute { task, est_cost_s } => {
+                    self.push(
+                        now + est_cost_s,
+                        Event::ComputeDone { worker: n, task, duration: est_cost_s },
+                    );
+                }
+                Action::Send { to, payload, mut bytes, needs_encode } => match payload {
+                    Payload::Task(mut task) => {
+                        if needs_encode {
+                            // On the oracle path (`features: None`) encoding
+                            // is virtual: keep the AE byte/cost accounting.
+                            // With a real tensor, an engine without an
+                            // encoder ships raw and charges the raw size —
+                            // mirroring the realtime driver.
+                            if let Some(f) = task.features.take() {
+                                match self.engine.encode(&f)? {
+                                    Some(code) => task.features = Some(code),
+                                    None => {
+                                        task.features = Some(f);
+                                        task.encoded = false;
+                                        bytes =
+                                            self.meta.stage_in_bytes[task.stage - 1];
+                                    }
+                                }
+                            }
+                        }
+                        let mut delay = self.link_delay(n, to, bytes)?;
+                        if needs_encode && task.encoded {
+                            // Encoding costs compute on the sender; fold it
+                            // into the send path (virtual time).
+                            delay += self.enc_cost_s(n);
+                        }
+                        self.workers[n].note_transfer_delay(to, delay);
+                        if self.in_window() {
+                            self.report.bytes_on_wire += bytes as u64;
+                            self.report.task_transfers += 1;
+                        }
+                        self.active_transfers += 1;
+                        self.push(
+                            now + delay,
+                            Event::Deliver { to, from: n, msg: Msg::Task(task) },
+                        );
+                    }
+                    Payload::Result(r) => {
+                        // Results go back to the source. All testbed
+                        // topologies are one hop from it; a disconnected
+                        // pair indicates a custom topology, where we charge
+                        // a two-hop relay delay.
+                        let delay = if self.topo.is_connected_pair(n, to) {
+                            self.link_delay(n, to, bytes)?
+                        } else {
+                            let via = self
+                                .topo
+                                .neighbors(n)
+                                .first()
+                                .copied()
+                                .context("isolated worker")?;
+                            self.link_delay(n, via, bytes)? * 2.0
+                        };
+                        if self.in_window() {
+                            self.report.bytes_on_wire += bytes as u64;
+                        }
+                        self.active_transfers += 1;
+                        self.push(
+                            now + delay,
+                            Event::Deliver { to, from: n, msg: Msg::Result(r) },
+                        );
+                    }
+                    Payload::State { input_len, gamma_s, t_e } => {
+                        // Gossip is modelled out-of-band in virtual time
+                        // (the seed driver refreshed views instantly too);
+                        // only the realtime driver pays wire bytes for it.
+                        let acts =
+                            self.workers[to].on_gossip(now, n, input_len, gamma_s, t_e);
+                        q.extend(acts.into_iter().map(|a| (to, a)));
+                    }
+                },
+                Action::RecordResult { result } => self.record_result(result),
+                Action::Rehome { task } => {
+                    // Re-homing is the fabric's no-data-loss guarantee; the
+                    // DES charges no wire delay for it (as the seed did).
+                    self.report.rehomed += 1;
+                    let acts = self.workers[0].on_task(now, task, TaskOrigin::Rehomed);
+                    q.extend(acts.into_iter().map(|a| (0usize, a)));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// AE encode cost in virtual time, scaled by the sender's speed.
+    fn enc_cost_s(&self, n: usize) -> f64 {
+        self.meta
+            .ae
+            .as_ref()
+            .map(|ae| ae.enc_cost_s / self.workers[n].speed())
+            .unwrap_or(0.0)
+    }
+
+    // -- event handlers -------------------------------------------------------
 
     fn on_admit(&mut self) -> Result<()> {
-        let sample = self.next_sample;
-        self.next_sample = (self.next_sample + 1) % self.store.len();
-        let id = self.next_id();
-        let features = self.store.image(sample);
-        let task = Task::initial(id, sample, features, self.now);
-        if self.now >= self.measure_from {
+        let now = self.now();
+        let (mut task, dt) = self.workers[0].poll_admission(now);
+        task.features = self.store.image(task.sample);
+        if self.in_window() {
             self.report.admitted += 1;
         }
-
-        match self.cfg.mode {
-            Mode::MdiExit => {
-                self.workers[0].queues.input.push(task);
-                self.try_start(0)?;
-            }
-            Mode::Ddi => {
-                // Round-robin whole images across all active workers
-                // (including the source). No partitioning, no early exits.
-                let n = self.topo.n;
-                let mut target = self.ddi_next_target % n;
-                for _ in 0..n {
-                    if self.workers[target].active
-                        && (target == 0 || self.topo.is_connected_pair(0, target))
-                    {
-                        break;
-                    }
-                    target = (target + 1) % n;
-                }
-                self.ddi_next_target = target + 1;
-                if target == 0 {
-                    self.workers[0].queues.input.push(task);
-                    self.try_start(0)?;
-                } else {
-                    let bytes = self.meta.stage_in_bytes[0];
-                    self.transmit_task(0, target, task, bytes)?;
-                }
-            }
-        }
-
-        // Schedule the next arrival.
-        let dt = match self.cfg.admission {
-            AdmissionMode::AdaptiveRate { .. } => {
-                self.rate_ctl.as_ref().expect("rate controller").mu_s()
-            }
-            AdmissionMode::AdaptiveThreshold { rate_hz, .. } => {
-                self.rng.exponential(1.0 / rate_hz)
-            }
-            AdmissionMode::Fixed { rate_hz, .. } => 1.0 / rate_hz,
-        };
-        self.push(self.now + dt, Event::Admit);
+        let acts = self.workers[0].on_task(now, task, TaskOrigin::Admitted);
+        self.dispatch(0, acts)?;
+        self.push(now + dt, Event::Admit);
         Ok(())
     }
 
-    fn on_adapt_tick(&mut self) {
-        let q = self.workers[0].queues.total_len();
-        if let Some(rc) = self.rate_ctl.as_mut() {
-            rc.update(q);
-        }
-        if let Some(tc) = self.thr_ctl.as_mut() {
-            // Alg. 4 line 9: the adapted T_e applies to every exit point.
-            self.t_e = tc.update(q) as f32;
-        }
-        self.push(self.now + self.cfg.adapt.sleep_s, Event::AdaptTick);
-    }
-
-    // -- compute -----------------------------------------------------------
-
-    fn try_start(&mut self, n: usize) -> Result<()> {
-        let w = &mut self.workers[n];
-        if !w.active || w.current.is_some() || w.queues.input.is_empty() {
-            return Ok(());
-        }
-        let task = w.queues.input.pop().unwrap();
-        let mut cost = match self.cfg.mode {
-            Mode::Ddi => self.meta.total_cost_s(),
-            Mode::MdiExit => self.meta.stage_cost_s[task.stage - 1],
-        };
-        if task.encoded {
-            cost += self.meta.ae.as_ref().map(|ae| ae.dec_cost_s).unwrap_or(0.0);
-        }
-        // ±3% lognormal-ish execution noise (thermal/DVFS variability).
-        let noise = w.rng.normal(1.0, 0.03).clamp(0.7, 1.3);
-        let duration = cost * noise / w.speed;
-        w.busy_started = self.now;
-        w.busy_duration = duration;
-        w.current = Some(task);
-        self.push(self.now + duration, Event::ComputeDone { worker: n });
+    fn on_adapt_tick(&mut self) -> Result<()> {
+        let now = self.now();
+        let acts = self.workers[0].on_adapt_tick(now);
+        self.dispatch(0, acts)?;
+        self.push(now + self.cfg.adapt.sleep_s, Event::AdaptTick);
         Ok(())
     }
 
-    fn on_compute_done(&mut self, n: usize) -> Result<()> {
-        let (task, duration) = {
-            let w = &mut self.workers[n];
-            let task = w.current.take().expect("compute done without task");
-            if self.now >= self.measure_from {
-                w.stats.busy_s += w.busy_duration;
-                w.stats.processed += 1;
-            }
-            w.gamma.push(w.busy_duration);
-            (task, w.busy_duration)
-        };
-        let _ = duration;
+    fn on_compute_done(&mut self, worker: usize, mut task: Task, duration: f64) -> Result<()> {
+        let (out, exit_point) =
+            execute_task(self.engine, self.cfg.mode, self.meta.num_stages, &mut task)?;
+        let now = self.now();
+        let acts = self.workers[worker].on_compute_done(now, task, out, exit_point, duration);
+        self.dispatch(worker, acts)
+    }
 
-        // Run the stage(s) through the engine to observe C_k(d) (eq. 2).
-        let (out, exit_point) = match self.cfg.mode {
-            Mode::Ddi => {
-                // whole model locally: chain every stage, exit at K
-                let mut feats = task.features.clone();
-                let mut out = None;
-                for k in 1..=self.meta.num_stages {
-                    let o = self.engine.run_stage(k, task.sample, feats.as_ref())?;
-                    feats = o.features.clone();
-                    out = Some(o);
-                }
-                (out.unwrap(), self.meta.num_stages)
+    fn on_deliver(&mut self, to: usize, _from: usize, msg: Msg) -> Result<()> {
+        // The transfer occupying the shared medium ends on delivery.
+        self.active_transfers = self.active_transfers.saturating_sub(1);
+        let now = self.now();
+        match msg {
+            Msg::Task(task) => {
+                let acts = self.workers[to].on_task(now, task, TaskOrigin::Wire);
+                self.dispatch(to, acts)
             }
-            Mode::MdiExit => {
-                let mut feats = task.features.clone();
-                if task.encoded {
-                    if let Some(f) = &feats {
-                        feats = self.engine.decode(f)?.or(feats);
-                    }
-                }
-                let o = self.engine.run_stage(task.stage, task.sample, feats.as_ref())?;
-                (o, task.stage)
-            }
-        };
-
-        let is_final = exit_point >= self.meta.num_stages || self.cfg.mode == Mode::Ddi;
-        let w = &self.workers[n];
-        let threshold = if self.cfg.no_early_exit { f32::INFINITY } else { self.t_e };
-        let decision = policy::alg1_decide(
-            out.confidence,
-            threshold,
-            is_final,
-            w.queues.input.len(),
-            w.queues.output.len(),
-            self.cfg.t_o,
-        );
-
-        match decision {
-            ExitDecision::Exit => {
-                self.workers[n].stats.exits += 1;
-                let result = InferenceResult {
-                    sample: task.sample,
-                    exit_point,
-                    prediction: out.prediction,
-                    confidence: out.confidence,
-                    admitted_at: task.admitted_at,
-                    exited_on: n,
-                };
-                if n == 0 {
-                    self.record_result(result);
-                } else {
-                    self.transmit_result(n, result)?;
-                }
-            }
-            ExitDecision::ContinueLocal => {
-                let id = self.next_id();
-                let succ = task.successor(id, out.features);
-                self.workers[n].queues.input.push(succ);
-            }
-            ExitDecision::ContinueOffload => {
-                let id = self.next_id();
-                let succ = task.successor(id, out.features);
-                self.workers[n].queues.output.push(succ);
+            Msg::Result(r) => {
+                let acts = self.workers[to].on_result(now, r);
+                self.dispatch(to, acts)
             }
         }
+    }
 
-        self.try_offload(n)?;
-        self.try_start(n)?;
+    fn on_gossip_tick(&mut self) -> Result<()> {
+        let now = self.now();
+        for n in 0..self.topo.n {
+            let acts = self.workers[n].on_gossip_tick(now);
+            self.dispatch(n, acts)?;
+        }
+        self.push(now + self.cfg.gossip_interval_s, Event::GossipTick);
         Ok(())
     }
 
-    // -- offloading (Alg. 2) -------------------------------------------------
-
-    fn try_offload(&mut self, n: usize) -> Result<()> {
-        loop {
-            if self.workers[n].queues.output.is_empty() || !self.workers[n].active {
-                return Ok(());
-            }
-            let mut scan = std::mem::take(&mut self.scan_buf);
-            scan.clear();
-            scan.extend(self.neighbors[n].iter().copied()
-                .filter(|&m| self.workers[m].active));
-            self.workers[n].rng.shuffle(&mut scan);
-
-            let mut sent = false;
-            for m in scan.iter().copied() {
-                let (o_len, i_len, gamma_n, view) = {
-                    let w = &self.workers[n];
-                    let view = w.views[m].unwrap_or_else(|| self.default_view(n, m));
-                    (
-                        w.queues.output.len(),
-                        w.queues.input.len(),
-                        w.gamma.get_or(0.01),
-                        view,
-                    )
-                };
-                let go = {
-                    let w = &mut self.workers[n];
-                    policy::offload_decide(
-                        self.cfg.offload_policy,
-                        o_len,
-                        i_len,
-                        gamma_n,
-                        &view,
-                        &mut w.rng,
-                    )
-                };
-                if go {
-                    let task = self.workers[n].queues.output.pop().unwrap();
-                    let bytes = self.task_wire_bytes(&task);
-                    let task = self.maybe_encode(n, task)?;
-                    let bytes = if task.encoded {
-                        self.meta.ae.as_ref().unwrap().code_bytes
-                    } else {
-                        bytes
-                    };
-                    self.transmit_task(n, m, task, bytes)?;
-                    // optimistic view update until the next gossip refresh
-                    if let Some(v) = self.workers[n].views[m].as_mut() {
-                        v.input_len += 1;
-                    }
-                    sent = true;
-                    break;
-                }
-            }
-            self.scan_buf = scan;
-            if !sent {
-                // No neighbor accepted the head-of-line task. If local
-                // compute is starving, reclaim it for the input queue
-                // (prevents livelock; see DESIGN.md §6 — the paper's Alg. 2
-                // spins, which a discrete simulation must not).
-                let w = &mut self.workers[n];
-                if w.current.is_none() && w.queues.input.is_empty() {
-                    if let Some(t) = w.queues.output.pop() {
-                        w.queues.input.push(t);
-                        self.try_start(n)?;
-                    }
-                }
-                return Ok(());
-            }
-        }
+    fn on_trace(&mut self) {
+        let now = self.now();
+        self.report.trace.push(TracePoint {
+            t_s: now,
+            control: self.workers[0].control_value(),
+            source_queue: self.workers[0].queue_total(),
+        });
+        self.push(now + TRACE_PERIOD_S, Event::TraceTick);
     }
 
-    fn default_view(&self, n: usize, m: usize) -> NeighborView {
-        let typical = self.meta.stage_in_bytes[self.meta.num_stages.min(2) - 1];
-        let d = self.workers[n].d_est[m].get_or(
-            self.topo
-                .link(n, m)
-                .map(|l| l.mean_delay_s(typical))
-                .unwrap_or(0.01),
-        );
-        NeighborView {
-            input_len: self.workers[m].queues.input.len(),
-            gamma_s: self.workers[m].gamma.get_or(0.01),
-            d_nm_s: d,
+    fn on_churn(&mut self, idx: usize) -> Result<()> {
+        let e = self.topo.churn[idx];
+        let now = self.now();
+        log_debug!("churn at {:.2}s: worker {} {}", now, e.worker,
+                   if e.join { "joins" } else { "leaves" });
+        for n in 0..self.topo.n {
+            let acts = self.workers[n].on_churn(now, e.worker, e.join);
+            self.dispatch(n, acts)?;
         }
+        Ok(())
     }
 
-    /// Payload size of τ_k on the wire: the feature tensor entering stage k.
-    fn task_wire_bytes(&self, task: &Task) -> usize {
-        if task.encoded {
-            return self.meta.ae.as_ref().map(|ae| ae.code_bytes).unwrap_or(0);
-        }
-        self.meta.stage_in_bytes[task.stage - 1]
-    }
+    // -- accounting -----------------------------------------------------------
 
-    /// Autoencoder at the stage-1 boundary: encode features before the wire
-    /// (paper §V — only the first ResNet exit has an AE).
-    fn maybe_encode(&mut self, n: usize, mut task: Task) -> Result<Task> {
-        if !self.cfg.use_ae || task.encoded || task.stage != 2 {
-            return Ok(task);
+    fn record_result(&mut self, r: InferenceResult) {
+        if !self.in_window() {
+            return;
         }
-        let Some(ae) = &self.meta.ae else { return Ok(task) };
-        // Encoding costs compute on the sender; fold into the send path.
-        let _enc_cost = ae.enc_cost_s / self.workers[n].speed;
-        if let Some(f) = &task.features {
-            if let Some(code) = self.engine.encode(f)? {
-                task.features = Some(code);
-            }
+        self.report.completed += 1;
+        let label = self.store.labels[r.sample];
+        if r.prediction == label {
+            self.report.correct += 1;
         }
-        task.encoded = true;
-        Ok(task)
+        self.report.exit_histogram[r.exit_point - 1] += 1;
+        self.report.latency.push(self.now() - r.admitted_at);
     }
 
     fn link_delay(&mut self, n: usize, m: usize, bytes: usize) -> Result<f64> {
@@ -625,201 +439,35 @@ impl<'a> Simulation<'a> {
         let slow = 1.0 + self.cfg.medium_contention * self.active_transfers as f64;
         let mut eff = link;
         eff.bandwidth_bps = link.bandwidth_bps / slow;
-        Ok(eff.delay_s(bytes, &mut self.workers[n].rng))
+        Ok(eff.delay_s(bytes, &mut self.link_rng))
     }
 
-    fn transmit_task(&mut self, n: usize, m: usize, task: Task, bytes: usize) -> Result<()> {
-        let mut delay = self.link_delay(n, m, bytes)?;
-        if task.encoded {
-            if let Some(ae) = &self.meta.ae {
-                delay += ae.enc_cost_s / self.workers[n].speed;
-            }
+    fn finalize(self) -> Result<RunReport> {
+        let mut report = self.report;
+        report.duration_s = self.cfg.duration_s;
+        report.final_mu_s = self.workers[0].final_mu_s();
+        report.final_t_e = self.workers[0].final_t_e();
+        for (i, w) in self.workers.into_iter().enumerate() {
+            report.per_worker[i] = w.into_stats();
         }
-        self.workers[n].d_est[m].push(delay);
-        if self.now >= self.measure_from {
-            self.workers[n].stats.offloaded_out += 1;
-            self.report.bytes_on_wire += bytes as u64;
-            self.report.task_transfers += 1;
-        }
-        self.active_transfers += 1;
-        let mut task = task;
-        task.hops += 1;
-        self.push(self.now + delay, Event::Deliver { to: m, from: n, msg: Msg::Task(task) });
-        Ok(())
-    }
-
-    fn transmit_result(&mut self, n: usize, result: InferenceResult) -> Result<()> {
-        // Results go back to the source (worker 0). All testbed topologies
-        // are one hop from the source; a disconnected pair would indicate a
-        // custom topology, where we charge a two-hop relay delay.
-        let delay = if self.topo.is_connected_pair(n, 0) {
-            self.link_delay(n, 0, RESULT_BYTES)?
-        } else {
-            let via = self.topo.neighbors(n).first().copied().context("isolated worker")?;
-            self.link_delay(n, via, RESULT_BYTES)? * 2.0
-        };
-        if self.now >= self.measure_from {
-            self.report.bytes_on_wire += RESULT_BYTES as u64;
-        }
-        self.active_transfers += 1;
-        self.push(
-            self.now + delay,
-            Event::Deliver { to: 0, from: n, msg: Msg::Result(result) },
-        );
-        Ok(())
-    }
-
-    fn on_deliver(&mut self, to: usize, _from: usize, msg: Msg) -> Result<()> {
-        // the transfer occupying the shared medium ends on delivery
-        self.active_transfers = self.active_transfers.saturating_sub(1);
-        match msg {
-            Msg::Task(task) => {
-                if !self.workers[to].active {
-                    // Destination left while the task was in flight: the
-                    // fabric re-homes it to the source so no data is lost.
-                    self.report.rehomed += 1;
-                    self.workers[0].queues.input.push(task);
-                    self.try_start(0)?;
-                    return Ok(());
-                }
-                if self.now >= self.measure_from {
-                    self.workers[to].stats.received += 1;
-                }
-                self.workers[to].queues.input.push(task);
-                self.try_start(to)?;
-                self.try_offload(to)?;
-            }
-            Msg::Result(r) => {
-                self.record_result(r);
-            }
-        }
-        Ok(())
-    }
-
-    fn record_result(&mut self, r: InferenceResult) {
-        if self.now < self.measure_from {
-            return;
-        }
-        self.report.completed += 1;
-        let label = self.store.labels[r.sample];
-        if r.prediction == label {
-            self.report.correct += 1;
-        }
-        self.report.exit_histogram[r.exit_point - 1] += 1;
-        self.report.latency.push(self.now - r.admitted_at);
-    }
-
-    // -- periodic state ------------------------------------------------------
-
-    fn on_gossip(&mut self) {
-        for n in 0..self.topo.n {
-            if !self.workers[n].active {
-                continue;
-            }
-            for i in 0..self.neighbors[n].len() {
-                let m = self.neighbors[n][i];
-                if !self.workers[m].active {
-                    self.workers[n].views[m] = None;
-                    continue;
-                }
-                let view = self.default_view(n, m);
-                self.workers[n].views[m] = Some(view);
-            }
-        }
-        // Gossip may unblock offloading stalled on stale views.
-        for n in 0..self.topo.n {
-            if self.workers[n].active {
-                let _ = self.try_offload(n);
-            }
-        }
-        self.push(self.now + self.cfg.gossip_interval_s, Event::GossipTick);
-    }
-
-    fn on_trace(&mut self) {
-        let control = self
-            .rate_ctl
-            .as_ref()
-            .map(|rc| rc.mu_s())
-            .or_else(|| self.thr_ctl.as_ref().map(|tc| tc.t_e()))
-            .unwrap_or(self.t_e as f64);
-        self.report.trace.push(TracePoint {
-            t_s: self.now,
-            control,
-            source_queue: self.workers[0].queues.total_len(),
-        });
-        self.push(self.now + TRACE_PERIOD_S, Event::TraceTick);
-    }
-
-    fn on_churn(&mut self, idx: usize) -> Result<()> {
-        let e = self.topo.churn[idx];
-        log_debug!("churn at {:.2}s: worker {} {}", self.now, e.worker,
-                   if e.join { "joins" } else { "leaves" });
-        if e.join {
-            self.workers[e.worker].active = true;
-            self.try_start(e.worker)?;
-        } else {
-            self.workers[e.worker].active = false;
-            // Re-home queued tasks to the source — no data loss on churn.
-            let mut tasks = self.workers[e.worker].queues.input.drain_all();
-            tasks.extend(self.workers[e.worker].queues.output.drain_all());
-            self.report.rehomed += tasks.len() as u64;
-            for t in tasks {
-                self.workers[0].queues.input.push(t);
-            }
-            self.try_start(0)?;
-        }
-        Ok(())
-    }
-
-    fn next_id(&mut self) -> u64 {
-        self.next_task_id += 1;
-        self.next_task_id
-    }
-
-    fn finalize(mut self) -> Result<RunReport> {
-        self.report.duration_s = self.cfg.duration_s;
-        for (i, w) in self.workers.iter().enumerate() {
-            self.report.per_worker[i].peak_input = w.queues.input.peak();
-            self.report.per_worker[i].peak_output = w.queues.output.peak();
-            let s = &w.stats;
-            self.report.per_worker[i].processed = s.processed;
-            self.report.per_worker[i].offloaded_out = s.offloaded_out;
-            self.report.per_worker[i].received = s.received;
-            self.report.per_worker[i].exits = s.exits;
-            self.report.per_worker[i].busy_s = s.busy_s;
-        }
-        self.report.final_mu_s = self.rate_ctl.as_ref().map(|rc| rc.mu_s());
-        self.report.final_t_e = self.thr_ctl.as_ref().map(|tc| tc.t_e());
-        Ok(self.report)
+        Ok(report)
     }
 }
 
 fn run_label(cfg: &ExperimentConfig) -> String {
     let ee = if cfg.no_early_exit { "No EE" } else { "MDI-Exit" };
     let mode = match cfg.mode {
-        Mode::MdiExit => ee.to_string(),
-        Mode::Ddi => "DDI".to_string(),
+        super::config::Mode::MdiExit => ee.to_string(),
+        super::config::Mode::Ddi => "DDI".to_string(),
     };
     format!("{}, {}", cfg.topology, mode)
 }
 
-/// Convenience: run one experiment on the oracle engine using manifest
-/// metadata (what benches and the CLI call).
-pub fn run_from_artifacts(
-    cfg: ExperimentConfig,
-    manifest: &crate::artifact::Manifest,
-) -> Result<RunReport> {
-    let info = manifest.model(&cfg.model)?;
-    let meta = ModelMeta::from_manifest(info);
-    let engine =
-        crate::runtime::sim_engine::SimEngine::load(manifest, &cfg.model, cfg.use_ae)?;
-    let ds = crate::dataset::Dataset::load(manifest.path(&manifest.dataset.file))?;
-    let store = SampleStore { labels: &ds.labels, images: None };
-    Simulation::new(cfg, &engine, meta, store)?.run()
-}
-
 #[cfg(test)]
 mod tests {
+    use super::super::config::{AdmissionMode, Mode};
+    use super::super::run::{Driver, Run};
+    use super::super::worker::ModelMeta;
     use super::*;
     use crate::dataset::ExitTable;
     use crate::runtime::sim_engine::SimEngine;
@@ -858,12 +506,21 @@ mod tests {
         ModelMeta::synthetic(vec![0.002, 0.003], vec![12288, 8192])
     }
 
+    fn run_des(cfg: ExperimentConfig, engine: &SimEngine, labels: &[u8]) -> RunReport {
+        Run::builder()
+            .config(cfg)
+            .model(meta_2stage())
+            .engine(engine)
+            .labels(labels)
+            .driver(Driver::Des)
+            .execute()
+            .unwrap()
+    }
+
     #[test]
     fn local_early_exit_splits_by_confidence() {
         let (engine, labels) = engine_2stage();
-        let cfg = base_cfg("local");
-        let store = SampleStore { labels: &labels, images: None };
-        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        let r = run_des(base_cfg("local"), &engine, &labels);
         assert!(r.completed > 500, "completed {}", r.completed);
         // Half the stream exits at 1 (conf .97 > .9), half at 2.
         let f = r.exit_fractions();
@@ -877,8 +534,7 @@ mod tests {
         let (engine, labels) = engine_2stage();
         let mut cfg = base_cfg("local");
         cfg.no_early_exit = true;
-        let store = SampleStore { labels: &labels, images: None };
-        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        let r = run_des(cfg, &engine, &labels);
         let f = r.exit_fractions();
         assert_eq!(f[0], 0.0, "no task may exit early: {f:?}");
         assert!(r.completed > 0);
@@ -890,8 +546,7 @@ mod tests {
         let mut cfg = base_cfg("3-node-mesh");
         // overload one node so offloading must kick in
         cfg.admission = AdmissionMode::Fixed { rate_hz: 300.0, threshold: 0.9 };
-        let store = SampleStore { labels: &labels, images: None };
-        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        let r = run_des(cfg, &engine, &labels);
         assert!(r.task_transfers > 0, "expected offloading");
         assert!(r.completed > 1000, "completed {}", r.completed);
         assert!((r.accuracy() - 1.0).abs() < 1e-9);
@@ -906,8 +561,7 @@ mod tests {
         cfg.admission = AdmissionMode::AdaptiveRate { threshold: 0.9, initial_mu_s: 1.0 };
         cfg.duration_s = 120.0;
         cfg.warmup_s = 30.0;
-        let store = SampleStore { labels: &labels, images: None };
-        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        let r = run_des(cfg, &engine, &labels);
         // capacity: mean cost/sample = 0.002 + 0.5*0.003 = 3.5ms → ~285 Hz.
         // Alg. 3 should push the admitted rate into the right decade and
         // the system should complete most of what it admits.
@@ -929,8 +583,7 @@ mod tests {
         cfg.admission =
             AdmissionMode::AdaptiveThreshold { rate_hz: 2000.0, initial_t_e: 0.99, t_e_min: 0.05 };
         cfg.duration_s = 60.0;
-        let store = SampleStore { labels: &labels, images: None };
-        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        let r = run_des(cfg, &engine, &labels);
         let t_e = r.final_t_e.unwrap();
         assert!(t_e < 0.5, "threshold should fall under overload, got {t_e}");
         // with low T_e nearly everything exits at 1
@@ -948,9 +601,7 @@ mod tests {
         cfg.admission = AdmissionMode::Fixed { rate_hz: 900.0, threshold: 0.9 };
         cfg.duration_s = 30.0;
         cfg.churn = vec![ChurnEvent { at_s: 10.0, worker: 1, join: false }];
-        let store = SampleStore { labels: &labels, images: None };
-        let meta = meta_2stage();
-        let r = Simulation::new(cfg, &engine, meta, store).unwrap().run().unwrap();
+        let r = run_des(cfg, &engine, &labels);
         assert!(r.completed > 0);
         // After the leave, in-flight/queued tasks re-home instead of vanishing.
         assert!(r.rehomed > 0, "expected rehomed tasks on churn");
@@ -962,8 +613,7 @@ mod tests {
         let mut cfg = base_cfg("3-node-mesh");
         cfg.mode = Mode::Ddi;
         cfg.admission = AdmissionMode::Fixed { rate_hz: 100.0, threshold: 0.9 };
-        let store = SampleStore { labels: &labels, images: None };
-        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        let r = run_des(cfg, &engine, &labels);
         let f = r.exit_fractions();
         assert_eq!(f[0], 0.0, "DDI never exits early: {f:?}");
         assert!(r.completed > 0);
@@ -980,8 +630,7 @@ mod tests {
         cfg.admission = AdmissionMode::Fixed { rate_hz: 100.0, threshold: 0.9 };
         cfg.duration_s = 40.0;
         cfg.warmup_s = 0.0;
-        let store = SampleStore { labels: &labels, images: None };
-        let r = Simulation::new(cfg, &engine, meta_2stage(), store).unwrap().run().unwrap();
+        let r = run_des(cfg, &engine, &labels);
         // Under-loaded (100 Hz vs ~285 Hz capacity): everything admitted
         // except the in-flight tail must complete.
         assert!(

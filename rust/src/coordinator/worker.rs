@@ -1,0 +1,1064 @@
+//! The clock-agnostic worker core — one state machine for both drivers.
+//!
+//! [`WorkerCore`] owns everything a worker *decides with*: the I_n/O_n
+//! queue pair, the Γ_n/D_nm EWMA estimators, gossiped [`NeighborView`]s,
+//! the Alg. 3/4 controllers (source only), and the per-worker stats. It is
+//! driven by explicit events (`on_task`, `on_result`, `on_gossip`,
+//! `on_compute_done`, `on_adapt_tick`, `on_churn`, `poll_admission`) and
+//! answers with [`Action`]s — *what* should happen, never *how*:
+//!
+//! * `Send { to, payload, bytes }` — put a message on the wire;
+//! * `StartCompute { task, est_cost_s }` — run task τ_k on the engine;
+//! * `RecordResult { result }` — source-side accounting of a completed
+//!   inference;
+//! * `Rehome { task }` — hand a task back to the source (churn safety).
+//!
+//! The discrete-event driver ([`super::sim`]) maps these onto its
+//! virtual-time heap; the realtime driver (`super::rt`) maps them onto
+//! `DelayNet` sends and wallclock engine calls. Neither contains any
+//! admission/gossip/exit/offload logic of its own, so every policy change
+//! lands once. The core never reads time: drivers sample their [`Clock`]
+//! and pass `now` into each event.
+
+use std::time::Instant;
+
+use super::config::{AdmissionMode, ExperimentConfig, Mode};
+use super::policy::{self, ExitDecision, NeighborView, RateController, ThresholdController};
+use super::queues::WorkerQueues;
+use super::report::WorkerStats;
+use super::task::{InferenceResult, Task};
+use crate::artifact::ModelInfo;
+use crate::runtime::{InferenceEngine, StageOutput};
+use crate::simnet::Topology;
+use crate::util::rng::Pcg64;
+use crate::util::stats::Ewma;
+
+/// Bytes of an exit-result message (classifier output + header).
+pub const RESULT_BYTES: usize = 64;
+/// Bytes of a gossiped neighbor-state message.
+pub const STATE_BYTES: usize = 32;
+
+// ---------------------------------------------------------------------------
+// Clock abstraction
+// ---------------------------------------------------------------------------
+
+/// Source of "now" in seconds since run start. The core never reads time
+/// itself — drivers sample their clock and pass the value into each event,
+/// which is what lets the same core run in virtual and wall time.
+pub trait Clock {
+    fn now(&self) -> f64;
+}
+
+/// Wallclock seconds since an anchor instant (realtime driver).
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    pub fn new(t0: Instant) -> WallClock {
+        WallClock { t0 }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// Virtual time set explicitly by the event loop (DES driver).
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    t: std::cell::Cell<f64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    pub fn set(&self, t: f64) {
+        self.t.set(t);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.t.get()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model metadata
+// ---------------------------------------------------------------------------
+
+/// Compute/transfer metadata distilled from the manifest, so the decision
+/// core and the DES inner loop never touch JSON or paths.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub stage_cost_s: Vec<f64>,
+    pub stage_in_bytes: Vec<usize>,
+    pub num_stages: usize,
+    pub ae: Option<AeMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct AeMeta {
+    pub enc_cost_s: f64,
+    pub dec_cost_s: f64,
+    pub code_bytes: usize,
+}
+
+impl ModelMeta {
+    pub fn from_manifest(info: &ModelInfo) -> ModelMeta {
+        ModelMeta {
+            stage_cost_s: info.stages.iter().map(|s| s.cost_ms / 1e3).collect(),
+            stage_in_bytes: info.stages.iter().map(|s| s.in_bytes).collect(),
+            num_stages: info.num_stages,
+            ae: info.ae.as_ref().map(|ae| AeMeta {
+                enc_cost_s: ae.enc_cost_ms / 1e3,
+                dec_cost_s: ae.dec_cost_ms / 1e3,
+                code_bytes: ae.code_bytes,
+            }),
+        }
+    }
+
+    /// Synthetic metadata for engine-free unit tests.
+    pub fn synthetic(stage_cost_s: Vec<f64>, stage_in_bytes: Vec<usize>) -> ModelMeta {
+        let n = stage_cost_s.len();
+        assert_eq!(n, stage_in_bytes.len());
+        ModelMeta { stage_cost_s, stage_in_bytes, num_stages: n, ae: None }
+    }
+
+    pub fn total_cost_s(&self) -> f64 {
+        self.stage_cost_s.iter().sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events in, actions out
+// ---------------------------------------------------------------------------
+
+/// What goes on the wire between workers.
+#[derive(Debug)]
+pub enum Payload {
+    Task(Task),
+    Result(InferenceResult),
+    /// Gossiped neighbor state (paper §IV.A: "periodically learns ... its
+    /// input queue size I_m, per task computing delay Γ_m"). Carries the
+    /// source's adapted T_e so Alg. 4 line 9 ("applies to every exit
+    /// point") holds across workers in both drivers.
+    State { input_len: usize, gamma_s: f64, t_e: f32 },
+}
+
+/// What a driver must make happen in its medium (virtual or real).
+#[derive(Debug)]
+pub enum Action {
+    /// Transmit `payload` of `bytes` to one-hop neighbor `to`.
+    /// `needs_encode` asks the driver to run the autoencoder on the
+    /// feature tensor before the wire (the core already accounted the
+    /// encoded byte size and marked the task).
+    Send { to: usize, payload: Payload, bytes: usize, needs_encode: bool },
+    /// Run task τ_k through the engine. `est_cost_s` is the core's virtual
+    /// cost estimate (stage cost + AE decode, ×noise, ÷speed) — the DES
+    /// driver charges it as the compute delay; the realtime driver ignores
+    /// it and measures real elapsed time.
+    StartCompute { task: Task, est_cost_s: f64 },
+    /// A completed inference reached the source: record it.
+    RecordResult { result: InferenceResult },
+    /// Hand the task back to the source (this worker left the network).
+    Rehome { task: Task },
+}
+
+/// How a task arrived at [`WorkerCore::on_task`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskOrigin {
+    /// Freshly admitted at this worker (source only).
+    Admitted,
+    /// Delivered over the wire from a neighbor.
+    Wire,
+    /// Re-homed to the source after a worker left.
+    Rehomed,
+}
+
+// ---------------------------------------------------------------------------
+// The core
+// ---------------------------------------------------------------------------
+
+/// Per-worker decision state machine shared by both drivers.
+pub struct WorkerCore {
+    id: usize,
+    cfg: ExperimentConfig,
+    meta: ModelMeta,
+    /// Effective compute speed (topology speed × cfg.compute_scale).
+    speed: f64,
+    neighbors: Vec<usize>,
+    /// Mean link delay to each peer for a typical payload (default D_nm
+    /// before the first measurement).
+    link_default_delay: Vec<Option<f64>>,
+    num_workers: usize,
+
+    active: bool,
+    peer_active: Vec<bool>,
+    queues: WorkerQueues,
+    /// A StartCompute is outstanding (cleared by `on_compute_done`).
+    busy: bool,
+    /// Per-task compute-delay estimate Γ_n (EWMA of measured durations).
+    gamma: Ewma,
+    /// What this worker believes about each peer (gossip + optimism).
+    views: Vec<Option<NeighborView>>,
+    /// Measured transfer-delay estimate D_nm per peer.
+    d_est: Vec<Ewma>,
+    rng: Pcg64,
+    stats: WorkerStats,
+
+    // Source-only state (inert on other workers).
+    rate_ctl: Option<RateController>,
+    thr_ctl: Option<ThresholdController>,
+    /// Current early-exit threshold T_e (source adapts it; others adopt it
+    /// from the source's gossip — Alg. 4 line 9).
+    t_e: f32,
+    next_task_id: u64,
+    next_sample: usize,
+    num_samples: usize,
+    ddi_next_target: usize,
+
+    measure_from: f64,
+    /// Scratch buffer for the shuffled neighbor scan (avoids a Vec
+    /// allocation per offload attempt).
+    scan_buf: Vec<usize>,
+}
+
+impl WorkerCore {
+    /// Build worker `id`'s core. `num_samples` is only meaningful at the
+    /// source (admission rotates through the sample store).
+    pub fn new(
+        id: usize,
+        cfg: &ExperimentConfig,
+        meta: ModelMeta,
+        topo: &Topology,
+        num_samples: usize,
+    ) -> WorkerCore {
+        let n = topo.n;
+        let speed = topo.workers[id].speed * cfg.compute_scale;
+        let neighbors = topo.neighbors(id);
+        let typical = meta.stage_in_bytes[meta.num_stages.min(2) - 1];
+        let link_default_delay =
+            (0..n).map(|m| topo.link(id, m).map(|l| l.mean_delay_s(typical))).collect();
+        let default_gamma = meta.total_cost_s() / meta.num_stages as f64;
+        let mut gamma = Ewma::new(0.2);
+        gamma.push(default_gamma / speed);
+
+        let (rate_ctl, thr_ctl, t_e) = match cfg.admission {
+            AdmissionMode::AdaptiveRate { threshold, initial_mu_s } => {
+                let rc = (id == 0).then(|| RateController::new(cfg.adapt, initial_mu_s));
+                (rc, None, threshold)
+            }
+            AdmissionMode::AdaptiveThreshold { initial_t_e, t_e_min, .. } => {
+                let tc = (id == 0).then(|| {
+                    ThresholdController::new(cfg.adapt, initial_t_e as f64, t_e_min as f64)
+                });
+                (None, tc, initial_t_e)
+            }
+            AdmissionMode::Fixed { threshold, .. } => (None, None, threshold),
+        };
+
+        WorkerCore {
+            id,
+            cfg: cfg.clone(),
+            meta,
+            speed,
+            neighbors,
+            link_default_delay,
+            num_workers: n,
+            active: true,
+            peer_active: vec![true; n],
+            queues: WorkerQueues::new(),
+            busy: false,
+            gamma,
+            views: vec![None; n],
+            d_est: (0..n).map(|_| Ewma::new(0.2)).collect(),
+            rng: Pcg64::new(cfg.seed, 1000 + id as u64),
+            stats: WorkerStats::default(),
+            rate_ctl,
+            thr_ctl,
+            t_e,
+            next_task_id: 0,
+            next_sample: 0,
+            num_samples,
+            ddi_next_target: 0,
+            measure_from: cfg.warmup_s,
+            scan_buf: Vec::new(),
+        }
+    }
+
+    // -- small accessors ----------------------------------------------------
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    pub fn speed(&self) -> f64 {
+        self.speed
+    }
+
+    pub fn t_e(&self) -> f32 {
+        self.t_e
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.queues.input.len()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.queues.output.len()
+    }
+
+    /// I_n + O_n — the occupancy signal Algs 3 and 4 consume.
+    pub fn queue_total(&self) -> usize {
+        self.queues.total_len()
+    }
+
+    /// Current controller value for traces: μ under Alg. 3, T_e otherwise.
+    pub fn control_value(&self) -> f64 {
+        self.rate_ctl
+            .as_ref()
+            .map(|rc| rc.mu_s())
+            .or_else(|| self.thr_ctl.as_ref().map(|tc| tc.t_e()))
+            .unwrap_or(self.t_e as f64)
+    }
+
+    /// Whether this worker runs an Alg. 3/4 controller (drivers use it to
+    /// decide if adaptation ticks need scheduling).
+    pub fn has_controller(&self) -> bool {
+        self.rate_ctl.is_some() || self.thr_ctl.is_some()
+    }
+
+    pub fn final_mu_s(&self) -> Option<f64> {
+        self.rate_ctl.as_ref().map(|rc| rc.mu_s())
+    }
+
+    pub fn final_t_e(&self) -> Option<f64> {
+        self.thr_ctl.as_ref().map(|tc| tc.t_e())
+    }
+
+    /// Final per-worker stats (fills queue peaks).
+    pub fn into_stats(mut self) -> WorkerStats {
+        self.stats.peak_input = self.queues.input.peak();
+        self.stats.peak_output = self.queues.output.peak();
+        self.stats
+    }
+
+    fn in_window(&self, now: f64) -> bool {
+        now >= self.measure_from
+    }
+
+    fn alloc_task_id(&mut self) -> u64 {
+        self.next_task_id += 1;
+        ((self.id as u64) << 48) | self.next_task_id
+    }
+
+    // -- admission (source) --------------------------------------------------
+
+    /// Source only: admit the next sample. Returns the fresh task τ_1
+    /// (features unset — the driver owns the sample store) and the delay
+    /// until the next admission per the configured [`AdmissionMode`].
+    pub fn poll_admission(&mut self, now: f64) -> (Task, f64) {
+        debug_assert_eq!(self.id, 0, "only the source admits data");
+        let sample = self.next_sample;
+        self.next_sample = (self.next_sample + 1) % self.num_samples.max(1);
+        let id = self.alloc_task_id();
+        let task = Task::initial(id, sample, None, now);
+        let dt = match self.cfg.admission {
+            AdmissionMode::AdaptiveRate { .. } => {
+                self.rate_ctl.as_ref().expect("rate controller").mu_s()
+            }
+            AdmissionMode::AdaptiveThreshold { rate_hz, .. } => {
+                self.rng.exponential(1.0 / rate_hz)
+            }
+            AdmissionMode::Fixed { rate_hz, .. } => 1.0 / rate_hz,
+        };
+        (task, dt)
+    }
+
+    // -- task arrival --------------------------------------------------------
+
+    /// A task arrived: admitted locally, delivered over the wire, or
+    /// re-homed. Queues it (or DDI-routes it at the source) and may start
+    /// compute / offloading.
+    pub fn on_task(&mut self, now: f64, task: Task, origin: TaskOrigin) -> Vec<Action> {
+        let mut out = Vec::new();
+        match origin {
+            TaskOrigin::Admitted => {
+                if self.cfg.mode == Mode::Ddi && self.id == 0 {
+                    // Round-robin whole images across all active workers
+                    // (including the source). No partitioning, no exits.
+                    let n = self.num_workers;
+                    let mut target = self.ddi_next_target % n;
+                    for _ in 0..n {
+                        let ok = if target == self.id {
+                            self.active
+                        } else {
+                            self.peer_active[target] && self.neighbors.contains(&target)
+                        };
+                        if ok {
+                            break;
+                        }
+                        target = (target + 1) % n;
+                    }
+                    self.ddi_next_target = target + 1;
+                    if target != self.id {
+                        let mut task = task;
+                        task.hops += 1;
+                        if self.in_window(now) {
+                            self.stats.offloaded_out += 1;
+                        }
+                        out.push(Action::Send {
+                            to: target,
+                            bytes: self.meta.stage_in_bytes[0],
+                            payload: Payload::Task(task),
+                            needs_encode: false,
+                        });
+                        return out;
+                    }
+                }
+                self.queues.input.push(task);
+            }
+            TaskOrigin::Wire => {
+                if !self.active {
+                    // Arrived while this worker was gone: the fabric
+                    // re-homes it to the source so no data is lost.
+                    out.push(Action::Rehome { task });
+                    return out;
+                }
+                if self.in_window(now) {
+                    self.stats.received += 1;
+                }
+                self.queues.input.push(task);
+            }
+            TaskOrigin::Rehomed => {
+                self.queues.input.push(task);
+            }
+        }
+        if let Some(a) = self.maybe_start() {
+            out.push(a);
+        }
+        if origin == TaskOrigin::Wire {
+            self.try_offload(now, &mut out);
+        }
+        out
+    }
+
+    // -- compute -------------------------------------------------------------
+
+    /// Pop the next input task and ask the driver to compute it, if idle.
+    fn maybe_start(&mut self) -> Option<Action> {
+        if !self.active || self.busy || self.queues.input.is_empty() {
+            return None;
+        }
+        let task = self.queues.input.pop().unwrap();
+        let mut cost = match self.cfg.mode {
+            Mode::Ddi => self.meta.total_cost_s(),
+            Mode::MdiExit => self.meta.stage_cost_s[task.stage - 1],
+        };
+        if task.encoded {
+            cost += self.meta.ae.as_ref().map(|ae| ae.dec_cost_s).unwrap_or(0.0);
+        }
+        // ±3% lognormal-ish execution noise (thermal/DVFS variability).
+        let noise = self.rng.normal(1.0, 0.03).clamp(0.7, 1.3);
+        self.busy = true;
+        Some(Action::StartCompute { task, est_cost_s: cost * noise / self.speed })
+    }
+
+    /// The engine finished task τ_k: apply Alg. 1, then scan Alg. 2 and
+    /// maybe start the next task. `duration_s` is the measured (virtual or
+    /// wall) compute time; `exit_point` is the exit whose classifier ran.
+    pub fn on_compute_done(
+        &mut self,
+        now: f64,
+        task: Task,
+        out: StageOutput,
+        exit_point: usize,
+        duration_s: f64,
+    ) -> Vec<Action> {
+        self.busy = false;
+        self.gamma.push(duration_s);
+        if self.in_window(now) {
+            self.stats.processed += 1;
+            self.stats.busy_s += duration_s;
+        }
+
+        let mut actions = Vec::new();
+        let is_final = exit_point >= self.meta.num_stages || self.cfg.mode == Mode::Ddi;
+        let threshold = if self.cfg.no_early_exit { f32::INFINITY } else { self.t_e };
+        let decision = policy::alg1_decide(
+            out.confidence,
+            threshold,
+            is_final,
+            self.queues.input.len(),
+            self.queues.output.len(),
+            self.cfg.t_o,
+        );
+        match decision {
+            ExitDecision::Exit => {
+                if self.in_window(now) {
+                    self.stats.exits += 1;
+                }
+                let result = InferenceResult {
+                    sample: task.sample,
+                    exit_point,
+                    prediction: out.prediction,
+                    confidence: out.confidence,
+                    admitted_at: task.admitted_at,
+                    exited_on: self.id,
+                };
+                if self.id == 0 {
+                    actions.push(Action::RecordResult { result });
+                } else {
+                    actions.push(Action::Send {
+                        to: 0,
+                        payload: Payload::Result(result),
+                        bytes: RESULT_BYTES,
+                        needs_encode: false,
+                    });
+                }
+            }
+            ExitDecision::ContinueLocal | ExitDecision::ContinueOffload => {
+                let id = self.alloc_task_id();
+                // Move (not clone) the feature tensor into the successor —
+                // this runs once per task-stage on the benchmarked hot path.
+                let succ = task.successor(id, out.features);
+                if !self.active {
+                    // Completed while churned out: hand the successor back
+                    // instead of stranding it on an inactive queue.
+                    actions.push(Action::Rehome { task: succ });
+                } else if decision == ExitDecision::ContinueLocal {
+                    self.queues.input.push(succ);
+                } else {
+                    self.queues.output.push(succ);
+                }
+            }
+        }
+
+        self.try_offload(now, &mut actions);
+        if let Some(a) = self.maybe_start() {
+            actions.push(a);
+        }
+        actions
+    }
+
+    /// The driver could not run the engine (realtime engine error): clear
+    /// the busy latch so the worker keeps draining its queue.
+    pub fn abort_compute(&mut self) -> Vec<Action> {
+        self.busy = false;
+        self.maybe_start().into_iter().collect()
+    }
+
+    // -- results -------------------------------------------------------------
+
+    /// A result message arrived (only the source receives these).
+    pub fn on_result(&mut self, _now: f64, result: InferenceResult) -> Vec<Action> {
+        if self.id == 0 {
+            vec![Action::RecordResult { result }]
+        } else {
+            // Mis-delivered: forward toward the source.
+            vec![Action::Send {
+                to: 0,
+                payload: Payload::Result(result),
+                bytes: RESULT_BYTES,
+                needs_encode: false,
+            }]
+        }
+    }
+
+    // -- gossip --------------------------------------------------------------
+
+    /// Periodic broadcast of this worker's state to its active neighbors.
+    pub fn on_gossip_tick(&mut self, _now: f64) -> Vec<Action> {
+        if !self.active {
+            return Vec::new();
+        }
+        let input_len = self.queues.input.len();
+        let gamma_s = self.gamma.get_or(0.01);
+        let t_e = self.t_e;
+        self.neighbors
+            .iter()
+            .copied()
+            .filter(|&m| self.peer_active[m])
+            .map(|m| Action::Send {
+                to: m,
+                payload: Payload::State { input_len, gamma_s, t_e },
+                bytes: STATE_BYTES,
+                needs_encode: false,
+            })
+            .collect()
+    }
+
+    /// Gossiped state arrived from `from`: refresh the view and re-scan
+    /// offloading (fresh views may unblock a stalled output queue).
+    pub fn on_gossip(
+        &mut self,
+        now: f64,
+        from: usize,
+        input_len: usize,
+        gamma_s: f64,
+        t_e: f32,
+    ) -> Vec<Action> {
+        let d = self.d_est[from].get_or(self.link_default_delay[from].unwrap_or(0.01));
+        self.views[from] = Some(NeighborView { input_len, gamma_s, d_nm_s: d });
+        if from == 0 && self.id != 0 {
+            // Adopt the source's adapted threshold (Alg. 4 line 9).
+            self.t_e = t_e;
+        }
+        let mut out = Vec::new();
+        self.try_offload(now, &mut out);
+        out
+    }
+
+    // -- adaptation (source) --------------------------------------------------
+
+    /// One Alg. 3/4 adaptation step from the source's queue occupancy. The
+    /// driver schedules these every `cfg.adapt.sleep_s`.
+    pub fn on_adapt_tick(&mut self, _now: f64) -> Vec<Action> {
+        let q = self.queues.total_len();
+        if let Some(rc) = self.rate_ctl.as_mut() {
+            rc.update(q);
+        }
+        if let Some(tc) = self.thr_ctl.as_mut() {
+            self.t_e = tc.update(q) as f32;
+        }
+        Vec::new()
+    }
+
+    // -- churn ---------------------------------------------------------------
+
+    /// Worker `worker` joined/left at `now`. Every core sees every churn
+    /// event: peers stop (or resume) being offload targets; the churned
+    /// worker itself drains its queues back to the source.
+    pub fn on_churn(&mut self, _now: f64, worker: usize, join: bool) -> Vec<Action> {
+        let mut out = Vec::new();
+        if worker == self.id {
+            self.active = join;
+            if join {
+                if let Some(a) = self.maybe_start() {
+                    out.push(a);
+                }
+            } else {
+                let mut tasks = self.queues.input.drain_all();
+                tasks.extend(self.queues.output.drain_all());
+                for task in tasks {
+                    out.push(Action::Rehome { task });
+                }
+            }
+        } else {
+            self.peer_active[worker] = join;
+            if !join {
+                self.views[worker] = None;
+            }
+        }
+        out
+    }
+
+    // -- transfers -----------------------------------------------------------
+
+    /// The driver measured (or sampled) the transfer delay of a send to
+    /// `to`: feed the D_nm estimator.
+    pub fn note_transfer_delay(&mut self, to: usize, delay_s: f64) {
+        self.d_est[to].push(delay_s);
+    }
+
+    /// Payload size of τ_k on the wire: the feature tensor entering stage k.
+    /// Shared with the drivers (e.g. the realtime re-homing path) so wire
+    /// sizing lives in exactly one place.
+    pub(crate) fn task_wire_bytes(&self, task: &Task) -> usize {
+        if task.encoded {
+            return self.meta.ae.as_ref().map(|ae| ae.code_bytes).unwrap_or(0);
+        }
+        self.meta.stage_in_bytes[task.stage - 1]
+    }
+
+    fn default_view(&self, m: usize) -> NeighborView {
+        NeighborView {
+            input_len: 0,
+            gamma_s: 0.01,
+            d_nm_s: self.d_est[m].get_or(self.link_default_delay[m].unwrap_or(0.01)),
+        }
+    }
+
+    // -- offloading (Alg. 2) ---------------------------------------------------
+
+    /// Scan neighbors for the head-of-line output task, repeatedly, until
+    /// nobody accepts. Falls back to reclaiming the task for local compute
+    /// when starving (prevents livelock; the paper's Alg. 2 spins, which
+    /// neither driver can afford).
+    fn try_offload(&mut self, now: f64, out: &mut Vec<Action>) {
+        loop {
+            if !self.active || self.queues.output.is_empty() {
+                return;
+            }
+            let mut scan = std::mem::take(&mut self.scan_buf);
+            scan.clear();
+            scan.extend(self.neighbors.iter().copied().filter(|&m| self.peer_active[m]));
+            self.rng.shuffle(&mut scan);
+
+            let mut sent = false;
+            for &m in &scan {
+                let view = self.views[m].unwrap_or_else(|| self.default_view(m));
+                let go = policy::offload_decide(
+                    self.cfg.offload_policy,
+                    self.queues.output.len(),
+                    self.queues.input.len(),
+                    self.gamma.get_or(0.01),
+                    &view,
+                    &mut self.rng,
+                );
+                if !go {
+                    continue;
+                }
+                let mut task = self.queues.output.pop().unwrap();
+                // AE boundary: encode before the wire (stage-2 inputs only,
+                // paper §V — only the first ResNet exit has an AE).
+                let needs_encode = self.cfg.use_ae
+                    && task.stage == 2
+                    && !task.encoded
+                    && self.meta.ae.is_some();
+                if needs_encode {
+                    task.encoded = true;
+                }
+                let bytes = self.task_wire_bytes(&task);
+                task.hops += 1;
+                if self.in_window(now) {
+                    self.stats.offloaded_out += 1;
+                }
+                // Optimistic view update until the next gossip refresh.
+                if let Some(v) = self.views[m].as_mut() {
+                    v.input_len += 1;
+                }
+                out.push(Action::Send {
+                    to: m,
+                    payload: Payload::Task(task),
+                    bytes,
+                    needs_encode,
+                });
+                sent = true;
+                break;
+            }
+            self.scan_buf = scan;
+            if !sent {
+                // No neighbor accepted the head-of-line task. If local
+                // compute is starving, reclaim it for the input queue.
+                if !self.busy && self.queues.input.is_empty() {
+                    if let Some(t) = self.queues.output.pop() {
+                        self.queues.input.push(t);
+                        if let Some(a) = self.maybe_start() {
+                            out.push(a);
+                        }
+                    }
+                }
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared engine execution (driver-side helper)
+// ---------------------------------------------------------------------------
+
+/// Run one task through the engine the way both drivers must: decode AE
+/// payloads first, then either the single stage τ_k (MDI-Exit) or the whole
+/// chain (DDI). Returns the stage output and the exit point that fired.
+pub fn execute_task(
+    engine: &dyn InferenceEngine,
+    mode: Mode,
+    num_stages: usize,
+    task: &mut Task,
+) -> anyhow::Result<(StageOutput, usize)> {
+    if task.encoded {
+        if let Some(f) = task.features.take() {
+            match engine.decode(&f)? {
+                Some(dec) => task.features = Some(dec),
+                None => task.features = Some(f),
+            }
+        }
+        task.encoded = false;
+    }
+    match mode {
+        Mode::Ddi => {
+            // Whole model locally: chain every stage, exit at K.
+            let mut feats = task.features.clone();
+            let mut out = None;
+            for k in 1..=num_stages {
+                let o = engine.run_stage(k, task.sample, feats.as_ref())?;
+                feats = o.features.clone();
+                out = Some(o);
+            }
+            Ok((out.expect("model has at least one stage"), num_stages))
+        }
+        Mode::MdiExit => {
+            let o = engine.run_stage(task.stage, task.sample, task.features.as_ref())?;
+            Ok((o, task.stage))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::LinkSpec;
+
+    fn cfg_fixed(topology: &str, rate_hz: f64, threshold: f32) -> ExperimentConfig {
+        ExperimentConfig::new("tiny", topology, AdmissionMode::Fixed { rate_hz, threshold })
+    }
+
+    fn meta2() -> ModelMeta {
+        ModelMeta::synthetic(vec![0.002, 0.003], vec![12288, 8192])
+    }
+
+    fn topo(name: &str) -> Topology {
+        Topology::named(name, LinkSpec::wifi()).unwrap()
+    }
+
+    fn core(id: usize, cfg: &ExperimentConfig, name: &str) -> WorkerCore {
+        WorkerCore::new(id, cfg, meta2(), &topo(name), 8)
+    }
+
+    fn out(confidence: f32) -> StageOutput {
+        StageOutput { features: None, confidence, prediction: 3 }
+    }
+
+    #[test]
+    fn admission_rotates_samples_and_paces_fixed_rate() {
+        let cfg = cfg_fixed("local", 50.0, 0.9);
+        let mut w = core(0, &cfg, "local");
+        let (t1, dt1) = w.poll_admission(0.0);
+        let (t2, dt2) = w.poll_admission(dt1);
+        assert_eq!(t1.sample, 0);
+        assert_eq!(t2.sample, 1);
+        assert_ne!(t1.id, t2.id);
+        assert!((dt1 - 0.02).abs() < 1e-12);
+        assert!((dt2 - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn admitted_task_starts_compute_with_stage_cost() {
+        let cfg = cfg_fixed("local", 50.0, 0.9);
+        let mut w = core(0, &cfg, "local");
+        let (task, _) = w.poll_admission(0.0);
+        let acts = w.on_task(0.0, task, TaskOrigin::Admitted);
+        assert_eq!(acts.len(), 1);
+        match &acts[0] {
+            Action::StartCompute { task, est_cost_s } => {
+                assert_eq!(task.stage, 1);
+                // stage-1 cost 2 ms, ±3% noise, speed 1.0
+                assert!((0.0012..0.0028).contains(est_cost_s), "est {est_cost_s}");
+            }
+            other => panic!("expected StartCompute, got {other:?}"),
+        }
+        // Busy: a second arrival queues instead of double-starting.
+        let (t2, _) = w.poll_admission(0.1);
+        let acts = w.on_task(0.1, t2, TaskOrigin::Admitted);
+        assert!(acts.is_empty());
+        assert_eq!(w.input_len(), 1);
+    }
+
+    #[test]
+    fn confident_exit_records_at_source_and_sends_elsewhere() {
+        let cfg = cfg_fixed("2-node", 50.0, 0.9);
+        let mut src = core(0, &cfg, "2-node");
+        let (task, _) = src.poll_admission(0.0);
+        let started = src.on_task(0.0, task, TaskOrigin::Admitted);
+        let Action::StartCompute { task, .. } = started.into_iter().next().unwrap() else {
+            panic!("no compute");
+        };
+        let acts = src.on_compute_done(0.01, task, out(0.99), 1, 0.002);
+        assert!(matches!(acts[0], Action::RecordResult { .. }), "{acts:?}");
+
+        let mut remote = core(1, &cfg, "2-node");
+        let task = Task::initial(9, 0, None, 0.0);
+        let started = remote.on_task(0.0, task, TaskOrigin::Wire);
+        let Action::StartCompute { task, .. } = started.into_iter().next().unwrap() else {
+            panic!("no compute");
+        };
+        let acts = remote.on_compute_done(0.01, task, out(0.99), 1, 0.002);
+        match &acts[0] {
+            Action::Send { to: 0, payload: Payload::Result(r), bytes, .. } => {
+                assert_eq!(*bytes, RESULT_BYTES);
+                assert_eq!(r.exited_on, 1);
+            }
+            other => panic!("expected result send, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn final_exit_fires_regardless_of_confidence() {
+        let cfg = cfg_fixed("local", 50.0, 0.9);
+        let mut w = core(0, &cfg, "local");
+        let task = Task { stage: 2, ..Task::initial(1, 0, None, 0.0) };
+        w.busy = true; // as if StartCompute had been issued
+        let acts = w.on_compute_done(0.0, task, out(0.01), 2, 0.003);
+        assert!(matches!(acts[0], Action::RecordResult { .. }));
+    }
+
+    #[test]
+    fn low_confidence_with_busy_input_offloads_after_gossip() {
+        let cfg = cfg_fixed("2-node", 50.0, 0.9);
+        let mut w = core(0, &cfg, "2-node");
+        // Two queued tasks keep the input non-empty so Alg. 1 picks the
+        // output queue for the successor.
+        for i in 0..3 {
+            let (t, _) = w.poll_admission(i as f64 * 0.01);
+            w.on_task(i as f64 * 0.01, t, TaskOrigin::Admitted);
+        }
+        let task = Task::initial(50, 0, None, 0.0);
+        let acts = w.on_compute_done(0.05, task, out(0.10), 1, 0.002);
+        // Successor went to the output queue; neighbor view is unknown so
+        // the default (I_m = 0) applies: O_n = 1 > I_m = 0 opens the gate.
+        let sent = acts.iter().any(|a| {
+            matches!(a, Action::Send { to: 1, payload: Payload::Task(t), .. } if t.stage == 2)
+        });
+        assert!(sent, "expected a stage-2 task offload: {acts:?}");
+    }
+
+    #[test]
+    fn gossip_gate_refuses_loaded_neighbors() {
+        let cfg = cfg_fixed("2-node", 50.0, 0.9);
+        let mut w = core(0, &cfg, "2-node");
+        // Neighbor reports a long input queue: O_n = 1 <= I_m = 50 — the
+        // Alg. 2 gate must stay closed.
+        let _ = w.on_gossip(0.0, 1, 50, 0.01, 0.9);
+        for i in 0..3 {
+            let (t, _) = w.poll_admission(i as f64 * 0.01);
+            w.on_task(i as f64 * 0.01, t, TaskOrigin::Admitted);
+        }
+        let task = Task::initial(50, 0, None, 0.0);
+        let acts = w.on_compute_done(0.05, task, out(0.10), 1, 0.002);
+        let sent = acts
+            .iter()
+            .any(|a| matches!(a, Action::Send { payload: Payload::Task(_), .. }));
+        assert!(!sent, "gate should refuse: {acts:?}");
+        assert_eq!(w.output_len(), 1);
+    }
+
+    #[test]
+    fn gossip_from_source_propagates_t_e() {
+        let cfg = ExperimentConfig::new(
+            "tiny",
+            "2-node",
+            AdmissionMode::AdaptiveThreshold { rate_hz: 10.0, initial_t_e: 0.9, t_e_min: 0.05 },
+        );
+        let mut w = WorkerCore::new(1, &cfg, meta2(), &topo("2-node"), 8);
+        assert!((w.t_e() - 0.9).abs() < 1e-6);
+        let _ = w.on_gossip(0.0, 0, 0, 0.01, 0.42);
+        assert!((w.t_e() - 0.42).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adapt_tick_moves_controllers() {
+        let cfg = ExperimentConfig::new(
+            "tiny",
+            "local",
+            AdmissionMode::AdaptiveRate { threshold: 0.9, initial_mu_s: 1.0 },
+        );
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("local"), 8);
+        let mu0 = w.control_value();
+        let _ = w.on_adapt_tick(0.5); // empty queue: rate up, mu down
+        assert!(w.control_value() < mu0);
+        assert!(w.final_mu_s().is_some());
+        assert!(w.final_t_e().is_none());
+    }
+
+    #[test]
+    fn churn_leave_rehomes_queued_tasks_and_blocks_peers() {
+        let cfg = cfg_fixed("2-node", 400.0, 0.9);
+        let mut remote = core(1, &cfg, "2-node");
+        for i in 0..4 {
+            remote.on_task(0.0, Task::initial(i, 0, None, 0.0), TaskOrigin::Wire);
+        }
+        // One is computing; three are queued.
+        assert_eq!(remote.input_len(), 3);
+        let acts = remote.on_churn(1.0, 1, false);
+        assert_eq!(acts.len(), 3);
+        assert!(acts.iter().all(|a| matches!(a, Action::Rehome { .. })));
+        assert!(!remote.is_active());
+        // A late wire arrival also re-homes.
+        let acts = remote.on_task(1.1, Task::initial(99, 0, None, 1.0), TaskOrigin::Wire);
+        assert!(matches!(acts[0], Action::Rehome { .. }));
+
+        // The source hears about the leave and stops offloading to 1.
+        let mut src = core(0, &cfg, "2-node");
+        let _ = src.on_churn(1.0, 1, false);
+        for i in 0..3 {
+            let (t, _) = src.poll_admission(i as f64 * 0.001);
+            src.on_task(i as f64 * 0.001, t, TaskOrigin::Admitted);
+        }
+        let task = Task::initial(50, 0, None, 0.0);
+        let acts = src.on_compute_done(1.2, task, out(0.1), 1, 0.002);
+        assert!(
+            !acts.iter().any(|a| matches!(a, Action::Send { payload: Payload::Task(_), .. })),
+            "must not offload to a churned-out peer: {acts:?}"
+        );
+    }
+
+    #[test]
+    fn starving_worker_reclaims_output_head() {
+        let cfg = cfg_fixed("local", 50.0, 0.9);
+        let mut w = core(0, &cfg, "local");
+        // Input empty, not busy, a task stuck in output with no neighbors:
+        // the reclaim path must pull it back and start compute.
+        let stuck = Task { stage: 2, ..Task::initial(1, 0, None, 0.0) };
+        w.queues.output.push(stuck);
+        let mut acts = Vec::new();
+        w.try_offload(0.0, &mut acts);
+        assert_eq!(w.output_len(), 0, "head-of-line task reclaimed");
+        assert!(
+            matches!(acts.as_slice(), [Action::StartCompute { task, .. }] if task.stage == 2),
+            "{acts:?}"
+        );
+    }
+
+    #[test]
+    fn gossip_tick_broadcasts_state_to_active_neighbors() {
+        let cfg = cfg_fixed("3-node-mesh", 50.0, 0.9);
+        let mut w = core(0, &cfg, "3-node-mesh");
+        let acts = w.on_gossip_tick(0.0);
+        assert_eq!(acts.len(), 2);
+        for a in &acts {
+            match a {
+                Action::Send { payload: Payload::State { .. }, bytes, .. } => {
+                    assert_eq!(*bytes, STATE_BYTES);
+                }
+                other => panic!("expected state send, got {other:?}"),
+            }
+        }
+        let _ = w.on_churn(0.0, 2, false);
+        assert_eq!(w.on_gossip_tick(0.1).len(), 1);
+    }
+
+    #[test]
+    fn ddi_source_round_robins_whole_images() {
+        let mut cfg = cfg_fixed("3-node-mesh", 50.0, 0.9);
+        cfg.mode = Mode::Ddi;
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("3-node-mesh"), 8);
+        let mut targets = Vec::new();
+        for i in 0..3 {
+            let (t, _) = w.poll_admission(i as f64 * 0.02);
+            let acts = w.on_task(i as f64 * 0.02, t, TaskOrigin::Admitted);
+            match acts.first() {
+                Some(Action::Send { to, bytes, .. }) => {
+                    assert_eq!(*bytes, 12288, "whole image on the wire");
+                    targets.push(*to);
+                }
+                Some(Action::StartCompute { .. }) => targets.push(0),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        targets.sort_unstable();
+        assert_eq!(targets, vec![0, 1, 2], "round-robin covers all workers");
+    }
+}

@@ -82,6 +82,15 @@ impl Dataset {
     pub fn label(&self, i: usize) -> u8 {
         self.labels[i]
     }
+
+    /// Build an in-memory dataset (tests / synthetic workloads): `n`
+    /// labelled `h`×`w`×`c` images with deterministic pixel fill.
+    pub fn synthetic(n: usize, h: usize, w: usize, c: usize, labels: Vec<u8>) -> Dataset {
+        assert_eq!(labels.len(), n);
+        let pixels = (0..n * h * w * c).map(|i| (i % 256) as u8).collect();
+        let difficulty = (0..n).map(|i| i as f32 / n.max(1) as f32).collect();
+        Dataset { n, h, w, c, pixels, labels, difficulty }
+    }
 }
 
 /// Per-sample, per-exit oracle table: what the trained model would produce

@@ -8,9 +8,7 @@
 use anyhow::Result;
 
 use crate::artifact::Manifest;
-use crate::coordinator::{
-    run_from_artifacts, AdmissionMode, ExperimentConfig, Mode, OffloadPolicy,
-};
+use crate::coordinator::{AdmissionMode, ExperimentConfig, Mode, OffloadPolicy, Run};
 use crate::simnet::LinkSpec;
 
 /// One plotted point of a figure.
@@ -87,7 +85,7 @@ fn apply_opts(cfg: &mut ExperimentConfig, opts: &SweepOpts) {
 
 fn row_from(cfg: ExperimentConfig, series: &str, x: f64, manifest: &Manifest)
     -> Result<FigRow> {
-    let report = run_from_artifacts(cfg, manifest)?;
+    let report = Run::builder().config(cfg).manifest(manifest).execute()?;
     Ok(FigRow {
         series: series.to_string(),
         x,

@@ -9,7 +9,22 @@
 //!   data-admission controllers (Algs 3–4) — over a simulated edge network.
 //! * L2/L1 (`python/compile`, build-time only): multi-exit MobileNetV2-Lite
 //!   and ResNet-Lite with Pallas kernels, AOT-lowered per stage to HLO text
-//!   that [`runtime::xla_engine::XlaEngine`] compiles and executes via PJRT.
+//!   that the PJRT engine (`pjrt` feature) compiles and executes.
+//!
+//! The architecture is a single clock-agnostic state machine,
+//! [`coordinator::WorkerCore`], that makes every admission/gossip/exit/
+//! offload decision as explicit events-in/actions-out; two thin drivers — a
+//! discrete-event simulator in virtual time and a realtime threaded runtime
+//! on wallclock — map those actions onto their medium. Runs are launched
+//! through the [`coordinator::Run`] builder:
+//!
+//! ```ignore
+//! let report = Run::builder()
+//!     .config(cfg)
+//!     .manifest(&manifest)
+//!     .driver(Driver::Des)      // or Driver::Realtime
+//!     .execute()?;
+//! ```
 //!
 //! Start at [`coordinator`] for the algorithms, [`experiments`] for the
 //! figure reproductions, and `examples/quickstart.rs` for a guided tour.

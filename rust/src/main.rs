@@ -13,12 +13,8 @@ use anyhow::{bail, Context, Result};
 
 use mdi_exit::artifact::Manifest;
 use mdi_exit::cli::Args;
-use mdi_exit::coordinator::{
-    rt, run_from_artifacts, AdmissionMode, ExperimentConfig, ModelMeta,
-};
-use mdi_exit::dataset::Dataset;
+use mdi_exit::coordinator::{AdmissionMode, Driver, ExperimentConfig, Run};
 use mdi_exit::experiments as exp;
-use mdi_exit::runtime::xla_engine::XlaEngine;
 use mdi_exit::util::toml::Config as Toml;
 
 fn main() {
@@ -52,7 +48,8 @@ fn print_help() {
          SUBCOMMANDS\n\
            info        print the artifact manifest summary\n\
            run         one DES experiment     (--config cfg.toml | --model --topology ...)\n\
-           serve       realtime run on the compiled HLO stages (PJRT)\n\
+           serve       realtime threaded run (PJRT stages with --features pjrt,\n\
+                       oracle replay with cost emulation otherwise)\n\
            fig3..fig6  reproduce the paper's figures (DES sweeps)\n\
            ablations   autoencoder / offload-policy / T_O ablations\n\n\
          COMMON FLAGS\n\
@@ -126,7 +123,7 @@ fn cmd_run(args: &Args, artifacts: &str) -> Result<()> {
     let manifest = Manifest::load(artifacts)?;
     let cfg = build_config(args)?;
     let label = format!("{} on {}", cfg.model, cfg.topology);
-    let mut report = run_from_artifacts(cfg, &manifest)?;
+    let mut report = Run::builder().config(cfg).manifest(&manifest).execute()?;
     if args.has("trace") {
         // controller/queue timeline for plotting (t, control value, queue)
         let path = args.str_or("trace", "trace.json");
@@ -174,19 +171,20 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
     cfg.duration_s = args.f64_or("duration", 10.0)?;
     cfg.warmup_s = args.f64_or("warmup", 2.0)?;
     let info = manifest.model(&cfg.model)?;
-    let meta = ModelMeta::from_manifest(info);
-    let dataset = Dataset::load(manifest.path(&manifest.dataset.file))?;
     let use_ae = cfg.use_ae;
     let model = cfg.model.clone();
     let manifest_ref = &manifest;
-    println!("compiling {} stages per worker (PJRT CPU)...", info.num_stages);
+    println!("building {} stages per worker...", info.num_stages);
     let factory = move |worker: usize| -> Result<Box<dyn mdi_exit::runtime::InferenceEngine>> {
-        let eng = XlaEngine::load(manifest_ref, &model, use_ae)
-            .with_context(|| format!("worker {worker} engine"))?;
-        Ok(Box::new(eng) as Box<dyn mdi_exit::runtime::InferenceEngine>)
+        mdi_exit::runtime::default_engine(manifest_ref, &model, use_ae)
+            .with_context(|| format!("worker {worker} engine"))
     };
-    let out = rt::run_realtime(&cfg, &factory, &meta, &dataset)?;
-    let mut report = out.report;
+    let mut report = Run::builder()
+        .config(cfg.clone())
+        .manifest(&manifest)
+        .engine_factory(factory)
+        .driver(Driver::Realtime)
+        .execute()?;
     println!("realtime run: {} on {}", cfg.model, cfg.topology);
     println!("  completed  {:>8}  ({:.2} Hz)", report.completed, report.throughput_hz());
     println!("  accuracy   {:>8.4}", report.accuracy());

@@ -2,10 +2,11 @@
 //!
 //! Two engines implement the same trait:
 //!
-//! * [`xla_engine::XlaEngine`] — the real path: loads the AOT-compiled HLO
-//!   text artifacts, compiles them once on the PJRT CPU client, and executes
-//!   stages on feature tensors. Used by the examples, the end-to-end
-//!   integration tests, and the realtime driver.
+//! * `xla_engine::XlaEngine` (behind the `pjrt` cargo feature) — the real
+//!   path: loads the AOT-compiled HLO text artifacts, compiles them once on
+//!   the PJRT CPU client, and executes stages on feature tensors. Used by
+//!   the examples, the end-to-end integration tests, and the realtime
+//!   driver when the feature is enabled.
 //! * [`sim_engine::SimEngine`] — oracle replay: returns the *exact*
 //!   confidence/prediction the trained model produces for each (sample,
 //!   exit) from the build-time `exits_*.bin` table, without paying XLA
@@ -13,13 +14,16 @@
 //!   push tens of thousands of tasks through Algs 1–4 in virtual time.
 //!
 //! Both agree on the observable behaviour of the paper's system — the
-//! integration suite cross-checks them on the same samples.
+//! integration suite cross-checks them on the same samples. Code that just
+//! wants "the best engine this build has" calls [`default_engine`].
 
 pub mod sim_engine;
+#[cfg(feature = "pjrt")]
 pub mod xla_engine;
 
 use anyhow::Result;
 
+use crate::artifact::Manifest;
 use crate::tensor::Tensor;
 
 /// What a worker learns from processing task τ_k (Alg. 1 lines 3–4).
@@ -73,4 +77,31 @@ pub trait InferenceEngine {
 /// Per-thread engine constructor for the realtime driver: each worker
 /// thread builds (and compiles) its own engine, mirroring how each Jetson
 /// in the paper's testbed holds its own copy of its layers.
+///
+/// Note: as a bare alias this carries the `'static` object-lifetime
+/// default, so it suits owned factories (`Box<EngineFactory>`); APIs that
+/// accept *borrowed* factories (the `Run` builder's realtime path) spell
+/// the `dyn Fn` type inline to get the reference-scoped lifetime instead.
 pub type EngineFactory = dyn Fn(usize) -> Result<Box<dyn InferenceEngine>> + Send + Sync;
+
+/// The best engine this build can offer for `model`: the PJRT-compiled HLO
+/// stages when the `pjrt` feature is on, otherwise the oracle-replay engine
+/// with wallclock cost emulation at the manifest's measured stage costs
+/// (so realtime runs stay meaningful without an XLA toolchain).
+pub fn default_engine(
+    manifest: &Manifest,
+    model: &str,
+    use_ae: bool,
+) -> Result<Box<dyn InferenceEngine>> {
+    #[cfg(feature = "pjrt")]
+    {
+        Ok(Box::new(xla_engine::XlaEngine::load(manifest, model, use_ae)?))
+    }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let info = manifest.model(model)?;
+        let costs: Vec<f64> = info.stages.iter().map(|s| s.cost_ms / 1e3).collect();
+        let eng = sim_engine::SimEngine::load(manifest, model, use_ae)?.with_costs(costs, 1.0);
+        Ok(Box::new(eng))
+    }
+}

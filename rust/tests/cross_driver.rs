@@ -1,0 +1,179 @@
+//! Cross-driver equivalence: the DES and realtime drivers execute the
+//! *same* `WorkerCore`, so on the same seed, topology, and oracle table
+//! they must report consistent behaviour — exit split, accuracy, offload
+//! activity — even though one runs in virtual time and the other on OS
+//! threads with real link delays.
+//!
+//! Entirely engine- and artifact-free: a synthetic oracle table drives
+//! both runs through the `Run` builder.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use mdi_exit::coordinator::{
+    AdmissionMode, Driver, ExperimentConfig, ModelMeta, Run, RunReport,
+};
+use mdi_exit::dataset::{Dataset, ExitTable};
+use mdi_exit::runtime::sim_engine::SimEngine;
+use mdi_exit::runtime::InferenceEngine;
+
+/// The realtime runs busy-spin one thread per worker for cost emulation;
+/// running the three tests concurrently starves them of cores on small CI
+/// runners and flakes the throughput assertions. Serialize them.
+static WALLCLOCK: Mutex<()> = Mutex::new(());
+
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    WALLCLOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// 8 samples x 2 exits: even samples confident at exit 1 (correct), odd
+/// samples only at exit 2 — a deterministic 50/50 exit split.
+fn oracle() -> (ExitTable, Vec<u8>) {
+    let n = 8;
+    let mut conf = Vec::new();
+    let mut pred = Vec::new();
+    let labels: Vec<u8> = (0..n as u8).map(|i| i % 10).collect();
+    for i in 0..n {
+        if i % 2 == 0 {
+            conf.extend([0.97f32, 0.99]);
+            pred.extend([labels[i], labels[i]]);
+        } else {
+            conf.extend([0.30f32, 0.95]);
+            pred.extend([labels[i], labels[i]]);
+        }
+    }
+    (ExitTable::synthetic(n, 2, conf, pred), labels)
+}
+
+fn meta() -> ModelMeta {
+    ModelMeta::synthetic(vec![0.002, 0.003], vec![12288, 8192])
+}
+
+fn cfg(topology: &str, rate_hz: f64, seconds: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(
+        "tiny",
+        topology,
+        AdmissionMode::Fixed { rate_hz, threshold: 0.9 },
+    );
+    cfg.duration_s = seconds;
+    cfg.warmup_s = 0.5;
+    cfg.seed = 7;
+    cfg
+}
+
+fn run_des(cfg: ExperimentConfig, labels: &[u8]) -> RunReport {
+    let (table, _) = oracle();
+    let engine = SimEngine::from_table(table, false);
+    Run::builder()
+        .config(cfg)
+        .model(meta())
+        .engine(&engine)
+        .labels(labels)
+        .driver(Driver::Des)
+        .execute()
+        .expect("DES run")
+}
+
+fn run_rt(cfg: ExperimentConfig, labels: &[u8]) -> RunReport {
+    let ds = Dataset::synthetic(labels.len(), 2, 2, 3, labels.to_vec());
+    let m = meta();
+    let costs = m.stage_cost_s.clone();
+    let factory = move |_w: usize| -> Result<Box<dyn InferenceEngine>> {
+        let (table, _) = oracle();
+        // Wallclock cost emulation at the same per-stage costs the DES
+        // charges in virtual time.
+        let eng = SimEngine::from_table(table, false).with_costs(costs.clone(), 1.0);
+        Ok(Box::new(eng) as Box<dyn InferenceEngine>)
+    };
+    Run::builder()
+        .config(cfg)
+        .model(m)
+        .engine_factory(factory)
+        .dataset(&ds)
+        .driver(Driver::Realtime)
+        .execute()
+        .expect("realtime run")
+}
+
+#[test]
+fn des_and_realtime_agree_on_exit_split_and_accuracy() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    // Under-loaded single node: both drivers must complete nearly all
+    // admissions with the oracle's deterministic 50/50 exit split.
+    let des = run_des(cfg("local", 100.0, 5.0), &labels);
+    let rt = run_rt(cfg("local", 100.0, 2.5), &labels);
+
+    assert!(des.completed > 300, "DES completed {}", des.completed);
+    assert!(rt.completed > 100, "realtime completed {}", rt.completed);
+
+    let (fd, fr) = (des.exit_fractions(), rt.exit_fractions());
+    assert!(
+        (fd[0] - fr[0]).abs() < 0.10,
+        "exit-1 fraction diverged: DES {fd:?} vs realtime {fr:?}"
+    );
+    assert!((fd[0] - 0.5).abs() < 0.05, "DES split {fd:?}");
+    assert!((fr[0] - 0.5).abs() < 0.05, "realtime split {fr:?}");
+
+    // The oracle predicts the true label at every exit: accuracy 1.0 on
+    // both drivers, bit-for-bit.
+    assert!((des.accuracy() - 1.0).abs() < 1e-9, "DES accuracy {}", des.accuracy());
+    assert!((rt.accuracy() - 1.0).abs() < 1e-9, "realtime accuracy {}", rt.accuracy());
+}
+
+#[test]
+fn des_and_realtime_agree_on_offload_behaviour() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    // Overload a 3-node mesh far past one node's capacity (~285 Hz for
+    // these costs): both drivers must push work to the neighbors through
+    // the same Alg. 2 in the shared core.
+    let des = run_des(cfg("3-node-mesh", 900.0, 6.0), &labels);
+    let rt = run_rt(cfg("3-node-mesh", 900.0, 3.0), &labels);
+
+    for (name, r) in [("DES", &des), ("realtime", &rt)] {
+        assert!(
+            r.per_worker[0].offloaded_out > 0,
+            "{name}: overloaded source never offloaded"
+        );
+        let remote: u64 = r.per_worker[1..].iter().map(|w| w.processed).sum();
+        assert!(remote > 0, "{name}: neighbors never processed tasks");
+        assert!(r.completed > 0, "{name}: nothing completed");
+    }
+
+    // Offload intensity is medium-dependent (virtual vs real link delays),
+    // but both must offload a nontrivial share of processed work.
+    for (name, r) in [("DES", &des), ("realtime", &rt)] {
+        let processed: u64 = r.per_worker.iter().map(|w| w.processed).sum();
+        let offloaded: u64 = r.per_worker.iter().map(|w| w.offloaded_out).sum();
+        assert!(
+            offloaded as f64 >= 0.02 * processed as f64,
+            "{name}: offloads {offloaded} vs processed {processed}"
+        );
+    }
+}
+
+#[test]
+fn realtime_churn_rehomes_like_des() {
+    use mdi_exit::simnet::ChurnEvent;
+    let _g = serialized();
+    let (_, labels) = oracle();
+    // Worker 1 leaves mid-run while holding queued work (2-node at 3x the
+    // pair's capacity): both drivers must re-home instead of losing tasks.
+    let churn = vec![ChurnEvent { at_s: 1.0, worker: 1, join: false }];
+
+    let mut c = cfg("2-node", 900.0, 4.0);
+    c.warmup_s = 0.0;
+    c.churn = churn.clone();
+    let des = run_des(c, &labels);
+
+    let mut c = cfg("2-node", 900.0, 2.5);
+    c.warmup_s = 0.0;
+    c.churn = churn;
+    let rt = run_rt(c, &labels);
+
+    assert!(des.rehomed > 0, "DES: no re-homing on churn");
+    assert!(rt.rehomed > 0, "realtime: no re-homing on churn (rehomed = 0)");
+    assert!(des.completed > 0 && rt.completed > 0);
+}

@@ -1,11 +1,11 @@
 //! Integration: the realtime threaded driver (wallclock, simnet transport)
-//! with the oracle engine — fast enough for CI, same code path as the
-//! XLA-backed examples.
+//! with the oracle engine, driven through the `Run` builder — fast enough
+//! for CI, same code path as the XLA-backed examples.
 
 use anyhow::Result;
 
 use mdi_exit::artifact::Manifest;
-use mdi_exit::coordinator::{rt, AdmissionMode, ExperimentConfig, ModelMeta};
+use mdi_exit::coordinator::{AdmissionMode, Driver, ExperimentConfig, ModelMeta, Run, RunReport};
 use mdi_exit::dataset::Dataset;
 use mdi_exit::runtime::sim_engine::SimEngine;
 use mdi_exit::runtime::InferenceEngine;
@@ -22,7 +22,7 @@ fn setup() -> Option<(Manifest, Dataset)> {
     Some((manifest, ds))
 }
 
-fn run(topology: &str, admission: AdmissionMode, seconds: f64) -> Option<rt::RtOutcome> {
+fn run(topology: &str, admission: AdmissionMode, seconds: f64) -> Option<RunReport> {
     let (manifest, ds) = setup()?;
     let info = manifest.model("mobilenetv2l").unwrap();
     let meta = ModelMeta::from_manifest(info);
@@ -38,16 +38,23 @@ fn run(topology: &str, admission: AdmissionMode, seconds: f64) -> Option<rt::RtO
             .with_costs(costs.clone(), 1.0);
         Ok(Box::new(eng) as Box<dyn InferenceEngine>)
     };
-    Some(rt::run_realtime(&cfg, &factory, &meta, &ds).expect("realtime run"))
+    let report = Run::builder()
+        .config(cfg)
+        .model(meta)
+        .engine_factory(factory)
+        .dataset(&ds)
+        .driver(Driver::Realtime)
+        .execute()
+        .expect("realtime run");
+    Some(report)
 }
 
 #[test]
 fn realtime_local_completes_with_high_accuracy() {
-    let Some(out) = run("local", AdmissionMode::Fixed { rate_hz: 200.0, threshold: 0.9 }, 2.0)
+    let Some(r) = run("local", AdmissionMode::Fixed { rate_hz: 200.0, threshold: 0.9 }, 2.0)
     else {
         return;
     };
-    let r = out.report;
     assert!(r.completed > 100, "completed {}", r.completed);
     assert!(r.accuracy() > 0.8, "accuracy {}", r.accuracy());
     let hist: u64 = r.exit_histogram.iter().sum();
@@ -56,12 +63,11 @@ fn realtime_local_completes_with_high_accuracy() {
 
 #[test]
 fn realtime_mesh_distributes_work() {
-    let Some(out) =
+    let Some(r) =
         run("3-node-mesh", AdmissionMode::Fixed { rate_hz: 3000.0, threshold: 0.95 }, 3.0)
     else {
         return;
     };
-    let r = out.report;
     assert!(r.completed > 500, "completed {}", r.completed);
     // overloaded source must have offloaded to both neighbors
     assert!(
@@ -75,15 +81,35 @@ fn realtime_mesh_distributes_work() {
 
 #[test]
 fn realtime_rate_adaptation_settles() {
-    let Some(out) = run(
+    let Some(r) = run(
         "2-node",
         AdmissionMode::AdaptiveRate { threshold: 0.9, initial_mu_s: 0.1 },
         3.0,
     ) else {
         return;
     };
-    let r = out.report;
     assert!(r.completed > 50, "completed {}", r.completed);
     let mu = r.final_mu_s.expect("controller state");
     assert!((1e-4..60.0).contains(&mu));
+}
+
+#[test]
+fn realtime_default_factory_comes_from_manifest() {
+    // No explicit engine factory: the builder falls back to oracle replay
+    // with cost emulation derived from the manifest.
+    let Some((manifest, _ds)) = setup() else { return };
+    let mut cfg = ExperimentConfig::new(
+        "mobilenetv2l",
+        "local",
+        AdmissionMode::Fixed { rate_hz: 100.0, threshold: 0.9 },
+    );
+    cfg.duration_s = 1.5;
+    cfg.warmup_s = 0.25;
+    let r = Run::builder()
+        .config(cfg)
+        .manifest(&manifest)
+        .driver(Driver::Realtime)
+        .execute()
+        .expect("realtime run");
+    assert!(r.completed > 20, "completed {}", r.completed);
 }

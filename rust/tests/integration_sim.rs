@@ -5,7 +5,7 @@
 //! the same claims EXPERIMENTS.md records quantitatively.
 
 use mdi_exit::artifact::Manifest;
-use mdi_exit::coordinator::{run_from_artifacts, AdmissionMode, ExperimentConfig, Mode};
+use mdi_exit::coordinator::{AdmissionMode, ExperimentConfig, Mode, Run, RunReport};
 use mdi_exit::experiments::{self, SweepOpts};
 
 fn manifest() -> Option<Manifest> {
@@ -16,6 +16,10 @@ fn manifest() -> Option<Manifest> {
             None
         }
     }
+}
+
+fn run_from_artifacts(cfg: ExperimentConfig, manifest: &Manifest) -> anyhow::Result<RunReport> {
+    Run::builder().config(cfg).manifest(manifest).execute()
 }
 
 fn quick() -> SweepOpts {

@@ -1,5 +1,8 @@
 //! Integration over the *real* runtime: AOT HLO artifacts compiled and
 //! executed on PJRT, cross-checked against the Python-side oracle tables.
+//! Requires the `pjrt` cargo feature (the default build carries no XLA
+//! toolchain); the whole file compiles away without it.
+#![cfg(feature = "pjrt")]
 //!
 //! This is the proof that the three layers compose: the Pallas kernels (L1)
 //! inside the JAX stage functions (L2) lowered to HLO text, loaded and

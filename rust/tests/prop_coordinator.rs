@@ -5,7 +5,7 @@ use mdi_exit::coordinator::policy::{
     self, AdaptConfig, ExitDecision, NeighborView, OffloadPolicy, RateController,
     ThresholdController,
 };
-use mdi_exit::coordinator::{AdmissionMode, ExperimentConfig, ModelMeta, SampleStore, Simulation};
+use mdi_exit::coordinator::{AdmissionMode, Driver, ExperimentConfig, ModelMeta, Run};
 use mdi_exit::dataset::ExitTable;
 use mdi_exit::runtime::sim_engine::SimEngine;
 use mdi_exit::testkit::prop::{F64In, Gen, Prop, UsizeIn, Verdict};
@@ -214,13 +214,16 @@ fn prop_simulation_conservation_and_sanity() {
             cfg.seed = seed;
             let meta =
                 ModelMeta::synthetic(vec![0.002, 0.002, 0.002], vec![12288, 8192, 4096]);
-            let store = SampleStore { labels: &labels, images: None };
-            let r = match Simulation::new(cfg, &engine, meta, store) {
-                Ok(s) => match s.run() {
-                    Ok(r) => r,
-                    Err(e) => return Verdict::Fail(format!("run failed: {e:#}")),
-                },
-                Err(e) => return Verdict::Fail(format!("construct failed: {e:#}")),
+            let r = match Run::builder()
+                .config(cfg)
+                .model(meta)
+                .engine(&engine)
+                .labels(&labels)
+                .driver(Driver::Des)
+                .execute()
+            {
+                Ok(r) => r,
+                Err(e) => return Verdict::Fail(format!("run failed: {e:#}")),
             };
             // results never exceed admissions
             if r.completed > r.admitted {
@@ -267,8 +270,13 @@ fn prop_no_ee_exits_only_at_final() {
         cfg.duration_s = 8.0;
         cfg.warmup_s = 0.0;
         let meta = ModelMeta::synthetic(vec![0.002, 0.002, 0.002], vec![12288, 8192, 4096]);
-        let store = SampleStore { labels: &labels, images: None };
-        let r = Simulation::new(cfg, &engine, meta, store).unwrap().run().unwrap();
+        let r = Run::builder()
+            .config(cfg)
+            .model(meta)
+            .engine(&engine)
+            .labels(&labels)
+            .execute()
+            .unwrap();
         let early: u64 = r.exit_histogram[..2].iter().sum();
         Verdict::check(early == 0, || format!("early exits under no-EE: {:?}", r.exit_histogram))
     });
