@@ -1,0 +1,96 @@
+//! Scenario: two traffic classes share an overloaded edge mesh —
+//! interactive requests (class 0, latency-critical) and bulk analytics
+//! (class 1, best-effort). Priority-Aware MDI (arXiv 2412.12371) shows
+//! that class-aware queueing at each worker decides which traffic meets
+//! its deadline under overload; this example reproduces that effect with
+//! the `sched` subsystem on the paper's MobileNetV2 pipeline.
+//!
+//! Three runs on the same seed and workload:
+//!   * FIFO            — both classes share one queue (the paper's system);
+//!   * StrictPriority  — interactive traffic jumps the bulk backlog;
+//!   * EDF + drop-late — per-class deadline budgets; hopelessly late bulk
+//!                       work is aged out instead of wasting compute.
+//!
+//! Run: `cargo run --release --example priority_traffic`
+
+use anyhow::Result;
+
+use mdi_exit::artifact::Manifest;
+use mdi_exit::coordinator::{AdmissionMode, ExperimentConfig, Run, RunReport};
+use mdi_exit::sched::DisciplineKind;
+
+fn main() -> Result<()> {
+    let manifest = Manifest::load(mdi_exit::artifacts_dir())?;
+    let run = |cfg: ExperimentConfig| -> Result<RunReport> {
+        Run::builder().config(cfg).manifest(&manifest).execute()
+    };
+
+    // 1.5x the mesh's sustainable rate: the backlog has to land somewhere,
+    // and the queue discipline decides on whom.
+    let mut base = ExperimentConfig::new(
+        "mobilenetv2l",
+        "5-node-mesh",
+        AdmissionMode::Fixed { rate_hz: 630.0, threshold: 0.9 },
+    );
+    base.duration_s = 60.0;
+    base.warmup_s = 10.0;
+    base.compute_scale = 0.125;
+    base.sched = base.sched.with_classes(2);
+    // Interactive budget 150 ms, bulk budget 5 s (EDF deadline stamps).
+    base.sched.class_deadline_s = vec![0.15, 5.0];
+
+    println!(
+        "priority_traffic: 5-node mesh @ 630 Hz (overloaded), MobileNetV2-Lite,\n\
+         class 0 = interactive (every other admission), class 1 = bulk\n"
+    );
+    println!(
+        "{:<22} {:>9} {:>11} {:>11} {:>11} {:>9}",
+        "discipline", "tput(Hz)", "c0 p95(ms)", "c1 p95(ms)", "accuracy", "dropped"
+    );
+
+    let print_run = |name: &str, mut r: RunReport| -> (f64, f64) {
+        let (c0, c1) = {
+            let [a, b] = &mut r.per_class[..] else { panic!("two classes") };
+            (a.latency.p95(), b.latency.p95())
+        };
+        println!(
+            "{name:<22} {:>9.1} {:>11.2} {:>11.2} {:>11.4} {:>9}",
+            r.throughput_hz(),
+            c0 * 1e3,
+            c1 * 1e3,
+            r.accuracy(),
+            r.dropped
+        );
+        (c0, c1)
+    };
+
+    let fifo = run(base.clone())?;
+    let (fifo_c0, _) = print_run("fifo", fifo);
+
+    let mut prio = base.clone();
+    prio.sched.discipline = DisciplineKind::StrictPriority;
+    let (prio_c0, prio_c1) = print_run("strict-priority", run(prio)?);
+
+    let mut edf = base.clone();
+    edf.sched.discipline = DisciplineKind::Edf { drop_late: true };
+    let edf_report = run(edf)?;
+    let edf_dropped = edf_report.dropped;
+    print_run("edf + drop-late", edf_report);
+
+    println!(
+        "\nUnder overload FIFO spreads the backlog over everyone; strict\n\
+         priority keeps the interactive class fast at the bulk class's\n\
+         expense; EDF additionally sheds bulk work that already missed its\n\
+         budget instead of computing worthless results."
+    );
+    anyhow::ensure!(
+        prio_c0 < fifo_c0,
+        "priority must beat FIFO for class 0: {prio_c0} vs {fifo_c0}"
+    );
+    anyhow::ensure!(
+        prio_c0 < prio_c1,
+        "priority must separate the classes: {prio_c0} vs {prio_c1}"
+    );
+    anyhow::ensure!(edf_dropped > 0, "overloaded EDF with drop-late should shed late work");
+    Ok(())
+}

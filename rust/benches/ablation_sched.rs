@@ -1,0 +1,194 @@
+//! Scheduling ablation: FIFO vs StrictPriority vs EDF vs batched FIFO on
+//! the same seed and workload, on both drivers.
+//!
+//! Two claims are asserted (so CI fails on a scheduling regression, not
+//! just a drifting BENCH history):
+//!
+//! * batching ≥ 1.5× completed throughput over unbatched FIFO on the DES
+//!   driver (and a conservative ≥ 1.3× on the realtime driver);
+//! * StrictPriority gives class 0 a lower p95 latency than FIFO gives the
+//!   same traffic under overload, on *both* drivers.
+//!
+//! Entirely artifact-free: a synthetic oracle drives both drivers through
+//! the `Run` builder. `MDI_BENCH_QUICK=1` shrinks the windows for CI.
+
+use anyhow::Result;
+
+use mdi_exit::coordinator::{
+    AdmissionMode, Driver, ExperimentConfig, ModelMeta, Run, RunReport,
+};
+use mdi_exit::dataset::{Dataset, ExitTable};
+use mdi_exit::runtime::sim_engine::SimEngine;
+use mdi_exit::runtime::InferenceEngine;
+use mdi_exit::sched::{BatchPolicy, DisciplineKind};
+
+/// Stage costs shared by every run: 2 ms + 3 ms, speed 1.0.
+const COSTS: [f64; 2] = [0.002, 0.003];
+
+/// `n` samples × 2 exits; every `confident_of`-th sample needs stage 2,
+/// the rest exit at 1. Predictions always match the label.
+fn oracle(n: usize, confident_of: usize) -> (ExitTable, Vec<u8>) {
+    let mut conf = Vec::new();
+    let mut pred = Vec::new();
+    let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+    for (i, &l) in labels.iter().enumerate() {
+        if i % confident_of == confident_of - 1 {
+            conf.extend([0.30f32, 0.95]);
+        } else {
+            conf.extend([0.97f32, 0.99]);
+        }
+        pred.extend([l, l]);
+    }
+    (ExitTable::synthetic(n, 2, conf, pred), labels)
+}
+
+fn meta() -> ModelMeta {
+    ModelMeta::synthetic(COSTS.to_vec(), vec![12288, 8192])
+}
+
+fn base_cfg(rate_hz: f64, seconds: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(
+        "sched-ablation",
+        "local",
+        AdmissionMode::Fixed { rate_hz, threshold: 0.9 },
+    );
+    cfg.duration_s = seconds;
+    cfg.warmup_s = 0.5;
+    cfg.seed = 7;
+    cfg
+}
+
+fn run_des(cfg: ExperimentConfig, n: usize, confident_of: usize) -> RunReport {
+    let (table, labels) = oracle(n, confident_of);
+    let engine = SimEngine::from_table(table, false);
+    Run::builder()
+        .config(cfg)
+        .model(meta())
+        .engine(&engine)
+        .labels(&labels)
+        .driver(Driver::Des)
+        .execute()
+        .expect("DES run")
+}
+
+fn run_rt(cfg: ExperimentConfig, n: usize, confident_of: usize) -> RunReport {
+    let (_, labels) = oracle(n, confident_of);
+    let ds = Dataset::synthetic(n, 2, 2, 3, labels);
+    let factory = move |_w: usize| -> Result<Box<dyn InferenceEngine>> {
+        let (table, _) = oracle(n, confident_of);
+        let eng = SimEngine::from_table(table, false).with_costs(COSTS.to_vec(), 1.0);
+        Ok(Box::new(eng) as Box<dyn InferenceEngine>)
+    };
+    Run::builder()
+        .config(cfg)
+        .model(meta())
+        .engine_factory(factory)
+        .dataset(&ds)
+        .driver(Driver::Realtime)
+        .execute()
+        .expect("realtime run")
+}
+
+fn row(name: &str, driver: &str, r: &mut RunReport) {
+    let (c0, c1) = if r.per_class.len() > 1 {
+        let [a, b] = &mut r.per_class[..] else { unreachable!() };
+        (a.latency.p95() * 1e3, b.latency.p95() * 1e3)
+    } else {
+        (f64::NAN, f64::NAN)
+    };
+    println!(
+        "{name:<26} {driver:<9} {:>10.1} {:>10.2} {:>10.2} {:>10.2} {:>8}",
+        r.throughput_hz(),
+        r.latency.p95() * 1e3,
+        c0,
+        c1,
+        r.dropped
+    );
+}
+
+fn main() {
+    let quick = std::env::var_os("MDI_BENCH_QUICK").is_some();
+    let (des_s, rt_s) = if quick { (6.0, 1.2) } else { (30.0, 3.0) };
+    // The DES legs are virtual-time-deterministic, so their margins are
+    // tight everywhere; the realtime legs run short windows on shared CI
+    // cores, so quick mode loosens their margins to avoid jitter flakes
+    // while still catching real regressions.
+    let (rt_gain_floor, rt_prio_factor) = if quick { (1.15, 0.8) } else { (1.3, 0.5) };
+
+    println!("== bench: sched ablation (same seed, 2-stage synthetic model) ==");
+    println!(
+        "{:<26} {:<9} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "scenario", "driver", "tput(Hz)", "p95(ms)", "c0p95(ms)", "c1p95(ms)", "dropped"
+    );
+
+    // -- batching: overload one worker, 7/8 of traffic exits at stage 1 ---
+    let overload = 2500.0;
+    let mut fifo_des = run_des(base_cfg(overload, des_s), 16, 8);
+    let mut cfg = base_cfg(overload, des_s);
+    cfg.sched.batch = BatchPolicy::batched(8);
+    let mut batch_des = run_des(cfg, 16, 8);
+    row("fifo (unbatched)", "DES", &mut fifo_des);
+    row("fifo + batch 8", "DES", &mut batch_des);
+
+    let mut fifo_rt = run_rt(base_cfg(overload, rt_s), 16, 8);
+    let mut cfg = base_cfg(overload, rt_s);
+    cfg.sched.batch = BatchPolicy::batched(8);
+    let mut batch_rt = run_rt(cfg, 16, 8);
+    row("fifo (unbatched)", "realtime", &mut fifo_rt);
+    row("fifo + batch 8", "realtime", &mut batch_rt);
+
+    let gain_des = batch_des.completed as f64 / fifo_des.completed.max(1) as f64;
+    let gain_rt = batch_rt.completed as f64 / fifo_rt.completed.max(1) as f64;
+    println!("  -> batching gain: DES {gain_des:.2}x, realtime {gain_rt:.2}x");
+    assert!(gain_des >= 1.5, "DES batching gain {gain_des:.2}x < 1.5x");
+    assert!(
+        gain_rt >= rt_gain_floor,
+        "realtime batching gain {gain_rt:.2}x < {rt_gain_floor}x"
+    );
+
+    // -- priority classes: class 0 fits capacity, class 1 overloads it ----
+    // 480 Hz round-robin over two classes on the 50/50 oracle: class 0 is
+    // the even (exit-1, 2 ms) samples at 240 Hz — within the worker's
+    // capacity — while class 1 needs both stages and backs up behind it.
+    let classes = |mut cfg: ExperimentConfig, d: DisciplineKind| {
+        cfg.sched = cfg.sched.with_classes(2);
+        cfg.sched.discipline = d;
+        cfg
+    };
+    let mut fifo_des = run_des(classes(base_cfg(480.0, des_s), DisciplineKind::Fifo), 8, 2);
+    let mut prio_des =
+        run_des(classes(base_cfg(480.0, des_s), DisciplineKind::StrictPriority), 8, 2);
+    row("fifo, 2 classes", "DES", &mut fifo_des);
+    row("strict-priority", "DES", &mut prio_des);
+
+    let mut fifo_rt = run_rt(classes(base_cfg(480.0, rt_s), DisciplineKind::Fifo), 8, 2);
+    let mut prio_rt =
+        run_rt(classes(base_cfg(480.0, rt_s), DisciplineKind::StrictPriority), 8, 2);
+    row("fifo, 2 classes", "realtime", &mut fifo_rt);
+    row("strict-priority", "realtime", &mut prio_rt);
+
+    for (driver, factor, fifo, prio) in [
+        ("DES", 0.5, &mut fifo_des, &mut prio_des),
+        ("realtime", rt_prio_factor, &mut fifo_rt, &mut prio_rt),
+    ] {
+        let fifo_c0 = fifo.per_class[0].latency.p95();
+        let prio_c0 = prio.per_class[0].latency.p95();
+        println!(
+            "  -> {driver}: class-0 p95 {:.2} ms (fifo) vs {:.2} ms (priority)",
+            fifo_c0 * 1e3,
+            prio_c0 * 1e3
+        );
+        assert!(
+            prio_c0 < factor * fifo_c0,
+            "{driver}: priority class-0 p95 {prio_c0} not below {factor} x FIFO {fifo_c0}"
+        );
+    }
+
+    // -- EDF with per-class budgets: late bulk traffic is aged out --------
+    let mut cfg = classes(base_cfg(480.0, des_s), DisciplineKind::Edf { drop_late: true });
+    cfg.sched.class_deadline_s = vec![0.05, 2.0];
+    let mut edf_des = run_des(cfg, 8, 2);
+    row("edf (50ms/2s, drop)", "DES", &mut edf_des);
+    let by_class: u64 = edf_des.per_class.iter().map(|c| c.completed).sum();
+    assert_eq!(by_class, edf_des.completed, "per-class counters conserve");
+}

@@ -122,7 +122,11 @@ fn bench_xla_stage(suite: &mut BenchSuite) {
 }
 
 fn main() {
-    let mut suite = BenchSuite::new("L3 hot paths").warmup(2).iters(12);
+    // CI smoke mode: a handful of iterations so scheduling/hot-path
+    // regressions fail fast without burning runner minutes.
+    let quick = std::env::var_os("MDI_BENCH_QUICK").is_some();
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 12) };
+    let mut suite = BenchSuite::new("L3 hot paths").warmup(warmup).iters(iters);
     bench_queues(&mut suite);
     bench_offload_scan(&mut suite);
     bench_des_throughput(&mut suite);

@@ -3,8 +3,9 @@
 use anyhow::{bail, Result};
 
 use super::policy::{AdaptConfig, OffloadPolicy};
+use crate::sched::{DisciplineKind, SchedConfig};
 use crate::simnet::{ChurnEvent, LinkSpec};
-use crate::util::toml::Config as Toml;
+use crate::util::toml::{Config as Toml, Value};
 
 /// How the source admits data (paper §IV.B — the two scenarios).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -67,6 +68,9 @@ pub struct ExperimentConfig {
     /// Worker join/leave schedule (paper §III: "workers join and leave the
     /// system anytime"). Applied on top of the named topology.
     pub churn: Vec<ChurnEvent>,
+    /// Queue discipline / traffic classes / batching (`crate::sched`).
+    /// The default (FIFO, one class, batch 1) reproduces the seed system.
+    pub sched: SchedConfig,
     pub seed: u64,
 }
 
@@ -90,6 +94,7 @@ impl ExperimentConfig {
             compute_scale: 1.0,
             medium_contention: 1.0,
             churn: Vec::new(),
+            sched: SchedConfig::default(),
             seed: 7,
         }
     }
@@ -135,6 +140,9 @@ impl ExperimentConfig {
         }
         if self.medium_contention < 0.0 {
             bail!("medium_contention must be non-negative");
+        }
+        if let Err(e) = self.sched.validate() {
+            bail!("sched config: {e}");
         }
         Ok(())
     }
@@ -194,9 +202,53 @@ impl ExperimentConfig {
         cfg.gossip_interval_s = toml.f64_or("gossip_interval_s", 0.1);
         cfg.compute_scale = toml.f64_or("compute_scale", 1.0);
         cfg.medium_contention = toml.f64_or("net.medium_contention", 1.0);
+        cfg.sched = Self::sched_from_toml(toml)?;
         cfg.seed = toml.i64_or("seed", 7) as u64;
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// `[sched]` section: discipline, classes, deadline budgets, batching.
+    fn sched_from_toml(toml: &Toml) -> Result<SchedConfig> {
+        let discipline = match toml.str_or("sched.discipline", "fifo") {
+            "fifo" => DisciplineKind::Fifo,
+            "strict-priority" | "priority" => DisciplineKind::StrictPriority,
+            "edf" => DisciplineKind::Edf { drop_late: toml.bool_or("sched.drop_late", false) },
+            other => bail!("unknown sched.discipline {other:?}"),
+        };
+        let classes = toml.i64_or("sched.num_classes", 1);
+        if !(1..=255).contains(&classes) {
+            bail!("sched.num_classes {classes} outside 1..=255");
+        }
+        let mut sched =
+            SchedConfig { discipline, ..SchedConfig::default() }.with_classes(classes as u8);
+        // Deadline budget: a scalar broadcasts to every class; an array
+        // gives one budget per class.
+        match toml.get("sched.class_deadline_s") {
+            None => {}
+            Some(Value::Arr(vs)) => {
+                let ds: Option<Vec<f64>> = vs.iter().map(|v| v.as_f64()).collect();
+                let ds = match ds {
+                    Some(ds) => ds,
+                    None => bail!("sched.class_deadline_s entries must be numbers"),
+                };
+                if ds.len() != sched.num_classes as usize {
+                    bail!(
+                        "sched.class_deadline_s has {} entries for {} classes",
+                        ds.len(),
+                        sched.num_classes
+                    );
+                }
+                sched.class_deadline_s = ds;
+            }
+            Some(v) => match v.as_f64() {
+                Some(d) => sched.class_deadline_s = vec![d; sched.num_classes as usize],
+                None => bail!("sched.class_deadline_s must be a number or array"),
+            },
+        }
+        sched.batch.max_batch = toml.usize_or("sched.max_batch", 1);
+        sched.batch.marginal = toml.f64_or("sched.batch_marginal", sched.batch.marginal);
+        Ok(sched)
     }
 
     /// The fixed threshold in effect, if the mode has one.
@@ -273,6 +325,57 @@ bandwidth_mbps = 24.0
     #[test]
     fn from_toml_rejects_unknown_enum() {
         let toml = Toml::parse("[admission]\nmode = \"warp-drive\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+    }
+
+    #[test]
+    fn from_toml_defaults_to_seed_scheduling() {
+        let toml = Toml::parse("model = \"tiny\"\n").unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.sched, SchedConfig::default());
+    }
+
+    #[test]
+    fn from_toml_parses_sched_section() {
+        let toml = Toml::parse(
+            r#"
+[sched]
+discipline = "strict-priority"
+num_classes = 3
+class_deadline_s = [0.1, 0.5, 2.0]
+max_batch = 8
+batch_marginal = 0.1
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.sched.discipline, DisciplineKind::StrictPriority);
+        assert_eq!(c.sched.num_classes, 3);
+        assert_eq!(c.sched.class_deadline_s, vec![0.1, 0.5, 2.0]);
+        assert_eq!(c.sched.batch.max_batch, 8);
+        assert!((c.sched.batch.marginal - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_toml_sched_scalar_deadline_broadcasts() {
+        let toml = Toml::parse(
+            "[sched]\ndiscipline = \"edf\"\ndrop_late = true\nnum_classes = 2\nclass_deadline_s = 0.25\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.sched.discipline, DisciplineKind::Edf { drop_late: true });
+        assert_eq!(c.sched.class_deadline_s, vec![0.25, 0.25]);
+    }
+
+    #[test]
+    fn from_toml_sched_rejects_bad_shapes() {
+        let toml =
+            Toml::parse("[sched]\nnum_classes = 2\nclass_deadline_s = [0.1, 0.2, 0.3]\n")
+                .unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+        let toml = Toml::parse("[sched]\ndiscipline = \"warp-drive\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+        let toml = Toml::parse("[sched]\nnum_classes = 0\n").unwrap();
         assert!(ExperimentConfig::from_toml(&toml).is_err());
     }
 }

@@ -14,7 +14,10 @@
 //!
 //! The split mirrors what the paper claims: Algs 1–4 are medium-agnostic.
 //! Drivers own clocks and transports; [`WorkerCore`] owns every decision,
-//! so new scenarios (schedulers, workloads, queue disciplines) land once.
+//! so new scenarios (schedulers, workloads, queue disciplines) land once —
+//! the [`crate::sched`] subsystem (queue disciplines, traffic classes,
+//! batched compute) plugs in exactly there, configured per run via
+//! [`config::ExperimentConfig::sched`].
 
 pub mod config;
 pub mod policy;
@@ -28,9 +31,10 @@ pub mod worker;
 
 pub use config::{AdmissionMode, ExperimentConfig, Mode};
 pub use policy::{AdaptConfig, OffloadPolicy};
-pub use report::RunReport;
+pub use report::{ClassStats, RunReport, WorkerStats};
 pub use run::{Driver, Run, RunBuilder};
 pub use sim::{SampleStore, Simulation};
 pub use worker::{
-    Action, AeMeta, Clock, ModelMeta, Payload, TaskOrigin, VirtualClock, WallClock, WorkerCore,
+    execute_batch, Action, AeMeta, Clock, ModelMeta, Payload, TaskOrigin, VirtualClock,
+    WallClock, WorkerCore,
 };

@@ -2,12 +2,16 @@
 //!
 //! Worker n maintains an input queue I_n (tasks it will process) and an
 //! output queue O_n (tasks staged for offloading). Queue *lengths* drive
-//! every decision in Algs 1–4, so the structure tracks peak occupancy for
-//! the reports too.
+//! every decision in Algs 1–4 — the *order* tasks are served in is a
+//! policy, owned by the [`crate::sched`] subsystem: [`WorkerQueues`] holds
+//! one boxed [`QueueDiscipline`] per queue, built from the run's
+//! [`SchedConfig`]. [`TaskQueue`] is the plain FIFO backing store the
+//! `sched::Fifo` discipline wraps (and the seed's original structure).
 
 use std::collections::VecDeque;
 
 use super::task::Task;
+use crate::sched::{QueueDiscipline, SchedConfig};
 
 /// FIFO task queue with occupancy accounting.
 #[derive(Debug, Default)]
@@ -37,6 +41,12 @@ impl TaskQueue {
         self.q.front()
     }
 
+    /// Front-to-back iteration (cold-path diagnostics like per-class
+    /// occupancy — the hot path never walks the queue).
+    pub fn iter(&self) -> impl Iterator<Item = &Task> {
+        self.q.iter()
+    }
+
     pub fn len(&self) -> usize {
         self.q.len()
     }
@@ -54,26 +64,47 @@ impl TaskQueue {
     }
 
     /// Drain everything (worker leaving the network hands tasks back).
+    /// Yields tasks in arrival (push) order and leaves the `peak` /
+    /// `total_enqueued` accounting untouched: the drain is churn
+    /// bookkeeping, not service, so a worker that later re-joins keeps a
+    /// consistent history.
     pub fn drain_all(&mut self) -> Vec<Task> {
         self.q.drain(..).collect()
     }
 }
 
-/// The I_n / O_n pair.
-#[derive(Debug, Default)]
+/// The I_n / O_n pair, each behind the run's configured queue discipline.
+#[derive(Debug)]
 pub struct WorkerQueues {
-    pub input: TaskQueue,
-    pub output: TaskQueue,
+    pub input: Box<dyn QueueDiscipline>,
+    pub output: Box<dyn QueueDiscipline>,
 }
 
 impl WorkerQueues {
-    pub fn new() -> WorkerQueues {
-        WorkerQueues::default()
+    /// `measure_from` is the warmup boundary for drop accounting.
+    pub fn new(sched: &SchedConfig, measure_from: f64) -> WorkerQueues {
+        WorkerQueues {
+            input: sched.build_queue(measure_from),
+            output: sched.build_queue(measure_from),
+        }
     }
 
     /// I_n + O_n — the occupancy signal Algs 3 and 4 consume.
     pub fn total_len(&self) -> usize {
         self.input.len() + self.output.len()
+    }
+
+    /// Drain both queues in *admission* order (churn re-homing). Each
+    /// discipline drains in its own arrival order; interleaving by
+    /// admission time (ties by task id) restores the order the source
+    /// admitted the data in, so re-homed work replays deterministically.
+    pub fn drain_all_ordered(&mut self) -> Vec<Task> {
+        let mut tasks = self.input.drain_all();
+        tasks.extend(self.output.drain_all());
+        tasks.sort_by(|a, b| {
+            a.admitted_at.total_cmp(&b.admitted_at).then(a.id.cmp(&b.id))
+        });
+        tasks
     }
 }
 
@@ -113,8 +144,27 @@ mod tests {
     }
 
     #[test]
+    fn drain_preserves_order_and_accounting() {
+        let mut q = TaskQueue::new();
+        for i in 0..4 {
+            q.push(task(i));
+        }
+        q.pop();
+        let (peak, total) = (q.peak(), q.total_enqueued());
+        let ids: Vec<u64> = q.drain_all().iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![1, 2, 3], "arrival order");
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.peak(), peak, "drain must not reset peak");
+        assert_eq!(q.total_enqueued(), total, "drain must not reset total_enqueued");
+        // post-churn pushes keep accumulating on the same history
+        q.push(task(9));
+        assert_eq!(q.total_enqueued(), total + 1);
+        assert_eq!(q.peak(), peak);
+    }
+
+    #[test]
     fn totals_and_drain() {
-        let mut w = WorkerQueues::new();
+        let mut w = WorkerQueues::new(&SchedConfig::default(), 0.0);
         w.input.push(task(1));
         w.output.push(task(2));
         w.output.push(task(3));
@@ -123,5 +173,21 @@ mod tests {
         assert_eq!(drained.len(), 2);
         assert_eq!(w.total_len(), 1);
         assert!(w.output.is_empty());
+    }
+
+    #[test]
+    fn ordered_drain_interleaves_by_admission_time() {
+        let at = |id: u64, t: f64| Task::initial(id, 0, None, t);
+        let mut w = WorkerQueues::new(&SchedConfig::default(), 0.0);
+        // Output holds *older* work (already computed once); input holds
+        // newer arrivals — a naive input-then-output drain would invert
+        // admission order.
+        w.output.push(at(10, 0.1));
+        w.output.push(at(11, 0.3));
+        w.input.push(at(12, 0.2));
+        w.input.push(at(13, 0.4));
+        let ids: Vec<u64> = w.drain_all_ordered().iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![10, 12, 11, 13], "admission order across both queues");
+        assert_eq!(w.total_len(), 0);
     }
 }

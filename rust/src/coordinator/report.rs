@@ -14,6 +14,57 @@ pub struct WorkerStats {
     pub peak_output: usize,
     /// Virtual/real seconds spent computing (utilization numerator).
     pub busy_s: f64,
+    /// Tasks this worker's queue disciplines discarded (EDF `drop_late`).
+    pub dropped: u64,
+    /// The same drops broken down by traffic class.
+    pub dropped_per_class: Vec<u64>,
+}
+
+/// Per-traffic-class accounting (populated when the run configures more
+/// than one class; single-class runs carry one entry equal to the totals).
+#[derive(Debug, Clone)]
+pub struct ClassStats {
+    /// Results of this class returned to the source during the window.
+    pub completed: u64,
+    pub correct: u64,
+    /// Results per exit point (1-based; index 0 = exit 1).
+    pub exit_histogram: Vec<u64>,
+    pub latency: Samples,
+    /// Tasks of this class discarded by deadline-aware disciplines.
+    pub dropped: u64,
+}
+
+impl ClassStats {
+    pub fn new(num_exits: usize) -> ClassStats {
+        ClassStats {
+            completed: 0,
+            correct: 0,
+            exit_histogram: vec![0; num_exits],
+            latency: Samples::new(),
+            dropped: 0,
+        }
+    }
+
+    /// Fold one completed result of this class into the counters.
+    pub fn record(&mut self, exit_point: usize, correct: bool, latency_s: f64) {
+        self.completed += 1;
+        if correct {
+            self.correct += 1;
+        }
+        if let Some(slot) = self.exit_histogram.get_mut(exit_point - 1) {
+            *slot += 1;
+        }
+        self.latency.push(latency_s);
+    }
+
+    /// Fraction of this class's results that exited at each point.
+    pub fn exit_fractions(&self) -> Vec<f64> {
+        let total: u64 = self.exit_histogram.iter().sum();
+        if total == 0 {
+            return vec![0.0; self.exit_histogram.len()];
+        }
+        self.exit_histogram.iter().map(|&c| c as f64 / total as f64).collect()
+    }
 }
 
 /// A sampled point of the controller/queue timeline.
@@ -45,6 +96,10 @@ pub struct RunReport {
     pub task_transfers: u64,
     /// Tasks re-homed to the source because a worker left mid-run.
     pub rehomed: u64,
+    /// Tasks discarded by deadline-aware disciplines (sum over workers).
+    pub dropped: u64,
+    /// Per-traffic-class counters (one entry per configured class).
+    pub per_class: Vec<ClassStats>,
     /// Final controller values.
     pub final_mu_s: Option<f64>,
     pub final_t_e: Option<f64>,
@@ -53,7 +108,7 @@ pub struct RunReport {
 
 impl RunReport {
     pub fn new(model: &str, topology: &str, label: &str, n_workers: usize,
-               num_exits: usize) -> RunReport {
+               num_exits: usize, num_classes: usize) -> RunReport {
         RunReport {
             model: model.to_string(),
             topology: topology.to_string(),
@@ -68,9 +123,44 @@ impl RunReport {
             bytes_on_wire: 0,
             task_transfers: 0,
             rehomed: 0,
+            dropped: 0,
+            per_class: vec![ClassStats::new(num_exits); num_classes.max(1)],
             final_mu_s: None,
             final_t_e: None,
             trace: Vec::new(),
+        }
+    }
+
+    /// Fold one completed result into its class's counters (drivers call
+    /// this next to their total accounting).
+    pub fn record_class(&mut self, class: u8, exit_point: usize, correct: bool,
+                        latency_s: f64) {
+        // Out-of-range classes fold into the last bucket, mirroring how
+        // `StrictPriority` clamps lanes.
+        let i = (class as usize).min(self.per_class.len().saturating_sub(1));
+        if let Some(cs) = self.per_class.get_mut(i) {
+            cs.record(exit_point, correct, latency_s);
+        }
+    }
+
+    /// Aggregate the per-worker discipline drops into the per-class and
+    /// total counters (call once, after `per_worker` is filled).
+    pub fn fold_worker_drops(&mut self) {
+        self.dropped = 0;
+        for cs in &mut self.per_class {
+            cs.dropped = 0;
+        }
+        let drops: Vec<(usize, u64)> = self
+            .per_worker
+            .iter()
+            .flat_map(|w| w.dropped_per_class.iter().enumerate().map(|(c, &d)| (c, d)))
+            .collect();
+        for (c, d) in drops {
+            self.dropped += d;
+            let i = c.min(self.per_class.len().saturating_sub(1));
+            if let Some(cs) = self.per_class.get_mut(i) {
+                cs.dropped += d;
+            }
         }
     }
 
@@ -120,6 +210,28 @@ impl RunReport {
                     ("peak_input", w.peak_input.into()),
                     ("peak_output", w.peak_output.into()),
                     ("busy_s", w.busy_s.into()),
+                    ("dropped", (w.dropped as i64).into()),
+                ])
+            })
+            .collect();
+        let classes: Vec<Json> = self
+            .per_class
+            .iter_mut()
+            .map(|c| {
+                let (p50, p95) = (c.latency.p50(), c.latency.p95());
+                let acc = if c.completed > 0 {
+                    c.correct as f64 / c.completed as f64
+                } else {
+                    0.0
+                };
+                obj(vec![
+                    ("completed", (c.completed as i64).into()),
+                    ("accuracy", acc.into()),
+                    ("latency_p50_s", p50.into()),
+                    ("latency_p95_s", p95.into()),
+                    ("exit_histogram",
+                     Json::Arr(c.exit_histogram.iter().map(|&n| (n as i64).into()).collect())),
+                    ("dropped", (c.dropped as i64).into()),
                 ])
             })
             .collect();
@@ -148,8 +260,10 @@ impl RunReport {
             ("bytes_on_wire", (self.bytes_on_wire as i64).into()),
             ("task_transfers", (self.task_transfers as i64).into()),
             ("rehomed", (self.rehomed as i64).into()),
+            ("dropped", (self.dropped as i64).into()),
             ("final_mu_s", self.final_mu_s.map(Json::from).unwrap_or(Json::Null)),
             ("final_t_e", self.final_t_e.map(Json::from).unwrap_or(Json::Null)),
+            ("classes", Json::Arr(classes)),
             ("workers", Json::Arr(workers)),
         ])
     }
@@ -161,7 +275,7 @@ mod tests {
 
     #[test]
     fn derived_metrics() {
-        let mut r = RunReport::new("m", "t", "lbl", 2, 3);
+        let mut r = RunReport::new("m", "t", "lbl", 2, 3, 1);
         r.duration_s = 10.0;
         r.admitted = 100;
         r.completed = 80;
@@ -176,7 +290,7 @@ mod tests {
 
     #[test]
     fn empty_report_is_finite() {
-        let mut r = RunReport::new("m", "t", "lbl", 1, 2);
+        let mut r = RunReport::new("m", "t", "lbl", 1, 2, 1);
         assert_eq!(r.accuracy(), 0.0);
         assert_eq!(r.throughput_hz(), 0.0);
         assert_eq!(r.exit_fractions(), vec![0.0, 0.0]);
@@ -186,7 +300,7 @@ mod tests {
 
     #[test]
     fn json_shape() {
-        let mut r = RunReport::new("mob", "2-node", "fig3", 2, 5);
+        let mut r = RunReport::new("mob", "2-node", "fig3", 2, 5, 1);
         r.duration_s = 5.0;
         r.completed = 1;
         r.correct = 1;
@@ -195,8 +309,42 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("model").as_str(), Some("mob"));
         assert_eq!(j.get("workers").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("classes").as_arr().unwrap().len(), 1);
         assert!((j.get("latency_p50_s").as_f64().unwrap() - 0.125).abs() < 1e-9);
         assert!((j.get("final_mu_s").as_f64().unwrap() - 0.05).abs() < 1e-12);
         assert!(j.get("final_t_e").is_null());
+    }
+
+    #[test]
+    fn per_class_counters_accumulate() {
+        let mut r = RunReport::new("m", "t", "lbl", 1, 2, 2);
+        r.record_class(0, 1, true, 0.010);
+        r.record_class(0, 2, false, 0.030);
+        r.record_class(1, 2, true, 0.200);
+        // out-of-range classes clamp into the last bucket
+        r.record_class(7, 1, true, 0.100);
+        assert_eq!(r.per_class[0].completed, 2);
+        assert_eq!(r.per_class[0].correct, 1);
+        assert_eq!(r.per_class[0].exit_histogram, vec![1, 1]);
+        assert_eq!(r.per_class[1].completed, 2);
+        let f = r.per_class[0].exit_fractions();
+        assert!((f[0] - 0.5).abs() < 1e-12);
+        assert!((r.per_class[1].latency.p95() - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worker_drops_fold_into_classes_and_total() {
+        let mut r = RunReport::new("m", "t", "lbl", 2, 2, 2);
+        r.per_worker[0].dropped = 3;
+        r.per_worker[0].dropped_per_class = vec![1, 2];
+        r.per_worker[1].dropped = 2;
+        r.per_worker[1].dropped_per_class = vec![0, 2];
+        r.fold_worker_drops();
+        assert_eq!(r.dropped, 5);
+        assert_eq!(r.per_class[0].dropped, 1);
+        assert_eq!(r.per_class[1].dropped, 4);
+        // idempotent: folding again must not double-count
+        r.fold_worker_drops();
+        assert_eq!(r.dropped, 5);
     }
 }

@@ -16,7 +16,12 @@
 //! Churn schedules work here too (a payoff of the unified core): every
 //! thread walks the same `cfg.churn` timeline against its own core, so a
 //! leaving worker re-homes its queued tasks to the source over the wire and
-//! its peers stop offloading to it.
+//! its peers stop offloading to it. DDI mode likewise: the core already
+//! round-robins whole images at the source, so the driver carries it with
+//! no mode-specific code. `StartCompute` hands the thread a same-stage
+//! *batch*; one `execute_batch` call runs it as one batched forward per
+//! stage, so engines that amortize dispatch (cost emulation pays the stage
+//! cost once per call) get real wallclock wins from batching.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::channel;
@@ -25,11 +30,11 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::config::{ExperimentConfig, Mode};
-use super::report::RunReport;
+use super::config::ExperimentConfig;
+use super::report::{ClassStats, RunReport};
 use super::task::{InferenceResult, Task};
 use super::worker::{
-    execute_task, Action, Clock, ModelMeta, Payload, TaskOrigin, WallClock, WorkerCore,
+    execute_batch, Action, Clock, ModelMeta, Payload, TaskOrigin, WallClock, WorkerCore,
 };
 use crate::dataset::Dataset;
 use crate::log_info;
@@ -65,7 +70,6 @@ pub(super) fn run_realtime(
     dataset: &Dataset,
 ) -> Result<RunReport> {
     cfg.validate()?;
-    anyhow::ensure!(cfg.mode == Mode::MdiExit, "realtime driver runs MDI-Exit mode");
     let topo = Arc::new(
         Topology::named(&cfg.topology, cfg.link)
             .with_context(|| format!("unknown topology {:?}", cfg.topology))?
@@ -104,6 +108,9 @@ pub(super) fn run_realtime(
                 churn.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
                 let tally = SourceTally {
                     exit_histogram: vec![0; meta.num_stages],
+                    per_class: (0..cfg.sched.num_classes.max(1))
+                        .map(|_| ClassStats::new(meta.num_stages))
+                        .collect(),
                     ..SourceTally::default()
                 };
                 let mut w = RtWorker {
@@ -130,7 +137,14 @@ pub(super) fn run_realtime(
     })?;
     drop(stats_tx);
 
-    let mut report = RunReport::new(&cfg.model, &cfg.topology, "realtime", n, meta.num_stages);
+    let mut report = RunReport::new(
+        &cfg.model,
+        &cfg.topology,
+        "realtime",
+        n,
+        meta.num_stages,
+        cfg.sched.num_classes as usize,
+    );
     report.duration_s = cfg.duration_s;
     while let Ok((id, stats, tally)) = stats_rx.recv() {
         report.per_worker[id] = stats;
@@ -141,6 +155,9 @@ pub(super) fn run_realtime(
             report.exit_histogram = tally.exit_histogram;
             report.latency = tally.latency;
             report.rehomed = tally.rehomed;
+            if !tally.per_class.is_empty() {
+                report.per_class = tally.per_class;
+            }
             report.final_mu_s = tally.final_mu_s;
             report.final_t_e = tally.final_t_e;
         }
@@ -148,6 +165,7 @@ pub(super) fn run_realtime(
     if report.exit_histogram.is_empty() {
         report.exit_histogram = vec![0; meta.num_stages];
     }
+    report.fold_worker_drops();
     Ok(report)
 }
 
@@ -160,6 +178,7 @@ struct SourceTally {
     exit_histogram: Vec<u64>,
     latency: Samples,
     rehomed: u64,
+    per_class: Vec<ClassStats>,
     final_mu_s: Option<f64>,
     final_t_e: Option<f64>,
 }
@@ -174,9 +193,10 @@ struct RtWorker<'a> {
     dataset: Option<&'a Dataset>,
     clock: WallClock,
     tally: SourceTally,
-    /// Task handed out by a `StartCompute` action, executed one per loop
-    /// iteration so admission/gossip/mailbox stay responsive.
-    pending: Option<Task>,
+    /// Same-stage batch handed out by a `StartCompute` action, executed
+    /// one batch per loop iteration so admission/gossip/mailbox stay
+    /// responsive.
+    pending: Option<Vec<Task>>,
     churn: Vec<ChurnEvent>,
     churn_idx: usize,
 }
@@ -211,17 +231,29 @@ impl<'a> RtWorker<'a> {
                 progressed = true;
             }
 
-            // 3. source duties: admission + adaptation
-            if self.id == 0 && now >= next_admit {
-                let (mut task, dt) = self.core.poll_admission(now);
+            // 3. source duties: admission + adaptation. Admit *every* due
+            // arrival, not one per loop iteration: when compute occupies
+            // the thread for a while, capping admission at the loop rate
+            // would silently under-admit relative to the configured rate
+            // (the DES driver has no such cap), hiding overload from the
+            // queues — and with it the backlog that batching and the
+            // priority disciplines exist to manage.
+            while self.id == 0 && now >= next_admit {
+                // Stamp the task with its *scheduled* admission time, not
+                // the post-catch-up `now`: that is when the DES driver
+                // admits it, and using `now` would under-report latency
+                // and shift EDF deadlines whenever compute blocked the
+                // loop (coordinated omission).
+                let at = next_admit;
+                let (mut task, dt) = self.core.poll_admission(at);
                 let ds = self.dataset.expect("source has the dataset");
                 task.features = Some(ds.image(task.sample));
-                if self.in_window(now) {
+                if self.in_window(at) {
                     self.tally.admitted += 1;
                 }
                 let acts = self.core.on_task(now, task, TaskOrigin::Admitted);
                 self.dispatch(acts);
-                next_admit = now + dt;
+                next_admit += dt;
                 progressed = true;
             }
             if self.id == 0 && now >= next_adapt {
@@ -237,21 +269,36 @@ impl<'a> RtWorker<'a> {
                 next_gossip = now + self.cfg.gossip_interval_s;
             }
 
-            // 5. run one task through the engine (Alg. 1 on completion)
-            if let Some(mut task) = self.pending.take() {
+            // 5. run one batch through the engine (Alg. 1 on completion)
+            if let Some(mut batch) = self.pending.take() {
                 progressed = true;
                 let started = Instant::now();
-                match execute_task(self.engine, self.cfg.mode, self.meta.num_stages, &mut task)
-                {
-                    Ok((out, exit_point)) => {
+                match execute_batch(
+                    self.engine,
+                    self.cfg.mode,
+                    self.meta.num_stages,
+                    &mut batch,
+                ) {
+                    Ok(results) => {
                         let dur = started.elapsed().as_secs_f64();
                         let now = self.clock.now();
-                        let acts = self.core.on_compute_done(now, task, out, exit_point, dur);
+                        let acts = self.core.on_compute_done(now, batch, results, dur);
                         self.dispatch(acts);
                     }
                     Err(err) => {
-                        log_info!("worker {}: stage {} failed: {err:#}", self.id, task.stage);
-                        let acts = self.core.abort_compute();
+                        log_info!(
+                            "worker {}: stage {} failed: {err:#}",
+                            self.id,
+                            batch.first().map(|t| t.stage).unwrap_or(0)
+                        );
+                        let now = self.clock.now();
+                        // Drop the batch *with accounting* (it shows up in
+                        // the report's dropped counters) rather than
+                        // re-homing: execute_batch may already have
+                        // consumed the feature tensors, and a
+                        // deterministically failing task would otherwise
+                        // retry forever.
+                        let acts = self.core.abort_compute(now, batch);
                         self.dispatch(acts);
                     }
                 }
@@ -272,9 +319,9 @@ impl<'a> RtWorker<'a> {
         let mut q: VecDeque<Action> = actions.into();
         while let Some(a) = q.pop_front() {
             match a {
-                Action::StartCompute { task, .. } => {
+                Action::StartCompute { batch, .. } => {
                     debug_assert!(self.pending.is_none(), "core double-started compute");
-                    self.pending = Some(task);
+                    self.pending = Some(batch);
                 }
                 Action::Send { to, payload, mut bytes, needs_encode } => {
                     // Only task transfers feed the D_nm estimator — gossip
@@ -355,11 +402,19 @@ impl<'a> RtWorker<'a> {
         }
         let ds = self.dataset.expect("source records results");
         self.tally.completed += 1;
-        if r.prediction == ds.label(r.sample) {
+        let correct = r.prediction == ds.label(r.sample);
+        if correct {
             self.tally.correct += 1;
         }
         self.tally.exit_histogram[r.exit_point - 1] += 1;
-        self.tally.latency.push(now - r.admitted_at);
+        let latency = now - r.admitted_at;
+        self.tally.latency.push(latency);
+        // Same clamp rule as `RunReport::record_class`: out-of-range
+        // classes fold into the last bucket.
+        let i = (r.class as usize).min(self.tally.per_class.len().saturating_sub(1));
+        if let Some(cs) = self.tally.per_class.get_mut(i) {
+            cs.record(r.exit_point, correct, latency);
+        }
     }
 
     fn finish(self) -> (super::report::WorkerStats, SourceTally) {

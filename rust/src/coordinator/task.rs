@@ -20,15 +20,34 @@ pub struct Task {
     pub admitted_at: f64,
     /// Offload hops so far (diagnostics; Fig. 5's transmission bottleneck).
     pub hops: u32,
+    /// Traffic class stamped at admission (0 = highest priority). Class
+    /// counters in the report and the `sched` disciplines key off it; the
+    /// default single-class config leaves every task at 0.
+    pub class: u8,
+    /// Absolute completion deadline (admission time + the per-class budget
+    /// in `SchedConfig`). Only deadline-aware disciplines read it.
+    pub deadline: f64,
 }
 
 impl Task {
-    /// First task τ_1(d) for a freshly admitted sample.
+    /// First task τ_1(d) for a freshly admitted sample. Class/deadline are
+    /// stamped by the admitting core from its `SchedConfig`.
     pub fn initial(id: u64, sample: usize, features: Option<Tensor>, now: f64) -> Task {
-        Task { id, sample, stage: 1, features, encoded: false, admitted_at: now, hops: 0 }
+        Task {
+            id,
+            sample,
+            stage: 1,
+            features,
+            encoded: false,
+            admitted_at: now,
+            hops: 0,
+            class: 0,
+            deadline: f64::INFINITY,
+        }
     }
 
-    /// Successor task τ_{k+1}(d) (Alg. 1 lines 9–11), reusing the data id.
+    /// Successor task τ_{k+1}(d) (Alg. 1 lines 9–11), reusing the data id
+    /// and inheriting the admission-time class and deadline.
     pub fn successor(&self, id: u64, features: Option<Tensor>) -> Task {
         Task {
             id,
@@ -38,6 +57,8 @@ impl Task {
             encoded: false,
             admitted_at: self.admitted_at,
             hops: self.hops,
+            class: self.class,
+            deadline: self.deadline,
         }
     }
 }
@@ -55,6 +76,8 @@ pub struct InferenceResult {
     pub admitted_at: f64,
     /// Worker that produced the exit.
     pub exited_on: usize,
+    /// Traffic class of the originating task (per-class report counters).
+    pub class: u8,
 }
 
 #[cfg(test)]
@@ -63,12 +86,21 @@ mod tests {
 
     #[test]
     fn successor_advances_stage_and_keeps_lineage() {
-        let t = Task::initial(1, 42, None, 3.5);
+        let t = Task { class: 2, deadline: 4.5, ..Task::initial(1, 42, None, 3.5) };
         assert_eq!((t.stage, t.sample, t.hops), (1, 42, 0));
         let s = t.successor(2, None);
         assert_eq!(s.stage, 2);
         assert_eq!(s.sample, 42);
         assert_eq!(s.admitted_at, 3.5);
         assert!(!s.encoded);
+        assert_eq!(s.class, 2, "class is stamped once, at admission");
+        assert_eq!(s.deadline, 4.5, "deadline travels with the data");
+    }
+
+    #[test]
+    fn initial_task_defaults_to_class_zero_no_deadline() {
+        let t = Task::initial(1, 0, None, 0.0);
+        assert_eq!(t.class, 0);
+        assert!(t.deadline.is_infinite());
     }
 }

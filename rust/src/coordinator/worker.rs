@@ -8,10 +8,17 @@
 //! answers with [`Action`]s — *what* should happen, never *how*:
 //!
 //! * `Send { to, payload, bytes }` — put a message on the wire;
-//! * `StartCompute { task, est_cost_s }` — run task τ_k on the engine;
+//! * `StartCompute { batch, est_cost_s }` — run a same-stage batch of
+//!   tasks through the engine (one batched forward per stage; batch size 1
+//!   unless [`crate::sched::BatchPolicy`] says otherwise);
 //! * `RecordResult { result }` — source-side accounting of a completed
 //!   inference;
 //! * `Rehome { task }` — hand a task back to the source (churn safety).
+//!
+//! Queue *order* is a policy: both queues sit behind boxed
+//! [`crate::sched::QueueDiscipline`]s chosen by the run's
+//! [`crate::sched::SchedConfig`] (FIFO, strict priority across traffic
+//! classes, or EDF), and admission stamps each task's class and deadline.
 //!
 //! The discrete-event driver ([`super::sim`]) maps these onto its
 //! virtual-time heap; the realtime driver (`super::rt`) maps them onto
@@ -29,7 +36,9 @@ use super::report::WorkerStats;
 use super::task::{InferenceResult, Task};
 use crate::artifact::ModelInfo;
 use crate::runtime::{InferenceEngine, StageOutput};
+use crate::sched::QueueDiscipline;
 use crate::simnet::Topology;
+use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Ewma;
 
@@ -160,11 +169,13 @@ pub enum Action {
     /// feature tensor before the wire (the core already accounted the
     /// encoded byte size and marked the task).
     Send { to: usize, payload: Payload, bytes: usize, needs_encode: bool },
-    /// Run task τ_k through the engine. `est_cost_s` is the core's virtual
-    /// cost estimate (stage cost + AE decode, ×noise, ÷speed) — the DES
-    /// driver charges it as the compute delay; the realtime driver ignores
-    /// it and measures real elapsed time.
-    StartCompute { task: Task, est_cost_s: f64 },
+    /// Run a same-stage batch of tasks through the engine (one batched
+    /// forward per stage; see [`execute_batch`]). `est_cost_s` is the
+    /// core's virtual cost estimate for the whole batch (amortized stage
+    /// cost + AE decodes, ×noise, ÷speed) — the DES driver charges it as
+    /// the compute delay; the realtime driver ignores it and measures real
+    /// elapsed time. The batch is never empty.
+    StartCompute { batch: Vec<Task>, est_cost_s: f64 },
     /// A completed inference reached the source: record it.
     RecordResult { result: InferenceResult },
     /// Hand the task back to the source (this worker left the network).
@@ -223,6 +234,11 @@ pub struct WorkerCore {
     next_sample: usize,
     num_samples: usize,
     ddi_next_target: usize,
+    /// Round-robin traffic-class stamp for the next admission (source).
+    next_class: u8,
+    /// Per-class tasks lost to engine failures (`abort_compute`), merged
+    /// with the disciplines' age-out drops in `into_stats`.
+    failed_per_class: Vec<u64>,
 
     measure_from: f64,
     /// Scratch buffer for the shuffled neighbor scan (avoids a Vec
@@ -274,7 +290,7 @@ impl WorkerCore {
             num_workers: n,
             active: true,
             peer_active: vec![true; n],
-            queues: WorkerQueues::new(),
+            queues: WorkerQueues::new(&cfg.sched, cfg.warmup_s),
             busy: false,
             gamma,
             views: vec![None; n],
@@ -288,6 +304,8 @@ impl WorkerCore {
             next_sample: 0,
             num_samples,
             ddi_next_target: 0,
+            next_class: 0,
+            failed_per_class: vec![0; cfg.sched.num_classes.max(1) as usize],
             measure_from: cfg.warmup_s,
             scan_buf: Vec::new(),
         }
@@ -319,6 +337,12 @@ impl WorkerCore {
         self.queues.output.len()
     }
 
+    /// Live input-queue occupancy of one traffic class (diagnostics; the
+    /// per-class analogue of `input_len` for overload dashboards).
+    pub fn input_class_len(&self, class: u8) -> usize {
+        self.queues.input.class_len(class)
+    }
+
     /// I_n + O_n — the occupancy signal Algs 3 and 4 consume.
     pub fn queue_total(&self) -> usize {
         self.queues.total_len()
@@ -347,10 +371,23 @@ impl WorkerCore {
         self.thr_ctl.as_ref().map(|tc| tc.t_e())
     }
 
-    /// Final per-worker stats (fills queue peaks).
+    /// Final per-worker stats (fills queue peaks and the drop counters:
+    /// discipline age-outs plus engine-failure losses).
     pub fn into_stats(mut self) -> WorkerStats {
         self.stats.peak_input = self.queues.input.peak();
         self.stats.peak_output = self.queues.output.peak();
+        let mut per_class = self.failed_per_class.clone();
+        for q in [&self.queues.input, &self.queues.output] {
+            for (c, &d) in q.dropped_per_class().iter().enumerate() {
+                if let Some(slot) = per_class.get_mut(c) {
+                    *slot += d;
+                } else if let Some(last) = per_class.last_mut() {
+                    *last += d; // out-of-range classes fold into the last
+                }
+            }
+        }
+        self.stats.dropped = per_class.iter().sum();
+        self.stats.dropped_per_class = per_class;
         self.stats
     }
 
@@ -366,14 +403,18 @@ impl WorkerCore {
     // -- admission (source) --------------------------------------------------
 
     /// Source only: admit the next sample. Returns the fresh task τ_1
-    /// (features unset — the driver owns the sample store) and the delay
-    /// until the next admission per the configured [`AdmissionMode`].
+    /// (features unset — the driver owns the sample store) with its
+    /// traffic class and deadline stamped, and the delay until the next
+    /// admission per the configured [`AdmissionMode`].
     pub fn poll_admission(&mut self, now: f64) -> (Task, f64) {
         debug_assert_eq!(self.id, 0, "only the source admits data");
         let sample = self.next_sample;
         self.next_sample = (self.next_sample + 1) % self.num_samples.max(1);
         let id = self.alloc_task_id();
-        let task = Task::initial(id, sample, None, now);
+        let mut task = Task::initial(id, sample, None, now);
+        task.class = self.next_class;
+        task.deadline = now + self.cfg.sched.deadline_for(task.class);
+        self.next_class = (self.next_class + 1) % self.cfg.sched.num_classes.max(1);
         let dt = match self.cfg.admission {
             AdmissionMode::AdaptiveRate { .. } => {
                 self.rate_ctl.as_ref().expect("rate controller").mu_s()
@@ -445,7 +486,7 @@ impl WorkerCore {
                 self.queues.input.push(task);
             }
         }
-        if let Some(a) = self.maybe_start() {
+        if let Some(a) = self.maybe_start(now) {
             out.push(a);
         }
         if origin == TaskOrigin::Wire {
@@ -456,107 +497,131 @@ impl WorkerCore {
 
     // -- compute -------------------------------------------------------------
 
-    /// Pop the next input task and ask the driver to compute it, if idle.
-    fn maybe_start(&mut self) -> Option<Action> {
+    /// Pop the next same-stage batch off the input discipline and ask the
+    /// driver to compute it, if idle. Batch size is 1 unless the run's
+    /// [`crate::sched::BatchPolicy`] allows more; the batched stage cost
+    /// amortizes per the policy's marginal-cost model.
+    fn maybe_start(&mut self, now: f64) -> Option<Action> {
         if !self.active || self.busy || self.queues.input.is_empty() {
             return None;
         }
-        let task = self.queues.input.pop().unwrap();
-        let mut cost = match self.cfg.mode {
-            Mode::Ddi => self.meta.total_cost_s(),
-            Mode::MdiExit => self.meta.stage_cost_s[task.stage - 1],
-        };
-        if task.encoded {
-            cost += self.meta.ae.as_ref().map(|ae| ae.dec_cost_s).unwrap_or(0.0);
+        let batch = self.cfg.sched.batch.form(self.queues.input.as_mut(), now);
+        if batch.is_empty() {
+            // A deadline-aware discipline aged out everything it held.
+            return None;
         }
+        let stage_cost = match self.cfg.mode {
+            Mode::Ddi => self.meta.total_cost_s(),
+            Mode::MdiExit => self.meta.stage_cost_s[batch[0].stage - 1],
+        };
+        let mut cost = self.cfg.sched.batch.batch_cost(stage_cost, batch.len());
+        let dec_cost = self.meta.ae.as_ref().map(|ae| ae.dec_cost_s).unwrap_or(0.0);
+        cost += dec_cost * batch.iter().filter(|t| t.encoded).count() as f64;
         // ±3% lognormal-ish execution noise (thermal/DVFS variability).
         let noise = self.rng.normal(1.0, 0.03).clamp(0.7, 1.3);
         self.busy = true;
-        Some(Action::StartCompute { task, est_cost_s: cost * noise / self.speed })
+        Some(Action::StartCompute { batch, est_cost_s: cost * noise / self.speed })
     }
 
-    /// The engine finished task τ_k: apply Alg. 1, then scan Alg. 2 and
-    /// maybe start the next task. `duration_s` is the measured (virtual or
-    /// wall) compute time; `exit_point` is the exit whose classifier ran.
+    /// The engine finished a batch: apply Alg. 1 to every element, then
+    /// scan Alg. 2 and maybe start the next batch. `duration_s` is the
+    /// measured (virtual or wall) compute time for the whole batch;
+    /// `results` pairs each task's [`StageOutput`] with the exit point
+    /// whose classifier ran, in batch order (see [`execute_batch`]).
     pub fn on_compute_done(
         &mut self,
         now: f64,
-        task: Task,
-        out: StageOutput,
-        exit_point: usize,
+        batch: Vec<Task>,
+        results: Vec<(StageOutput, usize)>,
         duration_s: f64,
     ) -> Vec<Action> {
+        debug_assert_eq!(batch.len(), results.len(), "one result per batch element");
         self.busy = false;
-        self.gamma.push(duration_s);
+        // Γ_n is a *per-task* compute-delay estimate (Alg. 2 compares it
+        // against neighbor queues), so a batch feeds the amortized share.
+        self.gamma.push(duration_s / batch.len().max(1) as f64);
         if self.in_window(now) {
-            self.stats.processed += 1;
+            self.stats.processed += batch.len() as u64;
             self.stats.busy_s += duration_s;
         }
 
         let mut actions = Vec::new();
-        let is_final = exit_point >= self.meta.num_stages || self.cfg.mode == Mode::Ddi;
-        let threshold = if self.cfg.no_early_exit { f32::INFINITY } else { self.t_e };
-        let decision = policy::alg1_decide(
-            out.confidence,
-            threshold,
-            is_final,
-            self.queues.input.len(),
-            self.queues.output.len(),
-            self.cfg.t_o,
-        );
-        match decision {
-            ExitDecision::Exit => {
-                if self.in_window(now) {
-                    self.stats.exits += 1;
+        for (task, (out, exit_point)) in batch.into_iter().zip(results) {
+            let is_final = exit_point >= self.meta.num_stages || self.cfg.mode == Mode::Ddi;
+            let threshold = if self.cfg.no_early_exit { f32::INFINITY } else { self.t_e };
+            let decision = policy::alg1_decide(
+                out.confidence,
+                threshold,
+                is_final,
+                self.queues.input.len(),
+                self.queues.output.len(),
+                self.cfg.t_o,
+            );
+            match decision {
+                ExitDecision::Exit => {
+                    if self.in_window(now) {
+                        self.stats.exits += 1;
+                    }
+                    let result = InferenceResult {
+                        sample: task.sample,
+                        exit_point,
+                        prediction: out.prediction,
+                        confidence: out.confidence,
+                        admitted_at: task.admitted_at,
+                        exited_on: self.id,
+                        class: task.class,
+                    };
+                    if self.id == 0 {
+                        actions.push(Action::RecordResult { result });
+                    } else {
+                        actions.push(Action::Send {
+                            to: 0,
+                            payload: Payload::Result(result),
+                            bytes: RESULT_BYTES,
+                            needs_encode: false,
+                        });
+                    }
                 }
-                let result = InferenceResult {
-                    sample: task.sample,
-                    exit_point,
-                    prediction: out.prediction,
-                    confidence: out.confidence,
-                    admitted_at: task.admitted_at,
-                    exited_on: self.id,
-                };
-                if self.id == 0 {
-                    actions.push(Action::RecordResult { result });
-                } else {
-                    actions.push(Action::Send {
-                        to: 0,
-                        payload: Payload::Result(result),
-                        bytes: RESULT_BYTES,
-                        needs_encode: false,
-                    });
-                }
-            }
-            ExitDecision::ContinueLocal | ExitDecision::ContinueOffload => {
-                let id = self.alloc_task_id();
-                // Move (not clone) the feature tensor into the successor —
-                // this runs once per task-stage on the benchmarked hot path.
-                let succ = task.successor(id, out.features);
-                if !self.active {
-                    // Completed while churned out: hand the successor back
-                    // instead of stranding it on an inactive queue.
-                    actions.push(Action::Rehome { task: succ });
-                } else if decision == ExitDecision::ContinueLocal {
-                    self.queues.input.push(succ);
-                } else {
-                    self.queues.output.push(succ);
+                ExitDecision::ContinueLocal | ExitDecision::ContinueOffload => {
+                    let id = self.alloc_task_id();
+                    // Move (not clone) the feature tensor into the
+                    // successor — this runs once per task-stage on the
+                    // benchmarked hot path.
+                    let succ = task.successor(id, out.features);
+                    if !self.active {
+                        // Completed while churned out: hand the successor
+                        // back instead of stranding it on an inactive queue.
+                        actions.push(Action::Rehome { task: succ });
+                    } else if decision == ExitDecision::ContinueLocal {
+                        self.queues.input.push(succ);
+                    } else {
+                        self.queues.output.push(succ);
+                    }
                 }
             }
         }
 
         self.try_offload(now, &mut actions);
-        if let Some(a) = self.maybe_start() {
+        if let Some(a) = self.maybe_start(now) {
             actions.push(a);
         }
         actions
     }
 
     /// The driver could not run the engine (realtime engine error): clear
-    /// the busy latch so the worker keeps draining its queue.
-    pub fn abort_compute(&mut self) -> Vec<Action> {
+    /// the busy latch so the worker keeps draining its queue. The failed
+    /// batch is dropped *with accounting* — re-homing it would retry a
+    /// deterministically failing task forever (and `execute_batch` may
+    /// already have consumed its feature tensors).
+    pub fn abort_compute(&mut self, now: f64, failed: Vec<Task>) -> Vec<Action> {
         self.busy = false;
-        self.maybe_start().into_iter().collect()
+        if self.in_window(now) {
+            let last = self.failed_per_class.len().saturating_sub(1);
+            for t in &failed {
+                self.failed_per_class[(t.class as usize).min(last)] += 1;
+            }
+        }
+        self.maybe_start(now).into_iter().collect()
     }
 
     // -- results -------------------------------------------------------------
@@ -640,18 +705,20 @@ impl WorkerCore {
     /// Worker `worker` joined/left at `now`. Every core sees every churn
     /// event: peers stop (or resume) being offload targets; the churned
     /// worker itself drains its queues back to the source.
-    pub fn on_churn(&mut self, _now: f64, worker: usize, join: bool) -> Vec<Action> {
+    pub fn on_churn(&mut self, now: f64, worker: usize, join: bool) -> Vec<Action> {
         let mut out = Vec::new();
         if worker == self.id {
             self.active = join;
             if join {
-                if let Some(a) = self.maybe_start() {
+                if let Some(a) = self.maybe_start(now) {
                     out.push(a);
                 }
             } else {
-                let mut tasks = self.queues.input.drain_all();
-                tasks.extend(self.queues.output.drain_all());
-                for task in tasks {
+                // Drain both queues in admission order so the source
+                // replays re-homed work deterministically (the drain keeps
+                // peak/total_enqueued accounting intact — see
+                // `QueueDiscipline::drain_all`).
+                for task in self.queues.drain_all_ordered() {
                     out.push(Action::Rehome { task });
                 }
             }
@@ -720,7 +787,11 @@ impl WorkerCore {
                 if !go {
                     continue;
                 }
-                let mut task = self.queues.output.pop().unwrap();
+                let Some(mut task) = self.queues.output.pop_next(now) else {
+                    // Deadline age-out emptied the queue mid-scan; the
+                    // empty check at the top of the loop terminates.
+                    continue;
+                };
                 // AE boundary: encode before the wire (stage-2 inputs only,
                 // paper §V — only the first ResNet exit has an AE).
                 let needs_encode = self.cfg.use_ae
@@ -753,9 +824,9 @@ impl WorkerCore {
                 // No neighbor accepted the head-of-line task. If local
                 // compute is starving, reclaim it for the input queue.
                 if !self.busy && self.queues.input.is_empty() {
-                    if let Some(t) = self.queues.output.pop() {
+                    if let Some(t) = self.queues.output.pop_next(now) {
                         self.queues.input.push(t);
-                        if let Some(a) = self.maybe_start() {
+                        if let Some(a) = self.maybe_start(now) {
                             out.push(a);
                         }
                     }
@@ -770,39 +841,56 @@ impl WorkerCore {
 // Shared engine execution (driver-side helper)
 // ---------------------------------------------------------------------------
 
-/// Run one task through the engine the way both drivers must: decode AE
-/// payloads first, then either the single stage τ_k (MDI-Exit) or the whole
-/// chain (DDI). Returns the stage output and the exit point that fired.
-pub fn execute_task(
+/// Run a same-stage batch through the engine the way both drivers must:
+/// decode AE payloads first (per element), then either one batched forward
+/// of stage τ_k (MDI-Exit) or the whole chain (DDI), via
+/// [`InferenceEngine::run_stage_batch`] — one engine call per stage, not
+/// one per task, which is what batching amortizes. Returns each element's
+/// stage output paired with the exit point that fired, in batch order.
+pub fn execute_batch(
     engine: &dyn InferenceEngine,
     mode: Mode,
     num_stages: usize,
-    task: &mut Task,
-) -> anyhow::Result<(StageOutput, usize)> {
-    if task.encoded {
-        if let Some(f) = task.features.take() {
-            match engine.decode(&f)? {
-                Some(dec) => task.features = Some(dec),
-                None => task.features = Some(f),
+    batch: &mut [Task],
+) -> anyhow::Result<Vec<(StageOutput, usize)>> {
+    anyhow::ensure!(!batch.is_empty(), "empty compute batch");
+    for task in batch.iter_mut() {
+        if task.encoded {
+            if let Some(f) = task.features.take() {
+                match engine.decode(&f)? {
+                    Some(dec) => task.features = Some(dec),
+                    None => task.features = Some(f),
+                }
             }
+            task.encoded = false;
         }
-        task.encoded = false;
     }
+    let samples: Vec<usize> = batch.iter().map(|t| t.sample).collect();
     match mode {
         Mode::Ddi => {
             // Whole model locally: chain every stage, exit at K.
-            let mut feats = task.features.clone();
-            let mut out = None;
+            let mut feats: Vec<Option<Tensor>> =
+                batch.iter_mut().map(|t| t.features.take()).collect();
+            let mut outs: Option<Vec<StageOutput>> = None;
             for k in 1..=num_stages {
-                let o = engine.run_stage(k, task.sample, feats.as_ref())?;
-                feats = o.features.clone();
-                out = Some(o);
+                let refs: Vec<Option<&Tensor>> = feats.iter().map(|f| f.as_ref()).collect();
+                let o = engine.run_stage_batch(k, &samples, &refs)?;
+                feats = o.iter().map(|s| s.features.clone()).collect();
+                outs = Some(o);
             }
-            Ok((out.expect("model has at least one stage"), num_stages))
+            let outs = outs.expect("model has at least one stage");
+            Ok(outs.into_iter().map(|o| (o, num_stages)).collect())
         }
         Mode::MdiExit => {
-            let o = engine.run_stage(task.stage, task.sample, task.features.as_ref())?;
-            Ok((o, task.stage))
+            let stage = batch[0].stage;
+            debug_assert!(
+                batch.iter().all(|t| t.stage == stage),
+                "compute batches are same-stage by construction"
+            );
+            let refs: Vec<Option<&Tensor>> =
+                batch.iter().map(|t| t.features.as_ref()).collect();
+            let outs = engine.run_stage_batch(stage, &samples, &refs)?;
+            Ok(outs.into_iter().map(|o| (o, stage)).collect())
         }
     }
 }
@@ -853,8 +941,9 @@ mod tests {
         let acts = w.on_task(0.0, task, TaskOrigin::Admitted);
         assert_eq!(acts.len(), 1);
         match &acts[0] {
-            Action::StartCompute { task, est_cost_s } => {
-                assert_eq!(task.stage, 1);
+            Action::StartCompute { batch, est_cost_s } => {
+                assert_eq!(batch.len(), 1, "default policy is unbatched");
+                assert_eq!(batch[0].stage, 1);
                 // stage-1 cost 2 ms, ±3% noise, speed 1.0
                 assert!((0.0012..0.0028).contains(est_cost_s), "est {est_cost_s}");
             }
@@ -873,19 +962,19 @@ mod tests {
         let mut src = core(0, &cfg, "2-node");
         let (task, _) = src.poll_admission(0.0);
         let started = src.on_task(0.0, task, TaskOrigin::Admitted);
-        let Action::StartCompute { task, .. } = started.into_iter().next().unwrap() else {
+        let Action::StartCompute { batch, .. } = started.into_iter().next().unwrap() else {
             panic!("no compute");
         };
-        let acts = src.on_compute_done(0.01, task, out(0.99), 1, 0.002);
+        let acts = src.on_compute_done(0.01, batch, vec![(out(0.99), 1)], 0.002);
         assert!(matches!(acts[0], Action::RecordResult { .. }), "{acts:?}");
 
         let mut remote = core(1, &cfg, "2-node");
         let task = Task::initial(9, 0, None, 0.0);
         let started = remote.on_task(0.0, task, TaskOrigin::Wire);
-        let Action::StartCompute { task, .. } = started.into_iter().next().unwrap() else {
+        let Action::StartCompute { batch, .. } = started.into_iter().next().unwrap() else {
             panic!("no compute");
         };
-        let acts = remote.on_compute_done(0.01, task, out(0.99), 1, 0.002);
+        let acts = remote.on_compute_done(0.01, batch, vec![(out(0.99), 1)], 0.002);
         match &acts[0] {
             Action::Send { to: 0, payload: Payload::Result(r), bytes, .. } => {
                 assert_eq!(*bytes, RESULT_BYTES);
@@ -901,7 +990,7 @@ mod tests {
         let mut w = core(0, &cfg, "local");
         let task = Task { stage: 2, ..Task::initial(1, 0, None, 0.0) };
         w.busy = true; // as if StartCompute had been issued
-        let acts = w.on_compute_done(0.0, task, out(0.01), 2, 0.003);
+        let acts = w.on_compute_done(0.0, vec![task], vec![(out(0.01), 2)], 0.003);
         assert!(matches!(acts[0], Action::RecordResult { .. }));
     }
 
@@ -916,7 +1005,7 @@ mod tests {
             w.on_task(i as f64 * 0.01, t, TaskOrigin::Admitted);
         }
         let task = Task::initial(50, 0, None, 0.0);
-        let acts = w.on_compute_done(0.05, task, out(0.10), 1, 0.002);
+        let acts = w.on_compute_done(0.05, vec![task], vec![(out(0.10), 1)], 0.002);
         // Successor went to the output queue; neighbor view is unknown so
         // the default (I_m = 0) applies: O_n = 1 > I_m = 0 opens the gate.
         let sent = acts.iter().any(|a| {
@@ -937,7 +1026,7 @@ mod tests {
             w.on_task(i as f64 * 0.01, t, TaskOrigin::Admitted);
         }
         let task = Task::initial(50, 0, None, 0.0);
-        let acts = w.on_compute_done(0.05, task, out(0.10), 1, 0.002);
+        let acts = w.on_compute_done(0.05, vec![task], vec![(out(0.10), 1)], 0.002);
         let sent = acts
             .iter()
             .any(|a| matches!(a, Action::Send { payload: Payload::Task(_), .. }));
@@ -982,10 +1071,28 @@ mod tests {
         }
         // One is computing; three are queued.
         assert_eq!(remote.input_len(), 3);
+        let peak = 3; // three tasks were simultaneously queued
         let acts = remote.on_churn(1.0, 1, false);
         assert_eq!(acts.len(), 3);
-        assert!(acts.iter().all(|a| matches!(a, Action::Rehome { .. })));
+        // Re-homing preserves admission order (ties broken by id here,
+        // since every task was admitted at t=0).
+        let rehomed: Vec<u64> = acts
+            .iter()
+            .map(|a| match a {
+                Action::Rehome { task } => task.id,
+                other => panic!("expected Rehome, got {other:?}"),
+            })
+            .collect();
+        assert_eq!(rehomed, vec![1, 2, 3], "rehome must preserve arrival order");
         assert!(!remote.is_active());
+        // Queue accounting survives the churn drain.
+        let stats = remote.into_stats();
+        assert_eq!(stats.peak_input, peak, "drain must not reset peak occupancy");
+        let mut remote = core(1, &cfg, "2-node");
+        for i in 0..4 {
+            remote.on_task(0.0, Task::initial(i, 0, None, 0.0), TaskOrigin::Wire);
+        }
+        let _ = remote.on_churn(1.0, 1, false);
         // A late wire arrival also re-homes.
         let acts = remote.on_task(1.1, Task::initial(99, 0, None, 1.0), TaskOrigin::Wire);
         assert!(matches!(acts[0], Action::Rehome { .. }));
@@ -998,7 +1105,7 @@ mod tests {
             src.on_task(i as f64 * 0.001, t, TaskOrigin::Admitted);
         }
         let task = Task::initial(50, 0, None, 0.0);
-        let acts = src.on_compute_done(1.2, task, out(0.1), 1, 0.002);
+        let acts = src.on_compute_done(1.2, vec![task], vec![(out(0.1), 1)], 0.002);
         assert!(
             !acts.iter().any(|a| matches!(a, Action::Send { payload: Payload::Task(_), .. })),
             "must not offload to a churned-out peer: {acts:?}"
@@ -1017,7 +1124,8 @@ mod tests {
         w.try_offload(0.0, &mut acts);
         assert_eq!(w.output_len(), 0, "head-of-line task reclaimed");
         assert!(
-            matches!(acts.as_slice(), [Action::StartCompute { task, .. }] if task.stage == 2),
+            matches!(acts.as_slice(),
+                     [Action::StartCompute { batch, .. }] if batch[0].stage == 2),
             "{acts:?}"
         );
     }
@@ -1060,5 +1168,173 @@ mod tests {
         }
         targets.sort_unstable();
         assert_eq!(targets, vec![0, 1, 2], "round-robin covers all workers");
+    }
+
+    // -- scheduling subsystem through the core --------------------------------
+
+    use crate::sched::{BatchPolicy, DisciplineKind};
+
+    fn cfg_batched(max_batch: usize) -> ExperimentConfig {
+        let mut cfg = cfg_fixed("local", 50.0, 0.9);
+        cfg.sched.batch = BatchPolicy::batched(max_batch);
+        cfg
+    }
+
+    #[test]
+    fn admission_stamps_rotating_classes_and_deadlines() {
+        let mut cfg = cfg_fixed("local", 50.0, 0.9);
+        cfg.sched = cfg.sched.with_classes(3);
+        cfg.sched.class_deadline_s = vec![0.1, 0.5, 2.0];
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("local"), 8);
+        let (t0, _) = w.poll_admission(1.0);
+        let (t1, _) = w.poll_admission(1.0);
+        let (t2, _) = w.poll_admission(1.0);
+        let (t3, _) = w.poll_admission(1.0);
+        assert_eq!([t0.class, t1.class, t2.class, t3.class], [0, 1, 2, 0]);
+        assert!((t0.deadline - 1.1).abs() < 1e-9);
+        assert!((t1.deadline - 1.5).abs() < 1e-9);
+        assert!((t2.deadline - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queued_same_stage_tasks_start_as_one_batch() {
+        let cfg = cfg_batched(4);
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("local"), 8);
+        let (t, _) = w.poll_admission(0.0);
+        let started = w.on_task(0.0, t, TaskOrigin::Admitted);
+        let Action::StartCompute { batch, .. } = started.into_iter().next().unwrap() else {
+            panic!("no compute");
+        };
+        assert_eq!(batch.len(), 1, "nothing else queued yet");
+        // Three more stage-1 tasks arrive while busy.
+        for i in 1..4 {
+            let (t, _) = w.poll_admission(i as f64 * 0.01);
+            assert!(w.on_task(i as f64 * 0.01, t, TaskOrigin::Admitted).is_empty());
+        }
+        assert_eq!(w.input_len(), 3);
+        // Completing the head batch starts the rest as ONE batched forward
+        // whose estimated cost is amortized (3 tasks ≪ 3x one-task cost).
+        let acts = w.on_compute_done(0.05, batch, vec![(out(0.99), 1)], 0.002);
+        let next = acts
+            .iter()
+            .find_map(|a| match a {
+                Action::StartCompute { batch, est_cost_s } => Some((batch, *est_cost_s)),
+                _ => None,
+            })
+            .expect("follow-up batch");
+        assert_eq!(next.0.len(), 3, "same-stage run batched together");
+        assert!(next.0.iter().all(|t| t.stage == 1));
+        // stage-1 cost 2 ms: batch of 3 at marginal 0.25 => 1.5 x 2 ms,
+        // ±3% noise — far below the 6 ms an unbatched trio would cost.
+        assert!((0.0020..0.0045).contains(&next.1), "batched est {}", next.1);
+        assert_eq!(w.input_len(), 0);
+    }
+
+    #[test]
+    fn partial_batch_exits_split_between_results_and_successors() {
+        let cfg = cfg_batched(4);
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("local"), 8);
+        let batch: Vec<Task> = (0..3).map(|i| Task::initial(i, i as usize, None, 0.0)).collect();
+        w.busy = true; // as if StartCompute had been issued for `batch`
+        let results = vec![(out(0.99), 1), (out(0.10), 1), (out(0.95), 1)];
+        let acts = w.on_compute_done(0.01, batch, results, 0.004);
+        let exits =
+            acts.iter().filter(|a| matches!(a, Action::RecordResult { .. })).count();
+        assert_eq!(exits, 2, "confident elements exit: {acts:?}");
+        // The low-confidence element continued to stage 2 (input was empty
+        // at decision time so it stayed local) and is now computing.
+        let started = acts.iter().any(|a| {
+            matches!(a, Action::StartCompute { batch, .. }
+                     if batch.len() == 1 && batch[0].stage == 2)
+        });
+        assert!(started, "successor continues at stage 2: {acts:?}");
+    }
+
+    #[test]
+    fn mid_batch_churn_rehomes_continuing_elements() {
+        let cfg = cfg_batched(4);
+        let mut w = WorkerCore::new(1, &cfg, meta2(), &topo("2-node"), 8);
+        let batch: Vec<Task> = (0..3).map(|i| Task::initial(i, i as usize, None, 0.0)).collect();
+        w.busy = true;
+        // The worker churns out while the batch is on the engine.
+        let _ = w.on_churn(0.005, 1, false);
+        assert!(!w.is_active());
+        let results = vec![(out(0.99), 1), (out(0.10), 1), (out(0.20), 1)];
+        let acts = w.on_compute_done(0.01, batch, results, 0.004);
+        // The confident element still exits (the result is real work, sent
+        // to the source); the continuing elements re-home instead of
+        // stranding on an inactive queue.
+        let sends = acts
+            .iter()
+            .filter(|a| matches!(a, Action::Send { payload: Payload::Result(_), .. }))
+            .count();
+        let rehomes = acts.iter().filter(|a| matches!(a, Action::Rehome { .. })).count();
+        assert_eq!(sends, 1, "{acts:?}");
+        assert_eq!(rehomes, 2, "{acts:?}");
+        assert_eq!(w.input_len(), 0, "nothing queued on the inactive worker");
+    }
+
+    #[test]
+    fn strict_priority_input_serves_class_zero_first() {
+        let mut cfg = cfg_fixed("2-node", 50.0, 0.9);
+        cfg.sched.discipline = DisciplineKind::StrictPriority;
+        cfg.sched = cfg.sched.with_classes(2);
+        let mut w = WorkerCore::new(1, &cfg, meta2(), &topo("2-node"), 8);
+        w.busy = true; // hold the queue while traffic accumulates
+        for (id, class) in [(1u64, 1u8), (2, 1), (3, 0)] {
+            let t = Task { class, ..Task::initial(id, 0, None, 0.0) };
+            assert!(w.on_task(0.0, t, TaskOrigin::Wire).is_empty());
+        }
+        assert_eq!(w.input_class_len(0), 1);
+        assert_eq!(w.input_class_len(1), 2);
+        let done = Task::initial(9, 0, None, 0.0);
+        let acts = w.on_compute_done(0.01, vec![done], vec![(out(0.99), 1)], 0.002);
+        let started = acts
+            .iter()
+            .find_map(|a| match a {
+                Action::StartCompute { batch, .. } => Some(&batch[0]),
+                _ => None,
+            })
+            .expect("next task starts");
+        assert_eq!(started.class, 0, "class 0 jumps the two queued class-1 tasks");
+        assert_eq!(started.id, 3);
+    }
+
+    #[test]
+    fn edf_drop_late_counts_into_stats() {
+        let mut cfg = cfg_fixed("local", 50.0, 0.9);
+        cfg.warmup_s = 0.0; // drops are windowed like every other counter
+        cfg.sched.discipline = DisciplineKind::Edf { drop_late: true };
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("local"), 8);
+        w.busy = true;
+        for id in 0..3 {
+            let t = Task { deadline: 0.5, ..Task::initial(id, 0, None, 0.0) };
+            assert!(w.on_task(0.0, t, TaskOrigin::Wire).is_empty());
+        }
+        // All three deadlines expired before the engine freed up: the pop
+        // drains them as drops and nothing starts.
+        let done = Task::initial(9, 0, None, 0.0);
+        let acts = w.on_compute_done(1.0, vec![done], vec![(out(0.99), 1)], 0.002);
+        assert!(
+            !acts.iter().any(|a| matches!(a, Action::StartCompute { .. })),
+            "{acts:?}"
+        );
+        let stats = w.into_stats();
+        assert_eq!(stats.dropped, 3);
+        assert_eq!(stats.dropped_per_class, vec![3]);
+    }
+
+    #[test]
+    fn abort_compute_drops_failed_batch_with_accounting() {
+        let mut cfg = cfg_batched(4);
+        cfg.warmup_s = 0.0;
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("local"), 8);
+        let batch: Vec<Task> = (0..3).map(|i| Task::initial(i, i as usize, None, 0.0)).collect();
+        w.busy = true; // as if StartCompute had handed out `batch`
+        let acts = w.abort_compute(0.01, batch);
+        assert!(acts.is_empty(), "nothing queued to restart: {acts:?}");
+        let stats = w.into_stats();
+        assert_eq!(stats.dropped, 3, "failed batch is accounted, not lost silently");
+        assert_eq!(stats.dropped_per_class, vec![3]);
     }
 }

@@ -35,6 +35,7 @@ pub mod coordinator;
 pub mod dataset;
 pub mod experiments;
 pub mod runtime;
+pub mod sched;
 pub mod simnet;
 pub mod tensor;
 pub mod testkit;

@@ -15,6 +15,7 @@ use mdi_exit::artifact::Manifest;
 use mdi_exit::cli::Args;
 use mdi_exit::coordinator::{AdmissionMode, Driver, ExperimentConfig, Run};
 use mdi_exit::experiments as exp;
+use mdi_exit::sched::DisciplineKind;
 use mdi_exit::util::toml::Config as Toml;
 
 fn main() {
@@ -61,6 +62,11 @@ fn print_help() {
            --model M --topology T --threshold X --rate HZ --duration S\n\
            --adaptive-rate | --adaptive-threshold   admission mode\n\
            --use-ae --no-ee  feature toggles\n\
+           --sched D         queue discipline: fifo (default) | priority | edf\n\
+           --classes N       traffic classes, stamped round-robin at admission\n\
+           --class-deadline S  per-class latency budget (EDF deadline stamp)\n\
+           --drop-late       EDF: discard tasks whose deadline passed\n\
+           --batch N         max same-stage tasks per batched engine call\n\
            --json            print the full RunReport as JSON"
     );
 }
@@ -115,6 +121,23 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     cfg.duration_s = args.f64_or("duration", 30.0)?;
     cfg.warmup_s = args.f64_or("warmup", 5.0)?;
     cfg.compute_scale = args.f64_or("compute-scale", 0.125)?;
+    // Scheduling subsystem: discipline, traffic classes, batching.
+    let classes = args.usize_or("classes", 1)?;
+    if !(1..=255).contains(&classes) {
+        bail!("--classes {classes} outside 1..=255");
+    }
+    cfg.sched = cfg.sched.with_classes(classes as u8);
+    cfg.sched.discipline = match args.str_or("sched", "fifo") {
+        "fifo" => DisciplineKind::Fifo,
+        "priority" => DisciplineKind::StrictPriority,
+        "edf" => DisciplineKind::Edf { drop_late: args.bool_or("drop-late", false)? },
+        other => bail!("unknown --sched {other:?} (fifo|priority|edf)"),
+    };
+    let deadline = args.f64_or("class-deadline", 0.0)?;
+    if deadline > 0.0 {
+        cfg.sched.class_deadline_s = vec![deadline; classes];
+    }
+    cfg.sched.batch.max_batch = args.usize_or("batch", 1)?;
     cfg.seed = args.u64_or("seed", 7)?;
     Ok(cfg)
 }
@@ -155,6 +178,16 @@ fn cmd_run(args: &Args, artifacts: &str) -> Result<()> {
                  report.exit_fractions().iter().map(|f| (f * 100.0).round() / 100.0)
                        .collect::<Vec<_>>());
         println!("  bytes on wire {:>10}", report.bytes_on_wire);
+        if report.per_class.len() > 1 || report.dropped > 0 {
+            for (c, cs) in report.per_class.iter_mut().enumerate() {
+                println!(
+                    "  class {c}: completed {:>8}  p95 {:>8.2} ms  dropped {:>6}",
+                    cs.completed,
+                    cs.latency.p95() * 1e3,
+                    cs.dropped
+                );
+            }
+        }
         if let Some(mu) = report.final_mu_s {
             println!("  final mu      {:>10.4} s ({:.2} Hz)", mu, 1.0 / mu);
         }

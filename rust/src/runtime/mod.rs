@@ -57,6 +57,26 @@ pub trait InferenceEngine {
     fn run_stage(&self, k: usize, sample: usize, features: Option<&Tensor>)
         -> Result<StageOutput>;
 
+    /// Execute stage k for a batch of samples with **one** engine call,
+    /// returning one output per sample in order. The default loops
+    /// [`InferenceEngine::run_stage`]; engines whose per-call dispatch
+    /// dominates (cost emulation, PJRT program launch) override it so the
+    /// fixed cost is paid once per batch — the whole point of the
+    /// coordinator's batched `StartCompute`.
+    fn run_stage_batch(
+        &self,
+        k: usize,
+        samples: &[usize],
+        features: &[Option<&Tensor>],
+    ) -> Result<Vec<StageOutput>> {
+        debug_assert_eq!(samples.len(), features.len());
+        samples
+            .iter()
+            .zip(features)
+            .map(|(&s, f)| self.run_stage(k, s, *f))
+            .collect()
+    }
+
     /// Autoencoder encode at the stage-1 boundary (paper §V). Only
     /// meaningful for models with an AE; `None` otherwise.
     fn encode(&self, _features: &Tensor) -> Result<Option<Tensor>> {

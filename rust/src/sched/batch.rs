@@ -1,0 +1,150 @@
+//! Same-stage batch formation for `StartCompute` (the DEFER insight:
+//! amortize the fixed per-stage dispatch cost over several tasks).
+
+use super::discipline::QueueDiscipline;
+use crate::coordinator::task::Task;
+
+/// How `WorkerCore` groups queued tasks into one engine call.
+///
+/// A batch is always *same-stage*: the engine runs one batched forward of
+/// stage k, so every element must enter the same layers. The policy pops
+/// the discipline's head task, then keeps popping while the next scheduled
+/// task is at the same stage, up to `max_batch`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPolicy {
+    /// Maximum tasks per `StartCompute` (1 = unbatched, the seed behaviour).
+    pub max_batch: usize,
+    /// Marginal cost of each extra task in a batch, as a fraction of the
+    /// stage cost: a batch of b costs `stage_cost * (1 + (b-1) * marginal)`.
+    /// 0 models a fully dispatch-bound stage; 1 disables amortization.
+    pub marginal: f64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> BatchPolicy {
+        BatchPolicy { max_batch: 1, marginal: 0.25 }
+    }
+}
+
+impl BatchPolicy {
+    /// Unbatched (identical to the seed's one-task-at-a-time hot path).
+    pub fn unbatched() -> BatchPolicy {
+        BatchPolicy::default()
+    }
+
+    /// Batch up to `n` same-stage tasks with the default marginal cost.
+    pub fn batched(n: usize) -> BatchPolicy {
+        BatchPolicy { max_batch: n.max(1), ..BatchPolicy::default() }
+    }
+
+    /// Pop a same-stage batch off `q`. Empty only if `q` yields nothing
+    /// (e.g. EDF `drop_late` aged out every queued task). Expired work is
+    /// discarded up front so `peek` is truthful during formation — a
+    /// re-push here would double-count `total_enqueued`.
+    pub fn form(&self, q: &mut dyn QueueDiscipline, now: f64) -> Vec<Task> {
+        q.expire(now);
+        let mut batch = Vec::new();
+        let Some(first) = q.pop_next(now) else {
+            return batch;
+        };
+        let stage = first.stage;
+        batch.push(first);
+        while batch.len() < self.max_batch {
+            match q.peek() {
+                Some(t) if t.stage == stage => {
+                    batch.push(q.pop_next(now).expect("peeked task"));
+                }
+                _ => break,
+            }
+        }
+        batch
+    }
+
+    /// Virtual compute cost of a batch of `batch_len` tasks at a stage
+    /// whose single-task cost is `stage_cost_s`.
+    pub fn batch_cost(&self, stage_cost_s: f64, batch_len: usize) -> f64 {
+        stage_cost_s * (1.0 + (batch_len.saturating_sub(1)) as f64 * self.marginal)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Edf, Fifo};
+    use super::*;
+
+    fn task(id: u64, stage: usize) -> Task {
+        Task { stage, ..Task::initial(id, id as usize, None, 0.0) }
+    }
+
+    #[test]
+    fn forms_same_stage_run_up_to_max() {
+        let mut q = Fifo::new();
+        for i in 0..3 {
+            q.push(task(i, 1));
+        }
+        q.push(task(3, 2));
+        q.push(task(4, 1));
+        let b = BatchPolicy::batched(8).form(&mut q, 0.0);
+        let ids: Vec<u64> = b.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![0, 1, 2], "stops at the stage boundary");
+        assert_eq!(q.len(), 2);
+        let b = BatchPolicy::batched(8).form(&mut q, 0.0);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].stage, 2);
+    }
+
+    #[test]
+    fn max_batch_caps_the_run() {
+        let mut q = Fifo::new();
+        for i in 0..6 {
+            q.push(task(i, 1));
+        }
+        let b = BatchPolicy::batched(4).form(&mut q, 0.0);
+        assert_eq!(b.len(), 4);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn unbatched_pops_exactly_one() {
+        let mut q = Fifo::new();
+        q.push(task(0, 1));
+        q.push(task(1, 1));
+        let b = BatchPolicy::unbatched().form(&mut q, 0.0);
+        assert_eq!(b.len(), 1);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn empty_queue_forms_empty_batch() {
+        let mut q = Fifo::new();
+        assert!(BatchPolicy::batched(4).form(&mut q, 0.0).is_empty());
+    }
+
+    #[test]
+    fn edf_age_out_mid_batch_is_safe() {
+        // Expired work is discarded before formation, so the peeked stage
+        // is always the popped stage and no task is ever re-pushed (which
+        // would double-count total_enqueued).
+        let mut q = Edf::new(true);
+        q.push(Task { stage: 1, deadline: 10.0, ..Task::initial(1, 1, None, 0.0) });
+        q.push(Task { stage: 1, deadline: 1.0, ..Task::initial(2, 2, None, 0.0) });
+        q.push(Task { stage: 2, deadline: 20.0, ..Task::initial(3, 3, None, 0.0) });
+        // now = 5: task 2 (deadline 1) expires up front; task 1 (stage 1)
+        // heads the batch; task 3 (stage 2) stops it.
+        let b = BatchPolicy::batched(4).form(&mut q, 5.0);
+        let ids: Vec<u64> = b.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![1]);
+        assert_eq!(q.len(), 1, "stage-2 task still queued");
+        assert_eq!(q.total_enqueued(), 3, "formation must not re-count pushes");
+        assert_eq!(q.dropped_per_class(), &[1u64][..]);
+    }
+
+    #[test]
+    fn batch_cost_amortizes_marginal() {
+        let p = BatchPolicy { max_batch: 8, marginal: 0.25 };
+        assert!((p.batch_cost(0.004, 1) - 0.004).abs() < 1e-12);
+        assert!((p.batch_cost(0.004, 5) - 0.004 * 2.0).abs() < 1e-12);
+        // per-task cost falls with batch size
+        assert!(p.batch_cost(0.004, 8) / 8.0 < 0.004 / 2.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! The [`QueueDiscipline`] trait and the FIFO baseline.
+
+use crate::coordinator::queues::TaskQueue;
+use crate::coordinator::task::Task;
+
+/// A scheduling discipline for one worker queue (I_n or O_n).
+///
+/// Contract, relied on by `WorkerCore` and the run reports:
+///
+/// * `len()` is the live occupancy — the signal Algs 1–4 consume;
+/// * `peak()` and `total_enqueued()` are monotone accounting: a
+///   [`QueueDiscipline::drain_all`] (churn re-homing) empties the queue but
+///   leaves both untouched;
+/// * `drain_all()` yields the queued tasks in *arrival order* (push
+///   order), regardless of the discipline's service order, so re-homed
+///   work replays at the source in the order it was admitted;
+/// * `pop_next(now)` may return `None` while `len() > 0` only transiently
+///   (a deadline-aware discipline aging out every remaining task), never
+///   lose a task silently: anything discarded shows up in
+///   [`QueueDiscipline::dropped_per_class`].
+pub trait QueueDiscipline: std::fmt::Debug + Send {
+    /// Enqueue a task.
+    fn push(&mut self, t: Task);
+
+    /// Dequeue the task the discipline schedules next. `now` lets
+    /// deadline-aware disciplines age out expired tasks at pop time.
+    fn pop_next(&mut self, now: f64) -> Option<Task>;
+
+    /// Discard everything the discipline would age out at `now`, so a
+    /// following `peek` is truthful about what `pop_next` will return
+    /// (batch formation relies on this). No-op for disciplines that never
+    /// discard.
+    fn expire(&mut self, _now: f64) {}
+
+    /// The task `pop_next` would serve next (ignoring age-out; call
+    /// [`QueueDiscipline::expire`] first when that matters).
+    fn peek(&self) -> Option<&Task>;
+
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Peak occupancy ever observed (report accounting; never reset).
+    fn peak(&self) -> usize;
+
+    /// Total tasks ever pushed (report accounting; never reset).
+    fn total_enqueued(&self) -> u64;
+
+    /// Live occupancy of one traffic class.
+    fn class_len(&self, class: u8) -> usize;
+
+    /// Tasks discarded by the discipline per class (EDF `drop_late`);
+    /// empty for disciplines that never discard.
+    fn dropped_per_class(&self) -> &[u64] {
+        &[]
+    }
+
+    /// Remove every queued task, in arrival order. Peak/total accounting
+    /// is preserved (the drain is churn bookkeeping, not service).
+    fn drain_all(&mut self) -> Vec<Task>;
+}
+
+/// Live per-class occupancy counters shared by the disciplines.
+#[derive(Debug, Default, Clone)]
+pub(crate) struct ClassCounts(Vec<usize>);
+
+impl ClassCounts {
+    pub(crate) fn add(&mut self, class: u8) {
+        let i = class as usize;
+        if self.0.len() <= i {
+            self.0.resize(i + 1, 0);
+        }
+        self.0[i] += 1;
+    }
+
+    pub(crate) fn sub(&mut self, class: u8) {
+        let i = class as usize;
+        debug_assert!(self.0.get(i).is_some_and(|&c| c > 0), "class {i} count underflow");
+        if let Some(c) = self.0.get_mut(i) {
+            *c = c.saturating_sub(1);
+        }
+    }
+
+    pub(crate) fn get(&self, class: u8) -> usize {
+        self.0.get(class as usize).copied().unwrap_or(0)
+    }
+
+    pub(crate) fn clear(&mut self) {
+        self.0.iter_mut().for_each(|c| *c = 0);
+    }
+}
+
+/// First-in-first-out — the seed's `TaskQueue` behaviour, bit for bit:
+/// push/pop carry zero extra bookkeeping (they are the benchmarked hot
+/// path); per-class occupancy is a cold-path scan.
+#[derive(Debug, Default)]
+pub struct Fifo {
+    q: TaskQueue,
+}
+
+impl Fifo {
+    pub fn new() -> Fifo {
+        Fifo::default()
+    }
+}
+
+impl QueueDiscipline for Fifo {
+    fn push(&mut self, t: Task) {
+        self.q.push(t);
+    }
+
+    fn pop_next(&mut self, _now: f64) -> Option<Task> {
+        self.q.pop()
+    }
+
+    fn peek(&self) -> Option<&Task> {
+        self.q.peek()
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    fn peak(&self) -> usize {
+        self.q.peak()
+    }
+
+    fn total_enqueued(&self) -> u64 {
+        self.q.total_enqueued()
+    }
+
+    fn class_len(&self, class: u8) -> usize {
+        self.q.iter().filter(|t| t.class == class).count()
+    }
+
+    fn drain_all(&mut self) -> Vec<Task> {
+        self.q.drain_all()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: u64, class: u8) -> Task {
+        Task { class, ..Task::initial(id, id as usize, None, id as f64) }
+    }
+
+    #[test]
+    fn fifo_serves_in_arrival_order() {
+        let mut q = Fifo::new();
+        q.push(task(1, 1));
+        q.push(task(2, 0));
+        q.push(task(3, 1));
+        assert_eq!(q.peek().unwrap().id, 1);
+        assert_eq!(q.pop_next(0.0).unwrap().id, 1);
+        assert_eq!(q.pop_next(0.0).unwrap().id, 2);
+        assert_eq!(q.pop_next(0.0).unwrap().id, 3);
+        assert!(q.pop_next(0.0).is_none());
+    }
+
+    #[test]
+    fn fifo_accounting_matches_seed_taskqueue() {
+        let mut q = Fifo::new();
+        for i in 0..5 {
+            q.push(task(i, (i % 2) as u8));
+        }
+        q.pop_next(0.0);
+        q.pop_next(0.0);
+        q.push(task(9, 1));
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.peak(), 5);
+        assert_eq!(q.total_enqueued(), 6);
+        assert_eq!(q.class_len(0), 2); // ids 2, 4
+        assert_eq!(q.class_len(1), 2); // ids 3, 9
+        assert!(q.dropped_per_class().is_empty());
+    }
+
+    #[test]
+    fn fifo_drain_preserves_arrival_order_and_accounting() {
+        let mut q = Fifo::new();
+        for i in 0..4 {
+            q.push(task(i, 0));
+        }
+        let peak = q.peak();
+        let total = q.total_enqueued();
+        let drained = q.drain_all();
+        let ids: Vec<u64> = drained.iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3], "drain must preserve arrival order");
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.class_len(0), 0);
+        assert_eq!(q.peak(), peak, "drain must not reset peak");
+        assert_eq!(q.total_enqueued(), total, "drain must not reset total_enqueued");
+    }
+}

@@ -1,0 +1,198 @@
+//! Pluggable scheduling: queue disciplines, traffic classes, and batching.
+//!
+//! The paper's Algorithms 1–4 consume queue *lengths* only, so the FIFO
+//! order of the seed's `TaskQueue` was an implementation accident, not a
+//! design requirement. This module turns the per-worker queues into a
+//! policy surface consumed by [`crate::coordinator::WorkerCore`]:
+//!
+//! * [`QueueDiscipline`] — the trait the core's I_n/O_n queues implement
+//!   (push / pop-next / peek / occupancy accounting / per-class lengths /
+//!   arrival-order drain for churn re-homing).
+//! * [`Fifo`] — the paper's baseline, bit-for-bit the seed behaviour
+//!   (backed by the original [`crate::coordinator::queues::TaskQueue`]).
+//! * [`StrictPriority`] — N traffic classes, lower class number served
+//!   first, FIFO within a class. Models the class-aware queueing of
+//!   *Priority-Aware Model-Distributed Inference at Edge Networks*
+//!   (arXiv 2412.12371, PAPERS.md): under overload, deadline-critical
+//!   traffic keeps a short queue while bulk traffic absorbs the backlog.
+//! * [`Edf`] — earliest-deadline-first. Deadlines are stamped at admission
+//!   from a per-class latency budget ([`SchedConfig::class_deadline_s`]);
+//!   with [`DisciplineKind::Edf`]`::drop_late` the discipline ages out
+//!   tasks whose deadline already passed instead of wasting compute on
+//!   them (counted per class in the run report).
+//! * [`BatchPolicy`] — lets the core's `poll_next` form a *same-stage*
+//!   batch so one `StartCompute` carries several tasks and the engine runs
+//!   one batched forward per stage. This is the DEFER insight (arXiv
+//!   2201.06769, PAPERS.md): distributed-edge throughput comes from
+//!   amortizing the fixed per-stage dispatch cost over a batch.
+//!
+//! Every discipline preserves three invariants the coordinator relies on:
+//! `len()` is the live occupancy signal for Algs 1–4, `peak()` /
+//! `total_enqueued()` are monotone accounting that survives churn drains,
+//! and `drain_all()` returns tasks in *arrival order* so re-homed work
+//! replays at the source in the order it was admitted.
+
+mod batch;
+mod discipline;
+mod priority;
+
+pub use batch::BatchPolicy;
+pub use discipline::{Fifo, QueueDiscipline};
+pub use priority::{Edf, StrictPriority};
+
+/// Which queue discipline the worker queues run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DisciplineKind {
+    /// Arrival order (the seed behaviour; the paper's implicit choice).
+    Fifo,
+    /// Strict priority across classes, FIFO within a class.
+    StrictPriority,
+    /// Earliest deadline first. `drop_late` discards tasks whose deadline
+    /// already passed at pop time (counted, never silently lost).
+    Edf { drop_late: bool },
+}
+
+/// Scheduling configuration consumed by the `Run` builder / `WorkerCore`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchedConfig {
+    pub discipline: DisciplineKind,
+    /// Number of traffic classes; admission stamps classes round-robin
+    /// (class 0 = highest priority).
+    pub num_classes: u8,
+    /// Per-class latency budget (seconds): a task admitted at `t` gets
+    /// deadline `t + class_deadline_s[class]`. Only deadline-aware
+    /// disciplines read it. Length equals `num_classes` after `validate`.
+    pub class_deadline_s: Vec<f64>,
+    pub batch: BatchPolicy,
+}
+
+impl Default for SchedConfig {
+    fn default() -> SchedConfig {
+        SchedConfig {
+            discipline: DisciplineKind::Fifo,
+            num_classes: 1,
+            class_deadline_s: vec![1.0],
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+impl SchedConfig {
+    /// Set the class count, broadcasting the last deadline budget to any
+    /// newly added classes.
+    pub fn with_classes(mut self, n: u8) -> SchedConfig {
+        let n = n.max(1);
+        self.num_classes = n;
+        let last = self.class_deadline_s.last().copied().unwrap_or(1.0);
+        self.class_deadline_s.resize(n as usize, last);
+        self
+    }
+
+    /// Deadline budget for `class` (classes beyond the configured count
+    /// inherit the last budget).
+    pub fn deadline_for(&self, class: u8) -> f64 {
+        self.class_deadline_s
+            .get(class as usize)
+            .or(self.class_deadline_s.last())
+            .copied()
+            .unwrap_or(f64::INFINITY)
+    }
+
+    /// Build one queue instance of the configured discipline.
+    /// `measure_from` is the run's warmup boundary: drops before it are
+    /// discarded but excluded from the counters, like every other stat.
+    pub fn build_queue(&self, measure_from: f64) -> Box<dyn QueueDiscipline> {
+        match self.discipline {
+            DisciplineKind::Fifo => Box::new(Fifo::new()),
+            DisciplineKind::StrictPriority => {
+                Box::new(StrictPriority::new(self.num_classes))
+            }
+            DisciplineKind::Edf { drop_late } => {
+                Box::new(Edf::new(drop_late).measured_from(measure_from))
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.num_classes == 0 {
+            return Err("num_classes must be >= 1".into());
+        }
+        if self.class_deadline_s.len() != self.num_classes as usize {
+            return Err(format!(
+                "class_deadline_s has {} entries for {} classes",
+                self.class_deadline_s.len(),
+                self.num_classes
+            ));
+        }
+        if self.class_deadline_s.iter().any(|&d| !(d > 0.0)) {
+            return Err("class deadline budgets must be positive".into());
+        }
+        if self.batch.max_batch == 0 {
+            return Err("max_batch must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.batch.marginal) {
+            return Err(format!("batch marginal {} outside [0,1]", self.batch.marginal));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_seed_equivalent() {
+        let s = SchedConfig::default();
+        assert_eq!(s.discipline, DisciplineKind::Fifo);
+        assert_eq!(s.num_classes, 1);
+        assert_eq!(s.batch.max_batch, 1);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn with_classes_broadcasts_deadlines() {
+        let s = SchedConfig { class_deadline_s: vec![0.25], ..SchedConfig::default() }
+            .with_classes(3);
+        assert_eq!(s.class_deadline_s, vec![0.25, 0.25, 0.25]);
+        assert!((s.deadline_for(1) - 0.25).abs() < 1e-12);
+        // classes beyond the configured count inherit the last budget
+        assert!((s.deadline_for(9) - 0.25).abs() < 1e-12);
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_bad_shapes() {
+        let s = SchedConfig { num_classes: 0, ..SchedConfig::default() };
+        assert!(s.validate().is_err());
+        let mut s = SchedConfig::default().with_classes(2);
+        s.class_deadline_s = vec![1.0]; // one budget for two classes
+        assert!(s.validate().is_err());
+        let s = SchedConfig {
+            batch: BatchPolicy { max_batch: 0, ..BatchPolicy::default() },
+            ..SchedConfig::default()
+        };
+        assert!(s.validate().is_err());
+        let s = SchedConfig {
+            batch: BatchPolicy { marginal: 1.5, ..BatchPolicy::default() },
+            ..SchedConfig::default()
+        };
+        assert!(s.validate().is_err());
+        let s = SchedConfig { class_deadline_s: vec![0.0], ..SchedConfig::default() };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn build_queue_matches_kind() {
+        for (kind, want_len) in [
+            (DisciplineKind::Fifo, 0usize),
+            (DisciplineKind::StrictPriority, 0),
+            (DisciplineKind::Edf { drop_late: false }, 0),
+        ] {
+            let cfg = SchedConfig { discipline: kind, ..SchedConfig::default() };
+            let q = cfg.build_queue(0.0);
+            assert_eq!(q.len(), want_len);
+            assert!(q.is_empty());
+        }
+    }
+}

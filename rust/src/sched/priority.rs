@@ -1,0 +1,380 @@
+//! Class- and deadline-aware disciplines: [`StrictPriority`] and [`Edf`].
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use super::discipline::{ClassCounts, QueueDiscipline};
+use crate::coordinator::task::Task;
+
+/// Strict priority across N traffic classes (class 0 served first), FIFO
+/// within a class — the per-worker queueing of Priority-Aware MDI
+/// (arXiv 2412.12371). An arrival sequence number is stamped at push so
+/// `drain_all` can restore global arrival order across lanes.
+#[derive(Debug)]
+pub struct StrictPriority {
+    /// One FIFO lane per class; tasks with `class >= num_classes` land in
+    /// the last (lowest-priority) lane.
+    lanes: Vec<VecDeque<(u64, Task)>>,
+    seq: u64,
+    len: usize,
+    peak: usize,
+    total_enqueued: u64,
+}
+
+impl StrictPriority {
+    pub fn new(num_classes: u8) -> StrictPriority {
+        StrictPriority {
+            lanes: (0..num_classes.max(1)).map(|_| VecDeque::new()).collect(),
+            seq: 0,
+            len: 0,
+            peak: 0,
+            total_enqueued: 0,
+        }
+    }
+
+    fn lane_of(&self, class: u8) -> usize {
+        (class as usize).min(self.lanes.len() - 1)
+    }
+}
+
+impl QueueDiscipline for StrictPriority {
+    fn push(&mut self, t: Task) {
+        self.seq += 1;
+        let lane = self.lane_of(t.class);
+        self.lanes[lane].push_back((self.seq, t));
+        self.len += 1;
+        self.peak = self.peak.max(self.len);
+        self.total_enqueued += 1;
+    }
+
+    fn pop_next(&mut self, _now: f64) -> Option<Task> {
+        let lane = self.lanes.iter_mut().find(|l| !l.is_empty())?;
+        let (_, t) = lane.pop_front().expect("non-empty lane");
+        self.len -= 1;
+        Some(t)
+    }
+
+    fn peek(&self) -> Option<&Task> {
+        self.lanes.iter().find_map(|l| l.front()).map(|(_, t)| t)
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn peak(&self) -> usize {
+        self.peak
+    }
+
+    fn total_enqueued(&self) -> u64 {
+        self.total_enqueued
+    }
+
+    fn class_len(&self, class: u8) -> usize {
+        if (class as usize) < self.lanes.len() {
+            // Exact for in-range classes; clamped classes share the last
+            // lane, where class identity is kept on the task itself.
+            self.lanes[class as usize].iter().filter(|(_, t)| t.class == class).count()
+        } else {
+            0
+        }
+    }
+
+    fn drain_all(&mut self) -> Vec<Task> {
+        let mut all: Vec<(u64, Task)> =
+            self.lanes.iter_mut().flat_map(|l| l.drain(..)).collect();
+        all.sort_by_key(|(seq, _)| *seq);
+        self.len = 0;
+        all.into_iter().map(|(_, t)| t).collect()
+    }
+}
+
+/// Heap entry ordered earliest-deadline-first (ties broken by arrival).
+#[derive(Debug)]
+struct EdfEntry {
+    deadline: f64,
+    seq: u64,
+    task: Task,
+}
+
+impl PartialEq for EdfEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.deadline == o.deadline && self.seq == o.seq
+    }
+}
+impl Eq for EdfEntry {}
+impl PartialOrd for EdfEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for EdfEntry {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse for earliest-deadline-first.
+        o.deadline.total_cmp(&self.deadline).then(o.seq.cmp(&self.seq))
+    }
+}
+
+/// Earliest-deadline-first. Deadlines are stamped at admission from the
+/// per-class budget in [`super::SchedConfig`]; `drop_late` discards tasks
+/// whose deadline already passed at pop time (a late inference result is
+/// worthless to a realtime client — better to spend the compute on one
+/// that can still meet its budget). Drops are counted per class.
+#[derive(Debug)]
+pub struct Edf {
+    heap: BinaryHeap<EdfEntry>,
+    seq: u64,
+    peak: usize,
+    total_enqueued: u64,
+    classes: ClassCounts,
+    drop_late: bool,
+    dropped: Vec<u64>,
+    /// Drops before this time are discarded but not *counted*, matching
+    /// how every other outcome counter excludes the warmup window.
+    measure_from: f64,
+}
+
+impl Edf {
+    pub fn new(drop_late: bool) -> Edf {
+        Edf {
+            heap: BinaryHeap::new(),
+            seq: 0,
+            peak: 0,
+            total_enqueued: 0,
+            classes: ClassCounts::default(),
+            drop_late,
+            dropped: Vec::new(),
+            measure_from: 0.0,
+        }
+    }
+
+    /// Exclude drops before `t` from the counters (the run's warmup).
+    pub fn measured_from(mut self, t: f64) -> Edf {
+        self.measure_from = t;
+        self
+    }
+
+    fn note_drop(&mut self, class: u8, now: f64) {
+        if now < self.measure_from {
+            return;
+        }
+        let i = class as usize;
+        if self.dropped.len() <= i {
+            self.dropped.resize(i + 1, 0);
+        }
+        self.dropped[i] += 1;
+    }
+}
+
+impl QueueDiscipline for Edf {
+    fn push(&mut self, t: Task) {
+        self.seq += 1;
+        self.classes.add(t.class);
+        self.heap.push(EdfEntry { deadline: t.deadline, seq: self.seq, task: t });
+        self.peak = self.peak.max(self.heap.len());
+        self.total_enqueued += 1;
+    }
+
+    fn pop_next(&mut self, now: f64) -> Option<Task> {
+        while let Some(e) = self.heap.pop() {
+            self.classes.sub(e.task.class);
+            if self.drop_late && e.deadline < now {
+                self.note_drop(e.task.class, now);
+                continue;
+            }
+            return Some(e.task);
+        }
+        None
+    }
+
+    fn expire(&mut self, now: f64) {
+        if !self.drop_late {
+            return;
+        }
+        while let Some(top) = self.heap.peek() {
+            if top.deadline >= now {
+                break;
+            }
+            let e = self.heap.pop().expect("peeked entry");
+            self.classes.sub(e.task.class);
+            self.note_drop(e.task.class, now);
+        }
+    }
+
+    fn peek(&self) -> Option<&Task> {
+        self.heap.peek().map(|e| &e.task)
+    }
+
+    fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    fn peak(&self) -> usize {
+        self.peak
+    }
+
+    fn total_enqueued(&self) -> u64 {
+        self.total_enqueued
+    }
+
+    fn class_len(&self, class: u8) -> usize {
+        self.classes.get(class)
+    }
+
+    fn dropped_per_class(&self) -> &[u64] {
+        &self.dropped
+    }
+
+    fn drain_all(&mut self) -> Vec<Task> {
+        let mut all: Vec<EdfEntry> = std::mem::take(&mut self.heap).into_vec();
+        all.sort_by_key(|e| e.seq);
+        self.classes.clear();
+        all.into_iter().map(|e| e.task).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: u64, class: u8, deadline: f64) -> Task {
+        Task { class, deadline, ..Task::initial(id, id as usize, None, 0.0) }
+    }
+
+    #[test]
+    fn strict_priority_serves_lower_class_first_fifo_within() {
+        let mut q = StrictPriority::new(3);
+        q.push(task(1, 2, 1.0));
+        q.push(task(2, 0, 1.0));
+        q.push(task(3, 1, 1.0));
+        q.push(task(4, 0, 1.0));
+        assert_eq!(q.peek().unwrap().id, 2);
+        let order: Vec<u64> =
+            std::iter::from_fn(|| q.pop_next(0.0)).map(|t| t.id).collect();
+        assert_eq!(order, vec![2, 4, 3, 1]);
+    }
+
+    #[test]
+    fn strict_priority_clamps_out_of_range_classes() {
+        let mut q = StrictPriority::new(2);
+        q.push(task(1, 9, 1.0)); // lands in the last lane
+        q.push(task(2, 0, 1.0));
+        assert_eq!(q.pop_next(0.0).unwrap().id, 2);
+        assert_eq!(q.pop_next(0.0).unwrap().id, 1);
+        assert_eq!(q.class_len(9), 0, "clamped classes report 0 beyond lanes");
+    }
+
+    #[test]
+    fn strict_priority_drain_restores_arrival_order() {
+        let mut q = StrictPriority::new(2);
+        q.push(task(1, 1, 1.0));
+        q.push(task(2, 0, 1.0));
+        q.push(task(3, 1, 1.0));
+        let peak = q.peak();
+        let total = q.total_enqueued();
+        let ids: Vec<u64> = q.drain_all().iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![1, 2, 3], "arrival order, not service order");
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.peak(), peak);
+        assert_eq!(q.total_enqueued(), total);
+    }
+
+    #[test]
+    fn strict_priority_occupancy_accounting() {
+        let mut q = StrictPriority::new(2);
+        for i in 0..5 {
+            q.push(task(i, (i % 2) as u8, 1.0));
+        }
+        q.pop_next(0.0);
+        assert_eq!(q.len(), 4);
+        assert_eq!(q.peak(), 5);
+        assert_eq!(q.total_enqueued(), 5);
+        assert_eq!(q.class_len(0), 2);
+        assert_eq!(q.class_len(1), 2);
+    }
+
+    #[test]
+    fn edf_serves_earliest_deadline_first() {
+        let mut q = Edf::new(false);
+        q.push(task(1, 0, 3.0));
+        q.push(task(2, 0, 1.0));
+        q.push(task(3, 0, 2.0));
+        assert_eq!(q.peek().unwrap().id, 2);
+        let order: Vec<u64> =
+            std::iter::from_fn(|| q.pop_next(0.0)).map(|t| t.id).collect();
+        assert_eq!(order, vec![2, 3, 1]);
+    }
+
+    #[test]
+    fn edf_ties_break_by_arrival() {
+        let mut q = Edf::new(false);
+        q.push(task(1, 0, 1.0));
+        q.push(task(2, 0, 1.0));
+        assert_eq!(q.pop_next(0.0).unwrap().id, 1);
+        assert_eq!(q.pop_next(0.0).unwrap().id, 2);
+    }
+
+    #[test]
+    fn edf_without_drop_late_serves_expired_tasks() {
+        let mut q = Edf::new(false);
+        q.push(task(1, 0, 1.0));
+        assert_eq!(q.pop_next(5.0).unwrap().id, 1);
+        assert!(q.dropped_per_class().is_empty());
+    }
+
+    #[test]
+    fn edf_drop_late_ages_out_expired_and_counts() {
+        let mut q = Edf::new(true);
+        q.push(task(1, 0, 1.0)); // expired at now = 2
+        q.push(task(2, 1, 5.0)); // still live
+        assert_eq!(q.pop_next(2.0).unwrap().id, 2);
+        assert_eq!(q.dropped_per_class(), &[1u64][..]);
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.class_len(0), 0);
+        // everything expired: pop drains and returns None
+        q.push(task(3, 1, 1.0));
+        assert!(q.pop_next(9.0).is_none());
+        assert_eq!(q.dropped_per_class(), &[1u64, 1][..]);
+    }
+
+    #[test]
+    fn edf_warmup_drops_are_discarded_but_not_counted() {
+        let mut q = Edf::new(true).measured_from(10.0);
+        q.push(task(1, 0, 1.0));
+        assert!(q.pop_next(5.0).is_none(), "expired task still discarded");
+        assert!(q.dropped_per_class().is_empty(), "warmup drops not counted");
+        q.push(task(2, 0, 11.0));
+        assert!(q.pop_next(12.0).is_none());
+        assert_eq!(q.dropped_per_class(), &[1u64][..], "in-window drops counted");
+    }
+
+    #[test]
+    fn edf_expire_discards_everything_late_and_nothing_else() {
+        let mut q = Edf::new(true);
+        q.push(task(1, 0, 1.0));
+        q.push(task(2, 1, 2.0));
+        q.push(task(3, 0, 9.0));
+        q.expire(3.0);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.dropped_per_class(), &[1u64, 1][..]);
+        assert_eq!(q.peek().unwrap().id, 3, "peek is truthful after expire");
+        // without drop_late, expire is a no-op
+        let mut q = Edf::new(false);
+        q.push(task(1, 0, 1.0));
+        q.expire(3.0);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn edf_drain_restores_arrival_order_keeps_accounting() {
+        let mut q = Edf::new(true);
+        q.push(task(1, 0, 9.0));
+        q.push(task(2, 0, 1.0));
+        q.push(task(3, 0, 4.0));
+        let ids: Vec<u64> = q.drain_all().iter().map(|t| t.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert_eq!(q.peak(), 3);
+        assert_eq!(q.total_enqueued(), 3);
+        assert_eq!(q.len(), 0);
+    }
+}

@@ -12,11 +12,12 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use mdi_exit::coordinator::{
-    AdmissionMode, Driver, ExperimentConfig, ModelMeta, Run, RunReport,
+    AdmissionMode, Driver, ExperimentConfig, Mode, ModelMeta, Run, RunReport,
 };
 use mdi_exit::dataset::{Dataset, ExitTable};
 use mdi_exit::runtime::sim_engine::SimEngine;
 use mdi_exit::runtime::InferenceEngine;
+use mdi_exit::sched::DisciplineKind;
 
 /// The realtime runs busy-spin one thread per worker for cost emulation;
 /// running the three tests concurrently starves them of cores on small CI
@@ -152,6 +153,66 @@ fn des_and_realtime_agree_on_offload_behaviour() {
             "{name}: offloads {offloaded} vs processed {processed}"
         );
     }
+}
+
+#[test]
+fn des_and_realtime_agree_on_per_class_exit_splits_under_strict_priority() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    // Two classes stamped round-robin over the rotating 8-sample store
+    // couple deterministically: class 0 ↔ even samples (always exit 1),
+    // class 1 ↔ odd samples (always exit 2). Both drivers must report that
+    // exact per-class split through the StrictPriority discipline.
+    let sched = |mut cfg: ExperimentConfig| {
+        cfg.sched = cfg.sched.with_classes(2);
+        cfg.sched.discipline = DisciplineKind::StrictPriority;
+        cfg
+    };
+    let des = run_des(sched(cfg("local", 100.0, 5.0)), &labels);
+    let rt = run_rt(sched(cfg("local", 100.0, 2.5)), &labels);
+
+    for (name, r) in [("DES", &des), ("realtime", &rt)] {
+        assert_eq!(r.per_class.len(), 2, "{name}");
+        let by_class: u64 = r.per_class.iter().map(|c| c.completed).sum();
+        assert_eq!(by_class, r.completed, "{name}: class counters must conserve");
+        assert!(r.per_class[0].completed > 50, "{name}: class 0 {:?}", r.per_class[0]);
+        assert!(r.per_class[1].completed > 50, "{name}: class 1 {:?}", r.per_class[1]);
+        let f0 = r.per_class[0].exit_fractions();
+        let f1 = r.per_class[1].exit_fractions();
+        assert!((f0[0] - 1.0).abs() < 1e-9, "{name}: class 0 exits at 1: {f0:?}");
+        assert!((f1[1] - 1.0).abs() < 1e-9, "{name}: class 1 exits at 2: {f1:?}");
+        assert_eq!(r.dropped, 0, "{name}: strict priority never drops");
+    }
+}
+
+#[test]
+fn realtime_ddi_round_robins_whole_images() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    // Mirror `ddi_source_round_robins_whole_images` on the realtime
+    // driver: the source round-robins whole images across the mesh, every
+    // worker runs the full model, and nothing exits early.
+    let mut c = cfg("3-node-mesh", 150.0, 2.5);
+    c.mode = Mode::Ddi;
+    let r = run_rt(c, &labels);
+
+    assert!(r.completed > 50, "completed {}", r.completed);
+    let f = r.exit_fractions();
+    assert_eq!(f[0], 0.0, "DDI never exits early: {f:?}");
+    // Round-robin reached both neighbors with whole-image payloads.
+    for w in 1..3 {
+        assert!(
+            r.per_worker[w].processed > 0,
+            "worker {w} never processed: {:?}",
+            r.per_worker.iter().map(|w| w.processed).collect::<Vec<_>>()
+        );
+    }
+    assert!(
+        r.per_worker[0].offloaded_out > 0,
+        "the DDI source pushes whole images to its neighbors"
+    );
+    // The oracle's final exit predicts the true label.
+    assert!((r.accuracy() - 1.0).abs() < 1e-9, "accuracy {}", r.accuracy());
 }
 
 #[test]
