@@ -1,0 +1,120 @@
+//! Scenario: two ingest points shard one edge cluster.
+//!
+//! The paper's testbed has a single source one hop from every worker. Real
+//! edge deployments rarely look like that: several cameras (or gateways)
+//! admit data into a shared pool of compute, and results must find their
+//! way back to whichever ingest point owns them — possibly across several
+//! hops. The `routing` module makes that a config choice: a `Placement`
+//! declares the sources, and the next-hop table carries every result and
+//! re-homed task back to its admitting source.
+//!
+//! Here two sources sit on *leaves* of a 5-node star (nodes 1 and 2), so
+//! every cross-leaf offload and every result from a foreign leaf crosses
+//! the hub — 2 hops. The model's final stage is deliberately heavy, which
+//! pushes continuing work off the source leaves, through the hub, onto the
+//! idle leaves 3 and 4; their results then relay back through the hub. The
+//! run prints per-source throughput/accuracy and the hub's relay counter,
+//! which is pure routing work that did not exist before this API.
+//!
+//! Entirely artifact-free (synthetic exit oracle): just
+//! `cargo run --release --example multi_source`.
+
+use anyhow::Result;
+
+use mdi_exit::coordinator::{
+    AdmissionMode, Driver, ExperimentConfig, ModelMeta, Placement, Run,
+};
+use mdi_exit::dataset::ExitTable;
+use mdi_exit::runtime::sim_engine::SimEngine;
+
+/// 8 samples x 3 exits: every fourth sample exits confidently at stage 1,
+/// the rest ride to the final stage. Predictions always match the label.
+fn oracle() -> (ExitTable, Vec<u8>) {
+    let n = 8;
+    let mut conf = Vec::new();
+    let mut pred = Vec::new();
+    let labels: Vec<u8> = (0..n as u8).map(|i| i % 10).collect();
+    for i in 0..n {
+        if i % 4 == 0 {
+            conf.extend([0.97f32, 0.99, 1.0]);
+        } else {
+            conf.extend([0.30f32, 0.50, 0.95]);
+        }
+        pred.extend([labels[i]; 3]);
+    }
+    (ExitTable::synthetic(n, 3, conf, pred), labels)
+}
+
+fn main() -> Result<()> {
+    let (table, labels) = oracle();
+    let engine = SimEngine::from_table(table, false);
+    // Stage-3-heavy pipeline: 1 ms + 1 ms + 6 ms. One worker sustains
+    // ~160 Hz of this stream, so two 300 Hz sources must shed stage-3
+    // work across the star.
+    let meta = ModelMeta::synthetic(vec![0.001, 0.001, 0.006], vec![12288, 8192, 4096]);
+
+    let mut cfg = ExperimentConfig::new(
+        "multi-source-demo",
+        "star-5",
+        AdmissionMode::Fixed { rate_hz: 300.0, threshold: 0.9 },
+    );
+    cfg.duration_s = 30.0;
+    cfg.warmup_s = 5.0;
+    cfg.placement = Placement::multi(&[1, 2]);
+
+    println!(
+        "multi_source: 5-node star, sources on leaves 1 and 2 @ 300 Hz each\n\
+         (hub = node 0; every cross-leaf task and foreign result crosses it)\n"
+    );
+
+    let mut report = Run::builder()
+        .config(cfg)
+        .model(meta)
+        .engine(&engine)
+        .labels(&labels)
+        .driver(Driver::Des)
+        .execute()?;
+
+    println!(
+        "{:<10} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "source", "admitted", "completed", "tput(Hz)", "accuracy", "p95(ms)"
+    );
+    for s in report.per_source.iter_mut() {
+        println!(
+            "node {:<5} {:>10} {:>10} {:>10.1} {:>10.4} {:>10.2}",
+            s.node,
+            s.admitted,
+            s.completed,
+            s.completed as f64 / report.duration_s,
+            s.accuracy(),
+            s.latency.p95() * 1e3
+        );
+    }
+    println!(
+        "\ntotals: {:.1} Hz, accuracy {:.4}, {} task transfers, {} B on wire",
+        report.throughput_hz(),
+        report.accuracy(),
+        report.task_transfers,
+        report.bytes_on_wire
+    );
+    println!(
+        "hub relays (results/re-homes forwarded for other nodes): {}",
+        report.per_worker[0].relayed
+    );
+
+    // The properties this example demonstrates, asserted so it doubles as
+    // a smoke test: both sources are served, every result went home
+    // correctly, and the hub really relayed foreign-leaf results.
+    for s in &report.per_source {
+        anyhow::ensure!(s.completed > 0, "source {} got nothing back", s.node);
+        anyhow::ensure!(
+            (s.accuracy() - 1.0).abs() < 1e-9,
+            "oracle predicts the label at every exit"
+        );
+    }
+    anyhow::ensure!(
+        report.per_worker[0].relayed > 0,
+        "leaf sources imply relay work at the hub"
+    );
+    Ok(())
+}

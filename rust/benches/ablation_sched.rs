@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use mdi_exit::coordinator::{
-    AdmissionMode, Driver, ExperimentConfig, ModelMeta, Run, RunReport,
+    AdmissionMode, Driver, ExperimentConfig, ModelMeta, Placement, Run, RunReport,
 };
 use mdi_exit::dataset::{Dataset, ExitTable};
 use mdi_exit::runtime::sim_engine::SimEngine;
@@ -191,4 +191,91 @@ fn main() {
     row("edf (50ms/2s, drop)", "DES", &mut edf_des);
     let by_class: u64 = edf_des.per_class.iter().map(|c| c.completed).sum();
     assert_eq!(by_class, edf_des.completed, "per-class counters conserve");
+
+    // -- multi-hop routing: 2 sources on a 4-node line --------------------
+    // FIFO again, but on a multi-hop topology with admission split across
+    // both ends of the line and a stage-3-heavy 3-stage model (a 2-stage
+    // model cannot push work past one hop): continuing work spills toward
+    // the middle, and every far exit relays its result back hop by hop.
+    // Routing overhead (relay work, multi-hop latency) lands in this
+    // bench's trajectory instead of hiding in a one-hop testbed, and the
+    // per-source totals are asserted so a routing regression fails CI.
+    let line = |mut cfg: ExperimentConfig| {
+        cfg.topology = "line-4".into();
+        cfg.placement = Placement::multi(&[0, 3]);
+        cfg
+    };
+    let mut line_des = run_des3(line(base_cfg(400.0, des_s)));
+    row("2-src line-4 (fifo)", "DES", &mut line_des);
+    let mut line_rt = run_rt3(line(base_cfg(400.0, rt_s)));
+    row("2-src line-4 (fifo)", "realtime", &mut line_rt);
+
+    for (driver, r) in [("DES", &line_des), ("realtime", &line_rt)] {
+        let by_source: u64 = r.per_source.iter().map(|s| s.completed).sum();
+        assert_eq!(by_source, r.completed, "{driver}: per-source counters conserve");
+        for s in &r.per_source {
+            assert!(s.completed > 0, "{driver}: source {} starved", s.node);
+        }
+    }
+    // The DES leg is virtual-time-deterministic: multi-hop delivery must
+    // actually happen (results relayed through intermediate workers).
+    let relays: u64 = line_des.per_worker.iter().map(|w| w.relayed).sum();
+    assert!(relays > 0, "multi-hop line run produced no relays");
+    println!("  -> line-4 relays (DES): {relays}, per-source completed: {:?}",
+             line_des.per_source.iter().map(|s| s.completed).collect::<Vec<_>>());
+}
+
+/// 8 samples x 3 exits for the multi-hop leg: every fourth sample exits
+/// at 1, the rest ride to the heavy final stage.
+fn oracle3(n: usize) -> (mdi_exit::dataset::ExitTable, Vec<u8>) {
+    let mut conf = Vec::new();
+    let mut pred = Vec::new();
+    let labels: Vec<u8> = (0..n).map(|i| (i % 10) as u8).collect();
+    for (i, &l) in labels.iter().enumerate() {
+        if i % 4 == 0 {
+            conf.extend([0.97f32, 0.99, 1.0]);
+        } else {
+            conf.extend([0.30f32, 0.50, 0.95]);
+        }
+        pred.extend([l; 3]);
+    }
+    (mdi_exit::dataset::ExitTable::synthetic(n, 3, conf, pred), labels)
+}
+
+/// Stage-3-heavy costs for the multi-hop leg.
+const COSTS3: [f64; 3] = [0.001, 0.001, 0.006];
+
+fn meta3() -> ModelMeta {
+    ModelMeta::synthetic(COSTS3.to_vec(), vec![12288, 8192, 4096])
+}
+
+fn run_des3(cfg: ExperimentConfig) -> RunReport {
+    let (table, labels) = oracle3(8);
+    let engine = SimEngine::from_table(table, false);
+    Run::builder()
+        .config(cfg)
+        .model(meta3())
+        .engine(&engine)
+        .labels(&labels)
+        .driver(Driver::Des)
+        .execute()
+        .expect("DES run")
+}
+
+fn run_rt3(cfg: ExperimentConfig) -> RunReport {
+    let (_, labels) = oracle3(8);
+    let ds = Dataset::synthetic(8, 2, 2, 3, labels);
+    let factory = move |_w: usize| -> Result<Box<dyn InferenceEngine>> {
+        let (table, _) = oracle3(8);
+        let eng = SimEngine::from_table(table, false).with_costs(COSTS3.to_vec(), 1.0);
+        Ok(Box::new(eng) as Box<dyn InferenceEngine>)
+    };
+    Run::builder()
+        .config(cfg)
+        .model(meta3())
+        .engine_factory(factory)
+        .dataset(&ds)
+        .driver(Driver::Realtime)
+        .execute()
+        .expect("realtime run")
 }

@@ -3,6 +3,7 @@
 use anyhow::{bail, Result};
 
 use super::policy::{AdaptConfig, OffloadPolicy};
+use crate::routing::{Placement, SourceSpec};
 use crate::sched::{DisciplineKind, SchedConfig};
 use crate::simnet::{ChurnEvent, LinkSpec};
 use crate::util::toml::{Config as Toml, Value};
@@ -71,6 +72,11 @@ pub struct ExperimentConfig {
     /// Queue discipline / traffic classes / batching (`crate::sched`).
     /// The default (FIFO, one class, batch 1) reproduces the seed system.
     pub sched: SchedConfig,
+    /// Which nodes admit data and at what per-source rate share
+    /// (`crate::routing`). The default — a single source at node 0 —
+    /// reproduces the paper's setup; structural fit against the topology
+    /// is checked by the drivers, which know the node count.
+    pub placement: Placement,
     pub seed: u64,
 }
 
@@ -95,6 +101,7 @@ impl ExperimentConfig {
             medium_contention: 1.0,
             churn: Vec::new(),
             sched: SchedConfig::default(),
+            placement: Placement::default(),
             seed: 7,
         }
     }
@@ -143,6 +150,9 @@ impl ExperimentConfig {
         }
         if let Err(e) = self.sched.validate() {
             bail!("sched config: {e}");
+        }
+        if self.placement.sources.is_empty() {
+            bail!("placement declares no sources");
         }
         Ok(())
     }
@@ -203,9 +213,66 @@ impl ExperimentConfig {
         cfg.compute_scale = toml.f64_or("compute_scale", 1.0);
         cfg.medium_contention = toml.f64_or("net.medium_contention", 1.0);
         cfg.sched = Self::sched_from_toml(toml)?;
+        cfg.placement = Self::placement_from_toml(toml)?;
         cfg.seed = toml.i64_or("seed", 7) as u64;
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// `[placement]` section: source nodes and optional per-source rate
+    /// shares.
+    ///
+    /// ```toml
+    /// [placement]
+    /// sources = [0, 3]
+    /// rate_shares = [1.0, 0.5]   # optional; defaults to 1.0 each
+    /// ```
+    fn placement_from_toml(toml: &Toml) -> Result<Placement> {
+        let nodes: Vec<usize> = match toml.get("placement.sources") {
+            None => return Ok(Placement::default()),
+            Some(Value::Arr(vs)) => {
+                let ns: Option<Vec<i64>> = vs.iter().map(|v| v.as_i64()).collect();
+                match ns {
+                    Some(ns) if ns.iter().all(|&n| n >= 0) => {
+                        ns.into_iter().map(|n| n as usize).collect()
+                    }
+                    _ => bail!("placement.sources entries must be non-negative integers"),
+                }
+            }
+            Some(v) => match v.as_i64() {
+                Some(n) if n >= 0 => vec![n as usize],
+                _ => bail!("placement.sources must be a node id or an array of them"),
+            },
+        };
+        let shares: Vec<f64> = match toml.get("placement.rate_shares") {
+            None => vec![1.0; nodes.len()],
+            Some(Value::Arr(vs)) => {
+                let ss: Option<Vec<f64>> = vs.iter().map(|v| v.as_f64()).collect();
+                let ss = match ss {
+                    Some(ss) => ss,
+                    None => bail!("placement.rate_shares entries must be numbers"),
+                };
+                if ss.len() != nodes.len() {
+                    bail!(
+                        "placement.rate_shares has {} entries for {} sources",
+                        ss.len(),
+                        nodes.len()
+                    );
+                }
+                ss
+            }
+            Some(v) => match v.as_f64() {
+                Some(s) => vec![s; nodes.len()],
+                None => bail!("placement.rate_shares must be a number or array"),
+            },
+        };
+        Ok(Placement {
+            sources: nodes
+                .into_iter()
+                .zip(shares)
+                .map(|(node, rate_share)| SourceSpec { node, rate_share })
+                .collect(),
+        })
     }
 
     /// `[sched]` section: discipline, classes, deadline budgets, batching.
@@ -365,6 +432,40 @@ batch_marginal = 0.1
         let c = ExperimentConfig::from_toml(&toml).unwrap();
         assert_eq!(c.sched.discipline, DisciplineKind::Edf { drop_late: true });
         assert_eq!(c.sched.class_deadline_s, vec![0.25, 0.25]);
+    }
+
+    #[test]
+    fn from_toml_defaults_to_single_source_zero() {
+        let toml = Toml::parse("model = \"tiny\"\n").unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.placement, Placement::single(0));
+    }
+
+    #[test]
+    fn from_toml_parses_placement_section() {
+        let toml = Toml::parse(
+            "[placement]\nsources = [0, 3]\nrate_shares = [1.0, 0.5]\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.placement.source_nodes(), vec![0, 3]);
+        assert!((c.placement.rate_share(3) - 0.5).abs() < 1e-12);
+        assert!((c.placement.rate_share(0) - 1.0).abs() < 1e-12);
+
+        let toml = Toml::parse("[placement]\nsources = 2\n").unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.placement, Placement::single(2));
+    }
+
+    #[test]
+    fn from_toml_placement_rejects_bad_shapes() {
+        let toml = Toml::parse("[placement]\nsources = [0, -1]\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+        let toml =
+            Toml::parse("[placement]\nsources = [0, 1]\nrate_shares = [1.0]\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+        let toml = Toml::parse("[placement]\nsources = \"all\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
     }
 
     #[test]

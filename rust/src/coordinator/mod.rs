@@ -17,7 +17,11 @@
 //! so new scenarios (schedulers, workloads, queue disciplines) land once —
 //! the [`crate::sched`] subsystem (queue disciplines, traffic classes,
 //! batched compute) plugs in exactly there, configured per run via
-//! [`config::ExperimentConfig::sched`].
+//! [`config::ExperimentConfig::sched`]. Likewise *where* data enters and
+//! results land: [`crate::routing`] turns source placement and next-hop
+//! delivery into config ([`config::ExperimentConfig::placement`]), so one
+//! or many sources on arbitrary multi-hop topologies run through the same
+//! core on both drivers.
 
 pub mod config;
 pub mod policy;
@@ -31,9 +35,11 @@ pub mod worker;
 
 pub use config::{AdmissionMode, ExperimentConfig, Mode};
 pub use policy::{AdaptConfig, OffloadPolicy};
-pub use report::{ClassStats, RunReport, WorkerStats};
+pub use report::{ClassStats, RunReport, SourceStats, WorkerStats};
 pub use run::{Driver, Run, RunBuilder};
 pub use sim::{SampleStore, Simulation};
+// Placement/routing surface (re-exported so run code reads naturally).
+pub use crate::routing::{Placement, Role, RoutingTable, SourceSpec};
 pub use worker::{
     execute_batch, Action, AeMeta, Clock, ModelMeta, Payload, TaskOrigin, VirtualClock,
     WallClock, WorkerCore,

@@ -10,6 +10,9 @@ pub struct WorkerStats {
     pub offloaded_out: u64,
     pub received: u64,
     pub exits: u64,
+    /// Result/re-home messages this worker forwarded one hop closer to
+    /// their admitting source (multi-hop routing activity).
+    pub relayed: u64,
     pub peak_input: usize,
     pub peak_output: usize,
     /// Virtual/real seconds spent computing (utilization numerator).
@@ -65,6 +68,77 @@ impl ClassStats {
         }
         self.exit_histogram.iter().map(|&c| c as f64 / total as f64).collect()
     }
+
+    /// Fold another class tally into this one (merging per-source tallies
+    /// from the realtime driver's source threads).
+    pub fn absorb(&mut self, other: &ClassStats) {
+        self.completed += other.completed;
+        self.correct += other.correct;
+        for (slot, &c) in self.exit_histogram.iter_mut().zip(&other.exit_histogram) {
+            *slot += c;
+        }
+        self.latency.absorb(&other.latency);
+        self.dropped += other.dropped;
+    }
+}
+
+/// Per-source accounting: what one admitting node pushed into the system
+/// and got back (populated for every source the run's `Placement`
+/// declares; classic single-source runs carry one entry equal to the
+/// totals).
+#[derive(Debug, Clone)]
+pub struct SourceStats {
+    /// Topology node this source sits on.
+    pub node: usize,
+    /// Samples this source admitted during the window.
+    pub admitted: u64,
+    /// Results delivered back to this source during the window.
+    pub completed: u64,
+    pub correct: u64,
+    /// This source's results per exit point (1-based; index 0 = exit 1).
+    pub exit_histogram: Vec<u64>,
+    pub latency: Samples,
+}
+
+impl SourceStats {
+    pub fn new(node: usize, num_exits: usize) -> SourceStats {
+        SourceStats {
+            node,
+            admitted: 0,
+            completed: 0,
+            correct: 0,
+            exit_histogram: vec![0; num_exits],
+            latency: Samples::new(),
+        }
+    }
+
+    /// Fold one result delivered to this source into the counters.
+    pub fn record(&mut self, exit_point: usize, correct: bool, latency_s: f64) {
+        self.completed += 1;
+        if correct {
+            self.correct += 1;
+        }
+        if let Some(slot) = self.exit_histogram.get_mut(exit_point - 1) {
+            *slot += 1;
+        }
+        self.latency.push(latency_s);
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.correct as f64 / self.completed as f64
+    }
+
+    /// Fraction of this source's results that exited at each point.
+    pub fn exit_fractions(&self) -> Vec<f64> {
+        let total: u64 = self.exit_histogram.iter().sum();
+        if total == 0 {
+            return vec![0.0; self.exit_histogram.len()];
+        }
+        self.exit_histogram.iter().map(|&c| c as f64 / total as f64).collect()
+    }
 }
 
 /// A sampled point of the controller/queue timeline.
@@ -100,6 +174,8 @@ pub struct RunReport {
     pub dropped: u64,
     /// Per-traffic-class counters (one entry per configured class).
     pub per_class: Vec<ClassStats>,
+    /// Per-source counters, in the placement's declaration order.
+    pub per_source: Vec<SourceStats>,
     /// Final controller values.
     pub final_mu_s: Option<f64>,
     pub final_t_e: Option<f64>,
@@ -108,7 +184,7 @@ pub struct RunReport {
 
 impl RunReport {
     pub fn new(model: &str, topology: &str, label: &str, n_workers: usize,
-               num_exits: usize, num_classes: usize) -> RunReport {
+               num_exits: usize, num_classes: usize, source_nodes: &[usize]) -> RunReport {
         RunReport {
             model: model.to_string(),
             topology: topology.to_string(),
@@ -125,6 +201,10 @@ impl RunReport {
             rehomed: 0,
             dropped: 0,
             per_class: vec![ClassStats::new(num_exits); num_classes.max(1)],
+            per_source: source_nodes
+                .iter()
+                .map(|&node| SourceStats::new(node, num_exits))
+                .collect(),
             final_mu_s: None,
             final_t_e: None,
             trace: Vec::new(),
@@ -140,6 +220,24 @@ impl RunReport {
         let i = (class as usize).min(self.per_class.len().saturating_sub(1));
         if let Some(cs) = self.per_class.get_mut(i) {
             cs.record(exit_point, correct, latency_s);
+        }
+    }
+
+    /// Fold one completed result into its admitting source's counters
+    /// (no-op for sources the placement does not declare — cannot happen
+    /// on a validated run).
+    pub fn record_source(&mut self, source: usize, exit_point: usize, correct: bool,
+                         latency_s: f64) {
+        if let Some(ss) = self.per_source.iter_mut().find(|s| s.node == source) {
+            ss.record(exit_point, correct, latency_s);
+        }
+    }
+
+    /// Count one admission at `source`.
+    pub fn record_admission(&mut self, source: usize) {
+        self.admitted += 1;
+        if let Some(ss) = self.per_source.iter_mut().find(|s| s.node == source) {
+            ss.admitted += 1;
         }
     }
 
@@ -207,6 +305,7 @@ impl RunReport {
                     ("offloaded_out", (w.offloaded_out as i64).into()),
                     ("received", (w.received as i64).into()),
                     ("exits", (w.exits as i64).into()),
+                    ("relayed", (w.relayed as i64).into()),
                     ("peak_input", w.peak_input.into()),
                     ("peak_output", w.peak_output.into()),
                     ("busy_s", w.busy_s.into()),
@@ -232,6 +331,31 @@ impl RunReport {
                     ("exit_histogram",
                      Json::Arr(c.exit_histogram.iter().map(|&n| (n as i64).into()).collect())),
                     ("dropped", (c.dropped as i64).into()),
+                ])
+            })
+            .collect();
+        let duration_s = self.duration_s;
+        let sources: Vec<Json> = self
+            .per_source
+            .iter_mut()
+            .map(|s| {
+                let (p50, p95) = (s.latency.p50(), s.latency.p95());
+                let acc = s.accuracy();
+                let tput = if duration_s > 0.0 {
+                    s.completed as f64 / duration_s
+                } else {
+                    0.0
+                };
+                obj(vec![
+                    ("node", s.node.into()),
+                    ("admitted", (s.admitted as i64).into()),
+                    ("completed", (s.completed as i64).into()),
+                    ("throughput_hz", tput.into()),
+                    ("accuracy", acc.into()),
+                    ("latency_p50_s", p50.into()),
+                    ("latency_p95_s", p95.into()),
+                    ("exit_histogram",
+                     Json::Arr(s.exit_histogram.iter().map(|&n| (n as i64).into()).collect())),
                 ])
             })
             .collect();
@@ -264,6 +388,7 @@ impl RunReport {
             ("final_mu_s", self.final_mu_s.map(Json::from).unwrap_or(Json::Null)),
             ("final_t_e", self.final_t_e.map(Json::from).unwrap_or(Json::Null)),
             ("classes", Json::Arr(classes)),
+            ("sources", Json::Arr(sources)),
             ("workers", Json::Arr(workers)),
         ])
     }
@@ -275,7 +400,7 @@ mod tests {
 
     #[test]
     fn derived_metrics() {
-        let mut r = RunReport::new("m", "t", "lbl", 2, 3, 1);
+        let mut r = RunReport::new("m", "t", "lbl", 2, 3, 1, &[0]);
         r.duration_s = 10.0;
         r.admitted = 100;
         r.completed = 80;
@@ -290,7 +415,7 @@ mod tests {
 
     #[test]
     fn empty_report_is_finite() {
-        let mut r = RunReport::new("m", "t", "lbl", 1, 2, 1);
+        let mut r = RunReport::new("m", "t", "lbl", 1, 2, 1, &[0]);
         assert_eq!(r.accuracy(), 0.0);
         assert_eq!(r.throughput_hz(), 0.0);
         assert_eq!(r.exit_fractions(), vec![0.0, 0.0]);
@@ -300,7 +425,7 @@ mod tests {
 
     #[test]
     fn json_shape() {
-        let mut r = RunReport::new("mob", "2-node", "fig3", 2, 5, 1);
+        let mut r = RunReport::new("mob", "2-node", "fig3", 2, 5, 1, &[0]);
         r.duration_s = 5.0;
         r.completed = 1;
         r.correct = 1;
@@ -317,7 +442,7 @@ mod tests {
 
     #[test]
     fn per_class_counters_accumulate() {
-        let mut r = RunReport::new("m", "t", "lbl", 1, 2, 2);
+        let mut r = RunReport::new("m", "t", "lbl", 1, 2, 2, &[0]);
         r.record_class(0, 1, true, 0.010);
         r.record_class(0, 2, false, 0.030);
         r.record_class(1, 2, true, 0.200);
@@ -333,8 +458,51 @@ mod tests {
     }
 
     #[test]
+    fn per_source_counters_accumulate_and_serialize() {
+        let mut r = RunReport::new("m", "line-4", "lbl", 4, 2, 1, &[0, 3]);
+        r.duration_s = 10.0;
+        r.record_admission(0);
+        r.record_admission(3);
+        r.record_admission(3);
+        r.record_source(0, 1, true, 0.010);
+        r.record_source(3, 2, false, 0.050);
+        r.record_source(3, 1, true, 0.020);
+        assert_eq!(r.admitted, 3);
+        assert_eq!(r.per_source[0].admitted, 1);
+        assert_eq!(r.per_source[1].admitted, 2);
+        assert_eq!(r.per_source[1].completed, 2);
+        assert_eq!(r.per_source[1].correct, 1);
+        assert_eq!(r.per_source[1].exit_histogram, vec![1, 1]);
+        assert!((r.per_source[0].accuracy() - 1.0).abs() < 1e-12);
+        // Unknown source node: ignored, not misattributed.
+        r.record_source(2, 1, true, 0.010);
+        assert_eq!(r.per_source[0].completed + r.per_source[1].completed, 3);
+        let j = r.to_json();
+        let sources = j.get("sources").as_arr().unwrap();
+        assert_eq!(sources.len(), 2);
+        assert_eq!(sources[0].get("node").as_i64(), Some(0));
+        assert_eq!(sources[1].get("node").as_i64(), Some(3));
+        assert_eq!(sources[1].get("completed").as_i64(), Some(2));
+        assert!((sources[1].get("accuracy").as_f64().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn class_stats_absorb_merges_tallies() {
+        let mut a = ClassStats::new(2);
+        a.record(1, true, 0.010);
+        let mut b = ClassStats::new(2);
+        b.record(2, false, 0.030);
+        b.record(1, true, 0.020);
+        a.absorb(&b);
+        assert_eq!(a.completed, 3);
+        assert_eq!(a.correct, 2);
+        assert_eq!(a.exit_histogram, vec![2, 1]);
+        assert_eq!(a.latency.len(), 3);
+    }
+
+    #[test]
     fn worker_drops_fold_into_classes_and_total() {
-        let mut r = RunReport::new("m", "t", "lbl", 2, 2, 2);
+        let mut r = RunReport::new("m", "t", "lbl", 2, 2, 2, &[0]);
         r.per_worker[0].dropped = 3;
         r.per_worker[0].dropped_per_class = vec![1, 2];
         r.per_worker[1].dropped = 2;

@@ -15,8 +15,12 @@
 //!
 //! Churn schedules work here too (a payoff of the unified core): every
 //! thread walks the same `cfg.churn` timeline against its own core, so a
-//! leaving worker re-homes its queued tasks to the source over the wire and
-//! its peers stop offloading to it. DDI mode likewise: the core already
+//! leaving worker re-homes its queued tasks over the wire — hop by hop
+//! along the routing table toward each task's admitting source — and its
+//! peers stop offloading to it. Multi-source placements likewise: every
+//! thread whose core says `is_source()` runs its own admission timeline
+//! against the shared dataset, and the per-source tallies merge into one
+//! report at join time. DDI mode likewise: the core already
 //! round-robins whole images at the source, so the driver carries it with
 //! no mode-specific code. `StartCompute` hands the thread a same-stage
 //! *batch*; one `execute_batch` call runs it as one batched forward per
@@ -46,10 +50,11 @@ use crate::util::stats::Samples;
 const IDLE_PARK: Duration = Duration::from_micros(200);
 
 /// Messages exchanged between worker threads (the wire form of
-/// [`Payload`], plus the churn re-homing path).
+/// [`Payload`]).
 enum NetMsg {
     Task(Task),
-    /// A task handed back to the source by a leaving worker.
+    /// A task in transit back to its admitting source after its worker
+    /// left; intermediate hops relay it (`WorkerCore::on_rehome`).
     Rehome(Task),
     Result(InferenceResult),
     State { input_len: usize, gamma_s: f64, t_e: f32 },
@@ -75,6 +80,9 @@ pub(super) fn run_realtime(
             .with_context(|| format!("unknown topology {:?}", cfg.topology))?
             .with_churn(cfg.churn.clone()),
     );
+    cfg.placement
+        .validate(topo.n, &topo.churn)
+        .context("placement does not fit the topology")?;
     let n = topo.n;
     let mut net: DelayNet<NetMsg> = DelayNet::new(topo.clone(), cfg.seed);
     let mut endpoints: Vec<Option<Endpoint<NetMsg>>> =
@@ -113,14 +121,16 @@ pub(super) fn run_realtime(
                         .collect(),
                     ..SourceTally::default()
                 };
+                let core = WorkerCore::new(id, &cfg, meta.clone(), &topo, dataset.n);
+                let is_source = core.is_source();
                 let mut w = RtWorker {
                     id,
                     cfg: &cfg,
                     meta: &meta,
-                    core: WorkerCore::new(id, &cfg, meta.clone(), &topo, dataset.n),
+                    core,
                     endpoint,
                     engine: engine.as_ref(),
-                    dataset: (id == 0).then_some(dataset),
+                    dataset: is_source.then_some(dataset),
                     clock: WallClock::new(t0),
                     tally,
                     pending: None,
@@ -144,32 +154,45 @@ pub(super) fn run_realtime(
         n,
         meta.num_stages,
         cfg.sched.num_classes as usize,
+        &cfg.placement.source_nodes(),
     );
     report.duration_s = cfg.duration_s;
+    // Every source thread carries its own tally home; the run totals are
+    // the merge, and each tally verbatim is that source's per-source row.
+    let lead = cfg.placement.sources[0].node;
     while let Ok((id, stats, tally)) = stats_rx.recv() {
         report.per_worker[id] = stats;
-        if id == 0 {
-            report.admitted = tally.admitted;
-            report.completed = tally.completed;
-            report.correct = tally.correct;
-            report.exit_histogram = tally.exit_histogram;
-            report.latency = tally.latency;
-            report.rehomed = tally.rehomed;
-            if !tally.per_class.is_empty() {
-                report.per_class = tally.per_class;
-            }
+        if !cfg.placement.is_source(id) {
+            continue;
+        }
+        if let Some(ss) = report.per_source.iter_mut().find(|s| s.node == id) {
+            ss.admitted = tally.admitted;
+            ss.completed = tally.completed;
+            ss.correct = tally.correct;
+            ss.exit_histogram.clone_from(&tally.exit_histogram);
+            ss.latency = tally.latency.clone();
+        }
+        report.admitted += tally.admitted;
+        report.completed += tally.completed;
+        report.correct += tally.correct;
+        for (slot, &c) in report.exit_histogram.iter_mut().zip(&tally.exit_histogram) {
+            *slot += c;
+        }
+        report.latency.absorb(&tally.latency);
+        report.rehomed += tally.rehomed;
+        for (rc, tc) in report.per_class.iter_mut().zip(&tally.per_class) {
+            rc.absorb(tc);
+        }
+        if id == lead {
             report.final_mu_s = tally.final_mu_s;
             report.final_t_e = tally.final_t_e;
         }
-    }
-    if report.exit_histogram.is_empty() {
-        report.exit_histogram = vec![0; meta.num_stages];
     }
     report.fold_worker_drops();
     Ok(report)
 }
 
-/// Source-side accounting carried out of the worker-0 thread.
+/// Source-side accounting carried out of each source's worker thread.
 #[derive(Default)]
 struct SourceTally {
     admitted: u64,
@@ -238,7 +261,7 @@ impl<'a> RtWorker<'a> {
             // (the DES driver has no such cap), hiding overload from the
             // queues — and with it the backlog that batching and the
             // priority disciplines exist to manage.
-            while self.id == 0 && now >= next_admit {
+            while self.core.is_source() && now >= next_admit {
                 // Stamp the task with its *scheduled* admission time, not
                 // the post-catch-up `now`: that is when the DES driver
                 // admits it, and using `now` would under-report latency
@@ -256,7 +279,7 @@ impl<'a> RtWorker<'a> {
                 next_admit += dt;
                 progressed = true;
             }
-            if self.id == 0 && now >= next_adapt {
+            if self.core.has_controller() && now >= next_adapt {
                 let acts = self.core.on_adapt_tick(now);
                 self.dispatch(acts);
                 next_adapt = now + self.cfg.adapt.sleep_s;
@@ -308,7 +331,7 @@ impl<'a> RtWorker<'a> {
                 std::thread::park_timeout(IDLE_PARK);
             }
         }
-        if self.id == 0 {
+        if self.core.is_source() {
             self.tally.final_mu_s = self.core.final_mu_s();
             self.tally.final_t_e = self.core.final_t_e();
         }
@@ -350,6 +373,7 @@ impl<'a> RtWorker<'a> {
                             NetMsg::Task(task)
                         }
                         Payload::Result(r) => NetMsg::Result(r),
+                        Payload::Rehome(task) => NetMsg::Rehome(task),
                         Payload::State { input_len, gamma_s, t_e } => {
                             NetMsg::State { input_len, gamma_s, t_e }
                         }
@@ -363,18 +387,6 @@ impl<'a> RtWorker<'a> {
                     }
                 }
                 Action::RecordResult { result } => self.record_result(result),
-                Action::Rehome { task } => {
-                    if self.id == 0 {
-                        // Source re-homing to itself (shouldn't happen —
-                        // the source never churns) — just requeue.
-                        let now = self.clock.now();
-                        let acts = self.core.on_task(now, task, TaskOrigin::Rehomed);
-                        q.extend(acts);
-                    } else {
-                        let bytes = self.core.task_wire_bytes(&task);
-                        let _ = self.endpoint.send(0, NetMsg::Rehome(task), bytes);
-                    }
-                }
             }
         }
     }
@@ -384,8 +396,12 @@ impl<'a> RtWorker<'a> {
         let acts = match msg {
             NetMsg::Task(task) => self.core.on_task(now, task, TaskOrigin::Wire),
             NetMsg::Rehome(task) => {
-                self.tally.rehomed += 1;
-                self.core.on_task(now, task, TaskOrigin::Rehomed)
+                if task.source == self.id {
+                    // Terminal delivery at the admitting source counts as
+                    // one re-homing; relay hops do not.
+                    self.tally.rehomed += 1;
+                }
+                self.core.on_rehome(now, task)
             }
             NetMsg::Result(r) => self.core.on_result(now, r),
             NetMsg::State { input_len, gamma_s, t_e } => {

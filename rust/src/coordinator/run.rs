@@ -41,6 +41,7 @@ use super::sim::{SampleStore, Simulation};
 use super::worker::ModelMeta;
 use crate::artifact::Manifest;
 use crate::dataset::Dataset;
+use crate::routing::Placement;
 use crate::runtime::{sim_engine::SimEngine, InferenceEngine};
 
 /// Which execution medium carries the run.
@@ -72,6 +73,7 @@ impl Run {
             dataset: None,
             labels: None,
             images: None,
+            placement: None,
             driver: Driver::Des,
         }
     }
@@ -87,6 +89,7 @@ pub struct RunBuilder<'a> {
     dataset: Option<&'a Dataset>,
     labels: Option<&'a [u8]>,
     images: Option<&'a Dataset>,
+    placement: Option<Placement>,
     driver: Driver,
 }
 
@@ -147,6 +150,14 @@ impl<'a> RunBuilder<'a> {
         self
     }
 
+    /// Override the config's source placement (who admits data, where).
+    /// Sugar for mutating `cfg.placement` before `.config(...)` — handy
+    /// when sweeping placements over one base config.
+    pub fn placement(mut self, placement: Placement) -> Self {
+        self.placement = Some(placement);
+        self
+    }
+
     pub fn driver(mut self, driver: Driver) -> Self {
         self.driver = driver;
         self
@@ -154,7 +165,10 @@ impl<'a> RunBuilder<'a> {
 
     /// Resolve defaults and run to completion.
     pub fn execute(self) -> Result<RunReport> {
-        let cfg = self.cfg.context("Run::builder(): .config(...) is required")?;
+        let mut cfg = self.cfg.context("Run::builder(): .config(...) is required")?;
+        if let Some(p) = self.placement {
+            cfg.placement = p;
+        }
         let meta = match self.meta {
             Some(m) => m,
             None => {

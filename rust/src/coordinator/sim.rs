@@ -11,8 +11,13 @@
 //!   estimated cost; the whole same-stage batch completes together;
 //! * `Send` → a `Deliver` event after the sampled link delay (gossip
 //!   `State` payloads are delivered out-of-band, as the seed driver did);
-//! * `RecordResult` / `Rehome` → report bookkeeping (per traffic class
-//!   where the run configures more than one).
+//!   result and re-home payloads hop the topology link by link, each leg
+//!   charged as a real transfer, until they reach their admitting source;
+//! * `RecordResult` → report bookkeeping (per traffic class and per
+//!   source where the run configures more than one).
+//!
+//! Every source the run's `Placement` declares gets its own admission
+//! timeline (and, per the admission mode, its own Alg. 3/4 controller).
 //!
 //! Engine-agnostic: with `SimEngine` (exit-oracle replay) a 60-virtual-
 //! second topology run takes milliseconds; with the PJRT engine the same
@@ -66,12 +71,17 @@ impl<'a> SampleStore<'a> {
 enum Msg {
     Task(Task),
     Result(InferenceResult),
+    /// A churn-displaced task in transit back to its admitting source
+    /// (forwarded hop by hop like a result).
+    Rehome(Task),
 }
 
 #[derive(Debug)]
 enum Event {
-    Admit,
-    AdaptTick,
+    /// One admission at `source` (each declared source runs its own
+    /// admission timeline).
+    Admit { source: usize },
+    AdaptTick { source: usize },
     ComputeDone { worker: usize, batch: Vec<Task>, duration: f64 },
     Deliver { to: usize, from: usize, msg: Msg },
     GossipTick,
@@ -147,6 +157,9 @@ impl<'a> Simulation<'a> {
         let topo = Topology::named(&cfg.topology, cfg.link)
             .with_context(|| format!("unknown topology {:?}", cfg.topology))?
             .with_churn(cfg.churn.clone());
+        cfg.placement
+            .validate(topo.n, &topo.churn)
+            .context("placement does not fit the topology")?;
         let workers = (0..topo.n)
             .map(|i| WorkerCore::new(i, &cfg, meta.clone(), &topo, store.len()))
             .collect();
@@ -157,6 +170,7 @@ impl<'a> Simulation<'a> {
             topo.n,
             meta.num_stages,
             cfg.sched.num_classes as usize,
+            &cfg.placement.source_nodes(),
         );
         let measure_from = cfg.warmup_s;
         let end_at = cfg.warmup_s + cfg.duration_s;
@@ -194,12 +208,14 @@ impl<'a> Simulation<'a> {
 
     /// Run to completion; returns the measured report.
     pub fn run(mut self) -> Result<RunReport> {
-        self.push(0.0, Event::Admit);
+        for source in self.cfg.placement.source_nodes() {
+            self.push(0.0, Event::Admit { source });
+            if self.workers[source].has_controller() {
+                self.push(self.cfg.adapt.sleep_s, Event::AdaptTick { source });
+            }
+        }
         self.push(self.cfg.gossip_interval_s, Event::GossipTick);
         self.push(TRACE_PERIOD_S, Event::TraceTick);
-        if self.workers[0].has_controller() {
-            self.push(self.cfg.adapt.sleep_s, Event::AdaptTick);
-        }
         let churn = self.topo.churn.clone();
         for (idx, e) in churn.iter().enumerate() {
             self.push(e.at_s, Event::Churn { idx });
@@ -216,8 +232,8 @@ impl<'a> Simulation<'a> {
                 bail!("event budget exhausted (runaway simulation)");
             }
             match ev {
-                Event::Admit => self.on_admit()?,
-                Event::AdaptTick => self.on_adapt_tick()?,
+                Event::Admit { source } => self.on_admit(source)?,
+                Event::AdaptTick { source } => self.on_adapt_tick(source)?,
                 Event::ComputeDone { worker, batch, duration } => {
                     self.on_compute_done(worker, batch, duration)?
                 }
@@ -285,21 +301,12 @@ impl<'a> Simulation<'a> {
                         );
                     }
                     Payload::Result(r) => {
-                        // Results go back to the source. All testbed
-                        // topologies are one hop from it; a disconnected
-                        // pair indicates a custom topology, where we charge
-                        // a two-hop relay delay.
-                        let delay = if self.topo.is_connected_pair(n, to) {
-                            self.link_delay(n, to, bytes)?
-                        } else {
-                            let via = self
-                                .topo
-                                .neighbors(n)
-                                .first()
-                                .copied()
-                                .context("isolated worker")?;
-                            self.link_delay(n, via, bytes)? * 2.0
-                        };
+                        // `to` is always the next hop toward the result's
+                        // admitting source (the core routes); each leg is a
+                        // plain neighbor link transfer. The old two-hop
+                        // "mis-delivery" relay guess is gone — multi-hop
+                        // delivery is now charged link by actual link.
+                        let delay = self.link_delay(n, to, bytes)?;
                         if self.in_window() {
                             self.report.bytes_on_wire += bytes as u64;
                         }
@@ -307,6 +314,20 @@ impl<'a> Simulation<'a> {
                         self.push(
                             now + delay,
                             Event::Deliver { to, from: n, msg: Msg::Result(r) },
+                        );
+                    }
+                    Payload::Rehome(task) => {
+                        // Churn re-homing rides the wire like any transfer
+                        // (the seed teleported it for free, which hid the
+                        // cost of a mid-line worker's backlog going home).
+                        let delay = self.link_delay(n, to, bytes)?;
+                        if self.in_window() {
+                            self.report.bytes_on_wire += bytes as u64;
+                        }
+                        self.active_transfers += 1;
+                        self.push(
+                            now + delay,
+                            Event::Deliver { to, from: n, msg: Msg::Rehome(task) },
                         );
                     }
                     Payload::State { input_len, gamma_s, t_e } => {
@@ -319,13 +340,6 @@ impl<'a> Simulation<'a> {
                     }
                 },
                 Action::RecordResult { result } => self.record_result(result),
-                Action::Rehome { task } => {
-                    // Re-homing is the fabric's no-data-loss guarantee; the
-                    // DES charges no wire delay for it (as the seed did).
-                    self.report.rehomed += 1;
-                    let acts = self.workers[0].on_task(now, task, TaskOrigin::Rehomed);
-                    q.extend(acts.into_iter().map(|a| (0usize, a)));
-                }
             }
         }
         Ok(())
@@ -342,24 +356,24 @@ impl<'a> Simulation<'a> {
 
     // -- event handlers -------------------------------------------------------
 
-    fn on_admit(&mut self) -> Result<()> {
+    fn on_admit(&mut self, source: usize) -> Result<()> {
         let now = self.now();
-        let (mut task, dt) = self.workers[0].poll_admission(now);
+        let (mut task, dt) = self.workers[source].poll_admission(now);
         task.features = self.store.image(task.sample);
         if self.in_window() {
-            self.report.admitted += 1;
+            self.report.record_admission(source);
         }
-        let acts = self.workers[0].on_task(now, task, TaskOrigin::Admitted);
-        self.dispatch(0, acts)?;
-        self.push(now + dt, Event::Admit);
+        let acts = self.workers[source].on_task(now, task, TaskOrigin::Admitted);
+        self.dispatch(source, acts)?;
+        self.push(now + dt, Event::Admit { source });
         Ok(())
     }
 
-    fn on_adapt_tick(&mut self) -> Result<()> {
+    fn on_adapt_tick(&mut self, source: usize) -> Result<()> {
         let now = self.now();
-        let acts = self.workers[0].on_adapt_tick(now);
-        self.dispatch(0, acts)?;
-        self.push(now + self.cfg.adapt.sleep_s, Event::AdaptTick);
+        let acts = self.workers[source].on_adapt_tick(now);
+        self.dispatch(source, acts)?;
+        self.push(now + self.cfg.adapt.sleep_s, Event::AdaptTick { source });
         Ok(())
     }
 
@@ -389,6 +403,15 @@ impl<'a> Simulation<'a> {
                 let acts = self.workers[to].on_result(now, r);
                 self.dispatch(to, acts)
             }
+            Msg::Rehome(task) => {
+                if task.source == to {
+                    // The displaced task made it home: count it once, at
+                    // terminal delivery (relay hops are not re-homings).
+                    self.report.rehomed += 1;
+                }
+                let acts = self.workers[to].on_rehome(now, task);
+                self.dispatch(to, acts)
+            }
         }
     }
 
@@ -404,10 +427,13 @@ impl<'a> Simulation<'a> {
 
     fn on_trace(&mut self) {
         let now = self.now();
+        // The trace follows the first declared source (multi-source runs
+        // read per-source detail from `report.per_source` instead).
+        let lead = self.cfg.placement.sources[0].node;
         self.report.trace.push(TracePoint {
             t_s: now,
-            control: self.workers[0].control_value(),
-            source_queue: self.workers[0].queue_total(),
+            control: self.workers[lead].control_value(),
+            source_queue: self.workers[lead].queue_total(),
         });
         self.push(now + TRACE_PERIOD_S, Event::TraceTick);
     }
@@ -440,6 +466,7 @@ impl<'a> Simulation<'a> {
         let latency = self.now() - r.admitted_at;
         self.report.latency.push(latency);
         self.report.record_class(r.class, r.exit_point, correct, latency);
+        self.report.record_source(r.source, r.exit_point, correct, latency);
     }
 
     fn link_delay(&mut self, n: usize, m: usize, bytes: usize) -> Result<f64> {
@@ -456,8 +483,9 @@ impl<'a> Simulation<'a> {
     fn finalize(self) -> Result<RunReport> {
         let mut report = self.report;
         report.duration_s = self.cfg.duration_s;
-        report.final_mu_s = self.workers[0].final_mu_s();
-        report.final_t_e = self.workers[0].final_t_e();
+        let lead = self.cfg.placement.sources[0].node;
+        report.final_mu_s = self.workers[lead].final_mu_s();
+        report.final_t_e = self.workers[lead].final_t_e();
         for (i, w) in self.workers.into_iter().enumerate() {
             report.per_worker[i] = w.into_stats();
         }
@@ -697,9 +725,117 @@ mod tests {
     }
 
     #[test]
+    fn multi_source_line_reports_per_source_and_conserves() {
+        use crate::routing::Placement;
+        let (engine, labels) = engine_2stage();
+        // Two sources at the ends of a 4-node line, comfortably under
+        // capacity: everything each source admits must come back to *it*,
+        // with the oracle's 50/50 exit split per source.
+        let mut cfg = base_cfg("line-4");
+        cfg.admission = AdmissionMode::Fixed { rate_hz: 60.0, threshold: 0.9 };
+        cfg.placement = Placement::multi(&[0, 3]);
+        cfg.duration_s = 30.0;
+        cfg.warmup_s = 2.0;
+        let r = run_des(cfg, &engine, &labels);
+        assert_eq!(r.per_source.len(), 2);
+        let by_source_admitted: u64 = r.per_source.iter().map(|s| s.admitted).sum();
+        let by_source_completed: u64 = r.per_source.iter().map(|s| s.completed).sum();
+        assert_eq!(by_source_admitted, r.admitted, "per-source admissions conserve");
+        assert_eq!(by_source_completed, r.completed, "per-source completions conserve");
+        for s in &r.per_source {
+            assert!(s.admitted > 1000, "source {} admitted {}", s.node, s.admitted);
+            assert!(
+                (s.admitted as i64 - s.completed as i64).abs() < 30,
+                "source {}: admitted {} completed {} (in-flight tail only)",
+                s.node,
+                s.admitted,
+                s.completed
+            );
+            let f = s.exit_fractions();
+            assert!((f[0] - 0.5).abs() < 0.05, "source {} split {f:?}", s.node);
+        }
+        assert!((r.accuracy() - 1.0).abs() < 1e-9);
+        // The JSON report carries the per-source rows.
+        let mut r = r;
+        let j = r.to_json();
+        let sources = j.get("sources").as_arr().unwrap();
+        assert_eq!(sources.len(), 2);
+        assert_eq!(sources[1].get("node").as_i64(), Some(3));
+        assert!(sources[1].get("completed").as_i64().unwrap() > 0);
+    }
+
+    /// 8 samples x 3 exits, stage-3-heavy costs: 3/4 of the stream rides
+    /// to the final stage, which is 6x the cost of the others — so under
+    /// overload, continuing work piles up two hops from the source. (A
+    /// 2-stage model can never spread past one hop: only final-stage
+    /// tasks offload, and they spawn no successors.)
+    fn engine_3stage() -> (SimEngine, Vec<u8>, ModelMeta) {
+        let n = 8;
+        let mut conf = Vec::new();
+        let mut pred = Vec::new();
+        let labels: Vec<u8> = (0..n as u8).map(|i| i % 10).collect();
+        for i in 0..n {
+            if i % 4 == 0 {
+                conf.extend([0.97f32, 0.99, 1.0]);
+            } else {
+                conf.extend([0.30f32, 0.50, 0.95]);
+            }
+            pred.extend([labels[i]; 3]);
+        }
+        let engine = SimEngine::from_table(ExitTable::synthetic(n, 3, conf, pred), false);
+        let meta =
+            ModelMeta::synthetic(vec![0.001, 0.001, 0.006], vec![12288, 8192, 4096]);
+        (engine, labels, meta)
+    }
+
+    #[test]
+    fn churned_mid_line_backlog_rehomes_multi_hop() {
+        use crate::simnet::ChurnEvent;
+        let (engine, labels, meta) = engine_3stage();
+        // Source at 0, worker 2 (two hops out) leaves while holding a
+        // stage-3 backlog: that backlog must travel 2 → 1 → 0, showing up
+        // as relays at worker 1 and re-homings at the source — the path
+        // the old source-adjacency assumption could not express.
+        let mut cfg = base_cfg("line-4");
+        cfg.admission = AdmissionMode::Fixed { rate_hz: 900.0, threshold: 0.9 };
+        cfg.duration_s = 30.0;
+        cfg.warmup_s = 0.0;
+        cfg.churn = vec![ChurnEvent { at_s: 10.0, worker: 2, join: false }];
+        let r = Run::builder()
+            .config(cfg)
+            .model(meta)
+            .engine(&engine)
+            .labels(&labels)
+            .driver(Driver::Des)
+            .execute()
+            .unwrap();
+        assert!(r.rehomed > 0, "mid-line churn must re-home, not strand");
+        assert!(
+            r.per_worker[1].relayed > 0,
+            "re-homes from worker 2 relay through worker 1: {:?}",
+            r.per_worker.iter().map(|w| w.relayed).collect::<Vec<_>>()
+        );
+        assert!(r.completed > 0);
+    }
+
+    #[test]
     fn rejects_bad_construction() {
         let (engine, labels) = engine_2stage();
         let cfg = base_cfg("not-a-topology");
+        let store = SampleStore { labels: &labels, images: None };
+        assert!(Simulation::new(cfg, &engine, meta_2stage(), store).is_err());
+
+        // Placement that does not fit the topology.
+        let mut cfg = base_cfg("2-node");
+        cfg.placement = crate::routing::Placement::multi(&[0, 5]);
+        let store = SampleStore { labels: &labels, images: None };
+        assert!(Simulation::new(cfg, &engine, meta_2stage(), store).is_err());
+
+        // Churn schedule that would take a source down.
+        let mut cfg = base_cfg("line-4");
+        cfg.placement = crate::routing::Placement::multi(&[0, 3]);
+        cfg.churn =
+            vec![crate::simnet::ChurnEvent { at_s: 1.0, worker: 3, join: false }];
         let store = SampleStore { labels: &labels, images: None };
         assert!(Simulation::new(cfg, &engine, meta_2stage(), store).is_err());
 

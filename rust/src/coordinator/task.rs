@@ -11,6 +11,10 @@ pub struct Task {
     pub sample: usize,
     /// Which task (stage) this is, 1-based like the paper's τ indices.
     pub stage: usize,
+    /// Node that admitted the sample. Results, re-homes, and per-source
+    /// report counters all route/key off this; the admitting core stamps
+    /// it (defaults to node 0, the classic single-source placement).
+    pub source: usize,
     /// Feature tensor a_{λ_b^k}(d) entering the stage. `None` on the
     /// oracle (DES) path where the engine replays confidences by sample id.
     pub features: Option<Tensor>,
@@ -37,6 +41,7 @@ impl Task {
             id,
             sample,
             stage: 1,
+            source: 0,
             features,
             encoded: false,
             admitted_at: now,
@@ -53,6 +58,7 @@ impl Task {
             id,
             sample: self.sample,
             stage: self.stage + 1,
+            source: self.source,
             features,
             encoded: false,
             admitted_at: self.admitted_at,
@@ -76,6 +82,9 @@ pub struct InferenceResult {
     pub admitted_at: f64,
     /// Worker that produced the exit.
     pub exited_on: usize,
+    /// Source node that admitted the sample — the result's destination.
+    /// Relays forward toward it hop by hop (`routing::RoutingTable`).
+    pub source: usize,
     /// Traffic class of the originating task (per-class report counters).
     pub class: u8,
 }
@@ -86,7 +95,7 @@ mod tests {
 
     #[test]
     fn successor_advances_stage_and_keeps_lineage() {
-        let t = Task { class: 2, deadline: 4.5, ..Task::initial(1, 42, None, 3.5) };
+        let t = Task { class: 2, deadline: 4.5, source: 3, ..Task::initial(1, 42, None, 3.5) };
         assert_eq!((t.stage, t.sample, t.hops), (1, 42, 0));
         let s = t.successor(2, None);
         assert_eq!(s.stage, 2);
@@ -95,12 +104,14 @@ mod tests {
         assert!(!s.encoded);
         assert_eq!(s.class, 2, "class is stamped once, at admission");
         assert_eq!(s.deadline, 4.5, "deadline travels with the data");
+        assert_eq!(s.source, 3, "the admitting source travels with the data");
     }
 
     #[test]
     fn initial_task_defaults_to_class_zero_no_deadline() {
         let t = Task::initial(1, 0, None, 0.0);
         assert_eq!(t.class, 0);
+        assert_eq!(t.source, 0, "classic placement unless the admitting core restamps");
         assert!(t.deadline.is_infinite());
     }
 }

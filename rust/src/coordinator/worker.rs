@@ -7,18 +7,25 @@
 //! `on_compute_done`, `on_adapt_tick`, `on_churn`, `poll_admission`) and
 //! answers with [`Action`]s — *what* should happen, never *how*:
 //!
-//! * `Send { to, payload, bytes }` — put a message on the wire;
+//! * `Send { to, payload, bytes }` — put a message on the wire (`to` is
+//!   always a one-hop neighbor; multi-hop destinations are reached by
+//!   forwarding along the run's [`crate::routing::RoutingTable`]);
 //! * `StartCompute { batch, est_cost_s }` — run a same-stage batch of
 //!   tasks through the engine (one batched forward per stage; batch size 1
 //!   unless [`crate::sched::BatchPolicy`] says otherwise);
 //! * `RecordResult { result }` — source-side accounting of a completed
-//!   inference;
-//! * `Rehome { task }` — hand a task back to the source (churn safety).
+//!   inference.
 //!
 //! Queue *order* is a policy: both queues sit behind boxed
 //! [`crate::sched::QueueDiscipline`]s chosen by the run's
 //! [`crate::sched::SchedConfig`] (FIFO, strict priority across traffic
 //! classes, or EDF), and admission stamps each task's class and deadline.
+//!
+//! *Where* data enters and *where* results land is a policy too: the
+//! run's [`crate::routing::Placement`] declares one or many source nodes,
+//! each core derives its [`crate::routing::Role`] and next-hop row from
+//! it, and every result / re-homed task / gossip-adopted T_e travels hop
+//! by hop toward the admitting source — on any topology, on both drivers.
 //!
 //! The discrete-event driver ([`super::sim`]) maps these onto its
 //! virtual-time heap; the realtime driver (`super::rt`) maps them onto
@@ -35,6 +42,7 @@ use super::queues::WorkerQueues;
 use super::report::WorkerStats;
 use super::task::{InferenceResult, Task};
 use crate::artifact::ModelInfo;
+use crate::routing::{Role, RoutingTable};
 use crate::runtime::{InferenceEngine, StageOutput};
 use crate::sched::QueueDiscipline;
 use crate::simnet::Topology;
@@ -154,6 +162,10 @@ impl ModelMeta {
 pub enum Payload {
     Task(Task),
     Result(InferenceResult),
+    /// A task in transit back to its admitting source after its worker
+    /// left the network. Forwarded hop by hop (`WorkerCore::on_rehome`)
+    /// until it reaches `task.source`, which re-queues it.
+    Rehome(Task),
     /// Gossiped neighbor state (paper §IV.A: "periodically learns ... its
     /// input queue size I_m, per task computing delay Γ_m"). Carries the
     /// source's adapted T_e so Alg. 4 line 9 ("applies to every exit
@@ -176,10 +188,8 @@ pub enum Action {
     /// the compute delay; the realtime driver ignores it and measures real
     /// elapsed time. The batch is never empty.
     StartCompute { batch: Vec<Task>, est_cost_s: f64 },
-    /// A completed inference reached the source: record it.
+    /// A completed inference reached its admitting source: record it.
     RecordResult { result: InferenceResult },
-    /// Hand the task back to the source (this worker left the network).
-    Rehome { task: Task },
 }
 
 /// How a task arrived at [`WorkerCore::on_task`].
@@ -202,6 +212,14 @@ pub struct WorkerCore {
     id: usize,
     cfg: ExperimentConfig,
     meta: ModelMeta,
+    /// What the run's `Placement` makes of this worker: source or not,
+    /// and which source it answers to.
+    role: Role,
+    /// `next_hop[dest]` — this node's row of the run's routing table
+    /// (first hop of a shortest path; `None` = unreachable or self).
+    next_hop: Vec<Option<usize>>,
+    /// Admission pacing multiplier for this source (1.0 elsewhere).
+    rate_share: f64,
     /// Effective compute speed (topology speed × cfg.compute_scale).
     speed: f64,
     neighbors: Vec<usize>,
@@ -227,8 +245,9 @@ pub struct WorkerCore {
     // Source-only state (inert on other workers).
     rate_ctl: Option<RateController>,
     thr_ctl: Option<ThresholdController>,
-    /// Current early-exit threshold T_e (source adapts it; others adopt it
-    /// from the source's gossip — Alg. 4 line 9).
+    /// Current early-exit threshold T_e (sources adapt it; others adopt
+    /// their home source's value as it propagates hop by hop through
+    /// gossip — Alg. 4 line 9, generalized to multi-hop graphs).
     t_e: f32,
     next_task_id: u64,
     next_sample: usize,
@@ -247,8 +266,9 @@ pub struct WorkerCore {
 }
 
 impl WorkerCore {
-    /// Build worker `id`'s core. `num_samples` is only meaningful at the
-    /// source (admission rotates through the sample store).
+    /// Build worker `id`'s core. `num_samples` is only meaningful at
+    /// sources (admission rotates through the sample store). Role and
+    /// next hops derive from `cfg.placement` over the topology's routes.
     pub fn new(
         id: usize,
         cfg: &ExperimentConfig,
@@ -257,6 +277,8 @@ impl WorkerCore {
         num_samples: usize,
     ) -> WorkerCore {
         let n = topo.n;
+        let routing = RoutingTable::build(topo);
+        let role = Role::of(id, &cfg.placement, &routing);
         let speed = topo.workers[id].speed * cfg.compute_scale;
         let neighbors = topo.neighbors(id);
         let typical = meta.stage_in_bytes[meta.num_stages.min(2) - 1];
@@ -268,11 +290,12 @@ impl WorkerCore {
 
         let (rate_ctl, thr_ctl, t_e) = match cfg.admission {
             AdmissionMode::AdaptiveRate { threshold, initial_mu_s } => {
-                let rc = (id == 0).then(|| RateController::new(cfg.adapt, initial_mu_s));
+                let rc =
+                    role.is_source.then(|| RateController::new(cfg.adapt, initial_mu_s));
                 (rc, None, threshold)
             }
             AdmissionMode::AdaptiveThreshold { initial_t_e, t_e_min, .. } => {
-                let tc = (id == 0).then(|| {
+                let tc = role.is_source.then(|| {
                     ThresholdController::new(cfg.adapt, initial_t_e as f64, t_e_min as f64)
                 });
                 (None, tc, initial_t_e)
@@ -284,6 +307,9 @@ impl WorkerCore {
             id,
             cfg: cfg.clone(),
             meta,
+            role,
+            next_hop: routing.row(id),
+            rate_share: cfg.placement.rate_share(id),
             speed,
             neighbors,
             link_default_delay,
@@ -315,6 +341,17 @@ impl WorkerCore {
 
     pub fn id(&self) -> usize {
         self.id
+    }
+
+    /// This worker's placement-derived role (source flag + home source).
+    pub fn role(&self) -> Role {
+        self.role
+    }
+
+    /// Whether this worker admits data (drivers use it to decide whether
+    /// admission polling applies).
+    pub fn is_source(&self) -> bool {
+        self.role.is_source
     }
 
     pub fn is_active(&self) -> bool {
@@ -400,18 +437,20 @@ impl WorkerCore {
         ((self.id as u64) << 48) | self.next_task_id
     }
 
-    // -- admission (source) --------------------------------------------------
+    // -- admission (sources) -------------------------------------------------
 
-    /// Source only: admit the next sample. Returns the fresh task τ_1
+    /// Sources only: admit the next sample. Returns the fresh task τ_1
     /// (features unset — the driver owns the sample store) with its
-    /// traffic class and deadline stamped, and the delay until the next
-    /// admission per the configured [`AdmissionMode`].
+    /// admitting source, traffic class, and deadline stamped, and the
+    /// delay until this source's next admission per the configured
+    /// [`AdmissionMode`], scaled by the placement's per-source rate share.
     pub fn poll_admission(&mut self, now: f64) -> (Task, f64) {
-        debug_assert_eq!(self.id, 0, "only the source admits data");
+        debug_assert!(self.role.is_source, "only sources admit data");
         let sample = self.next_sample;
         self.next_sample = (self.next_sample + 1) % self.num_samples.max(1);
         let id = self.alloc_task_id();
         let mut task = Task::initial(id, sample, None, now);
+        task.source = self.id;
         task.class = self.next_class;
         task.deadline = now + self.cfg.sched.deadline_for(task.class);
         self.next_class = (self.next_class + 1) % self.cfg.sched.num_classes.max(1);
@@ -424,7 +463,7 @@ impl WorkerCore {
             }
             AdmissionMode::Fixed { rate_hz, .. } => 1.0 / rate_hz,
         };
-        (task, dt)
+        (task, dt / self.rate_share)
     }
 
     // -- task arrival --------------------------------------------------------
@@ -436,7 +475,7 @@ impl WorkerCore {
         let mut out = Vec::new();
         match origin {
             TaskOrigin::Admitted => {
-                if self.cfg.mode == Mode::Ddi && self.id == 0 {
+                if self.cfg.mode == Mode::Ddi && self.role.is_source {
                     // Round-robin whole images across all active workers
                     // (including the source). No partitioning, no exits.
                     let n = self.num_workers;
@@ -473,8 +512,9 @@ impl WorkerCore {
             TaskOrigin::Wire => {
                 if !self.active {
                     // Arrived while this worker was gone: the fabric
-                    // re-homes it to the source so no data is lost.
-                    out.push(Action::Rehome { task });
+                    // re-homes it to its admitting source (multi-hop if
+                    // need be) so no data is lost.
+                    self.send_rehome(task, &mut out);
                     return out;
                 }
                 if self.in_window(now) {
@@ -569,18 +609,10 @@ impl WorkerCore {
                         confidence: out.confidence,
                         admitted_at: task.admitted_at,
                         exited_on: self.id,
+                        source: task.source,
                         class: task.class,
                     };
-                    if self.id == 0 {
-                        actions.push(Action::RecordResult { result });
-                    } else {
-                        actions.push(Action::Send {
-                            to: 0,
-                            payload: Payload::Result(result),
-                            bytes: RESULT_BYTES,
-                            needs_encode: false,
-                        });
-                    }
+                    self.deliver_result(now, result, &mut actions);
                 }
                 ExitDecision::ContinueLocal | ExitDecision::ContinueOffload => {
                     let id = self.alloc_task_id();
@@ -591,7 +623,7 @@ impl WorkerCore {
                     if !self.active {
                         // Completed while churned out: hand the successor
                         // back instead of stranding it on an inactive queue.
-                        actions.push(Action::Rehome { task: succ });
+                        self.send_rehome(succ, &mut actions);
                     } else if decision == ExitDecision::ContinueLocal {
                         self.queues.input.push(succ);
                     } else {
@@ -624,21 +656,88 @@ impl WorkerCore {
         self.maybe_start(now).into_iter().collect()
     }
 
-    // -- results -------------------------------------------------------------
+    // -- results and re-homes (multi-hop delivery) ---------------------------
 
-    /// A result message arrived (only the source receives these).
-    pub fn on_result(&mut self, _now: f64, result: InferenceResult) -> Vec<Action> {
-        if self.id == 0 {
-            vec![Action::RecordResult { result }]
-        } else {
-            // Mis-delivered: forward toward the source.
-            vec![Action::Send {
-                to: 0,
+    /// Put `result` where it belongs: record it if this worker is its
+    /// admitting source, otherwise send it one hop closer. The routing
+    /// table guarantees progress, so a result crosses at most n-1 links.
+    fn deliver_result(&mut self, now: f64, result: InferenceResult, out: &mut Vec<Action>) {
+        if result.source == self.id {
+            out.push(Action::RecordResult { result });
+        } else if let Some(hop) = self.next_hop[result.source] {
+            out.push(Action::Send {
+                to: hop,
                 payload: Payload::Result(result),
                 bytes: RESULT_BYTES,
                 needs_encode: false,
-            }]
+            });
+        } else {
+            // No route home — only possible on a disconnected custom
+            // topology that placed work it cannot report. Drop *with
+            // accounting* so conservation checks still see the loss.
+            if self.in_window(now) {
+                let last = self.failed_per_class.len().saturating_sub(1);
+                self.failed_per_class[(result.class as usize).min(last)] += 1;
+            }
+            crate::log_debug!(
+                "worker {}: result for unreachable source {} dropped",
+                self.id,
+                result.source
+            );
         }
+    }
+
+    /// A result message arrived. Its admitting source records it; every
+    /// other worker relays it one hop closer (this is what replaces the
+    /// old DES-only "mis-delivered result" special case — relaying is now
+    /// a first-class, driver-agnostic behaviour).
+    pub fn on_result(&mut self, now: f64, result: InferenceResult) -> Vec<Action> {
+        let mut out = Vec::new();
+        let forwards = result.source != self.id && self.next_hop[result.source].is_some();
+        if forwards && self.in_window(now) {
+            self.stats.relayed += 1;
+        }
+        self.deliver_result(now, result, &mut out);
+        out
+    }
+
+    /// Route `task` back to its admitting source: one hop closer if remote,
+    /// straight into the input queue if this worker *is* the source. The
+    /// no-route fallback keeps the task queued locally rather than losing
+    /// it (it replays when the worker rejoins).
+    fn send_rehome(&mut self, task: Task, out: &mut Vec<Action>) {
+        if task.source == self.id {
+            self.queues.input.push(task);
+            return;
+        }
+        match self.next_hop[task.source] {
+            Some(hop) => {
+                let bytes = self.task_wire_bytes(&task);
+                out.push(Action::Send {
+                    to: hop,
+                    payload: Payload::Rehome(task),
+                    bytes,
+                    needs_encode: false,
+                });
+            }
+            None => self.queues.input.push(task),
+        }
+    }
+
+    /// A re-homing task arrived over the wire: requeue it if this worker
+    /// is its admitting source, otherwise relay it one hop closer. Relays
+    /// happen even while churned out — the radio keeps forwarding; only
+    /// *compute* stops (the fabric's no-data-loss guarantee).
+    pub fn on_rehome(&mut self, now: f64, task: Task) -> Vec<Action> {
+        if task.source == self.id {
+            return self.on_task(now, task, TaskOrigin::Rehomed);
+        }
+        if self.next_hop[task.source].is_some() && self.in_window(now) {
+            self.stats.relayed += 1;
+        }
+        let mut out = Vec::new();
+        self.send_rehome(task, &mut out);
+        out
     }
 
     // -- gossip --------------------------------------------------------------
@@ -666,6 +765,14 @@ impl WorkerCore {
 
     /// Gossiped state arrived from `from`: refresh the view and re-scan
     /// offloading (fresh views may unblock a stalled output queue).
+    ///
+    /// Threshold adoption (Alg. 4 line 9, "applies to every exit point")
+    /// is multi-hop: a non-source adopts T_e from the neighbor that is its
+    /// next hop toward its home source. That neighbor is strictly closer
+    /// to the source and adopted the value the same way, so the adapted
+    /// threshold ripples outward one gossip period per hop, with no echo
+    /// loops — on a one-hop topology this degenerates to the paper's
+    /// "adopt from the source" rule exactly.
     pub fn on_gossip(
         &mut self,
         now: f64,
@@ -676,8 +783,7 @@ impl WorkerCore {
     ) -> Vec<Action> {
         let d = self.d_est[from].get_or(self.link_default_delay[from].unwrap_or(0.01));
         self.views[from] = Some(NeighborView { input_len, gamma_s, d_nm_s: d });
-        if from == 0 && self.id != 0 {
-            // Adopt the source's adapted threshold (Alg. 4 line 9).
+        if !self.role.is_source && self.next_hop[self.role.home_source] == Some(from) {
             self.t_e = t_e;
         }
         let mut out = Vec::new();
@@ -714,12 +820,15 @@ impl WorkerCore {
                     out.push(a);
                 }
             } else {
-                // Drain both queues in admission order so the source
-                // replays re-homed work deterministically (the drain keeps
-                // peak/total_enqueued accounting intact — see
-                // `QueueDiscipline::drain_all`).
+                // Drain both queues in admission order so each source
+                // replays its re-homed work deterministically (the drain
+                // keeps peak/total_enqueued accounting intact — see
+                // `QueueDiscipline::drain_all`). Every task routes to its
+                // *own* admitting source via the next-hop table — a
+                // mid-line worker's backlog travels multi-hop instead of
+                // assuming the source is adjacent.
                 for task in self.queues.drain_all_ordered() {
-                    out.push(Action::Rehome { task });
+                    self.send_rehome(task, &mut out);
                 }
             }
         } else {
@@ -1075,12 +1184,13 @@ mod tests {
         let acts = remote.on_churn(1.0, 1, false);
         assert_eq!(acts.len(), 3);
         // Re-homing preserves admission order (ties broken by id here,
-        // since every task was admitted at t=0).
+        // since every task was admitted at t=0) and travels the wire as a
+        // routed Rehome payload toward the admitting source.
         let rehomed: Vec<u64> = acts
             .iter()
             .map(|a| match a {
-                Action::Rehome { task } => task.id,
-                other => panic!("expected Rehome, got {other:?}"),
+                Action::Send { to: 0, payload: Payload::Rehome(task), .. } => task.id,
+                other => panic!("expected routed Rehome send, got {other:?}"),
             })
             .collect();
         assert_eq!(rehomed, vec![1, 2, 3], "rehome must preserve arrival order");
@@ -1095,7 +1205,7 @@ mod tests {
         let _ = remote.on_churn(1.0, 1, false);
         // A late wire arrival also re-homes.
         let acts = remote.on_task(1.1, Task::initial(99, 0, None, 1.0), TaskOrigin::Wire);
-        assert!(matches!(acts[0], Action::Rehome { .. }));
+        assert!(matches!(acts[0], Action::Send { to: 0, payload: Payload::Rehome(_), .. }));
 
         // The source hears about the leave and stops offloading to 1.
         let mut src = core(0, &cfg, "2-node");
@@ -1268,7 +1378,10 @@ mod tests {
             .iter()
             .filter(|a| matches!(a, Action::Send { payload: Payload::Result(_), .. }))
             .count();
-        let rehomes = acts.iter().filter(|a| matches!(a, Action::Rehome { .. })).count();
+        let rehomes = acts
+            .iter()
+            .filter(|a| matches!(a, Action::Send { payload: Payload::Rehome(_), .. }))
+            .count();
         assert_eq!(sends, 1, "{acts:?}");
         assert_eq!(rehomes, 2, "{acts:?}");
         assert_eq!(w.input_len(), 0, "nothing queued on the inactive worker");
@@ -1336,5 +1449,126 @@ mod tests {
         let stats = w.into_stats();
         assert_eq!(stats.dropped, 3, "failed batch is accounted, not lost silently");
         assert_eq!(stats.dropped_per_class, vec![3]);
+    }
+
+    // -- topology/routing API through the core --------------------------------
+
+    use crate::routing::Placement;
+
+    fn cfg_sources(topology: &str, sources: &[usize]) -> ExperimentConfig {
+        let mut cfg = cfg_fixed(topology, 50.0, 0.9);
+        cfg.warmup_s = 0.0;
+        cfg.placement = Placement::multi(sources);
+        cfg
+    }
+
+    #[test]
+    fn placement_assigns_roles_and_stamps_admissions() {
+        let cfg = cfg_sources("line-4", &[0, 3]);
+        let w3 = WorkerCore::new(3, &cfg, meta2(), &topo("line-4"), 8);
+        assert!(w3.is_source());
+        assert_eq!(w3.role().home_source, 3);
+        let w1 = WorkerCore::new(1, &cfg, meta2(), &topo("line-4"), 8);
+        assert!(!w1.is_source());
+        assert_eq!(w1.role().home_source, 0, "worker 1 is nearest the left source");
+        let w2 = WorkerCore::new(2, &cfg, meta2(), &topo("line-4"), 8);
+        assert_eq!(w2.role().home_source, 3, "worker 2 is nearest the right source");
+
+        let mut w3 = w3;
+        let (task, _) = w3.poll_admission(0.0);
+        assert_eq!(task.source, 3, "tasks carry their admitting source");
+    }
+
+    #[test]
+    fn exits_route_results_hop_by_hop_to_their_source() {
+        let cfg = cfg_sources("line-4", &[0]);
+        // Worker 2 exits a task admitted at 0: the result's first hop is 1.
+        let mut w2 = WorkerCore::new(2, &cfg, meta2(), &topo("line-4"), 8);
+        let task = Task::initial(7, 0, None, 0.0);
+        w2.busy = true;
+        let acts = w2.on_compute_done(0.01, vec![task], vec![(out(0.99), 1)], 0.002);
+        let Action::Send { to, payload: Payload::Result(r), bytes, .. } = &acts[0] else {
+            panic!("expected routed result send, got {acts:?}");
+        };
+        assert_eq!((*to, *bytes), (1, RESULT_BYTES));
+        assert_eq!(r.source, 0);
+        assert_eq!(r.exited_on, 2);
+
+        // Worker 1 relays it one hop closer; worker 0 records it.
+        let mut w1 = WorkerCore::new(1, &cfg, meta2(), &topo("line-4"), 8);
+        let acts = w1.on_result(0.02, *r);
+        assert!(
+            matches!(acts[0], Action::Send { to: 0, payload: Payload::Result(_), .. }),
+            "{acts:?}"
+        );
+        assert_eq!(w1.into_stats().relayed, 1, "relays are counted");
+        let mut w0 = WorkerCore::new(0, &cfg, meta2(), &topo("line-4"), 8);
+        let acts = w0.on_result(0.03, *r);
+        assert!(matches!(acts[0], Action::RecordResult { .. }), "{acts:?}");
+        assert_eq!(w0.into_stats().relayed, 0, "terminal delivery is not a relay");
+    }
+
+    #[test]
+    fn churned_mid_line_worker_rehomes_via_next_hop() {
+        let cfg = cfg_sources("line-4", &[0]);
+        // Worker 3 (two hops from the source) holds queued work and leaves:
+        // every task must head to neighbor 2, not assume source adjacency.
+        let mut w3 = WorkerCore::new(3, &cfg, meta2(), &topo("line-4"), 8);
+        for i in 0..3 {
+            w3.on_task(0.0, Task::initial(i, 0, None, 0.0), TaskOrigin::Wire);
+        }
+        let acts = w3.on_churn(1.0, 3, false);
+        assert_eq!(acts.len(), 2, "one computing, two queued: {acts:?}");
+        for a in &acts {
+            assert!(
+                matches!(a, Action::Send { to: 2, payload: Payload::Rehome(t), .. }
+                         if t.source == 0),
+                "rehome must route via worker 2: {a:?}"
+            );
+        }
+
+        // The relay leg: worker 1 forwards toward 0; the source requeues
+        // and immediately starts computing.
+        let mut w1 = WorkerCore::new(1, &cfg, meta2(), &topo("line-4"), 8);
+        let acts = w1.on_rehome(1.1, Task::initial(9, 0, None, 0.0));
+        assert!(
+            matches!(acts[0], Action::Send { to: 0, payload: Payload::Rehome(_), .. }),
+            "{acts:?}"
+        );
+        let mut w0 = WorkerCore::new(0, &cfg, meta2(), &topo("line-4"), 8);
+        let acts = w0.on_rehome(1.2, Task::initial(9, 0, None, 0.0));
+        assert!(matches!(acts[0], Action::StartCompute { .. }), "{acts:?}");
+        assert_eq!(w0.into_stats().relayed, 0);
+    }
+
+    #[test]
+    fn t_e_adoption_follows_the_route_home() {
+        let mut cfg = cfg_sources("line-4", &[0, 3]);
+        cfg.admission =
+            AdmissionMode::AdaptiveThreshold { rate_hz: 10.0, initial_t_e: 0.9, t_e_min: 0.05 };
+        // Worker 2's home source is 3, so its next hop home *is* 3: gossip
+        // from 1 (wrong direction) must not change T_e; gossip from 3 must.
+        let mut w2 = WorkerCore::new(2, &cfg, meta2(), &topo("line-4"), 8);
+        let _ = w2.on_gossip(0.0, 1, 0, 0.01, 0.33);
+        assert!((w2.t_e() - 0.9).abs() < 1e-6, "must not adopt from off-route gossip");
+        let _ = w2.on_gossip(0.1, 3, 0, 0.01, 0.42);
+        assert!((w2.t_e() - 0.42).abs() < 1e-6, "adopts from the next hop home");
+
+        // Sources keep their own controller's value.
+        let mut w3 = WorkerCore::new(3, &cfg, meta2(), &topo("line-4"), 8);
+        let _ = w3.on_gossip(0.0, 2, 0, 0.01, 0.11);
+        assert!((w3.t_e() - 0.9).abs() < 1e-6, "sources never adopt");
+    }
+
+    #[test]
+    fn rate_share_scales_admission_pacing() {
+        let mut cfg = cfg_fixed("2-node", 50.0, 0.9);
+        cfg.placement = Placement {
+            sources: vec![crate::routing::SourceSpec { node: 0, rate_share: 2.0 }],
+        };
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("2-node"), 8);
+        let (_, dt) = w.poll_admission(0.0);
+        // Fixed 50 Hz at share 2.0 paces at 100 Hz.
+        assert!((dt - 0.01).abs() < 1e-12, "dt {dt}");
     }
 }

@@ -34,6 +34,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod dataset;
 pub mod experiments;
+pub mod routing;
 pub mod runtime;
 pub mod sched;
 pub mod simnet;

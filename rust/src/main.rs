@@ -60,6 +60,8 @@ fn print_help() {
          RUN FLAGS\n\
            --config FILE     TOML experiment config (see configs/)\n\
            --model M --topology T --threshold X --rate HZ --duration S\n\
+           --sources 0,3     admitting nodes (default 0); results and\n\
+                             re-homes route multi-hop back to each source\n\
            --adaptive-rate | --adaptive-threshold   admission mode\n\
            --use-ae --no-ee  feature toggles\n\
            --sched D         queue discipline: fifo (default) | priority | edf\n\
@@ -138,6 +140,19 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.sched.class_deadline_s = vec![deadline; classes];
     }
     cfg.sched.batch.max_batch = args.usize_or("batch", 1)?;
+    // Placement: comma-separated source nodes, e.g. --sources 0,3.
+    let sources = args.str_or("sources", "");
+    if !sources.is_empty() {
+        let nodes: Vec<usize> = sources
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("--sources: bad node id {s:?}"))
+            })
+            .collect::<Result<_>>()?;
+        cfg.placement = mdi_exit::routing::Placement::multi(&nodes);
+    }
     cfg.seed = args.u64_or("seed", 7)?;
     Ok(cfg)
 }
@@ -185,6 +200,18 @@ fn cmd_run(args: &Args, artifacts: &str) -> Result<()> {
                     cs.completed,
                     cs.latency.p95() * 1e3,
                     cs.dropped
+                );
+            }
+        }
+        if report.per_source.len() > 1 {
+            for ss in report.per_source.iter_mut() {
+                println!(
+                    "  source @{}: admitted {:>8}  completed {:>8}  acc {:>6.4}  p95 {:>8.2} ms",
+                    ss.node,
+                    ss.admitted,
+                    ss.completed,
+                    ss.accuracy(),
+                    ss.latency.p95() * 1e3
                 );
             }
         }

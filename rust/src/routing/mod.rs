@@ -1,0 +1,428 @@
+//! Topology-aware routing and source placement — the surface that
+//! generalizes the paper's "one source, one hop away" testbed.
+//!
+//! The paper's Algs 1–4 never say *where* results go or *who* admits data;
+//! the testbed just happens to put the single source one hop from every
+//! worker. This module makes both choices explicit and first-class:
+//!
+//! * [`RoutingTable`] — all-pairs next-hop table computed by shortest path
+//!   over the [`Topology`](crate::simnet::Topology)'s link weights (mean
+//!   link delay for a reference payload, so a half-bandwidth ring link
+//!   really is "longer" than a full-rate one). Drivers and the
+//!   [`WorkerCore`](crate::coordinator::WorkerCore) consult it to move
+//!   results, re-homed tasks, and gossip-adopted thresholds across
+//!   arbitrary multi-hop graphs.
+//! * [`Placement`] — which nodes admit data (one or many sources) and at
+//!   what per-source rate share. The default, a single source at node 0,
+//!   reproduces the paper's setup exactly.
+//! * [`Role`] — what the placement means for one worker: whether it is a
+//!   source, and which source is its *home* (the nearest one by routing
+//!   distance — the worker adopts that source's adapted T_e).
+//!
+//! ## The next-hop contract
+//!
+//! `next_hop(from, to)` returns the **one-hop neighbor of `from`** that is
+//! the first step of a shortest `from → to` path, or `None` when `to` is
+//! unreachable or equals `from`. Three properties callers rely on:
+//!
+//! 1. **Progress**: following next hops strictly decreases the remaining
+//!    shortest-path cost, so a relayed message reaches `to` in at most
+//!    `n - 1` forwards — no loops, ever.
+//! 2. **Determinism**: equal-cost ties resolve identically on every
+//!    build (Dijkstra settles nodes in ascending-id order on ties and
+//!    only relaxes on strict improvement), so both drivers and repeated
+//!    runs route the same. On *unweighted* ties this picks the lowest
+//!    first hop; on weighted graphs the tie goes to the path whose
+//!    intermediate nodes settle first.
+//! 3. **Locality**: the returned hop is always a direct neighbor, so every
+//!    transport (virtual link delay, threaded `DelayNet`) can carry the
+//!    send without knowing anything about the rest of the route.
+//!
+//! Routes are computed once per run from the static topology. Churn does
+//! not re-route: a leaving worker stops *computing*, but its radio keeps
+//! forwarding (the fabric's no-data-loss guarantee; the alternative —
+//! recomputing routes on every churn event — would let one flapping node
+//! strand every in-flight result behind it).
+
+use anyhow::{bail, Result};
+
+use crate::simnet::{ChurnEvent, Topology};
+
+/// Reference payload for link weights: one MTU-ish frame. Routing mostly
+/// carries small result/re-home messages, so what matters is the *relative*
+/// cost of links (a half-rate bridge vs. a clean mesh edge), not the exact
+/// serialization time of any one payload.
+const REF_BYTES: usize = 1500;
+
+// ---------------------------------------------------------------------------
+// RoutingTable
+// ---------------------------------------------------------------------------
+
+/// All-pairs shortest-path next hops over a topology's link weights.
+#[derive(Debug, Clone)]
+pub struct RoutingTable {
+    n: usize,
+    /// `next[from][to]` = first hop of a shortest path, `None` if
+    /// unreachable or `from == to`.
+    next: Vec<Vec<Option<usize>>>,
+    /// `dist[from][to]` = shortest-path cost (`INFINITY` if unreachable).
+    dist: Vec<Vec<f64>>,
+}
+
+impl RoutingTable {
+    /// Compute the table with Dijkstra from every node (n is tiny — the
+    /// paper's topologies top out at a handful of workers).
+    pub fn build(topo: &Topology) -> RoutingTable {
+        let n = topo.n;
+        let mut next = vec![vec![None; n]; n];
+        let mut dist = vec![vec![f64::INFINITY; n]; n];
+        for from in 0..n {
+            let (d, first) = dijkstra(topo, from);
+            dist[from] = d;
+            next[from] = first;
+        }
+        RoutingTable { n, next, dist }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// First hop of a shortest `from → to` path (see the module docs for
+    /// the contract).
+    pub fn next_hop(&self, from: usize, to: usize) -> Option<usize> {
+        self.next[from][to]
+    }
+
+    /// This node's full next-hop row (`row[to]`), for cores that only ever
+    /// route from themselves.
+    pub fn row(&self, from: usize) -> Vec<Option<usize>> {
+        self.next[from].clone()
+    }
+
+    /// Shortest-path cost, `None` if unreachable.
+    pub fn distance(&self, from: usize, to: usize) -> Option<f64> {
+        let d = self.dist[from][to];
+        d.is_finite().then_some(d)
+    }
+
+    /// Hop count of the shortest path (0 for `from == to`), `None` if
+    /// unreachable.
+    pub fn hops(&self, from: usize, to: usize) -> Option<usize> {
+        if from == to {
+            return Some(0);
+        }
+        let mut at = from;
+        let mut count = 0;
+        while at != to {
+            at = self.next[at][to]?;
+            count += 1;
+            debug_assert!(count <= self.n, "next-hop walk must terminate");
+        }
+        Some(count)
+    }
+}
+
+/// Dijkstra from `src` over mean link delays. Settle order breaks
+/// distance ties toward the lowest node id and relaxation is
+/// strict-improvement only, which makes equal-cost routing deterministic
+/// across drivers and runs (and lowest-first-hop on unweighted ties).
+fn dijkstra(topo: &Topology, src: usize) -> (Vec<f64>, Vec<Option<usize>>) {
+    let n = topo.n;
+    let mut dist = vec![f64::INFINITY; n];
+    let mut first = vec![None; n];
+    let mut done = vec![false; n];
+    dist[src] = 0.0;
+    for _ in 0..n {
+        let Some(u) = (0..n)
+            .filter(|&u| !done[u] && dist[u].is_finite())
+            .min_by(|&a, &b| dist[a].total_cmp(&dist[b]).then(a.cmp(&b)))
+        else {
+            break;
+        };
+        done[u] = true;
+        for v in topo.neighbors(u) {
+            let w = topo.link(u, v).expect("neighbor has a link").mean_delay_s(REF_BYTES);
+            let nd = dist[u] + w;
+            if nd < dist[v] {
+                dist[v] = nd;
+                // The first hop out of src toward v: src's own neighbor.
+                first[v] = if u == src { Some(v) } else { first[u] };
+            }
+        }
+    }
+    (dist, first)
+}
+
+// ---------------------------------------------------------------------------
+// Placement
+// ---------------------------------------------------------------------------
+
+/// One admitting node and its share of the configured admission rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SourceSpec {
+    pub node: usize,
+    /// Multiplier on the config's admission pacing: this source's
+    /// inter-arrival times are divided by `rate_share`, so a share of 2.0
+    /// admits twice as fast and 0.5 half as fast as the configured rate.
+    pub rate_share: f64,
+}
+
+/// Which nodes admit data. The default — a single source at node 0 with
+/// share 1.0 — is exactly the paper's (and the seed code's) setup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub sources: Vec<SourceSpec>,
+}
+
+impl Default for Placement {
+    fn default() -> Placement {
+        Placement::single(0)
+    }
+}
+
+impl Placement {
+    /// One source at `node`, full rate.
+    pub fn single(node: usize) -> Placement {
+        Placement { sources: vec![SourceSpec { node, rate_share: 1.0 }] }
+    }
+
+    /// Several sources, each admitting at the full configured rate.
+    pub fn multi(nodes: &[usize]) -> Placement {
+        Placement {
+            sources: nodes.iter().map(|&node| SourceSpec { node, rate_share: 1.0 }).collect(),
+        }
+    }
+
+    pub fn is_source(&self, node: usize) -> bool {
+        self.sources.iter().any(|s| s.node == node)
+    }
+
+    /// Source nodes in declaration order (report ordering follows it).
+    pub fn source_nodes(&self) -> Vec<usize> {
+        self.sources.iter().map(|s| s.node).collect()
+    }
+
+    /// Rate share of `node` (1.0 for non-sources, which never admit).
+    pub fn rate_share(&self, node: usize) -> f64 {
+        self.sources.iter().find(|s| s.node == node).map(|s| s.rate_share).unwrap_or(1.0)
+    }
+
+    /// The source `node` belongs to: itself if it is one, otherwise the
+    /// reachable source with the smallest routing distance (ties toward
+    /// the lowest node id). Falls back to the first declared source when
+    /// nothing is reachable (an isolated worker never sees traffic anyway).
+    pub fn home_source(&self, node: usize, routing: &RoutingTable) -> usize {
+        if self.is_source(node) {
+            return node;
+        }
+        self.sources
+            .iter()
+            .filter_map(|s| routing.distance(node, s.node).map(|d| (d, s.node)))
+            .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)))
+            .map(|(_, n)| n)
+            .unwrap_or_else(|| self.sources.first().map(|s| s.node).unwrap_or(0))
+    }
+
+    /// Structural validation against a topology of `n` nodes and its churn
+    /// schedule. Sources must exist, be unique, be in range, carry positive
+    /// shares — and never churn (an admitting node leaving mid-run would
+    /// orphan its whole task lineage).
+    pub fn validate(&self, n: usize, churn: &[ChurnEvent]) -> Result<()> {
+        if self.sources.is_empty() {
+            bail!("placement declares no sources");
+        }
+        for (i, s) in self.sources.iter().enumerate() {
+            if s.node >= n {
+                bail!("placement source {} out of range (topology has {} nodes)", s.node, n);
+            }
+            if !s.rate_share.is_finite() || s.rate_share <= 0.0 {
+                bail!("placement source {}: rate_share must be positive", s.node);
+            }
+            if self.sources[..i].iter().any(|p| p.node == s.node) {
+                bail!("placement source {} declared twice", s.node);
+            }
+        }
+        for e in churn {
+            if self.is_source(e.worker) {
+                bail!("churn schedule touches source node {} (sources cannot churn)", e.worker);
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Role
+// ---------------------------------------------------------------------------
+
+/// What a placement means for one worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Role {
+    /// This worker admits data (runs admission pacing and, per the
+    /// configured mode, an Alg. 3/4 controller).
+    pub is_source: bool,
+    /// The source this worker answers to: itself for sources; otherwise
+    /// the nearest source by routing distance. Non-sources adopt their
+    /// home source's adapted T_e as it propagates hop by hop through
+    /// gossip.
+    pub home_source: usize,
+}
+
+impl Role {
+    pub fn of(node: usize, placement: &Placement, routing: &RoutingTable) -> Role {
+        Role {
+            is_source: placement.is_source(node),
+            home_source: placement.home_source(node, routing),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::LinkSpec;
+
+    fn topo(name: &str) -> Topology {
+        Topology::named(name, LinkSpec::wifi()).unwrap()
+    }
+
+    #[test]
+    fn line_next_hops_walk_the_chain() {
+        let rt = RoutingTable::build(&topo("line-4"));
+        assert_eq!(rt.next_hop(0, 3), Some(1));
+        assert_eq!(rt.next_hop(1, 3), Some(2));
+        assert_eq!(rt.next_hop(3, 0), Some(2));
+        assert_eq!(rt.next_hop(2, 0), Some(1));
+        assert_eq!(rt.next_hop(1, 1), None, "no hop to yourself");
+        assert_eq!(rt.hops(0, 3), Some(3));
+        assert_eq!(rt.hops(3, 1), Some(2));
+        assert_eq!(rt.hops(2, 2), Some(0));
+    }
+
+    #[test]
+    fn mesh_routes_are_direct() {
+        let rt = RoutingTable::build(&topo("5-node-mesh"));
+        for a in 0..5 {
+            for b in 0..5 {
+                if a != b {
+                    assert_eq!(rt.next_hop(a, b), Some(b), "mesh is one hop");
+                    assert_eq!(rt.hops(a, b), Some(1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn star_routes_via_hub() {
+        let rt = RoutingTable::build(&topo("star-5"));
+        // Leaves reach each other through the hub (node 0).
+        assert_eq!(rt.next_hop(1, 4), Some(0));
+        assert_eq!(rt.next_hop(4, 1), Some(0));
+        assert_eq!(rt.hops(1, 4), Some(2));
+        assert_eq!(rt.next_hop(0, 3), Some(3));
+    }
+
+    #[test]
+    fn bridge_routes_cross_the_bridge() {
+        let rt = RoutingTable::build(&topo("2-ring-bridge"));
+        // Ring A = {0,1,2}, ring B = {3,4,5}, bridge 2–3.
+        assert_eq!(rt.next_hop(0, 4), Some(2), "toward the bridge");
+        assert_eq!(rt.next_hop(2, 4), Some(3));
+        assert_eq!(rt.hops(0, 4), Some(3));
+        assert_eq!(rt.hops(5, 1), Some(3), "5 → 3 → 2 → 1 (ring B is a triangle)");
+    }
+
+    #[test]
+    fn unreachable_and_isolated_nodes() {
+        let t = Topology::empty("iso", 3); // no links
+        let rt = RoutingTable::build(&t);
+        assert_eq!(rt.next_hop(0, 2), None);
+        assert_eq!(rt.distance(0, 2), None);
+        assert_eq!(rt.hops(0, 2), None);
+        assert_eq!(rt.hops(1, 1), Some(0));
+    }
+
+    #[test]
+    fn weighted_ties_break_deterministically() {
+        // Equal-cost two-hop paths 0-1-3 and 0-2-3: the route must pick
+        // the lowest first hop, every time.
+        let mut t = Topology::empty("diamond", 4);
+        let l = LinkSpec::wifi();
+        t.connect(0, 1, l);
+        t.connect(0, 2, l);
+        t.connect(1, 3, l);
+        t.connect(2, 3, l);
+        let rt = RoutingTable::build(&t);
+        assert_eq!(rt.next_hop(0, 3), Some(1));
+        assert_eq!(rt.next_hop(3, 0), Some(1));
+    }
+
+    #[test]
+    fn slow_links_are_routed_around() {
+        // 0-1 direct but at a crawl; 0-2-1 fast: shortest path takes the
+        // detour, so "next hop" is weight-aware, not hop-count BFS.
+        let mut t = Topology::empty("detour", 3);
+        let fast = LinkSpec { bandwidth_bps: 100e6, base_latency_s: 1e-3, jitter_s: 0.0 };
+        let slow = LinkSpec { bandwidth_bps: 1e4, base_latency_s: 0.5, jitter_s: 0.0 };
+        t.connect(0, 1, slow);
+        t.connect(0, 2, fast);
+        t.connect(2, 1, fast);
+        let rt = RoutingTable::build(&t);
+        assert_eq!(rt.next_hop(0, 1), Some(2));
+        assert_eq!(rt.hops(0, 1), Some(2));
+    }
+
+    #[test]
+    fn placement_roles_and_homes() {
+        let t = topo("line-4");
+        let rt = RoutingTable::build(&t);
+        let p = Placement::multi(&[0, 3]);
+        assert!(p.is_source(0) && p.is_source(3));
+        assert!(!p.is_source(1));
+        // Workers split between the two ends of the line.
+        assert_eq!(p.home_source(0, &rt), 0);
+        assert_eq!(p.home_source(1, &rt), 0);
+        assert_eq!(p.home_source(2, &rt), 3);
+        assert_eq!(p.home_source(3, &rt), 3);
+        let r1 = Role::of(1, &p, &rt);
+        assert!(!r1.is_source);
+        assert_eq!(r1.home_source, 0);
+        let r3 = Role::of(3, &p, &rt);
+        assert!(r3.is_source);
+        assert_eq!(r3.home_source, 3);
+    }
+
+    #[test]
+    fn equidistant_home_breaks_toward_lowest_source() {
+        let t = topo("line-4");
+        let rt = RoutingTable::build(&t);
+        // Sources at both neighbors of node 1: equal distance, home = 0.
+        let p = Placement::multi(&[2, 0]);
+        assert_eq!(p.home_source(1, &rt), 0);
+    }
+
+    #[test]
+    fn placement_validation() {
+        let churn_3 = vec![ChurnEvent { at_s: 1.0, worker: 3, join: false }];
+        assert!(Placement::multi(&[0, 3]).validate(4, &[]).is_ok());
+        assert!(Placement { sources: vec![] }.validate(4, &[]).is_err());
+        assert!(Placement::multi(&[0, 4]).validate(4, &[]).is_err(), "out of range");
+        assert!(Placement::multi(&[0, 0]).validate(4, &[]).is_err(), "duplicate");
+        assert!(
+            Placement { sources: vec![SourceSpec { node: 0, rate_share: 0.0 }] }
+                .validate(4, &[])
+                .is_err(),
+            "zero share"
+        );
+        assert!(Placement::multi(&[0, 3]).validate(4, &churn_3).is_err(), "source churns");
+        assert!(Placement::single(0).validate(4, &churn_3).is_ok());
+    }
+
+    #[test]
+    fn default_placement_is_the_paper_setup() {
+        let p = Placement::default();
+        assert_eq!(p.source_nodes(), vec![0]);
+        assert!((p.rate_share(0) - 1.0).abs() < 1e-12);
+    }
+}

@@ -64,7 +64,8 @@ impl Default for WorkerSpec {
 }
 
 /// A worker joining or leaving mid-run (paper §III: "workers join and
-/// leave the system anytime"). The source (worker 0) never churns.
+/// leave the system anytime"). Source nodes never churn — enforced by
+/// `routing::Placement::validate`, which knows where the sources are.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ChurnEvent {
     pub at_s: f64,
@@ -113,7 +114,9 @@ impl Topology {
         self.links[a][b].is_some()
     }
 
-    /// The paper's four testbed topologies (§V). Worker 0 is the source.
+    /// The paper's four testbed topologies (§V) plus three multi-hop
+    /// graphs that exercise the routing layer. Sources are declared by the
+    /// run's `Placement` (default: node 0, the paper's setup).
     ///
     /// * `"local"`          — 1 node, no links (the Local baselines)
     /// * `"2-node"`         — source + 1 worker
@@ -121,6 +124,10 @@ impl Topology {
     /// * `"3-node-circular"`— 3 in a ring (identical to mesh at n=3 as a
     ///   graph, but with *half-bandwidth* links modelling the shared ring)
     /// * `"5-node-mesh"`    — 5 fully connected
+    /// * `"line-4"`         — 0–1–2–3 chain (up to 3 hops end to end)
+    /// * `"star-5"`         — hub 0 with leaves 1–4 (leaf↔leaf is 2 hops)
+    /// * `"2-ring-bridge"`  — triangles {0,1,2} and {3,4,5} joined by a
+    ///   single half-bandwidth 2–3 bridge (up to 4 hops across)
     pub fn named(name: &str, link: LinkSpec) -> Option<Topology> {
         let mut t = match name {
             "local" => Topology::empty(name, 1),
@@ -158,6 +165,34 @@ impl Topology {
                 }
                 t
             }
+            "line-4" => {
+                let mut t = Topology::empty(name, 4);
+                for a in 0..3 {
+                    t.connect(a, a + 1, link);
+                }
+                t
+            }
+            "star-5" => {
+                let mut t = Topology::empty(name, 5);
+                for leaf in 1..5 {
+                    t.connect(0, leaf, link);
+                }
+                t
+            }
+            "2-ring-bridge" => {
+                // Two triangles joined by a single half-rate bridge: the
+                // bridge is the routing bottleneck every cross-ring result
+                // and re-home must traverse.
+                let bridge = LinkSpec { bandwidth_bps: link.bandwidth_bps * 0.5, ..link };
+                let mut t = Topology::empty(name, 6);
+                for ring in [[0, 1, 2], [3, 4, 5]] {
+                    t.connect(ring[0], ring[1], link);
+                    t.connect(ring[1], ring[2], link);
+                    t.connect(ring[2], ring[0], link);
+                }
+                t.connect(2, 3, bridge);
+                t
+            }
             _ => return None,
         };
         // Mild heterogeneity: non-source workers alternate 0.85x / 1.1x of
@@ -170,13 +205,24 @@ impl Topology {
     }
 
     pub fn all_names() -> &'static [&'static str] {
-        &["local", "2-node", "3-node-mesh", "3-node-circular", "5-node-mesh"]
+        &[
+            "local",
+            "2-node",
+            "3-node-mesh",
+            "3-node-circular",
+            "5-node-mesh",
+            "line-4",
+            "star-5",
+            "2-ring-bridge",
+        ]
     }
 
+    /// Attach a churn schedule. Which nodes may churn is a *placement*
+    /// question (sources cannot leave) and is validated by
+    /// `routing::Placement::validate`, where the source set lives.
     pub fn with_churn(mut self, churn: Vec<ChurnEvent>) -> Topology {
         for e in &churn {
-            assert!(e.worker != 0, "source cannot churn");
-            assert!(e.worker < self.n);
+            assert!(e.worker < self.n, "churn worker {} out of range", e.worker);
         }
         self.churn = churn;
         self
@@ -247,9 +293,33 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "source cannot churn")]
-    fn churn_guards_source() {
+    fn multi_hop_topologies() {
+        let wifi = LinkSpec::wifi();
+        let t = Topology::named("line-4", wifi).unwrap();
+        assert_eq!(t.n, 4);
+        assert_eq!(t.neighbors(0), vec![1]);
+        assert_eq!(t.neighbors(1), vec![0, 2]);
+        assert_eq!(t.neighbors(3), vec![2]);
+        assert!(!t.is_connected_pair(0, 3), "ends of the line are multi-hop");
+
+        let t = Topology::named("star-5", wifi).unwrap();
+        assert_eq!(t.neighbors(0), vec![1, 2, 3, 4]);
+        for leaf in 1..5 {
+            assert_eq!(t.neighbors(leaf), vec![0], "leaves see only the hub");
+        }
+
+        let t = Topology::named("2-ring-bridge", wifi).unwrap();
+        assert_eq!(t.n, 6);
+        assert_eq!(t.neighbors(2), vec![0, 1, 3]);
+        let bridge = t.link(2, 3).unwrap().bandwidth_bps;
+        assert!((bridge - wifi.bandwidth_bps * 0.5).abs() < 1e-9, "bridge is half-rate");
+        assert!(!t.is_connected_pair(0, 5));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn churn_bounds_checked() {
         let t = Topology::named("2-node", LinkSpec::wifi()).unwrap();
-        let _ = t.with_churn(vec![ChurnEvent { at_s: 1.0, worker: 0, join: false }]);
+        let _ = t.with_churn(vec![ChurnEvent { at_s: 1.0, worker: 7, join: false }]);
     }
 }

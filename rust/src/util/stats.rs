@@ -96,6 +96,16 @@ impl Samples {
         self.sorted = false;
     }
 
+    /// Fold another reservoir's samples into this one (merging per-thread
+    /// or per-source measurements into run totals).
+    pub fn absorb(&mut self, other: &Samples) {
+        if other.xs.is_empty() {
+            return;
+        }
+        self.xs.extend_from_slice(&other.xs);
+        self.sorted = false;
+    }
+
     pub fn len(&self) -> usize {
         self.xs.len()
     }

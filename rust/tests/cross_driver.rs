@@ -12,7 +12,7 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use mdi_exit::coordinator::{
-    AdmissionMode, Driver, ExperimentConfig, Mode, ModelMeta, Run, RunReport,
+    AdmissionMode, Driver, ExperimentConfig, Mode, ModelMeta, Placement, Run, RunReport,
 };
 use mdi_exit::dataset::{Dataset, ExitTable};
 use mdi_exit::runtime::sim_engine::SimEngine;
@@ -49,6 +49,64 @@ fn oracle() -> (ExitTable, Vec<u8>) {
 
 fn meta() -> ModelMeta {
     ModelMeta::synthetic(vec![0.002, 0.003], vec![12288, 8192])
+}
+
+/// 8 samples x 3 exits for the multi-hop legs: every fourth sample exits
+/// at 1, the rest ride to the final stage. A 2-stage model can never push
+/// work past one hop (only final-stage tasks are offloaded, and they spawn
+/// no successors), so multi-hop traffic needs a mid-pipeline stage.
+fn oracle3() -> (ExitTable, Vec<u8>) {
+    let n = 8;
+    let mut conf = Vec::new();
+    let mut pred = Vec::new();
+    let labels: Vec<u8> = (0..n as u8).map(|i| i % 10).collect();
+    for i in 0..n {
+        if i % 4 == 0 {
+            conf.extend([0.97f32, 0.99, 1.0]);
+        } else {
+            conf.extend([0.30f32, 0.50, 0.95]);
+        }
+        pred.extend([labels[i]; 3]);
+    }
+    (ExitTable::synthetic(n, 3, conf, pred), labels)
+}
+
+/// Stage-3-heavy costs: the final stage is the bottleneck, so continuing
+/// work piles up and spills multiple hops down the line.
+const COSTS3: [f64; 3] = [0.001, 0.001, 0.006];
+
+fn meta3() -> ModelMeta {
+    ModelMeta::synthetic(COSTS3.to_vec(), vec![12288, 8192, 4096])
+}
+
+fn run_des3(cfg: ExperimentConfig, labels: &[u8]) -> RunReport {
+    let (table, _) = oracle3();
+    let engine = SimEngine::from_table(table, false);
+    Run::builder()
+        .config(cfg)
+        .model(meta3())
+        .engine(&engine)
+        .labels(labels)
+        .driver(Driver::Des)
+        .execute()
+        .expect("DES run")
+}
+
+fn run_rt3(cfg: ExperimentConfig, labels: &[u8]) -> RunReport {
+    let ds = Dataset::synthetic(labels.len(), 2, 2, 3, labels.to_vec());
+    let factory = move |_w: usize| -> Result<Box<dyn InferenceEngine>> {
+        let (table, _) = oracle3();
+        let eng = SimEngine::from_table(table, false).with_costs(COSTS3.to_vec(), 1.0);
+        Ok(Box::new(eng) as Box<dyn InferenceEngine>)
+    };
+    Run::builder()
+        .config(cfg)
+        .model(meta3())
+        .engine_factory(factory)
+        .dataset(&ds)
+        .driver(Driver::Realtime)
+        .execute()
+        .expect("realtime run")
 }
 
 fn cfg(topology: &str, rate_hz: f64, seconds: f64) -> ExperimentConfig {
@@ -213,6 +271,90 @@ fn realtime_ddi_round_robins_whole_images() {
     );
     // The oracle's final exit predicts the true label.
     assert!((r.accuracy() - 1.0).abs() < 1e-9, "accuracy {}", r.accuracy());
+}
+
+#[test]
+fn results_cross_two_hops_on_both_drivers() {
+    let _g = serialized();
+    let (_, labels) = oracle3();
+    // Single source at one end of a 4-node line, overloaded far past the
+    // source's own capacity on a stage-3-heavy model: mid-line workers
+    // push continuing stage-3 work further out, so exits happen two-plus
+    // hops from the source and their results must relay back through
+    // worker 1. This is the regression test for the old one-hop delivery
+    // assumption (and its DES-only two-hop fallback).
+    let des = run_des3(cfg("line-4", 900.0, 6.0), &labels);
+    let rt = run_rt3(cfg("line-4", 900.0, 3.0), &labels);
+
+    for (name, r) in [("DES", &des), ("realtime", &rt)] {
+        let far_exits: u64 = r.per_worker[2..].iter().map(|w| w.exits).sum();
+        assert!(far_exits > 0, "{name}: no exits two-plus hops out");
+        assert!(
+            r.per_worker[1].relayed > 0,
+            "{name}: far results must relay through worker 1 (relayed = {:?})",
+            r.per_worker.iter().map(|w| w.relayed).collect::<Vec<_>>()
+        );
+        assert!(r.completed > 0, "{name}: nothing completed");
+        // Multi-hop delivery loses nothing: everything the exit counters
+        // saw is either home or still in flight at the horizon (small
+        // slack for exits straddling the warmup boundary).
+        let exits: u64 = r.per_worker.iter().map(|w| w.exits).sum();
+        assert!(
+            exits + 50 >= r.completed,
+            "{name}: completed {} far exceeds recorded exits {exits}",
+            r.completed
+        );
+    }
+}
+
+#[test]
+fn des_and_realtime_agree_per_source_on_two_source_line() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    // Two sources at the ends of the line, each under-loaded: both drivers
+    // must deliver every source its own results with the oracle's
+    // deterministic 50/50 split, per source.
+    let two_src = |mut c: ExperimentConfig| {
+        c.placement = Placement::multi(&[0, 3]);
+        c
+    };
+    let des = run_des(two_src(cfg("line-4", 80.0, 5.0)), &labels);
+    let rt = run_rt(two_src(cfg("line-4", 80.0, 2.5)), &labels);
+
+    for (name, r) in [("DES", &des), ("realtime", &rt)] {
+        assert_eq!(r.per_source.len(), 2, "{name}");
+        let by_source: u64 = r.per_source.iter().map(|s| s.completed).sum();
+        assert_eq!(by_source, r.completed, "{name}: per-source counters conserve");
+        for s in &r.per_source {
+            assert!(s.completed > 50, "{name}: source {} starved: {s:?}", s.node);
+            assert!(
+                s.admitted as f64 - s.completed as f64 <= 0.2 * s.admitted as f64,
+                "{name}: source {} admitted {} but completed {}",
+                s.node,
+                s.admitted,
+                s.completed
+            );
+            let f = s.exit_fractions();
+            assert!((f[0] - 0.5).abs() < 0.10, "{name}: source {} split {f:?}", s.node);
+        }
+    }
+    // The two drivers agree per source, not just in aggregate.
+    for i in 0..2 {
+        let (fd, fr) = (des.per_source[i].exit_fractions(), rt.per_source[i].exit_fractions());
+        assert!(
+            (fd[0] - fr[0]).abs() < 0.10,
+            "source {i} exit split diverged: DES {fd:?} vs realtime {fr:?}"
+        );
+    }
+    // Completed counts agree once normalized by each run's window length.
+    for i in 0..2 {
+        let d_rate = des.per_source[i].completed as f64 / des.duration_s;
+        let r_rate = rt.per_source[i].completed as f64 / rt.duration_s;
+        assert!(
+            (d_rate - r_rate).abs() < 0.25 * d_rate.max(1.0),
+            "source {i} completion rate diverged: DES {d_rate:.1} Hz vs realtime {r_rate:.1} Hz"
+        );
+    }
 }
 
 #[test]
