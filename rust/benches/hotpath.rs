@@ -5,7 +5,7 @@
 //! * DES event throughput on a saturated 5-node mesh         (Mevents/s)
 //! * XLA stage execution, when artifacts are present         (per-stage ms)
 
-use mdi_exit::coordinator::policy::{self, NeighborView, OffloadPolicy};
+use mdi_exit::policy::{self, NeighborView, OffloadRule};
 use mdi_exit::coordinator::queues::TaskQueue;
 use mdi_exit::coordinator::task::Task;
 use mdi_exit::coordinator::{AdmissionMode, Driver, ExperimentConfig, ModelMeta, Run};
@@ -38,7 +38,7 @@ fn bench_offload_scan(suite: &mut BenchSuite) {
         .collect();
     suite.bench_micro("alg2 scan over 4 neighbors", 10_000, || {
         for v in &views {
-            let d = policy::offload_decide(OffloadPolicy::Alg2, 6, 3, 0.005, v, &mut rng);
+            let d = policy::offload_decide(OffloadRule::Alg2, 6, 3, 0.005, v, &mut rng);
             std::hint::black_box(d);
         }
     });

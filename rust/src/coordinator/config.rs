@@ -2,7 +2,7 @@
 
 use anyhow::{bail, Result};
 
-use super::policy::{AdaptConfig, OffloadPolicy};
+use crate::policy::{AdaptConfig, PolicyConfig};
 use crate::routing::{Placement, SourceSpec};
 use crate::sched::{DisciplineKind, SchedConfig};
 use crate::simnet::{ChurnEvent, LinkSpec};
@@ -49,7 +49,11 @@ pub struct ExperimentConfig {
     pub adapt: AdaptConfig,
     /// Output-queue threshold T_O of Alg. 1 (paper: 50).
     pub t_o: usize,
-    pub offload_policy: OffloadPolicy,
+    /// Which exit/offload/adaptation policies the workers run
+    /// (`crate::policy`). The default — Alg. 1 + Alg. 2 + AIMD — is the
+    /// paper, bit for bit. TOML `[policy]`, CLI
+    /// `--exit-policy`/`--offload-policy`.
+    pub policy: PolicyConfig,
     pub link: LinkSpec,
     /// Virtual (DES) or wallclock (realtime) seconds to run *after* warmup.
     pub duration_s: f64,
@@ -92,7 +96,7 @@ impl ExperimentConfig {
             admission,
             adapt: AdaptConfig::default(),
             t_o: 50,
-            offload_policy: OffloadPolicy::Alg2,
+            policy: PolicyConfig::default(),
             link: LinkSpec::wifi(),
             duration_s: 60.0,
             warmup_s: 10.0,
@@ -195,13 +199,7 @@ impl ExperimentConfig {
             sleep_s: toml.f64_or("adapt.sleep_s", 0.5),
         };
         cfg.t_o = toml.usize_or("t_o", 50);
-        cfg.offload_policy = match toml.str_or("offload_policy", "alg2") {
-            "alg2" => OffloadPolicy::Alg2,
-            "deterministic" => OffloadPolicy::Deterministic,
-            "queue-only" => OffloadPolicy::QueueOnly,
-            "round-robin" => OffloadPolicy::RoundRobin,
-            other => bail!("unknown offload_policy {other:?}"),
-        };
+        cfg.policy = Self::policy_from_toml(toml)?;
         cfg.link = LinkSpec {
             bandwidth_bps: toml.f64_or("net.bandwidth_mbps", 48.0) * 1e6 / 8.0,
             base_latency_s: toml.f64_or("net.base_latency_ms", 3.0) / 1e3,
@@ -217,6 +215,47 @@ impl ExperimentConfig {
         cfg.seed = toml.i64_or("seed", 7) as u64;
         cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// `[policy]` section (plus the legacy top-level `offload_policy` key,
+    /// which older configs used for the Alg. 2 ablation family):
+    ///
+    /// ```toml
+    /// [policy]
+    /// exit = "alg1"              # alg1 | local-only
+    /// offload = "deadline-aware" # alg2 | deterministic | queue-only |
+    ///                            # round-robin | deadline-aware | multi-hop
+    /// adapt = "aimd"
+    /// ```
+    fn policy_from_toml(toml: &Toml) -> Result<PolicyConfig> {
+        let mut policy = PolicyConfig::default();
+        // Legacy spelling first, so `[policy] offload` wins when both are
+        // present.
+        if let Some(v) = toml.get("offload_policy") {
+            match v.as_str() {
+                Some(name) => policy.offload = PolicyConfig::parse_offload(name)?,
+                None => bail!("offload_policy must be a string"),
+            }
+        }
+        if let Some(v) = toml.get("policy.exit") {
+            match v.as_str() {
+                Some(name) => policy.exit = PolicyConfig::parse_exit(name)?,
+                None => bail!("policy.exit must be a string"),
+            }
+        }
+        if let Some(v) = toml.get("policy.offload") {
+            match v.as_str() {
+                Some(name) => policy.offload = PolicyConfig::parse_offload(name)?,
+                None => bail!("policy.offload must be a string"),
+            }
+        }
+        if let Some(v) = toml.get("policy.adapt") {
+            match v.as_str() {
+                Some(name) => policy.adapt = PolicyConfig::parse_adapt(name)?,
+                None => bail!("policy.adapt must be a string"),
+            }
+        }
+        Ok(policy)
     }
 
     /// `[placement]` section: source nodes and optional per-source rate
@@ -281,6 +320,7 @@ impl ExperimentConfig {
             "fifo" => DisciplineKind::Fifo,
             "strict-priority" | "priority" => DisciplineKind::StrictPriority,
             "edf" => DisciplineKind::Edf { drop_late: toml.bool_or("sched.drop_late", false) },
+            "drr" | "weighted-fair" => DisciplineKind::WeightedFair,
             other => bail!("unknown sched.discipline {other:?}"),
         };
         let classes = toml.i64_or("sched.num_classes", 1);
@@ -311,6 +351,29 @@ impl ExperimentConfig {
             Some(v) => match v.as_f64() {
                 Some(d) => sched.class_deadline_s = vec![d; sched.num_classes as usize],
                 None => bail!("sched.class_deadline_s must be a number or array"),
+            },
+        }
+        // DRR quantum: a scalar broadcasts; an array gives one per class.
+        match toml.get("sched.class_quantum") {
+            None => {}
+            Some(Value::Arr(vs)) => {
+                let qs: Option<Vec<f64>> = vs.iter().map(|v| v.as_f64()).collect();
+                let qs = match qs {
+                    Some(qs) => qs,
+                    None => bail!("sched.class_quantum entries must be numbers"),
+                };
+                if qs.len() != sched.num_classes as usize {
+                    bail!(
+                        "sched.class_quantum has {} entries for {} classes",
+                        qs.len(),
+                        sched.num_classes
+                    );
+                }
+                sched.class_quantum = qs;
+            }
+            Some(v) => match v.as_f64() {
+                Some(q) => sched.class_quantum = vec![q; sched.num_classes as usize],
+                None => bail!("sched.class_quantum must be a number or array"),
             },
         }
         sched.batch.max_batch = toml.usize_or("sched.max_batch", 1);
@@ -432,6 +495,67 @@ batch_marginal = 0.1
         let c = ExperimentConfig::from_toml(&toml).unwrap();
         assert_eq!(c.sched.discipline, DisciplineKind::Edf { drop_late: true });
         assert_eq!(c.sched.class_deadline_s, vec![0.25, 0.25]);
+    }
+
+    #[test]
+    fn from_toml_parses_policy_section_and_legacy_key() {
+        use crate::policy::{ExitKind, OffloadKind};
+        // Defaults: the paper's policies.
+        let c = ExperimentConfig::from_toml(&Toml::parse("model = \"tiny\"\n").unwrap()).unwrap();
+        assert_eq!(c.policy, PolicyConfig::default());
+        // Legacy top-level key still works.
+        let c = ExperimentConfig::from_toml(
+            &Toml::parse("offload_policy = \"queue-only\"\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.policy.offload, OffloadKind::QueueOnly);
+        // New section, all three seams.
+        let c = ExperimentConfig::from_toml(
+            &Toml::parse(
+                "[policy]\nexit = \"local-only\"\noffload = \"deadline-aware\"\nadapt = \"aimd\"\n",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.policy.exit, ExitKind::LocalOnly);
+        assert_eq!(c.policy.offload, OffloadKind::DeadlineAware);
+        // The section wins over the legacy key.
+        let c = ExperimentConfig::from_toml(
+            &Toml::parse("offload_policy = \"queue-only\"\n[policy]\noffload = \"multi-hop\"\n")
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(c.policy.offload, OffloadKind::MultiHop);
+        // Unknown names are rejected.
+        assert!(ExperimentConfig::from_toml(
+            &Toml::parse("[policy]\noffload = \"warp-drive\"\n").unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            &Toml::parse("offload_policy = \"warp-drive\"\n").unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn from_toml_parses_drr_quanta() {
+        let toml = Toml::parse(
+            "[sched]\ndiscipline = \"drr\"\nnum_classes = 2\nclass_quantum = [2.0, 1.0]\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.sched.discipline, DisciplineKind::WeightedFair);
+        assert_eq!(c.sched.class_quantum, vec![2.0, 1.0]);
+        // Scalar broadcasts; bad shapes rejected.
+        let toml = Toml::parse(
+            "[sched]\ndiscipline = \"weighted-fair\"\nnum_classes = 3\nclass_quantum = 0.5\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.sched.class_quantum, vec![0.5, 0.5, 0.5]);
+        let toml =
+            Toml::parse("[sched]\nnum_classes = 2\nclass_quantum = [1.0, 2.0, 3.0]\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
     }
 
     #[test]

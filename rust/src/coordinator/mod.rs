@@ -1,8 +1,10 @@
 //! The paper's contribution: the MDI-Exit coordinator.
 //!
-//! * [`policy`] — Algorithms 1–4 as pure decision logic
+//! * [`crate::policy`] (re-exported here as `policy`) — Algorithms 1–4 as
+//!   pure decision logic *and* as the pluggable `ExitPolicy` /
+//!   `OffloadPolicy` / `AdaptPolicy` trait surface the core consumes
 //! * [`worker`] — the clock-agnostic [`WorkerCore`]: one events-in /
-//!   actions-out state machine (queues, estimators, controllers, stats)
+//!   actions-out state machine (queues, estimators, policies, stats)
 //!   shared verbatim by both drivers
 //! * [`task`], [`queues`] — τ_k(d) records and the I_n/O_n queue pair
 //! * [`config`], [`report`] — experiment descriptions and run reports
@@ -24,7 +26,6 @@
 //! core on both drivers.
 
 pub mod config;
-pub mod policy;
 pub mod queues;
 pub mod report;
 mod rt;
@@ -33,8 +34,15 @@ pub mod sim;
 pub mod task;
 pub mod worker;
 
+/// The decision-policy subsystem (promoted out of the coordinator in the
+/// policy-API redesign; re-exported so `coordinator::policy::...` paths
+/// keep reading naturally).
+pub use crate::policy;
+
 pub use config::{AdmissionMode, ExperimentConfig, Mode};
-pub use policy::{AdaptConfig, OffloadPolicy};
+pub use crate::policy::{
+    AdaptConfig, AdaptKind, ExitKind, NeighborSummary, OffloadKind, PolicyConfig,
+};
 pub use report::{ClassStats, RunReport, SourceStats, WorkerStats};
 pub use run::{Driver, Run, RunBuilder};
 pub use sim::{SampleStore, Simulation};

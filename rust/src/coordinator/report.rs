@@ -21,6 +21,16 @@ pub struct WorkerStats {
     pub dropped: u64,
     /// The same drops broken down by traffic class.
     pub dropped_per_class: Vec<u64>,
+    /// Where this worker's offloads went: one slot per topology node (the
+    /// per-policy offload-target histogram — how Alg. 2 vs. the
+    /// deadline-aware / multi-hop policies actually spread work).
+    pub offload_targets: Vec<u64>,
+    /// Gossip bytes this worker put on the wire, charged by the *actual*
+    /// encoded summary size (policies that annotate extra fields pay here).
+    pub gossip_bytes: u64,
+    /// Tasks the input discipline served per class (weighted-fair
+    /// disciplines report their realized split; empty otherwise).
+    pub served_per_class: Vec<u64>,
 }
 
 /// Per-traffic-class accounting (populated when the run configures more
@@ -30,6 +40,9 @@ pub struct ClassStats {
     /// Results of this class returned to the source during the window.
     pub completed: u64,
     pub correct: u64,
+    /// Results of this class delivered before their stamped deadline
+    /// (deadline-aware policy/bench surface).
+    pub on_time: u64,
     /// Results per exit point (1-based; index 0 = exit 1).
     pub exit_histogram: Vec<u64>,
     pub latency: Samples,
@@ -42,6 +55,7 @@ impl ClassStats {
         ClassStats {
             completed: 0,
             correct: 0,
+            on_time: 0,
             exit_histogram: vec![0; num_exits],
             latency: Samples::new(),
             dropped: 0,
@@ -49,15 +63,26 @@ impl ClassStats {
     }
 
     /// Fold one completed result of this class into the counters.
-    pub fn record(&mut self, exit_point: usize, correct: bool, latency_s: f64) {
+    pub fn record(&mut self, exit_point: usize, correct: bool, on_time: bool, latency_s: f64) {
         self.completed += 1;
         if correct {
             self.correct += 1;
+        }
+        if on_time {
+            self.on_time += 1;
         }
         if let Some(slot) = self.exit_histogram.get_mut(exit_point - 1) {
             *slot += 1;
         }
         self.latency.push(latency_s);
+    }
+
+    /// Fraction of this class's completions that met their deadline.
+    pub fn on_time_rate(&self) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.on_time as f64 / self.completed as f64
     }
 
     /// Fraction of this class's results that exited at each point.
@@ -74,6 +99,7 @@ impl ClassStats {
     pub fn absorb(&mut self, other: &ClassStats) {
         self.completed += other.completed;
         self.correct += other.correct;
+        self.on_time += other.on_time;
         for (slot, &c) in self.exit_histogram.iter_mut().zip(&other.exit_histogram) {
             *slot += c;
         }
@@ -214,12 +240,12 @@ impl RunReport {
     /// Fold one completed result into its class's counters (drivers call
     /// this next to their total accounting).
     pub fn record_class(&mut self, class: u8, exit_point: usize, correct: bool,
-                        latency_s: f64) {
+                        on_time: bool, latency_s: f64) {
         // Out-of-range classes fold into the last bucket, mirroring how
         // `StrictPriority` clamps lanes.
         let i = (class as usize).min(self.per_class.len().saturating_sub(1));
         if let Some(cs) = self.per_class.get_mut(i) {
-            cs.record(exit_point, correct, latency_s);
+            cs.record(exit_point, correct, on_time, latency_s);
         }
     }
 
@@ -295,6 +321,12 @@ impl RunReport {
         self.exit_histogram.iter().map(|&c| c as f64 / total as f64).collect()
     }
 
+    /// Total gossip bytes the run put on the wire (sum of the per-worker
+    /// encoded-size charges).
+    pub fn gossip_bytes(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.gossip_bytes).sum()
+    }
+
     pub fn to_json(&mut self) -> Json {
         let workers: Vec<Json> = self
             .per_worker
@@ -310,6 +342,11 @@ impl RunReport {
                     ("peak_output", w.peak_output.into()),
                     ("busy_s", w.busy_s.into()),
                     ("dropped", (w.dropped as i64).into()),
+                    ("offload_targets",
+                     Json::Arr(w.offload_targets.iter().map(|&n| (n as i64).into()).collect())),
+                    ("gossip_bytes", (w.gossip_bytes as i64).into()),
+                    ("served_per_class",
+                     Json::Arr(w.served_per_class.iter().map(|&n| (n as i64).into()).collect())),
                 ])
             })
             .collect();
@@ -323,9 +360,12 @@ impl RunReport {
                 } else {
                     0.0
                 };
+                let on_time_rate = c.on_time_rate();
                 obj(vec![
                     ("completed", (c.completed as i64).into()),
                     ("accuracy", acc.into()),
+                    ("on_time", (c.on_time as i64).into()),
+                    ("on_time_rate", on_time_rate.into()),
                     ("latency_p50_s", p50.into()),
                     ("latency_p95_s", p95.into()),
                     ("exit_histogram",
@@ -382,6 +422,7 @@ impl RunReport {
             ("exit_histogram",
              Json::Arr(self.exit_histogram.iter().map(|&c| (c as i64).into()).collect())),
             ("bytes_on_wire", (self.bytes_on_wire as i64).into()),
+            ("gossip_bytes", (self.gossip_bytes() as i64).into()),
             ("task_transfers", (self.task_transfers as i64).into()),
             ("rehomed", (self.rehomed as i64).into()),
             ("dropped", (self.dropped as i64).into()),
@@ -443,13 +484,15 @@ mod tests {
     #[test]
     fn per_class_counters_accumulate() {
         let mut r = RunReport::new("m", "t", "lbl", 1, 2, 2, &[0]);
-        r.record_class(0, 1, true, 0.010);
-        r.record_class(0, 2, false, 0.030);
-        r.record_class(1, 2, true, 0.200);
+        r.record_class(0, 1, true, true, 0.010);
+        r.record_class(0, 2, false, false, 0.030);
+        r.record_class(1, 2, true, true, 0.200);
         // out-of-range classes clamp into the last bucket
-        r.record_class(7, 1, true, 0.100);
+        r.record_class(7, 1, true, true, 0.100);
         assert_eq!(r.per_class[0].completed, 2);
         assert_eq!(r.per_class[0].correct, 1);
+        assert_eq!(r.per_class[0].on_time, 1);
+        assert!((r.per_class[0].on_time_rate() - 0.5).abs() < 1e-12);
         assert_eq!(r.per_class[0].exit_histogram, vec![1, 1]);
         assert_eq!(r.per_class[1].completed, 2);
         let f = r.per_class[0].exit_fractions();
@@ -489,13 +532,14 @@ mod tests {
     #[test]
     fn class_stats_absorb_merges_tallies() {
         let mut a = ClassStats::new(2);
-        a.record(1, true, 0.010);
+        a.record(1, true, true, 0.010);
         let mut b = ClassStats::new(2);
-        b.record(2, false, 0.030);
-        b.record(1, true, 0.020);
+        b.record(2, false, false, 0.030);
+        b.record(1, true, true, 0.020);
         a.absorb(&b);
         assert_eq!(a.completed, 3);
         assert_eq!(a.correct, 2);
+        assert_eq!(a.on_time, 2);
         assert_eq!(a.exit_histogram, vec![2, 1]);
         assert_eq!(a.latency.len(), 3);
     }

@@ -57,7 +57,10 @@ enum NetMsg {
     /// left; intermediate hops relay it (`WorkerCore::on_rehome`).
     Rehome(Task),
     Result(InferenceResult),
-    State { input_len: usize, gamma_s: f64, t_e: f32 },
+    /// Gossiped neighbor summary. Framed on the link at its *actual*
+    /// encoded size (the `bytes` the core attached), so policy-annotated
+    /// summaries pay real transfer delay for their extra fields.
+    State(crate::policy::NeighborSummary),
 }
 
 /// Run the system with real threads + wallclock. `duration_s` of the config
@@ -374,9 +377,7 @@ impl<'a> RtWorker<'a> {
                         }
                         Payload::Result(r) => NetMsg::Result(r),
                         Payload::Rehome(task) => NetMsg::Rehome(task),
-                        Payload::State { input_len, gamma_s, t_e } => {
-                            NetMsg::State { input_len, gamma_s, t_e }
-                        }
+                        Payload::State(summary) => NetMsg::State(summary),
                     };
                     // An Err means the fabric already shut down (end of
                     // run): drop the message, as the seed driver did.
@@ -404,9 +405,7 @@ impl<'a> RtWorker<'a> {
                 self.core.on_rehome(now, task)
             }
             NetMsg::Result(r) => self.core.on_result(now, r),
-            NetMsg::State { input_len, gamma_s, t_e } => {
-                self.core.on_gossip(now, from, input_len, gamma_s, t_e)
-            }
+            NetMsg::State(summary) => self.core.on_gossip(now, from, summary),
         };
         self.dispatch(acts);
     }
@@ -424,12 +423,13 @@ impl<'a> RtWorker<'a> {
         }
         self.tally.exit_histogram[r.exit_point - 1] += 1;
         let latency = now - r.admitted_at;
+        let on_time = now <= r.deadline;
         self.tally.latency.push(latency);
         // Same clamp rule as `RunReport::record_class`: out-of-range
         // classes fold into the last bucket.
         let i = (r.class as usize).min(self.tally.per_class.len().saturating_sub(1));
         if let Some(cs) = self.tally.per_class.get_mut(i) {
-            cs.record(r.exit_point, correct, latency);
+            cs.record(r.exit_point, correct, on_time, latency);
         }
     }
 

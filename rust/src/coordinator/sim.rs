@@ -9,10 +9,13 @@
 //!
 //! * `StartCompute` → a `ComputeDone` event after the (batch-amortized)
 //!   estimated cost; the whole same-stage batch completes together;
-//! * `Send` → a `Deliver` event after the sampled link delay (gossip
-//!   `State` payloads are delivered out-of-band, as the seed driver did);
-//!   result and re-home payloads hop the topology link by link, each leg
-//!   charged as a real transfer, until they reach their admitting source;
+//! * `Send` → a `Deliver` event after the sampled link delay — including
+//!   gossip `State` payloads, charged by their actual encoded summary
+//!   size (the seed delivered gossip out-of-band for free, hiding the
+//!   cost of richer summaries and making DES views fresher than the
+//!   realtime driver's); result and re-home payloads hop the topology
+//!   link by link, each leg charged as a real transfer, until they reach
+//!   their admitting source;
 //! * `RecordResult` → report bookkeeping (per traffic class and per
 //!   source where the run configures more than one).
 //!
@@ -74,6 +77,9 @@ enum Msg {
     /// A churn-displaced task in transit back to its admitting source
     /// (forwarded hop by hop like a result).
     Rehome(Task),
+    /// A gossiped neighbor summary in transit (charged on the link by its
+    /// actual encoded size, like every other transfer).
+    State(crate::policy::NeighborSummary),
 }
 
 #[derive(Debug)]
@@ -330,13 +336,24 @@ impl<'a> Simulation<'a> {
                             Event::Deliver { to, from: n, msg: Msg::Rehome(task) },
                         );
                     }
-                    Payload::State { input_len, gamma_s, t_e } => {
-                        // Gossip is modelled out-of-band in virtual time
-                        // (the seed driver refreshed views instantly too);
-                        // only the realtime driver pays wire bytes for it.
-                        let acts =
-                            self.workers[to].on_gossip(now, n, input_len, gamma_s, t_e);
-                        q.extend(acts.into_iter().map(|a| (to, a)));
+                    Payload::State(summary) => {
+                        // Gossip rides the simulated medium like any other
+                        // message, charged by its *actual encoded size*
+                        // (`bytes` is already `summary.encoded_bytes()`):
+                        // a policy that annotates richer summaries pays
+                        // real virtual transfer time and contention for
+                        // them. (The seed delivered gossip out-of-band for
+                        // free — which also made DES views fresher than
+                        // the realtime driver's; this matches the two.)
+                        let delay = self.link_delay(n, to, bytes)?;
+                        if self.in_window() {
+                            self.report.bytes_on_wire += bytes as u64;
+                        }
+                        self.active_transfers += 1;
+                        self.push(
+                            now + delay,
+                            Event::Deliver { to, from: n, msg: Msg::State(summary) },
+                        );
                     }
                 },
                 Action::RecordResult { result } => self.record_result(result),
@@ -390,7 +407,7 @@ impl<'a> Simulation<'a> {
         self.dispatch(worker, acts)
     }
 
-    fn on_deliver(&mut self, to: usize, _from: usize, msg: Msg) -> Result<()> {
+    fn on_deliver(&mut self, to: usize, from: usize, msg: Msg) -> Result<()> {
         // The transfer occupying the shared medium ends on delivery.
         self.active_transfers = self.active_transfers.saturating_sub(1);
         let now = self.now();
@@ -410,6 +427,10 @@ impl<'a> Simulation<'a> {
                     self.report.rehomed += 1;
                 }
                 let acts = self.workers[to].on_rehome(now, task);
+                self.dispatch(to, acts)
+            }
+            Msg::State(summary) => {
+                let acts = self.workers[to].on_gossip(now, from, summary);
                 self.dispatch(to, acts)
             }
         }
@@ -464,8 +485,9 @@ impl<'a> Simulation<'a> {
         }
         self.report.exit_histogram[r.exit_point - 1] += 1;
         let latency = self.now() - r.admitted_at;
+        let on_time = self.now() <= r.deadline;
         self.report.latency.push(latency);
-        self.report.record_class(r.class, r.exit_point, correct, latency);
+        self.report.record_class(r.class, r.exit_point, correct, on_time, latency);
         self.report.record_source(r.source, r.exit_point, correct, latency);
     }
 

@@ -80,6 +80,10 @@ pub struct InferenceResult {
     pub confidence: f32,
     /// Time the sample was admitted (for latency accounting).
     pub admitted_at: f64,
+    /// Absolute completion deadline inherited from the task (admission
+    /// time + per-class budget). Sources score on-time completion against
+    /// it at delivery.
+    pub deadline: f64,
     /// Worker that produced the exit.
     pub exited_on: usize,
     /// Source node that admitted the sample — the result's destination.

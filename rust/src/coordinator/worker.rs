@@ -1,8 +1,13 @@
 //! The clock-agnostic worker core — one state machine for both drivers.
 //!
 //! [`WorkerCore`] owns everything a worker *decides with*: the I_n/O_n
-//! queue pair, the Γ_n/D_nm EWMA estimators, gossiped [`NeighborView`]s,
-//! the Alg. 3/4 controllers (source only), and the per-worker stats. It is
+//! queue pair, the Γ_n/D_nm EWMA estimators, gossiped [`NeighborSummary`]s,
+//! the Alg. 3/4 adaptation policy (source only), and the per-worker stats.
+//! The decisions themselves are delegated to three boxed, config-selected
+//! [`crate::policy`] objects — [`ExitPolicy`] (Alg. 1), [`OffloadPolicy`]
+//! (Alg. 2 and its deadline-aware / multi-hop generalizations), and
+//! [`AdaptPolicy`] (Algs 3/4) — so policy variants land in `crate::policy`
+//! without touching this core. It is
 //! driven by explicit events (`on_task`, `on_result`, `on_gossip`,
 //! `on_compute_done`, `on_adapt_tick`, `on_churn`, `poll_admission`) and
 //! answers with [`Action`]s — *what* should happen, never *how*:
@@ -37,11 +42,14 @@
 use std::time::Instant;
 
 use super::config::{AdmissionMode, ExperimentConfig, Mode};
-use super::policy::{self, ExitDecision, NeighborView, RateController, ThresholdController};
 use super::queues::WorkerQueues;
 use super::report::WorkerStats;
 use super::task::{InferenceResult, Task};
 use crate::artifact::ModelInfo;
+use crate::policy::{
+    AdaptPolicy, ExitCtx, ExitDecision, ExitPolicy, LocalState, NeighborSummary, OffloadCtx,
+    OffloadPolicy,
+};
 use crate::routing::{Role, RoutingTable};
 use crate::runtime::{InferenceEngine, StageOutput};
 use crate::sched::QueueDiscipline;
@@ -52,8 +60,6 @@ use crate::util::stats::Ewma;
 
 /// Bytes of an exit-result message (classifier output + header).
 pub const RESULT_BYTES: usize = 64;
-/// Bytes of a gossiped neighbor-state message.
-pub const STATE_BYTES: usize = 32;
 
 // ---------------------------------------------------------------------------
 // Clock abstraction
@@ -167,10 +173,13 @@ pub enum Payload {
     /// until it reaches `task.source`, which re-queues it.
     Rehome(Task),
     /// Gossiped neighbor state (paper §IV.A: "periodically learns ... its
-    /// input queue size I_m, per task computing delay Γ_m"). Carries the
-    /// source's adapted T_e so Alg. 4 line 9 ("applies to every exit
-    /// point") holds across workers in both drivers.
-    State { input_len: usize, gamma_s: f64, t_e: f32 },
+    /// input queue size I_m, per task computing delay Γ_m"), as an
+    /// extensible [`NeighborSummary`]: the base fields carry the paper's
+    /// state plus the source's adapted T_e (Alg. 4 line 9), and the run's
+    /// offload policy may annotate extra fields (per-class occupancy,
+    /// deadline slack, transitive region load). The wire charge is the
+    /// summary's *actual* encoded size.
+    State(NeighborSummary),
 }
 
 /// What a driver must make happen in its medium (virtual or real).
@@ -236,15 +245,17 @@ pub struct WorkerCore {
     /// Per-task compute-delay estimate Γ_n (EWMA of measured durations).
     gamma: Ewma,
     /// What this worker believes about each peer (gossip + optimism).
-    views: Vec<Option<NeighborView>>,
+    views: Vec<Option<NeighborSummary>>,
     /// Measured transfer-delay estimate D_nm per peer.
     d_est: Vec<Ewma>,
     rng: Pcg64,
     stats: WorkerStats,
 
-    // Source-only state (inert on other workers).
-    rate_ctl: Option<RateController>,
-    thr_ctl: Option<ThresholdController>,
+    // Config-selected decision policies (`crate::policy`).
+    exit_policy: Box<dyn ExitPolicy>,
+    offload: Box<dyn OffloadPolicy>,
+    /// Source-only Alg. 3/4 seam (inert `None` on other workers).
+    adapt: Option<Box<dyn AdaptPolicy>>,
     /// Current early-exit threshold T_e (sources adapt it; others adopt
     /// their home source's value as it propagates hop by hop through
     /// gossip — Alg. 4 line 9, generalized to multi-hop graphs).
@@ -260,9 +271,9 @@ pub struct WorkerCore {
     failed_per_class: Vec<u64>,
 
     measure_from: f64,
-    /// Scratch buffer for the shuffled neighbor scan (avoids a Vec
-    /// allocation per offload attempt).
-    scan_buf: Vec<usize>,
+    /// Scratch buffer for the resolved per-neighbor summaries handed to
+    /// the offload policy (avoids a Vec allocation per offload attempt).
+    cand_buf: Vec<(usize, NeighborSummary)>,
 }
 
 impl WorkerCore {
@@ -288,19 +299,18 @@ impl WorkerCore {
         let mut gamma = Ewma::new(0.2);
         gamma.push(default_gamma / speed);
 
-        let (rate_ctl, thr_ctl, t_e) = match cfg.admission {
-            AdmissionMode::AdaptiveRate { threshold, initial_mu_s } => {
-                let rc =
-                    role.is_source.then(|| RateController::new(cfg.adapt, initial_mu_s));
-                (rc, None, threshold)
-            }
-            AdmissionMode::AdaptiveThreshold { initial_t_e, t_e_min, .. } => {
-                let tc = role.is_source.then(|| {
-                    ThresholdController::new(cfg.adapt, initial_t_e as f64, t_e_min as f64)
-                });
-                (None, tc, initial_t_e)
-            }
-            AdmissionMode::Fixed { threshold, .. } => (None, None, threshold),
+        let next_hop = routing.row(id);
+        let exit_policy = cfg.policy.build_exit();
+        let offload = cfg.policy.build_offload(id, n);
+        let adapt = if role.is_source {
+            cfg.policy.build_adapt(&cfg.admission, cfg.adapt)
+        } else {
+            None
+        };
+        let t_e = match cfg.admission {
+            AdmissionMode::AdaptiveRate { threshold, .. } => threshold,
+            AdmissionMode::AdaptiveThreshold { initial_t_e, .. } => initial_t_e,
+            AdmissionMode::Fixed { threshold, .. } => threshold,
         };
 
         WorkerCore {
@@ -308,7 +318,7 @@ impl WorkerCore {
             cfg: cfg.clone(),
             meta,
             role,
-            next_hop: routing.row(id),
+            next_hop,
             rate_share: cfg.placement.rate_share(id),
             speed,
             neighbors,
@@ -322,9 +332,10 @@ impl WorkerCore {
             views: vec![None; n],
             d_est: (0..n).map(|_| Ewma::new(0.2)).collect(),
             rng: Pcg64::new(cfg.seed, 1000 + id as u64),
-            stats: WorkerStats::default(),
-            rate_ctl,
-            thr_ctl,
+            stats: WorkerStats { offload_targets: vec![0; n], ..WorkerStats::default() },
+            exit_policy,
+            offload,
+            adapt,
             t_e,
             next_task_id: 0,
             next_sample: 0,
@@ -333,7 +344,7 @@ impl WorkerCore {
             next_class: 0,
             failed_per_class: vec![0; cfg.sched.num_classes.max(1) as usize],
             measure_from: cfg.warmup_s,
-            scan_buf: Vec::new(),
+            cand_buf: Vec::new(),
         }
     }
 
@@ -387,32 +398,32 @@ impl WorkerCore {
 
     /// Current controller value for traces: μ under Alg. 3, T_e otherwise.
     pub fn control_value(&self) -> f64 {
-        self.rate_ctl
+        self.adapt
             .as_ref()
-            .map(|rc| rc.mu_s())
-            .or_else(|| self.thr_ctl.as_ref().map(|tc| tc.t_e()))
+            .and_then(|a| a.mu_s().or_else(|| a.t_e()))
             .unwrap_or(self.t_e as f64)
     }
 
-    /// Whether this worker runs an Alg. 3/4 controller (drivers use it to
-    /// decide if adaptation ticks need scheduling).
+    /// Whether this worker runs an Alg. 3/4 adaptation policy (drivers use
+    /// it to decide if adaptation ticks need scheduling).
     pub fn has_controller(&self) -> bool {
-        self.rate_ctl.is_some() || self.thr_ctl.is_some()
+        self.adapt.is_some()
     }
 
     pub fn final_mu_s(&self) -> Option<f64> {
-        self.rate_ctl.as_ref().map(|rc| rc.mu_s())
+        self.adapt.as_ref().and_then(|a| a.mu_s())
     }
 
     pub fn final_t_e(&self) -> Option<f64> {
-        self.thr_ctl.as_ref().map(|tc| tc.t_e())
+        self.adapt.as_ref().and_then(|a| a.t_e())
     }
 
-    /// Final per-worker stats (fills queue peaks and the drop counters:
-    /// discipline age-outs plus engine-failure losses).
+    /// Final per-worker stats (fills queue peaks, the service split, and
+    /// the drop counters: discipline age-outs plus engine-failure losses).
     pub fn into_stats(mut self) -> WorkerStats {
         self.stats.peak_input = self.queues.input.peak();
         self.stats.peak_output = self.queues.output.peak();
+        self.stats.served_per_class = self.queues.input.served_per_class().to_vec();
         let mut per_class = self.failed_per_class.clone();
         for q in [&self.queues.input, &self.queues.output] {
             for (c, &d) in q.dropped_per_class().iter().enumerate() {
@@ -455,9 +466,11 @@ impl WorkerCore {
         task.deadline = now + self.cfg.sched.deadline_for(task.class);
         self.next_class = (self.next_class + 1) % self.cfg.sched.num_classes.max(1);
         let dt = match self.cfg.admission {
-            AdmissionMode::AdaptiveRate { .. } => {
-                self.rate_ctl.as_ref().expect("rate controller").mu_s()
-            }
+            AdmissionMode::AdaptiveRate { .. } => self
+                .adapt
+                .as_ref()
+                .and_then(|a| a.mu_s())
+                .expect("adaptive-rate source runs a rate-adapting policy"),
             AdmissionMode::AdaptiveThreshold { rate_hz, .. } => {
                 self.rng.exponential(1.0 / rate_hz)
             }
@@ -497,6 +510,7 @@ impl WorkerCore {
                         task.hops += 1;
                         if self.in_window(now) {
                             self.stats.offloaded_out += 1;
+                            self.stats.offload_targets[target] += 1;
                         }
                         out.push(Action::Send {
                             to: target,
@@ -589,14 +603,17 @@ impl WorkerCore {
         for (task, (out, exit_point)) in batch.into_iter().zip(results) {
             let is_final = exit_point >= self.meta.num_stages || self.cfg.mode == Mode::Ddi;
             let threshold = if self.cfg.no_early_exit { f32::INFINITY } else { self.t_e };
-            let decision = policy::alg1_decide(
-                out.confidence,
+            let decision = self.exit_policy.decide(&ExitCtx {
+                confidence: out.confidence,
                 threshold,
                 is_final,
-                self.queues.input.len(),
-                self.queues.output.len(),
-                self.cfg.t_o,
-            );
+                input_len: self.queues.input.len(),
+                output_len: self.queues.output.len(),
+                t_o: self.cfg.t_o,
+                now,
+                class: task.class,
+                deadline: task.deadline,
+            });
             match decision {
                 ExitDecision::Exit => {
                     if self.in_window(now) {
@@ -608,6 +625,7 @@ impl WorkerCore {
                         prediction: out.prediction,
                         confidence: out.confidence,
                         admitted_at: task.admitted_at,
+                        deadline: task.deadline,
                         exited_on: self.id,
                         source: task.source,
                         class: task.class,
@@ -743,27 +761,51 @@ impl WorkerCore {
     // -- gossip --------------------------------------------------------------
 
     /// Periodic broadcast of this worker's state to its active neighbors.
-    pub fn on_gossip_tick(&mut self, _now: f64) -> Vec<Action> {
+    /// The summary carries the paper's base fields plus whatever the run's
+    /// offload policy annotates; its *actual encoded size* is the wire
+    /// charge on both drivers (virtual link delay under DES, realtime
+    /// framing) and is counted into `gossip_bytes`.
+    pub fn on_gossip_tick(&mut self, now: f64) -> Vec<Action> {
         if !self.active {
             return Vec::new();
         }
         let input_len = self.queues.input.len();
-        let gamma_s = self.gamma.get_or(0.01);
-        let t_e = self.t_e;
-        self.neighbors
+        let mut summary = NeighborSummary::base(input_len, self.gamma.get_or(0.01), self.t_e);
+        self.offload.annotate(
+            &mut summary,
+            &LocalState {
+                id: self.id,
+                now,
+                input_len,
+                output_len: self.queues.output.len(),
+                gamma_s: self.gamma.get_or(0.01),
+                input: self.queues.input.as_ref(),
+                num_classes: self.cfg.sched.num_classes,
+            },
+        );
+        let bytes = summary.encoded_bytes();
+        let targets: Vec<usize> = self
+            .neighbors
             .iter()
             .copied()
             .filter(|&m| self.peer_active[m])
+            .collect();
+        if self.in_window(now) {
+            self.stats.gossip_bytes += (bytes * targets.len()) as u64;
+        }
+        targets
+            .into_iter()
             .map(|m| Action::Send {
                 to: m,
-                payload: Payload::State { input_len, gamma_s, t_e },
-                bytes: STATE_BYTES,
+                payload: Payload::State(summary.clone()),
+                bytes,
                 needs_encode: false,
             })
             .collect()
     }
 
-    /// Gossiped state arrived from `from`: refresh the view and re-scan
+    /// A gossiped summary arrived from `from`: let the offload policy
+    /// absorb its extension fields, refresh the view, and re-scan
     /// offloading (fresh views may unblock a stalled output queue).
     ///
     /// Threshold adoption (Alg. 4 line 9, "applies to every exit point")
@@ -773,19 +815,14 @@ impl WorkerCore {
     /// threshold ripples outward one gossip period per hop, with no echo
     /// loops — on a one-hop topology this degenerates to the paper's
     /// "adopt from the source" rule exactly.
-    pub fn on_gossip(
-        &mut self,
-        now: f64,
-        from: usize,
-        input_len: usize,
-        gamma_s: f64,
-        t_e: f32,
-    ) -> Vec<Action> {
-        let d = self.d_est[from].get_or(self.link_default_delay[from].unwrap_or(0.01));
-        self.views[from] = Some(NeighborView { input_len, gamma_s, d_nm_s: d });
+    pub fn on_gossip(&mut self, now: f64, from: usize, summary: NeighborSummary) -> Vec<Action> {
+        let mut summary = summary;
+        summary.d_nm_s = self.d_est[from].get_or(self.link_default_delay[from].unwrap_or(0.01));
+        self.offload.observe(from, &summary, now);
         if !self.role.is_source && self.next_hop[self.role.home_source] == Some(from) {
-            self.t_e = t_e;
+            self.t_e = summary.t_e;
         }
+        self.views[from] = Some(summary);
         let mut out = Vec::new();
         self.try_offload(now, &mut out);
         out
@@ -797,11 +834,11 @@ impl WorkerCore {
     /// driver schedules these every `cfg.adapt.sleep_s`.
     pub fn on_adapt_tick(&mut self, _now: f64) -> Vec<Action> {
         let q = self.queues.total_len();
-        if let Some(rc) = self.rate_ctl.as_mut() {
-            rc.update(q);
-        }
-        if let Some(tc) = self.thr_ctl.as_mut() {
-            self.t_e = tc.update(q) as f32;
+        if let Some(a) = self.adapt.as_mut() {
+            a.update(q);
+            if let Some(t_e) = a.t_e() {
+                self.t_e = t_e as f32;
+            }
         }
         Vec::new()
     }
@@ -835,6 +872,7 @@ impl WorkerCore {
             self.peer_active[worker] = join;
             if !join {
                 self.views[worker] = None;
+                self.offload.forget(worker);
             }
         }
         out
@@ -858,89 +896,136 @@ impl WorkerCore {
         self.meta.stage_in_bytes[task.stage - 1]
     }
 
-    fn default_view(&self, m: usize) -> NeighborView {
-        NeighborView {
-            input_len: 0,
-            gamma_s: 0.01,
-            d_nm_s: self.d_est[m].get_or(self.link_default_delay[m].unwrap_or(0.01)),
-        }
+    /// Optimistic default for a peer never heard from (empty queue, fast
+    /// compute, measured-or-default transfer delay).
+    fn default_summary(&self, m: usize) -> NeighborSummary {
+        let mut s = NeighborSummary::base(0, 0.01, self.t_e);
+        s.d_nm_s = self.d_est[m].get_or(self.link_default_delay[m].unwrap_or(0.01));
+        s
     }
 
-    // -- offloading (Alg. 2) ---------------------------------------------------
+    // -- offloading (the OffloadPolicy seam) -----------------------------------
 
-    /// Scan neighbors for the head-of-line output task, repeatedly, until
-    /// nobody accepts. Falls back to reclaiming the task for local compute
-    /// when starving (prevents livelock; the paper's Alg. 2 spins, which
-    /// neither driver can afford).
+    /// Offer the head-of-line output task to the run's offload policy,
+    /// repeatedly, until it declines. Falls back to reclaiming the task
+    /// for local compute when starving (prevents livelock; the paper's
+    /// Alg. 2 spins, which neither driver can afford).
     fn try_offload(&mut self, now: f64, out: &mut Vec<Action>) {
+        let mut cand_ready = false;
         loop {
-            if !self.active || self.queues.output.is_empty() {
+            if !self.active {
                 return;
             }
-            let mut scan = std::mem::take(&mut self.scan_buf);
-            scan.clear();
-            scan.extend(self.neighbors.iter().copied().filter(|&m| self.peer_active[m]));
-            self.rng.shuffle(&mut scan);
-
-            let mut sent = false;
-            for &m in &scan {
-                let view = self.views[m].unwrap_or_else(|| self.default_view(m));
-                let go = policy::offload_decide(
-                    self.cfg.offload_policy,
-                    self.queues.output.len(),
-                    self.queues.input.len(),
-                    self.gamma.get_or(0.01),
-                    &view,
-                    &mut self.rng,
-                );
-                if !go {
-                    continue;
-                }
-                let Some(mut task) = self.queues.output.pop_next(now) else {
-                    // Deadline age-out emptied the queue mid-scan; the
-                    // empty check at the top of the loop terminates.
-                    continue;
-                };
-                // AE boundary: encode before the wire (stage-2 inputs only,
-                // paper §V — only the first ResNet exit has an AE).
-                let needs_encode = self.cfg.use_ae
-                    && task.stage == 2
-                    && !task.encoded
-                    && self.meta.ae.is_some();
-                if needs_encode {
-                    task.encoded = true;
-                }
-                let bytes = self.task_wire_bytes(&task);
-                task.hops += 1;
-                if self.in_window(now) {
-                    self.stats.offloaded_out += 1;
-                }
-                // Optimistic view update until the next gossip refresh.
-                if let Some(v) = self.views[m].as_mut() {
-                    v.input_len += 1;
-                }
-                out.push(Action::Send {
-                    to: m,
-                    payload: Payload::Task(task),
-                    bytes,
-                    needs_encode,
-                });
-                sent = true;
-                break;
+            // Age out expired work first so the peeked head-of-line task
+            // is the one a pop would actually serve.
+            self.queues.output.expire(now);
+            if self.queues.output.is_empty() {
+                return;
             }
-            self.scan_buf = scan;
-            if !sent {
-                // No neighbor accepted the head-of-line task. If local
-                // compute is starving, reclaim it for the input queue.
-                if !self.busy && self.queues.input.is_empty() {
-                    if let Some(t) = self.queues.output.pop_next(now) {
-                        self.queues.input.push(t);
-                        if let Some(a) = self.maybe_start(now) {
-                            out.push(a);
+            // Resolve the freshest summary per active neighbor, in
+            // canonical topology order (the policy owns any shuffling).
+            // Once per call: across loop iterations the only view change
+            // is our own optimistic bump, mirrored into the buffer below.
+            // Retained slots are overwritten in place (`copy_from`), so
+            // the benchmarked hot path stays allocation-free once the
+            // buffer has grown to the neighbor count.
+            if !cand_ready {
+                let mut cand = std::mem::take(&mut self.cand_buf);
+                let mut filled = 0;
+                for &m in &self.neighbors {
+                    if !self.peer_active[m] {
+                        continue;
+                    }
+                    if filled < cand.len() {
+                        cand[filled].0 = m;
+                        match self.views[m].as_ref() {
+                            Some(s) => cand[filled].1.copy_from(s),
+                            None => {
+                                let d = self.default_summary(m);
+                                cand[filled].1.copy_from(&d);
+                            }
+                        }
+                    } else {
+                        let s = self.views[m]
+                            .clone()
+                            .unwrap_or_else(|| self.default_summary(m));
+                        cand.push((m, s));
+                    }
+                    filled += 1;
+                }
+                cand.truncate(filled);
+                self.cand_buf = cand;
+                cand_ready = true;
+            }
+
+            let chosen = {
+                let task = self.queues.output.peek().expect("non-empty after expire");
+                let ctx = OffloadCtx {
+                    now,
+                    task,
+                    input_len: self.queues.input.len(),
+                    output_len: self.queues.output.len(),
+                    gamma_s: self.gamma.get_or(0.01),
+                    candidates: &self.cand_buf,
+                    next_hop: &self.next_hop,
+                };
+                self.offload.choose(&ctx, &mut self.rng)
+            };
+
+            match chosen {
+                Some(m) => {
+                    debug_assert!(
+                        self.cand_buf.iter().any(|(c, _)| *c == m),
+                        "policy chose {m}, not an active neighbor"
+                    );
+                    let mut task =
+                        self.queues.output.pop_next(now).expect("peeked task still queued");
+                    // AE boundary: encode before the wire (stage-2 inputs
+                    // only, paper §V — only the first ResNet exit has an AE).
+                    let needs_encode = self.cfg.use_ae
+                        && task.stage == 2
+                        && !task.encoded
+                        && self.meta.ae.is_some();
+                    if needs_encode {
+                        task.encoded = true;
+                    }
+                    let bytes = self.task_wire_bytes(&task);
+                    task.hops += 1;
+                    if self.in_window(now) {
+                        self.stats.offloaded_out += 1;
+                        self.stats.offload_targets[m] += 1;
+                    }
+                    // Optimistic view update until the next gossip refresh
+                    // (mirrored into the candidate buffer so the next loop
+                    // iteration sees it without a rebuild; a never-gossiped
+                    // default view is not bumped, exactly as before).
+                    if let Some(v) = self.views[m].as_mut() {
+                        v.input_len += 1;
+                        if let Some((_, s)) = self.cand_buf.iter_mut().find(|(c, _)| *c == m)
+                        {
+                            s.input_len += 1;
                         }
                     }
+                    out.push(Action::Send {
+                        to: m,
+                        payload: Payload::Task(task),
+                        bytes,
+                        needs_encode,
+                    });
                 }
-                return;
+                None => {
+                    // The policy kept the head-of-line task. If local
+                    // compute is starving, reclaim it for the input queue.
+                    if !self.busy && self.queues.input.is_empty() {
+                        if let Some(t) = self.queues.output.pop_next(now) {
+                            self.queues.input.push(t);
+                            if let Some(a) = self.maybe_start(now) {
+                                out.push(a);
+                            }
+                        }
+                    }
+                    return;
+                }
             }
         }
     }
@@ -1129,7 +1214,7 @@ mod tests {
         let mut w = core(0, &cfg, "2-node");
         // Neighbor reports a long input queue: O_n = 1 <= I_m = 50 — the
         // Alg. 2 gate must stay closed.
-        let _ = w.on_gossip(0.0, 1, 50, 0.01, 0.9);
+        let _ = w.on_gossip(0.0, 1, NeighborSummary::base(50, 0.01, 0.9));
         for i in 0..3 {
             let (t, _) = w.poll_admission(i as f64 * 0.01);
             w.on_task(i as f64 * 0.01, t, TaskOrigin::Admitted);
@@ -1152,7 +1237,7 @@ mod tests {
         );
         let mut w = WorkerCore::new(1, &cfg, meta2(), &topo("2-node"), 8);
         assert!((w.t_e() - 0.9).abs() < 1e-6);
-        let _ = w.on_gossip(0.0, 0, 0, 0.01, 0.42);
+        let _ = w.on_gossip(0.0, 0, NeighborSummary::base(0, 0.01, 0.42));
         assert!((w.t_e() - 0.42).abs() < 1e-6);
     }
 
@@ -1248,14 +1333,43 @@ mod tests {
         assert_eq!(acts.len(), 2);
         for a in &acts {
             match a {
-                Action::Send { payload: Payload::State { .. }, bytes, .. } => {
-                    assert_eq!(*bytes, STATE_BYTES);
+                Action::Send { payload: Payload::State(s), bytes, .. } => {
+                    // Baseline policies gossip only the paper's base
+                    // fields: the charge is the seed's fixed 32 bytes.
+                    assert_eq!(*bytes, s.encoded_bytes());
+                    assert_eq!(*bytes, crate::policy::BASE_SUMMARY_BYTES);
                 }
                 other => panic!("expected state send, got {other:?}"),
             }
         }
         let _ = w.on_churn(0.0, 2, false);
         assert_eq!(w.on_gossip_tick(0.1).len(), 1);
+    }
+
+    #[test]
+    fn gossip_bytes_are_charged_by_encoded_size() {
+        // DeadlineAware annotates slack + per-class occupancy: the charge
+        // must grow beyond the base 32 bytes and be counted per send.
+        let mut cfg = cfg_fixed("3-node-mesh", 50.0, 0.9);
+        cfg.warmup_s = 0.0;
+        cfg.policy.offload = crate::policy::OffloadKind::DeadlineAware;
+        cfg.sched = cfg.sched.with_classes(2);
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("3-node-mesh"), 8);
+        let acts = w.on_gossip_tick(0.0);
+        assert_eq!(acts.len(), 2);
+        let per_msg = crate::policy::BASE_SUMMARY_BYTES + 2 * 4 + 8;
+        for a in &acts {
+            match a {
+                Action::Send { payload: Payload::State(s), bytes, .. } => {
+                    assert_eq!(*bytes, per_msg, "2 classes + slack on the wire");
+                    assert_eq!(s.per_class_input.len(), 2);
+                    assert!(s.min_slack_s.is_some());
+                }
+                other => panic!("expected state send, got {other:?}"),
+            }
+        }
+        let stats = w.into_stats();
+        assert_eq!(stats.gossip_bytes, (2 * per_msg) as u64);
     }
 
     #[test]
@@ -1549,14 +1663,14 @@ mod tests {
         // Worker 2's home source is 3, so its next hop home *is* 3: gossip
         // from 1 (wrong direction) must not change T_e; gossip from 3 must.
         let mut w2 = WorkerCore::new(2, &cfg, meta2(), &topo("line-4"), 8);
-        let _ = w2.on_gossip(0.0, 1, 0, 0.01, 0.33);
+        let _ = w2.on_gossip(0.0, 1, NeighborSummary::base(0, 0.01, 0.33));
         assert!((w2.t_e() - 0.9).abs() < 1e-6, "must not adopt from off-route gossip");
-        let _ = w2.on_gossip(0.1, 3, 0, 0.01, 0.42);
+        let _ = w2.on_gossip(0.1, 3, NeighborSummary::base(0, 0.01, 0.42));
         assert!((w2.t_e() - 0.42).abs() < 1e-6, "adopts from the next hop home");
 
         // Sources keep their own controller's value.
         let mut w3 = WorkerCore::new(3, &cfg, meta2(), &topo("line-4"), 8);
-        let _ = w3.on_gossip(0.0, 2, 0, 0.01, 0.11);
+        let _ = w3.on_gossip(0.0, 2, NeighborSummary::base(0, 0.01, 0.11));
         assert!((w3.t_e() - 0.9).abs() < 1e-6, "sources never adopt");
     }
 

@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use crate::artifact::Manifest;
-use crate::coordinator::{AdmissionMode, ExperimentConfig, Mode, OffloadPolicy, Run};
+use crate::coordinator::{AdmissionMode, ExperimentConfig, Mode, OffloadKind, Run};
 use crate::simnet::LinkSpec;
 
 /// One plotted point of a figure.
@@ -238,10 +238,10 @@ pub fn ablation_autoencoder(manifest: &Manifest, opts: SweepOpts) -> Result<Vec<
 /// on the 3-node mesh under fixed load.
 pub fn ablation_offload(manifest: &Manifest, opts: SweepOpts) -> Result<Vec<FigRow>> {
     let policies = [
-        (OffloadPolicy::Alg2, "Alg2 (paper)"),
-        (OffloadPolicy::Deterministic, "deterministic only"),
-        (OffloadPolicy::QueueOnly, "queue-size only"),
-        (OffloadPolicy::RoundRobin, "round-robin"),
+        (OffloadKind::Alg2, "Alg2 (paper)"),
+        (OffloadKind::Deterministic, "deterministic only"),
+        (OffloadKind::QueueOnly, "queue-size only"),
+        (OffloadKind::RoundRobin, "round-robin"),
     ];
     let mut rows = Vec::new();
     for (policy, name) in policies {
@@ -251,7 +251,7 @@ pub fn ablation_offload(manifest: &Manifest, opts: SweepOpts) -> Result<Vec<FigR
                 "3-node-mesh",
                 AdmissionMode::Fixed { rate_hz: hz, threshold: 0.9 },
             );
-            cfg.offload_policy = policy;
+            cfg.policy.offload = policy;
             apply_opts(&mut cfg, &opts);
             rows.push(row_from(cfg, name, hz, manifest)?);
         }

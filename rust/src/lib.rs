@@ -15,7 +15,11 @@
 //! [`coordinator::WorkerCore`], that makes every admission/gossip/exit/
 //! offload decision as explicit events-in/actions-out; two thin drivers — a
 //! discrete-event simulator in virtual time and a realtime threaded runtime
-//! on wallclock — map those actions onto their medium. Runs are launched
+//! on wallclock — map those actions onto their medium. The decisions
+//! themselves are pluggable: the [`policy`] subsystem puts Algs 1–4 behind
+//! `ExitPolicy` / `OffloadPolicy` / `AdaptPolicy` traits (plus extensible
+//! gossip summaries), the same way [`sched`] makes queue order and
+//! [`routing`] makes data placement a config choice. Runs are launched
 //! through the [`coordinator::Run`] builder:
 //!
 //! ```ignore
@@ -34,6 +38,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod dataset;
 pub mod experiments;
+pub mod policy;
 pub mod routing;
 pub mod runtime;
 pub mod sched;

@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 
 use mdi_exit::artifact::Manifest;
 use mdi_exit::cli::Args;
-use mdi_exit::coordinator::{AdmissionMode, Driver, ExperimentConfig, Run};
+use mdi_exit::coordinator::{AdmissionMode, Driver, ExperimentConfig, PolicyConfig, Run};
 use mdi_exit::experiments as exp;
 use mdi_exit::sched::DisciplineKind;
 use mdi_exit::util::toml::Config as Toml;
@@ -64,9 +64,13 @@ fn print_help() {
                              re-homes route multi-hop back to each source\n\
            --adaptive-rate | --adaptive-threshold   admission mode\n\
            --use-ae --no-ee  feature toggles\n\
-           --sched D         queue discipline: fifo (default) | priority | edf\n\
+           --exit-policy P   alg1 (default) | local-only\n\
+           --offload-policy P  alg2 (default) | deterministic | queue-only |\n\
+                             round-robin | deadline-aware | multi-hop\n\
+           --sched D         queue discipline: fifo (default) | priority | edf | drr\n\
            --classes N       traffic classes, stamped round-robin at admission\n\
            --class-deadline S  per-class latency budget (EDF deadline stamp)\n\
+           --quantum Q       DRR service quantum (one weight for all classes)\n\
            --drop-late       EDF: discard tasks whose deadline passed\n\
            --batch N         max same-stage tasks per batched engine call\n\
            --json            print the full RunReport as JSON"
@@ -133,13 +137,21 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
         "fifo" => DisciplineKind::Fifo,
         "priority" => DisciplineKind::StrictPriority,
         "edf" => DisciplineKind::Edf { drop_late: args.bool_or("drop-late", false)? },
-        other => bail!("unknown --sched {other:?} (fifo|priority|edf)"),
+        "drr" | "weighted-fair" => DisciplineKind::WeightedFair,
+        other => bail!("unknown --sched {other:?} (fifo|priority|edf|drr)"),
     };
     let deadline = args.f64_or("class-deadline", 0.0)?;
     if deadline > 0.0 {
         cfg.sched.class_deadline_s = vec![deadline; classes];
     }
+    let quantum = args.f64_or("quantum", 0.0)?;
+    if quantum > 0.0 {
+        cfg.sched.class_quantum = vec![quantum; classes];
+    }
     cfg.sched.batch.max_batch = args.usize_or("batch", 1)?;
+    // Decision policies (crate::policy): which Alg. 1/2 variants run.
+    cfg.policy.exit = PolicyConfig::parse_exit(args.str_or("exit-policy", "alg1"))?;
+    cfg.policy.offload = PolicyConfig::parse_offload(args.str_or("offload-policy", "alg2"))?;
     // Placement: comma-separated source nodes, e.g. --sources 0,3.
     let sources = args.str_or("sources", "");
     if !sources.is_empty() {
@@ -196,9 +208,10 @@ fn cmd_run(args: &Args, artifacts: &str) -> Result<()> {
         if report.per_class.len() > 1 || report.dropped > 0 {
             for (c, cs) in report.per_class.iter_mut().enumerate() {
                 println!(
-                    "  class {c}: completed {:>8}  p95 {:>8.2} ms  dropped {:>6}",
+                    "  class {c}: completed {:>8}  p95 {:>8.2} ms  on-time {:>6.3}  dropped {:>6}",
                     cs.completed,
                     cs.latency.p95() * 1e3,
+                    cs.on_time_rate(),
                     cs.dropped
                 );
             }

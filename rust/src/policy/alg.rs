@@ -4,6 +4,12 @@
 //! code run under the discrete-event driver (benches, virtual time) and the
 //! realtime threaded driver (examples, PJRT engine), and makes every branch
 //! unit- and property-testable in isolation.
+//!
+//! These free functions are the *reference semantics* of the pluggable
+//! [`super`] policy traits: [`super::BaselineExit`] and
+//! [`super::BaselineOffload`] are required (and property-tested) to
+//! reproduce `alg1_decide` / `alg2_should_offload` bit for bit, so the
+//! trait seam can never drift from the paper's algorithms unnoticed.
 
 use crate::util::rng::Pcg64;
 
@@ -90,9 +96,10 @@ pub fn alg2_should_offload(
     rng.chance(p)
 }
 
-/// Offloading policy selector (ablation `abl-offload`, DESIGN.md §4).
+/// Per-neighbor offload decision rule used by the baseline policy family
+/// (ablation `abl-offload`, DESIGN.md §4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum OffloadPolicy {
+pub enum OffloadRule {
     /// The paper's Alg. 2 (deterministic + probabilistic branches).
     Alg2,
     /// Alg. 2 without line 5 (offload only when strictly faster) — shows
@@ -105,9 +112,9 @@ pub enum OffloadPolicy {
     RoundRobin,
 }
 
-/// Apply the selected offload policy for one candidate neighbor.
+/// Apply the selected offload rule for one candidate neighbor.
 pub fn offload_decide(
-    policy: OffloadPolicy,
+    policy: OffloadRule,
     output_len: usize,
     input_len: usize,
     gamma_n_s: f64,
@@ -115,16 +122,16 @@ pub fn offload_decide(
     rng: &mut Pcg64,
 ) -> bool {
     match policy {
-        OffloadPolicy::Alg2 => {
+        OffloadRule::Alg2 => {
             alg2_should_offload(output_len, input_len, gamma_n_s, view, rng)
         }
-        OffloadPolicy::Deterministic => {
+        OffloadRule::Deterministic => {
             output_len > view.input_len
                 && input_len as f64 * gamma_n_s
                     > view.d_nm_s + view.input_len as f64 * view.gamma_s
         }
-        OffloadPolicy::QueueOnly => output_len > view.input_len,
-        OffloadPolicy::RoundRobin => true,
+        OffloadRule::QueueOnly => output_len > view.input_len,
+        OffloadRule::RoundRobin => true,
     }
 }
 
@@ -350,9 +357,9 @@ mod tests {
         let mut rng = Pcg64::new(4, 0);
         let v = view(0, 0.5, 1.0); // remote slower than empty local
         // local wait = 0 → deterministic refuses, queue-only accepts
-        assert!(!offload_decide(OffloadPolicy::Deterministic, 5, 0, 0.5, &v, &mut rng));
-        assert!(offload_decide(OffloadPolicy::QueueOnly, 5, 0, 0.5, &v, &mut rng));
-        assert!(offload_decide(OffloadPolicy::RoundRobin, 0, 0, 0.5, &v, &mut rng));
+        assert!(!offload_decide(OffloadRule::Deterministic, 5, 0, 0.5, &v, &mut rng));
+        assert!(offload_decide(OffloadRule::QueueOnly, 5, 0, 0.5, &v, &mut rng));
+        assert!(offload_decide(OffloadRule::RoundRobin, 0, 0, 0.5, &v, &mut rng));
     }
 
     // ---- Alg. 3 ----------------------------------------------------------

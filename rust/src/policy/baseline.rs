@@ -1,0 +1,289 @@
+//! The baseline policy family: bit-for-bit the pre-refactor behaviour.
+//!
+//! [`BaselineExit`] is `alg1_decide`, [`BaselineOffload`] is the shuffled
+//! one-hop Alg. 2 scan the core used to inline (same candidate order, same
+//! shuffle, same per-neighbor rule, so the RNG stream advances identically
+//! — property-tested in `tests/prop_coordinator.rs`), and
+//! [`BaselineAdapt`] wraps the two AIMD controllers of Algs 3/4. They
+//! gossip nothing beyond the paper's base fields, so their summaries
+//! encode to exactly the seed's 32 bytes.
+
+use super::alg::{
+    alg1_decide, offload_decide, AdaptConfig, ExitDecision, OffloadRule, RateController,
+    ThresholdController,
+};
+use super::{AdaptPolicy, ExitCtx, ExitPolicy, OffloadCtx, OffloadPolicy};
+use crate::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// Exit
+// ---------------------------------------------------------------------------
+
+/// The paper's Alg. 1, verbatim.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct BaselineExit;
+
+impl ExitPolicy for BaselineExit {
+    fn name(&self) -> &'static str {
+        "alg1"
+    }
+
+    fn decide(&mut self, ctx: &ExitCtx) -> ExitDecision {
+        alg1_decide(
+            ctx.confidence,
+            ctx.threshold,
+            ctx.is_final,
+            ctx.input_len,
+            ctx.output_len,
+            ctx.t_o,
+        )
+    }
+}
+
+/// Alg. 1 with the offload branch disabled: a continuing task always stays
+/// local. Ablates what Alg. 2 is worth — with this policy the output queue
+/// never fills and no task ever rides the wire.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LocalOnlyExit;
+
+impl ExitPolicy for LocalOnlyExit {
+    fn name(&self) -> &'static str {
+        "local-only"
+    }
+
+    fn decide(&mut self, ctx: &ExitCtx) -> ExitDecision {
+        match alg1_decide(
+            ctx.confidence,
+            ctx.threshold,
+            ctx.is_final,
+            ctx.input_len,
+            ctx.output_len,
+            ctx.t_o,
+        ) {
+            ExitDecision::Exit => ExitDecision::Exit,
+            _ => ExitDecision::ContinueLocal,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Offload
+// ---------------------------------------------------------------------------
+
+/// The pre-refactor offload scan: shuffle the active neighbors, walk them
+/// in shuffled order, and send to the first one the per-neighbor rule
+/// accepts. The shuffle and the rule's probabilistic branch draw from the
+/// core's RNG in exactly the order the inlined code did.
+#[derive(Debug)]
+pub struct BaselineOffload {
+    rule: OffloadRule,
+    /// Scratch for the shuffled candidate indices (avoids an allocation
+    /// per offload attempt — the benchmarked hot path).
+    scan: Vec<usize>,
+}
+
+impl BaselineOffload {
+    pub fn new(rule: OffloadRule) -> BaselineOffload {
+        BaselineOffload { rule, scan: Vec::new() }
+    }
+
+    pub fn rule(&self) -> OffloadRule {
+        self.rule
+    }
+}
+
+impl OffloadPolicy for BaselineOffload {
+    fn name(&self) -> &'static str {
+        match self.rule {
+            OffloadRule::Alg2 => "alg2",
+            OffloadRule::Deterministic => "deterministic",
+            OffloadRule::QueueOnly => "queue-only",
+            OffloadRule::RoundRobin => "round-robin",
+        }
+    }
+
+    fn choose(&mut self, ctx: &OffloadCtx<'_>, rng: &mut Pcg64) -> Option<usize> {
+        self.scan.clear();
+        self.scan.extend(0..ctx.candidates.len());
+        rng.shuffle(&mut self.scan);
+        for &i in &self.scan {
+            let (m, summary) = &ctx.candidates[i];
+            let go = offload_decide(
+                self.rule,
+                ctx.output_len,
+                ctx.input_len,
+                ctx.gamma_s,
+                &summary.view(),
+                rng,
+            );
+            if go {
+                return Some(*m);
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptation
+// ---------------------------------------------------------------------------
+
+/// Algs 3/4 behind the [`AdaptPolicy`] seam: the admission mode decides
+/// which of the two AIMD controllers a source runs.
+#[derive(Debug)]
+pub enum BaselineAdapt {
+    /// Alg. 3: fixed threshold, adapt the interarrival time μ.
+    Rate(RateController),
+    /// Alg. 4: fixed arrivals, adapt the early-exit threshold T_e.
+    Threshold(ThresholdController),
+}
+
+impl BaselineAdapt {
+    pub fn rate(cfg: AdaptConfig, initial_mu_s: f64) -> BaselineAdapt {
+        BaselineAdapt::Rate(RateController::new(cfg, initial_mu_s))
+    }
+
+    pub fn threshold(cfg: AdaptConfig, initial_t_e: f64, t_e_min: f64) -> BaselineAdapt {
+        BaselineAdapt::Threshold(ThresholdController::new(cfg, initial_t_e, t_e_min))
+    }
+}
+
+impl AdaptPolicy for BaselineAdapt {
+    fn name(&self) -> &'static str {
+        match self {
+            BaselineAdapt::Rate(_) => "aimd-rate",
+            BaselineAdapt::Threshold(_) => "aimd-threshold",
+        }
+    }
+
+    fn update(&mut self, queue_total: usize) {
+        match self {
+            BaselineAdapt::Rate(rc) => {
+                rc.update(queue_total);
+            }
+            BaselineAdapt::Threshold(tc) => {
+                tc.update(queue_total);
+            }
+        }
+    }
+
+    fn mu_s(&self) -> Option<f64> {
+        match self {
+            BaselineAdapt::Rate(rc) => Some(rc.mu_s()),
+            BaselineAdapt::Threshold(_) => None,
+        }
+    }
+
+    fn t_e(&self) -> Option<f64> {
+        match self {
+            BaselineAdapt::Rate(_) => None,
+            BaselineAdapt::Threshold(tc) => Some(tc.t_e()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::NeighborSummary;
+    use super::*;
+    use crate::coordinator::task::Task;
+
+    fn ctx<'a>(
+        task: &'a Task,
+        output_len: usize,
+        input_len: usize,
+        candidates: &'a [(usize, NeighborSummary)],
+        next_hop: &'a [Option<usize>],
+    ) -> OffloadCtx<'a> {
+        OffloadCtx {
+            now: 0.0,
+            task,
+            input_len,
+            output_len,
+            gamma_s: 0.01,
+            candidates,
+            next_hop,
+        }
+    }
+
+    #[test]
+    fn exit_policies_agree_on_exits_and_differ_on_continuation() {
+        let c = ExitCtx {
+            confidence: 0.1,
+            threshold: 0.9,
+            is_final: false,
+            input_len: 5,
+            output_len: 3,
+            t_o: 50,
+            now: 0.0,
+            class: 0,
+            deadline: 1.0,
+        };
+        assert_eq!(BaselineExit.decide(&c), ExitDecision::ContinueOffload);
+        assert_eq!(LocalOnlyExit.decide(&c), ExitDecision::ContinueLocal);
+        let exit = ExitCtx { confidence: 0.95, ..c };
+        assert_eq!(BaselineExit.decide(&exit), ExitDecision::Exit);
+        assert_eq!(LocalOnlyExit.decide(&exit), ExitDecision::Exit);
+    }
+
+    #[test]
+    fn baseline_offload_respects_the_gate() {
+        let task = Task::initial(1, 0, None, 0.0);
+        // Neighbor more loaded than our output queue: Alg. 2 refuses.
+        let cands = vec![(1usize, NeighborSummary::base(50, 0.01, 0.9))];
+        let mut p = BaselineOffload::new(OffloadRule::Alg2);
+        let mut rng = Pcg64::new(1, 0);
+        assert_eq!(p.choose(&ctx(&task, 3, 5, &cands, &[None, Some(1)]), &mut rng), None);
+        // Idle neighbor, loaded local queue: deterministic branch fires.
+        let cands = vec![(1usize, NeighborSummary::base(0, 0.01, 0.9))];
+        assert_eq!(
+            p.choose(&ctx(&task, 3, 50, &cands, &[None, Some(1)]), &mut rng),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn round_robin_takes_any_candidate() {
+        let task = Task::initial(1, 0, None, 0.0);
+        let cands = vec![
+            (1usize, NeighborSummary::base(99, 0.01, 0.9)),
+            (2usize, NeighborSummary::base(99, 0.01, 0.9)),
+        ];
+        let mut p = BaselineOffload::new(OffloadRule::RoundRobin);
+        let mut rng = Pcg64::new(1, 0);
+        let got = p.choose(&ctx(&task, 0, 0, &cands, &[None, Some(1), Some(2)]), &mut rng);
+        assert!(matches!(got, Some(1) | Some(2)));
+    }
+
+    #[test]
+    fn baseline_offload_gossips_nothing_extra() {
+        let mut p = BaselineOffload::new(OffloadRule::Alg2);
+        let mut s = NeighborSummary::base(3, 0.01, 0.9);
+        let q = crate::sched::Fifo::new();
+        let local = super::super::LocalState {
+            id: 0,
+            now: 0.0,
+            input_len: 3,
+            output_len: 0,
+            gamma_s: 0.01,
+            input: &q,
+            num_classes: 2,
+        };
+        p.annotate(&mut s, &local);
+        assert_eq!(s.encoded_bytes(), 32, "baseline summaries stay at the seed size");
+    }
+
+    #[test]
+    fn adapt_wraps_the_two_controllers() {
+        let mut a = BaselineAdapt::rate(AdaptConfig::default(), 1.0);
+        assert!(a.t_e().is_none());
+        let mu0 = a.mu_s().unwrap();
+        a.update(0); // under T_Q1: rate up, mu down
+        assert!(a.mu_s().unwrap() < mu0);
+
+        let mut a = BaselineAdapt::threshold(AdaptConfig::default(), 0.5, 0.05);
+        assert!(a.mu_s().is_none());
+        a.update(0);
+        assert!((a.t_e().unwrap() - 0.6).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Deadline-aware offloading: pick targets by *remaining slack vs. remote
+//! wait*, not by queue length alone.
+//!
+//! Alg. 2 compares queue lengths and expected waits, but it is blind to
+//! *when the task must be done*. With EDF deadlines stamped at admission
+//! (`SchedConfig::class_deadline_s`), the head-of-line output task carries
+//! an absolute deadline; this policy offloads it to the neighbor with the
+//! smallest expected completion time — unconditionally when the local
+//! backlog alone would blow the deadline, and only for a *clear* win when
+//! the deadline is safe locally (a marginally-faster remote wastes the
+//! wire). It consumes two gossip extensions it contributes itself:
+//! per-class input occupancy (under deadline-ordered service, only
+//! same-or-tighter classes queue ahead of our task, so the wait estimate
+//! counts classes `<= task.class` instead of the whole queue) and the
+//! neighbor's earliest-deadline slack (`min_slack_s`) — a neighbor
+//! already missing its own deadlines is no rescue target.
+
+use super::summary::NeighborSummary;
+use super::{LocalState, OffloadCtx, OffloadPolicy};
+use crate::util::rng::Pcg64;
+
+/// When the deadline is safe locally, a remote must finish in under this
+/// fraction of the local wait before the transfer is worth paying for.
+const CLEAR_WIN: f64 = 0.5;
+
+/// Tasks expected to be served before a class-`class` task at a neighbor:
+/// with per-class occupancy gossiped, only same-or-higher-priority classes
+/// count (deadline-ordered service); otherwise the whole queue.
+fn queue_ahead(s: &NeighborSummary, class: u8) -> f64 {
+    if s.per_class_input.is_empty() {
+        s.input_len as f64
+    } else {
+        s.per_class_input.iter().take(class as usize + 1).map(|&c| c as f64).sum()
+    }
+}
+
+/// Expected wait before a task sent now would *finish* at a neighbor:
+/// transfer + queued work ahead of it + its own service.
+fn remote_wait(s: &NeighborSummary, class: u8) -> f64 {
+    s.d_nm_s + (queue_ahead(s, class) + 1.0) * s.gamma_s
+}
+
+/// Offload the head-of-line task by deadline slack (see module docs).
+/// Deterministic: never draws from the RNG, so seeded runs are identical
+/// across drivers by construction.
+#[derive(Debug, Default)]
+pub struct DeadlineAware;
+
+impl DeadlineAware {
+    pub fn new() -> DeadlineAware {
+        DeadlineAware
+    }
+}
+
+impl OffloadPolicy for DeadlineAware {
+    fn name(&self) -> &'static str {
+        "deadline-aware"
+    }
+
+    fn annotate(&mut self, summary: &mut NeighborSummary, local: &LocalState<'_>) {
+        summary.per_class_input = (0..local.num_classes)
+            .map(|c| local.input.class_len(c) as u32)
+            .collect();
+        summary.min_slack_s =
+            Some(local.input.earliest_deadline().map_or(f64::INFINITY, |d| d - local.now));
+    }
+
+    fn choose(&mut self, ctx: &OffloadCtx<'_>, _rng: &mut Pcg64) -> Option<usize> {
+        let slack = ctx.task.deadline - ctx.now;
+        // Local completion estimate: the whole input backlog is ahead of a
+        // reclaimed output task, plus its own service.
+        let local_wait = (ctx.input_len as f64 + 1.0) * ctx.gamma_s;
+
+        // A neighbor already missing its own deadlines is overloaded
+        // beyond rescue — dumping more urgent work there helps nobody.
+        let (target, w) = ctx
+            .candidates
+            .iter()
+            .filter(|(_, s)| !s.min_slack_s.is_some_and(|ms| ms < 0.0))
+            .map(|(m, s)| (*m, remote_wait(s, ctx.task.class)))
+            .min_by(|a, b| a.1.total_cmp(&b.1))?;
+
+        // Never offload to a slower place; past that, urgency decides:
+        // when the local backlog would blow the deadline, the fastest
+        // neighbor is the task's best chance, no further questions. When
+        // the deadline is safe locally, only a clear win justifies the
+        // transfer — shaving a millisecond off a comfortable margin just
+        // spends wire the overloaded paths need.
+        if w >= local_wait {
+            return None;
+        }
+        if local_wait > slack || w < CLEAR_WIN * local_wait {
+            Some(target)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::NeighborSummary;
+    use super::*;
+    use crate::coordinator::task::Task;
+
+    fn ctx<'a>(
+        task: &'a Task,
+        input_len: usize,
+        candidates: &'a [(usize, NeighborSummary)],
+    ) -> OffloadCtx<'a> {
+        OffloadCtx {
+            now: 0.0,
+            task,
+            input_len,
+            output_len: 5,
+            gamma_s: 0.01,
+            candidates,
+            next_hop: &[],
+        }
+    }
+
+    fn summary(input_len: usize, gamma_s: f64, d: f64) -> NeighborSummary {
+        let mut s = NeighborSummary::base(input_len, gamma_s, 0.9);
+        s.d_nm_s = d;
+        s
+    }
+
+    #[test]
+    fn offloads_when_local_backlog_blows_the_deadline() {
+        // Local: 50 tasks x 10 ms = 510 ms wait vs a 100 ms deadline.
+        // Neighbor: idle, 5 ms away -> 15 ms completion. Must offload even
+        // though the remote estimate alone would also fit a lazy gate.
+        let task = Task { deadline: 0.1, ..Task::initial(1, 0, None, 0.0) };
+        let cands = vec![(1usize, summary(0, 0.01, 0.005))];
+        let got = DeadlineAware::new().choose(&ctx(&task, 50, &cands), &mut Pcg64::new(1, 0));
+        assert_eq!(got, Some(1));
+    }
+
+    #[test]
+    fn keeps_the_task_when_local_is_fastest() {
+        // Empty local queue: 10 ms local vs 60 ms remote — stay.
+        let task = Task { deadline: 1.0, ..Task::initial(1, 0, None, 0.0) };
+        let cands = vec![(1usize, summary(5, 0.01, 0.0))];
+        let got = DeadlineAware::new().choose(&ctx(&task, 0, &cands), &mut Pcg64::new(1, 0));
+        assert_eq!(got, None);
+    }
+
+    #[test]
+    fn keeps_the_task_when_remote_is_slower_despite_ample_slack() {
+        // Local 30 ms (comfortably inside the 500 ms slack) vs remote
+        // 45 ms: the remote never finishes sooner, so the wire is wasted.
+        let task = Task { deadline: 0.5, ..Task::initial(1, 0, None, 0.0) };
+        let cands = vec![(1usize, summary(3, 0.01, 0.005))]; // 45 ms remote
+        let got = DeadlineAware::new().choose(&ctx(&task, 2, &cands), &mut Pcg64::new(1, 0));
+        assert_eq!(got, None, "local 30 ms beats remote 45 ms");
+    }
+
+    #[test]
+    fn safe_deadline_requires_a_clear_win() {
+        // Slack 10 s — the deadline is in no danger locally (200 ms).
+        let task = Task { deadline: 10.0, ..Task::initial(1, 0, None, 0.0) };
+        // Remote 180 ms: faster, but marginal — keep the task.
+        let cands = vec![(1usize, summary(17, 0.01, 0.0))];
+        let got = DeadlineAware::new().choose(&ctx(&task, 19, &cands), &mut Pcg64::new(1, 0));
+        assert_eq!(got, None, "a marginal win must not pay the wire");
+        // Remote 60 ms: under half the local wait — worth the transfer.
+        let cands = vec![(1usize, summary(5, 0.01, 0.0))];
+        let got = DeadlineAware::new().choose(&ctx(&task, 19, &cands), &mut Pcg64::new(1, 0));
+        assert_eq!(got, Some(1), "a clear win is taken even with ample slack");
+    }
+
+    #[test]
+    fn remote_wait_counts_only_same_or_tighter_classes_when_gossiped() {
+        // Neighbor holds 30 queued tasks, but only 2 are class <= 0: under
+        // deadline-ordered service a class-0 task jumps the bulk backlog,
+        // so the estimate must use the per-class view, not the raw length.
+        let urgent = Task { class: 0, deadline: 0.1, ..Task::initial(1, 0, None, 0.0) };
+        let mut s = summary(30, 0.01, 0.005);
+        s.per_class_input = vec![2, 28];
+        let cands = vec![(1usize, s)];
+        // Raw length would say 315 ms remote vs 510 ms local wait — but the
+        // class-aware estimate is 35 ms, an easy rescue.
+        let got =
+            DeadlineAware::new().choose(&ctx(&urgent, 50, &cands), &mut Pcg64::new(1, 0));
+        assert_eq!(got, Some(1));
+        // A class-1 task sees the whole queue ahead of it.
+        assert!((queue_ahead(&cands[0].1, 1) - 30.0).abs() < 1e-9);
+        assert!((queue_ahead(&cands[0].1, 0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skips_neighbors_already_missing_deadlines() {
+        let task = Task { deadline: 0.1, ..Task::initial(1, 0, None, 0.0) };
+        let mut drowning = summary(0, 0.01, 0.005);
+        drowning.min_slack_s = Some(-0.05);
+        let mut ok = summary(2, 0.01, 0.005); // slower than the drowning one
+        ok.min_slack_s = Some(1.0);
+        let cands = vec![(1usize, drowning), (2usize, ok)];
+        let got = DeadlineAware::new().choose(&ctx(&task, 50, &cands), &mut Pcg64::new(1, 0));
+        assert_eq!(got, Some(2), "the drowning neighbor is not a rescue target");
+    }
+
+    #[test]
+    fn annotates_slack_and_per_class_occupancy() {
+        use crate::sched::QueueDiscipline;
+        let mut q = crate::sched::Fifo::new();
+        q.push(Task { class: 1, deadline: 0.7, ..Task::initial(1, 0, None, 0.0) });
+        q.push(Task { class: 0, deadline: 0.3, ..Task::initial(2, 0, None, 0.0) });
+        let local = LocalState {
+            id: 0,
+            now: 0.1,
+            input_len: 2,
+            output_len: 0,
+            gamma_s: 0.01,
+            input: &q,
+            num_classes: 2,
+        };
+        let mut s = NeighborSummary::base(2, 0.01, 0.9);
+        DeadlineAware::new().annotate(&mut s, &local);
+        assert_eq!(s.per_class_input, vec![1, 1]);
+        assert!((s.min_slack_s.unwrap() - 0.2).abs() < 1e-9, "earliest 0.3 at now 0.1");
+        assert_eq!(s.encoded_bytes(), 32 + 8 + 8, "two classes + slack on the wire");
+    }
+}

@@ -1,0 +1,379 @@
+//! Pluggable decision policies: *who exits, who offloads where, and how
+//! the sources adapt* — the paper's Algorithms 1–4 as a trait surface.
+//!
+//! The seed hardwired Algs 1–4 as free functions called straight from
+//! [`crate::coordinator::WorkerCore`], so every variant (deadline-aware
+//! offloading, multi-hop offloading toward remote regions, alternative
+//! admission controllers) meant editing the core. This module is the same
+//! seam [`crate::sched::QueueDiscipline`] and [`crate::routing::Placement`]
+//! already carved for queue order and data placement, applied to the
+//! decision loop itself. The core consumes three boxed, config-selected
+//! objects:
+//!
+//! * [`ExitPolicy`] — Alg. 1's seam: classifier confidence + threshold +
+//!   queue state ([`ExitCtx`]) → [`ExitDecision`] for one finished task.
+//! * [`OffloadPolicy`] — Alg. 2's seam: the head-of-line output task +
+//!   the freshest [`NeighborSummary`] per neighbor ([`OffloadCtx`]) + the
+//!   core's RNG → an offload target (or `None` to keep the task). The
+//!   policy also *owns the gossip extension surface*: it annotates this
+//!   worker's outgoing summaries ([`OffloadPolicy::annotate`]) and absorbs
+//!   incoming ones ([`OffloadPolicy::observe`]).
+//! * [`AdaptPolicy`] — Algs 3/4's seam: queue occupancy → μ and/or T_e
+//!   updates at the admitting sources, replacing the two hardwired
+//!   controllers.
+//!
+//! ## Trait contracts (what a policy may read, and determinism)
+//!
+//! Policies are **pure over their inputs plus their own state**: everything
+//! a decision may depend on arrives in the context structs ([`ExitCtx`],
+//! [`OffloadCtx`], [`LocalState`]) or through `observe` — a policy never
+//! reaches into the core, the drivers, clocks, or global state. All
+//! randomness comes from the `&mut Pcg64` handed into
+//! [`OffloadPolicy::choose`] (the core's own per-worker stream, seeded
+//! `(cfg.seed, 1000 + worker_id)`): a policy that draws from it consumes
+//! the same stream the baseline consumed, so seeded runs stay reproducible
+//! and the DES and realtime drivers make identical decision sequences for
+//! identical event sequences. Policies must not block, sleep, or read
+//! time beyond the `now` they are handed.
+//!
+//! `observe`/`annotate` are how summaries stay *extensible without wire
+//! waste*: a policy only contributes the fields it actually consumes
+//! (per-class occupancy, earliest-deadline slack, transitive region load),
+//! and both drivers charge the link by [`NeighborSummary::encoded_bytes`]
+//! — richer gossip costs more, paper-only gossip costs exactly the seed's
+//! 32 bytes.
+//!
+//! ## Implementations
+//!
+//! * [`BaselineExit`] / [`BaselineOffload`] / [`BaselineAdapt`]
+//!   ([`baseline`]) — bit-for-bit the pre-refactor Alg. 1/2/3/4 behaviour
+//!   (property-tested against the free functions in [`alg`], including the
+//!   RNG call sequence of the shuffled neighbor scan).
+//! * [`DeadlineAware`] ([`deadline`]) — offloads the head-of-line task by
+//!   *remaining slack vs. remote wait*, consuming the EDF deadlines
+//!   stamped at admission and the gossiped `min_slack_s` field.
+//! * [`MultiHop`] ([`multihop`]) — falls back from Alg. 2's one-hop scan
+//!   to pushing work toward a remote under-loaded node through the
+//!   [`crate::routing::RoutingTable`] next-hop row, steered by the
+//!   transitive `region` load table the policy itself gossips.
+
+pub mod alg;
+mod baseline;
+mod deadline;
+mod multihop;
+mod summary;
+
+use anyhow::{bail, Result};
+
+pub use alg::{
+    alg1_decide, alg2_should_offload, offload_decide, AdaptConfig, ExitDecision,
+    NeighborView, OffloadRule, RateController, ThresholdController,
+};
+pub use baseline::{BaselineAdapt, BaselineExit, BaselineOffload, LocalOnlyExit};
+pub use deadline::DeadlineAware;
+pub use multihop::MultiHop;
+pub use summary::{NeighborSummary, RegionLoad, BASE_SUMMARY_BYTES};
+
+use crate::coordinator::task::Task;
+use crate::sched::QueueDiscipline;
+use crate::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------------
+// Decision contexts
+// ---------------------------------------------------------------------------
+
+/// Everything Alg. 1 (and any exit-policy variant) may read when deciding
+/// what happens to a task whose stage just finished.
+#[derive(Debug, Clone, Copy)]
+pub struct ExitCtx {
+    /// Classifier confidence C_k(d) at the exit point that ran.
+    pub confidence: f32,
+    /// Early-exit threshold T_e in effect at this worker (already
+    /// `INFINITY` under `no_early_exit`).
+    pub threshold: f32,
+    /// The DNN output is final (last exit point, or DDI mode).
+    pub is_final: bool,
+    /// Live input-queue occupancy I_n.
+    pub input_len: usize,
+    /// Live output-queue occupancy O_n.
+    pub output_len: usize,
+    /// Output-queue threshold T_O of Alg. 1.
+    pub t_o: usize,
+    /// Driver time of the decision (virtual or wall seconds).
+    pub now: f64,
+    /// Traffic class of the task (stamped at admission).
+    pub class: u8,
+    /// Absolute completion deadline of the task.
+    pub deadline: f64,
+}
+
+/// What an offload policy may read when picking a target for the
+/// head-of-line output task.
+#[derive(Debug)]
+pub struct OffloadCtx<'a> {
+    pub now: f64,
+    /// The head-of-line output task the chosen target would receive.
+    pub task: &'a Task,
+    /// Live input-queue occupancy I_n.
+    pub input_len: usize,
+    /// Live output-queue occupancy O_n.
+    pub output_len: usize,
+    /// This worker's per-task compute-delay estimate Γ_n, seconds.
+    pub gamma_s: f64,
+    /// Active one-hop neighbors in canonical (topology) order, each with
+    /// the freshest summary: the last gossiped one (with `d_nm_s` filled
+    /// from the transfer estimator) or the optimistic default for peers
+    /// never heard from.
+    pub candidates: &'a [(usize, NeighborSummary)],
+    /// This node's next-hop row (`next_hop[dest]`) from the run's routing
+    /// table, for policies that steer beyond the one-hop horizon.
+    pub next_hop: &'a [Option<usize>],
+}
+
+/// This worker's own state, handed to [`OffloadPolicy::annotate`] when an
+/// outgoing gossip summary is built.
+pub struct LocalState<'a> {
+    pub id: usize,
+    pub now: f64,
+    pub input_len: usize,
+    pub output_len: usize,
+    pub gamma_s: f64,
+    /// Read-only view of the input discipline (per-class occupancy,
+    /// earliest deadline) for policies that gossip queue detail.
+    pub input: &'a dyn QueueDiscipline,
+    /// Number of traffic classes the run configures.
+    pub num_classes: u8,
+}
+
+// ---------------------------------------------------------------------------
+// The three traits
+// ---------------------------------------------------------------------------
+
+/// Alg. 1 seam: decide what happens to a task whose stage just computed.
+pub trait ExitPolicy: Send + std::fmt::Debug {
+    fn name(&self) -> &'static str;
+    fn decide(&mut self, ctx: &ExitCtx) -> ExitDecision;
+}
+
+/// Alg. 2 seam: pick an offload target for the head-of-line output task,
+/// and own the gossip fields the decision consumes.
+pub trait OffloadPolicy: Send + std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// A neighbor's gossiped summary arrived: absorb whatever this policy
+    /// tracks (region tables, slack views, ...). Called before the summary
+    /// is stored as the neighbor's current view.
+    fn observe(&mut self, _from: usize, _summary: &NeighborSummary, _now: f64) {}
+
+    /// Contribute policy-specific fields to this worker's outgoing
+    /// summary. The base fields are already filled; anything added here is
+    /// charged on the wire by encoded size.
+    fn annotate(&mut self, _summary: &mut NeighborSummary, _local: &LocalState<'_>) {}
+
+    /// A peer churned out: drop any state tracked about it.
+    fn forget(&mut self, _node: usize) {}
+
+    /// Pick the neighbor to send the head-of-line task to, or `None` to
+    /// keep it queued. `rng` is the core's seeded per-worker stream — the
+    /// only randomness a policy may use.
+    fn choose(&mut self, ctx: &OffloadCtx<'_>, rng: &mut Pcg64) -> Option<usize>;
+}
+
+/// Algs 3/4 seam: one adaptation step per tick at an admitting source.
+pub trait AdaptPolicy: Send + std::fmt::Debug {
+    fn name(&self) -> &'static str;
+
+    /// One step from the source's queue occupancy I_n + O_n.
+    fn update(&mut self, queue_total: usize);
+
+    /// Current interarrival time μ, if this policy adapts the rate.
+    fn mu_s(&self) -> Option<f64>;
+
+    /// Current early-exit threshold T_e, if this policy adapts it.
+    fn t_e(&self) -> Option<f64>;
+}
+
+// ---------------------------------------------------------------------------
+// Config surface
+// ---------------------------------------------------------------------------
+
+/// Which exit policy the run uses (TOML `[policy] exit`, CLI
+/// `--exit-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExitKind {
+    /// The paper's Alg. 1 (default).
+    Alg1,
+    /// Alg. 1 with the offload branch disabled: continuing tasks always
+    /// stay local (ablation: what is offloading worth?).
+    LocalOnly,
+}
+
+/// Which offload policy the run uses (TOML `[policy] offload` or the
+/// legacy top-level `offload_policy`, CLI `--offload-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffloadKind {
+    /// The paper's Alg. 2 over a shuffled one-hop scan (default).
+    Alg2,
+    /// Alg. 2 without the probabilistic branch.
+    Deterministic,
+    /// Queue-length gate only.
+    QueueOnly,
+    /// Push to a random neighbor regardless of state.
+    RoundRobin,
+    /// Offload by remaining deadline slack vs. remote wait.
+    DeadlineAware,
+    /// Alg. 2 first, then push toward remote under-loaded regions through
+    /// the next-hop table.
+    MultiHop,
+}
+
+/// Which adaptation policy sources run (TOML `[policy] adapt`). The
+/// admission mode decides *what* is adapted (μ vs. T_e); the kind decides
+/// *how*.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdaptKind {
+    /// The paper's AIMD-style Algs 3/4 (the only kind today; the seam is
+    /// what matters).
+    Aimd,
+}
+
+/// The run's policy selection, consumed by `WorkerCore` at construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PolicyConfig {
+    pub exit: ExitKind,
+    pub offload: OffloadKind,
+    pub adapt: AdaptKind,
+}
+
+impl Default for PolicyConfig {
+    /// The paper's algorithms, exactly.
+    fn default() -> PolicyConfig {
+        PolicyConfig { exit: ExitKind::Alg1, offload: OffloadKind::Alg2, adapt: AdaptKind::Aimd }
+    }
+}
+
+impl PolicyConfig {
+    pub fn parse_exit(name: &str) -> Result<ExitKind> {
+        Ok(match name {
+            "alg1" => ExitKind::Alg1,
+            "local-only" => ExitKind::LocalOnly,
+            other => bail!("unknown exit policy {other:?} (alg1|local-only)"),
+        })
+    }
+
+    pub fn parse_offload(name: &str) -> Result<OffloadKind> {
+        Ok(match name {
+            "alg2" => OffloadKind::Alg2,
+            "deterministic" => OffloadKind::Deterministic,
+            "queue-only" => OffloadKind::QueueOnly,
+            "round-robin" => OffloadKind::RoundRobin,
+            "deadline-aware" => OffloadKind::DeadlineAware,
+            "multi-hop" => OffloadKind::MultiHop,
+            other => bail!(
+                "unknown offload policy {other:?} \
+                 (alg2|deterministic|queue-only|round-robin|deadline-aware|multi-hop)"
+            ),
+        })
+    }
+
+    pub fn parse_adapt(name: &str) -> Result<AdaptKind> {
+        Ok(match name {
+            "aimd" => AdaptKind::Aimd,
+            other => bail!("unknown adapt policy {other:?} (aimd)"),
+        })
+    }
+
+    /// Build the exit policy object for one worker.
+    pub fn build_exit(&self) -> Box<dyn ExitPolicy> {
+        match self.exit {
+            ExitKind::Alg1 => Box::new(BaselineExit),
+            ExitKind::LocalOnly => Box::new(LocalOnlyExit),
+        }
+    }
+
+    /// Build the offload policy object for worker `id`. `num_workers` is
+    /// the topology size (multi-hop policies track per-node state);
+    /// routing arrives per decision via [`OffloadCtx::next_hop`].
+    pub fn build_offload(&self, id: usize, num_workers: usize) -> Box<dyn OffloadPolicy> {
+        match self.offload {
+            OffloadKind::Alg2 => Box::new(BaselineOffload::new(OffloadRule::Alg2)),
+            OffloadKind::Deterministic => {
+                Box::new(BaselineOffload::new(OffloadRule::Deterministic))
+            }
+            OffloadKind::QueueOnly => Box::new(BaselineOffload::new(OffloadRule::QueueOnly)),
+            OffloadKind::RoundRobin => Box::new(BaselineOffload::new(OffloadRule::RoundRobin)),
+            OffloadKind::DeadlineAware => Box::new(DeadlineAware::new()),
+            OffloadKind::MultiHop => Box::new(MultiHop::new(id, num_workers)),
+        }
+    }
+
+    /// Build the adaptation policy for an admitting source, per the run's
+    /// admission mode (`None` for modes that adapt nothing).
+    pub fn build_adapt(
+        &self,
+        admission: &crate::coordinator::config::AdmissionMode,
+        adapt: AdaptConfig,
+    ) -> Option<Box<dyn AdaptPolicy>> {
+        use crate::coordinator::config::AdmissionMode;
+        match (self.adapt, admission) {
+            (AdaptKind::Aimd, AdmissionMode::AdaptiveRate { initial_mu_s, .. }) => {
+                Some(Box::new(BaselineAdapt::rate(adapt, *initial_mu_s)))
+            }
+            (AdaptKind::Aimd, AdmissionMode::AdaptiveThreshold { initial_t_e, t_e_min, .. }) => {
+                Some(Box::new(BaselineAdapt::threshold(
+                    adapt,
+                    *initial_t_e as f64,
+                    *t_e_min as f64,
+                )))
+            }
+            (AdaptKind::Aimd, AdmissionMode::Fixed { .. }) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_paper() {
+        let p = PolicyConfig::default();
+        assert_eq!(p.exit, ExitKind::Alg1);
+        assert_eq!(p.offload, OffloadKind::Alg2);
+        assert_eq!(p.adapt, AdaptKind::Aimd);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(PolicyConfig::parse_exit("alg1").unwrap(), ExitKind::Alg1);
+        assert_eq!(PolicyConfig::parse_exit("local-only").unwrap(), ExitKind::LocalOnly);
+        assert!(PolicyConfig::parse_exit("nope").is_err());
+        for (name, kind) in [
+            ("alg2", OffloadKind::Alg2),
+            ("deterministic", OffloadKind::Deterministic),
+            ("queue-only", OffloadKind::QueueOnly),
+            ("round-robin", OffloadKind::RoundRobin),
+            ("deadline-aware", OffloadKind::DeadlineAware),
+            ("multi-hop", OffloadKind::MultiHop),
+        ] {
+            assert_eq!(PolicyConfig::parse_offload(name).unwrap(), kind);
+        }
+        assert!(PolicyConfig::parse_offload("warp").is_err());
+        assert_eq!(PolicyConfig::parse_adapt("aimd").unwrap(), AdaptKind::Aimd);
+        assert!(PolicyConfig::parse_adapt("pid").is_err());
+    }
+
+    #[test]
+    fn builders_match_kinds() {
+        let p = PolicyConfig::default();
+        assert_eq!(p.build_exit().name(), "alg1");
+        assert_eq!(p.build_offload(0, 2).name(), "alg2");
+        let p = PolicyConfig {
+            exit: ExitKind::LocalOnly,
+            offload: OffloadKind::MultiHop,
+            adapt: AdaptKind::Aimd,
+        };
+        assert_eq!(p.build_exit().name(), "local-only");
+        assert_eq!(p.build_offload(0, 2).name(), "multi-hop");
+    }
+}

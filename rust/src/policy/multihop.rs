@@ -1,0 +1,305 @@
+//! Multi-hop offloading: push work toward remote under-loaded *regions*,
+//! not just direct neighbors.
+//!
+//! The paper's Alg. 2 (and the ROADMAP follow-on it left open) offloads
+//! one hop: a loaded worker whose direct neighbors are also loaded stalls
+//! even when an idle region sits two hops away — the exact shape of the
+//! `2-ring-bridge` topology, where ring A saturates while ring B idles
+//! behind the bridge. This policy closes the gap with a small
+//! distance-vector protocol over the existing gossip:
+//!
+//! * every summary carries a `region` table — the freshest known
+//!   `(node, input_len, hops)` for nodes beyond the sender — which
+//!   receivers merge (closer entries win; equal-hop entries refresh), so
+//!   load information diffuses one gossip period per hop exactly like the
+//!   adapted T_e does;
+//! * `choose` first runs the paper's Alg. 2 scan over direct neighbors
+//!   (same shuffle, same rule — one-hop behaviour is preserved when a
+//!   direct target exists); when nobody accepts, it looks up the least
+//!   loaded *remote* node it knows of and, if that node is meaningfully
+//!   idler than every direct neighbor, hands the task to the
+//!   [`crate::routing::RoutingTable`] next hop toward it.
+//!
+//! The relayed task arrives at the next hop as ordinary wire traffic: the
+//! hop either computes it or — being itself loaded and running the same
+//! policy — pushes it further toward the idle region. Work therefore
+//! *diffuses* along shortest paths without any new message type, and a
+//! stale region entry costs at most one misdirected hop.
+
+use super::alg::OffloadRule;
+use super::baseline::BaselineOffload;
+use super::summary::{NeighborSummary, RegionLoad};
+use super::{LocalState, OffloadCtx, OffloadPolicy};
+use crate::util::rng::Pcg64;
+
+/// Freshest knowledge about one remote node's load.
+#[derive(Debug, Clone, Copy)]
+struct Known {
+    input_len: usize,
+    hops: u8,
+    heard_at: f64,
+}
+
+/// Region entries older than this are ignored as offload evidence (they
+/// keep gossiping until refreshed, but a long-silent node may have drained
+/// or filled long ago). Measured in seconds of driver time.
+const STALE_S: f64 = 2.0;
+/// Entries are not propagated further than this many hops — on the
+/// paper-scale topologies (n <= 6) every node is reachable well within it.
+const MAX_HOPS: u8 = 4;
+/// A remote node must be at least this many tasks idler than both our
+/// input backlog and the least-loaded direct neighbor before we commit a
+/// task to a multi-hop journey.
+const REMOTE_MARGIN: usize = 2;
+
+/// Alg. 2 with a multi-hop fallback (see module docs). Routing is read
+/// from [`OffloadCtx::next_hop`] at decision time (not copied at
+/// construction), so a future churn-aware re-route is picked up for free.
+#[derive(Debug)]
+pub struct MultiHop {
+    id: usize,
+    /// Per-node freshest load knowledge (`None` = never heard of it).
+    known: Vec<Option<Known>>,
+    /// The one-hop scan is delegated to the baseline policy so the direct
+    /// behaviour (and its RNG discipline) cannot drift from Alg. 2.
+    direct: BaselineOffload,
+}
+
+impl MultiHop {
+    pub fn new(id: usize, num_workers: usize) -> MultiHop {
+        MultiHop {
+            id,
+            known: vec![None; num_workers],
+            direct: BaselineOffload::new(OffloadRule::Alg2),
+        }
+    }
+
+    fn merge(&mut self, node: usize, input_len: usize, hops: u8, now: f64) {
+        if node == self.id || node >= self.known.len() || hops > MAX_HOPS {
+            return;
+        }
+        let slot = &mut self.known[node];
+        // Closer knowledge wins; equal-or-closer refreshes.
+        let adopt = match *slot {
+            Some(k) => hops <= k.hops || now - k.heard_at > STALE_S,
+            None => true,
+        };
+        if adopt {
+            *slot = Some(Known { input_len, hops, heard_at: now });
+        }
+    }
+}
+
+impl OffloadPolicy for MultiHop {
+    fn name(&self) -> &'static str {
+        "multi-hop"
+    }
+
+    fn observe(&mut self, from: usize, summary: &NeighborSummary, now: f64) {
+        // The sender's own load is one hop away; its region table one more.
+        self.merge(from, summary.input_len, 1, now);
+        for &e in &summary.region {
+            self.merge(e.node, e.input_len, e.hops.saturating_add(1), now);
+        }
+    }
+
+    fn annotate(&mut self, summary: &mut NeighborSummary, local: &LocalState<'_>) {
+        // Gossip everything fresh we know about nodes other than ourself
+        // (receivers learn our own load from the base field).
+        summary.region = self
+            .known
+            .iter()
+            .enumerate()
+            .filter_map(|(node, k)| {
+                k.filter(|k| local.now - k.heard_at <= STALE_S && k.hops < MAX_HOPS).map(
+                    |k| RegionLoad { node, input_len: k.input_len, hops: k.hops },
+                )
+            })
+            .collect();
+    }
+
+    fn forget(&mut self, node: usize) {
+        if let Some(slot) = self.known.get_mut(node) {
+            *slot = None;
+        }
+    }
+
+    fn choose(&mut self, ctx: &OffloadCtx<'_>, rng: &mut Pcg64) -> Option<usize> {
+        // One-hop first: the paper's scan, verbatim.
+        if let Some(target) = self.direct.choose(ctx, rng) {
+            return Some(target);
+        }
+        // No direct neighbor accepted. Look for a remote node meaningfully
+        // idler than here — and than every direct neighbor, else the
+        // one-hop scan would have been the cheaper route.
+        let direct_min =
+            ctx.candidates.iter().map(|(_, s)| s.input_len).min().unwrap_or(usize::MAX);
+        let best = self
+            .known
+            .iter()
+            .enumerate()
+            .filter_map(|(node, k)| k.map(|k| (node, k)))
+            // Fresh knowledge about a node beyond the one-hop horizon
+            // (hops < 2 means a direct neighbor Alg. 2 already saw) that
+            // we can actually steer toward through an active neighbor.
+            .filter(|&(node, k)| {
+                k.hops >= 2
+                    && ctx.now - k.heard_at <= STALE_S
+                    && ctx
+                        .next_hop
+                        .get(node)
+                        .copied()
+                        .flatten()
+                        .map(|hop| ctx.candidates.iter().any(|(m, _)| *m == hop))
+                        .unwrap_or(false)
+            })
+            .min_by_key(|&(_, k)| k.input_len);
+        let (remote, entry) = best?;
+        let load = entry.input_len;
+        // Pressure signal: the *input backlog*, not the output queue —
+        // Alg. 2's `O_n > I_m` gate stalls precisely because O_n is capped
+        // near T_O while the real overload piles up in I_n; the multi-hop
+        // fallback exists to act on that backlog.
+        if load + REMOTE_MARGIN > ctx.input_len || load + REMOTE_MARGIN > direct_min {
+            return None;
+        }
+        let hop = ctx.next_hop[remote].expect("checked above");
+        let (_, hop_summary) =
+            ctx.candidates.iter().find(|(m, _)| *m == hop).expect("checked above");
+        // The journey must still beat waiting here: estimate it as one
+        // relay-link transfer per hop plus the destination's service
+        // backlog (gamma of the relay stands in for the destination's —
+        // the region table does not gossip per-node Γ).
+        let journey = entry.hops as f64 * hop_summary.d_nm_s
+            + (load as f64 + 1.0) * hop_summary.gamma_s;
+        let local_wait = (ctx.input_len as f64 + 1.0) * ctx.gamma_s;
+        if journey < local_wait {
+            // Optimistic bump until the next gossip refresh (the same
+            // discipline the core applies to direct-neighbor views), so a
+            // stale "idle" entry cannot absorb an unbounded flood.
+            if let Some(k) = self.known[remote].as_mut() {
+                k.input_len += 1;
+            }
+            Some(hop)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::Task;
+
+    /// line-4 routing row for node 0: everything right goes through 1.
+    fn next_hop_0() -> Vec<Option<usize>> {
+        vec![None, Some(1), Some(1), Some(1)]
+    }
+
+    fn summary(input_len: usize) -> NeighborSummary {
+        let mut s = NeighborSummary::base(input_len, 0.01, 0.9);
+        s.d_nm_s = 0.005;
+        s
+    }
+
+    fn ctx<'a>(
+        task: &'a Task,
+        input_len: usize,
+        output_len: usize,
+        candidates: &'a [(usize, NeighborSummary)],
+        next_hop: &'a [Option<usize>],
+    ) -> OffloadCtx<'a> {
+        OffloadCtx {
+            now: 1.0,
+            task,
+            input_len,
+            output_len,
+            gamma_s: 0.01,
+            candidates,
+            next_hop,
+        }
+    }
+
+    #[test]
+    fn region_knowledge_diffuses_and_prefers_closer_entries() {
+        let mut p = MultiHop::new(0, 4);
+        let mut s = summary(3);
+        s.region = vec![
+            RegionLoad { node: 2, input_len: 7, hops: 1 },
+            RegionLoad { node: 3, input_len: 0, hops: 2 },
+        ];
+        p.observe(1, &s, 1.0);
+        assert_eq!(p.known[1].unwrap().input_len, 3);
+        assert_eq!(p.known[1].unwrap().hops, 1);
+        assert_eq!(p.known[2].unwrap().hops, 2);
+        assert_eq!(p.known[3].unwrap().hops, 3);
+        // A farther (staler-path) report of node 2 does not overwrite the
+        // closer one...
+        let mut far = summary(1);
+        far.region = vec![RegionLoad { node: 2, input_len: 99, hops: 3 }];
+        p.observe(1, &far, 1.5);
+        assert_eq!(p.known[2].unwrap().input_len, 7, "closer entry wins");
+        // ...until the closer one goes stale.
+        p.observe(1, &far, 1.5 + STALE_S + 1.0);
+        assert_eq!(p.known[2].unwrap().input_len, 99, "stale entries are replaced");
+    }
+
+    #[test]
+    fn annotate_gossips_fresh_knowledge_only() {
+        let mut p = MultiHop::new(0, 4);
+        p.merge(2, 5, 1, 0.0);
+        p.merge(3, 1, 2, 10.0);
+        let q = crate::sched::Fifo::new();
+        let local = LocalState {
+            id: 0,
+            now: 10.5,
+            input_len: 0,
+            output_len: 0,
+            gamma_s: 0.01,
+            input: &q,
+            num_classes: 1,
+        };
+        let mut s = NeighborSummary::base(0, 0.01, 0.9);
+        p.annotate(&mut s, &local);
+        assert_eq!(s.region.len(), 1, "the entry from t=0 is stale at t=10.5");
+        assert_eq!(s.region[0].node, 3);
+        assert_eq!(s.encoded_bytes(), 32 + 8);
+    }
+
+    #[test]
+    fn falls_back_to_pushing_toward_an_idle_remote_region() {
+        let mut p = MultiHop::new(0, 4);
+        // Direct neighbor 1 is drowning (Alg. 2's gate refuses: O_n = 5
+        // <= I_m = 30) while the real overload — 40 tasks — sits in the
+        // *input* queue; node 3 two hops out is idle.
+        p.merge(3, 0, 2, 1.0);
+        let task = Task::initial(1, 0, None, 0.0);
+        let cands = vec![(1usize, summary(30))];
+        let nh = next_hop_0();
+        let got = p.choose(&ctx(&task, 40, 5, &cands, &nh), &mut Pcg64::new(1, 0));
+        assert_eq!(got, Some(1), "task heads one hop toward idle node 3");
+    }
+
+    #[test]
+    fn stays_put_when_the_remote_region_is_no_better() {
+        let mut p = MultiHop::new(0, 4);
+        p.merge(3, 45, 2, 1.0); // remote more loaded than our backlog
+        let task = Task::initial(1, 0, None, 0.0);
+        let cands = vec![(1usize, summary(30))];
+        let nh = next_hop_0();
+        let got = p.choose(&ctx(&task, 40, 5, &cands, &nh), &mut Pcg64::new(1, 0));
+        assert_eq!(got, None);
+    }
+
+    #[test]
+    fn forget_drops_churned_peers() {
+        let mut p = MultiHop::new(0, 4);
+        p.merge(3, 0, 2, 1.0);
+        p.forget(3);
+        let task = Task::initial(1, 0, None, 0.0);
+        let cands = vec![(1usize, summary(30))];
+        let nh = next_hop_0();
+        assert_eq!(p.choose(&ctx(&task, 40, 5, &cands, &nh), &mut Pcg64::new(1, 0)), None);
+    }
+}

@@ -1,0 +1,177 @@
+//! Extensible gossiped worker state — the wire form of "what worker n
+//! knows about neighbor m".
+//!
+//! The paper's gossip carries exactly `{I_m, Γ_m}` (§IV.A). Policies need
+//! more: deadline-aware offloading wants the neighbor's earliest-deadline
+//! slack and per-class occupancy, multi-hop offloading wants a transitive
+//! view of load *beyond* the one-hop horizon. [`NeighborSummary`] is the
+//! open container both ride in: the base fields are always present (and
+//! encode to the seed's fixed 32-byte state message), optional fields are
+//! contributed by the run's [`super::OffloadPolicy`] via
+//! [`super::OffloadPolicy::annotate`], and the wire charge is the *actual*
+//! encoded size ([`NeighborSummary::encoded_bytes`]) — both drivers carry
+//! gossip as a real transfer at that size (virtual link delay under DES,
+//! wallclock framing under the realtime transport) and count it into
+//! per-worker `gossip_bytes`, replacing the old constant-size, cost-free
+//! accounting that under-charged any summary richer than the paper's.
+
+/// Fixed wire size of the base fields (I_m + Γ_m + T_e + framing) —
+/// identical to the seed's `STATE_BYTES`, so a run that gossips nothing
+/// but the paper's state charges exactly what the seed charged.
+pub const BASE_SUMMARY_BYTES: usize = 32;
+/// Wire bytes per per-class occupancy entry (u32).
+const PER_CLASS_ENTRY_BYTES: usize = 4;
+/// Wire bytes for the earliest-deadline slack field (f64).
+const SLACK_BYTES: usize = 8;
+/// Wire bytes per transitive region-load entry (node u16 + load u32 +
+/// hops u8 + pad).
+const REGION_ENTRY_BYTES: usize = 8;
+
+/// One node's load as seen (possibly several hops away) by a gossiping
+/// worker: the payload of the multi-hop region table.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RegionLoad {
+    /// Topology node the entry describes.
+    pub node: usize,
+    /// That node's input-queue length when the entry was minted.
+    pub input_len: usize,
+    /// Gossip hops the entry has travelled (0 = the node itself minted it).
+    pub hops: u8,
+}
+
+/// Gossiped neighbor state: the paper's base fields plus whatever the
+/// run's policies contribute. `d_nm_s` is *receiver-local* (the transfer
+/// estimate to the sender) and never travels the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NeighborSummary {
+    /// Neighbor's input queue size I_m.
+    pub input_len: usize,
+    /// Neighbor's per-task compute delay Γ_m, seconds.
+    pub gamma_s: f64,
+    /// Sender's current early-exit threshold T_e (Alg. 4 line 9 rides the
+    /// same gossip in both drivers).
+    pub t_e: f32,
+    /// Measured transfer delay D_nm to this neighbor, seconds. Filled by
+    /// the *receiver* from its own estimator — not encoded.
+    pub d_nm_s: f64,
+    /// Per-class input occupancy (empty unless a class-aware policy
+    /// contributes it).
+    pub per_class_input: Vec<u32>,
+    /// Slack of the earliest deadline queued at the sender, seconds
+    /// (negative = the sender is already missing deadlines). Contributed
+    /// by deadline-aware policies.
+    pub min_slack_s: Option<f64>,
+    /// Transitively aggregated load of nodes *beyond* the sender, for
+    /// multi-hop offloading. Entries describe nodes other than the sender
+    /// (whose own load is `input_len`).
+    pub region: Vec<RegionLoad>,
+}
+
+impl NeighborSummary {
+    /// A summary carrying only the paper's base fields.
+    pub fn base(input_len: usize, gamma_s: f64, t_e: f32) -> NeighborSummary {
+        NeighborSummary {
+            input_len,
+            gamma_s,
+            t_e,
+            d_nm_s: 0.0,
+            per_class_input: Vec::new(),
+            min_slack_s: None,
+            region: Vec::new(),
+        }
+    }
+
+    /// Actual encoded size on the wire. This is what both drivers charge:
+    /// the realtime transport frames the link delay with it and the cores
+    /// count it into `gossip_bytes`, so a policy that inflates the summary
+    /// pays for the inflation instead of hiding behind a constant.
+    pub fn encoded_bytes(&self) -> usize {
+        BASE_SUMMARY_BYTES
+            + self.per_class_input.len() * PER_CLASS_ENTRY_BYTES
+            + self.min_slack_s.map_or(0, |_| SLACK_BYTES)
+            + self.region.len() * REGION_ENTRY_BYTES
+    }
+
+    /// Overwrite `self` with `src`, reusing the existing `Vec`
+    /// allocations (the offload hot path refreshes a retained candidate
+    /// buffer once per scan; a plain `clone` would re-allocate the
+    /// per-class and region tables every time).
+    pub fn copy_from(&mut self, src: &NeighborSummary) {
+        self.input_len = src.input_len;
+        self.gamma_s = src.gamma_s;
+        self.t_e = src.t_e;
+        self.d_nm_s = src.d_nm_s;
+        self.per_class_input.clone_from(&src.per_class_input);
+        self.min_slack_s = src.min_slack_s;
+        self.region.clone_from(&src.region);
+    }
+
+    /// The base-field view the pure Alg. 2 functions consume.
+    pub fn view(&self) -> super::alg::NeighborView {
+        super::alg::NeighborView {
+            input_len: self.input_len,
+            gamma_s: self.gamma_s,
+            d_nm_s: self.d_nm_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_summary_encodes_to_seed_state_bytes() {
+        let s = NeighborSummary::base(5, 0.01, 0.9);
+        assert_eq!(s.encoded_bytes(), 32, "paper-only gossip costs what the seed charged");
+    }
+
+    #[test]
+    fn optional_fields_grow_the_wire_charge() {
+        let mut s = NeighborSummary::base(5, 0.01, 0.9);
+        s.per_class_input = vec![3, 2];
+        assert_eq!(s.encoded_bytes(), 32 + 8);
+        s.min_slack_s = Some(0.04);
+        assert_eq!(s.encoded_bytes(), 32 + 8 + 8);
+        s.region = vec![
+            RegionLoad { node: 3, input_len: 0, hops: 1 },
+            RegionLoad { node: 4, input_len: 7, hops: 2 },
+        ];
+        assert_eq!(s.encoded_bytes(), 32 + 8 + 8 + 16);
+    }
+
+    #[test]
+    fn copy_from_mirrors_clone() {
+        let mut src = NeighborSummary::base(5, 0.02, 0.8);
+        src.d_nm_s = 0.004;
+        src.per_class_input = vec![3, 2];
+        src.min_slack_s = Some(0.1);
+        src.region = vec![RegionLoad { node: 2, input_len: 9, hops: 1 }];
+        let mut dst = NeighborSummary::base(0, 0.01, 0.9);
+        dst.per_class_input = vec![7; 8]; // stale content must be replaced
+        dst.copy_from(&src);
+        assert_eq!(dst, src);
+        // And copying a lean summary over a rich one trims it back.
+        let lean = NeighborSummary::base(1, 0.03, 0.7);
+        dst.copy_from(&lean);
+        assert_eq!(dst, lean);
+    }
+
+    #[test]
+    fn receiver_local_delay_is_not_charged() {
+        let mut a = NeighborSummary::base(5, 0.01, 0.9);
+        let bytes = a.encoded_bytes();
+        a.d_nm_s = 0.25;
+        assert_eq!(a.encoded_bytes(), bytes, "d_nm_s never travels the wire");
+    }
+
+    #[test]
+    fn view_projects_base_fields() {
+        let mut s = NeighborSummary::base(7, 0.02, 0.8);
+        s.d_nm_s = 0.005;
+        let v = s.view();
+        assert_eq!(v.input_len, 7);
+        assert!((v.gamma_s - 0.02).abs() < 1e-12);
+        assert!((v.d_nm_s - 0.005).abs() < 1e-12);
+    }
+}

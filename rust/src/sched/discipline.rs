@@ -57,6 +57,17 @@ pub trait QueueDiscipline: std::fmt::Debug + Send {
         &[]
     }
 
+    /// Tasks served (popped) per class; empty for disciplines that do not
+    /// track it. Weighted-fair disciplines expose their service split here
+    /// so the report can show what each class actually received.
+    fn served_per_class(&self) -> &[u64] {
+        &[]
+    }
+
+    /// Earliest absolute deadline among queued tasks (`None` when empty).
+    /// Cold path: deadline-aware gossip reads it once per gossip tick.
+    fn earliest_deadline(&self) -> Option<f64>;
+
     /// Remove every queued task, in arrival order. Peak/total accounting
     /// is preserved (the drain is churn bookkeeping, not service).
     fn drain_all(&mut self) -> Vec<Task>;
@@ -133,6 +144,10 @@ impl QueueDiscipline for Fifo {
 
     fn class_len(&self, class: u8) -> usize {
         self.q.iter().filter(|t| t.class == class).count()
+    }
+
+    fn earliest_deadline(&self) -> Option<f64> {
+        self.q.iter().map(|t| t.deadline).min_by(f64::total_cmp)
     }
 
     fn drain_all(&mut self) -> Vec<Task> {

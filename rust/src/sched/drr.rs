@@ -1,0 +1,313 @@
+//! Deficit round robin: weighted-fair service across traffic classes.
+//!
+//! [`super::StrictPriority`] keeps class 0 fast by starving everyone else —
+//! under sustained class-0 overload, bulk classes never run (the ROADMAP
+//! follow-on this discipline closes). DRR instead gives each class a
+//! *quantum* of service credit per rotation: a class with quantum 2 is
+//! served twice as often as a class with quantum 1, every class with a
+//! positive quantum is served eventually, and within a class service is
+//! FIFO. Quanta come from [`super::SchedConfig::class_quantum`] (weights,
+//! not priorities — they need not sum to anything).
+//!
+//! The per-class deficit counters are the scheduler's live state; the
+//! per-class *served* counters ([`QueueDiscipline::served_per_class`])
+//! surface the realized service split in the run report, so a
+//! mis-weighted run is visible instead of inferred.
+
+use std::collections::VecDeque;
+
+use super::discipline::QueueDiscipline;
+use crate::coordinator::task::Task;
+
+/// Deficit-round-robin across N class lanes, FIFO within a lane. Tasks
+/// with `class >= num_classes` land in the last lane (same clamp rule as
+/// [`super::StrictPriority`]).
+#[derive(Debug)]
+pub struct Drr {
+    lanes: Vec<VecDeque<(u64, Task)>>,
+    /// Service credit added to a lane each time the rotation passes it.
+    quantum: Vec<f64>,
+    /// Accumulated unspent credit per lane (one pop costs 1.0).
+    deficit: Vec<f64>,
+    /// Lane the rotation currently serves.
+    cursor: usize,
+    seq: u64,
+    len: usize,
+    peak: usize,
+    total_enqueued: u64,
+    /// Tasks actually popped per lane (report surface).
+    served: Vec<u64>,
+}
+
+impl Drr {
+    /// One lane per class; `quantum` must have one positive entry per
+    /// class (validated by `SchedConfig::validate`).
+    pub fn new(num_classes: u8, quantum: Vec<f64>) -> Drr {
+        let n = num_classes.max(1) as usize;
+        let mut quantum = quantum;
+        quantum.resize(n, quantum.last().copied().unwrap_or(1.0));
+        Drr {
+            lanes: (0..n).map(|_| VecDeque::new()).collect(),
+            quantum,
+            deficit: vec![0.0; n],
+            cursor: 0,
+            seq: 0,
+            len: 0,
+            peak: 0,
+            total_enqueued: 0,
+            served: vec![0; n],
+        }
+    }
+
+    fn lane_of(&self, class: u8) -> usize {
+        (class as usize).min(self.lanes.len() - 1)
+    }
+
+    fn advance(&mut self) {
+        self.cursor = (self.cursor + 1) % self.lanes.len();
+    }
+}
+
+impl QueueDiscipline for Drr {
+    fn push(&mut self, t: Task) {
+        self.seq += 1;
+        let lane = self.lane_of(t.class);
+        self.lanes[lane].push_back((self.seq, t));
+        self.len += 1;
+        self.peak = self.peak.max(self.len);
+        self.total_enqueued += 1;
+    }
+
+    fn pop_next(&mut self, _now: f64) -> Option<Task> {
+        if self.len == 0 {
+            return None;
+        }
+        // Rotate, feeding each occupied lane its quantum, until one can
+        // afford a pop. Terminates: some lane is occupied and its deficit
+        // grows by a positive quantum every rotation.
+        loop {
+            let lane = self.cursor;
+            if self.lanes[lane].is_empty() {
+                // An idle lane keeps no credit (classic DRR: deficit
+                // resets when the lane empties, so idle classes cannot
+                // hoard service for later bursts).
+                self.deficit[lane] = 0.0;
+                self.advance();
+                continue;
+            }
+            if self.deficit[lane] >= 1.0 {
+                self.deficit[lane] -= 1.0;
+                let (_, t) = self.lanes[lane].pop_front().expect("non-empty lane");
+                self.len -= 1;
+                self.served[lane] += 1;
+                if self.lanes[lane].is_empty() {
+                    self.deficit[lane] = 0.0;
+                    self.advance();
+                }
+                return Some(t);
+            }
+            self.deficit[lane] += self.quantum[lane];
+            self.advance();
+        }
+    }
+
+    fn peek(&self) -> Option<&Task> {
+        // The task the rotation would serve next: walk from the cursor,
+        // simulating (without mutating) the deficit top-ups.
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.lanes.len();
+        let mut deficit = self.deficit.clone();
+        let mut at = self.cursor;
+        loop {
+            if let Some((_, t)) = self.lanes[at].front() {
+                if deficit[at] >= 1.0 {
+                    return Some(t);
+                }
+                deficit[at] += self.quantum[at];
+            }
+            at = (at + 1) % n;
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn peak(&self) -> usize {
+        self.peak
+    }
+
+    fn total_enqueued(&self) -> u64 {
+        self.total_enqueued
+    }
+
+    fn class_len(&self, class: u8) -> usize {
+        if (class as usize) < self.lanes.len() {
+            self.lanes[class as usize].iter().filter(|(_, t)| t.class == class).count()
+        } else {
+            0
+        }
+    }
+
+    fn served_per_class(&self) -> &[u64] {
+        &self.served
+    }
+
+    fn earliest_deadline(&self) -> Option<f64> {
+        self.lanes
+            .iter()
+            .flat_map(|l| l.iter().map(|(_, t)| t.deadline))
+            .min_by(f64::total_cmp)
+    }
+
+    fn drain_all(&mut self) -> Vec<Task> {
+        let mut all: Vec<(u64, Task)> =
+            self.lanes.iter_mut().flat_map(|l| l.drain(..)).collect();
+        all.sort_by_key(|(seq, _)| *seq);
+        self.len = 0;
+        self.deficit.iter_mut().for_each(|d| *d = 0.0);
+        self.cursor = 0;
+        all.into_iter().map(|(_, t)| t).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: u64, class: u8) -> Task {
+        Task { class, ..Task::initial(id, id as usize, None, 0.0) }
+    }
+
+    fn service_order(q: &mut Drr, n: usize) -> Vec<u8> {
+        (0..n).filter_map(|_| q.pop_next(0.0)).map(|t| t.class).collect()
+    }
+
+    #[test]
+    fn equal_quanta_alternate_between_backlogged_classes() {
+        let mut q = Drr::new(2, vec![1.0, 1.0]);
+        for i in 0..4 {
+            q.push(task(i, 0));
+            q.push(task(10 + i, 1));
+        }
+        let order = service_order(&mut q, 8);
+        assert_eq!(order, vec![0, 1, 0, 1, 0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn weighted_quanta_split_service_proportionally() {
+        let mut q = Drr::new(2, vec![2.0, 1.0]);
+        for i in 0..20 {
+            q.push(task(i, 0));
+            q.push(task(100 + i, 1));
+        }
+        let order = service_order(&mut q, 12);
+        let c0 = order.iter().filter(|&&c| c == 0).count();
+        let c1 = order.iter().filter(|&&c| c == 1).count();
+        assert_eq!((c0, c1), (8, 4), "2:1 quanta give a 2:1 service split: {order:?}");
+        assert_eq!(q.served_per_class(), &[8, 4][..]);
+    }
+
+    #[test]
+    fn no_class_starves_unlike_strict_priority() {
+        // A flood of class-0 work with one class-1 task queued behind it:
+        // strict priority would hold the class-1 task until the flood
+        // drains; DRR serves it within one rotation.
+        let mut q = Drr::new(2, vec![1.0, 1.0]);
+        for i in 0..50 {
+            q.push(task(i, 0));
+        }
+        q.push(task(99, 1));
+        let order = service_order(&mut q, 3);
+        assert!(
+            order.contains(&1),
+            "class 1 must be served within the first rotation: {order:?}"
+        );
+    }
+
+    #[test]
+    fn fifo_within_a_class_and_empty_lanes_skip() {
+        let mut q = Drr::new(3, vec![1.0, 1.0, 1.0]);
+        q.push(task(1, 2));
+        q.push(task(2, 2));
+        q.push(task(3, 2));
+        // Only lane 2 is occupied: service is plain FIFO.
+        let ids: Vec<u64> =
+            (0..3).filter_map(|_| q.pop_next(0.0)).map(|t| t.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert!(q.pop_next(0.0).is_none());
+    }
+
+    #[test]
+    fn idle_lanes_do_not_hoard_credit() {
+        let mut q = Drr::new(2, vec![1.0, 1.0]);
+        // Lane 1 idles through many lane-0 pops...
+        for i in 0..10 {
+            q.push(task(i, 0));
+        }
+        for _ in 0..10 {
+            q.pop_next(0.0);
+        }
+        // ...then both backlogs arrive: service must still alternate, not
+        // burst lane 1 on banked credit.
+        for i in 0..4 {
+            q.push(task(20 + i, 0));
+            q.push(task(30 + i, 1));
+        }
+        let order = service_order(&mut q, 4);
+        let c1 = order.iter().filter(|&&c| c == 1).count();
+        assert!(c1 <= 2, "no credit hoarding: {order:?}");
+    }
+
+    #[test]
+    fn peek_matches_pop_without_mutating() {
+        let mut q = Drr::new(2, vec![1.0, 1.0]);
+        q.push(task(1, 1));
+        q.push(task(2, 0));
+        for _ in 0..4 {
+            let peeked = q.peek().map(|t| t.id);
+            let popped = q.pop_next(0.0).map(|t| t.id);
+            assert_eq!(peeked, popped);
+            if popped.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range_classes_into_last_lane() {
+        let mut q = Drr::new(2, vec![1.0, 1.0]);
+        q.push(task(1, 9));
+        assert_eq!(q.class_len(9), 0, "clamped classes report 0 beyond lanes");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_next(0.0).unwrap().id, 1);
+    }
+
+    #[test]
+    fn accounting_and_drain_preserve_invariants() {
+        let mut q = Drr::new(2, vec![1.0, 1.0]);
+        q.push(task(1, 1));
+        q.push(task(2, 0));
+        q.push(task(3, 1));
+        q.pop_next(0.0);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peak(), 3);
+        assert_eq!(q.total_enqueued(), 3);
+        let ids: Vec<u64> = q.drain_all().iter().map(|t| t.id).collect();
+        // Arrival order among the remaining tasks, regardless of lanes.
+        assert!(ids == vec![1, 3] || ids == vec![2, 3], "drain keeps arrival order: {ids:?}");
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.peak(), 3, "drain must not reset peak");
+        assert_eq!(q.total_enqueued(), 3);
+    }
+
+    #[test]
+    fn earliest_deadline_scans_all_lanes() {
+        let mut q = Drr::new(2, vec![1.0, 1.0]);
+        q.push(Task { deadline: 5.0, ..task(1, 0) });
+        q.push(Task { deadline: 2.0, ..task(2, 1) });
+        assert_eq!(q.earliest_deadline(), Some(2.0));
+    }
+}

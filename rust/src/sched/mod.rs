@@ -20,6 +20,11 @@
 //!   with [`DisciplineKind::Edf`]`::drop_late` the discipline ages out
 //!   tasks whose deadline already passed instead of wasting compute on
 //!   them (counted per class in the run report).
+//! * [`Drr`] — deficit round robin: weighted-fair service across classes
+//!   (quantum per class from [`SchedConfig::class_quantum`]), closing the
+//!   starvation hole `StrictPriority` leaves open — bulk classes keep a
+//!   bounded share of service under class-0 overload, and the realized
+//!   split is reported via `served_per_class`.
 //! * [`BatchPolicy`] — lets the core's `poll_next` form a *same-stage*
 //!   batch so one `StartCompute` carries several tasks and the engine runs
 //!   one batched forward per stage. This is the DEFER insight (arXiv
@@ -34,10 +39,12 @@
 
 mod batch;
 mod discipline;
+mod drr;
 mod priority;
 
 pub use batch::BatchPolicy;
 pub use discipline::{Fifo, QueueDiscipline};
+pub use drr::Drr;
 pub use priority::{Edf, StrictPriority};
 
 /// Which queue discipline the worker queues run.
@@ -50,6 +57,9 @@ pub enum DisciplineKind {
     /// Earliest deadline first. `drop_late` discards tasks whose deadline
     /// already passed at pop time (counted, never silently lost).
     Edf { drop_late: bool },
+    /// Deficit round robin: weighted-fair across classes per
+    /// [`SchedConfig::class_quantum`], FIFO within a class.
+    WeightedFair,
 }
 
 /// Scheduling configuration consumed by the `Run` builder / `WorkerCore`.
@@ -63,6 +73,9 @@ pub struct SchedConfig {
     /// deadline `t + class_deadline_s[class]`. Only deadline-aware
     /// disciplines read it. Length equals `num_classes` after `validate`.
     pub class_deadline_s: Vec<f64>,
+    /// Per-class DRR service quantum (weights; only [`Drr`] reads it).
+    /// Length equals `num_classes` after `validate`.
+    pub class_quantum: Vec<f64>,
     pub batch: BatchPolicy,
 }
 
@@ -72,19 +85,22 @@ impl Default for SchedConfig {
             discipline: DisciplineKind::Fifo,
             num_classes: 1,
             class_deadline_s: vec![1.0],
+            class_quantum: vec![1.0],
             batch: BatchPolicy::default(),
         }
     }
 }
 
 impl SchedConfig {
-    /// Set the class count, broadcasting the last deadline budget to any
-    /// newly added classes.
+    /// Set the class count, broadcasting the last deadline budget and
+    /// quantum to any newly added classes.
     pub fn with_classes(mut self, n: u8) -> SchedConfig {
         let n = n.max(1);
         self.num_classes = n;
         let last = self.class_deadline_s.last().copied().unwrap_or(1.0);
         self.class_deadline_s.resize(n as usize, last);
+        let last_q = self.class_quantum.last().copied().unwrap_or(1.0);
+        self.class_quantum.resize(n as usize, last_q);
         self
     }
 
@@ -110,6 +126,9 @@ impl SchedConfig {
             DisciplineKind::Edf { drop_late } => {
                 Box::new(Edf::new(drop_late).measured_from(measure_from))
             }
+            DisciplineKind::WeightedFair => {
+                Box::new(Drr::new(self.num_classes, self.class_quantum.clone()))
+            }
         }
     }
 
@@ -126,6 +145,16 @@ impl SchedConfig {
         }
         if self.class_deadline_s.iter().any(|&d| !(d > 0.0)) {
             return Err("class deadline budgets must be positive".into());
+        }
+        if self.class_quantum.len() != self.num_classes as usize {
+            return Err(format!(
+                "class_quantum has {} entries for {} classes",
+                self.class_quantum.len(),
+                self.num_classes
+            ));
+        }
+        if self.class_quantum.iter().any(|&q| !(q > 0.0) || !q.is_finite()) {
+            return Err("class quanta must be positive and finite".into());
         }
         if self.batch.max_batch == 0 {
             return Err("max_batch must be >= 1".into());
@@ -152,9 +181,14 @@ mod tests {
 
     #[test]
     fn with_classes_broadcasts_deadlines() {
-        let s = SchedConfig { class_deadline_s: vec![0.25], ..SchedConfig::default() }
-            .with_classes(3);
+        let s = SchedConfig {
+            class_deadline_s: vec![0.25],
+            class_quantum: vec![2.0],
+            ..SchedConfig::default()
+        }
+        .with_classes(3);
         assert_eq!(s.class_deadline_s, vec![0.25, 0.25, 0.25]);
+        assert_eq!(s.class_quantum, vec![2.0, 2.0, 2.0]);
         assert!((s.deadline_for(1) - 0.25).abs() < 1e-12);
         // classes beyond the configured count inherit the last budget
         assert!((s.deadline_for(9) - 0.25).abs() < 1e-12);
@@ -180,6 +214,11 @@ mod tests {
         assert!(s.validate().is_err());
         let s = SchedConfig { class_deadline_s: vec![0.0], ..SchedConfig::default() };
         assert!(s.validate().is_err());
+        let mut s = SchedConfig::default().with_classes(2);
+        s.class_quantum = vec![1.0]; // one quantum for two classes
+        assert!(s.validate().is_err());
+        let s = SchedConfig { class_quantum: vec![0.0], ..SchedConfig::default() };
+        assert!(s.validate().is_err());
     }
 
     #[test]
@@ -188,6 +227,7 @@ mod tests {
             (DisciplineKind::Fifo, 0usize),
             (DisciplineKind::StrictPriority, 0),
             (DisciplineKind::Edf { drop_late: false }, 0),
+            (DisciplineKind::WeightedFair, 0),
         ] {
             let cfg = SchedConfig { discipline: kind, ..SchedConfig::default() };
             let q = cfg.build_queue(0.0);

@@ -80,6 +80,13 @@ impl QueueDiscipline for StrictPriority {
         }
     }
 
+    fn earliest_deadline(&self) -> Option<f64> {
+        self.lanes
+            .iter()
+            .flat_map(|l| l.iter().map(|(_, t)| t.deadline))
+            .min_by(f64::total_cmp)
+    }
+
     fn drain_all(&mut self) -> Vec<Task> {
         let mut all: Vec<(u64, Task)> =
             self.lanes.iter_mut().flat_map(|l| l.drain(..)).collect();
@@ -223,6 +230,11 @@ impl QueueDiscipline for Edf {
 
     fn dropped_per_class(&self) -> &[u64] {
         &self.dropped
+    }
+
+    fn earliest_deadline(&self) -> Option<f64> {
+        // The EDF heap's top *is* the earliest deadline.
+        self.heap.peek().map(|e| e.deadline)
     }
 
     fn drain_all(&mut self) -> Vec<Task> {

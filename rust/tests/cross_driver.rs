@@ -12,7 +12,8 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use mdi_exit::coordinator::{
-    AdmissionMode, Driver, ExperimentConfig, Mode, ModelMeta, Placement, Run, RunReport,
+    AdmissionMode, Driver, ExperimentConfig, Mode, ModelMeta, OffloadKind, Placement, Run,
+    RunReport,
 };
 use mdi_exit::dataset::{Dataset, ExitTable};
 use mdi_exit::runtime::sim_engine::SimEngine;
@@ -355,6 +356,61 @@ fn des_and_realtime_agree_per_source_on_two_source_line() {
             "source {i} completion rate diverged: DES {d_rate:.1} Hz vs realtime {r_rate:.1} Hz"
         );
     }
+}
+
+#[test]
+fn des_and_realtime_agree_with_deadline_aware_on_line4() {
+    let _g = serialized();
+    let (_, labels) = oracle3();
+    // DeadlineAware offloading on a 4-node line, overloaded ~2.5x past a
+    // single worker's capacity on the stage-3-heavy model: the source
+    // cannot make its deadlines locally, so the policy must push work out
+    // — and both drivers must agree on the resulting behaviour, since the
+    // policy is deterministic (it never draws from the RNG).
+    let dl = |mut c: ExperimentConfig| {
+        c.policy.offload = OffloadKind::DeadlineAware;
+        c.sched = c.sched.with_classes(2);
+        c.sched.class_deadline_s = vec![0.25, 2.0];
+        c
+    };
+    let des = run_des3(dl(cfg("line-4", 400.0, 6.0)), &labels);
+    let rt = run_rt3(dl(cfg("line-4", 400.0, 3.0)), &labels);
+
+    for (name, r) in [("DES", &des), ("realtime", &rt)] {
+        assert!(r.completed > 100, "{name}: completed {}", r.completed);
+        assert!(
+            r.per_worker[0].offloaded_out > 0,
+            "{name}: overloaded source never offloaded under DeadlineAware"
+        );
+        let remote: u64 = r.per_worker[1..].iter().map(|w| w.processed).sum();
+        assert!(remote > 0, "{name}: neighbors never processed tasks");
+        // Per-class counters (including the new on-time tally) conserve.
+        assert_eq!(r.per_class.len(), 2, "{name}");
+        let by_class: u64 = r.per_class.iter().map(|c| c.completed).sum();
+        assert_eq!(by_class, r.completed, "{name}: class counters conserve");
+        for (i, c) in r.per_class.iter().enumerate() {
+            assert!(
+                c.on_time <= c.completed,
+                "{name}: class {i} on_time {} > completed {}",
+                c.on_time,
+                c.completed
+            );
+        }
+        // The offload-target histogram agrees with the offload counter.
+        let targeted: u64 = r.per_worker[0].offload_targets.iter().sum();
+        assert_eq!(targeted, r.per_worker[0].offloaded_out, "{name}: target histogram");
+        // Deadline-aware summaries (2 classes + slack) cost more than the
+        // 32-byte base gossip, and the charge is accounted on both drivers.
+        assert!(r.gossip_bytes() > 0, "{name}: gossip bytes uncharged");
+    }
+
+    // The two drivers agree on the exit split (loose: the realtime leg
+    // runs short windows on shared CI cores).
+    let (fd, fr) = (des.exit_fractions(), rt.exit_fractions());
+    assert!(
+        (fd[0] - fr[0]).abs() < 0.15,
+        "exit-1 fraction diverged: DES {fd:?} vs realtime {fr:?}"
+    );
 }
 
 #[test]

@@ -1,12 +1,14 @@
 //! Property tests on the coordinator invariants (DESIGN.md §7), using the
 //! in-tree mini-framework (`testkit::prop` — offline proptest substitute).
 
-use mdi_exit::coordinator::policy::{
-    self, AdaptConfig, ExitDecision, NeighborView, OffloadPolicy, RateController,
-    ThresholdController,
-};
+use mdi_exit::coordinator::task::Task;
 use mdi_exit::coordinator::{AdmissionMode, Driver, ExperimentConfig, ModelMeta, Run};
 use mdi_exit::dataset::ExitTable;
+use mdi_exit::policy::{
+    self, AdaptConfig, BaselineExit, BaselineOffload, ExitCtx, ExitDecision, ExitPolicy,
+    NeighborSummary, NeighborView, OffloadCtx, OffloadKind, OffloadPolicy, OffloadRule,
+    RateController, ThresholdController,
+};
 use mdi_exit::runtime::sim_engine::SimEngine;
 use mdi_exit::testkit::prop::{F64In, Gen, Prop, UsizeIn, Verdict};
 use mdi_exit::util::rng::Pcg64;
@@ -160,6 +162,135 @@ fn prop_alg3_direction_matches_occupancy() {
 }
 
 // ---------------------------------------------------------------------------
+// The policy seam: Baseline is bit-for-bit the pre-refactor functions
+// ---------------------------------------------------------------------------
+
+/// A random worker decision state: queue lengths, Γ_n, a neighbor set with
+/// random gossiped views, and an RNG seed.
+struct SeamCase;
+impl Gen for SeamCase {
+    #[allow(clippy::type_complexity)]
+    type Out = (usize, usize, f64, Vec<(usize, NeighborSummary)>, u64, usize);
+    fn sample(&self, rng: &mut Pcg64) -> Self::Out {
+        let n_neighbors = rng.below(5) as usize;
+        let candidates = (0..n_neighbors)
+            .map(|i| {
+                let mut s = NeighborSummary::base(
+                    rng.below(60) as usize,
+                    rng.range_f64(1e-4, 0.05),
+                    0.9,
+                );
+                s.d_nm_s = rng.range_f64(0.0, 0.05);
+                (i + 1, s)
+            })
+            .collect();
+        (
+            rng.below(60) as usize,        // output_len
+            rng.below(60) as usize,        // input_len
+            rng.range_f64(1e-4, 0.05),     // gamma
+            candidates,
+            rng.next_u64(),                // decision-RNG seed
+            rng.below(4) as usize,         // rule index
+        )
+    }
+}
+
+/// The pre-refactor offload scan, straight-line: shuffle the neighbor ids,
+/// walk them in shuffled order, first acceptance by the pure rule wins.
+/// This is literally the loop `WorkerCore::try_offload` used to inline.
+fn reference_scan(
+    rule: OffloadRule,
+    output_len: usize,
+    input_len: usize,
+    gamma: f64,
+    candidates: &[(usize, NeighborSummary)],
+    rng: &mut Pcg64,
+) -> Option<usize> {
+    let mut scan: Vec<usize> = candidates.iter().map(|(m, _)| *m).collect();
+    rng.shuffle(&mut scan);
+    for &m in &scan {
+        let view = candidates.iter().find(|(c, _)| *c == m).expect("candidate").1.view();
+        if policy::offload_decide(rule, output_len, input_len, gamma, &view, rng) {
+            return Some(m);
+        }
+    }
+    None
+}
+
+#[test]
+fn prop_baseline_offload_is_bit_for_bit_the_seed_scan() {
+    let rules = [
+        OffloadRule::Alg2,
+        OffloadRule::Deterministic,
+        OffloadRule::QueueOnly,
+        OffloadRule::RoundRobin,
+    ];
+    Prop::new("BaselineOffload == pre-refactor scan (incl. RNG stream)").cases(2000).run(
+        &SeamCase,
+        |(output_len, input_len, gamma, candidates, seed, ri)| {
+            let rule = rules[*ri];
+            // Two RNGs cloned from the same state: the policy must consume
+            // the stream exactly as the inlined scan did, so a *sequence*
+            // of decisions stays aligned too.
+            let mut rng_policy = Pcg64::new(*seed, 1000);
+            let mut rng_ref = Pcg64::new(*seed, 1000);
+            let task = Task::initial(1, 0, None, 0.0);
+            let mut p = BaselineOffload::new(rule);
+            for round in 0..3 {
+                let ctx = OffloadCtx {
+                    now: round as f64,
+                    task: &task,
+                    input_len: *input_len,
+                    output_len: *output_len,
+                    gamma_s: *gamma,
+                    candidates,
+                    next_hop: &[],
+                };
+                let got = p.choose(&ctx, &mut rng_policy);
+                let want = reference_scan(
+                    rule,
+                    *output_len,
+                    *input_len,
+                    *gamma,
+                    candidates,
+                    &mut rng_ref,
+                );
+                if got != want {
+                    return Verdict::Fail(format!(
+                        "{rule:?} round {round}: policy {got:?} != reference {want:?} \
+                         (O_n={output_len}, I_n={input_len}, {} candidates)",
+                        candidates.len()
+                    ));
+                }
+            }
+            Verdict::Pass
+        },
+    );
+}
+
+#[test]
+fn prop_baseline_exit_is_bit_for_bit_alg1() {
+    Prop::new("BaselineExit == alg1_decide").cases(2000).run(
+        &Alg1Case,
+        |&(conf, th, is_final, i_len, o_len, t_o)| {
+            let got = BaselineExit.decide(&ExitCtx {
+                confidence: conf,
+                threshold: th,
+                is_final,
+                input_len: i_len,
+                output_len: o_len,
+                t_o,
+                now: 0.0,
+                class: 0,
+                deadline: 1.0,
+            });
+            let want = policy::alg1_decide(conf, th, is_final, i_len, o_len, t_o);
+            Verdict::check(got == want, || format!("{got:?} != {want:?}"))
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
 // Whole-system invariants under randomized configurations
 // ---------------------------------------------------------------------------
 
@@ -197,8 +328,7 @@ fn synthetic_engine(n: usize) -> (SimEngine, Vec<u8>) {
 #[test]
 fn prop_simulation_conservation_and_sanity() {
     let topos = ["local", "2-node", "3-node-mesh", "3-node-circular", "5-node-mesh"];
-    let policies =
-        [OffloadPolicy::Alg2, OffloadPolicy::Deterministic, OffloadPolicy::QueueOnly];
+    let policies = [OffloadKind::Alg2, OffloadKind::Deterministic, OffloadKind::QueueOnly];
     let (engine, labels) = synthetic_engine(256);
     Prop::new("simulation invariants").cases(40).run(
         &SysCase,
@@ -208,7 +338,7 @@ fn prop_simulation_conservation_and_sanity() {
                 topos[ti],
                 AdmissionMode::Fixed { rate_hz: rate, threshold },
             );
-            cfg.offload_policy = policies[pi];
+            cfg.policy.offload = policies[pi];
             cfg.duration_s = 10.0;
             cfg.warmup_s = 0.0;
             cfg.seed = seed;
