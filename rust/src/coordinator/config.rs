@@ -4,7 +4,7 @@ use anyhow::{bail, Result};
 
 use crate::policy::{AdaptConfig, PolicyConfig};
 use crate::routing::{Placement, SourceSpec};
-use crate::sched::{DisciplineKind, SchedConfig};
+use crate::sched::{CoalesceMode, DisciplineKind, SchedConfig};
 use crate::simnet::{ChurnEvent, LinkSpec};
 use crate::util::toml::{Config as Toml, Value};
 
@@ -378,6 +378,12 @@ impl ExperimentConfig {
         }
         sched.batch.max_batch = toml.usize_or("sched.max_batch", 1);
         sched.batch.marginal = toml.f64_or("sched.batch_marginal", sched.batch.marginal);
+        // Cross-worker batch coalescing: whether offloads drain same-stage
+        // runs into one wire envelope ("off" reproduces the seed's
+        // one-task-per-message wire bit for bit).
+        sched.coalesce = CoalesceMode::parse(toml.str_or("sched.coalesce", "off"))
+            .map_err(|e| anyhow::anyhow!("sched.coalesce: {e}"))?;
+        sched.coalesce_max = toml.usize_or("sched.coalesce_max", sched.coalesce_max);
         Ok(sched)
     }
 
@@ -533,6 +539,30 @@ batch_marginal = 0.1
         .is_err());
         assert!(ExperimentConfig::from_toml(
             &Toml::parse("offload_policy = \"warp-drive\"\n").unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn from_toml_parses_coalesce_knobs() {
+        let toml = Toml::parse(
+            "[sched]\ncoalesce = \"stage-class\"\ncoalesce_max = 16\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.sched.coalesce, CoalesceMode::StageClass);
+        assert_eq!(c.sched.coalesce_max, 16);
+        // Default stays the seed wire.
+        let c = ExperimentConfig::from_toml(&Toml::parse("model = \"tiny\"\n").unwrap())
+            .unwrap();
+        assert_eq!(c.sched.coalesce, CoalesceMode::Off);
+        // Bad values are rejected.
+        assert!(ExperimentConfig::from_toml(
+            &Toml::parse("[sched]\ncoalesce = \"warp\"\n").unwrap()
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml(
+            &Toml::parse("[sched]\ncoalesce = \"stage\"\ncoalesce_max = 0\n").unwrap()
         )
         .is_err());
     }

@@ -7,6 +7,10 @@
 //!   actions-out state machine (queues, estimators, policies, stats)
 //!   shared verbatim by both drivers
 //! * [`task`], [`queues`] — τ_k(d) records and the I_n/O_n queue pair
+//! * [`crate::net`] (re-exported as `Envelope` etc.) — the unified wire
+//!   layer: every message both drivers carry is a typed envelope, batches
+//!   are first-class on it, and byte charges come from one shared
+//!   function
 //! * [`config`], [`report`] — experiment descriptions and run reports
 //! * [`run`] — the [`Run`] builder façade: pick [`Driver::Des`] or
 //!   [`Driver::Realtime`], everything else stays identical
@@ -48,7 +52,9 @@ pub use run::{Driver, Run, RunBuilder};
 pub use sim::{SampleStore, Simulation};
 // Placement/routing surface (re-exported so run code reads naturally).
 pub use crate::routing::{Placement, Role, RoutingTable, SourceSpec};
+// The wire layer (re-exported so driver-adjacent code reads naturally).
+pub use crate::net::{Envelope, ENVELOPE_HEADER_BYTES, RESULT_BYTES};
 pub use worker::{
-    execute_batch, Action, AeMeta, Clock, ModelMeta, Payload, TaskOrigin, VirtualClock,
+    encode_batch, execute_batch, Action, AeMeta, Clock, ModelMeta, TaskOrigin, VirtualClock,
     WallClock, WorkerCore,
 };

@@ -101,9 +101,7 @@ impl WorkerQueues {
     pub fn drain_all_ordered(&mut self) -> Vec<Task> {
         let mut tasks = self.input.drain_all();
         tasks.extend(self.output.drain_all());
-        tasks.sort_by(|a, b| {
-            a.admitted_at.total_cmp(&b.admitted_at).then(a.id.cmp(&b.id))
-        });
+        tasks.sort_by(Task::admission_cmp);
         tasks
     }
 }

@@ -31,6 +31,21 @@ pub struct WorkerStats {
     /// Tasks the input discipline served per class (weighted-fair
     /// disciplines report their realized split; empty otherwise).
     pub served_per_class: Vec<u64>,
+    /// Every byte this worker put on the wire (task batches, results,
+    /// re-homes, gossip), charged by `net::Envelope::encoded_bytes` — the
+    /// same number the drivers feed their medium. Run-level
+    /// `bytes_on_wire` is the sum of these.
+    pub wire_bytes: u64,
+    /// Task-carrying envelopes this worker sent (offloads + DDI routing).
+    /// With `coalesce = off` this equals the per-task offload count; with
+    /// coalescing on, fewer envelopes carry the same tasks.
+    pub envelopes_sent: u64,
+    /// Tasks that rode an envelope behind another task (the k-1 extras of
+    /// every k-task batch, across task/result/re-home envelopes).
+    pub coalesced_tasks: u64,
+    /// Wire bytes avoided by sharing envelope frames (sum over envelopes
+    /// of `unbatched_bytes - encoded_bytes`).
+    pub wire_bytes_saved: u64,
 }
 
 /// Per-traffic-class accounting (populated when the run configures more
@@ -267,6 +282,31 @@ impl RunReport {
         }
     }
 
+    /// Derive the run-level wire totals from the per-worker envelope
+    /// counters (call after `per_worker` is filled; idempotent). Both
+    /// drivers go through this, so `bytes_on_wire` / `task_transfers`
+    /// have one definition: the sum of what every core charged through
+    /// `net::Envelope::encoded_bytes`.
+    pub fn fold_wire_totals(&mut self) {
+        self.bytes_on_wire = self.per_worker.iter().map(|w| w.wire_bytes).sum();
+        self.task_transfers = self.per_worker.iter().map(|w| w.envelopes_sent).sum();
+    }
+
+    /// Task-carrying envelopes the run put on the wire (sum over workers).
+    pub fn envelopes_sent(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.envelopes_sent).sum()
+    }
+
+    /// Tasks that shared an envelope with another task (sum over workers).
+    pub fn coalesced_tasks(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.coalesced_tasks).sum()
+    }
+
+    /// Wire bytes avoided by envelope sharing (sum over workers).
+    pub fn wire_bytes_saved(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.wire_bytes_saved).sum()
+    }
+
     /// Aggregate the per-worker discipline drops into the per-class and
     /// total counters (call once, after `per_worker` is filled).
     pub fn fold_worker_drops(&mut self) {
@@ -347,6 +387,10 @@ impl RunReport {
                     ("gossip_bytes", (w.gossip_bytes as i64).into()),
                     ("served_per_class",
                      Json::Arr(w.served_per_class.iter().map(|&n| (n as i64).into()).collect())),
+                    ("wire_bytes", (w.wire_bytes as i64).into()),
+                    ("envelopes_sent", (w.envelopes_sent as i64).into()),
+                    ("coalesced_tasks", (w.coalesced_tasks as i64).into()),
+                    ("wire_bytes_saved", (w.wire_bytes_saved as i64).into()),
                 ])
             })
             .collect();
@@ -424,6 +468,9 @@ impl RunReport {
             ("bytes_on_wire", (self.bytes_on_wire as i64).into()),
             ("gossip_bytes", (self.gossip_bytes() as i64).into()),
             ("task_transfers", (self.task_transfers as i64).into()),
+            ("envelopes_sent", (self.envelopes_sent() as i64).into()),
+            ("coalesced_tasks", (self.coalesced_tasks() as i64).into()),
+            ("wire_bytes_saved", (self.wire_bytes_saved() as i64).into()),
             ("rehomed", (self.rehomed as i64).into()),
             ("dropped", (self.dropped as i64).into()),
             ("final_mu_s", self.final_mu_s.map(Json::from).unwrap_or(Json::Null)),
@@ -542,6 +589,33 @@ mod tests {
         assert_eq!(a.on_time, 2);
         assert_eq!(a.exit_histogram, vec![2, 1]);
         assert_eq!(a.latency.len(), 3);
+    }
+
+    #[test]
+    fn wire_totals_fold_from_worker_envelope_counters() {
+        let mut r = RunReport::new("m", "t", "lbl", 2, 2, 1, &[0]);
+        r.per_worker[0].wire_bytes = 1000;
+        r.per_worker[0].envelopes_sent = 3;
+        r.per_worker[0].coalesced_tasks = 2;
+        r.per_worker[0].wire_bytes_saved = 64;
+        r.per_worker[1].wire_bytes = 500;
+        r.per_worker[1].envelopes_sent = 1;
+        r.fold_wire_totals();
+        assert_eq!(r.bytes_on_wire, 1500);
+        assert_eq!(r.task_transfers, 4);
+        assert_eq!(r.envelopes_sent(), 4);
+        assert_eq!(r.coalesced_tasks(), 2);
+        assert_eq!(r.wire_bytes_saved(), 64);
+        // idempotent
+        r.fold_wire_totals();
+        assert_eq!(r.bytes_on_wire, 1500);
+        let j = r.to_json();
+        assert_eq!(j.get("coalesced_tasks").as_i64(), Some(2));
+        assert_eq!(j.get("envelopes_sent").as_i64(), Some(4));
+        assert_eq!(j.get("wire_bytes_saved").as_i64(), Some(64));
+        let w0 = &j.get("workers").as_arr().unwrap()[0];
+        assert_eq!(w0.get("envelopes_sent").as_i64(), Some(3));
+        assert_eq!(w0.get("wire_bytes").as_i64(), Some(1000));
     }
 
     #[test]

@@ -38,30 +38,17 @@ use super::config::ExperimentConfig;
 use super::report::{ClassStats, RunReport};
 use super::task::{InferenceResult, Task};
 use super::worker::{
-    execute_batch, Action, Clock, ModelMeta, Payload, TaskOrigin, WallClock, WorkerCore,
+    encode_batch, execute_batch, Action, Clock, ModelMeta, TaskOrigin, WallClock, WorkerCore,
 };
 use crate::dataset::Dataset;
 use crate::log_info;
+use crate::net::Envelope;
 use crate::runtime::InferenceEngine;
 use crate::simnet::transport::{DelayNet, Endpoint};
 use crate::simnet::{ChurnEvent, Topology};
 use crate::util::stats::Samples;
 
 const IDLE_PARK: Duration = Duration::from_micros(200);
-
-/// Messages exchanged between worker threads (the wire form of
-/// [`Payload`]).
-enum NetMsg {
-    Task(Task),
-    /// A task in transit back to its admitting source after its worker
-    /// left; intermediate hops relay it (`WorkerCore::on_rehome`).
-    Rehome(Task),
-    Result(InferenceResult),
-    /// Gossiped neighbor summary. Framed on the link at its *actual*
-    /// encoded size (the `bytes` the core attached), so policy-annotated
-    /// summaries pay real transfer delay for their extra fields.
-    State(crate::policy::NeighborSummary),
-}
 
 /// Run the system with real threads + wallclock. `duration_s` of the config
 /// is interpreted as wallclock seconds (keep it small in tests). Called via
@@ -87,9 +74,15 @@ pub(super) fn run_realtime(
         .validate(topo.n, &topo.churn)
         .context("placement does not fit the topology")?;
     let n = topo.n;
-    let mut net: DelayNet<NetMsg> = DelayNet::new(topo.clone(), cfg.seed);
-    let mut endpoints: Vec<Option<Endpoint<NetMsg>>> =
-        (0..n).map(|i| Some(net.endpoint(i, cfg.seed))).collect();
+    // The fabric owns the run seed (per-endpoint jitter RNGs derive from
+    // it) and the same shared-medium contention model the DES driver
+    // applies, so link behaviour is reproducible per config seed and
+    // consistent across drivers. Worker threads exchange the SAME
+    // `net::Envelope` type the core emits — no driver-private mirror.
+    let mut net: DelayNet<Envelope> =
+        DelayNet::new(topo.clone(), cfg.seed, cfg.medium_contention);
+    let mut endpoints: Vec<Option<Endpoint<Envelope>>> =
+        (0..n).map(|i| Some(net.endpoint(i))).collect();
 
     let (stats_tx, stats_rx) = channel::<(usize, super::report::WorkerStats, SourceTally)>();
     let t0 = Instant::now();
@@ -192,6 +185,7 @@ pub(super) fn run_realtime(
         }
     }
     report.fold_worker_drops();
+    report.fold_wire_totals();
     Ok(report)
 }
 
@@ -214,7 +208,7 @@ struct RtWorker<'a> {
     cfg: &'a ExperimentConfig,
     meta: &'a ModelMeta,
     core: WorkerCore,
-    endpoint: Endpoint<NetMsg>,
+    endpoint: Endpoint<Envelope>,
     engine: &'a dyn crate::runtime::InferenceEngine,
     dataset: Option<&'a Dataset>,
     clock: WallClock,
@@ -349,41 +343,43 @@ impl<'a> RtWorker<'a> {
                     debug_assert!(self.pending.is_none(), "core double-started compute");
                     self.pending = Some(batch);
                 }
-                Action::Send { to, payload, mut bytes, needs_encode } => {
+                Action::Send { to, env, needs_encode } => {
                     // Only task transfers feed the D_nm estimator — gossip
                     // and result messages are tiny and would bias Alg. 2's
                     // transfer-delay term (the DES driver does the same).
-                    let is_task = matches!(payload, Payload::Task(_));
-                    let msg = match payload {
-                        Payload::Task(mut task) => {
-                            if needs_encode {
-                                if let Some(f) = task.features.take() {
-                                    match self.engine.encode(&f) {
-                                        Ok(Some(code)) => task.features = Some(code),
-                                        _ => {
-                                            // Ship raw on encode failure so
-                                            // the receiver can still decode;
-                                            // charge the raw size, not the
-                                            // AE code size.
-                                            task.features = Some(f);
-                                            task.encoded = false;
-                                            bytes =
-                                                self.meta.stage_in_bytes[task.stage - 1];
-                                        }
-                                    }
-                                }
-                            }
-                            NetMsg::Task(task)
+                    let mut env = env;
+                    let is_task = matches!(env, Envelope::TaskBatch(_));
+                    if needs_encode {
+                        let pre_bytes = env.encoded_bytes(self.meta);
+                        if let Envelope::TaskBatch(tasks) = &mut env {
+                            // Shared with the DES driver: encode each
+                            // tensor, ship raw on failure (the charge
+                            // function then prices the raw tensor). The
+                            // encoded count only matters to the DES
+                            // driver's virtual cost charge.
+                            let _ = encode_batch(self.engine, tasks);
                         }
-                        Payload::Result(r) => NetMsg::Result(r),
-                        Payload::Rehome(task) => NetMsg::Rehome(task),
-                        Payload::State(summary) => NetMsg::State(summary),
-                    };
+                        // Reconcile the core's wire counter when a
+                        // fallback shipped raw tensors (the emit-time
+                        // count used the code size).
+                        let post_bytes = env.encoded_bytes(self.meta);
+                        if post_bytes > pre_bytes {
+                            let now = self.clock.now();
+                            self.core
+                                .note_wire_recharge(now, (post_bytes - pre_bytes) as u64);
+                        }
+                    }
+                    // One shared charging function with the DES driver —
+                    // sized after the AE step, framed once per envelope.
+                    let bytes = env.encoded_bytes(self.meta);
+                    let items = env.items();
                     // An Err means the fabric already shut down (end of
                     // run): drop the message, as the seed driver did.
-                    if let Ok(delay) = self.endpoint.send(to, msg, bytes) {
+                    if let Ok(delay) = self.endpoint.send(to, env, bytes) {
                         if is_task {
-                            self.core.note_transfer_delay(to, delay);
+                            // Per-task amortized share, like the DES
+                            // driver (and like Γ_n for batched compute).
+                            self.core.note_transfer_delay(to, delay / items.max(1) as f64);
                         }
                     }
                 }
@@ -392,20 +388,22 @@ impl<'a> RtWorker<'a> {
         }
     }
 
-    fn on_msg(&mut self, from: usize, msg: NetMsg) {
+    fn on_msg(&mut self, from: usize, env: Envelope) {
         let now = self.clock.now();
-        let acts = match msg {
-            NetMsg::Task(task) => self.core.on_task(now, task, TaskOrigin::Wire),
-            NetMsg::Rehome(task) => {
-                if task.source == self.id {
-                    // Terminal delivery at the admitting source counts as
-                    // one re-homing; relay hops do not.
-                    self.tally.rehomed += 1;
-                }
-                self.core.on_rehome(now, task)
+        let acts = match env {
+            Envelope::TaskBatch(tasks) => {
+                self.core.on_task_batch(now, tasks, TaskOrigin::Wire)
             }
-            NetMsg::Result(r) => self.core.on_result(now, r),
-            NetMsg::State(summary) => self.core.on_gossip(now, from, summary),
+            Envelope::Rehome(tasks) => {
+                if tasks.first().is_some_and(|t| t.source == self.id) {
+                    // Terminal delivery at the admitting source counts the
+                    // displaced tasks as re-homed; relay hops do not.
+                    self.tally.rehomed += tasks.len() as u64;
+                }
+                self.core.on_rehome(now, tasks)
+            }
+            Envelope::Result(rs) => self.core.on_result(now, rs),
+            Envelope::State(summary) => self.core.on_gossip(now, from, summary),
         };
         self.dispatch(acts);
     }

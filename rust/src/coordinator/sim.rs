@@ -9,13 +9,15 @@
 //!
 //! * `StartCompute` → a `ComputeDone` event after the (batch-amortized)
 //!   estimated cost; the whole same-stage batch completes together;
-//! * `Send` → a `Deliver` event after the sampled link delay — including
-//!   gossip `State` payloads, charged by their actual encoded summary
-//!   size (the seed delivered gossip out-of-band for free, hiding the
-//!   cost of richer summaries and making DES views fresher than the
-//!   realtime driver's); result and re-home payloads hop the topology
-//!   link by link, each leg charged as a real transfer, until they reach
-//!   their admitting source;
+//! * `Send` → a `Deliver` event after the sampled link delay. Every
+//!   message is a [`crate::net::Envelope`] charged by the shared
+//!   [`crate::net::Envelope::encoded_bytes`] contract — a coalesced
+//!   `TaskBatch` crosses the link as ONE contended transfer (one base
+//!   latency, one jitter draw, one contention slot) where per-task wiring
+//!   paid k; gossip `State` envelopes are charged by their actual encoded
+//!   summary size; result and re-home envelopes hop the topology link by
+//!   link, each leg charged once per envelope, until they reach their
+//!   admitting source;
 //! * `RecordResult` → report bookkeeping (per traffic class and per
 //!   source where the run configures more than one).
 //!
@@ -35,9 +37,10 @@ use super::config::ExperimentConfig;
 use super::report::{RunReport, TracePoint};
 use super::task::{InferenceResult, Task};
 use super::worker::{
-    execute_batch, Action, Clock, Payload, TaskOrigin, VirtualClock, WorkerCore,
+    encode_batch, execute_batch, Action, Clock, TaskOrigin, VirtualClock, WorkerCore,
 };
 use crate::log_debug;
+use crate::net::Envelope;
 use crate::runtime::InferenceEngine;
 use crate::simnet::Topology;
 use crate::tensor::Tensor;
@@ -71,25 +74,16 @@ impl<'a> SampleStore<'a> {
 // ---------------------------------------------------------------------------
 
 #[derive(Debug)]
-enum Msg {
-    Task(Task),
-    Result(InferenceResult),
-    /// A churn-displaced task in transit back to its admitting source
-    /// (forwarded hop by hop like a result).
-    Rehome(Task),
-    /// A gossiped neighbor summary in transit (charged on the link by its
-    /// actual encoded size, like every other transfer).
-    State(crate::policy::NeighborSummary),
-}
-
-#[derive(Debug)]
 enum Event {
     /// One admission at `source` (each declared source runs its own
     /// admission timeline).
     Admit { source: usize },
     AdaptTick { source: usize },
     ComputeDone { worker: usize, batch: Vec<Task>, duration: f64 },
-    Deliver { to: usize, from: usize, msg: Msg },
+    /// A wire envelope in transit — the *same* [`Envelope`] type the core
+    /// emits and the realtime transport carries; this driver keeps no
+    /// private mirror of the payload enum (the old `Msg` duplication).
+    Deliver { to: usize, from: usize, env: Envelope },
     GossipTick,
     TraceTick,
     Churn { idx: usize },
@@ -243,7 +237,7 @@ impl<'a> Simulation<'a> {
                 Event::ComputeDone { worker, batch, duration } => {
                     self.on_compute_done(worker, batch, duration)?
                 }
-                Event::Deliver { to, from, msg } => self.on_deliver(to, from, msg)?,
+                Event::Deliver { to, from, env } => self.on_deliver(to, from, env)?,
                 Event::GossipTick => self.on_gossip_tick()?,
                 Event::TraceTick => self.on_trace(),
                 Event::Churn { idx } => self.on_churn(idx)?,
@@ -269,93 +263,48 @@ impl<'a> Simulation<'a> {
                         Event::ComputeDone { worker: n, batch, duration: est_cost_s },
                     );
                 }
-                Action::Send { to, payload, mut bytes, needs_encode } => match payload {
-                    Payload::Task(mut task) => {
-                        if needs_encode {
-                            // On the oracle path (`features: None`) encoding
-                            // is virtual: keep the AE byte/cost accounting.
-                            // With a real tensor, an engine without an
-                            // encoder ships raw and charges the raw size —
-                            // mirroring the realtime driver.
-                            if let Some(f) = task.features.take() {
-                                match self.engine.encode(&f)? {
-                                    Some(code) => task.features = Some(code),
-                                    None => {
-                                        task.features = Some(f);
-                                        task.encoded = false;
-                                        bytes =
-                                            self.meta.stage_in_bytes[task.stage - 1];
-                                    }
-                                }
-                            }
+                Action::Send { to, env, needs_encode } => {
+                    // One path for every envelope kind: run the AE step
+                    // (task batches only), price the envelope with the
+                    // shared `net` contract, and put it on the virtual
+                    // medium as ONE contended transfer — a coalesced batch
+                    // pays one base latency and one contention slot where
+                    // k per-task messages paid k.
+                    let mut env = env;
+                    let mut enc_cost = 0.0;
+                    if needs_encode {
+                        let pre_bytes = env.encoded_bytes(&self.meta);
+                        if let Envelope::TaskBatch(tasks) = &mut env {
+                            enc_cost =
+                                encode_batch(self.engine, tasks) as f64 * self.enc_cost_s(n);
                         }
-                        let mut delay = self.link_delay(n, to, bytes)?;
-                        if needs_encode && task.encoded {
-                            // Encoding costs compute on the sender; fold it
-                            // into the send path (virtual time).
-                            delay += self.enc_cost_s(n);
+                        // An encode fallback shipped raw tensors: the core
+                        // counted code bytes at emit time, so reconcile
+                        // its wire counter with the actual charge.
+                        let post_bytes = env.encoded_bytes(&self.meta);
+                        if post_bytes > pre_bytes {
+                            self.workers[n]
+                                .note_wire_recharge(now, (post_bytes - pre_bytes) as u64);
                         }
-                        self.workers[n].note_transfer_delay(to, delay);
-                        if self.in_window() {
-                            self.report.bytes_on_wire += bytes as u64;
-                            self.report.task_transfers += 1;
-                        }
-                        self.active_transfers += 1;
-                        self.push(
-                            now + delay,
-                            Event::Deliver { to, from: n, msg: Msg::Task(task) },
-                        );
                     }
-                    Payload::Result(r) => {
-                        // `to` is always the next hop toward the result's
-                        // admitting source (the core routes); each leg is a
-                        // plain neighbor link transfer. The old two-hop
-                        // "mis-delivery" relay guess is gone — multi-hop
-                        // delivery is now charged link by actual link.
-                        let delay = self.link_delay(n, to, bytes)?;
-                        if self.in_window() {
-                            self.report.bytes_on_wire += bytes as u64;
-                        }
-                        self.active_transfers += 1;
-                        self.push(
-                            now + delay,
-                            Event::Deliver { to, from: n, msg: Msg::Result(r) },
-                        );
+                    let bytes = env.encoded_bytes(&self.meta);
+                    // Encoding costs compute on the sender; fold it into
+                    // the send path (virtual time).
+                    let delay = self.link_delay(n, to, bytes)? + enc_cost;
+                    if let Envelope::TaskBatch(tasks) = &env {
+                        // Only task transfers feed the D_nm estimator —
+                        // gossip and result messages are tiny and would
+                        // bias Alg. 2's transfer-delay term. D_nm is a
+                        // *per-task* transfer estimate (Alg. 2 weighs it
+                        // against per-task queue waits), so a coalesced
+                        // envelope feeds the amortized share — exactly how
+                        // Γ_n amortizes a batched compute measurement.
+                        self.workers[n]
+                            .note_transfer_delay(to, delay / tasks.len().max(1) as f64);
                     }
-                    Payload::Rehome(task) => {
-                        // Churn re-homing rides the wire like any transfer
-                        // (the seed teleported it for free, which hid the
-                        // cost of a mid-line worker's backlog going home).
-                        let delay = self.link_delay(n, to, bytes)?;
-                        if self.in_window() {
-                            self.report.bytes_on_wire += bytes as u64;
-                        }
-                        self.active_transfers += 1;
-                        self.push(
-                            now + delay,
-                            Event::Deliver { to, from: n, msg: Msg::Rehome(task) },
-                        );
-                    }
-                    Payload::State(summary) => {
-                        // Gossip rides the simulated medium like any other
-                        // message, charged by its *actual encoded size*
-                        // (`bytes` is already `summary.encoded_bytes()`):
-                        // a policy that annotates richer summaries pays
-                        // real virtual transfer time and contention for
-                        // them. (The seed delivered gossip out-of-band for
-                        // free — which also made DES views fresher than
-                        // the realtime driver's; this matches the two.)
-                        let delay = self.link_delay(n, to, bytes)?;
-                        if self.in_window() {
-                            self.report.bytes_on_wire += bytes as u64;
-                        }
-                        self.active_transfers += 1;
-                        self.push(
-                            now + delay,
-                            Event::Deliver { to, from: n, msg: Msg::State(summary) },
-                        );
-                    }
-                },
+                    self.active_transfers += 1;
+                    self.push(now + delay, Event::Deliver { to, from: n, env });
+                }
                 Action::RecordResult { result } => self.record_result(result),
             }
         }
@@ -407,29 +356,30 @@ impl<'a> Simulation<'a> {
         self.dispatch(worker, acts)
     }
 
-    fn on_deliver(&mut self, to: usize, from: usize, msg: Msg) -> Result<()> {
+    fn on_deliver(&mut self, to: usize, from: usize, env: Envelope) -> Result<()> {
         // The transfer occupying the shared medium ends on delivery.
         self.active_transfers = self.active_transfers.saturating_sub(1);
         let now = self.now();
-        match msg {
-            Msg::Task(task) => {
-                let acts = self.workers[to].on_task(now, task, TaskOrigin::Wire);
+        match env {
+            Envelope::TaskBatch(tasks) => {
+                let acts = self.workers[to].on_task_batch(now, tasks, TaskOrigin::Wire);
                 self.dispatch(to, acts)
             }
-            Msg::Result(r) => {
-                let acts = self.workers[to].on_result(now, r);
+            Envelope::Result(rs) => {
+                let acts = self.workers[to].on_result(now, rs);
                 self.dispatch(to, acts)
             }
-            Msg::Rehome(task) => {
-                if task.source == to {
-                    // The displaced task made it home: count it once, at
-                    // terminal delivery (relay hops are not re-homings).
-                    self.report.rehomed += 1;
+            Envelope::Rehome(tasks) => {
+                if tasks.first().is_some_and(|t| t.source == to) {
+                    // The displaced tasks made it home: count them once,
+                    // at terminal delivery (relay hops are not
+                    // re-homings).
+                    self.report.rehomed += tasks.len() as u64;
                 }
-                let acts = self.workers[to].on_rehome(now, task);
+                let acts = self.workers[to].on_rehome(now, tasks);
                 self.dispatch(to, acts)
             }
-            Msg::State(summary) => {
+            Envelope::State(summary) => {
                 let acts = self.workers[to].on_gossip(now, from, summary);
                 self.dispatch(to, acts)
             }
@@ -512,6 +462,7 @@ impl<'a> Simulation<'a> {
             report.per_worker[i] = w.into_stats();
         }
         report.fold_worker_drops();
+        report.fold_wire_totals();
         Ok(report)
     }
 }

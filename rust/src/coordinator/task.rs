@@ -51,6 +51,15 @@ impl Task {
         }
     }
 
+    /// Total order of admission: admission time, ties broken by task id.
+    /// This is THE replay order of the system — churn drains interleave
+    /// both queues by it, and coalesced `net::Envelope` batches are
+    /// sorted by it so receivers merge them through their discipline
+    /// exactly as if the tasks had arrived one by one.
+    pub fn admission_cmp(&self, other: &Task) -> std::cmp::Ordering {
+        self.admitted_at.total_cmp(&other.admitted_at).then(self.id.cmp(&other.id))
+    }
+
     /// Successor task τ_{k+1}(d) (Alg. 1 lines 9–11), reusing the data id
     /// and inheriting the admission-time class and deadline.
     pub fn successor(&self, id: u64, features: Option<Tensor>) -> Task {
@@ -109,6 +118,17 @@ mod tests {
         assert_eq!(s.class, 2, "class is stamped once, at admission");
         assert_eq!(s.deadline, 4.5, "deadline travels with the data");
         assert_eq!(s.source, 3, "the admitting source travels with the data");
+    }
+
+    #[test]
+    fn admission_cmp_orders_by_time_then_id() {
+        let a = Task::initial(5, 0, None, 1.0);
+        let b = Task::initial(2, 0, None, 2.0);
+        let c = Task::initial(9, 0, None, 1.0);
+        assert_eq!(a.admission_cmp(&b), std::cmp::Ordering::Less, "earlier admission first");
+        assert_eq!(a.admission_cmp(&c), std::cmp::Ordering::Less, "ties break by id");
+        assert_eq!(c.admission_cmp(&a), std::cmp::Ordering::Greater);
+        assert_eq!(a.admission_cmp(&a), std::cmp::Ordering::Equal);
     }
 
     #[test]

@@ -12,9 +12,17 @@
 //! `on_compute_done`, `on_adapt_tick`, `on_churn`, `poll_admission`) and
 //! answers with [`Action`]s — *what* should happen, never *how*:
 //!
-//! * `Send { to, payload, bytes }` — put a message on the wire (`to` is
+//! * `Send { to, env }` — put a typed [`Envelope`] on the wire (`to` is
 //!   always a one-hop neighbor; multi-hop destinations are reached by
-//!   forwarding along the run's [`crate::routing::RoutingTable`]);
+//!   forwarding along the run's [`crate::routing::RoutingTable`]).
+//!   Batches are first-class: a same-stage run of tasks travels as ONE
+//!   `TaskBatch` envelope when the run's
+//!   [`crate::sched::SchedConfig::coalesce`] mode allows it, and the core
+//!   counts every envelope into the per-worker wire counters
+//!   (`wire_bytes`, `envelopes_sent`, `coalesced_tasks`,
+//!   `wire_bytes_saved`) using the same
+//!   [`crate::net::Envelope::encoded_bytes`] charge the drivers put on
+//!   the medium;
 //! * `StartCompute { batch, est_cost_s }` — run a same-stage batch of
 //!   tasks through the engine (one batched forward per stage; batch size 1
 //!   unless [`crate::sched::BatchPolicy`] says otherwise);
@@ -46,20 +54,22 @@ use super::queues::WorkerQueues;
 use super::report::WorkerStats;
 use super::task::{InferenceResult, Task};
 use crate::artifact::ModelInfo;
+use crate::net::Envelope;
 use crate::policy::{
     AdaptPolicy, ExitCtx, ExitDecision, ExitPolicy, LocalState, NeighborSummary, OffloadCtx,
     OffloadPolicy,
 };
 use crate::routing::{Role, RoutingTable};
 use crate::runtime::{InferenceEngine, StageOutput};
-use crate::sched::QueueDiscipline;
+use crate::sched::{CoalesceMode, QueueDiscipline};
 use crate::simnet::Topology;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Ewma;
 
-/// Bytes of an exit-result message (classifier output + header).
-pub const RESULT_BYTES: usize = 64;
+// The wire layer owns all message sizing; re-exported here so existing
+// `worker::RESULT_BYTES` call sites keep reading naturally.
+pub use crate::net::RESULT_BYTES;
 
 // ---------------------------------------------------------------------------
 // Clock abstraction
@@ -163,33 +173,17 @@ impl ModelMeta {
 // Events in, actions out
 // ---------------------------------------------------------------------------
 
-/// What goes on the wire between workers.
-#[derive(Debug)]
-pub enum Payload {
-    Task(Task),
-    Result(InferenceResult),
-    /// A task in transit back to its admitting source after its worker
-    /// left the network. Forwarded hop by hop (`WorkerCore::on_rehome`)
-    /// until it reaches `task.source`, which re-queues it.
-    Rehome(Task),
-    /// Gossiped neighbor state (paper §IV.A: "periodically learns ... its
-    /// input queue size I_m, per task computing delay Γ_m"), as an
-    /// extensible [`NeighborSummary`]: the base fields carry the paper's
-    /// state plus the source's adapted T_e (Alg. 4 line 9), and the run's
-    /// offload policy may annotate extra fields (per-class occupancy,
-    /// deadline slack, transitive region load). The wire charge is the
-    /// summary's *actual* encoded size.
-    State(NeighborSummary),
-}
-
 /// What a driver must make happen in its medium (virtual or real).
 #[derive(Debug)]
 pub enum Action {
-    /// Transmit `payload` of `bytes` to one-hop neighbor `to`.
-    /// `needs_encode` asks the driver to run the autoencoder on the
-    /// feature tensor before the wire (the core already accounted the
-    /// encoded byte size and marked the task).
-    Send { to: usize, payload: Payload, bytes: usize, needs_encode: bool },
+    /// Transmit `env` to one-hop neighbor `to`. The driver obtains the
+    /// wire charge from [`Envelope::encoded_bytes`] *after* any
+    /// autoencoder step. `needs_encode` asks the driver to run the
+    /// autoencoder on every feature tensor in a `TaskBatch` before the
+    /// wire (the core already marked the tasks `encoded`; a failed encode
+    /// flips a task back to raw and the shared charge function then
+    /// prices the raw tensor).
+    Send { to: usize, env: Envelope, needs_encode: bool },
     /// Run a same-stage batch of tasks through the engine (one batched
     /// forward per stage; see [`execute_batch`]). `est_cost_s` is the
     /// core's virtual cost estimate for the whole batch (amortized stage
@@ -199,6 +193,17 @@ pub enum Action {
     StartCompute { batch: Vec<Task>, est_cost_s: f64 },
     /// A completed inference reached its admitting source: record it.
     RecordResult { result: InferenceResult },
+}
+
+/// One outbound consequence of a finished batch element, kept in batch
+/// order so the wire sees exits and churn-displaced successors in exactly
+/// the sequence the elements completed (at `coalesce = off` this
+/// reproduces the seed's per-element emit order — and its RNG-draw order
+/// in the DES driver — bit for bit).
+#[derive(Debug)]
+enum Outbound {
+    Exit(InferenceResult),
+    Displaced(Task),
 }
 
 /// How a task arrived at [`WorkerCore::on_task`].
@@ -483,62 +488,70 @@ impl WorkerCore {
 
     /// A task arrived: admitted locally, delivered over the wire, or
     /// re-homed. Queues it (or DDI-routes it at the source) and may start
-    /// compute / offloading.
+    /// compute / offloading. Wire arrivals carrying several tasks go
+    /// through [`WorkerCore::on_task_batch`]; this is the single-task
+    /// entry (`on_task_batch` with one element behaves identically).
     pub fn on_task(&mut self, now: f64, task: Task, origin: TaskOrigin) -> Vec<Action> {
+        if origin != TaskOrigin::Admitted {
+            return self.on_task_batch(now, vec![task], origin);
+        }
         let mut out = Vec::new();
-        match origin {
-            TaskOrigin::Admitted => {
-                if self.cfg.mode == Mode::Ddi && self.role.is_source {
-                    // Round-robin whole images across all active workers
-                    // (including the source). No partitioning, no exits.
-                    let n = self.num_workers;
-                    let mut target = self.ddi_next_target % n;
-                    for _ in 0..n {
-                        let ok = if target == self.id {
-                            self.active
-                        } else {
-                            self.peer_active[target] && self.neighbors.contains(&target)
-                        };
-                        if ok {
-                            break;
-                        }
-                        target = (target + 1) % n;
-                    }
-                    self.ddi_next_target = target + 1;
-                    if target != self.id {
-                        let mut task = task;
-                        task.hops += 1;
-                        if self.in_window(now) {
-                            self.stats.offloaded_out += 1;
-                            self.stats.offload_targets[target] += 1;
-                        }
-                        out.push(Action::Send {
-                            to: target,
-                            bytes: self.meta.stage_in_bytes[0],
-                            payload: Payload::Task(task),
-                            needs_encode: false,
-                        });
-                        return out;
-                    }
+        if self.cfg.mode == Mode::Ddi && self.role.is_source {
+            // Round-robin whole images across all active workers
+            // (including the source). No partitioning, no exits.
+            let n = self.num_workers;
+            let mut target = self.ddi_next_target % n;
+            for _ in 0..n {
+                let ok = if target == self.id {
+                    self.active
+                } else {
+                    self.peer_active[target] && self.neighbors.contains(&target)
+                };
+                if ok {
+                    break;
                 }
-                self.queues.input.push(task);
+                target = (target + 1) % n;
             }
-            TaskOrigin::Wire => {
-                if !self.active {
-                    // Arrived while this worker was gone: the fabric
-                    // re-homes it to its admitting source (multi-hop if
-                    // need be) so no data is lost.
-                    self.send_rehome(task, &mut out);
-                    return out;
-                }
+            self.ddi_next_target = target + 1;
+            if target != self.id {
+                let mut task = task;
+                task.hops += 1;
                 if self.in_window(now) {
-                    self.stats.received += 1;
+                    self.stats.offloaded_out += 1;
+                    self.stats.offload_targets[target] += 1;
                 }
-                self.queues.input.push(task);
+                self.push_send(now, target, Envelope::TaskBatch(vec![task]), false, &mut out);
+                return out;
             }
-            TaskOrigin::Rehomed => {
-                self.queues.input.push(task);
-            }
+        }
+        self.queues.input.push(task);
+        if let Some(a) = self.maybe_start(now) {
+            out.push(a);
+        }
+        out
+    }
+
+    /// One or more tasks arrived together — a wire `TaskBatch` envelope,
+    /// or re-homed work reaching its source. Each task is merged through
+    /// the input discipline's `push` in the envelope's (admission) order,
+    /// so per-class queue accounting is exactly what k one-task arrivals
+    /// would have produced; compute/offload scans run once for the whole
+    /// batch.
+    pub fn on_task_batch(&mut self, now: f64, tasks: Vec<Task>, origin: TaskOrigin) -> Vec<Action> {
+        debug_assert!(origin != TaskOrigin::Admitted, "admission is one task at a time");
+        let mut out = Vec::new();
+        if origin == TaskOrigin::Wire && !self.active {
+            // Arrived while this worker was gone: the fabric re-homes
+            // everything to its admitting source (multi-hop if need be)
+            // so no data is lost.
+            self.rehome_all(now, tasks, &mut out);
+            return out;
+        }
+        if origin == TaskOrigin::Wire && self.in_window(now) {
+            self.stats.received += tasks.len() as u64;
+        }
+        for task in tasks {
+            self.queues.input.push(task);
         }
         if let Some(a) = self.maybe_start(now) {
             out.push(a);
@@ -600,6 +613,12 @@ impl WorkerCore {
         }
 
         let mut actions = Vec::new();
+        // Exits and churn-displaced successors are collected in batch
+        // order, then consecutive same-kind/same-source runs share an
+        // envelope — a batch completion pays per *envelope*, not per
+        // task, on every relay leg, while the wire still sees the
+        // elements in completion order.
+        let mut outbound: Vec<Outbound> = Vec::new();
         for (task, (out, exit_point)) in batch.into_iter().zip(results) {
             let is_final = exit_point >= self.meta.num_stages || self.cfg.mode == Mode::Ddi;
             let threshold = if self.cfg.no_early_exit { f32::INFINITY } else { self.t_e };
@@ -619,7 +638,7 @@ impl WorkerCore {
                     if self.in_window(now) {
                         self.stats.exits += 1;
                     }
-                    let result = InferenceResult {
+                    outbound.push(Outbound::Exit(InferenceResult {
                         sample: task.sample,
                         exit_point,
                         prediction: out.prediction,
@@ -629,8 +648,7 @@ impl WorkerCore {
                         exited_on: self.id,
                         source: task.source,
                         class: task.class,
-                    };
-                    self.deliver_result(now, result, &mut actions);
+                    }));
                 }
                 ExitDecision::ContinueLocal | ExitDecision::ContinueOffload => {
                     let id = self.alloc_task_id();
@@ -641,7 +659,7 @@ impl WorkerCore {
                     if !self.active {
                         // Completed while churned out: hand the successor
                         // back instead of stranding it on an inactive queue.
-                        self.send_rehome(succ, &mut actions);
+                        outbound.push(Outbound::Displaced(succ));
                     } else if decision == ExitDecision::ContinueLocal {
                         self.queues.input.push(succ);
                     } else {
@@ -650,6 +668,7 @@ impl WorkerCore {
                 }
             }
         }
+        self.emit_outbound(now, outbound, &mut actions);
 
         self.try_offload(now, &mut actions);
         if let Some(a) = self.maybe_start(now) {
@@ -676,86 +695,266 @@ impl WorkerCore {
 
     // -- results and re-homes (multi-hop delivery) ---------------------------
 
-    /// Put `result` where it belongs: record it if this worker is its
-    /// admitting source, otherwise send it one hop closer. The routing
-    /// table guarantees progress, so a result crosses at most n-1 links.
-    fn deliver_result(&mut self, now: f64, result: InferenceResult, out: &mut Vec<Action>) {
-        if result.source == self.id {
-            out.push(Action::RecordResult { result });
-        } else if let Some(hop) = self.next_hop[result.source] {
-            out.push(Action::Send {
-                to: hop,
-                payload: Payload::Result(result),
-                bytes: RESULT_BYTES,
-                needs_encode: false,
-            });
-        } else {
-            // No route home — only possible on a disconnected custom
-            // topology that placed work it cannot report. Drop *with
-            // accounting* so conservation checks still see the loss.
-            if self.in_window(now) {
-                let last = self.failed_per_class.len().saturating_sub(1);
-                self.failed_per_class[(result.class as usize).min(last)] += 1;
+    /// Items per coalesced result / re-home envelope: 1 under
+    /// [`CoalesceMode::Off`] (the seed's one-message-per-item wire),
+    /// otherwise the run's `coalesce_max`.
+    fn coalesce_cap(&self) -> usize {
+        match self.cfg.sched.coalesce {
+            CoalesceMode::Off => 1,
+            CoalesceMode::Stage | CoalesceMode::StageClass => {
+                self.cfg.sched.coalesce_max.max(1)
             }
-            crate::log_debug!(
-                "worker {}: result for unreachable source {} dropped",
-                self.id,
-                result.source
-            );
         }
     }
 
-    /// A result message arrived. Its admitting source records it; every
-    /// other worker relays it one hop closer (this is what replaces the
-    /// old DES-only "mis-delivered result" special case — relaying is now
-    /// a first-class, driver-agnostic behaviour).
-    pub fn on_result(&mut self, now: f64, result: InferenceResult) -> Vec<Action> {
+    /// Whether two items may share one coalesced envelope class-wise:
+    /// under `stage-class` an envelope never mixes traffic classes (the
+    /// mode's strict per-class isolation applies to results and re-homes
+    /// too, not just task batches).
+    fn same_envelope_class(&self, a: u8, b: u8) -> bool {
+        self.cfg.sched.coalesce != CoalesceMode::StageClass || a == b
+    }
+
+    /// Emit a finished batch's outbound consequences in element order:
+    /// local exits record in place, remote exits and displaced successors
+    /// go one hop toward their source — consecutive same-kind runs headed
+    /// to the same source (and class, under `stage-class`) share an
+    /// envelope, a kind/source boundary flushes. With `coalesce = off`
+    /// every item flushes immediately, reproducing the seed's per-element
+    /// emit (and DES jitter-draw) order bit for bit.
+    fn emit_outbound(&mut self, now: f64, items: Vec<Outbound>, out: &mut Vec<Action>) {
+        let cap = self.coalesce_cap();
+        let mut results: Vec<InferenceResult> = Vec::new();
+        let mut rehomes: Vec<Task> = Vec::new();
+        for item in items {
+            match item {
+                Outbound::Exit(r) => {
+                    self.flush_rehomes(now, &mut rehomes, out);
+                    if r.source == self.id {
+                        self.flush_results(now, &mut results, out);
+                        out.push(Action::RecordResult { result: r });
+                    } else if results.last().is_some_and(|g| {
+                        g.source == r.source && self.same_envelope_class(g.class, r.class)
+                    }) && results.len() < cap
+                    {
+                        results.push(r);
+                    } else {
+                        self.flush_results(now, &mut results, out);
+                        results.push(r);
+                    }
+                }
+                Outbound::Displaced(t) => {
+                    self.flush_results(now, &mut results, out);
+                    if rehomes.last().is_some_and(|g| {
+                        g.source == t.source && self.same_envelope_class(g.class, t.class)
+                    }) && rehomes.len() < cap
+                    {
+                        rehomes.push(t);
+                    } else {
+                        self.flush_rehomes(now, &mut rehomes, out);
+                        rehomes.push(t);
+                    }
+                }
+            }
+        }
+        self.flush_results(now, &mut results, out);
+        self.flush_rehomes(now, &mut rehomes, out);
+    }
+
+    /// Put each result where it belongs: record it if this worker is its
+    /// admitting source, otherwise send it one hop closer — consecutive
+    /// results headed to the same source (same class under `stage-class`)
+    /// share one envelope (bounded by the coalesce cap). The routing
+    /// table guarantees progress, so a result crosses at most n-1 links.
+    fn deliver_results(
+        &mut self,
+        now: f64,
+        results: Vec<InferenceResult>,
+        out: &mut Vec<Action>,
+    ) {
+        let cap = self.coalesce_cap();
+        let mut group: Vec<InferenceResult> = Vec::new();
+        for r in results {
+            if r.source == self.id {
+                self.flush_results(now, &mut group, out);
+                out.push(Action::RecordResult { result: r });
+            } else if group.last().is_some_and(
+                |g| g.source == r.source && self.same_envelope_class(g.class, r.class),
+            ) && group.len() < cap
+            {
+                group.push(r);
+            } else {
+                self.flush_results(now, &mut group, out);
+                group.push(r);
+            }
+        }
+        self.flush_results(now, &mut group, out);
+    }
+
+    /// Send one same-source result group one hop closer to its source (or
+    /// drop it *with accounting* when no route exists — only possible on
+    /// a disconnected custom topology that placed work it cannot report).
+    fn flush_results(
+        &mut self,
+        now: f64,
+        group: &mut Vec<InferenceResult>,
+        out: &mut Vec<Action>,
+    ) {
+        if group.is_empty() {
+            return;
+        }
+        let results = std::mem::take(group);
+        let source = results[0].source;
+        match self.next_hop[source] {
+            Some(hop) => {
+                self.push_send(now, hop, Envelope::Result(results), false, out);
+            }
+            None => {
+                if self.in_window(now) {
+                    let last = self.failed_per_class.len().saturating_sub(1);
+                    for r in &results {
+                        self.failed_per_class[(r.class as usize).min(last)] += 1;
+                    }
+                }
+                crate::log_debug!(
+                    "worker {}: {} result(s) for unreachable source {} dropped",
+                    self.id,
+                    results.len(),
+                    source
+                );
+            }
+        }
+    }
+
+    /// A result envelope arrived (same-source by construction). Its
+    /// admitting source records every item; every other worker relays the
+    /// envelope one hop closer — one wire charge per leg, however many
+    /// results ride it (this is what replaces the old DES-only
+    /// "mis-delivered result" special case — relaying is a first-class,
+    /// driver-agnostic behaviour).
+    pub fn on_result(&mut self, now: f64, results: Vec<InferenceResult>) -> Vec<Action> {
         let mut out = Vec::new();
-        let forwards = result.source != self.id && self.next_hop[result.source].is_some();
+        let Some(first) = results.first() else {
+            return out;
+        };
+        let forwards = first.source != self.id && self.next_hop[first.source].is_some();
         if forwards && self.in_window(now) {
             self.stats.relayed += 1;
         }
-        self.deliver_result(now, result, &mut out);
+        self.deliver_results(now, results, &mut out);
         out
     }
 
-    /// Route `task` back to its admitting source: one hop closer if remote,
-    /// straight into the input queue if this worker *is* the source. The
-    /// no-route fallback keeps the task queued locally rather than losing
-    /// it (it replays when the worker rejoins).
-    fn send_rehome(&mut self, task: Task, out: &mut Vec<Action>) {
-        if task.source == self.id {
-            self.queues.input.push(task);
+    /// Route a same-source batch of displaced tasks back to its admitting
+    /// source: one hop closer if remote, straight into the input queue if
+    /// this worker *is* the source. The no-route fallback keeps the tasks
+    /// queued locally rather than losing them (they replay when the
+    /// worker rejoins).
+    fn send_rehome_batch(&mut self, now: f64, tasks: Vec<Task>, out: &mut Vec<Action>) {
+        let Some(first) = tasks.first() else {
+            return;
+        };
+        debug_assert!(
+            tasks.iter().all(|t| t.source == first.source),
+            "re-home envelopes are same-source by construction"
+        );
+        let source = first.source;
+        if source == self.id {
+            for t in tasks {
+                self.queues.input.push(t);
+            }
             return;
         }
-        match self.next_hop[task.source] {
-            Some(hop) => {
-                let bytes = self.task_wire_bytes(&task);
-                out.push(Action::Send {
-                    to: hop,
-                    payload: Payload::Rehome(task),
-                    bytes,
-                    needs_encode: false,
-                });
+        match self.next_hop[source] {
+            Some(hop) => self.push_send(now, hop, Envelope::Rehome(tasks), false, out),
+            None => {
+                for t in tasks {
+                    self.queues.input.push(t);
+                }
             }
-            None => self.queues.input.push(task),
         }
     }
 
-    /// A re-homing task arrived over the wire: requeue it if this worker
-    /// is its admitting source, otherwise relay it one hop closer. Relays
-    /// happen even while churned out — the radio keeps forwarding; only
-    /// *compute* stops (the fabric's no-data-loss guarantee).
-    pub fn on_rehome(&mut self, now: f64, task: Task) -> Vec<Action> {
-        if task.source == self.id {
-            return self.on_task(now, task, TaskOrigin::Rehomed);
+    /// Send one pending same-source re-home group on its way (no-op when
+    /// empty).
+    fn flush_rehomes(&mut self, now: f64, group: &mut Vec<Task>, out: &mut Vec<Action>) {
+        if !group.is_empty() {
+            let flushed = std::mem::take(group);
+            self.send_rehome_batch(now, flushed, out);
         }
-        if self.next_hop[task.source].is_some() && self.in_window(now) {
+    }
+
+    /// Group a stream of displaced tasks (admission order, possibly mixed
+    /// sources) into same-source (same-class under `stage-class`) re-home
+    /// envelopes: consecutive matching tasks share an envelope, bounded
+    /// by the coalesce cap — so a churned worker's backlog goes home one
+    /// envelope per run instead of one message per task (`coalesce = off`
+    /// keeps the seed's per-task wire).
+    fn rehome_all(&mut self, now: f64, tasks: Vec<Task>, out: &mut Vec<Action>) {
+        let cap = self.coalesce_cap();
+        let mut group: Vec<Task> = Vec::new();
+        for t in tasks {
+            if group.last().is_some_and(
+                |g| g.source == t.source && self.same_envelope_class(g.class, t.class),
+            ) && group.len() < cap
+            {
+                group.push(t);
+            } else {
+                self.flush_rehomes(now, &mut group, out);
+                group.push(t);
+            }
+        }
+        self.flush_rehomes(now, &mut group, out);
+    }
+
+    /// A re-homing envelope arrived (same-source by construction): requeue
+    /// everything if this worker is the admitting source, otherwise relay
+    /// the envelope one hop closer. Relays happen even while churned out —
+    /// the radio keeps forwarding; only *compute* stops (the fabric's
+    /// no-data-loss guarantee).
+    pub fn on_rehome(&mut self, now: f64, tasks: Vec<Task>) -> Vec<Action> {
+        let Some(first) = tasks.first() else {
+            return Vec::new();
+        };
+        if first.source == self.id {
+            return self.on_task_batch(now, tasks, TaskOrigin::Rehomed);
+        }
+        if self.next_hop[first.source].is_some() && self.in_window(now) {
             self.stats.relayed += 1;
         }
         let mut out = Vec::new();
-        self.send_rehome(task, &mut out);
+        self.send_rehome_batch(now, tasks, &mut out);
         out
+    }
+
+    /// The single choke point for outbound traffic: every envelope leaving
+    /// this worker is charged here with the shared
+    /// [`Envelope::encoded_bytes`] contract — the *same* number the
+    /// drivers put on their medium — and folded into the per-worker wire
+    /// counters (`wire_bytes`, `envelopes_sent`, `coalesced_tasks`,
+    /// `wire_bytes_saved`).
+    fn push_send(
+        &mut self,
+        now: f64,
+        to: usize,
+        env: Envelope,
+        needs_encode: bool,
+        out: &mut Vec<Action>,
+    ) {
+        if self.in_window(now) {
+            let bytes = env.encoded_bytes(&self.meta);
+            self.stats.wire_bytes += bytes as u64;
+            if matches!(env, Envelope::TaskBatch(_)) {
+                self.stats.envelopes_sent += 1;
+            }
+            let items = env.items();
+            if items > 1 {
+                self.stats.coalesced_tasks += (items - 1) as u64;
+                self.stats.wire_bytes_saved +=
+                    env.unbatched_bytes(&self.meta).saturating_sub(bytes) as u64;
+            }
+        }
+        out.push(Action::Send { to, env, needs_encode });
     }
 
     // -- gossip --------------------------------------------------------------
@@ -793,15 +992,11 @@ impl WorkerCore {
         if self.in_window(now) {
             self.stats.gossip_bytes += (bytes * targets.len()) as u64;
         }
-        targets
-            .into_iter()
-            .map(|m| Action::Send {
-                to: m,
-                payload: Payload::State(summary.clone()),
-                bytes,
-                needs_encode: false,
-            })
-            .collect()
+        let mut out = Vec::new();
+        for m in targets {
+            self.push_send(now, m, Envelope::State(summary.clone()), false, &mut out);
+        }
+        out
     }
 
     /// A gossiped summary arrived from `from`: let the offload policy
@@ -863,10 +1058,11 @@ impl WorkerCore {
                 // `QueueDiscipline::drain_all`). Every task routes to its
                 // *own* admitting source via the next-hop table — a
                 // mid-line worker's backlog travels multi-hop instead of
-                // assuming the source is adjacent.
-                for task in self.queues.drain_all_ordered() {
-                    self.send_rehome(task, &mut out);
-                }
+                // assuming the source is adjacent — and consecutive
+                // same-source tasks share one re-home envelope when the
+                // run coalesces.
+                let drained = self.queues.drain_all_ordered();
+                self.rehome_all(now, drained, &mut out);
             }
         } else {
             self.peer_active[worker] = join;
@@ -886,14 +1082,15 @@ impl WorkerCore {
         self.d_est[to].push(delay_s);
     }
 
-    /// Payload size of τ_k on the wire: the feature tensor entering stage k.
-    /// Shared with the drivers (e.g. the realtime re-homing path) so wire
-    /// sizing lives in exactly one place.
-    pub(crate) fn task_wire_bytes(&self, task: &Task) -> usize {
-        if task.encoded {
-            return self.meta.ae.as_ref().map(|ae| ae.code_bytes).unwrap_or(0);
+    /// The driver's AE step shipped some payloads raw (encoder
+    /// unavailable or failed), so the envelope left the worker larger
+    /// than the code size counted at emit time: reconcile `wire_bytes`
+    /// with the bytes actually charged to the medium. (`wire_bytes_saved`
+    /// needs no correction — frame savings are payload-size-independent.)
+    pub fn note_wire_recharge(&mut self, now: f64, extra_bytes: u64) {
+        if self.in_window(now) {
+            self.stats.wire_bytes += extra_bytes;
         }
-        self.meta.stage_in_bytes[task.stage - 1]
     }
 
     /// Optimistic default for a peer never heard from (empty queue, fast
@@ -907,9 +1104,15 @@ impl WorkerCore {
     // -- offloading (the OffloadPolicy seam) -----------------------------------
 
     /// Offer the head-of-line output task to the run's offload policy,
-    /// repeatedly, until it declines. Falls back to reclaiming the task
-    /// for local compute when starving (prevents livelock; the paper's
-    /// Alg. 2 spins, which neither driver can afford).
+    /// repeatedly, until it declines. When the policy accepts a target and
+    /// the run coalesces ([`CoalesceMode`]), the whole same-stage (and,
+    /// under `stage-class`, same-class) run behind the head — up to
+    /// `coalesce_max` — is drained into ONE `TaskBatch` envelope, sorted
+    /// into admission order for the receiver's discipline; the policy saw
+    /// the coalescible run length up front via
+    /// [`OffloadPolicy::choose_coalesced`]. Falls back to reclaiming the
+    /// head task for local compute when starving (prevents livelock; the
+    /// paper's Alg. 2 spins, which neither driver can afford).
     fn try_offload(&mut self, now: f64, out: &mut Vec<Action>) {
         let mut cand_ready = false;
         loop {
@@ -958,6 +1161,21 @@ impl WorkerCore {
                 cand_ready = true;
             }
 
+            // How many tasks one envelope to the chosen target would carry
+            // (1 unless the run coalesces) — the policy weighs this run
+            // length against slack/remote capacity before committing.
+            let run_len = match self.cfg.sched.coalesce {
+                CoalesceMode::Off => 1,
+                mode => self
+                    .queues
+                    .output
+                    .coalescible_run(
+                        self.cfg.sched.coalesce_max,
+                        mode == CoalesceMode::StageClass,
+                    )
+                    .max(1),
+            };
+
             let chosen = {
                 let task = self.queues.output.peek().expect("non-empty after expire");
                 let ctx = OffloadCtx {
@@ -969,7 +1187,7 @@ impl WorkerCore {
                     candidates: &self.cand_buf,
                     next_hop: &self.next_hop,
                 };
-                self.offload.choose(&ctx, &mut self.rng)
+                self.offload.choose_coalesced(&ctx, run_len, &mut self.rng)
             };
 
             match chosen {
@@ -978,40 +1196,69 @@ impl WorkerCore {
                         self.cand_buf.iter().any(|(c, _)| *c == m),
                         "policy chose {m}, not an active neighbor"
                     );
-                    let mut task =
+                    let head =
                         self.queues.output.pop_next(now).expect("peeked task still queued");
                     // AE boundary: encode before the wire (stage-2 inputs
-                    // only, paper §V — only the first ResNet exit has an AE).
+                    // only, paper §V — only the first ResNet exit has an
+                    // AE). Batches are same-stage, so the whole envelope
+                    // shares the decision.
                     let needs_encode = self.cfg.use_ae
-                        && task.stage == 2
-                        && !task.encoded
+                        && head.stage == 2
+                        && !head.encoded
                         && self.meta.ae.is_some();
-                    if needs_encode {
-                        task.encoded = true;
+                    let (stage, class) = (head.stage, head.class);
+                    let mut batch = vec![head];
+                    if self.cfg.sched.coalesce != CoalesceMode::Off {
+                        // Drain the same-stage (same-class under
+                        // stage-class) run behind the head into the same
+                        // envelope — capped at `run_len`, the run the
+                        // policy actually priced (a conservative hint
+                        // ships a shorter run, never a longer one).
+                        // `expire` ran above, so peeks are truthful about
+                        // what a pop returns.
+                        while batch.len() < run_len {
+                            let take = self.queues.output.peek().is_some_and(|t| {
+                                t.stage == stage
+                                    && (self.cfg.sched.coalesce == CoalesceMode::Stage
+                                        || t.class == class)
+                            });
+                            if !take {
+                                break;
+                            }
+                            let t = self
+                                .queues
+                                .output
+                                .pop_next(now)
+                                .expect("peeked task still queued");
+                            batch.push(t);
+                        }
+                        // Receivers merge through their discipline in
+                        // admission order (the net-layer batch contract).
+                        batch.sort_by(Task::admission_cmp);
                     }
-                    let bytes = self.task_wire_bytes(&task);
-                    task.hops += 1;
+                    let k = batch.len();
+                    for t in batch.iter_mut() {
+                        if needs_encode {
+                            t.encoded = true;
+                        }
+                        t.hops += 1;
+                    }
                     if self.in_window(now) {
-                        self.stats.offloaded_out += 1;
-                        self.stats.offload_targets[m] += 1;
+                        self.stats.offloaded_out += k as u64;
+                        self.stats.offload_targets[m] += k as u64;
                     }
                     // Optimistic view update until the next gossip refresh
                     // (mirrored into the candidate buffer so the next loop
                     // iteration sees it without a rebuild; a never-gossiped
                     // default view is not bumped, exactly as before).
                     if let Some(v) = self.views[m].as_mut() {
-                        v.input_len += 1;
+                        v.input_len += k;
                         if let Some((_, s)) = self.cand_buf.iter_mut().find(|(c, _)| *c == m)
                         {
-                            s.input_len += 1;
+                            s.input_len += k;
                         }
                     }
-                    out.push(Action::Send {
-                        to: m,
-                        payload: Payload::Task(task),
-                        bytes,
-                        needs_encode,
-                    });
+                    self.push_send(now, m, Envelope::TaskBatch(batch), needs_encode, out);
                 }
                 None => {
                     // The policy kept the head-of-line task. If local
@@ -1034,6 +1281,38 @@ impl WorkerCore {
 // ---------------------------------------------------------------------------
 // Shared engine execution (driver-side helper)
 // ---------------------------------------------------------------------------
+
+/// Sender-side autoencoder step for an outgoing task batch, shared by
+/// both drivers (`needs_encode` sends only). For every task the core
+/// marked `encoded`: a real feature tensor is run through the engine's
+/// encoder; when the engine has none (or errors), the task ships raw —
+/// `encoded` flips back so the shared charge function prices the raw
+/// tensor; on the oracle path (`features: None`) encoding is virtual and
+/// the byte/cost accounting stands. Returns how many tensors were
+/// (really or virtually) encoded — the count the DES driver charges
+/// `enc_cost_s` for.
+pub fn encode_batch(engine: &dyn InferenceEngine, tasks: &mut [Task]) -> usize {
+    let mut encoded = 0;
+    for task in tasks.iter_mut() {
+        if !task.encoded {
+            continue;
+        }
+        match task.features.take() {
+            Some(f) => match engine.encode(&f) {
+                Ok(Some(code)) => {
+                    task.features = Some(code);
+                    encoded += 1;
+                }
+                _ => {
+                    task.features = Some(f);
+                    task.encoded = false;
+                }
+            },
+            None => encoded += 1,
+        }
+    }
+    encoded
+}
 
 /// Run a same-stage batch through the engine the way both drivers must:
 /// decode AE payloads first (per element), then either one batched forward
@@ -1170,9 +1449,15 @@ mod tests {
         };
         let acts = remote.on_compute_done(0.01, batch, vec![(out(0.99), 1)], 0.002);
         match &acts[0] {
-            Action::Send { to: 0, payload: Payload::Result(r), bytes, .. } => {
-                assert_eq!(*bytes, RESULT_BYTES);
-                assert_eq!(r.exited_on, 1);
+            Action::Send { to: 0, env, .. } => {
+                assert_eq!(env.encoded_bytes(&meta2()), RESULT_BYTES);
+                match env {
+                    Envelope::Result(rs) => {
+                        assert_eq!(rs.len(), 1);
+                        assert_eq!(rs[0].exited_on, 1);
+                    }
+                    other => panic!("expected a result envelope, got {other:?}"),
+                }
             }
             other => panic!("expected result send, got {other:?}"),
         }
@@ -1203,7 +1488,8 @@ mod tests {
         // Successor went to the output queue; neighbor view is unknown so
         // the default (I_m = 0) applies: O_n = 1 > I_m = 0 opens the gate.
         let sent = acts.iter().any(|a| {
-            matches!(a, Action::Send { to: 1, payload: Payload::Task(t), .. } if t.stage == 2)
+            matches!(a, Action::Send { to: 1, env: Envelope::TaskBatch(b), .. }
+                     if b.len() == 1 && b[0].stage == 2)
         });
         assert!(sent, "expected a stage-2 task offload: {acts:?}");
     }
@@ -1223,7 +1509,7 @@ mod tests {
         let acts = w.on_compute_done(0.05, vec![task], vec![(out(0.10), 1)], 0.002);
         let sent = acts
             .iter()
-            .any(|a| matches!(a, Action::Send { payload: Payload::Task(_), .. }));
+            .any(|a| matches!(a, Action::Send { env: Envelope::TaskBatch(_), .. }));
         assert!(!sent, "gate should refuse: {acts:?}");
         assert_eq!(w.output_len(), 1);
     }
@@ -1274,7 +1560,10 @@ mod tests {
         let rehomed: Vec<u64> = acts
             .iter()
             .map(|a| match a {
-                Action::Send { to: 0, payload: Payload::Rehome(task), .. } => task.id,
+                Action::Send { to: 0, env: Envelope::Rehome(ts), .. } => {
+                    assert_eq!(ts.len(), 1, "coalesce = off keeps one task per envelope");
+                    ts[0].id
+                }
                 other => panic!("expected routed Rehome send, got {other:?}"),
             })
             .collect();
@@ -1290,7 +1579,7 @@ mod tests {
         let _ = remote.on_churn(1.0, 1, false);
         // A late wire arrival also re-homes.
         let acts = remote.on_task(1.1, Task::initial(99, 0, None, 1.0), TaskOrigin::Wire);
-        assert!(matches!(acts[0], Action::Send { to: 0, payload: Payload::Rehome(_), .. }));
+        assert!(matches!(acts[0], Action::Send { to: 0, env: Envelope::Rehome(_), .. }));
 
         // The source hears about the leave and stops offloading to 1.
         let mut src = core(0, &cfg, "2-node");
@@ -1302,7 +1591,9 @@ mod tests {
         let task = Task::initial(50, 0, None, 0.0);
         let acts = src.on_compute_done(1.2, vec![task], vec![(out(0.1), 1)], 0.002);
         assert!(
-            !acts.iter().any(|a| matches!(a, Action::Send { payload: Payload::Task(_), .. })),
+            !acts
+                .iter()
+                .any(|a| matches!(a, Action::Send { env: Envelope::TaskBatch(_), .. })),
             "must not offload to a churned-out peer: {acts:?}"
         );
     }
@@ -1333,11 +1624,15 @@ mod tests {
         assert_eq!(acts.len(), 2);
         for a in &acts {
             match a {
-                Action::Send { payload: Payload::State(s), bytes, .. } => {
+                Action::Send { env, .. } => {
                     // Baseline policies gossip only the paper's base
-                    // fields: the charge is the seed's fixed 32 bytes.
-                    assert_eq!(*bytes, s.encoded_bytes());
-                    assert_eq!(*bytes, crate::policy::BASE_SUMMARY_BYTES);
+                    // fields: the charge is the seed's fixed 32 bytes,
+                    // and the envelope charge IS the summary encoding.
+                    let Envelope::State(s) = env else {
+                        panic!("expected a state envelope, got {env:?}")
+                    };
+                    assert_eq!(env.encoded_bytes(&meta2()), s.encoded_bytes());
+                    assert_eq!(s.encoded_bytes(), crate::policy::BASE_SUMMARY_BYTES);
                 }
                 other => panic!("expected state send, got {other:?}"),
             }
@@ -1360,8 +1655,8 @@ mod tests {
         let per_msg = crate::policy::BASE_SUMMARY_BYTES + 2 * 4 + 8;
         for a in &acts {
             match a {
-                Action::Send { payload: Payload::State(s), bytes, .. } => {
-                    assert_eq!(*bytes, per_msg, "2 classes + slack on the wire");
+                Action::Send { env: Envelope::State(s), .. } => {
+                    assert_eq!(s.encoded_bytes(), per_msg, "2 classes + slack on the wire");
                     assert_eq!(s.per_class_input.len(), 2);
                     assert!(s.min_slack_s.is_some());
                 }
@@ -1382,8 +1677,12 @@ mod tests {
             let (t, _) = w.poll_admission(i as f64 * 0.02);
             let acts = w.on_task(i as f64 * 0.02, t, TaskOrigin::Admitted);
             match acts.first() {
-                Some(Action::Send { to, bytes, .. }) => {
-                    assert_eq!(*bytes, 12288, "whole image on the wire");
+                Some(Action::Send { to, env, .. }) => {
+                    assert_eq!(
+                        env.encoded_bytes(&meta2()),
+                        12288,
+                        "whole image on the wire"
+                    );
                     targets.push(*to);
                 }
                 Some(Action::StartCompute { .. }) => targets.push(0),
@@ -1490,11 +1789,11 @@ mod tests {
         // stranding on an inactive queue.
         let sends = acts
             .iter()
-            .filter(|a| matches!(a, Action::Send { payload: Payload::Result(_), .. }))
+            .filter(|a| matches!(a, Action::Send { env: Envelope::Result(_), .. }))
             .count();
         let rehomes = acts
             .iter()
-            .filter(|a| matches!(a, Action::Send { payload: Payload::Rehome(_), .. }))
+            .filter(|a| matches!(a, Action::Send { env: Envelope::Rehome(_), .. }))
             .count();
         assert_eq!(sends, 1, "{acts:?}");
         assert_eq!(rehomes, 2, "{acts:?}");
@@ -1601,23 +1900,29 @@ mod tests {
         let task = Task::initial(7, 0, None, 0.0);
         w2.busy = true;
         let acts = w2.on_compute_done(0.01, vec![task], vec![(out(0.99), 1)], 0.002);
-        let Action::Send { to, payload: Payload::Result(r), bytes, .. } = &acts[0] else {
+        let Action::Send { to, env, .. } = &acts[0] else {
             panic!("expected routed result send, got {acts:?}");
         };
-        assert_eq!((*to, *bytes), (1, RESULT_BYTES));
+        assert_eq!(*to, 1);
+        assert_eq!(env.encoded_bytes(&meta2()), RESULT_BYTES);
+        let Envelope::Result(rs) = env else {
+            panic!("expected a result envelope, got {env:?}");
+        };
+        assert_eq!(rs.len(), 1);
+        let r = rs[0];
         assert_eq!(r.source, 0);
         assert_eq!(r.exited_on, 2);
 
         // Worker 1 relays it one hop closer; worker 0 records it.
         let mut w1 = WorkerCore::new(1, &cfg, meta2(), &topo("line-4"), 8);
-        let acts = w1.on_result(0.02, *r);
+        let acts = w1.on_result(0.02, vec![r]);
         assert!(
-            matches!(acts[0], Action::Send { to: 0, payload: Payload::Result(_), .. }),
+            matches!(&acts[0], Action::Send { to: 0, env: Envelope::Result(_), .. }),
             "{acts:?}"
         );
         assert_eq!(w1.into_stats().relayed, 1, "relays are counted");
         let mut w0 = WorkerCore::new(0, &cfg, meta2(), &topo("line-4"), 8);
-        let acts = w0.on_result(0.03, *r);
+        let acts = w0.on_result(0.03, vec![r]);
         assert!(matches!(acts[0], Action::RecordResult { .. }), "{acts:?}");
         assert_eq!(w0.into_stats().relayed, 0, "terminal delivery is not a relay");
     }
@@ -1635,8 +1940,8 @@ mod tests {
         assert_eq!(acts.len(), 2, "one computing, two queued: {acts:?}");
         for a in &acts {
             assert!(
-                matches!(a, Action::Send { to: 2, payload: Payload::Rehome(t), .. }
-                         if t.source == 0),
+                matches!(a, Action::Send { to: 2, env: Envelope::Rehome(ts), .. }
+                         if ts.len() == 1 && ts[0].source == 0),
                 "rehome must route via worker 2: {a:?}"
             );
         }
@@ -1644,13 +1949,13 @@ mod tests {
         // The relay leg: worker 1 forwards toward 0; the source requeues
         // and immediately starts computing.
         let mut w1 = WorkerCore::new(1, &cfg, meta2(), &topo("line-4"), 8);
-        let acts = w1.on_rehome(1.1, Task::initial(9, 0, None, 0.0));
+        let acts = w1.on_rehome(1.1, vec![Task::initial(9, 0, None, 0.0)]);
         assert!(
-            matches!(acts[0], Action::Send { to: 0, payload: Payload::Rehome(_), .. }),
+            matches!(acts[0], Action::Send { to: 0, env: Envelope::Rehome(_), .. }),
             "{acts:?}"
         );
         let mut w0 = WorkerCore::new(0, &cfg, meta2(), &topo("line-4"), 8);
-        let acts = w0.on_rehome(1.2, Task::initial(9, 0, None, 0.0));
+        let acts = w0.on_rehome(1.2, vec![Task::initial(9, 0, None, 0.0)]);
         assert!(matches!(acts[0], Action::StartCompute { .. }), "{acts:?}");
         assert_eq!(w0.into_stats().relayed, 0);
     }
@@ -1672,6 +1977,187 @@ mod tests {
         let mut w3 = WorkerCore::new(3, &cfg, meta2(), &topo("line-4"), 8);
         let _ = w3.on_gossip(0.0, 2, NeighborSummary::base(0, 0.01, 0.11));
         assert!((w3.t_e() - 0.9).abs() < 1e-6, "sources never adopt");
+    }
+
+    // -- cross-worker batch coalescing (the net::Envelope wire) ----------------
+
+    /// Deterministic offload cfg: QueueOnly accepts whenever O_n > I_m
+    /// (no RNG), warmup 0 so counters are live from t = 0.
+    fn cfg_coalesce(mode: CoalesceMode) -> ExperimentConfig {
+        let mut cfg = cfg_fixed("2-node", 50.0, 0.9);
+        cfg.warmup_s = 0.0;
+        cfg.policy.offload = crate::policy::OffloadKind::QueueOnly;
+        cfg.sched.coalesce = mode;
+        cfg.sched.coalesce_max = 8;
+        cfg
+    }
+
+    fn stage2(id: u64, class: u8, admitted_at: f64) -> Task {
+        Task { stage: 2, class, ..Task::initial(id, 0, None, admitted_at) }
+    }
+
+    #[test]
+    fn coalesced_offload_drains_same_stage_run_into_one_envelope() {
+        let cfg = cfg_coalesce(CoalesceMode::Stage);
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("2-node"), 8);
+        w.busy = true; // keep the reclaim path out of the way
+        for id in [2u64, 1, 3] {
+            w.queues.output.push(stage2(id, 0, 0.0));
+        }
+        let mut acts = Vec::new();
+        w.try_offload(0.0, &mut acts);
+        assert_eq!(acts.len(), 1, "one envelope, not three: {acts:?}");
+        match &acts[0] {
+            Action::Send { to: 1, env, .. } => {
+                let Envelope::TaskBatch(batch) = env else {
+                    panic!("expected a task batch, got {env:?}")
+                };
+                let ids: Vec<u64> = batch.iter().map(|t| t.id).collect();
+                assert_eq!(ids, vec![1, 2, 3], "batch travels in admission order");
+                assert!(batch.iter().all(|t| t.stage == 2 && t.hops == 1));
+                // One frame for three tasks: two frames saved.
+                assert_eq!(
+                    env.encoded_bytes(&meta2()),
+                    3 * 8192 - 2 * crate::net::ENVELOPE_HEADER_BYTES
+                );
+            }
+            other => panic!("expected a coalesced send, got {other:?}"),
+        }
+        assert_eq!(w.output_len(), 0);
+        let stats = w.into_stats();
+        assert_eq!(stats.offloaded_out, 3, "per-task offload accounting is kept");
+        assert_eq!(stats.offload_targets[1], 3);
+        assert_eq!(stats.envelopes_sent, 1);
+        assert_eq!(stats.coalesced_tasks, 2);
+        assert_eq!(
+            stats.wire_bytes_saved,
+            2 * crate::net::ENVELOPE_HEADER_BYTES as u64
+        );
+        assert_eq!(stats.wire_bytes, (3 * 8192 - 2 * crate::net::ENVELOPE_HEADER_BYTES) as u64);
+    }
+
+    #[test]
+    fn stage_class_coalescing_stops_at_class_boundaries() {
+        let cfg = cfg_coalesce(CoalesceMode::StageClass);
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("2-node"), 8);
+        w.busy = true;
+        w.queues.output.push(stage2(1, 0, 0.0));
+        w.queues.output.push(stage2(2, 0, 0.1));
+        w.queues.output.push(stage2(3, 1, 0.2));
+        let mut acts = Vec::new();
+        w.try_offload(0.0, &mut acts);
+        // Two envelopes: the class-0 pair, then the class-1 singleton
+        // (QueueOnly keeps accepting: O_n = 1 > I_m = 0).
+        assert_eq!(acts.len(), 2, "{acts:?}");
+        let sizes: Vec<usize> = acts
+            .iter()
+            .map(|a| match a {
+                Action::Send { env: Envelope::TaskBatch(b), .. } => b.len(),
+                other => panic!("expected task sends, got {other:?}"),
+            })
+            .collect();
+        assert_eq!(sizes, vec![2, 1], "one envelope per class run");
+        let stats = w.into_stats();
+        assert_eq!(stats.envelopes_sent, 2);
+        assert_eq!(stats.coalesced_tasks, 1);
+    }
+
+    #[test]
+    fn coalesce_off_keeps_one_task_per_envelope() {
+        let cfg = cfg_coalesce(CoalesceMode::Off);
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("2-node"), 8);
+        w.busy = true;
+        for id in 1..=3u64 {
+            w.queues.output.push(stage2(id, 0, 0.0));
+        }
+        let mut acts = Vec::new();
+        w.try_offload(0.0, &mut acts);
+        assert_eq!(acts.len(), 3, "seed wire: one message per task: {acts:?}");
+        for a in &acts {
+            match a {
+                Action::Send { env, .. } => {
+                    assert_eq!(env.items(), 1);
+                    assert_eq!(env.encoded_bytes(&meta2()), 8192, "seed byte charge");
+                }
+                other => panic!("expected task sends, got {other:?}"),
+            }
+        }
+        let stats = w.into_stats();
+        assert_eq!(stats.envelopes_sent, 3);
+        assert_eq!(stats.coalesced_tasks, 0);
+        assert_eq!(stats.wire_bytes_saved, 0);
+    }
+
+    #[test]
+    fn receiver_merges_batch_through_discipline_in_envelope_order() {
+        let mut cfg = cfg_fixed("2-node", 50.0, 0.9);
+        cfg.warmup_s = 0.0;
+        cfg.sched.discipline = DisciplineKind::StrictPriority;
+        cfg.sched = cfg.sched.with_classes(2);
+        let mut w = WorkerCore::new(1, &cfg, meta2(), &topo("2-node"), 8);
+        w.busy = true; // hold the queue so the merge is observable
+        let batch = vec![stage2(1, 1, 0.0), stage2(2, 0, 0.1), stage2(3, 1, 0.2)];
+        let acts = w.on_task_batch(0.0, batch, TaskOrigin::Wire);
+        assert!(acts.is_empty(), "busy worker only queues: {acts:?}");
+        assert_eq!(w.input_len(), 3);
+        assert_eq!(w.input_class_len(0), 1);
+        assert_eq!(w.input_class_len(1), 2);
+        // The class-0 element jumps the lane exactly as three one-task
+        // arrivals would have arranged it.
+        let done = Task::initial(9, 0, None, 0.0);
+        let acts = w.on_compute_done(0.01, vec![done], vec![(out(0.99), 1)], 0.002);
+        let started = acts
+            .iter()
+            .find_map(|a| match a {
+                Action::StartCompute { batch, .. } => Some(&batch[0]),
+                _ => None,
+            })
+            .expect("next task starts");
+        assert_eq!((started.id, started.class), (2, 0));
+        let stats = w.into_stats();
+        assert_eq!(stats.received, 3, "each batched task counts as received");
+    }
+
+    #[test]
+    fn churn_rehome_coalesces_same_source_runs() {
+        let mut cfg = cfg_coalesce(CoalesceMode::Stage);
+        cfg.warmup_s = 0.0;
+        let mut w = WorkerCore::new(1, &cfg, meta2(), &topo("2-node"), 8);
+        for i in 0..4 {
+            w.on_task(0.0, Task::initial(i, 0, None, 0.0), TaskOrigin::Wire);
+        }
+        // One computing, three queued; all share source 0, so the drain
+        // goes home as ONE re-home envelope.
+        let acts = w.on_churn(1.0, 1, false);
+        assert_eq!(acts.len(), 1, "{acts:?}");
+        match &acts[0] {
+            Action::Send { to: 0, env: Envelope::Rehome(ts), .. } => {
+                let ids: Vec<u64> = ts.iter().map(|t| t.id).collect();
+                assert_eq!(ids, vec![1, 2, 3], "admission order inside the envelope");
+            }
+            other => panic!("expected one coalesced rehome, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stage_class_rehome_envelopes_stay_class_pure() {
+        let mut cfg = cfg_coalesce(CoalesceMode::StageClass);
+        cfg.sched = cfg.sched.with_classes(2);
+        let mut w = WorkerCore::new(1, &cfg, meta2(), &topo("2-node"), 8);
+        w.busy = true; // hold the queue so the whole backlog drains at churn
+        for (id, class) in [(1u64, 0u8), (2, 0), (3, 1)] {
+            let t = Task { class, ..Task::initial(id, 0, None, 0.0) };
+            w.on_task(0.0, t, TaskOrigin::Wire);
+        }
+        let acts = w.on_churn(1.0, 1, false);
+        let sizes: Vec<usize> = acts
+            .iter()
+            .map(|a| match a {
+                Action::Send { env: Envelope::Rehome(ts), .. } => ts.len(),
+                other => panic!("expected rehome sends, got {other:?}"),
+            })
+            .collect();
+        assert_eq!(sizes, vec![2, 1], "stage-class envelopes never mix classes");
     }
 
     #[test]

@@ -19,7 +19,10 @@
 //! themselves are pluggable: the [`policy`] subsystem puts Algs 1–4 behind
 //! `ExitPolicy` / `OffloadPolicy` / `AdaptPolicy` traits (plus extensible
 //! gossip summaries), the same way [`sched`] makes queue order and
-//! [`routing`] makes data placement a config choice. Runs are launched
+//! [`routing`] makes data placement a config choice. Everything that
+//! crosses a link travels as a typed [`net::Envelope`] — batches are
+//! first-class on the wire, and both drivers charge bytes through the one
+//! shared [`net::Envelope::encoded_bytes`] contract. Runs are launched
 //! through the [`coordinator::Run`] builder:
 //!
 //! ```ignore
@@ -38,6 +41,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod dataset;
 pub mod experiments;
+pub mod net;
 pub mod policy;
 pub mod routing;
 pub mod runtime;

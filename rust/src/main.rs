@@ -73,6 +73,10 @@ fn print_help() {
            --quantum Q       DRR service quantum (one weight for all classes)\n\
            --drop-late       EDF: discard tasks whose deadline passed\n\
            --batch N         max same-stage tasks per batched engine call\n\
+           --coalesce M      cross-worker batch coalescing: off (default) |\n\
+                             stage | stage-class — offloads drain same-stage\n\
+                             runs into one wire envelope\n\
+           --coalesce-max N  cap on tasks per coalesced envelope (default 8)\n\
            --json            print the full RunReport as JSON"
     );
 }
@@ -149,6 +153,11 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
         cfg.sched.class_quantum = vec![quantum; classes];
     }
     cfg.sched.batch.max_batch = args.usize_or("batch", 1)?;
+    // Cross-worker batch coalescing (net::Envelope): how offloads share
+    // wire envelopes.
+    cfg.sched.coalesce = mdi_exit::sched::CoalesceMode::parse(args.str_or("coalesce", "off"))
+        .map_err(|e| anyhow::anyhow!("--coalesce: {e}"))?;
+    cfg.sched.coalesce_max = args.usize_or("coalesce-max", cfg.sched.coalesce_max)?;
     // Decision policies (crate::policy): which Alg. 1/2 variants run.
     cfg.policy.exit = PolicyConfig::parse_exit(args.str_or("exit-policy", "alg1"))?;
     cfg.policy.offload = PolicyConfig::parse_offload(args.str_or("offload-policy", "alg2"))?;
@@ -205,6 +214,14 @@ fn cmd_run(args: &Args, artifacts: &str) -> Result<()> {
                  report.exit_fractions().iter().map(|f| (f * 100.0).round() / 100.0)
                        .collect::<Vec<_>>());
         println!("  bytes on wire {:>10}", report.bytes_on_wire);
+        if report.coalesced_tasks() > 0 {
+            println!(
+                "  envelopes     {:>10}  (+{} coalesced tasks, {} B saved)",
+                report.envelopes_sent(),
+                report.coalesced_tasks(),
+                report.wire_bytes_saved()
+            );
+        }
         if report.per_class.len() > 1 || report.dropped > 0 {
             for (c, cs) in report.per_class.iter_mut().enumerate() {
                 println!(

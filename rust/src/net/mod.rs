@@ -1,0 +1,248 @@
+//! The unified wire layer: every message between workers is a typed
+//! [`Envelope`], and **batches are first-class on the wire**.
+//!
+//! Before this module the two drivers each kept a private mirror of the
+//! core's payload enum (`worker::Payload`, the DES driver's `Msg`, the
+//! realtime driver's `NetMsg`) and every hop moved exactly one task — so
+//! the engine-side batching of [`crate::sched::BatchPolicy`] was undone at
+//! the first offload: a batch formed on worker n crossed the link as k
+//! separate messages, each paying its own base latency, jitter draw,
+//! contention slot, and per-message framing. DEFER (PAPERS.md) identifies
+//! precisely this per-task communication cost as the MDI bottleneck.
+//! [`Envelope`] closes it: a same-stage run of tasks travels as ONE
+//! `TaskBatch`, results and churn re-homes headed to the same source share
+//! an envelope per relay leg, and both drivers charge the link with the
+//! same [`Envelope::encoded_bytes`] — one charging function, two media.
+//!
+//! ## Encoding / charging contract
+//!
+//! Every envelope charge includes one fixed [`ENVELOPE_HEADER_BYTES`]
+//! frame (routing ids, kind tag, item count) plus the per-item payload:
+//!
+//! * `TaskBatch` / `Rehome` — each task contributes its feature tensor
+//!   entering the stage ([`task_wire_bytes`]: `stage_in_bytes[stage-1]`,
+//!   or the AE code size when the payload is encoded), *minus* the frame
+//!   a lone message would have carried. A singleton therefore charges
+//!   exactly what the seed charged for one task (`task_wire_bytes`), and
+//!   a batch of k sheds `(k-1) ×` [`ENVELOPE_HEADER_BYTES`] — the wire
+//!   analogue of the engine's amortized dispatch.
+//! * `Result` — [`RESULT_BYTES`] for a singleton (the seed's classifier
+//!   output + header), `header + k × (RESULT_BYTES - header)` for k.
+//! * `State` — the gossiped summary's own
+//!   [`crate::policy::NeighborSummary::encoded_bytes`] (its base encoding
+//!   already frames the message; gossip is never batched).
+//!
+//! Both drivers MUST obtain the wire charge from [`Envelope::encoded_bytes`]
+//! *after* any autoencoder step (an encode failure flips `task.encoded`
+//! back and the same call then charges the raw tensor) — the DES driver
+//! feeds it to the virtual link-delay model, the realtime transport frames
+//! the delivery delay with it, and [`crate::coordinator::WorkerCore`]
+//! counts the identical number into the per-worker `wire_bytes` /
+//! `wire_bytes_saved` counters when it emits the send. When an encode
+//! falls back to raw, the driver reconciles the core's emit-time count
+//! through `WorkerCore::note_wire_recharge`, so the counters always equal
+//! what the medium was charged. There is no other byte-sizing code path.
+//!
+//! ## Batch invariants
+//!
+//! * A `TaskBatch` is same-stage by construction (the engine runs one
+//!   batched forward per stage) and sorted in *admission order*
+//!   (`admitted_at`, ties by id), so a receiver merging it through its
+//!   [`crate::sched::QueueDiscipline::push`] sees the arrivals in the
+//!   order the sources admitted them — EDF/DRR/StrictPriority accounting
+//!   is indistinguishable from the tasks having arrived one by one.
+//! * `Result` and `Rehome` envelopes are same-source by construction:
+//!   every item shares one destination, so relays forward the envelope
+//!   intact and each multi-hop leg is charged once per envelope, not once
+//!   per item.
+//! * `coalesce = off` (the default) puts exactly one item in every task /
+//!   result / re-home envelope, reproducing the seed's per-task wire
+//!   behaviour bit for bit — same message count, same byte charges, same
+//!   RNG draws.
+
+use crate::coordinator::task::{InferenceResult, Task};
+use crate::coordinator::worker::ModelMeta;
+use crate::policy::NeighborSummary;
+
+/// Fixed per-envelope framing: sender/destination ids, kind tag, item
+/// count, per-item offsets. This is the cost coalescing amortizes — each
+/// item beyond the first rides an existing frame.
+pub const ENVELOPE_HEADER_BYTES: usize = 32;
+
+/// Wire size of a lone exit-result message (classifier output + framing),
+/// unchanged from the seed.
+pub const RESULT_BYTES: usize = 64;
+
+/// Payload bytes of one result inside a shared frame.
+const RESULT_ITEM_BYTES: usize = RESULT_BYTES - ENVELOPE_HEADER_BYTES;
+
+/// Wire size of task τ_k travelling alone: the feature tensor entering
+/// stage k (or the autoencoder code when the payload is encoded), framing
+/// included — byte-identical to the seed's per-task charge.
+pub fn task_wire_bytes(meta: &ModelMeta, task: &Task) -> usize {
+    if task.encoded {
+        return meta.ae.as_ref().map(|ae| ae.code_bytes).unwrap_or(0);
+    }
+    meta.stage_in_bytes[task.stage - 1]
+}
+
+/// One task's contribution to a shared frame (its lone-message size minus
+/// the frame it no longer needs; saturating so degenerate tiny payloads —
+/// e.g. an extreme AE code — never underflow).
+fn task_item_bytes(meta: &ModelMeta, task: &Task) -> usize {
+    task_wire_bytes(meta, task).saturating_sub(ENVELOPE_HEADER_BYTES)
+}
+
+/// What travels between workers — on both drivers, through one type.
+///
+/// See the module docs for the charging contract and batch invariants.
+#[derive(Debug)]
+pub enum Envelope {
+    /// One or more *same-stage* tasks offloaded to a neighbor, in
+    /// admission order. Size 1 unless the run coalesces
+    /// ([`crate::sched::SchedConfig::coalesce`]).
+    TaskBatch(Vec<Task>),
+    /// Completed inference results in transit toward their (shared)
+    /// admitting source, relayed hop by hop.
+    Result(Vec<InferenceResult>),
+    /// Churn-displaced tasks in transit back to their (shared) admitting
+    /// source, relayed hop by hop.
+    Rehome(Vec<Task>),
+    /// A gossiped neighbor summary (never batched; charged by its own
+    /// encoded size).
+    State(NeighborSummary),
+}
+
+impl Envelope {
+    /// Number of items riding this envelope.
+    pub fn items(&self) -> usize {
+        match self {
+            Envelope::TaskBatch(ts) | Envelope::Rehome(ts) => ts.len(),
+            Envelope::Result(rs) => rs.len(),
+            Envelope::State(_) => 1,
+        }
+    }
+
+    /// THE wire charge — the one function both drivers and the core's
+    /// byte counters consult (see the module-level contract).
+    pub fn encoded_bytes(&self, meta: &ModelMeta) -> usize {
+        match self {
+            Envelope::TaskBatch(ts) | Envelope::Rehome(ts) => {
+                ENVELOPE_HEADER_BYTES
+                    + ts.iter().map(|t| task_item_bytes(meta, t)).sum::<usize>()
+            }
+            Envelope::Result(rs) => {
+                ENVELOPE_HEADER_BYTES + rs.len() * RESULT_ITEM_BYTES
+            }
+            Envelope::State(s) => s.encoded_bytes(),
+        }
+    }
+
+    /// What the same items would have cost as one-envelope-each messages
+    /// (the seed's wiring). `encoded_bytes <= unbatched_bytes`, equal for
+    /// singletons; the difference feeds the `wire_bytes_saved` counter.
+    pub fn unbatched_bytes(&self, meta: &ModelMeta) -> usize {
+        match self {
+            Envelope::TaskBatch(ts) | Envelope::Rehome(ts) => ts
+                .iter()
+                .map(|t| ENVELOPE_HEADER_BYTES + task_item_bytes(meta, t))
+                .sum(),
+            Envelope::Result(rs) => rs.len() * RESULT_BYTES,
+            Envelope::State(s) => s.encoded_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> ModelMeta {
+        ModelMeta::synthetic(vec![0.002, 0.003], vec![12288, 8192])
+    }
+
+    fn task(id: u64, stage: usize) -> Task {
+        Task { stage, ..Task::initial(id, id as usize, None, 0.0) }
+    }
+
+    #[test]
+    fn singleton_task_envelope_matches_seed_charge() {
+        let m = meta();
+        let env = Envelope::TaskBatch(vec![task(1, 1)]);
+        assert_eq!(env.encoded_bytes(&m), 12288, "stage-1 tensor, seed-identical");
+        let env = Envelope::TaskBatch(vec![task(1, 2)]);
+        assert_eq!(env.encoded_bytes(&m), 8192);
+        assert_eq!(env.unbatched_bytes(&m), env.encoded_bytes(&m));
+    }
+
+    #[test]
+    fn batch_sheds_one_header_per_extra_task() {
+        let m = meta();
+        let env = Envelope::TaskBatch(vec![task(1, 2), task(2, 2), task(3, 2)]);
+        assert_eq!(env.encoded_bytes(&m), 3 * 8192 - 2 * ENVELOPE_HEADER_BYTES);
+        assert_eq!(env.unbatched_bytes(&m), 3 * 8192);
+        assert_eq!(
+            env.unbatched_bytes(&m) - env.encoded_bytes(&m),
+            2 * ENVELOPE_HEADER_BYTES
+        );
+        assert_eq!(env.items(), 3);
+    }
+
+    #[test]
+    fn result_envelopes_charge_seed_bytes_for_singletons() {
+        let m = meta();
+        let r = InferenceResult {
+            sample: 0,
+            exit_point: 1,
+            prediction: 0,
+            confidence: 0.9,
+            admitted_at: 0.0,
+            deadline: 1.0,
+            exited_on: 1,
+            source: 0,
+            class: 0,
+        };
+        let env = Envelope::Result(vec![r]);
+        assert_eq!(env.encoded_bytes(&m), RESULT_BYTES);
+        let env = Envelope::Result(vec![r, r, r]);
+        assert_eq!(
+            env.encoded_bytes(&m),
+            ENVELOPE_HEADER_BYTES + 3 * (RESULT_BYTES - ENVELOPE_HEADER_BYTES)
+        );
+        assert_eq!(env.unbatched_bytes(&m), 3 * RESULT_BYTES);
+    }
+
+    #[test]
+    fn rehome_charges_like_task_batches() {
+        let m = meta();
+        let single = Envelope::Rehome(vec![task(1, 1)]);
+        assert_eq!(single.encoded_bytes(&m), 12288);
+        let pair = Envelope::Rehome(vec![task(1, 1), task(2, 1)]);
+        assert_eq!(pair.encoded_bytes(&m), 2 * 12288 - ENVELOPE_HEADER_BYTES);
+    }
+
+    #[test]
+    fn encoded_task_charges_the_ae_code_size() {
+        let mut m = meta();
+        m.ae = Some(crate::coordinator::worker::AeMeta {
+            enc_cost_s: 0.001,
+            dec_cost_s: 0.001,
+            code_bytes: 2048,
+        });
+        let t = Task { encoded: true, ..task(1, 2) };
+        assert_eq!(task_wire_bytes(&m, &t), 2048);
+        let env = Envelope::TaskBatch(vec![t]);
+        assert_eq!(env.encoded_bytes(&m), 2048);
+    }
+
+    #[test]
+    fn state_envelopes_charge_the_summary_encoding() {
+        let m = meta();
+        let s = NeighborSummary::base(3, 0.01, 0.9);
+        let bytes = s.encoded_bytes();
+        let env = Envelope::State(s);
+        assert_eq!(env.encoded_bytes(&m), bytes);
+        assert_eq!(env.unbatched_bytes(&m), bytes);
+        assert_eq!(env.items(), 1);
+    }
+}

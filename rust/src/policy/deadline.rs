@@ -34,10 +34,11 @@ fn queue_ahead(s: &NeighborSummary, class: u8) -> f64 {
     }
 }
 
-/// Expected wait before a task sent now would *finish* at a neighbor:
-/// transfer + queued work ahead of it + its own service.
-fn remote_wait(s: &NeighborSummary, class: u8) -> f64 {
-    s.d_nm_s + (queue_ahead(s, class) + 1.0) * s.gamma_s
+/// Expected wait before the *last* of `run_len` tasks sent now would
+/// finish at a neighbor: transfer + queued work ahead + the batch's own
+/// service (`run_len = 1` is the classic single-task estimate).
+fn remote_wait(s: &NeighborSummary, class: u8, run_len: usize) -> f64 {
+    s.d_nm_s + (queue_ahead(s, class) + run_len as f64) * s.gamma_s
 }
 
 /// Offload the head-of-line task by deadline slack (see module docs).
@@ -49,6 +50,44 @@ pub struct DeadlineAware;
 impl DeadlineAware {
     pub fn new() -> DeadlineAware {
         DeadlineAware
+    }
+
+    /// The slack-vs-wait decision for a coalescible run of `run_len`
+    /// tasks. With `run_len = 1` this is exactly the single-task policy;
+    /// a longer run raises both the local and the remote completion
+    /// estimates by the batch's own service time, so a batch is only
+    /// shipped where the whole run still finishes sooner.
+    fn decide(&self, ctx: &OffloadCtx<'_>, run_len: usize) -> Option<usize> {
+        let run = run_len.max(1) as f64;
+        let slack = ctx.task.deadline - ctx.now;
+        // Local completion estimate for the run's last element: the whole
+        // input backlog is ahead of reclaimed output tasks, plus the run's
+        // own service.
+        let local_wait = (ctx.input_len as f64 + run) * ctx.gamma_s;
+
+        // A neighbor already missing its own deadlines is overloaded
+        // beyond rescue — dumping more urgent work there helps nobody.
+        let (target, w) = ctx
+            .candidates
+            .iter()
+            .filter(|(_, s)| !s.min_slack_s.is_some_and(|ms| ms < 0.0))
+            .map(|(m, s)| (*m, remote_wait(s, ctx.task.class, run_len.max(1))))
+            .min_by(|a, b| a.1.total_cmp(&b.1))?;
+
+        // Never offload to a slower place; past that, urgency decides:
+        // when the local backlog would blow the deadline, the fastest
+        // neighbor is the task's best chance, no further questions. When
+        // the deadline is safe locally, only a clear win justifies the
+        // transfer — shaving a millisecond off a comfortable margin just
+        // spends wire the overloaded paths need.
+        if w >= local_wait {
+            return None;
+        }
+        if local_wait > slack || w < CLEAR_WIN * local_wait {
+            Some(target)
+        } else {
+            None
+        }
     }
 }
 
@@ -66,34 +105,16 @@ impl OffloadPolicy for DeadlineAware {
     }
 
     fn choose(&mut self, ctx: &OffloadCtx<'_>, _rng: &mut Pcg64) -> Option<usize> {
-        let slack = ctx.task.deadline - ctx.now;
-        // Local completion estimate: the whole input backlog is ahead of a
-        // reclaimed output task, plus its own service.
-        let local_wait = (ctx.input_len as f64 + 1.0) * ctx.gamma_s;
+        self.decide(ctx, 1)
+    }
 
-        // A neighbor already missing its own deadlines is overloaded
-        // beyond rescue — dumping more urgent work there helps nobody.
-        let (target, w) = ctx
-            .candidates
-            .iter()
-            .filter(|(_, s)| !s.min_slack_s.is_some_and(|ms| ms < 0.0))
-            .map(|(m, s)| (*m, remote_wait(s, ctx.task.class)))
-            .min_by(|a, b| a.1.total_cmp(&b.1))?;
-
-        // Never offload to a slower place; past that, urgency decides:
-        // when the local backlog would blow the deadline, the fastest
-        // neighbor is the task's best chance, no further questions. When
-        // the deadline is safe locally, only a clear win justifies the
-        // transfer — shaving a millisecond off a comfortable margin just
-        // spends wire the overloaded paths need.
-        if w >= local_wait {
-            return None;
-        }
-        if local_wait > slack || w < CLEAR_WIN * local_wait {
-            Some(target)
-        } else {
-            None
-        }
+    fn choose_coalesced(
+        &mut self,
+        ctx: &OffloadCtx<'_>,
+        run_len: usize,
+        _rng: &mut Pcg64,
+    ) -> Option<usize> {
+        self.decide(ctx, run_len)
     }
 }
 
@@ -186,6 +207,23 @@ mod tests {
         // A class-1 task sees the whole queue ahead of it.
         assert!((queue_ahead(&cands[0].1, 1) - 30.0).abs() < 1e-9);
         assert!((queue_ahead(&cands[0].1, 0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coalesced_run_raises_the_remote_bar() {
+        // Single-task: remote 60 ms beats the clear-win bar against a
+        // 200 ms local wait. A run of 12 pushes the remote estimate to
+        // 170 ms — no longer a clear win for a safe deadline, so the
+        // batch stays (and `choose` == `choose_coalesced(run_len = 1)`).
+        let task = Task { deadline: 10.0, ..Task::initial(1, 0, None, 0.0) };
+        let cands = vec![(1usize, summary(5, 0.01, 0.0))];
+        let mut p = DeadlineAware::new();
+        let mut rng = Pcg64::new(1, 0);
+        let single = p.choose(&ctx(&task, 19, &cands), &mut rng);
+        assert_eq!(single, p.choose_coalesced(&ctx(&task, 19, &cands), 1, &mut rng));
+        assert_eq!(single, Some(1));
+        let batched = p.choose_coalesced(&ctx(&task, 19, &cands), 12, &mut rng);
+        assert_eq!(batched, None, "a long run must not chase a marginal remote win");
     }
 
     #[test]

@@ -177,6 +177,24 @@ pub trait OffloadPolicy: Send + std::fmt::Debug {
     /// keep it queued. `rng` is the core's seeded per-worker stream — the
     /// only randomness a policy may use.
     fn choose(&mut self, ctx: &OffloadCtx<'_>, rng: &mut Pcg64) -> Option<usize>;
+
+    /// Like [`OffloadPolicy::choose`], but told the *coalescible run
+    /// length*: `run_len >= 1` same-stage tasks (the head included) would
+    /// ride one [`crate::net::Envelope`] if this offload happens, per the
+    /// run's [`crate::sched::CoalesceMode`]. Policies that weigh batch
+    /// size against slack or remote capacity override this; the default
+    /// ignores the hint and delegates to `choose`, so `Baseline` consumes
+    /// the seed's RNG stream bit for bit (`coalesce = off` always passes
+    /// `run_len = 1`).
+    fn choose_coalesced(
+        &mut self,
+        ctx: &OffloadCtx<'_>,
+        run_len: usize,
+        rng: &mut Pcg64,
+    ) -> Option<usize> {
+        let _ = run_len;
+        self.choose(ctx, rng)
+    }
 }
 
 /// Algs 3/4 seam: one adaptation step per tick at an admitting source.

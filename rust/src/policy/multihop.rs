@@ -88,6 +88,67 @@ impl MultiHop {
             *slot = Some(Known { input_len, hops, heard_at: now });
         }
     }
+
+    /// The multi-hop fallback after Alg. 2's one-hop scan refused, for a
+    /// coalescible run of `run_len` tasks (`1` = the classic single-task
+    /// decision). A longer run raises both the journey and the local-wait
+    /// estimates by the run's own service time, and the optimistic bump
+    /// charges the remote for the whole batch, so one stale "idle" entry
+    /// cannot absorb an unbounded coalesced flood.
+    fn remote_fallback(&mut self, ctx: &OffloadCtx<'_>, run_len: usize) -> Option<usize> {
+        let run = run_len.max(1);
+        let direct_min =
+            ctx.candidates.iter().map(|(_, s)| s.input_len).min().unwrap_or(usize::MAX);
+        let best = self
+            .known
+            .iter()
+            .enumerate()
+            .filter_map(|(node, k)| k.map(|k| (node, k)))
+            // Fresh knowledge about a node beyond the one-hop horizon
+            // (hops < 2 means a direct neighbor Alg. 2 already saw) that
+            // we can actually steer toward through an active neighbor.
+            .filter(|&(node, k)| {
+                k.hops >= 2
+                    && ctx.now - k.heard_at <= STALE_S
+                    && ctx
+                        .next_hop
+                        .get(node)
+                        .copied()
+                        .flatten()
+                        .map(|hop| ctx.candidates.iter().any(|(m, _)| *m == hop))
+                        .unwrap_or(false)
+            })
+            .min_by_key(|&(_, k)| k.input_len);
+        let (remote, entry) = best?;
+        let load = entry.input_len;
+        // Pressure signal: the *input backlog*, not the output queue —
+        // Alg. 2's `O_n > I_m` gate stalls precisely because O_n is capped
+        // near T_O while the real overload piles up in I_n; the multi-hop
+        // fallback exists to act on that backlog.
+        if load + REMOTE_MARGIN > ctx.input_len || load + REMOTE_MARGIN > direct_min {
+            return None;
+        }
+        let hop = ctx.next_hop[remote].expect("checked above");
+        let (_, hop_summary) =
+            ctx.candidates.iter().find(|(m, _)| *m == hop).expect("checked above");
+        // The journey must still beat waiting here: estimate it as one
+        // relay-link transfer per hop plus the destination's service of
+        // its backlog and the run (gamma of the relay stands in for the
+        // destination's — the region table does not gossip per-node Γ).
+        let journey = entry.hops as f64 * hop_summary.d_nm_s
+            + (load + run) as f64 * hop_summary.gamma_s;
+        let local_wait = (ctx.input_len + run) as f64 * ctx.gamma_s;
+        if journey < local_wait {
+            // Optimistic bump until the next gossip refresh (the same
+            // discipline the core applies to direct-neighbor views).
+            if let Some(k) = self.known[remote].as_mut() {
+                k.input_len += run;
+            }
+            Some(hop)
+        } else {
+            None
+        }
+    }
 }
 
 impl OffloadPolicy for MultiHop {
@@ -125,65 +186,26 @@ impl OffloadPolicy for MultiHop {
     }
 
     fn choose(&mut self, ctx: &OffloadCtx<'_>, rng: &mut Pcg64) -> Option<usize> {
-        // One-hop first: the paper's scan, verbatim.
+        // One-hop first: the paper's scan, verbatim. Only when no direct
+        // neighbor accepts does the region table get a say.
         if let Some(target) = self.direct.choose(ctx, rng) {
             return Some(target);
         }
-        // No direct neighbor accepted. Look for a remote node meaningfully
-        // idler than here — and than every direct neighbor, else the
-        // one-hop scan would have been the cheaper route.
-        let direct_min =
-            ctx.candidates.iter().map(|(_, s)| s.input_len).min().unwrap_or(usize::MAX);
-        let best = self
-            .known
-            .iter()
-            .enumerate()
-            .filter_map(|(node, k)| k.map(|k| (node, k)))
-            // Fresh knowledge about a node beyond the one-hop horizon
-            // (hops < 2 means a direct neighbor Alg. 2 already saw) that
-            // we can actually steer toward through an active neighbor.
-            .filter(|&(node, k)| {
-                k.hops >= 2
-                    && ctx.now - k.heard_at <= STALE_S
-                    && ctx
-                        .next_hop
-                        .get(node)
-                        .copied()
-                        .flatten()
-                        .map(|hop| ctx.candidates.iter().any(|(m, _)| *m == hop))
-                        .unwrap_or(false)
-            })
-            .min_by_key(|&(_, k)| k.input_len);
-        let (remote, entry) = best?;
-        let load = entry.input_len;
-        // Pressure signal: the *input backlog*, not the output queue —
-        // Alg. 2's `O_n > I_m` gate stalls precisely because O_n is capped
-        // near T_O while the real overload piles up in I_n; the multi-hop
-        // fallback exists to act on that backlog.
-        if load + REMOTE_MARGIN > ctx.input_len || load + REMOTE_MARGIN > direct_min {
-            return None;
+        self.remote_fallback(ctx, 1)
+    }
+
+    fn choose_coalesced(
+        &mut self,
+        ctx: &OffloadCtx<'_>,
+        run_len: usize,
+        rng: &mut Pcg64,
+    ) -> Option<usize> {
+        // The direct scan is batch-oblivious (Alg. 2 verbatim, same RNG
+        // stream); the multi-hop fallback weighs the whole run.
+        if let Some(target) = self.direct.choose(ctx, rng) {
+            return Some(target);
         }
-        let hop = ctx.next_hop[remote].expect("checked above");
-        let (_, hop_summary) =
-            ctx.candidates.iter().find(|(m, _)| *m == hop).expect("checked above");
-        // The journey must still beat waiting here: estimate it as one
-        // relay-link transfer per hop plus the destination's service
-        // backlog (gamma of the relay stands in for the destination's —
-        // the region table does not gossip per-node Γ).
-        let journey = entry.hops as f64 * hop_summary.d_nm_s
-            + (load as f64 + 1.0) * hop_summary.gamma_s;
-        let local_wait = (ctx.input_len as f64 + 1.0) * ctx.gamma_s;
-        if journey < local_wait {
-            // Optimistic bump until the next gossip refresh (the same
-            // discipline the core applies to direct-neighbor views), so a
-            // stale "idle" entry cannot absorb an unbounded flood.
-            if let Some(k) = self.known[remote].as_mut() {
-                k.input_len += 1;
-            }
-            Some(hop)
-        } else {
-            None
-        }
+        self.remote_fallback(ctx, run_len)
     }
 }
 

@@ -68,6 +68,24 @@ pub trait QueueDiscipline: std::fmt::Debug + Send {
     /// Cold path: deadline-aware gossip reads it once per gossip tick.
     fn earliest_deadline(&self) -> Option<f64>;
 
+    /// How many queued tasks `pop_next` would serve consecutively that
+    /// share the head task's stage (and its traffic class when
+    /// `same_class`), capped at `max` — the run an offload could coalesce
+    /// into one wire envelope. This is a *hint* for offload policies
+    /// weighing batch size, and it bounds the drain; it may be
+    /// approximate in either direction (disciplines without a cheap
+    /// service-order walk probe a bounded sample) — the actual envelope
+    /// is formed by popping with a per-pop re-check, so an estimate never
+    /// puts a mismatched task in a batch. The default is the safe lower
+    /// bound: the head alone. 0 when empty.
+    fn coalescible_run(&self, max: usize, _same_class: bool) -> usize {
+        if self.is_empty() || max == 0 {
+            0
+        } else {
+            1
+        }
+    }
+
     /// Remove every queued task, in arrival order. Peak/total accounting
     /// is preserved (the drain is churn bookkeeping, not service).
     fn drain_all(&mut self) -> Vec<Task>;
@@ -150,6 +168,23 @@ impl QueueDiscipline for Fifo {
         self.q.iter().map(|t| t.deadline).min_by(f64::total_cmp)
     }
 
+    fn coalescible_run(&self, max: usize, same_class: bool) -> usize {
+        // FIFO service order IS iteration order: the run is exact.
+        let mut it = self.q.iter();
+        let Some(head) = it.next() else { return 0 };
+        let mut run = 1;
+        for t in it {
+            if run >= max
+                || t.stage != head.stage
+                || (same_class && t.class != head.class)
+            {
+                break;
+            }
+            run += 1;
+        }
+        run.min(max)
+    }
+
     fn drain_all(&mut self) -> Vec<Task> {
         self.q.drain_all()
     }
@@ -191,6 +226,25 @@ mod tests {
         assert_eq!(q.class_len(0), 2); // ids 2, 4
         assert_eq!(q.class_len(1), 2); // ids 3, 9
         assert!(q.dropped_per_class().is_empty());
+    }
+
+    #[test]
+    fn fifo_coalescible_run_counts_the_head_run_exactly() {
+        let mut q = Fifo::new();
+        let st = |id: u64, stage: usize, class: u8| Task {
+            stage,
+            class,
+            ..Task::initial(id, id as usize, None, 0.0)
+        };
+        assert_eq!(q.coalescible_run(8, false), 0, "empty queue has no run");
+        q.push(st(1, 2, 0));
+        q.push(st(2, 2, 1));
+        q.push(st(3, 2, 0));
+        q.push(st(4, 1, 0)); // stage boundary
+        q.push(st(5, 2, 0));
+        assert_eq!(q.coalescible_run(8, false), 3, "run stops at the stage boundary");
+        assert_eq!(q.coalescible_run(2, false), 2, "capped at max");
+        assert_eq!(q.coalescible_run(8, true), 1, "class boundary after the head");
     }
 
     #[test]

@@ -162,6 +162,28 @@ impl QueueDiscipline for Drr {
             .min_by(f64::total_cmp)
     }
 
+    fn coalescible_run(&self, max: usize, same_class: bool) -> usize {
+        // Service order depends on the rotating deficits; estimate from a
+        // bounded probe (uniform sample -> full run, else the safe lower
+        // bound). The cap keeps deep backlogs off an O(n)-per-offload
+        // scan; an optimistic hint only prices the envelope — the drain
+        // re-checks every pop.
+        const PROBE: usize = 64;
+        let Some(head) = self.peek() else { return 0 };
+        let (stage, class) = (head.stage, head.class);
+        let uniform = self
+            .lanes
+            .iter()
+            .flat_map(|l| l.iter())
+            .take(PROBE)
+            .all(|(_, t)| t.stage == stage && (!same_class || t.class == class));
+        if uniform {
+            self.len.min(max)
+        } else {
+            1.min(max)
+        }
+    }
+
     fn drain_all(&mut self) -> Vec<Task> {
         let mut all: Vec<(u64, Task)> =
             self.lanes.iter_mut().flat_map(|l| l.drain(..)).collect();

@@ -47,6 +47,38 @@ pub use discipline::{Fifo, QueueDiscipline};
 pub use drr::Drr;
 pub use priority::{Edf, StrictPriority};
 
+/// Whether (and how) an offloading worker drains a *run* of queued tasks
+/// into one [`crate::net::Envelope`] instead of sending them one at a time
+/// — the wire analogue of [`BatchPolicy`]'s engine batching. The receiver
+/// merges the batch through its own discipline in admission order, so
+/// per-class queue accounting is unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoalesceMode {
+    /// One task per envelope — the seed behaviour, bit for bit (default).
+    Off,
+    /// Coalesce consecutive same-stage tasks (the engine-batching
+    /// constraint: a batch must enter the same layers).
+    Stage,
+    /// Coalesce only same-stage *and* same-class runs, so one envelope
+    /// never mixes traffic classes (strictest per-class semantics).
+    StageClass,
+}
+
+impl CoalesceMode {
+    pub fn parse(name: &str) -> Result<CoalesceMode, String> {
+        Ok(match name {
+            "off" => CoalesceMode::Off,
+            "stage" => CoalesceMode::Stage,
+            "stage-class" => CoalesceMode::StageClass,
+            other => {
+                return Err(format!(
+                    "unknown coalesce mode {other:?} (off|stage|stage-class)"
+                ))
+            }
+        })
+    }
+}
+
 /// Which queue discipline the worker queues run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DisciplineKind {
@@ -77,6 +109,13 @@ pub struct SchedConfig {
     /// Length equals `num_classes` after `validate`.
     pub class_quantum: Vec<f64>,
     pub batch: BatchPolicy,
+    /// Cross-worker batch coalescing: whether an offload drains a run of
+    /// same-stage (same-class) tasks into one wire envelope. `Off` (the
+    /// default) reproduces the seed's one-task-per-message wire.
+    pub coalesce: CoalesceMode,
+    /// Cap on tasks per coalesced envelope (>= 1; irrelevant under
+    /// [`CoalesceMode::Off`]).
+    pub coalesce_max: usize,
 }
 
 impl Default for SchedConfig {
@@ -87,6 +126,8 @@ impl Default for SchedConfig {
             class_deadline_s: vec![1.0],
             class_quantum: vec![1.0],
             batch: BatchPolicy::default(),
+            coalesce: CoalesceMode::Off,
+            coalesce_max: 8,
         }
     }
 }
@@ -162,6 +203,9 @@ impl SchedConfig {
         if !(0.0..=1.0).contains(&self.batch.marginal) {
             return Err(format!("batch marginal {} outside [0,1]", self.batch.marginal));
         }
+        if self.coalesce_max == 0 {
+            return Err("coalesce_max must be >= 1".into());
+        }
         Ok(())
     }
 }
@@ -176,7 +220,18 @@ mod tests {
         assert_eq!(s.discipline, DisciplineKind::Fifo);
         assert_eq!(s.num_classes, 1);
         assert_eq!(s.batch.max_batch, 1);
+        assert_eq!(s.coalesce, CoalesceMode::Off, "seed wire: one task per message");
         assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn coalesce_mode_parses_and_validates() {
+        assert_eq!(CoalesceMode::parse("off").unwrap(), CoalesceMode::Off);
+        assert_eq!(CoalesceMode::parse("stage").unwrap(), CoalesceMode::Stage);
+        assert_eq!(CoalesceMode::parse("stage-class").unwrap(), CoalesceMode::StageClass);
+        assert!(CoalesceMode::parse("warp").is_err());
+        let s = SchedConfig { coalesce_max: 0, ..SchedConfig::default() };
+        assert!(s.validate().is_err(), "coalesce_max 0 is rejected");
     }
 
     #[test]

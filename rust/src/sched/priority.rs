@@ -87,6 +87,32 @@ impl QueueDiscipline for StrictPriority {
             .min_by(f64::total_cmp)
     }
 
+    fn coalescible_run(&self, max: usize, same_class: bool) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        // Service order is exact: lanes in priority order, FIFO within.
+        let mut head: Option<&Task> = None;
+        let mut run = 0;
+        for lane in &self.lanes {
+            for (_, t) in lane {
+                match head {
+                    None => head = Some(t),
+                    Some(h) => {
+                        if t.stage != h.stage || (same_class && t.class != h.class) {
+                            return run;
+                        }
+                    }
+                }
+                run += 1;
+                if run >= max {
+                    return run;
+                }
+            }
+        }
+        run
+    }
+
     fn drain_all(&mut self) -> Vec<Task> {
         let mut all: Vec<(u64, Task)> =
             self.lanes.iter_mut().flat_map(|l| l.drain(..)).collect();
@@ -235,6 +261,30 @@ impl QueueDiscipline for Edf {
     fn earliest_deadline(&self) -> Option<f64> {
         // The EDF heap's top *is* the earliest deadline.
         self.heap.peek().map(|e| e.deadline)
+    }
+
+    fn coalescible_run(&self, max: usize, same_class: bool) -> usize {
+        // The heap is not iterable in service (deadline) order without a
+        // sort; estimate instead: when a bounded probe of the queue looks
+        // uniform (every sampled task matches the head — e.g. a
+        // stage-heavy backlog), report the full run, else the safe lower
+        // bound. The probe cap keeps this off the O(n)-per-offload path
+        // on deep backlogs; the estimate only prices the envelope — the
+        // drain itself re-checks every pop, so an optimistic hint can
+        // never put a mismatched task in a batch.
+        const PROBE: usize = 64;
+        let Some(top) = self.heap.peek() else { return 0 };
+        let (stage, class) = (top.task.stage, top.task.class);
+        let uniform = self
+            .heap
+            .iter()
+            .take(PROBE)
+            .all(|e| e.task.stage == stage && (!same_class || e.task.class == class));
+        if uniform {
+            self.heap.len().min(max)
+        } else {
+            1.min(max)
+        }
     }
 
     fn drain_all(&mut self) -> Vec<Task> {

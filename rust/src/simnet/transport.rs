@@ -5,10 +5,24 @@
 //! with `now + link.delay_s(bytes)` and the scheduler releases it to the
 //! destination's mailbox when the deadline passes. This gives the threaded
 //! driver (examples, XLA engine) the same D_nm semantics the discrete-event
-//! driver computes in virtual time.
+//! driver computes in virtual time — including the two knobs the DES
+//! driver already modelled:
+//!
+//! * **Seeded jitter** — the fabric owns the run seed; every endpoint's
+//!   delay-jitter RNG derives from it (`(seed, 100 + worker_id)`), so
+//!   realtime link delays are reproducible per config seed.
+//! * **Shared-medium contention** — the effective bandwidth of a send is
+//!   divided by `1 + medium_contention × in-flight transfers`, mirroring
+//!   the DES driver's WiFi model: concurrent transfers slow each other
+//!   down, and a coalesced envelope occupies ONE contention slot where
+//!   per-task wiring occupied k. In-flight = messages accepted by the
+//!   fabric and not yet delivered, sampled at send time (the sender's own
+//!   message is not counted against itself, exactly like the DES
+//!   driver's `active_transfers`).
 
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -54,7 +68,12 @@ pub struct DelayNet<T: Send + 'static> {
     ctl: Sender<Ctl<T>>,
     mailboxes: Vec<Option<Receiver<Delivery<T>>>>,
     topology: Arc<Topology>,
+    seed: u64,
+    medium_contention: f64,
     seq: Arc<Mutex<u64>>,
+    /// Transfers accepted by the fabric and not yet delivered (the
+    /// contention signal; decremented by the scheduler on delivery).
+    in_flight: Arc<AtomicUsize>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -71,12 +90,18 @@ pub struct Endpoint<T: Send + 'static> {
     rx: Receiver<Delivery<T>>,
     ctl: Sender<Ctl<T>>,
     topology: Arc<Topology>,
+    medium_contention: f64,
     rng: Mutex<Pcg64>,
     seq: Arc<Mutex<u64>>,
+    in_flight: Arc<AtomicUsize>,
 }
 
 impl<T: Send + 'static> DelayNet<T> {
-    pub fn new(topology: Arc<Topology>, _seed: u64) -> DelayNet<T> {
+    /// Build the fabric. `seed` feeds every endpoint's delay-jitter RNG
+    /// (stream `(seed, 100 + worker_id)`), so two runs on the same config
+    /// seed sample identical link jitter; `medium_contention` is the
+    /// run's shared-medium factor (0 = independent switched links).
+    pub fn new(topology: Arc<Topology>, seed: u64, medium_contention: f64) -> DelayNet<T> {
         let (ctl_tx, ctl_rx) = channel::<Ctl<T>>();
         let mut mailboxes = Vec::with_capacity(topology.n);
         let mut deliver_txs = Vec::with_capacity(topology.n);
@@ -85,29 +110,38 @@ impl<T: Send + 'static> DelayNet<T> {
             deliver_txs.push(tx);
             mailboxes.push(Some(rx));
         }
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let sched_in_flight = in_flight.clone();
         let handle = std::thread::Builder::new()
             .name("simnet-sched".into())
-            .spawn(move || scheduler_loop(ctl_rx, deliver_txs))
+            .spawn(move || scheduler_loop(ctl_rx, deliver_txs, sched_in_flight))
             .expect("spawn scheduler");
         DelayNet {
             ctl: ctl_tx,
             mailboxes,
             topology,
+            seed,
+            medium_contention,
             seq: Arc::new(Mutex::new(0)),
+            in_flight,
             handle: Some(handle),
         }
     }
 
-    /// Take worker `id`'s endpoint (once).
-    pub fn endpoint(&mut self, id: usize, seed: u64) -> Endpoint<T> {
+    /// Take worker `id`'s endpoint (once). The endpoint's jitter RNG is
+    /// derived from the fabric's run seed — there is no per-endpoint seed
+    /// to get wrong.
+    pub fn endpoint(&mut self, id: usize) -> Endpoint<T> {
         let rx = self.mailboxes[id].take().expect("endpoint already taken");
         Endpoint {
             id,
             rx,
             ctl: self.ctl.clone(),
             topology: self.topology.clone(),
-            rng: Mutex::new(Pcg64::new(seed, id as u64 + 100)),
+            medium_contention: self.medium_contention,
+            rng: Mutex::new(Pcg64::new(self.seed, id as u64 + 100)),
             seq: self.seq.clone(),
+            in_flight: self.in_flight.clone(),
         }
     }
 }
@@ -121,7 +155,11 @@ impl<T: Send + 'static> Drop for DelayNet<T> {
     }
 }
 
-fn scheduler_loop<T>(ctl: Receiver<Ctl<T>>, deliver: Vec<Sender<Delivery<T>>>) {
+fn scheduler_loop<T>(
+    ctl: Receiver<Ctl<T>>,
+    deliver: Vec<Sender<Delivery<T>>>,
+    in_flight: Arc<AtomicUsize>,
+) {
     let mut heap: BinaryHeap<Scheduled<T>> = BinaryHeap::new();
     loop {
         // Wait for the next control message or the next due delivery.
@@ -141,6 +179,8 @@ fn scheduler_loop<T>(ctl: Receiver<Ctl<T>>, deliver: Vec<Sender<Delivery<T>>>) {
                 break;
             }
             let s = heap.pop().unwrap();
+            // The transfer stops occupying the shared medium on delivery.
+            in_flight.fetch_sub(1, AtomicOrdering::Relaxed);
             // Destination may have shut down (churn / end of run): drop.
             let _ = deliver[s.to].send(Delivery { from: s.from, msg: s.msg });
         }
@@ -149,19 +189,27 @@ fn scheduler_loop<T>(ctl: Receiver<Ctl<T>>, deliver: Vec<Sender<Delivery<T>>>) {
 
 impl<T: Send + 'static> Endpoint<T> {
     /// Send `msg` of `bytes` to one-hop neighbor `to`; the fabric delivers
-    /// it after the sampled link delay. Errors if `to` is not a neighbor
-    /// (Alg. 2 only ever offloads one hop).
+    /// it after the sampled link delay, with the effective bandwidth
+    /// divided by `1 + medium_contention × in-flight transfers` (the DES
+    /// contention model). Errors if `to` is not a neighbor (Alg. 2 only
+    /// ever offloads one hop).
     pub fn send(&self, to: usize, msg: T, bytes: usize) -> Result<f64> {
         let Some(link) = self.topology.link(self.id, to) else {
             bail!("worker {} has no link to {}", self.id, to);
         };
-        let delay = link.delay_s(bytes, &mut self.rng.lock().unwrap());
+        let concurrent = self.in_flight.load(AtomicOrdering::Relaxed);
+        let slow = 1.0 + self.medium_contention * concurrent as f64;
+        let mut eff = *link;
+        eff.bandwidth_bps = link.bandwidth_bps / slow;
+        let delay = eff.delay_s(bytes, &mut self.rng.lock().unwrap());
         let seq = {
             let mut s = self.seq.lock().unwrap();
             *s += 1;
             *s
         };
-        self.ctl
+        self.in_flight.fetch_add(1, AtomicOrdering::Relaxed);
+        if self
+            .ctl
             .send(Ctl::Send(Scheduled {
                 due: Instant::now() + Duration::from_secs_f64(delay),
                 seq,
@@ -169,7 +217,12 @@ impl<T: Send + 'static> Endpoint<T> {
                 from: self.id,
                 msg,
             }))
-            .map_err(|_| anyhow::anyhow!("network fabric shut down"))?;
+            .is_err()
+        {
+            // The fabric already shut down: the message never occupied it.
+            self.in_flight.fetch_sub(1, AtomicOrdering::Relaxed);
+            bail!("network fabric shut down");
+        }
         Ok(delay)
     }
 
@@ -201,9 +254,9 @@ mod tests {
     fn delivers_with_delay() {
         let mut topo = Topology::empty("t", 2);
         topo.connect(0, 1, fast_link());
-        let mut net: DelayNet<u32> = DelayNet::new(Arc::new(topo), 7);
-        let a = net.endpoint(0, 1);
-        let b = net.endpoint(1, 1);
+        let mut net: DelayNet<u32> = DelayNet::new(Arc::new(topo), 7, 0.0);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
         let t0 = Instant::now();
         let d = a.send(1, 42, 1000).unwrap();
         assert!(d >= 0.005);
@@ -217,8 +270,8 @@ mod tests {
     #[test]
     fn rejects_non_neighbor() {
         let topo = Topology::empty("t", 3); // no links at all
-        let mut net: DelayNet<u32> = DelayNet::new(Arc::new(topo), 7);
-        let a = net.endpoint(0, 1);
+        let mut net: DelayNet<u32> = DelayNet::new(Arc::new(topo), 7, 0.0);
+        let a = net.endpoint(0);
         assert!(a.send(2, 1, 10).is_err());
     }
 
@@ -227,9 +280,9 @@ mod tests {
         // A big slow message sent first must arrive after a later fast one.
         let mut topo = Topology::empty("t", 2);
         topo.connect(0, 1, LinkSpec { bandwidth_bps: 1.0e4, base_latency_s: 0.0, jitter_s: 0.0 });
-        let mut net: DelayNet<&'static str> = DelayNet::new(Arc::new(topo), 7);
-        let a = net.endpoint(0, 1);
-        let b = net.endpoint(1, 1);
+        let mut net: DelayNet<&'static str> = DelayNet::new(Arc::new(topo), 7, 0.0);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
         a.send(1, "slow", 1500).unwrap(); // 150 ms
         a.send(1, "fast", 10).unwrap(); // 1 ms
         let first = b.recv_timeout(Duration::from_secs(2)).unwrap();
@@ -242,9 +295,70 @@ mod tests {
     fn try_recv_nonblocking() {
         let mut topo = Topology::empty("t", 2);
         topo.connect(0, 1, fast_link());
-        let mut net: DelayNet<u8> = DelayNet::new(Arc::new(topo), 7);
-        let _a = net.endpoint(0, 1);
-        let b = net.endpoint(1, 1);
+        let mut net: DelayNet<u8> = DelayNet::new(Arc::new(topo), 7, 0.0);
+        let _a = net.endpoint(0);
+        let b = net.endpoint(1);
         assert!(b.try_recv().is_none());
+    }
+
+    #[test]
+    fn jitter_is_reproducible_per_fabric_seed() {
+        let jittery =
+            LinkSpec { bandwidth_bps: 1.0e6, base_latency_s: 0.001, jitter_s: 0.004 };
+        let delays = |seed: u64| -> Vec<f64> {
+            let mut topo = Topology::empty("t", 2);
+            topo.connect(0, 1, jittery);
+            let mut net: DelayNet<u8> = DelayNet::new(Arc::new(topo), seed, 0.0);
+            let a = net.endpoint(0);
+            let b = net.endpoint(1);
+            let ds: Vec<f64> = (0..4).map(|_| a.send(1, 0, 100).unwrap()).collect();
+            // Drain so in-flight bookkeeping settles before the fabric
+            // drops.
+            for _ in 0..4 {
+                let _ = b.recv_timeout(Duration::from_secs(2));
+            }
+            ds
+        };
+        let first = delays(7);
+        assert_eq!(first, delays(7), "same seed, same jitter sequence");
+        assert_ne!(first, delays(8), "different seed, different jitter");
+    }
+
+    #[test]
+    fn contention_scales_delay_with_in_flight_transfers() {
+        // 10 KB at 50 KB/s = 200 ms of serialization — a window wide
+        // enough that the back-to-back sends below cannot be outrun by an
+        // early delivery even on a heavily preempted CI runner. With
+        // contention 1.0 and one transfer already in flight, the second
+        // send sees half the bandwidth -> 400 ms; a third sees a third
+        // -> 600 ms.
+        let slow = LinkSpec { bandwidth_bps: 50.0e3, base_latency_s: 0.0, jitter_s: 0.0 };
+        let mut topo = Topology::empty("t", 2);
+        topo.connect(0, 1, slow);
+        let mut net: DelayNet<u8> = DelayNet::new(Arc::new(topo), 7, 1.0);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let d1 = a.send(1, 0, 10_000).unwrap();
+        let d2 = a.send(1, 1, 10_000).unwrap();
+        let d3 = a.send(1, 2, 10_000).unwrap();
+        assert!((d1 - 0.2).abs() < 1e-9, "first transfer uncontended: {d1}");
+        assert!((d2 - 0.4).abs() < 1e-9, "second halves the bandwidth: {d2}");
+        assert!((d3 - 0.6).abs() < 1e-9, "third divides it by three: {d3}");
+        // After everything delivers, the medium frees up again.
+        for _ in 0..3 {
+            let _ = b.recv_timeout(Duration::from_secs(5));
+        }
+        // Delivery decrements may race the next send by a scheduler tick;
+        // poll briefly for the medium to clear.
+        let mut d4 = f64::MAX;
+        for _ in 0..50 {
+            std::thread::sleep(Duration::from_millis(2));
+            d4 = a.send(1, 3, 10_000).unwrap();
+            let _ = b.recv_timeout(Duration::from_secs(5));
+            if (d4 - 0.2).abs() < 1e-9 {
+                break;
+            }
+        }
+        assert!((d4 - 0.2).abs() < 1e-9, "medium clears after delivery: {d4}");
     }
 }

@@ -13,12 +13,12 @@ use anyhow::Result;
 
 use mdi_exit::coordinator::{
     AdmissionMode, Driver, ExperimentConfig, Mode, ModelMeta, OffloadKind, Placement, Run,
-    RunReport,
+    RunReport, ENVELOPE_HEADER_BYTES,
 };
 use mdi_exit::dataset::{Dataset, ExitTable};
 use mdi_exit::runtime::sim_engine::SimEngine;
 use mdi_exit::runtime::InferenceEngine;
-use mdi_exit::sched::DisciplineKind;
+use mdi_exit::sched::{BatchPolicy, CoalesceMode, DisciplineKind};
 
 /// The realtime runs busy-spin one thread per worker for cost emulation;
 /// running the three tests concurrently starves them of cores on small CI
@@ -411,6 +411,86 @@ fn des_and_realtime_agree_with_deadline_aware_on_line4() {
         (fd[0] - fr[0]).abs() < 0.15,
         "exit-1 fraction diverged: DES {fd:?} vs realtime {fr:?}"
     );
+}
+
+#[test]
+fn wire_accounting_is_equivalent_across_drivers_with_and_without_coalescing() {
+    let _g = serialized();
+    let (_, labels) = oracle3();
+    // Both drivers charge every envelope through the ONE shared
+    // `net::Envelope::encoded_bytes` function and count it in the core, so
+    // a fixed set of accounting identities must hold EXACTLY on both —
+    // with coalescing off (the seed wire) and on. An overloaded line-4 on
+    // the stage-3-heavy model produces real offload + result-relay + gossip
+    // traffic to check them against.
+    let wired = |mut c: ExperimentConfig, mode: CoalesceMode| {
+        c.sched.batch = BatchPolicy::batched(8);
+        c.sched.coalesce = mode;
+        c.sched.coalesce_max = 8;
+        c
+    };
+    for mode in [CoalesceMode::Off, CoalesceMode::Stage] {
+        let des = run_des3(wired(cfg("line-4", 700.0, 6.0), mode), &labels);
+        let rt = run_rt3(wired(cfg("line-4", 700.0, 3.0), mode), &labels);
+        for (name, r) in [("DES", &des), ("realtime", &rt)] {
+            // Real traffic flowed on this driver.
+            assert!(r.task_transfers > 0, "{name} {mode:?}: no task envelopes");
+            assert!(r.gossip_bytes() > 0, "{name} {mode:?}: gossip uncharged");
+            // Identity 1: the run totals ARE the per-worker envelope sums
+            // (one charging function, no driver-private byte path).
+            let wire: u64 = r.per_worker.iter().map(|w| w.wire_bytes).sum();
+            let envs: u64 = r.per_worker.iter().map(|w| w.envelopes_sent).sum();
+            assert_eq!(r.bytes_on_wire, wire, "{name} {mode:?}");
+            assert_eq!(r.task_transfers, envs, "{name} {mode:?}");
+            // Identity 2: payload totals include the gossip charge.
+            assert!(r.bytes_on_wire >= r.gossip_bytes(), "{name} {mode:?}");
+            // Identity 3: gossip is whole 32-byte base summaries (the
+            // baseline policy annotates nothing).
+            for (i, w) in r.per_worker.iter().enumerate() {
+                assert_eq!(
+                    w.gossip_bytes % 32,
+                    0,
+                    "{name} {mode:?}: worker {i} gossip not whole summaries"
+                );
+            }
+            let offloaded: u64 = r.per_worker.iter().map(|w| w.offloaded_out).sum();
+            match mode {
+                CoalesceMode::Off => {
+                    // Seed wire, bit for bit: one task per envelope, no
+                    // sharing, no savings.
+                    assert_eq!(envs, offloaded, "{name}: off must be per-task");
+                    assert_eq!(r.coalesced_tasks(), 0, "{name}");
+                    assert_eq!(r.wire_bytes_saved(), 0, "{name}");
+                }
+                _ => {
+                    // Every item sharing an envelope saves exactly one
+                    // 32-byte frame — on both drivers, by construction.
+                    assert_eq!(
+                        r.wire_bytes_saved(),
+                        ENVELOPE_HEADER_BYTES as u64 * r.coalesced_tasks(),
+                        "{name}: saved bytes must be frames shed"
+                    );
+                    assert!(
+                        envs <= offloaded,
+                        "{name}: coalescing cannot send more envelopes than tasks"
+                    );
+                }
+            }
+        }
+        // The DES leg is virtual-time-deterministic: under this overload
+        // the batched engine dumps same-stage runs into the output queue,
+        // so coalescing must actually coalesce.
+        if mode == CoalesceMode::Stage {
+            assert!(
+                des.coalesced_tasks() > 0,
+                "DES: stage coalescing never shared an envelope"
+            );
+            assert!(
+                des.envelopes_sent() < des.per_worker.iter().map(|w| w.offloaded_out).sum(),
+                "DES: envelope count must drop below per-task offloads"
+            );
+        }
+    }
 }
 
 #[test]
