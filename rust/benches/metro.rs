@@ -1,0 +1,277 @@
+//! Metro-scale simulation benchmark: generated topologies × arrival
+//! models on the DES fast path, plus a calendar-vs-binary-heap event-queue
+//! microbenchmark.
+//!
+//! Two claims are asserted (so CI fails on a fast-path regression, not
+//! just a drifting history):
+//!
+//! * the calendar event queue beats the seed's `BinaryHeap` by the mode's
+//!   floor (≥ 2.0× in the full run, ≥ 1.3× under `MDI_BENCH_QUICK=1`) on a
+//!   hold-model schedule with a deep pending set — both kinds must also
+//!   agree on the pop sequence, checksummed;
+//! * (full mode) a 1000-node random-geometric Poisson run completes at
+//!   least one million simulated events in under 60 s of wallclock.
+//!
+//! Every sweep row lands in `BENCH_metro.json` (simulated events,
+//! wallclock, events/s, completed tasks/s, peak event-queue depth) next to
+//! the queue microbenchmark numbers, as a machine-readable history of the
+//! metro fast path.
+
+use std::time::Instant;
+
+use mdi_exit::coordinator::{
+    AdmissionMode, Driver, EventQueue, ExperimentConfig, ModelMeta, Placement, QueueKind, Run,
+    RunReport,
+};
+use mdi_exit::dataset::ExitTable;
+use mdi_exit::runtime::sim_engine::SimEngine;
+use mdi_exit::util::json::{obj, Json};
+use mdi_exit::util::rng::Pcg64;
+use mdi_exit::workload::ArrivalSpec;
+
+/// Stage costs shared by every run: 2 ms + 3 ms, speed 1.0.
+const COSTS: [f64; 2] = [0.002, 0.003];
+
+/// 8 samples × 2 exits: even samples exit at 1, odd ride to 2; predictions
+/// always match the label (a deterministic 50/50 split).
+fn oracle() -> (ExitTable, Vec<u8>) {
+    let n = 8;
+    let mut conf = Vec::new();
+    let mut pred = Vec::new();
+    let labels: Vec<u8> = (0..n as u8).map(|i| i % 10).collect();
+    for i in 0..n {
+        if i % 2 == 0 {
+            conf.extend([0.97f32, 0.99]);
+        } else {
+            conf.extend([0.30f32, 0.95]);
+        }
+        pred.extend([labels[i], labels[i]]);
+    }
+    (ExitTable::synthetic(n, 2, conf, pred), labels)
+}
+
+fn meta() -> ModelMeta {
+    ModelMeta::synthetic(COSTS.to_vec(), vec![12288, 8192])
+}
+
+fn metro_cfg(
+    topology: &str,
+    sources: &[usize],
+    arrival: ArrivalSpec,
+    rate_hz: f64,
+    seconds: f64,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(
+        "metro",
+        topology,
+        AdmissionMode::Fixed { rate_hz, threshold: 0.9 },
+    );
+    cfg.duration_s = seconds;
+    cfg.warmup_s = 1.0;
+    cfg.gossip_interval_s = 0.25;
+    cfg.workload.arrival = arrival;
+    cfg.placement = Placement::multi(sources);
+    cfg.seed = 7;
+    cfg
+}
+
+fn run_des(cfg: ExperimentConfig) -> RunReport {
+    let (table, labels) = oracle();
+    let engine = SimEngine::from_table(table, false);
+    Run::builder()
+        .config(cfg)
+        .model(meta())
+        .engine(&engine)
+        .labels(&labels)
+        .driver(Driver::Des)
+        .execute()
+        .expect("DES run")
+}
+
+/// Classic hold model: prefill `pending` events, then `ops` rounds of
+/// pop-one / push-its-successor a mean-1 s hold later. The interarrival
+/// draws are precomputed and shared so both queue kinds execute the exact
+/// same schedule — the returned checksum must therefore agree bit for bit.
+fn queue_hold(kind: QueueKind, pending: usize, ops: usize, dts: &[f64]) -> (f64, u64) {
+    let mask = dts.len() - 1;
+    let mut q: EventQueue<u64> = EventQueue::new(kind);
+    for i in 0..pending as u64 {
+        q.push(dts[(i as usize) & mask], i);
+    }
+    let mut t = 0.0f64;
+    let mut acc = 0u64;
+    for i in 0..ops {
+        let (now, ev) = q.pop().expect("hold model never empties");
+        t = now;
+        acc = acc.wrapping_add(ev).rotate_left(7);
+        q.push(t + dts[(pending + i) & mask], (pending + i) as u64);
+    }
+    std::hint::black_box(t);
+    (t, acc)
+}
+
+fn time_queue(
+    kind: QueueKind,
+    pending: usize,
+    ops: usize,
+    iters: u32,
+    dts: &[f64],
+) -> (f64, u64) {
+    let mut best = f64::INFINITY;
+    let mut check = 0u64;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let (_, acc) = queue_hold(kind, pending, ops, dts);
+        best = best.min(t0.elapsed().as_secs_f64());
+        check = acc;
+    }
+    (best, check)
+}
+
+fn main() {
+    let quick = std::env::var_os("MDI_BENCH_QUICK").is_some();
+
+    // -- DES fast path: calendar wheel vs the seed's binary heap ----------
+    // Min-of-iters timing; the quick floor is loose because CI runners are
+    // noisy, the full floor is the acceptance bar for the fast path.
+    let (pending, ops, iters, floor) =
+        if quick { (30_000, 120_000, 3, 1.3) } else { (100_000, 400_000, 5, 2.0) };
+    let mut rng = Pcg64::new(42, 0);
+    let dts: Vec<f64> = (0..1usize << 16).map(|_| rng.exponential(1.0)).collect();
+    let (t_base, c_base) = time_queue(QueueKind::Baseline, pending, ops, iters, &dts);
+    let (t_cal, c_cal) = time_queue(QueueKind::Calendar, pending, ops, iters, &dts);
+    assert_eq!(c_base, c_cal, "queue kinds diverged on an identical schedule");
+    let speedup = t_base / t_cal;
+    println!("== bench: metro ==");
+    println!(
+        "event queue, hold model ({pending} pending, {ops} ops): \
+         heap {:.1} ms, calendar {:.1} ms -> {speedup:.2}x",
+        t_base * 1e3,
+        t_cal * 1e3
+    );
+    assert!(
+        speedup >= floor,
+        "calendar queue speedup {speedup:.2}x below the {floor}x floor \
+         (heap {t_base:.4}s vs calendar {t_cal:.4}s)"
+    );
+
+    // -- sweep: generated topologies × arrival models ---------------------
+    let (rate_hz, seconds, every) = if quick { (30.0, 6.0, 12) } else { (40.0, 20.0, 10) };
+    let topos: &[(&str, usize)] = if quick {
+        &[("grid-4x4", 16), ("random-geometric-120-0.15", 120), ("scale-free-120", 120)]
+    } else {
+        &[("grid-10x10", 100), ("random-geometric-300-0.1", 300), ("scale-free-300", 300)]
+    };
+    let arrivals: Vec<(&str, ArrivalSpec)> = vec![
+        ("legacy", ArrivalSpec::Legacy),
+        ("poisson", ArrivalSpec::Poisson),
+        (
+            "flash-crowd",
+            ArrivalSpec::FlashCrowd { peak_mult: 4.0, at_s: seconds * 0.4, ramp_s: 1.0 },
+        ),
+    ];
+
+    println!(
+        "{:<28} {:<12} {:>8} {:>10} {:>9} {:>12} {:>11} {:>10}",
+        "topology", "arrival", "sources", "events", "wall(s)", "events/s", "tasks/s", "peakq"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    for &(topo, n) in topos {
+        let sources: Vec<usize> = (0..n).step_by(every.min(n)).collect();
+        for (aname, spec) in &arrivals {
+            let cfg = metro_cfg(topo, &sources, spec.clone(), rate_hz, seconds);
+            let t0 = Instant::now();
+            let r = run_des(cfg);
+            let wall = t0.elapsed().as_secs_f64().max(1e-9);
+            println!(
+                "{topo:<28} {aname:<12} {:>8} {:>10} {:>9.2} {:>12.0} {:>11.0} {:>10}",
+                sources.len(),
+                r.sim_events,
+                wall,
+                r.sim_events as f64 / wall,
+                r.completed as f64 / wall,
+                r.peak_event_queue
+            );
+            assert!(r.completed > 0, "{topo}/{aname}: nothing completed");
+            assert!(r.peak_event_queue > 0, "{topo}/{aname}: peak queue untracked");
+            rows.push(obj(vec![
+                ("topology", topo.into()),
+                ("arrival", (*aname).into()),
+                ("nodes", n.into()),
+                ("sources", sources.len().into()),
+                ("sim_events", (r.sim_events as i64).into()),
+                ("wallclock_s", wall.into()),
+                ("events_per_s", (r.sim_events as f64 / wall).into()),
+                ("completed", (r.completed as i64).into()),
+                ("tasks_per_s", (r.completed as f64 / wall).into()),
+                ("peak_event_queue", r.peak_event_queue.into()),
+            ]));
+        }
+    }
+
+    // -- flagship (full mode): 1000-node metro run ------------------------
+    // The acceptance bar: ≥ 1M simulated events in < 60 s of wallclock on
+    // a 1000-node random-geometric graph under Poisson arrivals.
+    if !quick {
+        let sources: Vec<usize> = (0..1000).step_by(10).collect();
+        let cfg = metro_cfg(
+            "random-geometric-1000-0.06",
+            &sources,
+            ArrivalSpec::Poisson,
+            40.0,
+            30.0,
+        );
+        let t0 = Instant::now();
+        let r = run_des(cfg);
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<28} {:<12} {:>8} {:>10} {:>9.2} {:>12.0} {:>11.0} {:>10}",
+            "random-geometric-1000-0.06",
+            "poisson",
+            sources.len(),
+            r.sim_events,
+            wall,
+            r.sim_events as f64 / wall,
+            r.completed as f64 / wall,
+            r.peak_event_queue
+        );
+        assert!(
+            r.sim_events >= 1_000_000,
+            "metro flagship simulated only {} events",
+            r.sim_events
+        );
+        assert!(wall < 60.0, "metro flagship took {wall:.1}s (budget 60s)");
+        assert!(r.completed > 10_000, "metro flagship completed {}", r.completed);
+        rows.push(obj(vec![
+            ("topology", "random-geometric-1000-0.06".into()),
+            ("arrival", "poisson".into()),
+            ("nodes", 1000usize.into()),
+            ("sources", sources.len().into()),
+            ("sim_events", (r.sim_events as i64).into()),
+            ("wallclock_s", wall.into()),
+            ("events_per_s", (r.sim_events as f64 / wall).into()),
+            ("completed", (r.completed as i64).into()),
+            ("tasks_per_s", (r.completed as f64 / wall).into()),
+            ("peak_event_queue", r.peak_event_queue.into()),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("bench", "metro".into()),
+        ("quick", quick.into()),
+        (
+            "queue",
+            obj(vec![
+                ("pending", pending.into()),
+                ("ops", ops.into()),
+                ("baseline_min_s", t_base.into()),
+                ("calendar_min_s", t_cal.into()),
+                ("speedup", speedup.into()),
+                ("floor", floor.into()),
+            ]),
+        ),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_metro.json", doc.to_string()).expect("write BENCH_metro.json");
+    println!("wrote BENCH_metro.json");
+}

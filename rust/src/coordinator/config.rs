@@ -7,6 +7,7 @@ use crate::routing::{Placement, SourceSpec};
 use crate::sched::{CoalesceMode, DisciplineKind, SchedConfig};
 use crate::simnet::{ChurnEvent, LinkSpec};
 use crate::util::toml::{Config as Toml, Value};
+use crate::workload::{ArrivalSpec, WorkloadConfig};
 
 /// How the source admits data (paper §IV.B — the two scenarios).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -81,6 +82,16 @@ pub struct ExperimentConfig {
     /// reproduces the paper's setup; structural fit against the topology
     /// is checked by the drivers, which know the node count.
     pub placement: Placement,
+    /// Traffic arrival process per source (`crate::workload`). The default
+    /// ([`ArrivalSpec::Legacy`]) keeps the admission mode's own pacing and
+    /// reproduces seed behavior bit for bit. TOML `[workload]`, CLI
+    /// `--arrival`.
+    pub workload: WorkloadConfig,
+    /// Ride gossip summaries on task/result envelopes already headed to the
+    /// same neighbor instead of always minting dedicated `State` envelopes.
+    /// Off by default: piggybacking changes wire-byte totals and therefore
+    /// the link-jitter draw order, so the seed wire stays bit-for-bit.
+    pub gossip_piggyback: bool,
     pub seed: u64,
 }
 
@@ -106,6 +117,8 @@ impl ExperimentConfig {
             churn: Vec::new(),
             sched: SchedConfig::default(),
             placement: Placement::default(),
+            workload: WorkloadConfig::default(),
+            gossip_piggyback: false,
             seed: 7,
         }
     }
@@ -157,6 +170,9 @@ impl ExperimentConfig {
         }
         if self.placement.sources.is_empty() {
             bail!("placement declares no sources");
+        }
+        if let Err(e) = self.workload.validate() {
+            bail!("workload config: {e}");
         }
         Ok(())
     }
@@ -212,6 +228,8 @@ impl ExperimentConfig {
         cfg.medium_contention = toml.f64_or("net.medium_contention", 1.0);
         cfg.sched = Self::sched_from_toml(toml)?;
         cfg.placement = Self::placement_from_toml(toml)?;
+        cfg.workload = Self::workload_from_toml(toml)?;
+        cfg.gossip_piggyback = toml.bool_or("gossip_piggyback", false);
         cfg.seed = toml.i64_or("seed", 7) as u64;
         cfg.validate()?;
         Ok(cfg)
@@ -385,6 +403,43 @@ impl ExperimentConfig {
             .map_err(|e| anyhow::anyhow!("sched.coalesce: {e}"))?;
         sched.coalesce_max = toml.usize_or("sched.coalesce_max", sched.coalesce_max);
         Ok(sched)
+    }
+
+    /// `[workload]` section: the arrival process each source runs
+    /// (`crate::workload`; validated there).
+    ///
+    /// ```toml
+    /// [workload]
+    /// arrival = "flash-crowd"   # legacy | constant | poisson |
+    ///                           # flash-crowd | diurnal | trace
+    /// peak_mult = 8.0           # flash-crowd rate multiplier at the crest
+    /// flash_at_s = 30.0         # flash-crowd ramp start
+    /// flash_ramp_s = 5.0        # flash-crowd ramp up (and back down) time
+    /// period_s = 60.0           # diurnal cycle length
+    /// depth = 0.5               # diurnal modulation depth in [0, 1)
+    /// trace = "gaps.txt"        # interarrival trace for arrival = "trace"
+    /// ```
+    fn workload_from_toml(toml: &Toml) -> Result<WorkloadConfig> {
+        let arrival = match toml.str_or("workload.arrival", "legacy") {
+            "legacy" => ArrivalSpec::Legacy,
+            "constant" => ArrivalSpec::Constant,
+            "poisson" => ArrivalSpec::Poisson,
+            "flash-crowd" => ArrivalSpec::FlashCrowd {
+                peak_mult: toml.f64_or("workload.peak_mult", 8.0),
+                at_s: toml.f64_or("workload.flash_at_s", 30.0),
+                ramp_s: toml.f64_or("workload.flash_ramp_s", 5.0),
+            },
+            "diurnal" => ArrivalSpec::Diurnal {
+                period_s: toml.f64_or("workload.period_s", 60.0),
+                depth: toml.f64_or("workload.depth", 0.5),
+            },
+            "trace" => match toml.get("workload.trace").and_then(|v| v.as_str()) {
+                Some(path) => ArrivalSpec::trace_from_file(path)?,
+                None => bail!("workload.arrival = \"trace\" needs workload.trace = \"PATH\""),
+            },
+            other => bail!("unknown workload.arrival {other:?}"),
+        };
+        Ok(WorkloadConfig { arrival })
     }
 
     /// The fixed threshold in effect, if the mode has one.
@@ -619,6 +674,47 @@ batch_marginal = 0.1
             Toml::parse("[placement]\nsources = [0, 1]\nrate_shares = [1.0]\n").unwrap();
         assert!(ExperimentConfig::from_toml(&toml).is_err());
         let toml = Toml::parse("[placement]\nsources = \"all\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+    }
+
+    #[test]
+    fn from_toml_defaults_to_legacy_workload() {
+        let c = ExperimentConfig::from_toml(&Toml::parse("model = \"tiny\"\n").unwrap()).unwrap();
+        assert_eq!(c.workload, WorkloadConfig::default());
+        assert_eq!(c.workload.arrival, ArrivalSpec::Legacy);
+        assert!(!c.gossip_piggyback);
+    }
+
+    #[test]
+    fn from_toml_parses_workload_section() {
+        let toml = Toml::parse(
+            "[workload]\narrival = \"flash-crowd\"\npeak_mult = 4.0\nflash_at_s = 10.0\nflash_ramp_s = 2.0\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(
+            c.workload.arrival,
+            ArrivalSpec::FlashCrowd { peak_mult: 4.0, at_s: 10.0, ramp_s: 2.0 }
+        );
+
+        let toml = Toml::parse("[workload]\narrival = \"poisson\"\n").unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.workload.arrival, ArrivalSpec::Poisson);
+
+        let toml = Toml::parse("gossip_piggyback = true\n").unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert!(c.gossip_piggyback);
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_workload() {
+        let toml = Toml::parse("[workload]\narrival = \"warp-drive\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+        // Bad parameters fail validation at the end of from_toml.
+        let toml = Toml::parse("[workload]\narrival = \"diurnal\"\ndepth = 2.0\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+        // trace mode needs a path.
+        let toml = Toml::parse("[workload]\narrival = \"trace\"\n").unwrap();
         assert!(ExperimentConfig::from_toml(&toml).is_err());
     }
 

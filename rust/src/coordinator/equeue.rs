@@ -1,0 +1,496 @@
+//! Indexed event queues for the DES driver.
+//!
+//! The seed simulator kept its pending events in one `BinaryHeap`. That is
+//! fine at testbed scale, but on metro-scale runs (1000-node generated
+//! graphs, hundreds of admission timelines, ~100k pending transfers) every
+//! push/pop pays `O(log n)` comparator hops through a heap that no longer
+//! fits in cache — and the event loop is the whole simulator. This module
+//! provides the classic DES answer, a **calendar queue** (a timing wheel
+//! over virtual time with an overflow heap), behind a small
+//! [`EventQueue`] facade so the simulation can select either structure at
+//! run time and the two can be differentially tested against each other.
+//!
+//! ## Ordering contract (the part that matters)
+//!
+//! Both queue kinds pop in strictly ascending `(t, seq)` order, where
+//! `seq` is the global push counter — i.e. FIFO among simultaneous
+//! events. This is byte-for-byte the order the seed's `BinaryHeap` entry
+//! comparator (`t.total_cmp` then `seq.cmp`) produced, so switching
+//! structures cannot reorder a simulation: same config + seed ⇒ same
+//! event sequence ⇒ same report. The regression test in `sim.rs` holds
+//! both queues to that promise on a full run; the unit tests here fuzz it
+//! on synthetic schedules.
+//!
+//! The calendar implementation assumes what a DES guarantees anyway:
+//! events are pushed at or after the time of the last pop (the present).
+//! Pushes slightly in the past are tolerated (clamped into the current
+//! bucket) and still pop in correct `(t, seq)` order relative to
+//! everything else in that bucket.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+
+/// Which queue structure the simulation drives its event loop with.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueKind {
+    /// Timing wheel + overflow heap (the metro-scale default).
+    #[default]
+    Calendar,
+    /// The seed's plain binary heap (regression baseline).
+    Baseline,
+}
+
+/// One pending event: fires at `t`, FIFO-tied by `seq`.
+struct Entry<T> {
+    t: f64,
+    seq: u64,
+    ev: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, o: &Self) -> bool {
+        self.t == o.t && self.seq == o.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, o: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(o))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, o: &Self) -> CmpOrdering {
+        // BinaryHeap is a max-heap: reverse for earliest-first.
+        o.t.total_cmp(&self.t).then(o.seq.cmp(&self.seq))
+    }
+}
+
+/// The seed's event store: a plain binary heap.
+pub struct BaselineHeap<T> {
+    heap: BinaryHeap<Entry<T>>,
+}
+
+impl<T> BaselineHeap<T> {
+    pub fn new() -> Self {
+        BaselineHeap { heap: BinaryHeap::new() }
+    }
+
+    pub fn push(&mut self, t: f64, seq: u64, ev: T) {
+        self.heap.push(Entry { t, seq, ev });
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.t, e.ev))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<T> Default for BaselineHeap<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Calendar queue: a power-of-two ring of time buckets of fixed `width`,
+/// indexed by absolute bucket id (`(t / width) & mask`), plus an overflow
+/// heap for events beyond the wheel's horizon. Near-term events — the
+/// overwhelming majority in a DES — cost O(1) amortized to insert and a
+/// short in-bucket scan to pop; the wheel re-sizes itself (bucket count
+/// *and* width, from an EWMA of observed pop gaps) when occupancy says the
+/// geometry no longer fits the workload.
+pub struct CalendarQueue<T> {
+    buckets: Vec<Vec<Entry<T>>>,
+    mask: u64,
+    width: f64,
+    /// Start time of the bucket the cursor is on (aligned to `width`).
+    floor: f64,
+    /// Absolute bucket id of the cursor (index = id & mask).
+    cur_id: u64,
+    /// Items currently in buckets (not counting overflow).
+    in_buckets: usize,
+    overflow: BinaryHeap<Entry<T>>,
+    /// EWMA of gaps between consecutive pops; drives width adaptation.
+    gap_ewma: f64,
+    last_pop_t: Option<f64>,
+}
+
+const INITIAL_BUCKETS: usize = 1024;
+const INITIAL_WIDTH: f64 = 1e-3;
+const MIN_WIDTH: f64 = 1e-9;
+const MAX_WIDTH: f64 = 10.0;
+
+impl<T> CalendarQueue<T> {
+    pub fn new() -> Self {
+        CalendarQueue {
+            buckets: (0..INITIAL_BUCKETS).map(|_| Vec::new()).collect(),
+            mask: (INITIAL_BUCKETS - 1) as u64,
+            width: INITIAL_WIDTH,
+            floor: 0.0,
+            cur_id: 0,
+            in_buckets: 0,
+            overflow: BinaryHeap::new(),
+            gap_ewma: INITIAL_WIDTH,
+            last_pop_t: None,
+        }
+    }
+
+    fn horizon(&self) -> f64 {
+        self.floor + self.buckets.len() as f64 * self.width
+    }
+
+    pub fn len(&self) -> usize {
+        self.in_buckets + self.overflow.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn push(&mut self, t: f64, seq: u64, ev: T) {
+        debug_assert!(t.is_finite(), "event time must be finite, got {t}");
+        let entry = Entry { t, seq, ev };
+        if t >= self.horizon() {
+            self.overflow.push(entry);
+            return;
+        }
+        // Clamp slightly-past events (and float-rounding stragglers) into
+        // the current bucket; the in-bucket (t, seq) scan still pops them
+        // in order. Never map behind the cursor — a bucket id < cur_id
+        // would sit a full wheel revolution away.
+        let id = ((t / self.width) as u64).max(self.cur_id);
+        let idx = (id & self.mask) as usize;
+        self.buckets[idx].push(entry);
+        self.in_buckets += 1;
+        if self.in_buckets > 3 * self.buckets.len() {
+            self.rebuild(self.buckets.len() * 2);
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        loop {
+            if self.in_buckets == 0 {
+                // Nothing on the wheel: the next event (if any) is in
+                // overflow — jump the cursor straight to its bucket.
+                let min_t = self.overflow.peek()?.t;
+                self.jump_to(min_t);
+                self.drain_overflow();
+                continue;
+            }
+            let idx = (self.cur_id & self.mask) as usize;
+            if self.buckets[idx].is_empty() {
+                self.advance();
+                continue;
+            }
+            // Lazy width refit: a bulk prefill (or a workload whose event
+            // spacing collapsed) can leave the width far wider than the
+            // observed pop gaps, stuffing hundreds of events into each
+            // bucket and turning every pop into a long scan. Once the gap
+            // EWMA says a refit would at least halve the width, rebuild at
+            // the same bucket count. Strictly-shrinking width (bounded by
+            // `MIN_WIDTH`) guarantees this terminates.
+            let target = (self.gap_ewma * 4.0).clamp(MIN_WIDTH, MAX_WIDTH);
+            if self.buckets[idx].len() > 32 && target < 0.5 * self.width {
+                self.rebuild(self.buckets.len());
+                continue;
+            }
+            // In-bucket linear scan for the (t, seq) minimum. Buckets are
+            // narrow by construction, so this stays a handful of items.
+            let bucket = &mut self.buckets[idx];
+            let mut best = 0;
+            for i in 1..bucket.len() {
+                let (a, b) = (&bucket[i], &bucket[best]);
+                if a.t < b.t || (a.t == b.t && a.seq < b.seq) {
+                    best = i;
+                }
+            }
+            let e = bucket.swap_remove(best);
+            self.in_buckets -= 1;
+            if let Some(last) = self.last_pop_t {
+                let gap = (e.t - last).max(0.0);
+                self.gap_ewma = 0.9 * self.gap_ewma + 0.1 * gap;
+            }
+            self.last_pop_t = Some(e.t);
+            return Some((e.t, e.ev));
+        }
+    }
+
+    /// Move the cursor one bucket forward and pull any overflow events
+    /// that the advanced horizon now covers. The floor is recomputed from
+    /// `cur_id` (not accumulated) so it never drifts off the bucket grid.
+    fn advance(&mut self) {
+        self.cur_id += 1;
+        self.floor = self.cur_id as f64 * self.width;
+        self.drain_overflow();
+    }
+
+    /// Re-seat the cursor at the bucket containing time `t` (only called
+    /// with every bucket empty, so no events are skipped).
+    fn jump_to(&mut self, t: f64) {
+        debug_assert_eq!(self.in_buckets, 0);
+        let t = t.max(self.floor);
+        self.cur_id = ((t / self.width) as u64).max(self.cur_id);
+        self.floor = self.cur_id as f64 * self.width;
+    }
+
+    fn drain_overflow(&mut self) {
+        let horizon = self.horizon();
+        while self.overflow.peek().is_some_and(|e| e.t < horizon) {
+            let e = self.overflow.pop().unwrap();
+            let id = ((e.t / self.width) as u64).max(self.cur_id);
+            let idx = (id & self.mask) as usize;
+            self.buckets[idx].push(e);
+            self.in_buckets += 1;
+        }
+    }
+
+    /// Re-size the wheel to `new_len` buckets (callers pass the current
+    /// count for a pure width refit, or double it to grow) and re-fit the
+    /// bucket width to the observed event spacing, then re-insert
+    /// everything (including overflow — the re-fitted wheel may now cover
+    /// it).
+    fn rebuild(&mut self, new_len: usize) {
+        let new_len = new_len.next_power_of_two();
+        let new_width = (self.gap_ewma * 4.0).clamp(MIN_WIDTH, MAX_WIDTH);
+        let mut pending: Vec<Entry<T>> =
+            self.buckets.iter_mut().flat_map(std::mem::take).collect();
+        pending.extend(std::mem::take(&mut self.overflow).into_vec());
+        self.buckets = (0..new_len).map(|_| Vec::new()).collect();
+        self.mask = (new_len - 1) as u64;
+        self.width = new_width;
+        self.cur_id = (self.floor / new_width) as u64;
+        self.floor = self.cur_id as f64 * new_width;
+        self.in_buckets = 0;
+        for e in pending {
+            // Re-insert without the grow check (we just grew).
+            if e.t >= self.horizon() {
+                self.overflow.push(e);
+            } else {
+                let id = ((e.t / self.width) as u64).max(self.cur_id);
+                let idx = (id & self.mask) as usize;
+                self.buckets[idx].push(e);
+                self.in_buckets += 1;
+            }
+        }
+    }
+}
+
+impl<T> Default for CalendarQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Runtime-selectable event queue. Owns the global `seq` counter (so
+/// callers just push `(t, event)`) and tracks the peak pending count for
+/// the report's `peak_event_queue`.
+pub struct EventQueue<T> {
+    kind: QueueKind,
+    baseline: BaselineHeap<T>,
+    calendar: CalendarQueue<T>,
+    seq: u64,
+    peak: usize,
+}
+
+impl<T> EventQueue<T> {
+    pub fn new(kind: QueueKind) -> Self {
+        EventQueue {
+            kind,
+            baseline: BaselineHeap::new(),
+            calendar: CalendarQueue::new(),
+            seq: 0,
+            peak: 0,
+        }
+    }
+
+    pub fn kind(&self) -> QueueKind {
+        self.kind
+    }
+
+    pub fn push(&mut self, t: f64, ev: T) {
+        self.seq += 1;
+        match self.kind {
+            QueueKind::Baseline => self.baseline.push(t, self.seq, ev),
+            QueueKind::Calendar => self.calendar.push(t, self.seq, ev),
+        }
+        self.peak = self.peak.max(self.len());
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        match self.kind {
+            QueueKind::Baseline => self.baseline.pop(),
+            QueueKind::Calendar => self.calendar.pop(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self.kind {
+            QueueKind::Baseline => self.baseline.len(),
+            QueueKind::Calendar => self.calendar.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Largest pending count ever observed (reported as
+    /// `peak_event_queue`).
+    pub fn peak_len(&self) -> usize {
+        self.peak
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Drive both queue kinds through an identical DES-shaped schedule
+    /// (pushes never go behind the current pop time) and compare the pop
+    /// sequences element for element.
+    fn differential(seed: u64, horizon_scale: f64) {
+        let mut a = EventQueue::new(QueueKind::Baseline);
+        let mut b = EventQueue::new(QueueKind::Calendar);
+        let mut rng = Pcg64::new(seed, 0);
+        let mut now = 0.0f64;
+        let mut next_id = 0u64;
+        for _ in 0..64 {
+            for _ in 0..200 {
+                // Mix of near-term and far-future events, plus exact ties.
+                let dt = match rng.below(10) {
+                    0 => 0.0,
+                    1..=6 => rng.exponential(0.002),
+                    7 | 8 => rng.exponential(0.5),
+                    _ => rng.exponential(20.0) * horizon_scale,
+                };
+                a.push(now + dt, next_id);
+                b.push(now + dt, next_id);
+                next_id += 1;
+            }
+            for _ in 0..150 {
+                let (ta, ea) = a.pop().unwrap();
+                let (tb, eb) = b.pop().unwrap();
+                assert_eq!((ta.to_bits(), ea), (tb.to_bits(), eb), "pop order diverged");
+                assert!(ta >= now, "time went backwards");
+                now = ta;
+            }
+        }
+        // Drain both completely.
+        loop {
+            match (a.pop(), b.pop()) {
+                (None, None) => break,
+                (Some((ta, ea)), Some((tb, eb))) => {
+                    assert_eq!((ta.to_bits(), ea), (tb.to_bits(), eb));
+                    assert!(ta >= now);
+                    now = ta;
+                }
+                other => panic!("length mismatch: {other:?}"),
+            }
+        }
+        assert_eq!(a.len(), 0);
+        assert_eq!(b.len(), 0);
+    }
+
+    #[test]
+    fn calendar_matches_baseline_order() {
+        differential(7, 1.0);
+        differential(42, 1.0);
+    }
+
+    #[test]
+    fn calendar_matches_baseline_with_deep_overflow() {
+        // Far-future times exercise the overflow heap and cursor jumps.
+        differential(3, 50.0);
+    }
+
+    #[test]
+    fn simultaneous_events_pop_fifo() {
+        for kind in [QueueKind::Baseline, QueueKind::Calendar] {
+            let mut q = EventQueue::new(kind);
+            for i in 0..100u64 {
+                q.push(1.5, i);
+            }
+            q.push(0.5, 999);
+            assert_eq!(q.pop(), Some((0.5, 999)), "{kind:?}");
+            for i in 0..100u64 {
+                assert_eq!(q.pop(), Some((1.5, i)), "{kind:?} FIFO among ties");
+            }
+            assert!(q.pop().is_none());
+        }
+    }
+
+    #[test]
+    fn rebuild_under_load_preserves_order() {
+        // Push far more than 3×INITIAL_BUCKETS items at once to force at
+        // least one rebuild, with a spread that also exercises overflow.
+        let mut a = EventQueue::new(QueueKind::Baseline);
+        let mut b = EventQueue::new(QueueKind::Calendar);
+        let mut rng = Pcg64::new(11, 0);
+        for i in 0..20_000u64 {
+            let t = rng.f64() * 5.0 + if i % 97 == 0 { 5000.0 } else { 0.0 };
+            a.push(t, i);
+            b.push(t, i);
+        }
+        assert_eq!(a.len(), b.len());
+        assert!(b.peak_len() >= 20_000);
+        while let Some((ta, ea)) = a.pop() {
+            let (tb, eb) = b.pop().unwrap();
+            assert_eq!((ta.to_bits(), ea), (tb.to_bits(), eb));
+        }
+        assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn bulk_prefill_then_hold_stays_ordered_through_width_refits() {
+        // A big prefill with no interleaved pops leaves the width fitted to
+        // nothing; the first pops must trigger the lazy refit (possibly
+        // several, strictly halving) without reordering a single event.
+        let mut a = EventQueue::new(QueueKind::Baseline);
+        let mut b = EventQueue::new(QueueKind::Calendar);
+        let mut rng = Pcg64::new(5, 0);
+        for i in 0..30_000u64 {
+            let t = rng.exponential(1.0);
+            a.push(t, i);
+            b.push(t, i);
+        }
+        // Hold model: pop one, push its successor a mean-1s hold later.
+        let mut now = 0.0;
+        for i in 0..60_000u64 {
+            let (ta, ea) = a.pop().unwrap();
+            let (tb, eb) = b.pop().unwrap();
+            assert_eq!((ta.to_bits(), ea), (tb.to_bits(), eb), "pop order diverged");
+            assert!(ta >= now);
+            now = ta;
+            let t = now + rng.exponential(1.0);
+            a.push(t, 30_000 + i);
+            b.push(t, 30_000 + i);
+        }
+        while let Some((ta, ea)) = a.pop() {
+            let (tb, eb) = b.pop().unwrap();
+            assert_eq!((ta.to_bits(), ea), (tb.to_bits(), eb));
+        }
+        assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn peak_tracks_high_water_mark() {
+        let mut q: EventQueue<u32> = EventQueue::new(QueueKind::Calendar);
+        for i in 0..10 {
+            q.push(i as f64, i);
+        }
+        for _ in 0..10 {
+            q.pop();
+        }
+        assert_eq!(q.peak_len(), 10);
+        assert!(q.is_empty());
+        q.push(100.0, 1);
+        assert_eq!(q.peak_len(), 10, "peak is a high-water mark");
+    }
+}

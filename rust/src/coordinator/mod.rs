@@ -30,6 +30,7 @@
 //! core on both drivers.
 
 pub mod config;
+pub mod equeue;
 pub mod queues;
 pub mod report;
 mod rt;
@@ -47,6 +48,7 @@ pub use config::{AdmissionMode, ExperimentConfig, Mode};
 pub use crate::policy::{
     AdaptConfig, AdaptKind, ExitKind, NeighborSummary, OffloadKind, PolicyConfig,
 };
+pub use equeue::{EventQueue, QueueKind};
 pub use report::{ClassStats, RunReport, SourceStats, WorkerStats};
 pub use run::{Driver, Run, RunBuilder};
 pub use sim::{SampleStore, Simulation};

@@ -220,6 +220,10 @@ pub struct RunReport {
     /// Final controller values.
     pub final_mu_s: Option<f64>,
     pub final_t_e: Option<f64>,
+    /// Events processed by the DES event loop (0 on the realtime driver).
+    pub sim_events: u64,
+    /// High-water mark of the DES event queue (0 on the realtime driver).
+    pub peak_event_queue: usize,
     pub trace: Vec<TracePoint>,
 }
 
@@ -248,6 +252,8 @@ impl RunReport {
                 .collect(),
             final_mu_s: None,
             final_t_e: None,
+            sim_events: 0,
+            peak_event_queue: 0,
             trace: Vec::new(),
         }
     }
@@ -473,6 +479,8 @@ impl RunReport {
             ("wire_bytes_saved", (self.wire_bytes_saved() as i64).into()),
             ("rehomed", (self.rehomed as i64).into()),
             ("dropped", (self.dropped as i64).into()),
+            ("sim_events", (self.sim_events as i64).into()),
+            ("peak_event_queue", (self.peak_event_queue as i64).into()),
             ("final_mu_s", self.final_mu_s.map(Json::from).unwrap_or(Json::Null)),
             ("final_t_e", self.final_t_e.map(Json::from).unwrap_or(Json::Null)),
             ("classes", Json::Arr(classes)),

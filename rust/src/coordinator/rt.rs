@@ -43,6 +43,7 @@ use super::worker::{
 use crate::dataset::Dataset;
 use crate::log_info;
 use crate::net::Envelope;
+use crate::routing::RoutingTable;
 use crate::runtime::InferenceEngine;
 use crate::simnet::transport::{DelayNet, Endpoint};
 use crate::simnet::{ChurnEvent, Topology};
@@ -66,7 +67,7 @@ pub(super) fn run_realtime(
 ) -> Result<RunReport> {
     cfg.validate()?;
     let topo = Arc::new(
-        Topology::named(&cfg.topology, cfg.link)
+        Topology::named_seeded(&cfg.topology, cfg.link, cfg.seed)
             .with_context(|| format!("unknown topology {:?}", cfg.topology))?
             .with_churn(cfg.churn.clone()),
     );
@@ -74,6 +75,10 @@ pub(super) fn run_realtime(
         .validate(topo.n, &topo.churn)
         .context("placement does not fit the topology")?;
     let n = topo.n;
+    // Routes are a property of the run, not of a worker: build them once
+    // and share across all n threads (the per-core rebuild was O(n) full
+    // shortest-path computations — prohibitive on metro-scale graphs).
+    let routing = Arc::new(RoutingTable::build(&topo));
     // The fabric owns the run seed (per-endpoint jitter RNGs derive from
     // it) and the same shared-medium contention model the DES driver
     // applies, so link behaviour is reproducible per config seed and
@@ -93,6 +98,7 @@ pub(super) fn run_realtime(
             let endpoint = endpoints[id].take().expect("endpoint taken once");
             let stats_tx = stats_tx.clone();
             let topo = topo.clone();
+            let routing = routing.clone();
             let cfg = cfg.clone();
             let meta = meta.clone();
             scope.spawn(move || {
@@ -117,7 +123,8 @@ pub(super) fn run_realtime(
                         .collect(),
                     ..SourceTally::default()
                 };
-                let core = WorkerCore::new(id, &cfg, meta.clone(), &topo, dataset.n);
+                let core =
+                    WorkerCore::with_routing(id, &cfg, meta.clone(), &topo, &routing, dataset.n);
                 let is_source = core.is_source();
                 let mut w = RtWorker {
                     id,
@@ -257,8 +264,13 @@ impl<'a> RtWorker<'a> {
             // would silently under-admit relative to the configured rate
             // (the DES driver has no such cap), hiding overload from the
             // queues — and with it the backlog that batching and the
-            // priority disciplines exist to manage.
-            while self.core.is_source() && now >= next_admit {
+            // priority disciplines exist to manage. The clock is re-read
+            // every iteration (not the `now` sampled above): bursty
+            // arrival models (Poisson, flash crowd) can schedule several
+            // admissions inside one drain, and a stale bound would defer
+            // the tail of the burst by a full loop pass each — loop-rate
+            // capping through the back door.
+            while self.core.is_source() && self.clock.now() >= next_admit {
                 // Stamp the task with its *scheduled* admission time, not
                 // the post-catch-up `now`: that is when the DES driver
                 // admits it, and using `now` would under-report latency
@@ -348,10 +360,10 @@ impl<'a> RtWorker<'a> {
                     // and result messages are tiny and would bias Alg. 2's
                     // transfer-delay term (the DES driver does the same).
                     let mut env = env;
-                    let is_task = matches!(env, Envelope::TaskBatch(_));
+                    let is_task = env.is_task_batch();
                     if needs_encode {
                         let pre_bytes = env.encoded_bytes(self.meta);
-                        if let Envelope::TaskBatch(tasks) = &mut env {
+                        if let Some(tasks) = env.task_batch_mut() {
                             // Shared with the DES driver: encode each
                             // tensor, ship raw on failure (the charge
                             // function then prices the raw tensor). The
@@ -390,6 +402,13 @@ impl<'a> RtWorker<'a> {
 
     fn on_msg(&mut self, from: usize, env: Envelope) {
         let now = self.clock.now();
+        // Piggybacked gossip is unwrapped first — summary arrival, then
+        // payload delivery, exactly as the DES driver orders them.
+        let (env, gossip) = env.split_gossip();
+        if let Some(summary) = gossip {
+            let acts = self.core.on_gossip(now, from, summary);
+            self.dispatch(acts);
+        }
         let acts = match env {
             Envelope::TaskBatch(tasks) => {
                 self.core.on_task_batch(now, tasks, TaskOrigin::Wire)
@@ -404,6 +423,7 @@ impl<'a> RtWorker<'a> {
             }
             Envelope::Result(rs) => self.core.on_result(now, rs),
             Envelope::State(summary) => self.core.on_gossip(now, from, summary),
+            Envelope::Piggybacked(..) => unreachable!("split_gossip unwraps piggybacking"),
         };
         self.dispatch(acts);
     }

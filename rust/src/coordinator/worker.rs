@@ -59,6 +59,7 @@ use crate::policy::{
     AdaptPolicy, ExitCtx, ExitDecision, ExitPolicy, LocalState, NeighborSummary, OffloadCtx,
     OffloadPolicy,
 };
+use crate::net::ENVELOPE_HEADER_BYTES;
 use crate::routing::{Role, RoutingTable};
 use crate::runtime::{InferenceEngine, StageOutput};
 use crate::sched::{CoalesceMode, QueueDiscipline};
@@ -66,6 +67,7 @@ use crate::simnet::Topology;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Ewma;
+use crate::workload::ArrivalModel;
 
 // The wire layer owns all message sizing; re-exported here so existing
 // `worker::RESULT_BYTES` call sites keep reading naturally.
@@ -279,6 +281,17 @@ pub struct WorkerCore {
     /// Scratch buffer for the resolved per-neighbor summaries handed to
     /// the offload policy (avoids a Vec allocation per offload attempt).
     cand_buf: Vec<(usize, NeighborSummary)>,
+
+    /// Source-only arrival model from `cfg.workload` (`None` = legacy
+    /// pacing, which reproduces seed timelines bit for bit). Stochastic
+    /// models draw from their own per-source stream
+    /// ([`crate::workload::ARRIVAL_STREAM_BASE`]` + id`), never from
+    /// `rng`, so enabling one perturbs no other draw order.
+    arrival: Option<Box<dyn ArrivalModel>>,
+    /// When each peer last received our summary by any means (dedicated
+    /// `State` or piggyback). Only maintained when `cfg.gossip_piggyback`
+    /// is on; used to suppress redundant gossip-tick sends.
+    last_state_at: Vec<f64>,
 }
 
 impl WorkerCore {
@@ -292,9 +305,24 @@ impl WorkerCore {
         topo: &Topology,
         num_samples: usize,
     ) -> WorkerCore {
-        let n = topo.n;
         let routing = RoutingTable::build(topo);
-        let role = Role::of(id, &cfg.placement, &routing);
+        Self::with_routing(id, cfg, meta, topo, &routing, num_samples)
+    }
+
+    /// Like [`WorkerCore::new`], but with a pre-built routing table so a
+    /// driver constructing `n` cores computes routes once instead of `n`
+    /// times — the difference between O(n·E log n) and an O(n²·E log n)
+    /// startup at metro scale.
+    pub fn with_routing(
+        id: usize,
+        cfg: &ExperimentConfig,
+        meta: ModelMeta,
+        topo: &Topology,
+        routing: &RoutingTable,
+        num_samples: usize,
+    ) -> WorkerCore {
+        let n = topo.n;
+        let role = Role::of(id, &cfg.placement, routing);
         let speed = topo.workers[id].speed * cfg.compute_scale;
         let neighbors = topo.neighbors(id);
         let typical = meta.stage_in_bytes[meta.num_stages.min(2) - 1];
@@ -317,6 +345,8 @@ impl WorkerCore {
             AdmissionMode::AdaptiveThreshold { initial_t_e, .. } => initial_t_e,
             AdmissionMode::Fixed { threshold, .. } => threshold,
         };
+        let arrival =
+            if role.is_source { cfg.workload.arrival.build(cfg.seed, id) } else { None };
 
         WorkerCore {
             id,
@@ -350,6 +380,8 @@ impl WorkerCore {
             failed_per_class: vec![0; cfg.sched.num_classes.max(1) as usize],
             measure_from: cfg.warmup_s,
             cand_buf: Vec::new(),
+            arrival,
+            last_state_at: vec![f64::NEG_INFINITY; n],
         }
     }
 
@@ -470,16 +502,28 @@ impl WorkerCore {
         task.class = self.next_class;
         task.deadline = now + self.cfg.sched.deadline_for(task.class);
         self.next_class = (self.next_class + 1) % self.cfg.sched.num_classes.max(1);
-        let dt = match self.cfg.admission {
+        let base_dt = match self.cfg.admission {
             AdmissionMode::AdaptiveRate { .. } => self
                 .adapt
                 .as_ref()
                 .and_then(|a| a.mu_s())
                 .expect("adaptive-rate source runs a rate-adapting policy"),
             AdmissionMode::AdaptiveThreshold { rate_hz, .. } => {
-                self.rng.exponential(1.0 / rate_hz)
+                if self.arrival.is_some() {
+                    // The arrival model owns the stochasticity: hand it the
+                    // mean gap and let it shape (and seed) the process.
+                    1.0 / rate_hz
+                } else {
+                    // Legacy path — the exponential draw comes from the
+                    // core's own stream, exactly as in the seed.
+                    self.rng.exponential(1.0 / rate_hz)
+                }
             }
             AdmissionMode::Fixed { rate_hz, .. } => 1.0 / rate_hz,
+        };
+        let dt = match self.arrival.as_mut() {
+            Some(model) => model.next_dt(now, base_dt),
+            None => base_dt,
         };
         (task, dt / self.rate_share)
     }
@@ -941,20 +985,46 @@ impl WorkerCore {
         needs_encode: bool,
         out: &mut Vec<Action>,
     ) {
+        let env = self.maybe_piggyback(now, to, env);
         if self.in_window(now) {
             let bytes = env.encoded_bytes(&self.meta);
             self.stats.wire_bytes += bytes as u64;
-            if matches!(env, Envelope::TaskBatch(_)) {
+            if env.is_task_batch() {
                 self.stats.envelopes_sent += 1;
             }
             let items = env.items();
             if items > 1 {
                 self.stats.coalesced_tasks += (items - 1) as u64;
-                self.stats.wire_bytes_saved +=
-                    env.unbatched_bytes(&self.meta).saturating_sub(bytes) as u64;
             }
+            // Frame-sharing savings: batch coalescing (k−1 headers) plus a
+            // piggybacked summary's shared header. Zero for plain
+            // singletons, so the default path's accounting is unchanged.
+            self.stats.wire_bytes_saved +=
+                env.unbatched_bytes(&self.meta).saturating_sub(bytes) as u64;
         }
         out.push(Action::Send { to, env, needs_encode });
+    }
+
+    /// With `gossip_piggyback` on, ride a fresh [`NeighborSummary`] on a
+    /// payload envelope already headed to `to` — the summary shares the
+    /// payload's frame, so its marginal wire cost is its encoding minus
+    /// one envelope header. `State` envelopes (already gossip) and
+    /// already-wrapped envelopes pass through untouched.
+    fn maybe_piggyback(&mut self, now: f64, to: usize, env: Envelope) -> Envelope {
+        if !self.cfg.gossip_piggyback
+            || matches!(env, Envelope::State(_) | Envelope::Piggybacked(..))
+            || !self.active
+            || !self.peer_active[to]
+        {
+            return env;
+        }
+        let summary = self.mint_summary(now);
+        self.last_state_at[to] = now;
+        if self.in_window(now) {
+            self.stats.gossip_bytes +=
+                summary.encoded_bytes().saturating_sub(ENVELOPE_HEADER_BYTES) as u64;
+        }
+        Envelope::Piggybacked(Box::new(env), summary)
     }
 
     // -- gossip --------------------------------------------------------------
@@ -968,6 +1038,38 @@ impl WorkerCore {
         if !self.active {
             return Vec::new();
         }
+        let summary = self.mint_summary(now);
+        let bytes = summary.encoded_bytes();
+        let mut out = Vec::new();
+        // Indexed loop (not `for &m in &self.neighbors`): the body needs
+        // `&mut self` for `push_send` and the freshness stamps.
+        let mut i = 0;
+        while i < self.neighbors.len() {
+            let m = self.neighbors[i];
+            i += 1;
+            if !self.peer_active[m] {
+                continue;
+            }
+            if self.cfg.gossip_piggyback {
+                // A summary already rode a payload to this peer within the
+                // last half interval — skip the dedicated send. The half
+                // margin keeps float rounding from starving the tick.
+                if now - self.last_state_at[m] < 0.5 * self.cfg.gossip_interval_s {
+                    continue;
+                }
+                self.last_state_at[m] = now;
+            }
+            if self.in_window(now) {
+                self.stats.gossip_bytes += bytes as u64;
+            }
+            self.push_send(now, m, Envelope::State(summary.clone()), false, &mut out);
+        }
+        out
+    }
+
+    /// Mint this worker's current gossip summary: the paper's base fields
+    /// plus whatever the run's offload policy annotates.
+    fn mint_summary(&mut self, now: f64) -> NeighborSummary {
         let input_len = self.queues.input.len();
         let mut summary = NeighborSummary::base(input_len, self.gamma.get_or(0.01), self.t_e);
         self.offload.annotate(
@@ -982,21 +1084,7 @@ impl WorkerCore {
                 num_classes: self.cfg.sched.num_classes,
             },
         );
-        let bytes = summary.encoded_bytes();
-        let targets: Vec<usize> = self
-            .neighbors
-            .iter()
-            .copied()
-            .filter(|&m| self.peer_active[m])
-            .collect();
-        if self.in_window(now) {
-            self.stats.gossip_bytes += (bytes * targets.len()) as u64;
-        }
-        let mut out = Vec::new();
-        for m in targets {
-            self.push_send(now, m, Envelope::State(summary.clone()), false, &mut out);
-        }
-        out
+        summary
     }
 
     /// A gossiped summary arrived from `from`: let the offload policy

@@ -50,6 +50,7 @@ pub mod simnet;
 pub mod tensor;
 pub mod testkit;
 pub mod util;
+pub mod workload;
 
 /// Default artifacts directory (relative to the repo root), overridable via
 /// the `MDI_ARTIFACTS` environment variable.

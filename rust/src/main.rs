@@ -77,6 +77,11 @@ fn print_help() {
                              stage | stage-class — offloads drain same-stage\n\
                              runs into one wire envelope\n\
            --coalesce-max N  cap on tasks per coalesced envelope (default 8)\n\
+           --arrival A       workload arrival model at the sources:\n\
+                             legacy (default) | constant | poisson |\n\
+                             flash-crowd | diurnal | trace:FILE\n\
+           --piggyback       ride gossip summaries on outbound task/result\n\
+                             envelopes headed to the same neighbor\n\
            --json            print the full RunReport as JSON"
     );
 }
@@ -174,6 +179,11 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
             .collect::<Result<_>>()?;
         cfg.placement = mdi_exit::routing::Placement::multi(&nodes);
     }
+    // Workload subsystem: arrival model at the sources (default `legacy`
+    // keeps the seed's pacing bit for bit).
+    cfg.workload.arrival = mdi_exit::workload::ArrivalSpec::parse_cli(args.str_or("arrival", "legacy"))
+        .map_err(|e| anyhow::anyhow!("--arrival: {e}"))?;
+    cfg.gossip_piggyback = args.bool_or("piggyback", false)?;
     cfg.seed = args.u64_or("seed", 7)?;
     Ok(cfg)
 }

@@ -111,15 +111,65 @@ pub enum Envelope {
     /// A gossiped neighbor summary (never batched; charged by its own
     /// encoded size).
     State(NeighborSummary),
+    /// A payload envelope with a gossip summary riding its frame
+    /// (`cfg.gossip_piggyback`): the summary was headed to the same
+    /// neighbor anyway, so it shares the existing header instead of paying
+    /// for a dedicated `State` message. Charged as the inner envelope plus
+    /// the summary's encoding minus the one header they now share. Never
+    /// nested; the inner envelope is never itself `State` or `Piggybacked`.
+    Piggybacked(Box<Envelope>, NeighborSummary),
 }
 
 impl Envelope {
-    /// Number of items riding this envelope.
+    /// Number of items riding this envelope (the piggybacked summary is
+    /// framing, not an item — counts see through the wrapper).
     pub fn items(&self) -> usize {
         match self {
             Envelope::TaskBatch(ts) | Envelope::Rehome(ts) => ts.len(),
             Envelope::Result(rs) => rs.len(),
             Envelope::State(_) => 1,
+            Envelope::Piggybacked(inner, _) => inner.items(),
+        }
+    }
+
+    /// Split a piggybacked envelope into its payload and the gossip
+    /// summary that rode along; plain envelopes pass through unchanged.
+    /// Receivers call this FIRST and feed the summary to their gossip
+    /// handler, so a piggybacked ride is observationally a `State` arrival
+    /// plus the inner delivery.
+    pub fn split_gossip(self) -> (Envelope, Option<NeighborSummary>) {
+        match self {
+            Envelope::Piggybacked(inner, summary) => (*inner, Some(summary)),
+            env => (env, None),
+        }
+    }
+
+    /// Whether the (possibly wrapped) payload is a task batch — the
+    /// message-count statistic and the realtime transport's accounting
+    /// look through piggybacking.
+    pub fn is_task_batch(&self) -> bool {
+        match self {
+            Envelope::TaskBatch(_) => true,
+            Envelope::Piggybacked(inner, _) => inner.is_task_batch(),
+            _ => false,
+        }
+    }
+
+    /// The task batch inside this envelope, seeing through piggybacking.
+    pub fn task_batch(&self) -> Option<&[Task]> {
+        match self {
+            Envelope::TaskBatch(ts) => Some(ts),
+            Envelope::Piggybacked(inner, _) => inner.task_batch(),
+            _ => None,
+        }
+    }
+
+    /// Mutable view of the inner task batch (the drivers' encode step).
+    pub fn task_batch_mut(&mut self) -> Option<&mut Vec<Task>> {
+        match self {
+            Envelope::TaskBatch(ts) => Some(ts),
+            Envelope::Piggybacked(inner, _) => inner.task_batch_mut(),
+            _ => None,
         }
     }
 
@@ -135,6 +185,14 @@ impl Envelope {
                 ENVELOPE_HEADER_BYTES + rs.len() * RESULT_ITEM_BYTES
             }
             Envelope::State(s) => s.encoded_bytes(),
+            Envelope::Piggybacked(inner, s) => {
+                // The summary rides the inner frame: its encoding minus the
+                // header it no longer needs (saturating — a summary never
+                // encodes below one header, but keep the degenerate case
+                // safe).
+                inner.encoded_bytes(meta)
+                    + s.encoded_bytes().saturating_sub(ENVELOPE_HEADER_BYTES)
+            }
         }
     }
 
@@ -149,6 +207,9 @@ impl Envelope {
                 .sum(),
             Envelope::Result(rs) => rs.len() * RESULT_BYTES,
             Envelope::State(s) => s.encoded_bytes(),
+            Envelope::Piggybacked(inner, s) => {
+                inner.unbatched_bytes(meta) + s.encoded_bytes()
+            }
         }
     }
 }
@@ -244,5 +305,51 @@ mod tests {
         assert_eq!(env.encoded_bytes(&m), bytes);
         assert_eq!(env.unbatched_bytes(&m), bytes);
         assert_eq!(env.items(), 1);
+    }
+
+    #[test]
+    fn piggybacked_summary_shares_the_frame() {
+        let m = meta();
+        let s = NeighborSummary::base(3, 0.01, 0.9);
+        let s_bytes = s.encoded_bytes();
+        let inner = Envelope::TaskBatch(vec![task(1, 2)]);
+        let inner_bytes = inner.encoded_bytes(&m);
+        let inner_unbatched = inner.unbatched_bytes(&m);
+        let env = Envelope::Piggybacked(Box::new(inner), s);
+        // Charge = payload + summary minus the one header they now share.
+        assert_eq!(
+            env.encoded_bytes(&m),
+            inner_bytes + s_bytes - ENVELOPE_HEADER_BYTES
+        );
+        // Cheaper than the two separate messages the seed wire would send.
+        assert_eq!(env.unbatched_bytes(&m), inner_unbatched + s_bytes);
+        assert_eq!(
+            env.unbatched_bytes(&m) - env.encoded_bytes(&m),
+            ENVELOPE_HEADER_BYTES
+        );
+        // Items / task-batch accessors see through the wrapper.
+        assert_eq!(env.items(), 1);
+        assert!(env.is_task_batch());
+        assert_eq!(env.task_batch().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn split_gossip_roundtrip() {
+        let m = meta();
+        let s = NeighborSummary::base(5, 0.02, 0.8);
+        let env =
+            Envelope::Piggybacked(Box::new(Envelope::TaskBatch(vec![task(1, 1)])), s.clone());
+        let (inner, gossip) = env.split_gossip();
+        assert_eq!(gossip.as_ref().map(|g| g.input_len), Some(5));
+        assert_eq!(inner.encoded_bytes(&m), 12288);
+        assert!(matches!(inner, Envelope::TaskBatch(_)));
+        // Plain envelopes pass through with no summary.
+        let (plain, none) = Envelope::Result(vec![]).split_gossip();
+        assert!(none.is_none());
+        assert!(matches!(plain, Envelope::Result(_)));
+        // Result piggybacks work too (any payload headed the right way).
+        let env = Envelope::Piggybacked(Box::new(Envelope::Result(vec![])), s);
+        assert!(!env.is_task_batch());
+        assert!(env.task_batch().is_none());
     }
 }

@@ -128,7 +128,35 @@ impl Topology {
     /// * `"star-5"`         — hub 0 with leaves 1–4 (leaf↔leaf is 2 hops)
     /// * `"2-ring-bridge"`  — triangles {0,1,2} and {3,4,5} joined by a
     ///   single half-bandwidth 2–3 bridge (up to 4 hops across)
+    ///
+    /// Three parametric *generator families* extend the same namespace to
+    /// metro scale (see [`Topology::named_seeded`] for the seeding
+    /// contract; `named` builds them with seed 0):
+    ///
+    /// * `"grid-NxM"`               — N rows × M columns, 4-neighbor mesh
+    ///   (node id = row·M + col), e.g. `grid-3x3`, `grid-25x40`
+    /// * `"random-geometric-N-R"`   — N points uniform on the unit square,
+    ///   linked within radius R, then minimally repaired to be connected,
+    ///   e.g. `random-geometric-200-0.12`
+    /// * `"scale-free-N"`           — Barabási–Albert preferential
+    ///   attachment (m = 2 links per new node from a seed triangle),
+    ///   e.g. `scale-free-500`
     pub fn named(name: &str, link: LinkSpec) -> Option<Topology> {
+        Self::named_seeded(name, link, 0)
+    }
+
+    /// [`Topology::named`] with an explicit seed for the generator
+    /// families (fixed names ignore it).
+    ///
+    /// Determinism contract: generated graphs are a pure function of
+    /// `(name, seed)` — random-geometric draws from PCG stream 4242,
+    /// scale-free from 4343, both disjoint from every runtime stream — so
+    /// the two drivers, handed the same config, build the identical graph,
+    /// and a stored experiment config replays its exact topology. All
+    /// generated graphs are connected by construction (the geometric
+    /// family repairs disconnected components by bridging closest
+    /// cross-component pairs, deterministically).
+    pub fn named_seeded(name: &str, link: LinkSpec, seed: u64) -> Option<Topology> {
         let mut t = match name {
             "local" => Topology::empty(name, 1),
             "2-node" => {
@@ -193,7 +221,7 @@ impl Topology {
                 t.connect(2, 3, bridge);
                 t
             }
-            _ => return None,
+            _ => Self::generate(name, link, seed)?,
         };
         // Mild heterogeneity: non-source workers alternate 0.85x / 1.1x of
         // the source's speed (the paper's devices are nominally identical
@@ -202,6 +230,173 @@ impl Topology {
             t.workers[i].speed = if i % 2 == 0 { 1.1 } else { 0.85 };
         }
         Some(t)
+    }
+
+    /// Largest node count the generator families accept: the adjacency
+    /// matrix is dense, so memory is quadratic (4096² ≈ 0.5 GB of links).
+    pub const MAX_GENERATED_NODES: usize = 4096;
+
+    /// Parse-and-build for the parametric families. `None` when the name
+    /// doesn't match any family or the parameters are out of range.
+    fn generate(name: &str, link: LinkSpec, seed: u64) -> Option<Topology> {
+        if let Some(dims) = name.strip_prefix("grid-") {
+            let (rows, cols) = dims.split_once('x')?;
+            let (rows, cols): (usize, usize) = (rows.parse().ok()?, cols.parse().ok()?);
+            if rows == 0 || cols == 0 || rows * cols > Self::MAX_GENERATED_NODES {
+                return None;
+            }
+            return Some(Self::grid(name, rows, cols, link));
+        }
+        if let Some(params) = name.strip_prefix("random-geometric-") {
+            let (n, r) = params.split_once('-')?;
+            let (n, r): (usize, f64) = (n.parse().ok()?, r.parse().ok()?);
+            if n == 0 || n > Self::MAX_GENERATED_NODES || !r.is_finite() || r <= 0.0 {
+                return None;
+            }
+            return Some(Self::random_geometric(name, n, r, link, seed));
+        }
+        if let Some(n) = name.strip_prefix("scale-free-") {
+            let n: usize = n.parse().ok()?;
+            if n < 3 || n > Self::MAX_GENERATED_NODES {
+                return None;
+            }
+            return Some(Self::scale_free(name, n, link, seed));
+        }
+        None
+    }
+
+    fn grid(name: &str, rows: usize, cols: usize, link: LinkSpec) -> Topology {
+        let mut t = Topology::empty(name, rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                let id = r * cols + c;
+                if c + 1 < cols {
+                    t.connect(id, id + 1, link);
+                }
+                if r + 1 < rows {
+                    t.connect(id, id + cols, link);
+                }
+            }
+        }
+        t
+    }
+
+    fn random_geometric(name: &str, n: usize, radius: f64, link: LinkSpec, seed: u64) -> Topology {
+        let mut rng = Pcg64::new(seed, 4242);
+        let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
+        let d2 = |a: usize, b: usize| {
+            let (dx, dy) = (pts[a].0 - pts[b].0, pts[a].1 - pts[b].1);
+            dx * dx + dy * dy
+        };
+        let mut t = Topology::empty(name, n);
+        let r2 = radius * radius;
+        for a in 0..n {
+            for b in (a + 1)..n {
+                if d2(a, b) <= r2 {
+                    t.connect(a, b, link);
+                }
+            }
+        }
+        // Repair: while disconnected, bridge the globally closest
+        // cross-component pair. The strict `<` scan in ascending (a, b)
+        // order makes tie-breaks — and thus the repaired graph —
+        // deterministic.
+        let mut comp = t.components();
+        while comp.iter().any(|&c| c != comp[0]) {
+            let (mut best, mut best_d2) = ((0, 0), f64::INFINITY);
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    if comp[a] != comp[b] && d2(a, b) < best_d2 {
+                        best_d2 = d2(a, b);
+                        best = (a, b);
+                    }
+                }
+            }
+            t.connect(best.0, best.1, link);
+            let (keep, merge) = (comp[best.0], comp[best.1]);
+            for c in comp.iter_mut() {
+                if *c == merge {
+                    *c = keep;
+                }
+            }
+        }
+        debug_assert!(t.is_fully_connected());
+        t
+    }
+
+    fn scale_free(name: &str, n: usize, link: LinkSpec, seed: u64) -> Topology {
+        let mut rng = Pcg64::new(seed, 4343);
+        let mut t = Topology::empty(name, n);
+        // Seed triangle, then each new node attaches m=2 links, targets
+        // drawn proportionally to degree by sampling the edge-endpoint
+        // multiset.
+        t.connect(0, 1, link);
+        t.connect(1, 2, link);
+        t.connect(2, 0, link);
+        let mut endpoints: Vec<usize> = vec![0, 1, 1, 2, 2, 0];
+        for v in 3..n {
+            let first = endpoints[rng.below(endpoints.len() as u64) as usize];
+            let mut second = endpoints[rng.below(endpoints.len() as u64) as usize];
+            let mut tries = 0;
+            while second == first && tries < 32 {
+                second = endpoints[rng.below(endpoints.len() as u64) as usize];
+                tries += 1;
+            }
+            if second == first {
+                // Degenerate multiset (can't happen past the seed triangle,
+                // but keep the fallback total): lowest other node id.
+                second = if first == 0 { 1 } else { 0 };
+            }
+            for u in [first, second] {
+                t.connect(v, u, link);
+                endpoints.push(v);
+                endpoints.push(u);
+            }
+        }
+        debug_assert!(t.is_fully_connected());
+        t
+    }
+
+    /// Connected-component label per node (BFS), ignoring link direction.
+    fn components(&self) -> Vec<usize> {
+        let mut comp = vec![usize::MAX; self.n];
+        let mut queue = Vec::new();
+        for start in 0..self.n {
+            if comp[start] != usize::MAX {
+                continue;
+            }
+            comp[start] = start;
+            queue.push(start);
+            while let Some(u) = queue.pop() {
+                for m in 0..self.n {
+                    if self.links[u][m].is_some() && comp[m] == usize::MAX {
+                        comp[m] = start;
+                        queue.push(m);
+                    }
+                }
+            }
+        }
+        comp
+    }
+
+    /// Whether every node can reach every other (the structural invariant
+    /// the generator families guarantee; `local` trivially satisfies it).
+    pub fn is_fully_connected(&self) -> bool {
+        let comp = self.components();
+        comp.iter().all(|&c| c == comp[0])
+    }
+
+    /// Total undirected edge count.
+    pub fn edge_count(&self) -> usize {
+        let mut edges = 0;
+        for a in 0..self.n {
+            for b in (a + 1)..self.n {
+                if self.links[a][b].is_some() {
+                    edges += 1;
+                }
+            }
+        }
+        edges
     }
 
     pub fn all_names() -> &'static [&'static str] {
@@ -314,6 +509,87 @@ mod tests {
         let bridge = t.link(2, 3).unwrap().bandwidth_bps;
         assert!((bridge - wifi.bandwidth_bps * 0.5).abs() < 1e-9, "bridge is half-rate");
         assert!(!t.is_connected_pair(0, 5));
+    }
+
+    fn edge_set(t: &Topology) -> Vec<(usize, usize)> {
+        let mut es = Vec::new();
+        for a in 0..t.n {
+            for b in (a + 1)..t.n {
+                if t.is_connected_pair(a, b) {
+                    es.push((a, b));
+                }
+            }
+        }
+        es
+    }
+
+    #[test]
+    fn grid_generator_shape() {
+        let wifi = LinkSpec::wifi();
+        let t = Topology::named("grid-3x4", wifi).unwrap();
+        assert_eq!(t.n, 12);
+        // N(M-1) + M(N-1) = 3·3 + 4·2 = 17 edges.
+        assert_eq!(t.edge_count(), 17);
+        assert!(t.is_fully_connected());
+        // Interior node 5 (row 1, col 1) has all four neighbors.
+        assert_eq!(t.neighbors(5), vec![1, 4, 6, 9]);
+        // Corners have two.
+        assert_eq!(t.neighbors(0), vec![1, 4]);
+        assert_eq!(t.neighbors(11), vec![7, 10]);
+        // grid-3x3 exists for the cross-driver tests.
+        assert_eq!(Topology::named("grid-3x3", wifi).unwrap().n, 9);
+        // Bad shapes are rejected, not panicked on.
+        assert!(Topology::named("grid-0x4", wifi).is_none());
+        assert!(Topology::named("grid-3by4", wifi).is_none());
+        assert!(Topology::named("grid-9999x9999", wifi).is_none());
+    }
+
+    #[test]
+    fn random_geometric_is_connected_and_seed_deterministic() {
+        let wifi = LinkSpec::wifi();
+        let a = Topology::named_seeded("random-geometric-80-0.12", wifi, 7).unwrap();
+        let b = Topology::named_seeded("random-geometric-80-0.12", wifi, 7).unwrap();
+        let c = Topology::named_seeded("random-geometric-80-0.12", wifi, 8).unwrap();
+        assert_eq!(a.n, 80);
+        assert!(a.is_fully_connected(), "repair bridges every component");
+        assert_eq!(edge_set(&a), edge_set(&b), "same seed, same graph");
+        assert_ne!(edge_set(&a), edge_set(&c), "different seed, different graph");
+        // Sparse radius still yields a connected graph via repair.
+        let sparse = Topology::named_seeded("random-geometric-40-0.01", wifi, 3).unwrap();
+        assert!(sparse.is_fully_connected());
+        assert!(sparse.edge_count() >= sparse.n - 1);
+        assert!(Topology::named("random-geometric-40-0", wifi).is_none());
+        assert!(Topology::named("random-geometric-40", wifi).is_none());
+    }
+
+    #[test]
+    fn scale_free_degree_and_determinism() {
+        let wifi = LinkSpec::wifi();
+        let a = Topology::named_seeded("scale-free-120", wifi, 7).unwrap();
+        let b = Topology::named_seeded("scale-free-120", wifi, 7).unwrap();
+        let c = Topology::named_seeded("scale-free-120", wifi, 9).unwrap();
+        assert_eq!(a.n, 120);
+        // Seed triangle (3 edges) + 2 per attached node.
+        assert_eq!(a.edge_count(), 3 + 2 * (120 - 3));
+        assert!(a.is_fully_connected());
+        assert_eq!(edge_set(&a), edge_set(&b));
+        assert_ne!(edge_set(&a), edge_set(&c));
+        // Preferential attachment concentrates degree: some hub has far
+        // more links than the minimum degree of 2.
+        let max_deg = (0..a.n).map(|v| a.neighbors(v).len()).max().unwrap();
+        assert!(max_deg >= 8, "expected a hub, max degree {max_deg}");
+        assert!(Topology::named("scale-free-2", wifi).is_none());
+    }
+
+    #[test]
+    fn named_defaults_to_seed_zero_and_heterogeneity_applies() {
+        let wifi = LinkSpec::wifi();
+        let a = Topology::named("scale-free-30", wifi).unwrap();
+        let b = Topology::named_seeded("scale-free-30", wifi, 0).unwrap();
+        assert_eq!(edge_set(&a), edge_set(&b));
+        // The alternating speed profile covers generated nodes too.
+        assert!((a.workers[1].speed - 0.85).abs() < 1e-12);
+        assert!((a.workers[2].speed - 1.1).abs() < 1e-12);
     }
 
     #[test]

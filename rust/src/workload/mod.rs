@@ -1,0 +1,418 @@
+//! Traffic workload models: *when* sources admit data.
+//!
+//! The paper's testbed paces every source with a fixed interarrival time
+//! (or the Alg. 3 controller's μ). Metro-scale experiments need richer
+//! arrival processes — Poisson streams, flash crowds, diurnal load curves,
+//! and recorded traces — without touching the admission state machine. An
+//! [`ArrivalModel`] owns exactly one decision: given the pacing the
+//! [`crate::coordinator::config::AdmissionMode`] would have used
+//! (`base_dt_s`, the mean interarrival), produce the *actual* delay until
+//! the next admission.
+//!
+//! ## Seeding / determinism contract
+//!
+//! * Every stochastic model draws from its own [`Pcg64`] stream,
+//!   `(cfg.seed, ARRIVAL_STREAM_BASE + source_id)` — disjoint from the
+//!   worker-core decision streams (`1000 + id`), the DES link-jitter
+//!   stream (`7777`), and the realtime `DelayNet` endpoint streams
+//!   (`100 + id`). The k-th admission of source s therefore sees the same
+//!   draw on BOTH drivers, which is what makes the cross-driver Poisson
+//!   equivalence test possible: same seed ⇒ same per-source admission
+//!   timeline, on the DES heap and on wallclock threads alike.
+//! * [`ArrivalSpec::Legacy`] (the default) builds **no model at all** —
+//!   `poll_admission` keeps the seed code path, including the
+//!   `AdaptiveThreshold` mode's exponential draw from the *core's* RNG
+//!   stream, so default configs reproduce seed behaviour bit for bit.
+//! * Deterministic models (`Constant`, `Trace`) consume no randomness;
+//!   rate-modulated models (`FlashCrowd`, `Diurnal`) consume exactly one
+//!   draw per admission, so replacing one stochastic model with another
+//!   never shifts any other stream.
+//!
+//! Models see `now` (the scheduled admission time) and may modulate their
+//! rate with it; they never see the clock directly, so the same model
+//! instance behaves identically in virtual and wall time.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Pcg64;
+
+/// RNG stream base for arrival models: stream = base + source node id.
+/// Disjoint from the core (1000+id), DES link (7777) and realtime endpoint
+/// (100+id) streams — see the module docs for why that matters.
+pub const ARRIVAL_STREAM_BASE: u64 = 9000;
+
+/// One source's arrival process. `next_dt` returns the delay until the
+/// next admission given the admission mode's mean pacing `base_dt_s`
+/// (already controller-adapted under Alg. 3) evaluated at time `now`.
+/// The returned delay is *before* the placement's `rate_share` scaling —
+/// the core applies that uniformly, so shares keep meaning "k× the
+/// configured rate" under every model.
+pub trait ArrivalModel: Send {
+    fn name(&self) -> &'static str;
+    fn next_dt(&mut self, now: f64, base_dt_s: f64) -> f64;
+}
+
+/// Declarative arrival-model choice (config-level; [`ArrivalSpec::build`]
+/// turns it into a live model per source).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum ArrivalSpec {
+    /// Seed behaviour: pacing comes from the admission mode alone
+    /// (deterministic under `Fixed`/`AdaptiveRate`, the core-stream
+    /// exponential under `AdaptiveThreshold`). Builds no model.
+    #[default]
+    Legacy,
+    /// Deterministic pacing at exactly the mode's mean (`dt = base_dt`).
+    /// Under `AdaptiveThreshold` this *removes* the seed's exponential
+    /// jitter — the explicit constant-rate back-compat model.
+    Constant,
+    /// Homogeneous Poisson process at the mode's mean rate.
+    Poisson,
+    /// Poisson process whose rate ramps up to `peak_mult ×` the base rate
+    /// and back down: linear up over [`at_s`, `at_s + ramp_s`], linear
+    /// down over [`at_s + ramp_s`, `at_s + 2·ramp_s`].
+    FlashCrowd { peak_mult: f64, at_s: f64, ramp_s: f64 },
+    /// Poisson process with a sinusoidal rate profile:
+    /// `rate × (1 + depth · sin(2π · now / period_s))`.
+    Diurnal { period_s: f64, depth: f64 },
+    /// Replay recorded interarrival gaps (seconds), cycling when the trace
+    /// is exhausted. Ignores `base_dt_s` — the trace IS the rate.
+    Trace { dts: Vec<f64> },
+}
+
+impl ArrivalSpec {
+    /// Parse the CLI spelling: `legacy | constant | poisson | flash-crowd |
+    /// diurnal | trace:PATH` (named models use default parameters; the
+    /// `[workload]` TOML section sets the fine-grained knobs).
+    pub fn parse_cli(s: &str) -> Result<ArrivalSpec> {
+        if let Some(path) = s.strip_prefix("trace:") {
+            return ArrivalSpec::trace_from_file(path);
+        }
+        Ok(match s {
+            "legacy" => ArrivalSpec::Legacy,
+            "constant" => ArrivalSpec::Constant,
+            "poisson" => ArrivalSpec::Poisson,
+            "flash-crowd" => {
+                ArrivalSpec::FlashCrowd { peak_mult: 8.0, at_s: 30.0, ramp_s: 5.0 }
+            }
+            "diurnal" => ArrivalSpec::Diurnal { period_s: 60.0, depth: 0.5 },
+            other => bail!(
+                "unknown arrival model {other:?} \
+                 (expected legacy|constant|poisson|flash-crowd|diurnal|trace:PATH)"
+            ),
+        })
+    }
+
+    /// Load a trace file: one interarrival gap (seconds) per line, `#`
+    /// comments and blank lines ignored. Loaded eagerly so config parsing
+    /// reports file errors and worker construction stays infallible.
+    pub fn trace_from_file(path: &str) -> Result<ArrivalSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading arrival trace {path:?}"))?;
+        let mut dts = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let dt: f64 = line
+                .parse()
+                .with_context(|| format!("{path}:{}: bad interarrival {line:?}", i + 1))?;
+            dts.push(dt);
+        }
+        let spec = ArrivalSpec::Trace { dts };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            ArrivalSpec::Legacy | ArrivalSpec::Constant | ArrivalSpec::Poisson => {}
+            ArrivalSpec::FlashCrowd { peak_mult, at_s, ramp_s } => {
+                if !peak_mult.is_finite() || *peak_mult < 1.0 {
+                    bail!("flash-crowd peak_mult must be >= 1, got {peak_mult}");
+                }
+                if !at_s.is_finite() || *at_s < 0.0 || !ramp_s.is_finite() || *ramp_s <= 0.0 {
+                    bail!("flash-crowd needs at_s >= 0 and ramp_s > 0");
+                }
+            }
+            ArrivalSpec::Diurnal { period_s, depth } => {
+                if !period_s.is_finite() || *period_s <= 0.0 {
+                    bail!("diurnal period_s must be positive, got {period_s}");
+                }
+                if !depth.is_finite() || !(0.0..1.0).contains(depth) {
+                    bail!("diurnal depth must be in [0, 1), got {depth}");
+                }
+            }
+            ArrivalSpec::Trace { dts } => {
+                if dts.is_empty() {
+                    bail!("arrival trace is empty");
+                }
+                if let Some(bad) = dts.iter().find(|d| !d.is_finite() || **d <= 0.0) {
+                    bail!("arrival trace gaps must be positive and finite, got {bad}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantiate the model for one source. `None` for [`Legacy`]
+    /// (the core then keeps the seed pacing path untouched).
+    ///
+    /// [`Legacy`]: ArrivalSpec::Legacy
+    pub fn build(&self, seed: u64, source: usize) -> Option<Box<dyn ArrivalModel>> {
+        let rng = Pcg64::new(seed, ARRIVAL_STREAM_BASE + source as u64);
+        match self {
+            ArrivalSpec::Legacy => None,
+            ArrivalSpec::Constant => Some(Box::new(Constant)),
+            ArrivalSpec::Poisson => Some(Box::new(Poisson { rng })),
+            ArrivalSpec::FlashCrowd { peak_mult, at_s, ramp_s } => Some(Box::new(FlashCrowd {
+                rng,
+                peak_mult: *peak_mult,
+                at_s: *at_s,
+                ramp_s: *ramp_s,
+            })),
+            ArrivalSpec::Diurnal { period_s, depth } => {
+                Some(Box::new(Diurnal { rng, period_s: *period_s, depth: *depth }))
+            }
+            ArrivalSpec::Trace { dts } => {
+                Some(Box::new(TraceReplay { dts: dts.clone(), idx: 0 }))
+            }
+        }
+    }
+}
+
+/// Workload description attached to [`crate::coordinator::ExperimentConfig`].
+/// A struct (not a bare spec) so later growth — per-source model mixes,
+/// mobility — lands here without another config migration.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct WorkloadConfig {
+    pub arrival: ArrivalSpec,
+}
+
+impl WorkloadConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.arrival.validate()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Models
+// ---------------------------------------------------------------------------
+
+struct Constant;
+
+impl ArrivalModel for Constant {
+    fn name(&self) -> &'static str {
+        "constant"
+    }
+    fn next_dt(&mut self, _now: f64, base_dt_s: f64) -> f64 {
+        base_dt_s
+    }
+}
+
+struct Poisson {
+    rng: Pcg64,
+}
+
+impl ArrivalModel for Poisson {
+    fn name(&self) -> &'static str {
+        "poisson"
+    }
+    fn next_dt(&mut self, _now: f64, base_dt_s: f64) -> f64 {
+        self.rng.exponential(base_dt_s)
+    }
+}
+
+/// Rate-modulated Poisson: each gap is exponential at the *instantaneous*
+/// rate (a step-wise approximation of the nonhomogeneous process — exact
+/// as gaps shrink relative to the ramp, and deterministic given the seed,
+/// which is what the subsystem actually contracts).
+struct FlashCrowd {
+    rng: Pcg64,
+    peak_mult: f64,
+    at_s: f64,
+    ramp_s: f64,
+}
+
+impl FlashCrowd {
+    fn mult(&self, now: f64) -> f64 {
+        let x = now - self.at_s;
+        let up = self.ramp_s;
+        if x <= 0.0 || x >= 2.0 * up {
+            1.0
+        } else if x < up {
+            1.0 + (self.peak_mult - 1.0) * (x / up)
+        } else {
+            1.0 + (self.peak_mult - 1.0) * ((2.0 * up - x) / up)
+        }
+    }
+}
+
+impl ArrivalModel for FlashCrowd {
+    fn name(&self) -> &'static str {
+        "flash-crowd"
+    }
+    fn next_dt(&mut self, now: f64, base_dt_s: f64) -> f64 {
+        self.rng.exponential(base_dt_s / self.mult(now))
+    }
+}
+
+struct Diurnal {
+    rng: Pcg64,
+    period_s: f64,
+    depth: f64,
+}
+
+impl ArrivalModel for Diurnal {
+    fn name(&self) -> &'static str {
+        "diurnal"
+    }
+    fn next_dt(&mut self, now: f64, base_dt_s: f64) -> f64 {
+        let mult =
+            1.0 + self.depth * (2.0 * std::f64::consts::PI * now / self.period_s).sin();
+        self.rng.exponential(base_dt_s / mult)
+    }
+}
+
+struct TraceReplay {
+    dts: Vec<f64>,
+    idx: usize,
+}
+
+impl ArrivalModel for TraceReplay {
+    fn name(&self) -> &'static str {
+        "trace"
+    }
+    fn next_dt(&mut self, _now: f64, _base_dt_s: f64) -> f64 {
+        let dt = self.dts[self.idx % self.dts.len()];
+        self.idx += 1;
+        dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(spec: &ArrivalSpec, seed: u64, source: usize, n: usize) -> Vec<f64> {
+        let mut m = spec.build(seed, source).expect("non-legacy spec builds");
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                let dt = m.next_dt(t, 0.02);
+                t += dt;
+                dt
+            })
+            .collect()
+    }
+
+    #[test]
+    fn legacy_builds_no_model() {
+        assert!(ArrivalSpec::Legacy.build(7, 0).is_none());
+    }
+
+    #[test]
+    fn constant_returns_base_dt() {
+        let dts = collect(&ArrivalSpec::Constant, 7, 0, 16);
+        assert!(dts.iter().all(|&d| (d - 0.02).abs() < 1e-15), "{dts:?}");
+    }
+
+    #[test]
+    fn poisson_is_seed_deterministic_and_source_separated() {
+        let a = collect(&ArrivalSpec::Poisson, 7, 0, 64);
+        let b = collect(&ArrivalSpec::Poisson, 7, 0, 64);
+        let c = collect(&ArrivalSpec::Poisson, 7, 1, 64);
+        let d = collect(&ArrivalSpec::Poisson, 8, 0, 64);
+        assert_eq!(a, b, "same (seed, source) replays the same timeline");
+        assert_ne!(a, c, "sources draw independent streams");
+        assert_ne!(a, d, "different seeds diverge");
+    }
+
+    #[test]
+    fn poisson_mean_matches_base_dt() {
+        let dts = collect(&ArrivalSpec::Poisson, 3, 0, 50_000);
+        let mean = dts.iter().sum::<f64>() / dts.len() as f64;
+        assert!((mean - 0.02).abs() < 0.001, "mean {mean}");
+        assert!(dts.iter().all(|&d| d >= 0.0));
+    }
+
+    #[test]
+    fn flash_crowd_spikes_at_the_peak() {
+        let spec = ArrivalSpec::FlashCrowd { peak_mult: 10.0, at_s: 10.0, ramp_s: 5.0 };
+        let mut m = spec.build(1, 0).unwrap();
+        let n = 5_000;
+        let mean_at = |t: f64, m: &mut Box<dyn ArrivalModel>| {
+            (0..n).map(|_| m.next_dt(t, 0.02)).sum::<f64>() / n as f64
+        };
+        let calm = mean_at(0.0, &mut m);
+        let peak = mean_at(15.0, &mut m); // at_s + ramp_s = the crest
+        let after = mean_at(60.0, &mut m);
+        assert!(peak < calm / 5.0, "peak mean {peak} vs calm {calm}");
+        assert!((after / calm).ln().abs() < 0.3, "rate recovers after the burst");
+    }
+
+    #[test]
+    fn diurnal_modulates_by_phase() {
+        let spec = ArrivalSpec::Diurnal { period_s: 40.0, depth: 0.8 };
+        let mut m = spec.build(1, 0).unwrap();
+        let n = 5_000;
+        let mean_at = |t: f64, m: &mut Box<dyn ArrivalModel>| {
+            (0..n).map(|_| m.next_dt(t, 0.02)).sum::<f64>() / n as f64
+        };
+        let crest = mean_at(10.0, &mut m); // sin = +1 → 1.8× rate
+        let trough = mean_at(30.0, &mut m); // sin = −1 → 0.2× rate
+        assert!(crest < trough / 3.0, "crest {crest} vs trough {trough}");
+    }
+
+    #[test]
+    fn trace_cycles_and_ignores_base_dt() {
+        let spec = ArrivalSpec::Trace { dts: vec![0.5, 0.25] };
+        let mut m = spec.build(1, 0).unwrap();
+        let got: Vec<f64> = (0..5).map(|_| m.next_dt(0.0, 123.0)).collect();
+        assert_eq!(got, vec![0.5, 0.25, 0.5, 0.25, 0.5]);
+    }
+
+    #[test]
+    fn parse_cli_names() {
+        assert_eq!(ArrivalSpec::parse_cli("legacy").unwrap(), ArrivalSpec::Legacy);
+        assert_eq!(ArrivalSpec::parse_cli("constant").unwrap(), ArrivalSpec::Constant);
+        assert_eq!(ArrivalSpec::parse_cli("poisson").unwrap(), ArrivalSpec::Poisson);
+        assert!(matches!(
+            ArrivalSpec::parse_cli("flash-crowd").unwrap(),
+            ArrivalSpec::FlashCrowd { .. }
+        ));
+        assert!(matches!(
+            ArrivalSpec::parse_cli("diurnal").unwrap(),
+            ArrivalSpec::Diurnal { .. }
+        ));
+        assert!(ArrivalSpec::parse_cli("warp-drive").is_err());
+        assert!(ArrivalSpec::parse_cli("trace:/no/such/file").is_err());
+    }
+
+    #[test]
+    fn trace_file_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("mdi_exit_arrival_trace_test.txt");
+        std::fs::write(&path, "# recorded gaps\n0.5\n\n0.25\n0.125\n").unwrap();
+        let spec = ArrivalSpec::trace_from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(spec, ArrivalSpec::Trace { dts: vec![0.5, 0.25, 0.125] });
+        std::fs::write(&path, "0.5\n-1.0\n").unwrap();
+        assert!(ArrivalSpec::trace_from_file(path.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(ArrivalSpec::FlashCrowd { peak_mult: 0.5, at_s: 0.0, ramp_s: 1.0 }
+            .validate()
+            .is_err());
+        assert!(ArrivalSpec::FlashCrowd { peak_mult: 2.0, at_s: 0.0, ramp_s: 0.0 }
+            .validate()
+            .is_err());
+        assert!(ArrivalSpec::Diurnal { period_s: 0.0, depth: 0.5 }.validate().is_err());
+        assert!(ArrivalSpec::Diurnal { period_s: 10.0, depth: 1.0 }.validate().is_err());
+        assert!(ArrivalSpec::Trace { dts: vec![] }.validate().is_err());
+        assert!(ArrivalSpec::Trace { dts: vec![0.1, 0.0] }.validate().is_err());
+        assert!(WorkloadConfig::default().validate().is_ok());
+    }
+}

@@ -19,6 +19,7 @@ use mdi_exit::dataset::{Dataset, ExitTable};
 use mdi_exit::runtime::sim_engine::SimEngine;
 use mdi_exit::runtime::InferenceEngine;
 use mdi_exit::sched::{BatchPolicy, CoalesceMode, DisciplineKind};
+use mdi_exit::workload::ArrivalSpec;
 
 /// The realtime runs busy-spin one thread per worker for cost emulation;
 /// running the three tests concurrently starves them of cores on small CI
@@ -491,6 +492,79 @@ fn wire_accounting_is_equivalent_across_drivers_with_and_without_coalescing() {
             );
         }
     }
+}
+
+#[test]
+fn des_and_realtime_agree_under_poisson_arrivals_on_grid() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    // Poisson arrivals on a generated 9-node grid: both drivers draw the
+    // interarrival gaps from the same dedicated Pcg64 stream
+    // (`ARRIVAL_STREAM_BASE + source`, seeded from the run seed), so they
+    // admit the *same sample path* — the realtime leg merely truncates it
+    // at its wallclock horizon. Rates and exit splits must line up.
+    let poisson = |mut c: ExperimentConfig| {
+        c.workload.arrival = ArrivalSpec::Poisson;
+        c
+    };
+    let des = run_des(poisson(cfg("grid-3x3", 100.0, 5.0)), &labels);
+    let rt = run_rt(poisson(cfg("grid-3x3", 100.0, 2.0)), &labels);
+
+    assert!(des.completed > 300, "DES completed {}", des.completed);
+    assert!(rt.completed > 100, "realtime completed {}", rt.completed);
+
+    let (da, ra) = (des.admitted_rate_hz(), rt.admitted_rate_hz());
+    assert!((da - 100.0).abs() < 12.0, "DES Poisson rate {da:.1} Hz");
+    assert!((ra - 100.0).abs() < 18.0, "realtime Poisson rate {ra:.1} Hz");
+    assert!(
+        (da - ra).abs() < 0.20 * da,
+        "admission rates diverged: DES {da:.1} Hz vs realtime {ra:.1} Hz"
+    );
+
+    let (fd, fr) = (des.exit_fractions(), rt.exit_fractions());
+    assert!(
+        (fd[0] - fr[0]).abs() < 0.10,
+        "exit-1 fraction diverged: DES {fd:?} vs realtime {fr:?}"
+    );
+    assert!((des.accuracy() - 1.0).abs() < 1e-9, "DES accuracy {}", des.accuracy());
+    assert!((rt.accuracy() - 1.0).abs() < 1e-9, "realtime accuracy {}", rt.accuracy());
+}
+
+#[test]
+fn realtime_drains_flash_crowd_bursts_without_loop_rate_capping() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    // A 10x flash crowd concentrates ~rate·ramp_s·(peak_mult − 1) extra
+    // admissions into one second. The realtime admission loop must drain
+    // the whole scheduled backlog every poll (admitting at the *scheduled*
+    // timestamps), or the burst gets clipped to the driver's poll rate and
+    // the total falls far short of the DES reference.
+    let flash = |mut c: ExperimentConfig| {
+        c.workload.arrival =
+            ArrivalSpec::FlashCrowd { peak_mult: 10.0, at_s: 1.0, ramp_s: 0.5 };
+        c.warmup_s = 0.0;
+        c
+    };
+    let des = run_des(flash(cfg("3-node-mesh", 150.0, 3.0)), &labels);
+    let rt = run_rt(flash(cfg("3-node-mesh", 150.0, 3.0)), &labels);
+
+    // Expected ≈ 150·3 (steady) + 150·0.5·9 (burst triangle) ≈ 1125.
+    let expect = 150.0 * 3.0 + 150.0 * 0.5 * 9.0;
+    assert!(
+        (des.admitted as f64 - expect).abs() < 0.15 * expect,
+        "DES admitted {} (expected ≈ {expect:.0})",
+        des.admitted
+    );
+    // The burst actually happened: far more than the steady-state total.
+    assert!(des.admitted as f64 > 1.5 * 150.0 * 3.0, "DES admitted {}", des.admitted);
+    // And the realtime driver kept up with it.
+    assert!(
+        (rt.admitted as f64 - des.admitted as f64).abs() < 0.10 * des.admitted as f64,
+        "realtime clipped the burst: admitted {} vs DES {}",
+        rt.admitted,
+        des.admitted
+    );
+    assert!(des.completed > 0 && rt.completed > 0);
 }
 
 #[test]
