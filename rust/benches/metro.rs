@@ -2,13 +2,17 @@
 //! models on the DES fast path, plus a calendar-vs-binary-heap event-queue
 //! microbenchmark.
 //!
-//! Two claims are asserted (so CI fails on a fast-path regression, not
+//! Three claims are asserted (so CI fails on a fast-path regression, not
 //! just a drifting history):
 //!
 //! * the calendar event queue beats the seed's `BinaryHeap` by the mode's
 //!   floor (≥ 2.0× in the full run, ≥ 1.3× under `MDI_BENCH_QUICK=1`) on a
 //!   hold-model schedule with a deep pending set — both kinds must also
 //!   agree on the pop sequence, checksummed;
+//! * telemetry is zero-cost when off: a run with the no-op recorder
+//!   installed (every hook branch taken, events constructed and
+//!   discarded) stays within 2% of the recorder-free baseline (10% under
+//!   `MDI_BENCH_QUICK=1`);
 //! * (full mode) a 1000-node random-geometric Poisson run completes at
 //!   least one million simulated events in under 60 s of wallclock.
 //!
@@ -209,6 +213,46 @@ fn main() {
         }
     }
 
+    // -- zero-cost-when-off: telemetry's no-op recorder -------------------
+    // The telemetry contract (see `mdi_exit::telemetry`): with a
+    // `NoopRecorder` installed every hook still takes its `is_some()`
+    // branch and constructs its event, but the payload work is zero — so
+    // the metro fast path must stay within 2% of the recorder-free
+    // baseline (quick mode loosens the ceiling for noisy CI runners).
+    let (tel_topo, tel_nodes, tel_secs, tel_iters, tel_ceiling) =
+        if quick { ("grid-4x4", 16, 6.0, 3, 1.10) } else { ("grid-10x10", 100, 10.0, 5, 1.02) };
+    let tel_sources: Vec<usize> = (0..tel_nodes).step_by(every.min(tel_nodes)).collect();
+    let time_runs = |noop: bool, iters: u32| -> f64 {
+        let mut best = f64::INFINITY;
+        for _ in 0..iters {
+            let mut cfg =
+                metro_cfg(tel_topo, &tel_sources, ArrivalSpec::Legacy, rate_hz, tel_secs);
+            cfg.telemetry.noop = noop;
+            let t0 = Instant::now();
+            let r = run_des(cfg);
+            best = best.min(t0.elapsed().as_secs_f64());
+            std::hint::black_box(r.completed);
+            if let Some(d) = &r.telemetry {
+                assert!(d.is_empty(), "the no-op recorder must collect nothing");
+            }
+        }
+        best
+    };
+    let t_off = time_runs(false, tel_iters);
+    let t_noop = time_runs(true, tel_iters);
+    let overhead = t_noop / t_off;
+    println!(
+        "telemetry no-op overhead ({tel_topo}, {tel_secs}s): off {:.1} ms, \
+         noop {:.1} ms -> {overhead:.3}x",
+        t_off * 1e3,
+        t_noop * 1e3
+    );
+    assert!(
+        overhead <= tel_ceiling,
+        "no-op telemetry overhead {overhead:.3}x breaks the {tel_ceiling}x \
+         zero-cost-when-off ceiling (off {t_off:.4}s vs noop {t_noop:.4}s)"
+    );
+
     // -- flagship (full mode): 1000-node metro run ------------------------
     // The acceptance bar: ≥ 1M simulated events in < 60 s of wallclock on
     // a 1000-node random-geometric graph under Poisson arrivals.
@@ -268,6 +312,17 @@ fn main() {
                 ("calendar_min_s", t_cal.into()),
                 ("speedup", speedup.into()),
                 ("floor", floor.into()),
+            ]),
+        ),
+        (
+            "telemetry_noop",
+            obj(vec![
+                ("topology", tel_topo.into()),
+                ("seconds", tel_secs.into()),
+                ("baseline_min_s", t_off.into()),
+                ("noop_min_s", t_noop.into()),
+                ("overhead", overhead.into()),
+                ("ceiling", tel_ceiling.into()),
             ]),
         ),
         ("rows", Json::Arr(rows)),

@@ -6,6 +6,7 @@ use crate::policy::{AdaptConfig, PolicyConfig};
 use crate::routing::{Placement, SourceSpec};
 use crate::sched::{CoalesceMode, DisciplineKind, SchedConfig};
 use crate::simnet::{ChurnEvent, LinkSpec};
+use crate::telemetry::TelemetryConfig;
 use crate::util::toml::{Config as Toml, Value};
 use crate::workload::{ArrivalSpec, WorkloadConfig};
 
@@ -92,6 +93,11 @@ pub struct ExperimentConfig {
     /// Off by default: piggybacking changes wire-byte totals and therefore
     /// the link-jitter draw order, so the seed wire stays bit-for-bit.
     pub gossip_piggyback: bool,
+    /// Observability: trace spans, metrics cadence, flight recorder
+    /// (`crate::telemetry`). Default: everything off — the cores carry no
+    /// recorder and the hot path stays byte-identical to the seed. TOML
+    /// `[telemetry]`, CLI `--trace`/`--metrics`/`--metrics-interval`.
+    pub telemetry: TelemetryConfig,
     pub seed: u64,
 }
 
@@ -119,6 +125,7 @@ impl ExperimentConfig {
             placement: Placement::default(),
             workload: WorkloadConfig::default(),
             gossip_piggyback: false,
+            telemetry: TelemetryConfig::default(),
             seed: 7,
         }
     }
@@ -173,6 +180,9 @@ impl ExperimentConfig {
         }
         if let Err(e) = self.workload.validate() {
             bail!("workload config: {e}");
+        }
+        if let Err(e) = self.telemetry.validate() {
+            bail!("telemetry config: {e}");
         }
         Ok(())
     }
@@ -230,6 +240,7 @@ impl ExperimentConfig {
         cfg.placement = Self::placement_from_toml(toml)?;
         cfg.workload = Self::workload_from_toml(toml)?;
         cfg.gossip_piggyback = toml.bool_or("gossip_piggyback", false);
+        cfg.telemetry = Self::telemetry_from_toml(toml);
         cfg.seed = toml.i64_or("seed", 7) as u64;
         cfg.validate()?;
         Ok(cfg)
@@ -403,6 +414,27 @@ impl ExperimentConfig {
             .map_err(|e| anyhow::anyhow!("sched.coalesce: {e}"))?;
         sched.coalesce_max = toml.usize_or("sched.coalesce_max", sched.coalesce_max);
         Ok(sched)
+    }
+
+    /// `[telemetry]` section: observability knobs (`crate::telemetry`;
+    /// validated with the rest of the config).
+    ///
+    /// ```toml
+    /// [telemetry]
+    /// trace = true        # per-task spans (Chrome trace export)
+    /// metrics = true      # time-series sampling
+    /// interval = 0.25     # metrics cadence in seconds
+    /// flight_capacity = 64
+    /// ```
+    fn telemetry_from_toml(toml: &Toml) -> TelemetryConfig {
+        let d = TelemetryConfig::default();
+        TelemetryConfig {
+            spans: toml.bool_or("telemetry.trace", false),
+            metrics: toml.bool_or("telemetry.metrics", false),
+            interval_s: toml.f64_or("telemetry.interval", d.interval_s),
+            flight_capacity: toml.usize_or("telemetry.flight_capacity", d.flight_capacity),
+            ..d
+        }
     }
 
     /// `[workload]` section: the arrival process each source runs
@@ -715,6 +747,26 @@ batch_marginal = 0.1
         assert!(ExperimentConfig::from_toml(&toml).is_err());
         // trace mode needs a path.
         let toml = Toml::parse("[workload]\narrival = \"trace\"\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+    }
+
+    #[test]
+    fn from_toml_parses_telemetry_section() {
+        let toml = Toml::parse(
+            "[telemetry]\ntrace = true\nmetrics = true\ninterval = 0.5\nflight_capacity = 16\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert!(c.telemetry.spans);
+        assert!(c.telemetry.metrics);
+        assert!((c.telemetry.interval_s - 0.5).abs() < 1e-12);
+        assert_eq!(c.telemetry.flight_capacity, 16);
+        assert!(c.telemetry.enabled());
+        // Default: fully off.
+        let c = ExperimentConfig::from_toml(&Toml::parse("model = \"tiny\"\n").unwrap()).unwrap();
+        assert!(!c.telemetry.enabled());
+        // Bad cadence fails validation.
+        let toml = Toml::parse("[telemetry]\nmetrics = true\ninterval = 0.0\n").unwrap();
         assert!(ExperimentConfig::from_toml(&toml).is_err());
     }
 

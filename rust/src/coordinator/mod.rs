@@ -12,6 +12,11 @@
 //!   are first-class on it, and byte charges come from one shared
 //!   function
 //! * [`config`], [`report`] — experiment descriptions and run reports
+//! * [`crate::telemetry`] — observability over the same seam: when a run
+//!   enables it, each core carries a [`crate::telemetry::Recorder`] that
+//!   turns the events-in/actions-out flow into per-task trace spans
+//!   (Chrome trace JSON, Perfetto-loadable), sampled metrics time-series,
+//!   and a flight-recorder ring — identically on both drivers
 //! * [`run`] — the [`Run`] builder façade: pick [`Driver::Des`] or
 //!   [`Driver::Realtime`], everything else stays identical
 //! * [`sim`] — discrete-event driver (virtual time; figure benches)

@@ -225,6 +225,10 @@ pub struct RunReport {
     /// High-water mark of the DES event queue (0 on the realtime driver).
     pub peak_event_queue: usize,
     pub trace: Vec<TracePoint>,
+    /// Spans / metrics rows / flight dumps collected when the run enabled
+    /// telemetry (`None` otherwise). Not serialized by `to_json` — the CLI
+    /// exports it to its own files (`--trace`, `--metrics`).
+    pub telemetry: Option<crate::telemetry::TelemetryData>,
 }
 
 impl RunReport {
@@ -255,6 +259,7 @@ impl RunReport {
             sim_events: 0,
             peak_event_queue: 0,
             trace: Vec::new(),
+            telemetry: None,
         }
     }
 

@@ -47,6 +47,7 @@ use crate::routing::RoutingTable;
 use crate::runtime::InferenceEngine;
 use crate::simnet::transport::{DelayNet, Endpoint};
 use crate::simnet::{ChurnEvent, Topology};
+use crate::telemetry::{self, TelemetryData, TelemetryEvent};
 use crate::util::stats::Samples;
 
 const IDLE_PARK: Duration = Duration::from_micros(200);
@@ -89,7 +90,8 @@ pub(super) fn run_realtime(
     let mut endpoints: Vec<Option<Endpoint<Envelope>>> =
         (0..n).map(|i| Some(net.endpoint(i))).collect();
 
-    let (stats_tx, stats_rx) = channel::<(usize, super::report::WorkerStats, SourceTally)>();
+    let (stats_tx, stats_rx) =
+        channel::<(usize, super::report::WorkerStats, SourceTally, Option<TelemetryData>)>();
     let t0 = Instant::now();
     let horizon = Duration::from_secs_f64(cfg.warmup_s + cfg.duration_s);
 
@@ -110,6 +112,7 @@ pub(super) fn run_realtime(
                             id,
                             super::report::WorkerStats::default(),
                             SourceTally::default(),
+                            None,
                         ));
                         return;
                     }
@@ -123,8 +126,11 @@ pub(super) fn run_realtime(
                         .collect(),
                     ..SourceTally::default()
                 };
-                let core =
+                let mut core =
                     WorkerCore::with_routing(id, &cfg, meta.clone(), &topo, &routing, dataset.n);
+                if cfg.telemetry.enabled() {
+                    core.set_recorder(cfg.telemetry.build_recorder(id, cfg.warmup_s));
+                }
                 let is_source = core.is_source();
                 let mut w = RtWorker {
                     id,
@@ -142,8 +148,8 @@ pub(super) fn run_realtime(
                 };
                 w.run(horizon);
                 let id = w.id;
-                let (stats, tally) = w.finish();
-                let _ = stats_tx.send((id, stats, tally));
+                let (stats, tally, tdata) = w.finish();
+                let _ = stats_tx.send((id, stats, tally, tdata));
             });
         }
         Ok(())
@@ -163,8 +169,11 @@ pub(super) fn run_realtime(
     // Every source thread carries its own tally home; the run totals are
     // the merge, and each tally verbatim is that source's per-source row.
     let lead = cfg.placement.sources[0].node;
-    while let Ok((id, stats, tally)) = stats_rx.recv() {
+    while let Ok((id, stats, tally, tdata)) = stats_rx.recv() {
         report.per_worker[id] = stats;
+        if let Some(d) = tdata {
+            report.telemetry.get_or_insert_with(TelemetryData::default).merge(d);
+        }
         if !cfg.placement.is_source(id) {
             continue;
         }
@@ -237,6 +246,13 @@ impl<'a> RtWorker<'a> {
         let mut next_admit = 0.0f64;
         let mut next_adapt = self.cfg.adapt.sleep_s;
         let mut next_gossip = 0.0f64;
+        // Metrics cadence: same `interval_s` the DES driver schedules; an
+        // infinite first deadline disables the timer when metrics are off.
+        let mut next_metrics = if self.cfg.telemetry.metrics {
+            self.cfg.telemetry.interval_s
+        } else {
+            f64::INFINITY
+        };
         while self.clock.now() < horizon.as_secs_f64() {
             let mut progressed = false;
 
@@ -301,6 +317,12 @@ impl<'a> RtWorker<'a> {
                 next_gossip = now + self.cfg.gossip_interval_s;
             }
 
+            // 4b. telemetry metrics sample (read-only on the core)
+            if now >= next_metrics {
+                self.core.on_metrics_tick(now);
+                next_metrics = now + self.cfg.telemetry.interval_s;
+            }
+
             // 5. run one batch through the engine (Alg. 1 on completion)
             if let Some(mut batch) = self.pending.take() {
                 progressed = true;
@@ -344,6 +366,12 @@ impl<'a> RtWorker<'a> {
             self.tally.final_mu_s = self.core.final_mu_s();
             self.tally.final_t_e = self.core.final_t_e();
         }
+        // Closing metrics sample: the last row per worker carries the
+        // full-window counters (mirrors the DES driver's finalize).
+        if self.cfg.telemetry.metrics {
+            let end = self.clock.now();
+            self.core.on_metrics_tick(end);
+        }
     }
 
     /// Map core actions onto the threaded medium.
@@ -385,6 +413,22 @@ impl<'a> RtWorker<'a> {
                     // sized after the AE step, framed once per envelope.
                     let bytes = env.encoded_bytes(self.meta);
                     let items = env.items();
+                    // Wire legs are recorded by the sender — the only side
+                    // that knows the delivery delay. The envelope is
+                    // consumed by `send`, so cut the events first and
+                    // stamp the sampled delay in once it is known.
+                    let wire_events: Option<Vec<TelemetryEvent>> =
+                        if self.core.has_recorder() {
+                            let now = self.clock.now();
+                            let mut evs = Vec::new();
+                            telemetry::wire_send_events(
+                                now, self.id, to, &env, bytes, 0.0,
+                                |ev| evs.push(ev),
+                            );
+                            Some(evs)
+                        } else {
+                            None
+                        };
                     // An Err means the fabric already shut down (end of
                     // run): drop the message, as the seed driver did.
                     if let Ok(delay) = self.endpoint.send(to, env, bytes) {
@@ -392,6 +436,14 @@ impl<'a> RtWorker<'a> {
                             // Per-task amortized share, like the DES
                             // driver (and like Γ_n for batched compute).
                             self.core.note_transfer_delay(to, delay / items.max(1) as f64);
+                        }
+                        if let Some(evs) = wire_events {
+                            for mut ev in evs {
+                                if let TelemetryEvent::WireSend { delay_s, .. } = &mut ev {
+                                    *delay_s = delay;
+                                }
+                                self.core.record_event(&ev);
+                            }
                         }
                     }
                 }
@@ -402,6 +454,16 @@ impl<'a> RtWorker<'a> {
 
     fn on_msg(&mut self, from: usize, env: Envelope) {
         let now = self.clock.now();
+        if self.core.has_recorder() {
+            let ev = TelemetryEvent::WireRecv {
+                t: now,
+                worker: self.id,
+                from,
+                kind: telemetry::wire_kind(&env),
+                items: env.items(),
+            };
+            self.core.record_event(&ev);
+        }
         // Piggybacked gossip is unwrapped first — summary arrival, then
         // payload delivery, exactly as the DES driver orders them.
         let (env, gossip) = env.split_gossip();
@@ -451,7 +513,8 @@ impl<'a> RtWorker<'a> {
         }
     }
 
-    fn finish(self) -> (super::report::WorkerStats, SourceTally) {
-        (self.core.into_stats(), self.tally)
+    fn finish(mut self) -> (super::report::WorkerStats, SourceTally, Option<TelemetryData>) {
+        let data = self.core.take_recorder().map(|r| r.finish());
+        (self.core.into_stats(), self.tally, data)
     }
 }

@@ -31,6 +31,12 @@
 //! and the held-out dataset as the sample store. Both drivers execute the
 //! same [`super::worker::WorkerCore`]; picking [`Driver::Des`] or
 //! [`Driver::Realtime`] only changes the clock and the transport.
+//!
+//! Observability flows through the same façade: set
+//! [`ExperimentConfig::telemetry`] (`[telemetry]` TOML, `--trace` /
+//! `--metrics` CLI) and the returned [`RunReport::telemetry`] carries the
+//! per-task spans, metrics time-series, and flight-recorder dumps that
+//! both drivers collected through their cores' recorders.
 
 use anyhow::{Context, Result};
 

@@ -42,6 +42,7 @@ use crate::net::Envelope;
 use crate::routing::RoutingTable;
 use crate::runtime::InferenceEngine;
 use crate::simnet::Topology;
+use crate::telemetry::{self, TelemetryData, TelemetryEvent};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 
@@ -85,6 +86,10 @@ enum Event {
     Deliver { to: usize, from: usize, env: Envelope },
     GossipTick,
     TraceTick,
+    /// Telemetry cadence: sample every core's gauges into its metrics
+    /// timeline. Read-only — touches no RNG stream and emits no actions,
+    /// so scheduling it cannot perturb the simulated system.
+    MetricsTick,
     Churn { idx: usize },
 }
 
@@ -138,9 +143,14 @@ impl<'a> Simulation<'a> {
         // O(n) full Dijkstra sweeps each — quartic overall, minutes at
         // 1000 nodes.
         let routing = RoutingTable::build(&topo);
-        let workers = (0..topo.n)
+        let mut workers: Vec<WorkerCore> = (0..topo.n)
             .map(|i| WorkerCore::with_routing(i, &cfg, meta.clone(), &topo, &routing, store.len()))
             .collect();
+        if cfg.telemetry.enabled() {
+            for (i, w) in workers.iter_mut().enumerate() {
+                w.set_recorder(cfg.telemetry.build_recorder(i, cfg.warmup_s));
+            }
+        }
         let report = RunReport::new(
             &cfg.model,
             &cfg.topology,
@@ -200,6 +210,9 @@ impl<'a> Simulation<'a> {
         }
         self.push(self.cfg.gossip_interval_s, Event::GossipTick);
         self.push(TRACE_PERIOD_S, Event::TraceTick);
+        if self.cfg.telemetry.metrics {
+            self.push(self.cfg.telemetry.interval_s, Event::MetricsTick);
+        }
         let churn = self.topo.churn.clone();
         for (idx, e) in churn.iter().enumerate() {
             self.push(e.at_s, Event::Churn { idx });
@@ -224,6 +237,7 @@ impl<'a> Simulation<'a> {
                 Event::Deliver { to, from, env } => self.on_deliver(to, from, env)?,
                 Event::GossipTick => self.on_gossip_tick()?,
                 Event::TraceTick => self.on_trace(),
+                Event::MetricsTick => self.on_metrics_tick(),
                 Event::Churn { idx } => self.on_churn(idx)?,
             }
         }
@@ -287,6 +301,15 @@ impl<'a> Simulation<'a> {
                         self.workers[n]
                             .note_transfer_delay(to, delay / tasks.len().max(1) as f64);
                     }
+                    // Wire legs are recorded by the sender — the only side
+                    // that knows the sampled delay (one span per task for
+                    // task/re-home batches; one per envelope otherwise).
+                    if self.workers[n].has_recorder() {
+                        let w = &mut self.workers[n];
+                        telemetry::wire_send_events(now, n, to, &env, bytes, delay, |ev| {
+                            w.record_event(&ev)
+                        });
+                    }
                     self.active_transfers += 1;
                     self.push(now + delay, Event::Deliver { to, from: n, env });
                 }
@@ -345,6 +368,16 @@ impl<'a> Simulation<'a> {
         // The transfer occupying the shared medium ends on delivery.
         self.active_transfers = self.active_transfers.saturating_sub(1);
         let now = self.now();
+        if self.workers[to].has_recorder() {
+            let ev = TelemetryEvent::WireRecv {
+                t: now,
+                worker: to,
+                from,
+                kind: telemetry::wire_kind(&env),
+                items: env.items(),
+            };
+            self.workers[to].record_event(&ev);
+        }
         // A piggybacked summary is a gossip arrival first, then the inner
         // delivery — same observable order as a State message followed by
         // the payload.
@@ -393,14 +426,25 @@ impl<'a> Simulation<'a> {
     fn on_trace(&mut self) {
         let now = self.now();
         // The trace follows the first declared source (multi-source runs
-        // read per-source detail from `report.per_source` instead).
+        // read per-source detail from `report.per_source` instead). The
+        // point is cut from the same `timeline_sample` the telemetry
+        // metrics use, so the two timelines can never disagree.
         let lead = self.cfg.placement.sources[0].node;
+        let s = self.workers[lead].timeline_sample(now);
         self.report.trace.push(TracePoint {
-            t_s: now,
-            control: self.workers[lead].control_value(),
-            source_queue: self.workers[lead].queue_total(),
+            t_s: s.t_s,
+            control: s.control,
+            source_queue: s.queue_total,
         });
         self.push(now + TRACE_PERIOD_S, Event::TraceTick);
+    }
+
+    fn on_metrics_tick(&mut self) {
+        let now = self.now();
+        for n in 0..self.topo.n {
+            self.workers[n].on_metrics_tick(now);
+        }
+        self.push(now + self.cfg.telemetry.interval_s, Event::MetricsTick);
     }
 
     fn on_churn(&mut self, idx: usize) -> Result<()> {
@@ -446,15 +490,29 @@ impl<'a> Simulation<'a> {
         Ok(eff.delay_s(bytes, &mut self.link_rng))
     }
 
-    fn finalize(self) -> Result<RunReport> {
+    fn finalize(mut self) -> Result<RunReport> {
+        // A closing metrics sample at the window's end: the last row per
+        // worker then carries the full-window counters, which is what
+        // `TelemetryData::folded_totals` checks against the report.
+        if self.cfg.telemetry.metrics {
+            let end = self.end_at;
+            for n in 0..self.topo.n {
+                self.workers[n].on_metrics_tick(end);
+            }
+        }
         let mut report = self.report;
         report.duration_s = self.cfg.duration_s;
         let lead = self.cfg.placement.sources[0].node;
         report.final_mu_s = self.workers[lead].final_mu_s();
         report.final_t_e = self.workers[lead].final_t_e();
-        for (i, w) in self.workers.into_iter().enumerate() {
+        let mut data: Option<TelemetryData> = None;
+        for (i, mut w) in self.workers.into_iter().enumerate() {
+            if let Some(rec) = w.take_recorder() {
+                data.get_or_insert_with(TelemetryData::default).merge(rec.finish());
+            }
             report.per_worker[i] = w.into_stats();
         }
+        report.telemetry = data;
         report.fold_worker_drops();
         report.fold_wire_totals();
         Ok(report)

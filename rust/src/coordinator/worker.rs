@@ -64,6 +64,7 @@ use crate::routing::{Role, RoutingTable};
 use crate::runtime::{InferenceEngine, StageOutput};
 use crate::sched::{CoalesceMode, QueueDiscipline};
 use crate::simnet::Topology;
+use crate::telemetry::{CoreSample, DropReason, Recorder, TelemetryEvent};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg64;
 use crate::util::stats::Ewma;
@@ -292,6 +293,12 @@ pub struct WorkerCore {
     /// `State` or piggyback). Only maintained when `cfg.gossip_piggyback`
     /// is on; used to suppress redundant gossip-tick sends.
     last_state_at: Vec<f64>,
+    /// Telemetry observer (`None` by default — the zero-cost-when-off
+    /// contract: every hook is one `is_some()` branch, with event
+    /// construction inside it). Installed by the drivers when the run's
+    /// [`crate::telemetry::TelemetryConfig`] is enabled; must never feed
+    /// decisions back into the core (see the `telemetry` module docs).
+    recorder: Option<Box<dyn Recorder>>,
 }
 
 impl WorkerCore {
@@ -382,6 +389,72 @@ impl WorkerCore {
             cand_buf: Vec::new(),
             arrival,
             last_state_at: vec![f64::NEG_INFINITY; n],
+            recorder: None,
+        }
+    }
+
+    // -- telemetry ----------------------------------------------------------
+
+    /// Install a telemetry recorder (drivers, when the run traces).
+    pub fn set_recorder(&mut self, recorder: Box<dyn Recorder>) {
+        self.recorder = Some(recorder);
+    }
+
+    /// Remove and return the recorder (drivers, at end of run — call
+    /// before `into_stats`).
+    pub fn take_recorder(&mut self) -> Option<Box<dyn Recorder>> {
+        self.recorder.take()
+    }
+
+    /// Whether a recorder is installed (drivers guard their own wire-hook
+    /// event construction on this).
+    pub fn has_recorder(&self) -> bool {
+        self.recorder.is_some()
+    }
+
+    /// Forward a driver-constructed event (wire sends/receives, where
+    /// only the driver knows the transfer delay) to the recorder.
+    pub fn record_event(&mut self, ev: &TelemetryEvent) {
+        if let Some(r) = self.recorder.as_deref_mut() {
+            r.record(ev);
+        }
+    }
+
+    /// Pure snapshot of this worker's gauges and cumulative counters.
+    /// Shared read for the metrics registry AND the legacy source-only
+    /// `TracePoint` timeline (`control`/`queue_total` here are exactly
+    /// what `TracePoint.{control, source_queue}` report), so the seed
+    /// trace stays bit-compatible while JSONL subsumes it.
+    pub fn timeline_sample(&self, now: f64) -> CoreSample {
+        CoreSample {
+            t_s: now,
+            worker: self.id,
+            control: self.control_value(),
+            t_e: self.t_e as f64,
+            busy: self.busy,
+            input_len: self.queues.input.len(),
+            output_len: self.queues.output.len(),
+            queue_total: self.queues.total_len(),
+            class_depths: (0..self.cfg.sched.num_classes.max(1))
+                .map(|c| self.queues.input.class_len(c))
+                .collect(),
+            processed: self.stats.processed,
+            wire_bytes: self.stats.wire_bytes,
+            envelopes_sent: self.stats.envelopes_sent,
+        }
+    }
+
+    /// One metrics-cadence sample: snapshot the core and hand it to the
+    /// recorder (no-op without one). Drivers call this on the run's
+    /// `telemetry.interval_s` and once more at end of run, so the final
+    /// row's cumulative counters equal the report aggregates.
+    pub fn on_metrics_tick(&mut self, now: f64) {
+        if self.recorder.is_none() {
+            return;
+        }
+        let sample = self.timeline_sample(now);
+        if let Some(r) = self.recorder.as_deref_mut() {
+            r.record(&TelemetryEvent::MetricsTick(sample));
         }
     }
 
@@ -502,6 +575,14 @@ impl WorkerCore {
         task.class = self.next_class;
         task.deadline = now + self.cfg.sched.deadline_for(task.class);
         self.next_class = (self.next_class + 1) % self.cfg.sched.num_classes.max(1);
+        if let Some(r) = self.recorder.as_deref_mut() {
+            r.record(&TelemetryEvent::Admit {
+                t: now,
+                worker: self.id,
+                task: id,
+                class: task.class,
+            });
+        }
         let base_dt = match self.cfg.admission {
             AdmissionMode::AdaptiveRate { .. } => self
                 .adapt
@@ -568,6 +649,15 @@ impl WorkerCore {
                 return out;
             }
         }
+        if let Some(r) = self.recorder.as_deref_mut() {
+            r.record(&TelemetryEvent::Enqueue {
+                t: now,
+                worker: self.id,
+                task: task.id,
+                class: task.class,
+                stage: task.stage,
+            });
+        }
         self.queues.input.push(task);
         if let Some(a) = self.maybe_start(now) {
             out.push(a);
@@ -595,6 +685,15 @@ impl WorkerCore {
             self.stats.received += tasks.len() as u64;
         }
         for task in tasks {
+            if let Some(r) = self.recorder.as_deref_mut() {
+                r.record(&TelemetryEvent::Enqueue {
+                    t: now,
+                    worker: self.id,
+                    task: task.id,
+                    class: task.class,
+                    stage: task.stage,
+                });
+            }
             self.queues.input.push(task);
         }
         if let Some(a) = self.maybe_start(now) {
@@ -629,8 +728,23 @@ impl WorkerCore {
         let dec_cost = self.meta.ae.as_ref().map(|ae| ae.dec_cost_s).unwrap_or(0.0);
         cost += dec_cost * batch.iter().filter(|t| t.encoded).count() as f64;
         // ±3% lognormal-ish execution noise (thermal/DVFS variability).
+        // The telemetry hook sits AFTER this draw so recording never
+        // perturbs the core's RNG stream (determinism contract).
         let noise = self.rng.normal(1.0, 0.03).clamp(0.7, 1.3);
         self.busy = true;
+        if let Some(r) = self.recorder.as_deref_mut() {
+            let k = batch.len();
+            for t in &batch {
+                r.record(&TelemetryEvent::ComputeStart {
+                    t: now,
+                    worker: self.id,
+                    task: t.id,
+                    class: t.class,
+                    stage: t.stage,
+                    batch: k,
+                });
+            }
+        }
         Some(Action::StartCompute { batch, est_cost_s: cost * noise / self.speed })
     }
 
@@ -664,6 +778,15 @@ impl WorkerCore {
         // elements in completion order.
         let mut outbound: Vec<Outbound> = Vec::new();
         for (task, (out, exit_point)) in batch.into_iter().zip(results) {
+            if let Some(r) = self.recorder.as_deref_mut() {
+                r.record(&TelemetryEvent::ComputeEnd {
+                    t: now,
+                    worker: self.id,
+                    task: task.id,
+                    class: task.class,
+                    stage: task.stage,
+                });
+            }
             let is_final = exit_point >= self.meta.num_stages || self.cfg.mode == Mode::Ddi;
             let threshold = if self.cfg.no_early_exit { f32::INFINITY } else { self.t_e };
             let decision = self.exit_policy.decide(&ExitCtx {
@@ -677,6 +800,16 @@ impl WorkerCore {
                 class: task.class,
                 deadline: task.deadline,
             });
+            if let Some(r) = self.recorder.as_deref_mut() {
+                r.record(&TelemetryEvent::ExitDecision {
+                    t: now,
+                    worker: self.id,
+                    task: task.id,
+                    class: task.class,
+                    exit_point,
+                    exited: decision == ExitDecision::Exit,
+                });
+            }
             match decision {
                 ExitDecision::Exit => {
                     if self.in_window(now) {
@@ -734,6 +867,16 @@ impl WorkerCore {
                 self.failed_per_class[(t.class as usize).min(last)] += 1;
             }
         }
+        if let Some(r) = self.recorder.as_deref_mut() {
+            r.record(&TelemetryEvent::Drop {
+                t: now,
+                worker: self.id,
+                task: failed.first().map(|t| t.id).unwrap_or(0),
+                class: failed.first().map(|t| t.class).unwrap_or(0),
+                count: failed.len(),
+                reason: DropReason::EngineFailure,
+            });
+        }
         self.maybe_start(now).into_iter().collect()
     }
 
@@ -776,6 +919,16 @@ impl WorkerCore {
                     self.flush_rehomes(now, &mut rehomes, out);
                     if r.source == self.id {
                         self.flush_results(now, &mut results, out);
+                        if let Some(rec) = self.recorder.as_deref_mut() {
+                            rec.record(&TelemetryEvent::Complete {
+                                t: now,
+                                worker: self.id,
+                                class: r.class,
+                                exit_point: r.exit_point,
+                                on_time: now <= r.deadline,
+                                latency_s: now - r.admitted_at,
+                            });
+                        }
                         out.push(Action::RecordResult { result: r });
                     } else if results.last().is_some_and(|g| {
                         g.source == r.source && self.same_envelope_class(g.class, r.class)
@@ -821,6 +974,16 @@ impl WorkerCore {
         for r in results {
             if r.source == self.id {
                 self.flush_results(now, &mut group, out);
+                if let Some(rec) = self.recorder.as_deref_mut() {
+                    rec.record(&TelemetryEvent::Complete {
+                        t: now,
+                        worker: self.id,
+                        class: r.class,
+                        exit_point: r.exit_point,
+                        on_time: now <= r.deadline,
+                        latency_s: now - r.admitted_at,
+                    });
+                }
                 out.push(Action::RecordResult { result: r });
             } else if group.last().is_some_and(
                 |g| g.source == r.source && self.same_envelope_class(g.class, r.class),
@@ -859,6 +1022,16 @@ impl WorkerCore {
                     for r in &results {
                         self.failed_per_class[(r.class as usize).min(last)] += 1;
                     }
+                }
+                if let Some(rec) = self.recorder.as_deref_mut() {
+                    rec.record(&TelemetryEvent::Drop {
+                        t: now,
+                        worker: self.id,
+                        task: 0,
+                        class: results.first().map(|r| r.class).unwrap_or(0),
+                        count: results.len(),
+                        reason: DropReason::NoRoute,
+                    });
                 }
                 crate::log_debug!(
                     "worker {}: {} result(s) for unreachable source {} dropped",
@@ -1150,6 +1323,13 @@ impl WorkerCore {
                 // same-source tasks share one re-home envelope when the
                 // run coalesces.
                 let drained = self.queues.drain_all_ordered();
+                if let Some(r) = self.recorder.as_deref_mut() {
+                    r.record(&TelemetryEvent::ChurnRehome {
+                        t: now,
+                        worker: self.id,
+                        drained: drained.len(),
+                    });
+                }
                 self.rehome_all(now, drained, &mut out);
             }
         } else {

@@ -47,6 +47,7 @@ pub mod routing;
 pub mod runtime;
 pub mod sched;
 pub mod simnet;
+pub mod telemetry;
 pub mod tensor;
 pub mod testkit;
 pub mod util;

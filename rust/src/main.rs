@@ -27,6 +27,14 @@ fn main() {
 
 fn real_main() -> Result<()> {
     let args = Args::from_env()?;
+    // `--log LEVEL` overrides the MDI_LOG env filter for this invocation.
+    if args.has("log") {
+        let name = args.str_or("log", "info");
+        match mdi_exit::util::logging::Level::parse(name) {
+            Some(level) => mdi_exit::util::logging::set_level(level),
+            None => bail!("--log {name:?} (trace|debug|info|warn|error)"),
+        }
+    }
     let artifacts = args.str_or("artifacts", "artifacts").to_string();
     match args.subcommand() {
         None | Some("help") => {
@@ -56,7 +64,14 @@ fn print_help() {
          COMMON FLAGS\n\
            --artifacts DIR   artifact directory (default: artifacts)\n\
            --quick           short sweeps (for smoke runs)\n\
-           --seed N          RNG seed (default 7)\n\n\
+           --seed N          RNG seed (default 7)\n\
+           --log LEVEL       stderr log level: trace|debug|info|warn|error\n\n\
+         TELEMETRY FLAGS (run + serve)\n\
+           --trace [FILE]    record per-task spans; write Chrome trace-event\n\
+                             JSON (default trace.json; open in Perfetto)\n\
+           --metrics [FILE]  sample per-worker time-series; write JSONL\n\
+                             (default metrics.jsonl; includes flight dumps)\n\
+           --metrics-interval S  sampling cadence in seconds (default 0.25)\n\n\
          RUN FLAGS\n\
            --config FILE     TOML experiment config (see configs/)\n\
            --model M --topology T --threshold X --rate HZ --duration S\n\
@@ -82,6 +97,7 @@ fn print_help() {
                              flash-crowd | diurnal | trace:FILE\n\
            --piggyback       ride gossip summaries on outbound task/result\n\
                              envelopes headed to the same neighbor\n\
+           --timeline [FILE] controller/queue timeline JSON (was --trace)\n\
            --json            print the full RunReport as JSON"
     );
 }
@@ -111,13 +127,70 @@ fn cmd_info(artifacts: &str) -> Result<()> {
     Ok(())
 }
 
+/// Fold the telemetry CLI flags into a config (after TOML or flag
+/// construction — the CLI wins over the `[telemetry]` section).
+fn apply_telemetry_flags(cfg: &mut ExperimentConfig, args: &Args) -> Result<()> {
+    if args.has("trace") {
+        cfg.telemetry.spans = true;
+    }
+    if args.has("metrics") {
+        cfg.telemetry.metrics = true;
+    }
+    cfg.telemetry.interval_s = args.f64_or("metrics-interval", cfg.telemetry.interval_s)?;
+    cfg.telemetry.validate().map_err(|e| anyhow::anyhow!("telemetry: {e}"))?;
+    Ok(())
+}
+
+/// A flag used as `--key PATH` or bare `--key` (default path).
+fn path_flag<'a>(args: &'a Args, key: &str, default: &'a str) -> &'a str {
+    match args.str_or(key, default) {
+        "true" => default,
+        p => p,
+    }
+}
+
+/// Export the run's telemetry per the `--trace` / `--metrics` flags:
+/// Chrome trace-event JSON (load at <https://ui.perfetto.dev>) and the
+/// metrics time-series as JSONL.
+fn export_telemetry(
+    report: &mut mdi_exit::coordinator::RunReport,
+    args: &Args,
+) -> Result<()> {
+    if !args.has("trace") && !args.has("metrics") {
+        return Ok(());
+    }
+    let data = report.telemetry.take().unwrap_or_default();
+    if args.has("trace") {
+        let path = path_flag(args, "trace", "trace.json");
+        std::fs::write(path, data.chrome_trace().to_string())
+            .with_context(|| format!("writing trace {path}"))?;
+        println!(
+            "chrome trace written to {path} ({} spans; open in https://ui.perfetto.dev)",
+            data.spans.len()
+        );
+    }
+    if args.has("metrics") {
+        let path = path_flag(args, "metrics", "metrics.jsonl");
+        std::fs::write(path, data.metrics_jsonl())
+            .with_context(|| format!("writing metrics {path}"))?;
+        println!(
+            "metrics written to {path} ({} rows, {} flight dumps)",
+            data.metrics.len(),
+            data.dumps.len()
+        );
+    }
+    Ok(())
+}
+
 fn build_config(args: &Args) -> Result<ExperimentConfig> {
     if args.has("config") {
         let path = args.str_or("config", "");
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {path}"))?;
         let toml = Toml::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-        return ExperimentConfig::from_toml(&toml);
+        let mut cfg = ExperimentConfig::from_toml(&toml)?;
+        apply_telemetry_flags(&mut cfg, args)?;
+        return Ok(cfg);
     }
     let model = args.str_or("model", "mobilenetv2l");
     let topology = args.str_or("topology", "3-node-mesh");
@@ -185,6 +258,7 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
         .map_err(|e| anyhow::anyhow!("--arrival: {e}"))?;
     cfg.gossip_piggyback = args.bool_or("piggyback", false)?;
     cfg.seed = args.u64_or("seed", 7)?;
+    apply_telemetry_flags(&mut cfg, args)?;
     Ok(cfg)
 }
 
@@ -193,9 +267,10 @@ fn cmd_run(args: &Args, artifacts: &str) -> Result<()> {
     let cfg = build_config(args)?;
     let label = format!("{} on {}", cfg.model, cfg.topology);
     let mut report = Run::builder().config(cfg).manifest(&manifest).execute()?;
-    if args.has("trace") {
+    export_telemetry(&mut report, args)?;
+    if args.has("timeline") {
         // controller/queue timeline for plotting (t, control value, queue)
-        let path = args.str_or("trace", "trace.json");
+        let path = path_flag(args, "timeline", "timeline.json");
         let pts: Vec<mdi_exit::util::json::Json> = report
             .trace
             .iter()
@@ -208,8 +283,8 @@ fn cmd_run(args: &Args, artifacts: &str) -> Result<()> {
             })
             .collect();
         std::fs::write(path, mdi_exit::util::json::Json::Arr(pts).to_string())
-            .with_context(|| format!("writing trace {path}"))?;
-        println!("trace written to {path} ({} points)", report.trace.len());
+            .with_context(|| format!("writing timeline {path}"))?;
+        println!("timeline written to {path} ({} points)", report.trace.len());
     }
     if args.bool_or("json", false)? {
         println!("{}", report.to_json().to_string());
@@ -285,6 +360,7 @@ fn cmd_serve(args: &Args, artifacts: &str) -> Result<()> {
         .engine_factory(factory)
         .driver(Driver::Realtime)
         .execute()?;
+    export_telemetry(&mut report, args)?;
     println!("realtime run: {} on {}", cfg.model, cfg.topology);
     println!("  completed  {:>8}  ({:.2} Hz)", report.completed, report.throughput_hz());
     println!("  accuracy   {:>8.4}", report.accuracy());

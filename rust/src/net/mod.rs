@@ -144,6 +144,29 @@ impl Envelope {
         }
     }
 
+    /// The payload envelope with any piggybacked summary peeled off —
+    /// the non-consuming sibling of [`Envelope::split_gossip`]. Never
+    /// returns `Piggybacked` (the wrapper is not nested by contract).
+    /// Telemetry's wire hooks classify sends/receives through this.
+    pub fn payload(&self) -> &Envelope {
+        match self {
+            Envelope::Piggybacked(inner, _) => inner,
+            env => env,
+        }
+    }
+
+    /// Stable label of the payload kind for telemetry and logging (sees
+    /// through piggybacking).
+    pub fn kind_label(&self) -> &'static str {
+        match self.payload() {
+            Envelope::TaskBatch(_) => "task",
+            Envelope::Result(_) => "result",
+            Envelope::Rehome(_) => "rehome",
+            Envelope::State(_) => "state",
+            Envelope::Piggybacked(..) => unreachable!("payload() peels the wrapper"),
+        }
+    }
+
     /// Whether the (possibly wrapped) payload is a task batch — the
     /// message-count statistic and the realtime transport's accounting
     /// look through piggybacking.

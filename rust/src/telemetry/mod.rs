@@ -1,0 +1,1321 @@
+//! Telemetry: per-task trace spans, a sampled metrics registry, and a
+//! flight recorder — one subsystem for both drivers.
+//!
+//! # Recorder contract
+//!
+//! A [`Recorder`] is installed per [`WorkerCore`](crate::coordinator::WorkerCore)
+//! (`set_recorder`) and fed [`TelemetryEvent`]s from the core's
+//! events-in/actions-out seam plus the drivers' wire hooks. The contract
+//! that keeps both drivers equivalent and the DES bit-for-bit
+//! deterministic:
+//!
+//! * **Clock-agnostic timestamps.** Every event carries the `now` the
+//!   driver passed into the handler that produced it — virtual seconds on
+//!   the DES [`VirtualClock`](crate::coordinator::VirtualClock), wallclock
+//!   seconds on the realtime [`WallClock`](crate::coordinator::WallClock).
+//!   A recorder never reads time itself.
+//! * **Determinism.** Recording must not draw from any seeded RNG stream,
+//!   mutate core state, or reorder events: a recorder observes, it never
+//!   decides. Under the DES driver the same seed therefore yields the
+//!   same event (and span) sequence with bit-identical timestamps,
+//!   whether or not telemetry is enabled.
+//! * **Zero cost when off.** `WorkerCore.recorder` is `Option<Box<dyn
+//!   Recorder>>`, `None` by default; every hook site is a single
+//!   `is_some()` branch with event construction inside it. The metro
+//!   bench asserts a [`NoopRecorder`] (events constructed, then
+//!   discarded) stays within 2% of the recorder-free baseline.
+//!
+//! # Trace spans (`--trace out.json`)
+//!
+//! [`TelemetrySink`] pairs events into [`Span`]s — admit, queue-wait,
+//! per-stage compute, per-hop wire legs (offload / re-home / result
+//! relay / gossip), and the exit decision — and
+//! [`TelemetryData::chrome_trace`] exports them as a Chrome trace-event
+//! JSON array loadable in Perfetto (<https://ui.perfetto.dev>): one
+//! *process* per worker (`pid` = worker id), one *track* per traffic
+//! class (`tid` = class). Events are `"ph":"X"` complete events with
+//! `ts`/`dur` in microseconds (instants have `dur: 0`), preceded by
+//! `"ph":"M"` metadata naming each process and track; the exporter sorts
+//! by start time so per-track timestamps are monotonic
+//! ([`validate_chrome_trace`] checks both properties and is exercised by
+//! unit tests). `args.task` is the task id in hex (task ids exceed 2^53,
+//! so a JSON number would lose bits).
+//!
+//! # Metrics registry (`--metrics out.jsonl`, `[telemetry] interval`)
+//!
+//! On a fixed cadence both drivers call
+//! `WorkerCore::on_metrics_tick`, which snapshots a [`CoreSample`]
+//! (queue depth by class, controller μ/T_e, busy flag, cumulative
+//! wire/processed counters) and hands it to the recorder; the sink merges
+//! in its own event-derived counters (admitted, completed, on-time,
+//! per-exit-point counts, a log-bucketed latency histogram, in-flight
+//! envelopes, wire bytes/s) into one [`MetricsRow`] per worker per tick.
+//! [`TelemetryData::metrics_jsonl`] emits one JSON object per line
+//! (`"kind":"metrics"`), ordered by `(t_s, worker)`, followed by any
+//! flight-recorder dumps (`"kind":"flight-dump"`). Counters are
+//! *cumulative within the measurement window* (`now >= measure_from`,
+//! matching `RunReport`'s warmup gating), so the folded final samples
+//! reproduce the run's aggregates exactly: Σ over workers of the last
+//! row's `admitted` / `completed` / `wire_bytes` equals
+//! `RunReport.{admitted, completed, bytes_on_wire}` (asserted in tests).
+//! The legacy source-only `TracePoint` timeline is derived from the same
+//! `CoreSample` read, which keeps its JSON bit-compatible with the seed.
+//!
+//! # Flight recorder
+//!
+//! The sink keeps a bounded ring of the most recent events
+//! (`flight_capacity`, default 64). An anomaly — task drop, engine batch
+//! failure, deadline miss, churn re-home — snapshots the ring into a
+//! [`FlightDump`] so the run report carries the context *leading up to*
+//! the incident, not just the incident count. Dumps are capped (first
+//! [`MAX_FLIGHT_DUMPS`]) to bound memory on pathological runs.
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Result};
+
+use crate::net::Envelope;
+use crate::util::json::{obj, Json};
+
+/// Upper bound on retained flight dumps per worker (first N anomalies).
+pub const MAX_FLIGHT_DUMPS: usize = 32;
+
+/// Log-bucket count for latency histograms.
+pub const LATENCY_BUCKETS: usize = 32;
+
+/// Lower edge of latency bucket 0 (seconds): 100 µs, doubling per bucket.
+pub const LATENCY_BASE_S: f64 = 1e-4;
+
+// ---------------------------------------------------------------------------
+// Config
+// ---------------------------------------------------------------------------
+
+/// The `[telemetry]` section of an experiment config (and the `--trace` /
+/// `--metrics` / `--metrics-interval` CLI flags). Everything defaults to
+/// *off*: the default run has no recorder installed at all.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryConfig {
+    /// Collect per-task trace spans (Chrome trace export).
+    pub spans: bool,
+    /// Sample the metrics registry every `interval_s` (JSONL export).
+    pub metrics: bool,
+    /// Metrics sampling cadence in seconds (virtual on DES, wall on rt).
+    pub interval_s: f64,
+    /// Flight-recorder ring size per worker; 0 disables anomaly dumps.
+    pub flight_capacity: usize,
+    /// Bench probe: install a [`NoopRecorder`] instead of a sink, so the
+    /// metro bench can price the hook overhead with zero payload work.
+    pub noop: bool,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig {
+            spans: false,
+            metrics: false,
+            interval_s: 0.25,
+            flight_capacity: 64,
+            noop: false,
+        }
+    }
+}
+
+impl TelemetryConfig {
+    /// Whether the drivers should install a recorder at all.
+    pub fn enabled(&self) -> bool {
+        self.spans || self.metrics || self.noop
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.interval_s > 0.0 && self.interval_s.is_finite(),
+            "telemetry.interval must be a positive number of seconds (got {})",
+            self.interval_s
+        );
+        Ok(())
+    }
+
+    /// Build the recorder this config asks for (drivers call this once
+    /// per worker when `enabled()`).
+    pub fn build_recorder(&self, worker: usize, measure_from: f64) -> Box<dyn Recorder> {
+        if self.noop {
+            Box::new(NoopRecorder)
+        } else {
+            Box::new(TelemetrySink::new(worker, self.clone(), measure_from))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Events
+// ---------------------------------------------------------------------------
+
+/// Which payload a wire leg carried (piggybacked gossip is folded into
+/// its payload's kind — it shares the frame).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireKind {
+    Task,
+    Result,
+    Rehome,
+    Gossip,
+}
+
+impl WireKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            WireKind::Task => "task",
+            WireKind::Result => "result",
+            WireKind::Rehome => "rehome",
+            WireKind::Gossip => "gossip",
+        }
+    }
+}
+
+/// Why work was lost (flight-recorder anomaly triggers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropReason {
+    /// The engine failed a batch (`abort_compute`).
+    EngineFailure,
+    /// A result had no route to its admitting source.
+    NoRoute,
+}
+
+impl DropReason {
+    pub fn label(self) -> &'static str {
+        match self {
+            DropReason::EngineFailure => "engine-failure",
+            DropReason::NoRoute => "no-route",
+        }
+    }
+}
+
+/// One structured observation from the core or a driver. Timestamps are
+/// driver-passed `now` (see the module docs for the contract).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TelemetryEvent {
+    /// A source admitted a fresh task.
+    Admit { t: f64, worker: usize, task: u64, class: u8 },
+    /// A task entered this worker's input queue.
+    Enqueue { t: f64, worker: usize, task: u64, class: u8, stage: usize },
+    /// A batch element started compute (one event per element).
+    ComputeStart { t: f64, worker: usize, task: u64, class: u8, stage: usize, batch: usize },
+    /// A batch element finished compute.
+    ComputeEnd { t: f64, worker: usize, task: u64, class: u8, stage: usize },
+    /// Alg. 1 ruled on a finished element: exit here or continue.
+    ExitDecision { t: f64, worker: usize, task: u64, class: u8, exit_point: usize, exited: bool },
+    /// A completed inference reached its admitting source.
+    Complete {
+        t: f64,
+        worker: usize,
+        class: u8,
+        exit_point: usize,
+        on_time: bool,
+        latency_s: f64,
+    },
+    /// An envelope left `from` toward one-hop neighbor `to` (recorded by
+    /// the sending driver, which knows the transfer delay). Task batches
+    /// and re-homes emit one event per task; results and gossip one per
+    /// envelope (`task: 0`).
+    WireSend {
+        t: f64,
+        from: usize,
+        to: usize,
+        task: u64,
+        class: u8,
+        kind: WireKind,
+        bytes: usize,
+        delay_s: f64,
+    },
+    /// An envelope arrived at `worker` (receiver-side hook).
+    WireRecv { t: f64, worker: usize, from: usize, kind: WireKind, items: usize },
+    /// This worker churned out and drained its backlog home.
+    ChurnRehome { t: f64, worker: usize, drained: usize },
+    /// Work was lost (with accounting) — see [`DropReason`].
+    Drop { t: f64, worker: usize, task: u64, class: u8, count: usize, reason: DropReason },
+    /// A metrics-cadence snapshot of the core's gauges and counters.
+    MetricsTick(CoreSample),
+}
+
+impl TelemetryEvent {
+    /// Event timestamp (the driver-passed `now` it was recorded at).
+    pub fn t(&self) -> f64 {
+        match self {
+            TelemetryEvent::Admit { t, .. }
+            | TelemetryEvent::Enqueue { t, .. }
+            | TelemetryEvent::ComputeStart { t, .. }
+            | TelemetryEvent::ComputeEnd { t, .. }
+            | TelemetryEvent::ExitDecision { t, .. }
+            | TelemetryEvent::Complete { t, .. }
+            | TelemetryEvent::WireSend { t, .. }
+            | TelemetryEvent::WireRecv { t, .. }
+            | TelemetryEvent::ChurnRehome { t, .. }
+            | TelemetryEvent::Drop { t, .. } => *t,
+            TelemetryEvent::MetricsTick(s) => s.t_s,
+        }
+    }
+
+    fn json(&self) -> Json {
+        match self {
+            TelemetryEvent::Admit { t, worker, task, class } => obj(vec![
+                ("ev", "admit".into()),
+                ("t_s", (*t).into()),
+                ("worker", (*worker).into()),
+                ("task", format!("{task:#x}").into()),
+                ("class", (*class as usize).into()),
+            ]),
+            TelemetryEvent::Enqueue { t, worker, task, class, stage } => obj(vec![
+                ("ev", "enqueue".into()),
+                ("t_s", (*t).into()),
+                ("worker", (*worker).into()),
+                ("task", format!("{task:#x}").into()),
+                ("class", (*class as usize).into()),
+                ("stage", (*stage).into()),
+            ]),
+            TelemetryEvent::ComputeStart { t, worker, task, class, stage, batch } => obj(vec![
+                ("ev", "compute-start".into()),
+                ("t_s", (*t).into()),
+                ("worker", (*worker).into()),
+                ("task", format!("{task:#x}").into()),
+                ("class", (*class as usize).into()),
+                ("stage", (*stage).into()),
+                ("batch", (*batch).into()),
+            ]),
+            TelemetryEvent::ComputeEnd { t, worker, task, class, stage } => obj(vec![
+                ("ev", "compute-end".into()),
+                ("t_s", (*t).into()),
+                ("worker", (*worker).into()),
+                ("task", format!("{task:#x}").into()),
+                ("class", (*class as usize).into()),
+                ("stage", (*stage).into()),
+            ]),
+            TelemetryEvent::ExitDecision { t, worker, task, class, exit_point, exited } => {
+                obj(vec![
+                    ("ev", "exit-decision".into()),
+                    ("t_s", (*t).into()),
+                    ("worker", (*worker).into()),
+                    ("task", format!("{task:#x}").into()),
+                    ("class", (*class as usize).into()),
+                    ("exit_point", (*exit_point).into()),
+                    ("exited", (*exited).into()),
+                ])
+            }
+            TelemetryEvent::Complete { t, worker, class, exit_point, on_time, latency_s } => {
+                obj(vec![
+                    ("ev", "complete".into()),
+                    ("t_s", (*t).into()),
+                    ("worker", (*worker).into()),
+                    ("class", (*class as usize).into()),
+                    ("exit_point", (*exit_point).into()),
+                    ("on_time", (*on_time).into()),
+                    ("latency_s", (*latency_s).into()),
+                ])
+            }
+            TelemetryEvent::WireSend { t, from, to, task, class, kind, bytes, delay_s } => {
+                obj(vec![
+                    ("ev", "wire-send".into()),
+                    ("t_s", (*t).into()),
+                    ("from", (*from).into()),
+                    ("to", (*to).into()),
+                    ("task", format!("{task:#x}").into()),
+                    ("class", (*class as usize).into()),
+                    ("kind", kind.label().into()),
+                    ("bytes", (*bytes).into()),
+                    ("delay_s", (*delay_s).into()),
+                ])
+            }
+            TelemetryEvent::WireRecv { t, worker, from, kind, items } => obj(vec![
+                ("ev", "wire-recv".into()),
+                ("t_s", (*t).into()),
+                ("worker", (*worker).into()),
+                ("from", (*from).into()),
+                ("kind", kind.label().into()),
+                ("items", (*items).into()),
+            ]),
+            TelemetryEvent::ChurnRehome { t, worker, drained } => obj(vec![
+                ("ev", "churn-rehome".into()),
+                ("t_s", (*t).into()),
+                ("worker", (*worker).into()),
+                ("drained", (*drained).into()),
+            ]),
+            TelemetryEvent::Drop { t, worker, task, class, count, reason } => obj(vec![
+                ("ev", "drop".into()),
+                ("t_s", (*t).into()),
+                ("worker", (*worker).into()),
+                ("task", format!("{task:#x}").into()),
+                ("class", (*class as usize).into()),
+                ("count", (*count).into()),
+                ("reason", reason.label().into()),
+            ]),
+            TelemetryEvent::MetricsTick(s) => obj(vec![
+                ("ev", "metrics-tick".into()),
+                ("t_s", s.t_s.into()),
+                ("worker", s.worker.into()),
+            ]),
+        }
+    }
+}
+
+/// Pure snapshot of one worker's gauges and cumulative counters at an
+/// instant — built by `WorkerCore::timeline_sample`. The legacy
+/// `TracePoint` timeline reads `control`/`queue_total` from the same
+/// snapshot, which is what keeps it bit-compatible with the seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CoreSample {
+    pub t_s: f64,
+    pub worker: usize,
+    /// Controller value: μ under Alg. 3, T_e otherwise.
+    pub control: f64,
+    pub t_e: f64,
+    pub busy: bool,
+    pub input_len: usize,
+    pub output_len: usize,
+    /// I_n + O_n (what the legacy `TracePoint.source_queue` reports).
+    pub queue_total: usize,
+    /// Input-queue occupancy per traffic class.
+    pub class_depths: Vec<usize>,
+    /// Cumulative in-window counters mirrored from `WorkerStats`.
+    pub processed: u64,
+    pub wire_bytes: u64,
+    pub envelopes_sent: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Recorder trait
+// ---------------------------------------------------------------------------
+
+/// Observer for [`TelemetryEvent`]s. Default methods are no-ops, so an
+/// impl overrides only what it needs; `Send` because realtime worker
+/// threads own their recorder.
+pub trait Recorder: Send {
+    /// Observe one event. MUST NOT read clocks, draw RNG, or feed
+    /// anything back into the core (see module docs).
+    fn record(&mut self, _ev: &TelemetryEvent) {}
+
+    /// Consume the recorder into its collected data at end of run.
+    fn finish(self: Box<Self>) -> TelemetryData {
+        TelemetryData::default()
+    }
+}
+
+/// Discards everything — the zero-cost-when-off contract's bench probe.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopRecorder;
+
+impl Recorder for NoopRecorder {}
+
+// ---------------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Instant: a source admitted the task.
+    Admit,
+    /// Input-queue wait from enqueue to compute start.
+    QueueWait,
+    /// One stage of compute (batch elements share the interval).
+    Compute,
+    /// Instant: Alg. 1 exited here (`stage` = exit point).
+    Exit,
+    /// Instant: Alg. 1 continued (`stage` = exit point that declined).
+    Continue,
+    /// Wire leg carrying a task batch (offload or DDI forward).
+    WireTask,
+    /// Wire leg relaying results toward their source.
+    WireResult,
+    /// Wire leg re-homing displaced tasks.
+    WireRehome,
+    /// Wire leg carrying a dedicated gossip summary.
+    WireGossip,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admit",
+            SpanKind::QueueWait => "queue-wait",
+            SpanKind::Compute => "compute",
+            SpanKind::Exit => "exit",
+            SpanKind::Continue => "continue",
+            SpanKind::WireTask => "wire:task",
+            SpanKind::WireResult => "wire:result",
+            SpanKind::WireRehome => "wire:rehome",
+            SpanKind::WireGossip => "wire:gossip",
+        }
+    }
+
+    fn category(self) -> &'static str {
+        match self {
+            SpanKind::Admit => "admission",
+            SpanKind::QueueWait => "queue",
+            SpanKind::Compute => "compute",
+            SpanKind::Exit | SpanKind::Continue => "decision",
+            _ => "wire",
+        }
+    }
+}
+
+/// One interval (or instant, `t0 == t1`) in a task's life. `worker` maps
+/// to the Chrome-trace `pid`, `class` to the `tid` track; wire spans live
+/// on the *sender's* process with `peer` naming the receiver.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub worker: usize,
+    pub class: u8,
+    /// Task id (0 = not task-scoped: result/gossip envelopes).
+    pub task: u64,
+    /// Stage or exit point (0 = n/a).
+    pub stage: usize,
+    /// Wire peer (usize::MAX = n/a).
+    pub peer: usize,
+    pub t0: f64,
+    pub t1: f64,
+}
+
+// ---------------------------------------------------------------------------
+// Metrics rows, histograms, flight dumps
+// ---------------------------------------------------------------------------
+
+/// Log-bucketed histogram: bucket `i` covers
+/// `[LATENCY_BASE_S * 2^i, LATENCY_BASE_S * 2^(i+1))`, clamped at the
+/// ends — 100 µs to ~3.7 days in 32 buckets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    pub counts: Vec<u64>,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram { counts: vec![0; LATENCY_BUCKETS] }
+    }
+}
+
+impl LogHistogram {
+    pub fn observe(&mut self, v_s: f64) {
+        let idx = if v_s <= LATENCY_BASE_S {
+            0
+        } else {
+            ((v_s / LATENCY_BASE_S).log2().floor() as i64)
+                .clamp(0, LATENCY_BUCKETS as i64 - 1) as usize
+        };
+        self.counts[idx] += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
+/// One sampled row of the per-worker time series: the core's gauges plus
+/// the sink's event-derived counters, all cumulative within the
+/// measurement window.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsRow {
+    pub t_s: f64,
+    pub worker: usize,
+    pub control: f64,
+    pub t_e: f64,
+    pub busy: bool,
+    pub input_len: usize,
+    pub output_len: usize,
+    pub class_depths: Vec<usize>,
+    pub admitted: u64,
+    pub completed: u64,
+    pub on_time: u64,
+    pub deadline_misses: u64,
+    pub processed: u64,
+    pub wire_bytes: u64,
+    pub envelopes_sent: u64,
+    /// Wire throughput over the last sampling interval (bytes/s).
+    pub wire_bytes_per_s: f64,
+    /// Envelopes this worker sent whose delivery is still in flight.
+    pub envelopes_in_flight: usize,
+    /// Cumulative exits decided at this worker, by exit point (index 0
+    /// unused; grows on demand).
+    pub exit_counts: Vec<u64>,
+    /// Log-bucketed completion latency at this source (empty elsewhere).
+    pub latency_hist: Vec<u64>,
+}
+
+impl MetricsRow {
+    fn json(&self) -> Json {
+        obj(vec![
+            ("kind", "metrics".into()),
+            ("t_s", self.t_s.into()),
+            ("worker", self.worker.into()),
+            ("control", self.control.into()),
+            ("t_e", self.t_e.into()),
+            ("busy", self.busy.into()),
+            ("input_len", self.input_len.into()),
+            ("output_len", self.output_len.into()),
+            ("class_depths", self.class_depths.clone().into()),
+            ("admitted", (self.admitted as i64).into()),
+            ("completed", (self.completed as i64).into()),
+            ("on_time", (self.on_time as i64).into()),
+            ("deadline_misses", (self.deadline_misses as i64).into()),
+            ("processed", (self.processed as i64).into()),
+            ("wire_bytes", (self.wire_bytes as i64).into()),
+            ("envelopes_sent", (self.envelopes_sent as i64).into()),
+            ("wire_bytes_per_s", self.wire_bytes_per_s.into()),
+            ("envelopes_in_flight", self.envelopes_in_flight.into()),
+            (
+                "exit_counts",
+                Json::Arr(self.exit_counts.iter().map(|&c| (c as i64).into()).collect()),
+            ),
+            (
+                "latency_hist",
+                Json::Arr(self.latency_hist.iter().map(|&c| (c as i64).into()).collect()),
+            ),
+        ])
+    }
+}
+
+/// The flight recorder's snapshot of the events preceding an anomaly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightDump {
+    pub t_s: f64,
+    pub worker: usize,
+    pub reason: String,
+    pub events: Vec<TelemetryEvent>,
+}
+
+impl FlightDump {
+    fn json(&self) -> Json {
+        obj(vec![
+            ("kind", "flight-dump".into()),
+            ("t_s", self.t_s.into()),
+            ("worker", self.worker.into()),
+            ("reason", self.reason.as_str().into()),
+            ("events", Json::Arr(self.events.iter().map(|e| e.json()).collect())),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Collected data + exporters
+// ---------------------------------------------------------------------------
+
+/// Everything telemetry collected for a run: merged across workers by the
+/// drivers, attached to `RunReport.telemetry` (never serialized into the
+/// report's own JSON — the exporters below own the formats).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct TelemetryData {
+    pub spans: Vec<Span>,
+    pub metrics: Vec<MetricsRow>,
+    pub dumps: Vec<FlightDump>,
+}
+
+impl TelemetryData {
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty() && self.metrics.is_empty() && self.dumps.is_empty()
+    }
+
+    /// Fold another worker's data in (order within a worker is preserved;
+    /// exporters sort across workers where the format needs it).
+    pub fn merge(&mut self, other: TelemetryData) {
+        self.spans.extend(other.spans);
+        self.metrics.extend(other.metrics);
+        self.dumps.extend(other.dumps);
+    }
+
+    /// Export spans as a Chrome trace-event JSON array (Perfetto-loadable;
+    /// see module docs for the layout).
+    pub fn chrome_trace(&self) -> Json {
+        let mut spans: Vec<&Span> = self.spans.iter().collect();
+        spans.sort_by(|a, b| {
+            a.t0.partial_cmp(&b.t0).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut workers: Vec<usize> = Vec::new();
+        let mut tracks: Vec<(usize, u8)> = Vec::new();
+        for s in &spans {
+            if !workers.contains(&s.worker) {
+                workers.push(s.worker);
+            }
+            if !tracks.contains(&(s.worker, s.class)) {
+                tracks.push((s.worker, s.class));
+            }
+        }
+        workers.sort_unstable();
+        tracks.sort_unstable();
+        let mut events: Vec<Json> = Vec::new();
+        for w in workers {
+            events.push(obj(vec![
+                ("name", "process_name".into()),
+                ("ph", "M".into()),
+                ("pid", w.into()),
+                ("args", obj(vec![("name", format!("worker {w}").into())])),
+            ]));
+        }
+        for (w, c) in tracks {
+            events.push(obj(vec![
+                ("name", "thread_name".into()),
+                ("ph", "M".into()),
+                ("pid", w.into()),
+                ("tid", (c as usize).into()),
+                ("args", obj(vec![("name", format!("class {c}").into())])),
+            ]));
+        }
+        for s in spans {
+            let mut args = vec![("task", Json::Str(format!("{:#x}", s.task)))];
+            if s.stage != 0 {
+                args.push(("stage", s.stage.into()));
+            }
+            if s.peer != usize::MAX {
+                args.push(("peer", s.peer.into()));
+            }
+            events.push(obj(vec![
+                ("name", s.kind.name().into()),
+                ("cat", s.kind.category().into()),
+                ("ph", "X".into()),
+                ("ts", (s.t0 * 1e6).into()),
+                ("dur", ((s.t1 - s.t0) * 1e6).max(0.0).into()),
+                ("pid", s.worker.into()),
+                ("tid", (s.class as usize).into()),
+                ("args", obj(args)),
+            ]));
+        }
+        Json::Arr(events)
+    }
+
+    /// Export the metrics time series (plus flight dumps) as JSONL: one
+    /// JSON object per line, rows ordered by `(t_s, worker)`.
+    pub fn metrics_jsonl(&self) -> String {
+        let mut rows: Vec<&MetricsRow> = self.metrics.iter().collect();
+        rows.sort_by(|a, b| {
+            a.t_s
+                .partial_cmp(&b.t_s)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.worker.cmp(&b.worker))
+        });
+        let mut out = String::new();
+        for r in rows {
+            out.push_str(&r.json().to_string());
+            out.push('\n');
+        }
+        for d in &self.dumps {
+            out.push_str(&d.json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Fold each worker's *final* metrics row: Σ admitted, Σ completed,
+    /// Σ wire_bytes — by construction equal to the `RunReport` aggregates
+    /// (the identity the tests assert).
+    pub fn folded_totals(&self) -> (u64, u64, u64) {
+        let mut last: BTreeMap<usize, &MetricsRow> = BTreeMap::new();
+        for r in &self.metrics {
+            match last.get(&r.worker) {
+                Some(prev) if prev.t_s > r.t_s => {}
+                _ => {
+                    last.insert(r.worker, r);
+                }
+            }
+        }
+        let mut admitted = 0;
+        let mut completed = 0;
+        let mut wire_bytes = 0;
+        for r in last.values() {
+            admitted += r.admitted;
+            completed += r.completed;
+            wire_bytes += r.wire_bytes;
+        }
+        (admitted, completed, wire_bytes)
+    }
+}
+
+/// Check a value against the Chrome trace-event schema subset we emit:
+/// a JSON array; every element an object with `name`/`ph`; `"X"` events
+/// additionally carry numeric `ts`, non-negative `dur`, `pid`, `tid`;
+/// and per-(pid, tid) track, `ts` is monotonically non-decreasing.
+/// Returns the number of `"X"` events.
+pub fn validate_chrome_trace(j: &Json) -> Result<usize, String> {
+    let arr = j.as_arr().ok_or("trace is not a JSON array")?;
+    let mut last_ts: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    let mut complete = 0usize;
+    for (i, ev) in arr.iter().enumerate() {
+        ev.as_obj().ok_or_else(|| format!("event {i} is not an object"))?;
+        ev.get("name").as_str().ok_or_else(|| format!("event {i} has no name"))?;
+        let ph = ev.get("ph").as_str().ok_or_else(|| format!("event {i} has no ph"))?;
+        if ph != "X" {
+            continue;
+        }
+        let ts = ev.get("ts").as_f64().ok_or_else(|| format!("event {i}: ts not a number"))?;
+        let dur =
+            ev.get("dur").as_f64().ok_or_else(|| format!("event {i}: dur not a number"))?;
+        if dur < 0.0 {
+            return Err(format!("event {i}: negative dur {dur}"));
+        }
+        let pid =
+            ev.get("pid").as_i64().ok_or_else(|| format!("event {i}: pid not an integer"))?;
+        let tid =
+            ev.get("tid").as_i64().ok_or_else(|| format!("event {i}: tid not an integer"))?;
+        let slot = last_ts.entry((pid, tid)).or_insert(f64::NEG_INFINITY);
+        if ts < *slot {
+            return Err(format!(
+                "event {i}: ts {ts} goes backwards on track ({pid},{tid}) (last {})",
+                *slot
+            ));
+        }
+        *slot = ts;
+        complete += 1;
+    }
+    Ok(complete)
+}
+
+/// Emit the per-item [`TelemetryEvent::WireSend`] events for one outbound
+/// envelope: one per task for task batches and re-homes, one per envelope
+/// for results and gossip. Both drivers call this from their send path
+/// (they know the transfer delay; the core does not).
+pub fn wire_send_events(
+    t: f64,
+    from: usize,
+    to: usize,
+    env: &Envelope,
+    bytes: usize,
+    delay_s: f64,
+    mut emit: impl FnMut(TelemetryEvent),
+) {
+    match env.payload() {
+        Envelope::TaskBatch(tasks) | Envelope::Rehome(tasks) => {
+            let kind = if matches!(env.payload(), Envelope::TaskBatch(_)) {
+                WireKind::Task
+            } else {
+                WireKind::Rehome
+            };
+            for task in tasks {
+                emit(TelemetryEvent::WireSend {
+                    t,
+                    from,
+                    to,
+                    task: task.id,
+                    class: task.class,
+                    kind,
+                    bytes,
+                    delay_s,
+                });
+            }
+        }
+        Envelope::Result(rs) => emit(TelemetryEvent::WireSend {
+            t,
+            from,
+            to,
+            task: 0,
+            class: rs.first().map(|r| r.class).unwrap_or(0),
+            kind: WireKind::Result,
+            bytes,
+            delay_s,
+        }),
+        Envelope::State(_) => emit(TelemetryEvent::WireSend {
+            t,
+            from,
+            to,
+            task: 0,
+            class: 0,
+            kind: WireKind::Gossip,
+            bytes,
+            delay_s,
+        }),
+        // `payload()` never returns the wrapper itself.
+        Envelope::Piggybacked(..) => unreachable!("payload() peels Piggybacked"),
+    }
+}
+
+/// The wire kind of an envelope's payload (sees through piggybacking).
+pub fn wire_kind(env: &Envelope) -> WireKind {
+    match env.payload() {
+        Envelope::TaskBatch(_) => WireKind::Task,
+        Envelope::Result(_) => WireKind::Result,
+        Envelope::Rehome(_) => WireKind::Rehome,
+        Envelope::State(_) => WireKind::Gossip,
+        Envelope::Piggybacked(..) => unreachable!("payload() peels Piggybacked"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The concrete sink
+// ---------------------------------------------------------------------------
+
+/// The default [`Recorder`]: pairs events into spans, folds counters into
+/// metrics rows on every [`TelemetryEvent::MetricsTick`], and keeps the
+/// flight ring. One sink per worker; drivers merge the finished
+/// [`TelemetryData`].
+pub struct TelemetrySink {
+    worker: usize,
+    cfg: TelemetryConfig,
+    /// Warmup gate: counters only accumulate at `t >= measure_from`,
+    /// matching `RunReport`'s windowing (spans and the flight ring are
+    /// *not* gated — warmup context is exactly what anomaly forensics
+    /// want).
+    measure_from: f64,
+
+    spans: Vec<Span>,
+    metrics: Vec<MetricsRow>,
+
+    /// Input-queue entry time per task (drained at compute start).
+    enqueued_at: BTreeMap<u64, f64>,
+    /// Start of the in-flight batch (single batch per worker at a time).
+    compute_t0: f64,
+
+    // Event-derived cumulative counters (in-window).
+    admitted: u64,
+    completed: u64,
+    on_time: u64,
+    deadline_misses: u64,
+    exit_counts: Vec<u64>,
+    latency: LogHistogram,
+    /// Delivery deadlines of sent envelopes, pruned at each sample.
+    inflight: VecDeque<f64>,
+    /// Previous sample's (t, wire_bytes) for the bytes/s gauge.
+    prev_sample: Option<(f64, u64)>,
+
+    ring: VecDeque<TelemetryEvent>,
+    dumps: Vec<FlightDump>,
+}
+
+impl TelemetrySink {
+    pub fn new(worker: usize, cfg: TelemetryConfig, measure_from: f64) -> TelemetrySink {
+        TelemetrySink {
+            worker,
+            cfg,
+            measure_from,
+            spans: Vec::new(),
+            metrics: Vec::new(),
+            enqueued_at: BTreeMap::new(),
+            compute_t0: 0.0,
+            admitted: 0,
+            completed: 0,
+            on_time: 0,
+            deadline_misses: 0,
+            exit_counts: Vec::new(),
+            latency: LogHistogram::default(),
+            inflight: VecDeque::new(),
+            prev_sample: None,
+            ring: VecDeque::new(),
+            dumps: Vec::new(),
+        }
+    }
+
+    fn in_window(&self, t: f64) -> bool {
+        t >= self.measure_from
+    }
+
+    fn push_span(&mut self, span: Span) {
+        if self.cfg.spans {
+            self.spans.push(span);
+        }
+    }
+
+    fn ring_push(&mut self, ev: &TelemetryEvent) {
+        if self.cfg.flight_capacity == 0 {
+            return;
+        }
+        if self.ring.len() >= self.cfg.flight_capacity {
+            self.ring.pop_front();
+        }
+        self.ring.push_back(ev.clone());
+    }
+
+    /// Snapshot the ring into a dump (the anomaly event itself is the
+    /// ring's most recent entry, since `record` rings before dispatch).
+    fn anomaly(&mut self, t: f64, reason: String) {
+        if self.cfg.flight_capacity == 0 || self.dumps.len() >= MAX_FLIGHT_DUMPS {
+            return;
+        }
+        self.dumps.push(FlightDump {
+            t_s: t,
+            worker: self.worker,
+            reason,
+            events: self.ring.iter().cloned().collect(),
+        });
+    }
+
+    fn bump_exit(&mut self, exit_point: usize) {
+        if self.exit_counts.len() <= exit_point {
+            self.exit_counts.resize(exit_point + 1, 0);
+        }
+        self.exit_counts[exit_point] += 1;
+    }
+
+    fn sample(&mut self, s: &CoreSample) {
+        if !self.cfg.metrics {
+            return;
+        }
+        while self.inflight.front().is_some_and(|&d| d <= s.t_s) {
+            self.inflight.pop_front();
+        }
+        let wire_rate = match self.prev_sample {
+            Some((t0, b0)) if s.t_s > t0 => {
+                s.wire_bytes.saturating_sub(b0) as f64 / (s.t_s - t0)
+            }
+            _ => 0.0,
+        };
+        self.prev_sample = Some((s.t_s, s.wire_bytes));
+        self.metrics.push(MetricsRow {
+            t_s: s.t_s,
+            worker: s.worker,
+            control: s.control,
+            t_e: s.t_e,
+            busy: s.busy,
+            input_len: s.input_len,
+            output_len: s.output_len,
+            class_depths: s.class_depths.clone(),
+            admitted: self.admitted,
+            completed: self.completed,
+            on_time: self.on_time,
+            deadline_misses: self.deadline_misses,
+            processed: s.processed,
+            wire_bytes: s.wire_bytes,
+            envelopes_sent: s.envelopes_sent,
+            wire_bytes_per_s: wire_rate,
+            envelopes_in_flight: self.inflight.len(),
+            exit_counts: self.exit_counts.clone(),
+            latency_hist: self.latency.counts.clone(),
+        });
+    }
+}
+
+impl Recorder for TelemetrySink {
+    fn record(&mut self, ev: &TelemetryEvent) {
+        self.ring_push(ev);
+        match *ev {
+            TelemetryEvent::Admit { t, worker, task, class } => {
+                if self.in_window(t) {
+                    self.admitted += 1;
+                }
+                self.push_span(Span {
+                    kind: SpanKind::Admit,
+                    worker,
+                    class,
+                    task,
+                    stage: 0,
+                    peer: usize::MAX,
+                    t0: t,
+                    t1: t,
+                });
+            }
+            TelemetryEvent::Enqueue { t, task, .. } => {
+                if self.cfg.spans {
+                    self.enqueued_at.insert(task, t);
+                }
+            }
+            TelemetryEvent::ComputeStart { t, worker, task, class, .. } => {
+                self.compute_t0 = t;
+                if let Some(t_enq) = self.enqueued_at.remove(&task) {
+                    self.push_span(Span {
+                        kind: SpanKind::QueueWait,
+                        worker,
+                        class,
+                        task,
+                        stage: 0,
+                        peer: usize::MAX,
+                        t0: t_enq,
+                        t1: t,
+                    });
+                }
+            }
+            TelemetryEvent::ComputeEnd { t, worker, task, class, stage } => {
+                self.push_span(Span {
+                    kind: SpanKind::Compute,
+                    worker,
+                    class,
+                    task,
+                    stage,
+                    peer: usize::MAX,
+                    t0: self.compute_t0.min(t),
+                    t1: t,
+                });
+            }
+            TelemetryEvent::ExitDecision { t, worker, task, class, exit_point, exited } => {
+                if exited && self.in_window(t) {
+                    self.bump_exit(exit_point);
+                }
+                self.push_span(Span {
+                    kind: if exited { SpanKind::Exit } else { SpanKind::Continue },
+                    worker,
+                    class,
+                    task,
+                    stage: exit_point,
+                    peer: usize::MAX,
+                    t0: t,
+                    t1: t,
+                });
+            }
+            TelemetryEvent::Complete { t, on_time, latency_s, .. } => {
+                if self.in_window(t) {
+                    self.completed += 1;
+                    if on_time {
+                        self.on_time += 1;
+                    } else {
+                        self.deadline_misses += 1;
+                    }
+                    self.latency.observe(latency_s);
+                }
+                if !on_time {
+                    self.anomaly(t, "deadline-miss".to_string());
+                }
+            }
+            TelemetryEvent::WireSend { t, from, to, task, class, kind, delay_s, .. } => {
+                self.inflight.push_back(t + delay_s);
+                self.push_span(Span {
+                    kind: match kind {
+                        WireKind::Task => SpanKind::WireTask,
+                        WireKind::Result => SpanKind::WireResult,
+                        WireKind::Rehome => SpanKind::WireRehome,
+                        WireKind::Gossip => SpanKind::WireGossip,
+                    },
+                    worker: from,
+                    class,
+                    task,
+                    stage: 0,
+                    peer: to,
+                    t0: t,
+                    t1: t + delay_s,
+                });
+            }
+            TelemetryEvent::WireRecv { .. } => {}
+            TelemetryEvent::ChurnRehome { t, drained, .. } => {
+                self.anomaly(t, format!("churn-rehome ({drained} tasks drained)"));
+            }
+            TelemetryEvent::Drop { t, count, reason, .. } => {
+                self.anomaly(t, format!("drop ({count} tasks, {})", reason.label()));
+            }
+            TelemetryEvent::MetricsTick(ref s) => {
+                let s = s.clone();
+                self.sample(&s);
+            }
+        }
+    }
+
+    fn finish(self: Box<Self>) -> TelemetryData {
+        TelemetryData { spans: self.spans, metrics: self.metrics, dumps: self.dumps }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sink(spans: bool, metrics: bool, cap: usize) -> TelemetrySink {
+        let cfg = TelemetryConfig {
+            spans,
+            metrics,
+            interval_s: 0.25,
+            flight_capacity: cap,
+            noop: false,
+        };
+        TelemetrySink::new(0, cfg, 0.0)
+    }
+
+    fn admit(t: f64, task: u64) -> TelemetryEvent {
+        TelemetryEvent::Admit { t, worker: 0, task, class: 0 }
+    }
+
+    #[test]
+    fn histogram_buckets_are_logarithmic() {
+        let mut h = LogHistogram::default();
+        h.observe(0.0); // underflow -> bucket 0
+        h.observe(1e-4);
+        h.observe(2.5e-4); // bucket 1
+        h.observe(1.0); // ~bucket 13
+        h.observe(1e9); // overflow clamps to last bucket
+        assert_eq!(h.counts[0], 2);
+        assert_eq!(h.counts[1], 1);
+        assert_eq!(h.counts[LATENCY_BUCKETS - 1], 1);
+        assert_eq!(h.total(), 5);
+    }
+
+    #[test]
+    fn sink_pairs_queue_wait_and_compute_spans() {
+        let mut s = sink(true, false, 0);
+        s.record(&TelemetryEvent::Enqueue { t: 1.0, worker: 0, task: 7, class: 2, stage: 1 });
+        s.record(&TelemetryEvent::ComputeStart {
+            t: 1.5,
+            worker: 0,
+            task: 7,
+            class: 2,
+            stage: 1,
+            batch: 1,
+        });
+        s.record(&TelemetryEvent::ComputeEnd { t: 1.8, worker: 0, task: 7, class: 2, stage: 1 });
+        s.record(&TelemetryEvent::ExitDecision {
+            t: 1.8,
+            worker: 0,
+            task: 7,
+            class: 2,
+            exit_point: 1,
+            exited: true,
+        });
+        let data = Box::new(s).finish();
+        let kinds: Vec<SpanKind> = data.spans.iter().map(|s| s.kind).collect();
+        assert_eq!(kinds, vec![SpanKind::QueueWait, SpanKind::Compute, SpanKind::Exit]);
+        let qw = data.spans[0];
+        assert_eq!((qw.t0, qw.t1), (1.0, 1.5));
+        assert_eq!(qw.class, 2);
+        let c = data.spans[1];
+        assert_eq!((c.t0, c.t1), (1.5, 1.8));
+        assert_eq!(c.stage, 1);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_and_monotonic() {
+        let mut s = sink(true, false, 0);
+        for i in 0..20u64 {
+            let t = i as f64 * 0.1;
+            s.record(&TelemetryEvent::Enqueue {
+                t,
+                worker: 0,
+                task: i,
+                class: (i % 2) as u8,
+                stage: 1,
+            });
+            s.record(&TelemetryEvent::ComputeStart {
+                t: t + 0.01,
+                worker: 0,
+                task: i,
+                class: (i % 2) as u8,
+                stage: 1,
+                batch: 1,
+            });
+            s.record(&TelemetryEvent::ComputeEnd {
+                t: t + 0.03,
+                worker: 0,
+                task: i,
+                class: (i % 2) as u8,
+                stage: 1,
+            });
+        }
+        s.record(&TelemetryEvent::WireSend {
+            t: 0.5,
+            from: 0,
+            to: 1,
+            task: 3,
+            class: 1,
+            kind: WireKind::Task,
+            bytes: 1024,
+            delay_s: 0.02,
+        });
+        let data = Box::new(s).finish();
+        let trace = data.chrome_trace();
+        let n = validate_chrome_trace(&trace).expect("schema-valid trace");
+        assert_eq!(n, 41, "20 queue-waits + 20 computes + 1 wire leg");
+        // Round-trips through the serializer too.
+        let parsed = Json::parse(&trace.to_string()).expect("serialized trace parses");
+        validate_chrome_trace(&parsed).expect("still valid after round-trip");
+    }
+
+    #[test]
+    fn validator_rejects_backwards_track() {
+        let j = Json::parse(
+            r#"[{"name":"a","ph":"X","ts":5,"dur":1,"pid":0,"tid":0},
+                {"name":"b","ph":"X","ts":4,"dur":1,"pid":0,"tid":0}]"#,
+        )
+        .unwrap();
+        assert!(validate_chrome_trace(&j).is_err());
+        let ok = Json::parse(
+            r#"[{"name":"a","ph":"X","ts":5,"dur":1,"pid":0,"tid":0},
+                {"name":"b","ph":"X","ts":4,"dur":1,"pid":0,"tid":1}]"#,
+        )
+        .unwrap();
+        assert_eq!(validate_chrome_trace(&ok), Ok(2), "different track may restart");
+    }
+
+    #[test]
+    fn flight_ring_is_bounded_and_dumps_on_anomaly() {
+        let mut s = sink(false, false, 4);
+        for i in 0..10 {
+            s.record(&admit(i as f64, i));
+        }
+        assert_eq!(s.ring.len(), 4, "ring bounded at capacity");
+        s.record(&TelemetryEvent::Drop {
+            t: 10.0,
+            worker: 0,
+            task: 9,
+            class: 0,
+            count: 1,
+            reason: DropReason::EngineFailure,
+        });
+        let data = Box::new(s).finish();
+        assert_eq!(data.dumps.len(), 1);
+        let d = &data.dumps[0];
+        assert!(d.reason.contains("engine-failure"));
+        // The dump holds the *preceding* events (the freshest ring slice),
+        // ending with the drop itself.
+        assert_eq!(d.events.len(), 4);
+        assert!(matches!(d.events[0], TelemetryEvent::Admit { task: 7, .. }));
+        assert!(matches!(d.events[3], TelemetryEvent::Drop { .. }));
+        // JSONL export carries the dump.
+        assert!(data.metrics_jsonl().contains("flight-dump"));
+    }
+
+    #[test]
+    fn metrics_rows_fold_to_totals() {
+        let mut s = sink(false, true, 0);
+        for i in 0..5u64 {
+            s.record(&admit(i as f64, i));
+        }
+        s.record(&TelemetryEvent::Complete {
+            t: 6.0,
+            worker: 0,
+            class: 0,
+            exit_point: 1,
+            on_time: true,
+            latency_s: 0.01,
+        });
+        let cs = CoreSample {
+            t_s: 7.0,
+            worker: 0,
+            control: 0.5,
+            t_e: 0.9,
+            busy: false,
+            input_len: 0,
+            output_len: 0,
+            queue_total: 0,
+            class_depths: vec![0],
+            processed: 5,
+            wire_bytes: 1000,
+            envelopes_sent: 2,
+        };
+        s.record(&TelemetryEvent::MetricsTick(cs));
+        let data = Box::new(s).finish();
+        assert_eq!(data.folded_totals(), (5, 1, 1000));
+        let jsonl = data.metrics_jsonl();
+        let row = Json::parse(jsonl.lines().next().unwrap()).unwrap();
+        assert_eq!(row.get("admitted").as_i64(), Some(5));
+        assert_eq!(row.get("completed").as_i64(), Some(1));
+        assert_eq!(row.get("wire_bytes").as_i64(), Some(1000));
+    }
+
+    #[test]
+    fn warmup_gates_counters_but_not_spans() {
+        let cfg = TelemetryConfig { spans: true, metrics: true, ..Default::default() };
+        let mut s = TelemetrySink::new(0, cfg, 10.0);
+        s.record(&admit(5.0, 1)); // warmup: span yes, counter no
+        s.record(&admit(15.0, 2)); // in window: both
+        assert_eq!(s.admitted, 1);
+        let data = Box::new(s).finish();
+        assert_eq!(data.spans.len(), 2);
+    }
+
+    #[test]
+    fn noop_recorder_yields_empty_data() {
+        let mut r = NoopRecorder;
+        r.record(&admit(1.0, 1));
+        let data = Box::new(r).finish();
+        assert!(data.is_empty());
+        assert_eq!(validate_chrome_trace(&data.chrome_trace()), Ok(0));
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut cfg = TelemetryConfig::default();
+        assert!(!cfg.enabled());
+        assert!(cfg.validate().is_ok());
+        cfg.metrics = true;
+        assert!(cfg.enabled());
+        cfg.interval_s = 0.0;
+        assert!(cfg.validate().is_err());
+    }
+}

@@ -6,7 +6,7 @@
 
 use std::io::Write;
 use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::Mutex;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -42,7 +42,7 @@ impl Level {
 }
 
 static THRESHOLD: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
-static START: Mutex<Option<Instant>> = Mutex::new(None);
+static START: OnceLock<Instant> = OnceLock::new();
 
 fn threshold() -> u8 {
     let t = THRESHOLD.load(Ordering::Relaxed);
@@ -70,9 +70,9 @@ pub fn log(level: Level, module: &str, msg: &str) {
     if !enabled(level) {
         return;
     }
-    let mut start = START.lock().unwrap();
-    let t0 = start.get_or_insert_with(Instant::now);
-    let elapsed = t0.elapsed().as_secs_f64();
+    // Epoch is a `OnceLock`: no lock is held across the stderr write, so a
+    // slow/blocked stderr can never serialize unrelated logging threads.
+    let elapsed = START.get_or_init(Instant::now).elapsed().as_secs_f64();
     let mut err = std::io::stderr().lock();
     let _ = writeln!(err, "[{elapsed:9.4}s {} {module}] {msg}", level.tag());
 }

@@ -1,0 +1,414 @@
+//! Telemetry integration: both drivers run the same `WorkerCore` with a
+//! recorder installed, so the traces they emit must (a) be structurally
+//! valid Chrome trace-event JSON, (b) reproduce the run's report
+//! aggregates from the metrics timeline, (c) be bit-identical across DES
+//! reruns on the same seed — and never perturb the run itself — and
+//! (d) tell the same per-task story on both drivers.
+//!
+//! Entirely engine- and artifact-free, like `cross_driver.rs`: a
+//! synthetic oracle table drives both runs through the `Run` builder.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use mdi_exit::coordinator::{
+    AdmissionMode, Driver, ExperimentConfig, ModelMeta, Run, RunReport,
+};
+use mdi_exit::dataset::{Dataset, ExitTable};
+use mdi_exit::runtime::sim_engine::SimEngine;
+use mdi_exit::runtime::InferenceEngine;
+use mdi_exit::simnet::ChurnEvent;
+use mdi_exit::telemetry::{
+    validate_chrome_trace, SpanKind, TelemetryData, TelemetryEvent,
+};
+use mdi_exit::util::json::Json;
+
+/// Realtime runs busy-spin one thread per worker; serialize them so they
+/// don't starve each other on small CI runners (same idiom as
+/// `cross_driver.rs`).
+static WALLCLOCK: Mutex<()> = Mutex::new(());
+
+fn serialized() -> std::sync::MutexGuard<'static, ()> {
+    WALLCLOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// 8 samples x 2 exits: even samples confident at exit 1, odd samples
+/// only at exit 2 — a deterministic 50/50 exit split.
+fn oracle() -> (ExitTable, Vec<u8>) {
+    let n = 8;
+    let mut conf = Vec::new();
+    let mut pred = Vec::new();
+    let labels: Vec<u8> = (0..n as u8).map(|i| i % 10).collect();
+    for i in 0..n {
+        if i % 2 == 0 {
+            conf.extend([0.97f32, 0.99]);
+        } else {
+            conf.extend([0.30f32, 0.95]);
+        }
+        pred.extend([labels[i], labels[i]]);
+    }
+    (ExitTable::synthetic(n, 2, conf, pred), labels)
+}
+
+fn meta() -> ModelMeta {
+    ModelMeta::synthetic(vec![0.002, 0.003], vec![12288, 8192])
+}
+
+/// Stage-3-heavy costs on a 3-exit oracle: overloading a line pushes
+/// continuing work multiple hops out, so traces carry task, result-relay,
+/// and gossip wire legs.
+const COSTS3: [f64; 3] = [0.001, 0.001, 0.006];
+
+fn oracle3() -> (ExitTable, Vec<u8>) {
+    let n = 8;
+    let mut conf = Vec::new();
+    let mut pred = Vec::new();
+    let labels: Vec<u8> = (0..n as u8).map(|i| i % 10).collect();
+    for i in 0..n {
+        if i % 4 == 0 {
+            conf.extend([0.97f32, 0.99, 1.0]);
+        } else {
+            conf.extend([0.30f32, 0.50, 0.95]);
+        }
+        pred.extend([labels[i]; 3]);
+    }
+    (ExitTable::synthetic(n, 3, conf, pred), labels)
+}
+
+fn meta3() -> ModelMeta {
+    ModelMeta::synthetic(COSTS3.to_vec(), vec![12288, 8192, 4096])
+}
+
+fn cfg(topology: &str, rate_hz: f64, seconds: f64) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::new(
+        "tiny",
+        topology,
+        AdmissionMode::Fixed { rate_hz, threshold: 0.9 },
+    );
+    cfg.duration_s = seconds;
+    cfg.warmup_s = 0.5;
+    cfg.seed = 7;
+    cfg
+}
+
+fn traced(mut cfg: ExperimentConfig) -> ExperimentConfig {
+    cfg.telemetry.spans = true;
+    cfg.telemetry.metrics = true;
+    cfg.telemetry.interval_s = 0.5;
+    cfg
+}
+
+fn run_des(cfg: ExperimentConfig, labels: &[u8]) -> RunReport {
+    let (table, _) = oracle();
+    let engine = SimEngine::from_table(table, false);
+    Run::builder()
+        .config(cfg)
+        .model(meta())
+        .engine(&engine)
+        .labels(labels)
+        .driver(Driver::Des)
+        .execute()
+        .expect("DES run")
+}
+
+fn run_rt(cfg: ExperimentConfig, labels: &[u8]) -> RunReport {
+    let ds = Dataset::synthetic(labels.len(), 2, 2, 3, labels.to_vec());
+    let m = meta();
+    let costs = m.stage_cost_s.clone();
+    let factory = move |_w: usize| -> Result<Box<dyn InferenceEngine>> {
+        let (table, _) = oracle();
+        let eng = SimEngine::from_table(table, false).with_costs(costs.clone(), 1.0);
+        Ok(Box::new(eng) as Box<dyn InferenceEngine>)
+    };
+    Run::builder()
+        .config(cfg)
+        .model(m)
+        .engine_factory(factory)
+        .dataset(&ds)
+        .driver(Driver::Realtime)
+        .execute()
+        .expect("realtime run")
+}
+
+fn run_des3(cfg: ExperimentConfig, labels: &[u8]) -> RunReport {
+    let (table, _) = oracle3();
+    let engine = SimEngine::from_table(table, false);
+    Run::builder()
+        .config(cfg)
+        .model(meta3())
+        .engine(&engine)
+        .labels(labels)
+        .driver(Driver::Des)
+        .execute()
+        .expect("DES run")
+}
+
+/// Per-task span-kind sequences, in recording order (task 0 = envelopes
+/// that are not task-scoped: results, gossip).
+fn signatures(data: &TelemetryData) -> BTreeMap<u64, Vec<SpanKind>> {
+    let mut by_task: BTreeMap<u64, Vec<SpanKind>> = BTreeMap::new();
+    for s in &data.spans {
+        if s.task != 0 {
+            by_task.entry(s.task).or_default().push(s.kind);
+        }
+    }
+    by_task
+}
+
+#[test]
+fn traced_des_line4_emits_perfetto_valid_chrome_trace() {
+    let (_, labels) = oracle3();
+    // Overloaded line-4 on the stage-3-heavy model: offloads, multi-hop
+    // result relays, and gossip all hit the wire, so the trace must carry
+    // every span family the exporter knows.
+    let r = run_des3(traced(cfg("line-4", 900.0, 6.0)), &labels);
+    let data = r.telemetry.as_ref().expect("traced run returns telemetry");
+    assert!(!data.spans.is_empty(), "no spans collected");
+
+    let trace = data.chrome_trace();
+    let n = validate_chrome_trace(&trace).expect("schema-valid Chrome trace");
+    assert_eq!(n, data.spans.len(), "one complete event per span");
+    // Survives its own serializer: what `--trace` writes is what Perfetto
+    // loads.
+    let parsed = Json::parse(&trace.to_string()).expect("serialized trace parses");
+    assert_eq!(validate_chrome_trace(&parsed), Ok(n), "valid after round-trip");
+
+    use SpanKind::*;
+    for kind in [Admit, QueueWait, Compute, Exit, Continue, WireTask, WireResult, WireGossip]
+    {
+        assert!(
+            data.spans.iter().any(|s| s.kind == kind),
+            "trace is missing {kind:?} spans"
+        );
+    }
+    // Wire legs live on the sender's process and name their receiver.
+    for s in &data.spans {
+        assert!(s.t1 >= s.t0, "span {:?} runs backwards", s.kind);
+        match s.kind {
+            WireTask | WireResult | WireRehome | WireGossip => {
+                assert_ne!(s.peer, usize::MAX, "wire span without a peer");
+                assert_ne!(s.peer, s.worker, "wire span to self");
+            }
+            _ => assert_eq!(s.peer, usize::MAX, "{:?} span with a peer", s.kind),
+        }
+    }
+}
+
+#[test]
+fn metrics_timeline_folds_to_des_report_aggregates() {
+    let (_, labels) = oracle3();
+    let r = run_des3(traced(cfg("line-4", 700.0, 6.0)), &labels);
+    let data = r.telemetry.as_ref().expect("traced run returns telemetry");
+    assert!(!data.metrics.is_empty(), "no metrics rows sampled");
+
+    // The acceptance identity: fold each worker's final row and land
+    // exactly on the report's aggregates — same counters, same warmup
+    // window, same closing sample at the horizon.
+    assert_eq!(
+        data.folded_totals(),
+        (r.admitted, r.completed, r.bytes_on_wire),
+        "folded metrics diverge from the run report"
+    );
+
+    // Every worker sampled on the cadence (warmup + 6 s at 0.5 s/sample,
+    // plus the closing row).
+    for w in 0..4 {
+        let rows = data.metrics.iter().filter(|m| m.worker == w).count();
+        assert!(rows >= 10, "worker {w} sampled only {rows} rows");
+    }
+
+    // The JSONL export parses line by line and is ordered by (t_s, worker).
+    let jsonl = data.metrics_jsonl();
+    let mut prev = (f64::NEG_INFINITY, 0usize);
+    let mut rows = 0;
+    for line in jsonl.lines() {
+        let v = Json::parse(line).expect("every JSONL line parses");
+        if v.get("kind").as_str() != Some("metrics") {
+            continue;
+        }
+        rows += 1;
+        let key = (
+            v.get("t_s").as_f64().expect("t_s"),
+            v.get("worker").as_i64().expect("worker") as usize,
+        );
+        assert!(key >= prev, "rows out of order: {key:?} after {prev:?}");
+        prev = key;
+    }
+    assert_eq!(rows, data.metrics.len(), "JSONL row count");
+}
+
+#[test]
+fn metrics_identity_holds_on_the_realtime_driver() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    let mut c = cfg("3-node-mesh", 300.0, 2.5);
+    c.telemetry.metrics = true;
+    c.telemetry.interval_s = 0.25;
+    let r = run_rt(c, &labels);
+    let data = r.telemetry.as_ref().expect("metrics run returns telemetry");
+    assert!(!data.metrics.is_empty(), "no metrics rows sampled");
+
+    let (admitted, completed, wire_bytes) = data.folded_totals();
+    // Admissions are stamped with their *scheduled* time on both the
+    // tally and the recorder, and wire bytes mirror the same core
+    // counter, so these two are exact even on wallclock.
+    assert_eq!(admitted, r.admitted, "admitted diverged");
+    assert_eq!(wire_bytes, r.bytes_on_wire, "wire bytes diverged");
+    // Completions are clocked twice a few microseconds apart (core
+    // handler vs driver bookkeeping); allow the warmup boundary to split
+    // at most a couple of them.
+    assert!(
+        (completed as i64 - r.completed as i64).abs() <= 2,
+        "completed diverged: folded {completed} vs report {}",
+        r.completed
+    );
+}
+
+#[test]
+fn des_trace_is_deterministic_and_does_not_perturb_the_run() {
+    let (_, labels) = oracle();
+    // Same seed, same config: the DES records the identical span and
+    // metrics sequence, timestamps bit-for-bit.
+    let a = run_des(traced(cfg("line-4", 400.0, 6.0)), &labels);
+    let b = run_des(traced(cfg("line-4", 400.0, 6.0)), &labels);
+    let (da, db) = (
+        a.telemetry.as_ref().expect("telemetry"),
+        b.telemetry.as_ref().expect("telemetry"),
+    );
+    assert!(!da.spans.is_empty() && !da.metrics.is_empty());
+    assert_eq!(da.spans, db.spans, "span sequences diverged on the same seed");
+    assert_eq!(da.metrics, db.metrics, "metrics rows diverged on the same seed");
+    assert_eq!(da.dumps, db.dumps, "flight dumps diverged on the same seed");
+
+    // And recording never feeds back: a recorder-free run on the same
+    // seed reports the same system, bit for bit.
+    let off = run_des(cfg("line-4", 400.0, 6.0), &labels);
+    assert!(off.telemetry.is_none(), "untraced run must carry no telemetry");
+    assert_eq!(off.admitted, a.admitted);
+    assert_eq!(off.completed, a.completed);
+    assert_eq!(off.bytes_on_wire, a.bytes_on_wire);
+    assert_eq!(off.exit_histogram, a.exit_histogram);
+    // The legacy controller/queue timeline is cut from the same snapshot
+    // and must not move either.
+    assert_eq!(off.trace.len(), a.trace.len());
+    for (x, y) in off.trace.iter().zip(&a.trace) {
+        assert_eq!(x.t_s, y.t_s);
+        assert_eq!(x.control, y.control);
+        assert_eq!(x.source_queue, y.source_queue);
+    }
+}
+
+#[test]
+fn des_and_realtime_tell_the_same_per_task_story() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    // Light load on a single node: every task's life is fully local, so
+    // both drivers must produce exactly the same per-task span shapes —
+    // admitted tasks that exit at 1, admitted tasks that continue, and
+    // the continuation successors that exit at 2.
+    let spans_only = |mut c: ExperimentConfig| {
+        c.telemetry.spans = true;
+        c
+    };
+    let des = run_des(spans_only(cfg("local", 100.0, 5.0)), &labels);
+    let rt = run_rt(spans_only(cfg("local", 100.0, 2.5)), &labels);
+
+    const ADMIT_EXIT: &[SpanKind] =
+        &[SpanKind::Admit, SpanKind::QueueWait, SpanKind::Compute, SpanKind::Exit];
+    const ADMIT_CONT: &[SpanKind] =
+        &[SpanKind::Admit, SpanKind::QueueWait, SpanKind::Compute, SpanKind::Continue];
+    const SUCC_EXIT: &[SpanKind] =
+        &[SpanKind::QueueWait, SpanKind::Compute, SpanKind::Exit];
+
+    for (name, r) in [("DES", &des), ("realtime", &rt)] {
+        let sigs = signatures(r.telemetry.as_ref().expect(name));
+        let mut exit1 = 0;
+        let mut continued = 0;
+        let mut succ = 0;
+        for sig in sigs.values() {
+            let sig = sig.as_slice();
+            match sig.last() {
+                // A finished task: its shape must be one of the two
+                // canonical local stories, on either driver.
+                Some(SpanKind::Exit) => {
+                    assert!(
+                        sig == ADMIT_EXIT || sig == SUCC_EXIT,
+                        "{name}: unexpected completed-task shape {sig:?}"
+                    );
+                    if sig == ADMIT_EXIT {
+                        exit1 += 1;
+                    } else {
+                        succ += 1;
+                    }
+                }
+                Some(SpanKind::Continue) => {
+                    assert_eq!(sig, ADMIT_CONT, "{name}: unexpected continue shape");
+                    continued += 1;
+                }
+                // Tasks truncated by the horizon mid-flight (realtime
+                // admits until the last instant) are legal prefixes.
+                _ => {}
+            }
+        }
+        assert!(exit1 >= 20, "{name}: only {exit1} exit-at-1 tasks traced");
+        assert!(continued >= 20, "{name}: only {continued} continuing tasks traced");
+        assert!(succ >= 20, "{name}: only {succ} successor tasks traced");
+        // Every successor stems from a continue decision.
+        assert!(succ <= continued, "{name}: {succ} successors from {continued} continues");
+    }
+}
+
+#[test]
+fn flight_recorder_dumps_the_events_preceding_a_churn_rehome() {
+    let (_, labels) = oracle();
+    // Worker 1 leaves mid-run while holding queued work (2-node at ~3x
+    // the pair's capacity): its recorder must snapshot the flight ring at
+    // the re-home anomaly.
+    let mut c = cfg("2-node", 900.0, 4.0);
+    c.warmup_s = 0.0;
+    c.churn = vec![ChurnEvent { at_s: 1.0, worker: 1, join: false }];
+    c.telemetry.spans = true;
+    let r = run_des(c, &labels);
+    assert!(r.rehomed > 0, "churn produced no re-homing");
+
+    let data = r.telemetry.as_ref().expect("traced run returns telemetry");
+    let dump = data
+        .dumps
+        .iter()
+        .find(|d| d.reason.contains("churn-rehome"))
+        .expect("churn re-home must dump the flight ring");
+    assert_eq!(dump.worker, 1, "the leaving worker owns the dump");
+    assert!(!dump.events.is_empty(), "dump carries no context");
+    // The anomaly itself closes the ring; everything before it is the
+    // context leading up to the incident.
+    assert!(
+        matches!(dump.events.last(), Some(TelemetryEvent::ChurnRehome { .. })),
+        "ring must end with the anomaly event"
+    );
+    assert!(
+        data.metrics_jsonl().contains("churn-rehome"),
+        "JSONL export must carry the dump"
+    );
+}
+
+/// CI artifact hook: when `MDI_TELEMETRY_ARTIFACTS` names a directory,
+/// write the traced line-4 run's Chrome trace and metrics JSONL there for
+/// upload (no-op otherwise, so local `cargo test` stays read-only).
+#[test]
+fn emit_ci_artifacts_when_requested() -> Result<()> {
+    let Some(dir) = std::env::var_os("MDI_TELEMETRY_ARTIFACTS") else {
+        return Ok(());
+    };
+    let dir = std::path::PathBuf::from(dir);
+    std::fs::create_dir_all(&dir)?;
+    let (_, labels) = oracle3();
+    let r = run_des3(traced(cfg("line-4", 700.0, 6.0)), &labels);
+    let data = r.telemetry.expect("traced run returns telemetry");
+    validate_chrome_trace(&data.chrome_trace())
+        .map_err(|e| anyhow::anyhow!("invalid trace artifact: {e}"))?;
+    std::fs::write(dir.join("trace.json"), data.chrome_trace().to_string())?;
+    std::fs::write(dir.join("metrics.jsonl"), data.metrics_jsonl())?;
+    Ok(())
+}
