@@ -30,8 +30,9 @@ impl Args {
                 if let Some((k, v)) = body.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
                     out.present.push(k.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
+                } else if let Some(v) =
+                    it.next_if(|n| !n.starts_with("--"))
+                {
                     out.flags.insert(body.to_string(), v);
                     out.present.push(body.to_string());
                 } else {

@@ -1,0 +1,81 @@
+//! The clock abstraction: the only place the coordinator is allowed to
+//! touch wallclock time.
+//!
+//! [`WorkerCore`](super::worker::WorkerCore) never reads time — drivers
+//! sample their [`Clock`] and pass `now` into each event handler, which is
+//! what lets the same core run in virtual and wall time. Keeping the two
+//! impls in this dedicated module makes the boundary machine-checkable:
+//! `cargo xtask lint` (rule `clock-purity`, see `rust/CONTRACTS.md`)
+//! forbids `Instant`/`SystemTime` everywhere in the coordinator except
+//! here and the realtime driver itself.
+
+use std::time::Instant;
+
+/// Source of "now" in seconds since run start. The core never reads time
+/// itself — drivers sample their clock and pass the value into each event,
+/// which is what lets the same core run in virtual and wall time.
+pub trait Clock {
+    fn now(&self) -> f64;
+}
+
+/// Wallclock seconds since an anchor instant (realtime driver).
+#[derive(Debug, Clone, Copy)]
+pub struct WallClock {
+    t0: Instant,
+}
+
+impl WallClock {
+    pub fn new(t0: Instant) -> WallClock {
+        WallClock { t0 }
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+/// Virtual time set explicitly by the event loop (DES driver).
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    t: std::cell::Cell<f64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    pub fn set(&self, t: f64) {
+        self.t.set(t);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.t.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_reads_what_was_set() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.set(1.25);
+        assert_eq!(c.now(), 1.25);
+    }
+
+    #[test]
+    fn wall_clock_is_monotonic_from_anchor() {
+        let c = WallClock::new(Instant::now());
+        let a = c.now();
+        let b = c.now();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+}

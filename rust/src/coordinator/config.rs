@@ -188,60 +188,64 @@ impl ExperimentConfig {
     }
 
     /// Build from a TOML-subset config file (CLI `run --config`).
+    ///
+    /// Uses the checked accessors throughout: a key that is present with
+    /// the wrong type (`seed = "7"`) is an error naming the key, never a
+    /// silent fallback to the default.
     pub fn from_toml(toml: &Toml) -> Result<ExperimentConfig> {
-        let model = toml.str_or("model", "mobilenetv2l");
-        let topology = toml.str_or("topology", "3-node-mesh");
-        let mode = toml.str_or("admission.mode", "adaptive-rate");
+        let model = toml.try_str("model")?.unwrap_or("mobilenetv2l");
+        let topology = toml.try_str("topology")?.unwrap_or("3-node-mesh");
+        let mode = toml.try_str("admission.mode")?.unwrap_or("adaptive-rate");
         let admission = match mode {
             "adaptive-rate" => AdmissionMode::AdaptiveRate {
-                threshold: toml.f64_or("admission.threshold", 0.8) as f32,
-                initial_mu_s: toml.f64_or("admission.initial_mu_s", 0.5),
+                threshold: toml.try_f64("admission.threshold")?.unwrap_or(0.8) as f32,
+                initial_mu_s: toml.try_f64("admission.initial_mu_s")?.unwrap_or(0.5),
             },
             "adaptive-threshold" => AdmissionMode::AdaptiveThreshold {
-                rate_hz: toml.f64_or("admission.rate_hz", 20.0),
-                initial_t_e: toml.f64_or("admission.initial_t_e", 0.8) as f32,
-                t_e_min: toml.f64_or("admission.t_e_min", 0.05) as f32,
+                rate_hz: toml.try_f64("admission.rate_hz")?.unwrap_or(20.0),
+                initial_t_e: toml.try_f64("admission.initial_t_e")?.unwrap_or(0.8) as f32,
+                t_e_min: toml.try_f64("admission.t_e_min")?.unwrap_or(0.05) as f32,
             },
             "fixed" => AdmissionMode::Fixed {
-                rate_hz: toml.f64_or("admission.rate_hz", 20.0),
-                threshold: toml.f64_or("admission.threshold", 0.8) as f32,
+                rate_hz: toml.try_f64("admission.rate_hz")?.unwrap_or(20.0),
+                threshold: toml.try_f64("admission.threshold")?.unwrap_or(0.8) as f32,
             },
             other => bail!("unknown admission.mode {other:?}"),
         };
         let mut cfg = ExperimentConfig::new(model, topology, admission);
-        cfg.use_ae = toml.bool_or("use_ae", false);
-        cfg.no_early_exit = toml.bool_or("no_early_exit", false);
-        cfg.mode = match toml.str_or("system_mode", "mdi-exit") {
+        cfg.use_ae = toml.try_bool("use_ae")?.unwrap_or(false);
+        cfg.no_early_exit = toml.try_bool("no_early_exit")?.unwrap_or(false);
+        cfg.mode = match toml.try_str("system_mode")?.unwrap_or("mdi-exit") {
             "mdi-exit" => Mode::MdiExit,
             "ddi" => Mode::Ddi,
             other => bail!("unknown system_mode {other:?}"),
         };
         cfg.adapt = AdaptConfig {
-            t_q1: toml.usize_or("adapt.t_q1", 10),
-            t_q2: toml.usize_or("adapt.t_q2", 30),
-            alpha: toml.f64_or("adapt.alpha", 0.2),
-            beta: toml.f64_or("adapt.beta", 0.1),
-            zeta: toml.f64_or("adapt.zeta", 0.2),
-            sleep_s: toml.f64_or("adapt.sleep_s", 0.5),
+            t_q1: toml.try_usize("adapt.t_q1")?.unwrap_or(10),
+            t_q2: toml.try_usize("adapt.t_q2")?.unwrap_or(30),
+            alpha: toml.try_f64("adapt.alpha")?.unwrap_or(0.2),
+            beta: toml.try_f64("adapt.beta")?.unwrap_or(0.1),
+            zeta: toml.try_f64("adapt.zeta")?.unwrap_or(0.2),
+            sleep_s: toml.try_f64("adapt.sleep_s")?.unwrap_or(0.5),
         };
-        cfg.t_o = toml.usize_or("t_o", 50);
+        cfg.t_o = toml.try_usize("t_o")?.unwrap_or(50);
         cfg.policy = Self::policy_from_toml(toml)?;
         cfg.link = LinkSpec {
-            bandwidth_bps: toml.f64_or("net.bandwidth_mbps", 48.0) * 1e6 / 8.0,
-            base_latency_s: toml.f64_or("net.base_latency_ms", 3.0) / 1e3,
-            jitter_s: toml.f64_or("net.jitter_ms", 1.0) / 1e3,
+            bandwidth_bps: toml.try_f64("net.bandwidth_mbps")?.unwrap_or(48.0) * 1e6 / 8.0,
+            base_latency_s: toml.try_f64("net.base_latency_ms")?.unwrap_or(3.0) / 1e3,
+            jitter_s: toml.try_f64("net.jitter_ms")?.unwrap_or(1.0) / 1e3,
         };
-        cfg.duration_s = toml.f64_or("duration_s", 60.0);
-        cfg.warmup_s = toml.f64_or("warmup_s", 10.0);
-        cfg.gossip_interval_s = toml.f64_or("gossip_interval_s", 0.1);
-        cfg.compute_scale = toml.f64_or("compute_scale", 1.0);
-        cfg.medium_contention = toml.f64_or("net.medium_contention", 1.0);
+        cfg.duration_s = toml.try_f64("duration_s")?.unwrap_or(60.0);
+        cfg.warmup_s = toml.try_f64("warmup_s")?.unwrap_or(10.0);
+        cfg.gossip_interval_s = toml.try_f64("gossip_interval_s")?.unwrap_or(0.1);
+        cfg.compute_scale = toml.try_f64("compute_scale")?.unwrap_or(1.0);
+        cfg.medium_contention = toml.try_f64("net.medium_contention")?.unwrap_or(1.0);
         cfg.sched = Self::sched_from_toml(toml)?;
         cfg.placement = Self::placement_from_toml(toml)?;
         cfg.workload = Self::workload_from_toml(toml)?;
-        cfg.gossip_piggyback = toml.bool_or("gossip_piggyback", false);
-        cfg.telemetry = Self::telemetry_from_toml(toml);
-        cfg.seed = toml.i64_or("seed", 7) as u64;
+        cfg.gossip_piggyback = toml.try_bool("gossip_piggyback")?.unwrap_or(false);
+        cfg.telemetry = Self::telemetry_from_toml(toml)?;
+        cfg.seed = toml.try_i64("seed")?.unwrap_or(7) as u64;
         cfg.validate()?;
         Ok(cfg)
     }
@@ -345,14 +349,16 @@ impl ExperimentConfig {
 
     /// `[sched]` section: discipline, classes, deadline budgets, batching.
     fn sched_from_toml(toml: &Toml) -> Result<SchedConfig> {
-        let discipline = match toml.str_or("sched.discipline", "fifo") {
+        let discipline = match toml.try_str("sched.discipline")?.unwrap_or("fifo") {
             "fifo" => DisciplineKind::Fifo,
             "strict-priority" | "priority" => DisciplineKind::StrictPriority,
-            "edf" => DisciplineKind::Edf { drop_late: toml.bool_or("sched.drop_late", false) },
+            "edf" => DisciplineKind::Edf {
+                drop_late: toml.try_bool("sched.drop_late")?.unwrap_or(false),
+            },
             "drr" | "weighted-fair" => DisciplineKind::WeightedFair,
             other => bail!("unknown sched.discipline {other:?}"),
         };
-        let classes = toml.i64_or("sched.num_classes", 1);
+        let classes = toml.try_i64("sched.num_classes")?.unwrap_or(1);
         if !(1..=255).contains(&classes) {
             bail!("sched.num_classes {classes} outside 1..=255");
         }
@@ -405,14 +411,15 @@ impl ExperimentConfig {
                 None => bail!("sched.class_quantum must be a number or array"),
             },
         }
-        sched.batch.max_batch = toml.usize_or("sched.max_batch", 1);
-        sched.batch.marginal = toml.f64_or("sched.batch_marginal", sched.batch.marginal);
+        sched.batch.max_batch = toml.try_usize("sched.max_batch")?.unwrap_or(1);
+        sched.batch.marginal =
+            toml.try_f64("sched.batch_marginal")?.unwrap_or(sched.batch.marginal);
         // Cross-worker batch coalescing: whether offloads drain same-stage
         // runs into one wire envelope ("off" reproduces the seed's
         // one-task-per-message wire bit for bit).
-        sched.coalesce = CoalesceMode::parse(toml.str_or("sched.coalesce", "off"))
+        sched.coalesce = CoalesceMode::parse(toml.try_str("sched.coalesce")?.unwrap_or("off"))
             .map_err(|e| anyhow::anyhow!("sched.coalesce: {e}"))?;
-        sched.coalesce_max = toml.usize_or("sched.coalesce_max", sched.coalesce_max);
+        sched.coalesce_max = toml.try_usize("sched.coalesce_max")?.unwrap_or(sched.coalesce_max);
         Ok(sched)
     }
 
@@ -426,15 +433,17 @@ impl ExperimentConfig {
     /// interval = 0.25     # metrics cadence in seconds
     /// flight_capacity = 64
     /// ```
-    fn telemetry_from_toml(toml: &Toml) -> TelemetryConfig {
+    fn telemetry_from_toml(toml: &Toml) -> Result<TelemetryConfig> {
         let d = TelemetryConfig::default();
-        TelemetryConfig {
-            spans: toml.bool_or("telemetry.trace", false),
-            metrics: toml.bool_or("telemetry.metrics", false),
-            interval_s: toml.f64_or("telemetry.interval", d.interval_s),
-            flight_capacity: toml.usize_or("telemetry.flight_capacity", d.flight_capacity),
+        Ok(TelemetryConfig {
+            spans: toml.try_bool("telemetry.trace")?.unwrap_or(false),
+            metrics: toml.try_bool("telemetry.metrics")?.unwrap_or(false),
+            interval_s: toml.try_f64("telemetry.interval")?.unwrap_or(d.interval_s),
+            flight_capacity: toml
+                .try_usize("telemetry.flight_capacity")?
+                .unwrap_or(d.flight_capacity),
             ..d
-        }
+        })
     }
 
     /// `[workload]` section: the arrival process each source runs
@@ -452,18 +461,18 @@ impl ExperimentConfig {
     /// trace = "gaps.txt"        # interarrival trace for arrival = "trace"
     /// ```
     fn workload_from_toml(toml: &Toml) -> Result<WorkloadConfig> {
-        let arrival = match toml.str_or("workload.arrival", "legacy") {
+        let arrival = match toml.try_str("workload.arrival")?.unwrap_or("legacy") {
             "legacy" => ArrivalSpec::Legacy,
             "constant" => ArrivalSpec::Constant,
             "poisson" => ArrivalSpec::Poisson,
             "flash-crowd" => ArrivalSpec::FlashCrowd {
-                peak_mult: toml.f64_or("workload.peak_mult", 8.0),
-                at_s: toml.f64_or("workload.flash_at_s", 30.0),
-                ramp_s: toml.f64_or("workload.flash_ramp_s", 5.0),
+                peak_mult: toml.try_f64("workload.peak_mult")?.unwrap_or(8.0),
+                at_s: toml.try_f64("workload.flash_at_s")?.unwrap_or(30.0),
+                ramp_s: toml.try_f64("workload.flash_ramp_s")?.unwrap_or(5.0),
             },
             "diurnal" => ArrivalSpec::Diurnal {
-                period_s: toml.f64_or("workload.period_s", 60.0),
-                depth: toml.f64_or("workload.depth", 0.5),
+                period_s: toml.try_f64("workload.period_s")?.unwrap_or(60.0),
+                depth: toml.try_f64("workload.depth")?.unwrap_or(0.5),
             },
             "trace" => match toml.get("workload.trace").and_then(|v| v.as_str()) {
                 Some(path) => ArrivalSpec::trace_from_file(path)?,
@@ -549,6 +558,27 @@ bandwidth_mbps = 24.0
     fn from_toml_rejects_unknown_enum() {
         let toml = Toml::parse("[admission]\nmode = \"warp-drive\"\n").unwrap();
         assert!(ExperimentConfig::from_toml(&toml).is_err());
+    }
+
+    #[test]
+    fn from_toml_wrong_typed_key_errors_with_key_name() {
+        // A mistyped value must not silently fall back to the default.
+        for (src, key) in [
+            ("seed = \"seven\"\n", "seed"),
+            ("[admission]\nmode = \"fixed\"\nrate_hz = \"fast\"\n", "admission.rate_hz"),
+            ("duration_s = \"long\"\n", "duration_s"),
+            ("[adapt]\nt_q1 = -4\n", "adapt.t_q1"),
+            ("[sched]\nmax_batch = \"big\"\n", "sched.max_batch"),
+            ("[telemetry]\ntrace = \"yes\"\n", "telemetry.trace"),
+            ("[workload]\narrival = \"diurnal\"\ndepth = \"deep\"\n", "workload.depth"),
+            ("use_ae = 1\n", "use_ae"),
+        ] {
+            let toml = Toml::parse(src).unwrap();
+            let err = ExperimentConfig::from_toml(&toml)
+                .expect_err(&format!("{src:?} should fail"))
+                .to_string();
+            assert!(err.contains(key), "error {err:?} should name `{key}`");
+        }
     }
 
     #[test]

@@ -242,7 +242,7 @@ impl<T> CalendarQueue<T> {
     fn drain_overflow(&mut self) {
         let horizon = self.horizon();
         while self.overflow.peek().is_some_and(|e| e.t < horizon) {
-            let e = self.overflow.pop().unwrap();
+            let e = self.overflow.pop().expect("peeked overflow entry");
             let id = ((e.t / self.width) as u64).max(self.cur_id);
             let idx = (id & self.mask) as usize;
             self.buckets[idx].push(e);
@@ -398,13 +398,18 @@ mod tests {
         assert_eq!(b.len(), 0);
     }
 
+    // The differential and bulk tests push tens of thousands of events —
+    // too slow under Miri; `simultaneous_events_pop_fifo` and the peak
+    // tracker cover the pointer-heavy paths there.
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn calendar_matches_baseline_order() {
         differential(7, 1.0);
         differential(42, 1.0);
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn calendar_matches_baseline_with_deep_overflow() {
         // Far-future times exercise the overflow heap and cursor jumps.
         differential(3, 50.0);
@@ -427,6 +432,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn rebuild_under_load_preserves_order() {
         // Push far more than 3×INITIAL_BUCKETS items at once to force at
         // least one rebuild, with a spread that also exercises overflow.
@@ -448,6 +454,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn bulk_prefill_then_hold_stays_ordered_through_width_refits() {
         // A big prefill with no interleaved pops leaves the width fitted to
         // nothing; the first pops must trigger the lazy refit (possibly

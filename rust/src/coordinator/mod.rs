@@ -34,6 +34,7 @@
 //! or many sources on arbitrary multi-hop topologies run through the same
 //! core on both drivers.
 
+pub mod clock;
 pub mod config;
 pub mod equeue;
 pub mod queues;

@@ -44,7 +44,7 @@ use crate::runtime::InferenceEngine;
 use crate::simnet::Topology;
 use crate::telemetry::{self, TelemetryData, TelemetryEvent};
 use crate::tensor::Tensor;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{streams, Pcg64};
 
 /// Trace sampling period (virtual seconds).
 const TRACE_PERIOD_S: f64 = 0.25;
@@ -162,7 +162,7 @@ impl<'a> Simulation<'a> {
         );
         let measure_from = cfg.warmup_s;
         let end_at = cfg.warmup_s + cfg.duration_s;
-        let link_rng = Pcg64::new(cfg.seed, 7777);
+        let link_rng = Pcg64::new(cfg.seed, streams::DES_LINK_JITTER);
         Ok(Simulation {
             cfg,
             topo,

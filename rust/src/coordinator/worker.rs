@@ -47,8 +47,6 @@
 //! lands once. The core never reads time: drivers sample their [`Clock`]
 //! and pass `now` into each event.
 
-use std::time::Instant;
-
 use super::config::{AdmissionMode, ExperimentConfig, Mode};
 use super::queues::WorkerQueues;
 use super::report::WorkerStats;
@@ -66,7 +64,7 @@ use crate::sched::{CoalesceMode, QueueDiscipline};
 use crate::simnet::Topology;
 use crate::telemetry::{CoreSample, DropReason, Recorder, TelemetryEvent};
 use crate::tensor::Tensor;
-use crate::util::rng::Pcg64;
+use crate::util::rng::{streams, Pcg64};
 use crate::util::stats::Ewma;
 use crate::workload::ArrivalModel;
 
@@ -74,56 +72,11 @@ use crate::workload::ArrivalModel;
 // `worker::RESULT_BYTES` call sites keep reading naturally.
 pub use crate::net::RESULT_BYTES;
 
-// ---------------------------------------------------------------------------
-// Clock abstraction
-// ---------------------------------------------------------------------------
-
-/// Source of "now" in seconds since run start. The core never reads time
-/// itself — drivers sample their clock and pass the value into each event,
-/// which is what lets the same core run in virtual and wall time.
-pub trait Clock {
-    fn now(&self) -> f64;
-}
-
-/// Wallclock seconds since an anchor instant (realtime driver).
-#[derive(Debug, Clone, Copy)]
-pub struct WallClock {
-    t0: Instant,
-}
-
-impl WallClock {
-    pub fn new(t0: Instant) -> WallClock {
-        WallClock { t0 }
-    }
-}
-
-impl Clock for WallClock {
-    fn now(&self) -> f64 {
-        self.t0.elapsed().as_secs_f64()
-    }
-}
-
-/// Virtual time set explicitly by the event loop (DES driver).
-#[derive(Debug, Default)]
-pub struct VirtualClock {
-    t: std::cell::Cell<f64>,
-}
-
-impl VirtualClock {
-    pub fn new() -> VirtualClock {
-        VirtualClock::default()
-    }
-
-    pub fn set(&self, t: f64) {
-        self.t.set(t);
-    }
-}
-
-impl Clock for VirtualClock {
-    fn now(&self) -> f64 {
-        self.t.get()
-    }
-}
+// The clock abstraction lives in `super::clock` (the one coordinator
+// module allowed to touch `Instant` besides the realtime driver — the
+// `clock-purity` lint enforces it); re-exported so `worker::Clock` call
+// sites keep reading naturally.
+pub use super::clock::{Clock, VirtualClock, WallClock};
 
 // ---------------------------------------------------------------------------
 // Model metadata
@@ -286,7 +239,7 @@ pub struct WorkerCore {
     /// Source-only arrival model from `cfg.workload` (`None` = legacy
     /// pacing, which reproduces seed timelines bit for bit). Stochastic
     /// models draw from their own per-source stream
-    /// ([`crate::workload::ARRIVAL_STREAM_BASE`]` + id`), never from
+    /// ([`streams::ARRIVAL_STREAM_BASE`]` + id`), never from
     /// `rng`, so enabling one perturbs no other draw order.
     arrival: Option<Box<dyn ArrivalModel>>,
     /// When each peer last received our summary by any means (dedicated
@@ -373,7 +326,7 @@ impl WorkerCore {
             gamma,
             views: vec![None; n],
             d_est: (0..n).map(|_| Ewma::new(0.2)).collect(),
-            rng: Pcg64::new(cfg.seed, 1000 + id as u64),
+            rng: Pcg64::new(cfg.seed, streams::WORKER_CORE_BASE + id as u64),
             stats: WorkerStats { offload_targets: vec![0; n], ..WorkerStats::default() },
             exit_policy,
             offload,

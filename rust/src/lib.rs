@@ -35,16 +35,30 @@
 //!
 //! Start at [`coordinator`] for the algorithms, [`experiments`] for the
 //! figure reproductions, and `examples/quickstart.rs` for a guided tour.
+//!
+//! The crate's written contracts (RNG-stream registry, clock purity,
+//! wire-charge choke point, telemetry purity, panic budget) are
+//! machine-checked by `cargo xtask lint` — see `rust/CONTRACTS.md`.
+
+// The whole tree is safe code today; keep it that way.
+#![forbid(unsafe_code)]
 
 pub mod artifact;
 pub mod cli;
+// The panic-budget modules additionally carry clippy's unwrap lint in
+// non-test code (xtask's `panic-budget` rule is the deny-by-default gate;
+// the clippy warning catches sites in-editor before CI does).
+#[cfg_attr(not(test), warn(clippy::unwrap_used))]
 pub mod coordinator;
 pub mod dataset;
 pub mod experiments;
+#[cfg_attr(not(test), warn(clippy::unwrap_used))]
 pub mod net;
+#[cfg_attr(not(test), warn(clippy::unwrap_used))]
 pub mod policy;
 pub mod routing;
 pub mod runtime;
+#[cfg_attr(not(test), warn(clippy::unwrap_used))]
 pub mod sched;
 pub mod simnet;
 pub mod telemetry;

@@ -41,7 +41,10 @@
 //! `wire_bytes_saved` counters when it emits the send. When an encode
 //! falls back to raw, the driver reconciles the core's emit-time count
 //! through `WorkerCore::note_wire_recharge`, so the counters always equal
-//! what the medium was charged. There is no other byte-sizing code path.
+//! what the medium was charged. There is no other byte-sizing code path —
+//! and `cargo xtask lint` (rule `wire-charge`, see `rust/CONTRACTS.md`)
+//! rejects arithmetic on these sizes outside `net/`, so the cost model
+//! cannot silently fork from the codec.
 //!
 //! ## Batch invariants
 //!

@@ -13,7 +13,7 @@
 
 pub mod transport;
 
-use crate::util::rng::Pcg64;
+use crate::util::rng::{streams, Pcg64};
 
 /// A directed link n -> m with WiFi-like characteristics.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -282,7 +282,7 @@ impl Topology {
     }
 
     fn random_geometric(name: &str, n: usize, radius: f64, link: LinkSpec, seed: u64) -> Topology {
-        let mut rng = Pcg64::new(seed, 4242);
+        let mut rng = Pcg64::new(seed, streams::TOPO_GEOMETRIC);
         let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.f64(), rng.f64())).collect();
         let d2 = |a: usize, b: usize| {
             let (dx, dy) = (pts[a].0 - pts[b].0, pts[a].1 - pts[b].1);
@@ -325,7 +325,7 @@ impl Topology {
     }
 
     fn scale_free(name: &str, n: usize, link: LinkSpec, seed: u64) -> Topology {
-        let mut rng = Pcg64::new(seed, 4343);
+        let mut rng = Pcg64::new(seed, streams::TOPO_SCALE_FREE);
         let mut t = Topology::empty(name, n);
         // Seed triangle, then each new node attaches m=2 links, targets
         // drawn proportionally to degree by sampling the edge-endpoint

@@ -18,7 +18,9 @@
 //!   mutate core state, or reorder events: a recorder observes, it never
 //!   decides. Under the DES driver the same seed therefore yields the
 //!   same event (and span) sequence with bit-identical timestamps,
-//!   whether or not telemetry is enabled.
+//!   whether or not telemetry is enabled. Both halves of this contract
+//!   (no clock reads, no RNG) are enforced as the `telemetry-purity` and
+//!   `clock-purity` rules of `cargo xtask lint` — see `rust/CONTRACTS.md`.
 //! * **Zero cost when off.** `WorkerCore.recorder` is `Option<Box<dyn
 //!   Recorder>>`, `None` by default; every hook site is a single
 //!   `is_some()` branch with event construction inside it. The metro

@@ -4,7 +4,7 @@
 //! that reproduces it, with bounded input shrinking for numeric scalars.
 //! Used by the coordinator invariants suite (`rust/tests/prop_coordinator.rs`).
 
-use crate::util::rng::Pcg64;
+use crate::util::rng::{streams, Pcg64};
 
 /// A value generator over a PCG stream.
 pub trait Gen {
@@ -82,7 +82,7 @@ impl Prop {
     pub fn run<G: Gen>(&self, gen: &G, f: impl Fn(&G::Out) -> Verdict) {
         for case in 0..self.cases {
             let case_seed = self.seed.wrapping_add(case as u64);
-            let mut rng = Pcg64::new(case_seed, 42);
+            let mut rng = Pcg64::new(case_seed, streams::PROP_CASES);
             let input = gen.sample(&mut rng);
             if let Verdict::Fail(msg) = f(&input) {
                 panic!(

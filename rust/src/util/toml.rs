@@ -18,6 +18,17 @@ pub enum Value {
 }
 
 impl Value {
+    /// Human-readable type name, used in [`KeyError`] diagnostics.
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "integer",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "boolean",
+            Value::Arr(_) => "array",
+        }
+    }
+
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -63,6 +74,31 @@ impl fmt::Display for TomlError {
     }
 }
 impl std::error::Error for TomlError {}
+
+/// A present-but-wrong-typed key: the typed accessors (`try_*`) return
+/// this instead of silently falling back to a default, so a config typo
+/// like `seed = "7"` surfaces as a diagnostic naming the key rather than
+/// a run that quietly used the default seed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KeyError {
+    /// Dotted config path, e.g. `admission.t_q1`.
+    pub key: String,
+    /// What the accessor wanted, e.g. `integer`.
+    pub expected: &'static str,
+    /// What the config held, e.g. `string`.
+    pub found: &'static str,
+}
+
+impl fmt::Display for KeyError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "config key `{}`: expected {}, found {}",
+            self.key, self.expected, self.found
+        )
+    }
+}
+impl std::error::Error for KeyError {}
 
 impl Config {
     pub fn parse(src: &str) -> Result<Config, TomlError> {
@@ -117,6 +153,47 @@ impl Config {
     }
     pub fn bool_or(&self, path: &str, default: bool) -> bool {
         self.get(path).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Checked accessor: `Ok(None)` when absent, `Err(KeyError)` when
+    /// present with the wrong type. The `*_or` methods above silently
+    /// default on type mismatch; config-loading paths should prefer
+    /// these so typos surface with the offending key in the message.
+    pub fn try_f64(&self, path: &str) -> Result<Option<f64>, KeyError> {
+        self.checked(path, "number (integer or float)", Value::as_f64)
+    }
+    pub fn try_i64(&self, path: &str) -> Result<Option<i64>, KeyError> {
+        self.checked(path, "integer", Value::as_i64)
+    }
+    pub fn try_usize(&self, path: &str) -> Result<Option<usize>, KeyError> {
+        self.checked(path, "non-negative integer", |v| {
+            v.as_i64().and_then(|i| usize::try_from(i).ok())
+        })
+    }
+    pub fn try_str(&self, path: &str) -> Result<Option<&str>, KeyError> {
+        self.checked(path, "string", Value::as_str)
+    }
+    pub fn try_bool(&self, path: &str) -> Result<Option<bool>, KeyError> {
+        self.checked(path, "boolean", Value::as_bool)
+    }
+
+    fn checked<'a, T>(
+        &'a self,
+        path: &str,
+        expected: &'static str,
+        cast: impl Fn(&'a Value) -> Option<T>,
+    ) -> Result<Option<T>, KeyError> {
+        match self.get(path) {
+            None => Ok(None),
+            Some(v) => match cast(v) {
+                Some(t) => Ok(Some(t)),
+                None => Err(KeyError {
+                    key: path.to_string(),
+                    expected,
+                    found: v.type_name(),
+                }),
+            },
+        }
     }
 
     pub fn keys(&self) -> impl Iterator<Item = &str> {
@@ -243,6 +320,25 @@ bandwidth_mbps = [50.0, 25.0, 12.5]
         let e = Config::parse("[open\n").unwrap_err();
         assert_eq!(e.line, 1);
         assert!(Config::parse("k = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn checked_accessors_name_the_offending_key() {
+        let c = Config::parse("seed = \"seven\"\n[net]\nbw = 5\n").unwrap();
+        let e = c.try_i64("seed").unwrap_err();
+        assert_eq!(e.key, "seed");
+        assert_eq!(e.expected, "integer");
+        assert_eq!(e.found, "string");
+        assert!(e.to_string().contains("`seed`"), "{e}");
+        // Present + right type, absent, and coercions still work.
+        assert_eq!(c.try_i64("net.bw").unwrap(), Some(5));
+        assert_eq!(c.try_f64("net.bw").unwrap(), Some(5.0));
+        assert_eq!(c.try_bool("missing.key").unwrap(), None);
+        // usize rejects negatives with the key in the message.
+        let c = Config::parse("n = -3").unwrap();
+        let e = c.try_usize("n").unwrap_err();
+        assert_eq!(e.key, "n");
+        assert_eq!(e.expected, "non-negative integer");
     }
 
     #[test]

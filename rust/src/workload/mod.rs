@@ -12,10 +12,13 @@
 //! ## Seeding / determinism contract
 //!
 //! * Every stochastic model draws from its own [`Pcg64`] stream,
-//!   `(cfg.seed, ARRIVAL_STREAM_BASE + source_id)` — disjoint from the
-//!   worker-core decision streams (`1000 + id`), the DES link-jitter
-//!   stream (`7777`), and the realtime `DelayNet` endpoint streams
-//!   (`100 + id`). The k-th admission of source s therefore sees the same
+//!   `(cfg.seed, `[`streams::ARRIVAL_STREAM_BASE`]` + source_id)` —
+//!   disjoint from the worker-core decision streams
+//!   ([`streams::WORKER_CORE_BASE`]` + id`), the DES link-jitter stream
+//!   ([`streams::DES_LINK_JITTER`]), and the realtime `DelayNet` endpoint
+//!   streams ([`streams::RT_LINK_JITTER_BASE`]` + id`) — all reserved in
+//!   the central [`streams`] registry and enforced by `cargo xtask lint`.
+//!   The k-th admission of source s therefore sees the same
 //!   draw on BOTH drivers, which is what makes the cross-driver Poisson
 //!   equivalence test possible: same seed ⇒ same per-source admission
 //!   timeline, on the DES heap and on wallclock threads alike.
@@ -34,12 +37,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use crate::util::rng::Pcg64;
-
-/// RNG stream base for arrival models: stream = base + source node id.
-/// Disjoint from the core (1000+id), DES link (7777) and realtime endpoint
-/// (100+id) streams — see the module docs for why that matters.
-pub const ARRIVAL_STREAM_BASE: u64 = 9000;
+use crate::util::rng::{streams, Pcg64};
 
 /// One source's arrival process. `next_dt` returns the delay until the
 /// next admission given the admission mode's mean pacing `base_dt_s`
@@ -160,7 +158,7 @@ impl ArrivalSpec {
     ///
     /// [`Legacy`]: ArrivalSpec::Legacy
     pub fn build(&self, seed: u64, source: usize) -> Option<Box<dyn ArrivalModel>> {
-        let rng = Pcg64::new(seed, ARRIVAL_STREAM_BASE + source as u64);
+        let rng = Pcg64::new(seed, streams::ARRIVAL_STREAM_BASE + source as u64);
         match self {
             ArrivalSpec::Legacy => None,
             ArrivalSpec::Constant => Some(Box::new(Constant)),

@@ -1,0 +1,147 @@
+//! The vetted-exception list (`rust/xtask/lint.allow`).
+//!
+//! Format, one entry per line (`#` comments, blanks ignored):
+//!
+//! ```text
+//! rule | path-suffix | line-must-contain | reason
+//! ```
+//!
+//! An entry suppresses a finding when the rule id matches, the file path
+//! ends with the suffix, and the *original* line text contains the
+//! substring (string contents are blanked in cleaned text, so entries
+//! match on what the file says — typically the expect message). Entries
+//! that suppress nothing are stale and reported as errors, so the list
+//! can only shrink as code improves.
+
+use crate::rules::Finding;
+
+#[derive(Debug)]
+pub struct Entry {
+    pub rule: String,
+    pub path_suffix: String,
+    pub contains: String,
+    pub lineno: usize,
+}
+
+/// Parse the allowlist. Malformed lines are hard errors (a typo must not
+/// silently stop suppressing).
+pub fn parse(text: &str) -> Result<Vec<Entry>, String> {
+    let mut entries = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('|').map(str::trim).collect();
+        if parts.len() != 4 {
+            return Err(format!(
+                "lint.allow:{}: malformed entry (want `rule | path | contains | reason`)",
+                idx + 1
+            ));
+        }
+        if parts[..3].iter().any(|p| p.is_empty()) {
+            return Err(format!(
+                "lint.allow:{}: rule, path, and contains must be non-empty",
+                idx + 1
+            ));
+        }
+        entries.push(Entry {
+            rule: parts[0].to_string(),
+            path_suffix: parts[1].to_string(),
+            contains: parts[2].to_string(),
+            lineno: idx + 1,
+        });
+    }
+    Ok(entries)
+}
+
+/// Split findings into (kept, stale-entry messages). Every entry must
+/// suppress at least one finding or it is reported as stale.
+pub fn apply(findings: Vec<Finding>, entries: &[Entry]) -> (Vec<Finding>, Vec<String>) {
+    let mut used = vec![false; entries.len()];
+    let mut kept = Vec::new();
+    for f in findings {
+        let mut suppressed = false;
+        for (i, e) in entries.iter().enumerate() {
+            if e.rule == f.rule
+                && f.path.ends_with(&e.path_suffix)
+                && f.orig_line.contains(&e.contains)
+            {
+                used[i] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            kept.push(f);
+        }
+    }
+    let stale = entries
+        .iter()
+        .zip(&used)
+        .filter(|(_, &u)| !u)
+        .map(|(e, _)| {
+            format!(
+                "lint.allow:{}: stale entry ({} | {} | {}) suppresses nothing — remove it",
+                e.lineno, e.rule, e.path_suffix, e.contains
+            )
+        })
+        .collect();
+    (kept, stale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, path: &str, orig_line: &str) -> Finding {
+        Finding {
+            rule,
+            path: path.to_string(),
+            line: 1,
+            msg: String::new(),
+            orig_line: orig_line.to_string(),
+        }
+    }
+
+    #[test]
+    fn parses_and_skips_comments() {
+        let text = "# header\n\nrule-a | foo/bar.rs | needle | because\n";
+        let es = parse(text).unwrap();
+        assert_eq!(es.len(), 1);
+        assert_eq!(es[0].rule, "rule-a");
+        assert_eq!(es[0].path_suffix, "foo/bar.rs");
+        assert_eq!(es[0].contains, "needle");
+        assert_eq!(es[0].lineno, 3);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse("only | three | parts\n").is_err());
+        assert!(parse(" | x | y | z\n").is_err());
+    }
+
+    #[test]
+    fn suppresses_matching_and_reports_stale() {
+        let entries = parse(
+            "panic-budget | coordinator/run.rs | resolved above | invariant\n\
+             clock-purity | simnet/transport.rs | Instant | fabric\n",
+        )
+        .unwrap();
+        let findings = vec![
+            finding("panic-budget", "src/coordinator/run.rs", "x.expect(\"resolved above\")"),
+            finding("panic-budget", "src/coordinator/run.rs", "y.unwrap()"),
+        ];
+        let (kept, stale) = apply(findings, &entries);
+        // The expect is suppressed, the unwrap survives, the unused clock
+        // entry is stale.
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].orig_line, "y.unwrap()");
+        assert_eq!(stale.len(), 1);
+        assert!(stale[0].contains("simnet/transport.rs"), "{}", stale[0]);
+        // Rule must match, not just path+substring.
+        let entries = parse("clock-purity | coordinator/run.rs | unwrap | x\n").unwrap();
+        let (kept, _) =
+            apply(vec![finding("panic-budget", "src/coordinator/run.rs", "y.unwrap()")], &entries);
+        assert_eq!(kept.len(), 1);
+    }
+}

@@ -1,0 +1,145 @@
+//! Repo automation tasks. Today: `cargo xtask lint`.
+//!
+//! The lint enforces the crate's written contracts as deny-by-default
+//! diagnostics with `file:line` output (see `rust/CONTRACTS.md` for the
+//! rule catalogue and `lint.allow` for the vetted exceptions). It is a
+//! zero-dependency token scanner — the offline build image cannot fetch
+//! `syn`, and every contract here is expressible as identifier/call-site
+//! patterns over comment- and string-stripped source.
+//!
+//! Exit codes: 0 clean, 1 findings or stale allowlist entries, 2 usage /
+//! I/O errors.
+
+mod allow;
+mod rules;
+mod scan;
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(),
+        Some(other) => {
+            eprintln!("xtask: unknown task {other:?} (available: lint)");
+            ExitCode::from(2)
+        }
+        None => {
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint() -> ExitCode {
+    // xtask lives at rust/xtask; the tree under check is rust/src.
+    let xtask_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let rust_dir = match xtask_dir.parent() {
+        Some(p) => p,
+        None => {
+            eprintln!("xtask: cannot locate the rust/ directory");
+            return ExitCode::from(2);
+        }
+    };
+    let src_dir = rust_dir.join("src");
+
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs_files(&src_dir, &mut files) {
+        eprintln!("xtask: walking {}: {e}", src_dir.display());
+        return ExitCode::from(2);
+    }
+    files.sort();
+
+    let mut findings = Vec::new();
+    let mut rng_cleaned: Option<Vec<u8>> = None;
+    for path in &files {
+        let orig = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("xtask: reading {}: {e}", path.display());
+                return ExitCode::from(2);
+            }
+        };
+        let cleaned = scan::clean(&orig);
+        let mask = scan::test_mask(&cleaned);
+        let rel = rel_path(rust_dir, path);
+        if rel.ends_with("util/rng.rs") {
+            rng_cleaned = Some(cleaned.clone());
+        }
+        rules::run_all(&rel, &orig, &cleaned, &mask, &mut findings);
+    }
+    match rng_cleaned {
+        Some(cleaned) => rules::check_registry(&cleaned, &mut findings),
+        None => findings.push(rules::Finding {
+            rule: "rng-streams",
+            path: "src/util/rng.rs".to_string(),
+            line: 1,
+            msg: "util/rng.rs not found — the stream registry is gone".to_string(),
+            orig_line: String::new(),
+        }),
+    }
+
+    let allow_path = xtask_dir.join("lint.allow");
+    let entries = match std::fs::read_to_string(&allow_path) {
+        Ok(text) => match allow::parse(&text) {
+            Ok(es) => es,
+            Err(e) => {
+                eprintln!("xtask: {e}");
+                return ExitCode::from(2);
+            }
+        },
+        Err(e) => {
+            eprintln!("xtask: reading {}: {e}", allow_path.display());
+            return ExitCode::from(2);
+        }
+    };
+
+    let (kept, stale) = allow::apply(findings, &entries);
+    for f in &kept {
+        println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.msg);
+    }
+    for s in &stale {
+        println!("{s}");
+    }
+    if kept.is_empty() && stale.is_empty() {
+        println!(
+            "xtask lint: clean ({} files, {} vetted exceptions)",
+            files.len(),
+            entries.len()
+        );
+        ExitCode::SUCCESS
+    } else {
+        eprintln!(
+            "xtask lint: {} finding(s), {} stale allowlist entr{} — see rust/CONTRACTS.md",
+            kept.len(),
+            stale.len(),
+            if stale.len() == 1 { "y" } else { "ies" }
+        );
+        ExitCode::FAILURE
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`.
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if entry.file_type()?.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Forward-slashed path relative to `rust/` (diagnostics read
+/// `src/coordinator/worker.rs:376: …` regardless of platform).
+fn rel_path(rust_dir: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(rust_dir).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}

@@ -1,0 +1,625 @@
+//! The five machine-checked contracts (see ../CONTRACTS.md for the
+//! rationale behind each rule and how to add an allowlist entry):
+//!
+//! * `rng-streams` — every `Pcg64::new` / `.fork` call site names a
+//!   constant from `util::rng::streams`; the registry's reservations must
+//!   be pairwise disjoint.
+//! * `clock-purity` — no `Instant` / `SystemTime` outside
+//!   `coordinator/rt.rs`, `util/logging.rs`, `coordinator/clock.rs`.
+//! * `wire-charge` — envelope byte-size identifiers only appear in `net/`
+//!   and the driver choke points; no arithmetic on `encoded_bytes()`
+//!   outside `net/`.
+//! * `telemetry-purity` — no RNG or clock identifiers inside
+//!   `telemetry/` (recorders observe; they never perturb).
+//! * `panic-budget` — no `unwrap`/`expect`/`panic!`-family in non-test
+//!   code under `coordinator/`, `net/`, `policy/`, `sched/`.
+//!
+//! Rules operate on cleaned text + test mask from [`crate::scan`] and
+//! report against the original line text so allowlist entries can match
+//! expect messages.
+
+use crate::scan;
+
+/// One diagnostic. `orig_line` is the untouched source line (cleaned text
+/// blanks string contents, and allowlist entries match on e.g. the expect
+/// message).
+#[derive(Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+    pub orig_line: String,
+}
+
+fn emit(
+    out: &mut Vec<Finding>,
+    rule: &'static str,
+    path: &str,
+    orig: &[u8],
+    cleaned: &[u8],
+    pos: usize,
+    msg: String,
+) {
+    out.push(Finding {
+        rule,
+        path: path.to_string(),
+        line: scan::line_of(cleaned, pos),
+        msg,
+        orig_line: scan::line_text(orig, pos),
+    });
+}
+
+/// Run every per-file rule.
+pub fn run_all(path: &str, orig: &[u8], cleaned: &[u8], mask: &[bool], out: &mut Vec<Finding>) {
+    rng_streams(path, orig, cleaned, mask, out);
+    clock_purity(path, orig, cleaned, mask, out);
+    wire_charge(path, orig, cleaned, mask, out);
+    telemetry_purity(path, orig, cleaned, mask, out);
+    panic_budget(path, orig, cleaned, mask, out);
+}
+
+// ---------------------------------------------------------------------------
+// rng-streams
+// ---------------------------------------------------------------------------
+
+/// `Pcg64::new(seed, stream)` / `rng.fork(stream)` call sites must take
+/// the stream from the central registry — the argument text has to
+/// mention `streams::`. The registry file itself is exempt (it defines
+/// the constants and the generator).
+pub fn rng_streams(
+    path: &str,
+    orig: &[u8],
+    cleaned: &[u8],
+    mask: &[bool],
+    out: &mut Vec<Finding>,
+) {
+    if path.ends_with("util/rng.rs") {
+        return;
+    }
+    for name in [b"Pcg64::new".as_slice(), b".fork".as_slice()] {
+        let mut start = 0;
+        while let Some(a) = scan::find(cleaned, name, start) {
+            start = a + 1;
+            if name == b".fork" {
+                // Only `.fork(` — not `.forked` or a field access.
+                match cleaned.get(a + name.len()) {
+                    Some(b'(') => {}
+                    _ => continue,
+                }
+            }
+            if mask[a] {
+                continue;
+            }
+            let Some(p) = scan::find(cleaned, b"(", a + name.len()) else {
+                continue;
+            };
+            let (args, _) = scan::call_args(cleaned, p);
+            if scan::find(&args, b"streams::", 0).is_none() {
+                let shown = String::from_utf8_lossy(name).into_owned();
+                emit(
+                    out,
+                    "rng-streams",
+                    path,
+                    orig,
+                    cleaned,
+                    a,
+                    format!(
+                        "{shown} stream argument must come from util::rng::streams \
+                         (magic-number streams break the reservation registry)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Parse the `pub mod streams` registry out of `util/rng.rs` (cleaned
+/// text) and check the declared reservations are pairwise disjoint:
+/// `FOO_BASE` spans `[FOO_BASE, FOO_BASE + FOO_SPAN)` and needs its
+/// `FOO_SPAN` sibling; every other constant reserves exactly one id.
+pub fn check_registry(rng_cleaned: &[u8], out: &mut Vec<Finding>) {
+    const PATH: &str = "src/util/rng.rs";
+    let missing = |out: &mut Vec<Finding>, msg: &str| {
+        out.push(Finding {
+            rule: "rng-streams",
+            path: PATH.to_string(),
+            line: 1,
+            msg: msg.to_string(),
+            orig_line: String::new(),
+        });
+    };
+    let Some(m) = scan::find(rng_cleaned, b"pub mod streams", 0) else {
+        missing(out, "missing `pub mod streams` registry");
+        return;
+    };
+    let Some(open) = scan::find(rng_cleaned, b"{", m) else {
+        missing(out, "malformed `pub mod streams` registry");
+        return;
+    };
+    let mut depth = 1usize;
+    let mut j = open + 1;
+    while j < rng_cleaned.len() && depth > 0 {
+        match rng_cleaned[j] {
+            b'{' => depth += 1,
+            b'}' => depth -= 1,
+            _ => {}
+        }
+        j += 1;
+    }
+    let body = &rng_cleaned[open + 1..j.saturating_sub(1)];
+
+    // Collect `pub const NAME: u64 = <int literal>;` declarations.
+    let mut consts: Vec<(String, u64, usize)> = Vec::new();
+    let mut start = 0;
+    while let Some(a) = scan::find(body, b"pub const ", start) {
+        start = a + 1;
+        let mut k = a + b"pub const ".len();
+        let name_start = k;
+        while k < body.len() && scan::is_ident(body[k]) {
+            k += 1;
+        }
+        let name = String::from_utf8_lossy(&body[name_start..k]).into_owned();
+        let Some(eq) = scan::find(body, b"=", k) else { continue };
+        let Some(semi) = scan::find(body, b";", eq) else { continue };
+        let lit: String = String::from_utf8_lossy(&body[eq + 1..semi])
+            .chars()
+            .filter(|c| c.is_ascii_digit())
+            .collect();
+        let Ok(value) = lit.parse::<u64>() else {
+            missing(out, &format!("registry constant {name} is not an integer literal"));
+            continue;
+        };
+        consts.push((name, value, scan::line_of(rng_cleaned, open + 1 + a)));
+    }
+
+    // Build reservations: (name, base, span, line).
+    let span_of = |base_name: &str| -> Option<u64> {
+        let span_name = format!("{}_SPAN", base_name.strip_suffix("_BASE")?);
+        consts.iter().find(|(n, _, _)| *n == span_name).map(|(_, v, _)| *v)
+    };
+    let mut ranges: Vec<(String, u64, u64, usize)> = Vec::new();
+    for (name, value, line) in &consts {
+        if name.ends_with("_SPAN") {
+            continue;
+        }
+        if name.ends_with("_BASE") {
+            match span_of(name) {
+                Some(span) if span > 0 => ranges.push((name.clone(), *value, span, *line)),
+                Some(_) => out.push(Finding {
+                    rule: "rng-streams",
+                    path: PATH.to_string(),
+                    line: *line,
+                    msg: format!("registry range {name} has zero span"),
+                    orig_line: String::new(),
+                }),
+                None => out.push(Finding {
+                    rule: "rng-streams",
+                    path: PATH.to_string(),
+                    line: *line,
+                    msg: format!(
+                        "registry range {name} has no sibling {}_SPAN",
+                        name.trim_end_matches("_BASE")
+                    ),
+                    orig_line: String::new(),
+                }),
+            }
+        } else {
+            ranges.push((name.clone(), *value, 1, *line));
+        }
+    }
+
+    // Pairwise disjointness.
+    for (i, (na, a, sa, line)) in ranges.iter().enumerate() {
+        for (nb, b, sb, _) in &ranges[i + 1..] {
+            if *a < *b + *sb && *b < *a + *sa {
+                out.push(Finding {
+                    rule: "rng-streams",
+                    path: PATH.to_string(),
+                    line: *line,
+                    msg: format!("stream reservations {na} and {nb} overlap"),
+                    orig_line: String::new(),
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// clock-purity
+// ---------------------------------------------------------------------------
+
+const CLOCK_ALLOWED: [&str; 3] =
+    ["coordinator/rt.rs", "util/logging.rs", "coordinator/clock.rs"];
+
+/// `Instant` / `SystemTime` may only appear where wallclock access is the
+/// module's job. Everything the clock-agnostic `WorkerCore` can reach
+/// receives `now` as a value instead.
+pub fn clock_purity(
+    path: &str,
+    orig: &[u8],
+    cleaned: &[u8],
+    mask: &[bool],
+    out: &mut Vec<Finding>,
+) {
+    if CLOCK_ALLOWED.iter().any(|p| path.ends_with(p)) {
+        return;
+    }
+    for word in [b"Instant".as_slice(), b"SystemTime".as_slice()] {
+        for a in scan::word_hits(cleaned, word) {
+            if !mask[a] {
+                let shown = String::from_utf8_lossy(word).into_owned();
+                emit(
+                    out,
+                    "clock-purity",
+                    path,
+                    orig,
+                    cleaned,
+                    a,
+                    format!(
+                        "{shown} outside rt.rs / logging.rs / clock.rs \
+                         (cores receive `now` as a value; drivers own clocks)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// wire-charge
+// ---------------------------------------------------------------------------
+
+const WIRE_IDENTS: [&[u8]; 8] = [
+    b"encoded_bytes",
+    b"unbatched_bytes",
+    b"task_wire_bytes",
+    b"task_item_bytes",
+    b"note_wire_recharge",
+    b"ENVELOPE_HEADER_BYTES",
+    b"RESULT_BYTES",
+    b"RESULT_ITEM_BYTES",
+];
+
+/// Driver files that may *call* the charging API (but still may not do
+/// arithmetic on `encoded_bytes()` — only `net/` composes byte math).
+const WIRE_ALLOWED: [&str; 4] =
+    ["coordinator/worker.rs", "coordinator/sim.rs", "coordinator/rt.rs", "policy/summary.rs"];
+
+/// Byte-charging identifiers stay inside `net/` plus the driver choke
+/// points; `use` re-exports are exempt; arithmetic directly on an
+/// `encoded_bytes()` call outside `net/` is flagged even in allowed files
+/// (composite charges belong next to the wire format).
+pub fn wire_charge(
+    path: &str,
+    orig: &[u8],
+    cleaned: &[u8],
+    mask: &[bool],
+    out: &mut Vec<Finding>,
+) {
+    let in_net = path.contains("/net/") || path.ends_with("net/mod.rs");
+    let in_allowed = in_net || WIRE_ALLOWED.iter().any(|p| path.ends_with(p));
+    for word in WIRE_IDENTS {
+        for a in scan::word_hits(cleaned, word) {
+            if mask[a] || scan::is_use_line(cleaned, a) {
+                continue;
+            }
+            if !in_allowed {
+                let shown = String::from_utf8_lossy(word).into_owned();
+                emit(
+                    out,
+                    "wire-charge",
+                    path,
+                    orig,
+                    cleaned,
+                    a,
+                    format!(
+                        "byte-charging identifier {shown} outside net/ and the driver \
+                         choke points (all wire charging flows through net::Envelope)"
+                    ),
+                );
+            } else if !in_net && word == b"encoded_bytes" {
+                // Arithmetic adjacency on the call's result.
+                let mut flagged = false;
+                if cleaned.get(a + word.len()) == Some(&b'(') {
+                    let (_, close) = scan::call_args(cleaned, a + word.len());
+                    let mut k = close + 1;
+                    while k < cleaned.len() && cleaned[k].is_ascii_whitespace() {
+                        k += 1;
+                    }
+                    let ch = cleaned.get(k).copied().unwrap_or(b' ');
+                    let arrow = ch == b'-' && cleaned.get(k + 1) == Some(&b'>');
+                    if matches!(ch, b'+' | b'*' | b'%' | b'/') || (ch == b'-' && !arrow) {
+                        flagged = true;
+                    }
+                }
+                if !flagged {
+                    // Walk left across the receiver (`env.`, `self.x.`) and
+                    // whitespace to the token before the whole expression.
+                    let mut b = a;
+                    while b > 0
+                        && (scan::is_ident(cleaned[b - 1])
+                            || cleaned[b - 1] == b'.'
+                            || cleaned[b - 1].is_ascii_whitespace())
+                    {
+                        b -= 1;
+                    }
+                    if b > 0 && matches!(cleaned[b - 1], b'+' | b'-' | b'*' | b'/' | b'%') {
+                        flagged = true;
+                    }
+                }
+                if flagged {
+                    emit(
+                        out,
+                        "wire-charge",
+                        path,
+                        orig,
+                        cleaned,
+                        a,
+                        "arithmetic on encoded_bytes() outside net/ (derive composite \
+                         charges inside the wire module)"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// telemetry-purity
+// ---------------------------------------------------------------------------
+
+const TELEMETRY_DENY: [&[u8]; 4] = [b"Pcg64", b"rng", b"Instant", b"SystemTime"];
+
+/// Recorders observe the event flow; they never draw randomness or read
+/// clocks (stamps arrive as values). Any RNG/clock identifier in
+/// `telemetry/` non-test code breaks the "zero perturbation" guarantee
+/// that keeps DES runs bit-for-bit identical with telemetry on.
+pub fn telemetry_purity(
+    path: &str,
+    orig: &[u8],
+    cleaned: &[u8],
+    mask: &[bool],
+    out: &mut Vec<Finding>,
+) {
+    if !path.contains("/telemetry/") && !path.ends_with("telemetry/mod.rs") {
+        return;
+    }
+    for word in TELEMETRY_DENY {
+        for a in scan::word_hits(cleaned, word) {
+            if !mask[a] {
+                let shown = String::from_utf8_lossy(word).into_owned();
+                emit(
+                    out,
+                    "telemetry-purity",
+                    path,
+                    orig,
+                    cleaned,
+                    a,
+                    format!(
+                        "{shown} inside telemetry (recorders are read-only: no RNG, \
+                         no clocks — stamps arrive as values)"
+                    ),
+                );
+            }
+        }
+    }
+    if let Some(a) = scan::find(cleaned, b"static mut", 0) {
+        if !mask[a] {
+            emit(
+                out,
+                "telemetry-purity",
+                path,
+                orig,
+                cleaned,
+                a,
+                "static mut inside telemetry".to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// panic-budget
+// ---------------------------------------------------------------------------
+
+const PANIC_DIRS: [&str; 4] = ["/coordinator/", "/net/", "/policy/", "/sched/"];
+const PANIC_PATTERNS: [&[u8]; 6] =
+    [b".unwrap()", b".expect(", b"panic!", b"unreachable!", b"todo!", b"unimplemented!"];
+
+/// `unwrap`/`expect`/`panic!`-family is forbidden in non-test code of the
+/// decision-critical subsystems; vetted invariants live in the allowlist
+/// with their justification.
+pub fn panic_budget(
+    path: &str,
+    orig: &[u8],
+    cleaned: &[u8],
+    mask: &[bool],
+    out: &mut Vec<Finding>,
+) {
+    if !PANIC_DIRS.iter().any(|d| path.contains(d)) {
+        return;
+    }
+    for pat in PANIC_PATTERNS {
+        let mut start = 0;
+        while let Some(a) = scan::find(cleaned, pat, start) {
+            start = a + 1;
+            if mask[a] {
+                continue;
+            }
+            // Macro names need a left identifier boundary (`derive_panic!`
+            // is not `panic!`).
+            if pat.ends_with(b"!") && a > 0 && scan::is_ident(cleaned[a - 1]) {
+                continue;
+            }
+            let shown = String::from_utf8_lossy(pat).into_owned();
+            emit(
+                out,
+                "panic-budget",
+                path,
+                orig,
+                cleaned,
+                a,
+                format!(
+                    "{shown} in non-test code (panic budget: convert to a typed error \
+                     or add a vetted lint.allow entry)"
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fixture-based negative tests: each rule must catch a seeded violation.
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> Vec<Finding> {
+        let orig = src.as_bytes();
+        let cleaned = scan::clean(orig);
+        let mask = scan::test_mask(&cleaned);
+        let mut out = Vec::new();
+        run_all(path, orig, &cleaned, &mask, &mut out);
+        out
+    }
+
+    fn rules_of(fs: &[Finding]) -> Vec<&'static str> {
+        fs.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn rng_rule_catches_magic_stream() {
+        let bad = "fn f(seed: u64) { let r = Pcg64::new(seed, 1234); }";
+        let fs = run("src/workload/mod.rs", bad);
+        assert_eq!(rules_of(&fs), ["rng-streams"], "{fs:?}");
+        assert_eq!(fs[0].line, 1);
+
+        let good = "fn f(seed: u64) { let r = Pcg64::new(seed, streams::DES_LINK_JITTER); }";
+        assert!(run("src/workload/mod.rs", good).is_empty());
+
+        let bad_fork = "fn f(r: &mut Pcg64) { let c = r.fork(3); }";
+        assert_eq!(rules_of(&run("src/simnet/mod.rs", bad_fork)), ["rng-streams"]);
+
+        // Test code is exempt, and the registry file itself is exempt.
+        let in_test = "#[cfg(test)]\nmod tests { fn t() { let r = Pcg64::new(1, 0); } }";
+        assert!(run("src/workload/mod.rs", in_test).is_empty());
+        assert!(run("src/util/rng.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn clock_rule_catches_wallclock_outside_drivers() {
+        let bad = "fn f() { let t = Instant::now(); }";
+        let fs = run("src/coordinator/worker.rs", bad);
+        assert_eq!(rules_of(&fs), ["clock-purity"], "{fs:?}");
+
+        // Allowed files and test code pass; string/comment mentions pass.
+        assert!(run("src/coordinator/rt.rs", bad).is_empty());
+        assert!(run("src/coordinator/clock.rs", bad).is_empty());
+        assert!(run("src/util/logging.rs", bad).is_empty());
+        let in_test = "#[test]\nfn t() { let t = Instant::now(); }";
+        assert!(run("src/coordinator/worker.rs", in_test).is_empty());
+        let in_str = "fn f() { let s = \"Instant::now\"; } // Instant";
+        assert!(run("src/coordinator/worker.rs", in_str).is_empty());
+    }
+
+    #[test]
+    fn wire_rule_catches_stray_byte_charging() {
+        let bad = "fn f(e: &Envelope) -> usize { e.encoded_bytes() }";
+        let fs = run("src/sched/batch.rs", bad);
+        assert_eq!(rules_of(&fs), ["wire-charge"], "{fs:?}");
+
+        // In net/ it's the contract itself.
+        assert!(run("src/net/mod.rs", bad).is_empty());
+        // Driver choke points may call it...
+        assert!(run("src/coordinator/worker.rs", bad).is_empty());
+        // ...but not do arithmetic on it.
+        let arith = "fn f(e: &Envelope) -> usize { e.encoded_bytes() + 4 }";
+        assert_eq!(rules_of(&run("src/coordinator/worker.rs", arith)), ["wire-charge"]);
+        let arith_left = "fn f(e: &Envelope) -> usize { 4 + e.encoded_bytes() }";
+        assert_eq!(rules_of(&run("src/coordinator/sim.rs", arith_left)), ["wire-charge"]);
+        // `->` after the call is a return type, not subtraction.
+        let method = "fn g(e: &Envelope) { let f = |x: usize| e.encoded_bytes() -> usize; }";
+        assert!(run("src/coordinator/worker.rs", method).is_empty());
+        // Re-export lines are exempt everywhere.
+        let reexport = "pub use crate::net::{Envelope, ENVELOPE_HEADER_BYTES, RESULT_BYTES};";
+        assert!(run("src/coordinator/mod.rs", reexport).is_empty());
+    }
+
+    #[test]
+    fn telemetry_rule_catches_rng_and_clock() {
+        let bad = "fn f(rng: &mut Pcg64) { rng.next_u64(); }";
+        let fs = run("src/telemetry/mod.rs", bad);
+        assert!(
+            fs.iter().all(|f| f.rule == "telemetry-purity") && !fs.is_empty(),
+            "{fs:?}"
+        );
+        let clocky = "fn f() { let t = Instant::now(); }";
+        assert!(!run("src/telemetry/metrics.rs", clocky).is_empty());
+        // Other modules are out of scope for this rule; telemetry test
+        // code is exempt.
+        assert!(run("src/routing/mod.rs", bad)
+            .iter()
+            .all(|f| f.rule != "telemetry-purity"));
+        let in_test = "#[cfg(test)]\nmod tests { fn t(rng: &mut Pcg64) {} }";
+        assert!(run("src/telemetry/mod.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn panic_rule_catches_unwraps_in_covered_dirs() {
+        let bad = "fn f(x: Option<u32>) -> u32 { x.unwrap() }";
+        let fs = run("src/policy/alg2.rs", bad);
+        assert_eq!(rules_of(&fs), ["panic-budget"], "{fs:?}");
+        for pat_src in [
+            "fn f(x: Option<u32>) -> u32 { x.expect(\"set\") }",
+            "fn f() { panic!(\"boom\"); }",
+            "fn f() { unreachable!() }",
+            "fn f() { todo!() }",
+        ] {
+            assert_eq!(rules_of(&run("src/net/mod.rs", pat_src)), ["panic-budget"], "{pat_src}");
+        }
+        // Out-of-scope dirs and test code are exempt.
+        assert!(run("src/simnet/transport.rs", bad).is_empty());
+        let in_test = "#[cfg(test)]\nmod tests { fn t() { Some(1).unwrap(); } }";
+        assert!(run("src/sched/batch.rs", in_test).is_empty());
+    }
+
+    #[test]
+    fn registry_check_catches_overlaps_and_missing_spans() {
+        let good = b"pub mod streams {\n\
+            pub const A_BASE: u64 = 100;\n\
+            pub const A_SPAN: u64 = 900;\n\
+            pub const B: u64 = 1000;\n\
+        }";
+        let mut out = Vec::new();
+        check_registry(good, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+
+        // B = 999 falls inside [100, 1000).
+        let overlap = b"pub mod streams {\n\
+            pub const A_BASE: u64 = 100;\n\
+            pub const A_SPAN: u64 = 900;\n\
+            pub const B: u64 = 999;\n\
+        }";
+        let mut out = Vec::new();
+        check_registry(overlap, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].msg.contains("overlap"), "{}", out[0].msg);
+
+        let no_span = b"pub mod streams {\n\
+            pub const A_BASE: u64 = 100;\n\
+        }";
+        let mut out = Vec::new();
+        check_registry(no_span, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert!(out[0].msg.contains("A_SPAN"), "{}", out[0].msg);
+
+        let mut out = Vec::new();
+        check_registry(b"fn nothing_here() {}", &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].msg.contains("missing"), "{}", out[0].msg);
+    }
+}

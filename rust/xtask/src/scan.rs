@@ -1,0 +1,316 @@
+//! Byte-level source scanning: comment/string stripping and test masking.
+//!
+//! The lint does not parse Rust — it runs textual rules over a *cleaned*
+//! copy of each file in which comments and literal contents are blanked
+//! out (offsets and newlines preserved, so positions map 1:1 back to the
+//! original), plus a mask marking `#[cfg(test)]` / `#[test]` item bodies.
+//! This is deliberately dependency-free: the offline build image cannot
+//! fetch `syn`, and the contracts being checked are all expressible as
+//! identifier/call-site patterns.
+
+#[inline]
+pub fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// First occurrence of `needle` in `haystack[from..]`, as an absolute index.
+pub fn find(haystack: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || from > haystack.len() {
+        return None;
+    }
+    haystack[from..]
+        .windows(needle.len())
+        .position(|w| w == needle)
+        .map(|p| p + from)
+}
+
+fn blank(out: &mut [u8], a: usize, b: usize) {
+    let hi = b.min(out.len());
+    for slot in out.iter_mut().take(hi).skip(a) {
+        if *slot != b'\n' {
+            *slot = b' ';
+        }
+    }
+}
+
+/// Blank comments (fully, delimiters included) and string/char literal
+/// contents (keeping the quotes), preserving byte offsets and newlines.
+/// Handles nested block comments, raw strings (`r"…"`, `r#"…"#`), byte
+/// strings, escapes, and the char-literal/lifetime ambiguity.
+pub fn clean(src: &[u8]) -> Vec<u8> {
+    let mut out = src.to_vec();
+    let n = src.len();
+    let mut i = 0;
+    while i < n {
+        let c = src[i];
+        let nxt = if i + 1 < n { src[i + 1] } else { 0 };
+        if c == b'/' && nxt == b'/' {
+            let j = find(src, b"\n", i).unwrap_or(n);
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'/' && nxt == b'*' {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if src[j..].starts_with(b"/*") {
+                    depth += 1;
+                    j += 2;
+                } else if src[j..].starts_with(b"*/") {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'r' && (nxt == b'"' || nxt == b'#') && (i == 0 || !is_ident(src[i - 1]))
+        {
+            // Raw string: r"…" or r#"…"# (any number of hashes).
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while j < n && src[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && src[j] == b'"' {
+                let mut close = vec![b'#'; hashes + 1];
+                close[0] = b'"';
+                let k = match find(src, &close, j + 1) {
+                    Some(k) => k + close.len(),
+                    None => n,
+                };
+                blank(&mut out, j + 1, (k - 1).saturating_sub(hashes));
+                i = k;
+            } else {
+                i += 1; // `r#` that wasn't a raw string (raw identifier)
+            }
+        } else if c == b'b' && nxt == b'"' && (i == 0 || !is_ident(src[i - 1])) {
+            i += 1; // byte string: handled as a plain string next iteration
+        } else if c == b'"' {
+            let mut j = i + 1;
+            while j < n {
+                if src[j] == b'\\' {
+                    j += 2;
+                } else if src[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = j.min(n);
+            blank(&mut out, i + 1, j.saturating_sub(1));
+            i = j;
+        } else if c == b'\'' {
+            if nxt == b'\\' {
+                // Escaped char literal: '\n', '\u{41}', '\x7f', …
+                let mut j = i + 3;
+                while j < n && src[j] != b'\'' {
+                    j += 1;
+                }
+                j = (j + 1).min(n);
+                blank(&mut out, i + 1, j.saturating_sub(1));
+                i = j;
+            } else if i + 2 < n && src[i + 2] == b'\'' && nxt != b'\'' {
+                // Plain char literal 'x'.
+                blank(&mut out, i + 1, i + 2);
+                i += 3;
+            } else {
+                i += 1; // lifetime
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Mark the byte ranges of `#[cfg(test)]` / `#[test]` items: from the
+/// attribute to the matching close brace of the first `{` after it.
+/// Operates on cleaned text so braces in strings/comments don't confuse
+/// the matcher.
+pub fn test_mask(cleaned: &[u8]) -> Vec<bool> {
+    let n = cleaned.len();
+    let mut mask = vec![false; n];
+    for pat in [b"#[cfg(test)]".as_slice(), b"#[test]".as_slice()] {
+        let mut start = 0;
+        while let Some(a) = find(cleaned, pat, start) {
+            start = a + 1;
+            let Some(open) = find(cleaned, b"{", a + pat.len()) else {
+                continue;
+            };
+            let mut depth = 1usize;
+            let mut j = open + 1;
+            while j < n && depth > 0 {
+                match cleaned[j] {
+                    b'{' => depth += 1,
+                    b'}' => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
+            }
+            for slot in mask.iter_mut().take(j).skip(a) {
+                *slot = true;
+            }
+        }
+    }
+    mask
+}
+
+/// 1-indexed line number of byte position `pos`.
+pub fn line_of(src: &[u8], pos: usize) -> usize {
+    src[..pos.min(src.len())].iter().filter(|&&b| b == b'\n').count() + 1
+}
+
+/// Full text of the line containing `pos`.
+pub fn line_text(src: &[u8], pos: usize) -> String {
+    let pos = pos.min(src.len());
+    let a = src[..pos].iter().rposition(|&b| b == b'\n').map(|p| p + 1).unwrap_or(0);
+    let b = find(src, b"\n", pos).unwrap_or(src.len());
+    String::from_utf8_lossy(&src[a..b]).into_owned()
+}
+
+/// Whole-word occurrences of `word` (identifier-boundary on both sides).
+pub fn word_hits(cleaned: &[u8], word: &[u8]) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let mut start = 0;
+    while let Some(a) = find(cleaned, word, start) {
+        start = a + 1;
+        let before_ok = a == 0 || !is_ident(cleaned[a - 1]);
+        let after = a + word.len();
+        let after_ok = after >= cleaned.len() || !is_ident(cleaned[after]);
+        if before_ok && after_ok {
+            hits.push(a);
+        }
+    }
+    hits
+}
+
+/// Balanced-paren argument text starting at the `(` at `open_paren`;
+/// returns (args, index of the closing paren).
+pub fn call_args(cleaned: &[u8], open_paren: usize) -> (Vec<u8>, usize) {
+    let n = cleaned.len();
+    let mut depth = 0usize;
+    let mut j = open_paren;
+    while j < n {
+        match cleaned[j] {
+            b'(' => depth += 1,
+            b')' => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return (cleaned[open_paren + 1..j].to_vec(), j);
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    (cleaned[(open_paren + 1).min(n)..].to_vec(), n.saturating_sub(1))
+}
+
+/// Is `pos` on a `use` / `pub use` line? (Re-exports of charged constants
+/// are fine; only arithmetic/usage is charged.)
+pub fn is_use_line(cleaned: &[u8], pos: usize) -> bool {
+    let t = line_text(cleaned, pos);
+    let t = t.trim_start();
+    t.starts_with("use ") || t.starts_with("pub use ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(bytes: &[u8]) -> String {
+        String::from_utf8_lossy(bytes).into_owned()
+    }
+
+    #[test]
+    fn comments_are_fully_blanked() {
+        let c = clean(b"let x = 1; // Instant::now()\nlet y = 2;");
+        assert!(!s(&c).contains("Instant"));
+        assert!(s(&c).contains("let y = 2;"));
+        let c = clean(b"/* outer /* nested Instant */ still comment */ let z = 3;");
+        assert!(!s(&c).contains("Instant"));
+        assert!(s(&c).contains("let z = 3;"));
+    }
+
+    #[test]
+    fn string_contents_blanked_quotes_kept() {
+        let c = clean(br#"let m = "Instant::now inside"; let k = 1;"#);
+        let cs = s(&c);
+        assert!(!cs.contains("Instant"));
+        assert!(cs.contains('"'));
+        assert!(cs.contains("let k = 1;"));
+        // Escaped quotes don't end the literal early.
+        let c = clean(br#"let m = "a\"Instant\"b"; let k = 1;"#);
+        assert!(!s(&c).contains("Instant"));
+        // Raw strings too.
+        let c = clean(br###"let m = r#"Instant "quoted" body"#; after"###);
+        let cs = s(&c);
+        assert!(!cs.contains("Instant"), "{cs}");
+        assert!(cs.contains("after"));
+    }
+
+    #[test]
+    fn char_literals_blanked_lifetimes_kept() {
+        let c = clean(b"let a = 'Z'; fn f<'a>(x: &'a str) {} let q = '\\n';");
+        let cs = s(&c);
+        assert!(cs.contains("<'a>"), "lifetime untouched: {cs}");
+        assert!(cs.contains("&'a str"));
+        assert!(!cs.contains('Z'), "char literal contents blanked: {cs}");
+        assert!(!cs.contains("\\n"), "escaped literal blanked: {cs}");
+    }
+
+    #[test]
+    fn offsets_and_newlines_survive() {
+        let src = b"a\n\"two\nlines\"\nb // c\nd";
+        let c = clean(src);
+        assert_eq!(c.len(), src.len());
+        assert_eq!(
+            c.iter().filter(|&&b| b == b'\n').count(),
+            src.iter().filter(|&&b| b == b'\n').count()
+        );
+    }
+
+    #[test]
+    fn test_mask_covers_test_items_only() {
+        let src = b"fn real() { x(); }\n#[cfg(test)]\nmod tests {\n fn t() { y(); }\n}\nfn after() {}";
+        let cleaned = clean(src);
+        let mask = test_mask(&cleaned);
+        let y = find(src, b"y();", 0).unwrap();
+        let x = find(src, b"x();", 0).unwrap();
+        let after = find(src, b"after", 0).unwrap();
+        assert!(mask[y]);
+        assert!(!mask[x]);
+        assert!(!mask[after]);
+    }
+
+    #[test]
+    fn word_hits_respects_boundaries() {
+        let src = b"rng rngs my_rng (rng) rng.next";
+        let hits = word_hits(src, b"rng");
+        assert_eq!(hits.len(), 3, "{hits:?}");
+    }
+
+    #[test]
+    fn call_args_balances_nesting() {
+        let src = b"f(a, g(b, c), d) rest";
+        let open = find(src, b"(", 0).unwrap();
+        let (args, close) = call_args(src, open);
+        assert_eq!(s(&args), "a, g(b, c), d");
+        assert_eq!(src[close], b')');
+        assert_eq!(close, src.len() - 6);
+    }
+
+    #[test]
+    fn line_helpers() {
+        let src = b"one\ntwo three\nfour";
+        let pos = find(src, b"three", 0).unwrap();
+        assert_eq!(line_of(src, pos), 2);
+        assert_eq!(line_text(src, pos), "two three");
+        assert!(is_use_line(b"  use crate::net::RESULT_BYTES;", 10));
+        assert!(is_use_line(b"pub use crate::net::Envelope;", 10));
+        assert!(!is_use_line(b"let x = RESULT_BYTES;", 10));
+    }
+}
