@@ -1,0 +1,206 @@
+//! Missed-beat health checking over the gossip heartbeat.
+//!
+//! Every summary minted with the control plane on carries a monotone
+//! `beat` sequence number. The checker tracks, per peer it has *heard
+//! from*, the freshest beat and when it arrived; a peer is declared dead
+//! only after `timeout_beats` expected gossip intervals pass with no
+//! strictly newer beat. Peers never heard from are never judged — the
+//! gossip horizon (who a node exchanges summaries with) bounds who it
+//! may declare dead.
+//!
+//! Each peer's deadline is stretched by a one-shot jitter factor
+//! `1 + jitter_frac · u`, `u ~ U[0,1)` drawn from the registered
+//! [`streams::CLUSTER_HEALTH_BASE`] stream at first observation — one
+//! draw per (checker, peer), in observation order, so DES replays are
+//! bit-for-bit and simultaneous expiries desynchronize instead of
+//! stampeding the autoscaler.
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::{streams, Pcg64};
+
+#[derive(Debug, Clone, Copy)]
+struct PeerBeat {
+    /// Freshest beat sequence number seen.
+    beat: u64,
+    /// When it arrived (driver time, seconds).
+    seen_s: f64,
+    /// One-shot deadline stretch, `>= 1`.
+    deadline_mult: f64,
+    /// Already declared dead (suppresses repeat declarations until a
+    /// fresh beat revives the peer).
+    dead: bool,
+}
+
+/// Per-node missed-beat detector (see the module docs for the contract).
+#[derive(Debug, Clone)]
+pub struct HealthChecker {
+    /// Expected beat spacing (the run's gossip interval), seconds.
+    interval_s: f64,
+    /// Missed-beat tolerance in expected intervals.
+    timeout_beats: f64,
+    /// Fractional deadline jitter.
+    jitter_frac: f64,
+    rng: Pcg64,
+    peers: BTreeMap<usize, PeerBeat>,
+}
+
+impl HealthChecker {
+    /// `id` is the hosting node — it selects the checker's dedicated
+    /// stream in the RNG registry.
+    pub fn new(
+        seed: u64,
+        id: usize,
+        interval_s: f64,
+        timeout_beats: f64,
+        jitter_frac: f64,
+    ) -> HealthChecker {
+        HealthChecker {
+            interval_s,
+            timeout_beats,
+            jitter_frac,
+            rng: Pcg64::new(seed, streams::CLUSTER_HEALTH_BASE + id as u64),
+            peers: BTreeMap::new(),
+        }
+    }
+
+    /// Feed one gossip receipt. `beat = None` (control plane off at the
+    /// sender, or a pre-upgrade summary) is ignored. Only a strictly
+    /// newer beat refreshes liveness — a stale duplicate re-delivered by
+    /// piggybacking cannot keep a dead sender alive.
+    pub fn observe(&mut self, now: f64, peer: usize, beat: Option<u64>) {
+        let Some(beat) = beat else { return };
+        match self.peers.get_mut(&peer) {
+            Some(p) => {
+                if beat > p.beat {
+                    p.beat = beat;
+                    p.seen_s = now;
+                    p.dead = false;
+                }
+            }
+            None => {
+                let deadline_mult = 1.0 + self.jitter_frac * self.rng.f64();
+                self.peers.insert(peer, PeerBeat { beat, seen_s: now, deadline_mult, dead: false });
+            }
+        }
+    }
+
+    /// Stop tracking a peer (it was retired on purpose — its silence is
+    /// not evidence).
+    pub fn forget(&mut self, peer: usize) {
+        self.peers.remove(&peer);
+    }
+
+    /// Sweep all tracked peers; returns the peers *newly* declared dead
+    /// this check, in ascending id order.
+    pub fn check(&mut self, now: f64) -> Vec<usize> {
+        let mut newly_dead = Vec::new();
+        for (&peer, p) in self.peers.iter_mut() {
+            if p.dead {
+                continue;
+            }
+            let deadline = self.interval_s * self.timeout_beats * p.deadline_mult;
+            if now - p.seen_s > deadline {
+                p.dead = true;
+                newly_dead.push(peer);
+            }
+        }
+        newly_dead
+    }
+
+    /// Whether `peer` is currently considered dead.
+    pub fn is_dead(&self, peer: usize) -> bool {
+        self.peers.get(&peer).is_some_and(|p| p.dead)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn checker() -> HealthChecker {
+        // interval 0.1 s, 3 missed beats, up to +20% jitter.
+        HealthChecker::new(7, 0, 0.1, 3.0, 0.2)
+    }
+
+    #[test]
+    fn jittery_but_alive_is_never_declared_dead() {
+        let mut hc = checker();
+        // Beats arrive with heavy arrival jitter — anywhere from 0.02 s
+        // to 0.19 s apart (mean 0.1 s) — but each one is fresh. The
+        // deadline is >= 0.3 s, so a live-but-jittery peer must survive
+        // every sweep.
+        let gaps = [0.10, 0.19, 0.02, 0.15, 0.08, 0.18, 0.05, 0.19, 0.11, 0.16];
+        let mut now = 0.0;
+        hc.observe(now, 3, Some(0));
+        for (i, gap) in gaps.iter().enumerate() {
+            now += gap;
+            assert!(hc.check(now).is_empty(), "live peer declared dead at beat {i}");
+            hc.observe(now, 3, Some(i as u64 + 1));
+            assert!(!hc.is_dead(3));
+        }
+    }
+
+    #[test]
+    fn silent_peer_is_declared_dead_once() {
+        let mut hc = checker();
+        hc.observe(0.0, 3, Some(0));
+        hc.observe(0.0, 5, Some(0));
+        hc.observe(0.05, 5, Some(1)); // peer 5 keeps beating
+        assert!(hc.check(0.2).is_empty(), "before the deadline");
+        // Keep 5 alive past 3's deadline (jitter caps it at 0.36 s).
+        hc.observe(0.3, 5, Some(2));
+        let dead = hc.check(0.4);
+        assert_eq!(dead, vec![3], "only the silent peer dies");
+        assert!(hc.is_dead(3));
+        assert!(!hc.is_dead(5));
+        assert!(hc.check(0.9).contains(&5), "then 5 goes silent too");
+        assert!(hc.check(5.0).is_empty(), "declarations fire once");
+    }
+
+    #[test]
+    fn stale_duplicate_beats_do_not_revive() {
+        let mut hc = checker();
+        hc.observe(0.0, 2, Some(7));
+        hc.observe(0.2, 2, Some(7)); // piggybacked duplicate, same beat
+        hc.observe(0.35, 2, Some(7));
+        assert_eq!(hc.check(0.4), vec![2], "stale beats never refreshed liveness");
+        // A strictly fresh beat revives.
+        hc.observe(0.45, 2, Some(8));
+        assert!(!hc.is_dead(2));
+        assert!(hc.check(0.5).is_empty());
+    }
+
+    #[test]
+    fn unheard_and_beatless_peers_are_never_judged() {
+        let mut hc = checker();
+        hc.observe(0.0, 4, None); // control plane off at the sender
+        assert!(hc.check(100.0).is_empty());
+        assert!(!hc.is_dead(4));
+        assert!(!hc.is_dead(9), "never observed, never judged");
+    }
+
+    #[test]
+    fn forget_drops_tracking() {
+        let mut hc = checker();
+        hc.observe(0.0, 3, Some(0));
+        hc.forget(3);
+        assert!(hc.check(10.0).is_empty(), "retired on purpose — silence is not evidence");
+    }
+
+    #[test]
+    fn deterministic_across_replays() {
+        let run = || {
+            let mut hc = checker();
+            hc.observe(0.0, 1, Some(0));
+            hc.observe(0.0, 2, Some(0));
+            hc.observe(0.31, 1, Some(1));
+            let mut log = Vec::new();
+            for i in 1..=20 {
+                log.extend(hc.check(0.05 * i as f64));
+            }
+            log
+        };
+        assert_eq!(run(), run(), "same seed, same declarations");
+    }
+}

@@ -1,0 +1,252 @@
+//! Elastic fleet control plane: heartbeats, health scoring, autoscaling,
+//! and live re-layering (ROADMAP item 2 — churn promoted from a scripted
+//! timeline to a closed control loop).
+//!
+//! The paper's MDI-Exit framework adapts *policies* to whatever devices
+//! are reachable; this module adapts the *fleet itself*. Three parts ride
+//! the seams the repo already has:
+//!
+//! * [`HealthChecker`] — missed-beat detection fed by the
+//!   [`NeighborSummary`](crate::policy::NeighborSummary) gossip already on
+//!   the wire. When the control plane is on, every minted summary carries
+//!   a monotone heartbeat sequence number (`beat`, +8 B on the wire, only
+//!   charged when stamped); the checker declares a peer dead only after
+//!   `timeout_beats` expected intervals pass with no fresh beat.
+//! * [`ScoreWeights`] / [`retire_candidate`] — a composite node scorer
+//!   ranking workers on cpu (gossiped Γ), queue (gossiped I), and link
+//!   (receiver-local transfer estimate) weights.
+//! * [`Autoscaler`] — spawns or retires workers off aggregate queue
+//!   occupancy, with a thrash-preventing cooldown between load-driven
+//!   decisions.
+//!
+//! ## Events in, actions out
+//!
+//! The control loop is hosted by the clock-agnostic
+//! [`WorkerCore`](crate::coordinator::WorkerCore): gossip receipt feeds
+//! [`HealthChecker::observe`], a periodic cluster tick runs the checker
+//! and (on the controller node — the lowest-id source) the autoscaler,
+//! and every decision leaves the core as an `Action::Scale` for the
+//! driver to apply. The DES and realtime drivers therefore run the
+//! *identical* control loop; they differ only in who owns the clock and
+//! how a fleet change is fanned out (one event vs. a shared scale bus).
+//!
+//! Applying a scale action reuses the churn machinery end to end: the
+//! target gets a join/leave transition (a retiring worker drains its
+//! queues and re-homes in-flight tasks — nothing is lost or duplicated),
+//! and then the fleet **re-layers**: the driver rebuilds the routing
+//! table over the active fleet
+//! ([`RoutingTable::build_active`](crate::routing::RoutingTable::build_active))
+//! and every core re-derives its next-hop row and
+//! [`Role`](crate::routing::Role) from the
+//! [`Placement`](crate::routing::Placement). In-flight tasks finish on
+//! the layout they started on — they stay where they are queued and only
+//! their *results* ride the new routes.
+//!
+//! ## Determinism contract
+//!
+//! * The only randomness is the health checker's per-peer deadline
+//!   jitter, drawn from the dedicated registry stream
+//!   [`streams::CLUSTER_HEALTH_BASE`](crate::util::rng::streams) ` + id`
+//!   — one draw per (checker, peer), at first observation, in
+//!   observation order. Enabling the control plane never perturbs the
+//!   admission, offload, arrival, or link-jitter streams, and DES runs
+//!   with it enabled are bit-for-bit reproducible across repeats.
+//! * `cluster/` obeys the repo's clock-purity rule: no `Instant` /
+//!   `SystemTime` — `now` always arrives as a value from the driver —
+//!   and the panic-budget rule (no `unwrap`/`expect` in non-test code);
+//!   both are enforced by `cargo xtask lint`.
+//! * Default config (`enabled = false`) builds no runtime state, stamps
+//!   no heartbeat, and keeps the seed's wire accounting bit-for-bit.
+//!
+//! ## Cooldown semantics
+//!
+//! Load-driven decisions (occupancy crossing the scale-up or scale-down
+//! threshold) are rate-limited: after any such decision the autoscaler
+//! refuses further load-driven action for `cooldown_s` simulated/wall
+//! seconds, so an occupancy signal oscillating around a threshold cannot
+//! thrash the fleet. Failure-driven retirement (a peer declared dead by
+//! the health checker) bypasses the cooldown — dead is dead — but does
+//! reset it, so a failover is not immediately followed by a load
+//! decision made on a stale occupancy signal.
+
+mod health;
+mod scale;
+mod score;
+
+pub use health::HealthChecker;
+pub use scale::{Autoscaler, ScaleDecision, ScaleDirection, ScaleReason};
+pub use score::{retire_candidate, spawn_candidate, ScoreWeights};
+
+use anyhow::{bail, Result};
+
+/// `[cluster]` experiment-config section. Defaults keep the control
+/// plane off (the seed fleet: everything active, churn purely scripted).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Master switch. Off: no heartbeats, no runtime state, seed wire
+    /// accounting bit-for-bit.
+    pub enabled: bool,
+    /// Control-loop cadence, seconds (health check + autoscaler decide).
+    pub check_interval_s: f64,
+    /// Missed-beat tolerance: a peer is dead after this many expected
+    /// gossip intervals pass without a fresh beat (before jitter).
+    pub timeout_beats: f64,
+    /// Fractional deadline jitter: each peer's death deadline is
+    /// multiplied by `1 + jitter_frac * u`, `u ~ U[0,1)` from the
+    /// registered health stream.
+    pub jitter_frac: f64,
+    /// Composite scorer weights (cpu / queue / link).
+    pub weights: ScoreWeights,
+    /// Mean queued tasks per active worker above which the controller
+    /// spawns a parked worker.
+    pub scale_up_occupancy: f64,
+    /// Mean queued tasks per active worker below which the controller
+    /// retires the worst-scored active worker.
+    pub scale_down_occupancy: f64,
+    /// Minimum seconds between load-driven scale decisions.
+    pub cooldown_s: f64,
+    /// Fleet floor (active nodes, sources included) — scale-down stops
+    /// here.
+    pub min_workers: usize,
+    /// Fleet ceiling (active nodes) — scale-up stops here. Clamped to
+    /// the topology size at run time.
+    pub max_workers: usize,
+    /// How many nodes start active (sources always do; the lowest-id
+    /// non-sources fill the remainder). `None`: the whole topology.
+    pub initial_workers: Option<usize>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig {
+            enabled: false,
+            check_interval_s: 0.5,
+            timeout_beats: 3.0,
+            jitter_frac: 0.2,
+            weights: ScoreWeights::default(),
+            scale_up_occupancy: 3.0,
+            scale_down_occupancy: 0.5,
+            cooldown_s: 1.0,
+            min_workers: 1,
+            max_workers: usize::MAX,
+            initial_workers: None,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if !self.check_interval_s.is_finite() || self.check_interval_s <= 0.0 {
+            bail!("cluster check_interval_s must be positive, got {}", self.check_interval_s);
+        }
+        if !self.timeout_beats.is_finite() || self.timeout_beats < 1.0 {
+            bail!("cluster timeout_beats must be >= 1, got {}", self.timeout_beats);
+        }
+        if !self.jitter_frac.is_finite() || !(0.0..=1.0).contains(&self.jitter_frac) {
+            bail!("cluster jitter_frac must be in [0, 1], got {}", self.jitter_frac);
+        }
+        self.weights.validate()?;
+        if !self.scale_up_occupancy.is_finite()
+            || !self.scale_down_occupancy.is_finite()
+            || self.scale_down_occupancy < 0.0
+            || self.scale_up_occupancy <= self.scale_down_occupancy
+        {
+            bail!(
+                "cluster occupancy thresholds need 0 <= scale_down ({}) < scale_up ({})",
+                self.scale_down_occupancy,
+                self.scale_up_occupancy
+            );
+        }
+        if !self.cooldown_s.is_finite() || self.cooldown_s < 0.0 {
+            bail!("cluster cooldown_s must be >= 0, got {}", self.cooldown_s);
+        }
+        if self.min_workers == 0 || self.min_workers > self.max_workers {
+            bail!(
+                "cluster fleet bounds need 1 <= min_workers ({}) <= max_workers ({})",
+                self.min_workers,
+                self.max_workers
+            );
+        }
+        if self.initial_workers == Some(0) {
+            bail!("cluster initial_workers must be >= 1 when set");
+        }
+        Ok(())
+    }
+}
+
+/// Nodes that start parked under `initial_workers`: sources always start
+/// active (admission must be covered from t=0), then the lowest-id
+/// non-sources fill the remaining budget; everyone else starts parked,
+/// available for the autoscaler to wake. Shared by both drivers so the DES
+/// and realtime fleets boot identically.
+pub fn initial_parked(initial_workers: Option<usize>, sources: &[usize], n: usize) -> Vec<usize> {
+    let Some(k) = initial_workers else {
+        return Vec::new();
+    };
+    let mut budget = k.saturating_sub(sources.len());
+    let mut parked = Vec::new();
+    for node in 0..n {
+        if sources.contains(&node) {
+            continue;
+        }
+        if budget > 0 {
+            budget -= 1;
+        } else {
+            parked.push(node);
+        }
+    }
+    parked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_parking_keeps_sources_and_fills_lowest_ids() {
+        // 6 nodes, sources {0, 3}, budget 3: source slots consume 2, node 1
+        // fills the last; 2, 4, 5 park.
+        assert_eq!(initial_parked(Some(3), &[0, 3], 6), vec![2, 4, 5]);
+        // Budget below the source count still keeps every source up.
+        assert_eq!(initial_parked(Some(1), &[0, 3], 6), vec![1, 2, 4, 5]);
+        // No budget set: nobody parks.
+        assert_eq!(initial_parked(None, &[0], 4), Vec::<usize>::new());
+        // Budget covers the fleet: nobody parks.
+        assert_eq!(initial_parked(Some(9), &[0], 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn default_is_off_and_valid() {
+        let c = ClusterConfig::default();
+        assert!(!c.enabled);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn disabled_skips_field_validation() {
+        let c = ClusterConfig { check_interval_s: -1.0, ..ClusterConfig::default() };
+        assert!(c.validate().is_ok(), "off means off — fields are inert");
+    }
+
+    #[test]
+    fn enabled_validation_rejects_bad_knobs() {
+        let on = ClusterConfig { enabled: true, ..ClusterConfig::default() };
+        assert!(on.validate().is_ok());
+        for bad in [
+            ClusterConfig { check_interval_s: 0.0, ..on.clone() },
+            ClusterConfig { timeout_beats: 0.5, ..on.clone() },
+            ClusterConfig { jitter_frac: 1.5, ..on.clone() },
+            ClusterConfig { scale_up_occupancy: 0.4, ..on.clone() },
+            ClusterConfig { scale_down_occupancy: -0.1, ..on.clone() },
+            ClusterConfig { cooldown_s: f64::NAN, ..on.clone() },
+            ClusterConfig { min_workers: 0, ..on.clone() },
+            ClusterConfig { min_workers: 5, max_workers: 3, ..on.clone() },
+            ClusterConfig { initial_workers: Some(0), ..on.clone() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+        }
+    }
+}

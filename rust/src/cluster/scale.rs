@@ -1,0 +1,155 @@
+//! Occupancy-driven autoscaling with thrash-preventing cooldowns.
+//!
+//! The autoscaler owns exactly one decision: given the controller's
+//! aggregate occupancy signal (mean queued tasks per active worker,
+//! over the gossip horizon), should the fleet grow, shrink, or hold?
+//! Target selection — *which* node to wake or retire — belongs to the
+//! scorer ([`super::score`]); applying the decision belongs to the
+//! drivers. The state here is one timestamp: the last decision time,
+//! enforcing the cooldown documented in the module docs of
+//! [`crate::cluster`].
+
+/// Grow or shrink — the autoscaler's whole vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDirection {
+    Up,
+    Down,
+}
+
+/// Why a fleet change was ordered (telemetry and the run report keep
+/// the distinction: load decisions are tunable, failures are not).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleReason {
+    /// Occupancy crossed a threshold.
+    Load,
+    /// The health checker declared the worker dead.
+    Failure,
+}
+
+impl ScaleReason {
+    pub fn label(self) -> &'static str {
+        match self {
+            ScaleReason::Load => "load",
+            ScaleReason::Failure => "failure",
+        }
+    }
+}
+
+/// A concrete fleet change: `join = true` wakes a parked worker,
+/// `join = false` retires an active one. Emitted by the controller core
+/// as an `Action::Scale`; both drivers apply it through the same churn +
+/// re-layer path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScaleDecision {
+    pub worker: usize,
+    pub join: bool,
+    pub reason: ScaleReason,
+}
+
+/// Threshold-and-cooldown scaling policy (see module docs).
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    up_occupancy: f64,
+    down_occupancy: f64,
+    cooldown_s: f64,
+    min_workers: usize,
+    max_workers: usize,
+    last_action_s: f64,
+}
+
+impl Autoscaler {
+    pub fn new(cfg: &super::ClusterConfig) -> Autoscaler {
+        Autoscaler {
+            up_occupancy: cfg.scale_up_occupancy,
+            down_occupancy: cfg.scale_down_occupancy,
+            cooldown_s: cfg.cooldown_s,
+            min_workers: cfg.min_workers,
+            max_workers: cfg.max_workers,
+            last_action_s: f64::NEG_INFINITY,
+        }
+    }
+
+    /// One load-driven decision. `active` counts every active node
+    /// (sources included); `can_grow` / `can_shrink` tell the policy
+    /// whether a concrete target exists (a parked node to wake, an
+    /// eligible worker to retire). Returns `None` inside the cooldown
+    /// window, inside the occupancy deadband, or at a fleet bound.
+    pub fn decide(
+        &mut self,
+        now: f64,
+        occupancy: f64,
+        active: usize,
+        can_grow: bool,
+        can_shrink: bool,
+    ) -> Option<ScaleDirection> {
+        if now - self.last_action_s < self.cooldown_s {
+            return None;
+        }
+        let dir = if occupancy >= self.up_occupancy && active < self.max_workers && can_grow {
+            ScaleDirection::Up
+        } else if occupancy <= self.down_occupancy && active > self.min_workers && can_shrink {
+            ScaleDirection::Down
+        } else {
+            return None;
+        };
+        self.last_action_s = now;
+        Some(dir)
+    }
+
+    /// A failure-driven retirement happened outside the load policy.
+    /// Dead is dead — no cooldown gates it — but the cooldown restarts
+    /// so the next *load* decision waits for a post-failover signal.
+    pub fn note_failure(&mut self, now: f64) {
+        self.last_action_s = now;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterConfig;
+
+    fn scaler() -> Autoscaler {
+        // up at 3.0, down at 0.5, cooldown 1 s, fleet in [1, 4].
+        Autoscaler::new(&ClusterConfig {
+            enabled: true,
+            max_workers: 4,
+            ..ClusterConfig::default()
+        })
+    }
+
+    #[test]
+    fn thresholds_and_deadband() {
+        let mut s = scaler();
+        assert_eq!(s.decide(0.0, 1.0, 2, true, true), None, "deadband holds");
+        assert_eq!(s.decide(0.0, 3.5, 2, true, true), Some(ScaleDirection::Up));
+        let mut s = scaler();
+        assert_eq!(s.decide(0.0, 0.2, 2, true, true), Some(ScaleDirection::Down));
+    }
+
+    #[test]
+    fn cooldown_blocks_thrash() {
+        let mut s = scaler();
+        assert_eq!(s.decide(0.0, 5.0, 2, true, true), Some(ScaleDirection::Up));
+        assert_eq!(s.decide(0.5, 0.1, 3, true, true), None, "inside cooldown");
+        assert_eq!(s.decide(1.0, 0.1, 3, true, true), Some(ScaleDirection::Down));
+    }
+
+    #[test]
+    fn fleet_bounds_and_target_availability() {
+        let mut s = scaler();
+        assert_eq!(s.decide(0.0, 9.0, 4, true, true), None, "at max_workers");
+        assert_eq!(s.decide(0.0, 9.0, 3, false, true), None, "nothing parked to wake");
+        assert_eq!(s.decide(0.0, 0.0, 1, true, true), None, "at min_workers");
+        assert_eq!(s.decide(0.0, 0.0, 2, true, false), None, "no eligible retiree");
+        assert_eq!(s.decide(0.0, 0.0, 2, true, true), Some(ScaleDirection::Down));
+    }
+
+    #[test]
+    fn failure_resets_the_cooldown() {
+        let mut s = scaler();
+        s.note_failure(10.0);
+        assert_eq!(s.decide(10.5, 9.0, 2, true, true), None, "failover just happened");
+        assert_eq!(s.decide(11.1, 9.0, 2, true, true), Some(ScaleDirection::Up));
+    }
+}

@@ -1,0 +1,131 @@
+//! Composite node scoring: rank fleet members on cpu / queue / link.
+//!
+//! The scorer consumes what the control plane already has — the gossiped
+//! [`NeighborSummary`] view of each peer — and produces a *cost* (higher
+//! = worse): slow compute (Γ), deep input queue (I), and an expensive
+//! link (the receiver-local transfer estimate `d_nm_s`) all raise it.
+//! The autoscaler retires the highest-cost worker and, when spawning,
+//! wakes the lowest-id parked node (parked nodes gossip nothing, so id
+//! order is the only deterministic rank available for them).
+
+use anyhow::{bail, Result};
+
+use crate::policy::NeighborSummary;
+
+/// Weights of the composite cost. Units are "queued-task equivalents":
+/// the queue term counts tasks directly, the cpu term converts seconds
+/// of per-task compute, and the link term converts seconds of transfer
+/// delay — so the defaults value 20 ms of compute or 50 ms of link
+/// delay like one queued task.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoreWeights {
+    /// Weight on the peer's per-task compute delay Γ (per second).
+    pub cpu: f64,
+    /// Weight on the peer's input-queue depth I (per task).
+    pub queue: f64,
+    /// Weight on the transfer-delay estimate to the peer (per second).
+    pub link: f64,
+}
+
+impl Default for ScoreWeights {
+    fn default() -> ScoreWeights {
+        ScoreWeights { cpu: 50.0, queue: 1.0, link: 20.0 }
+    }
+}
+
+impl ScoreWeights {
+    pub fn validate(&self) -> Result<()> {
+        for (name, w) in [("cpu", self.cpu), ("queue", self.queue), ("link", self.link)] {
+            if !w.is_finite() || w < 0.0 {
+                bail!("cluster score weight {name} must be finite and >= 0, got {w}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Composite cost of one peer as seen through its gossiped summary.
+    pub fn cost(&self, s: &NeighborSummary) -> f64 {
+        self.cpu * s.gamma_s + self.queue * s.input_len as f64 + self.link * s.d_nm_s
+    }
+}
+
+/// The active worker the controller should retire: the highest-cost
+/// eligible peer among those it holds views for. `eligible` gates out
+/// sources, already-parked peers, and the controller itself. Cost ties
+/// break toward the *highest* id, so the low-id backbone survives.
+/// `None` when no eligible peer has gossiped a view.
+pub fn retire_candidate(
+    weights: &ScoreWeights,
+    views: &[Option<NeighborSummary>],
+    mut eligible: impl FnMut(usize) -> bool,
+) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for (m, view) in views.iter().enumerate() {
+        let Some(s) = view else { continue };
+        if !eligible(m) {
+            continue;
+        }
+        let cost = weights.cost(s);
+        let better = match best {
+            None => true,
+            Some((bc, bm)) => cost > bc || (cost == bc && m > bm),
+        };
+        if better {
+            best = Some((cost, m));
+        }
+    }
+    best.map(|(_, m)| m)
+}
+
+/// The parked node the controller should wake: the lowest eligible id.
+pub fn spawn_candidate(n: usize, mut eligible: impl FnMut(usize) -> bool) -> Option<usize> {
+    (0..n).find(|&m| eligible(m))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(input_len: usize, gamma_s: f64, d_nm_s: f64) -> Option<NeighborSummary> {
+        let mut s = NeighborSummary::base(input_len, gamma_s, 0.9);
+        s.d_nm_s = d_nm_s;
+        Some(s)
+    }
+
+    #[test]
+    fn cost_orders_on_each_axis() {
+        let w = ScoreWeights::default();
+        let lean = view(1, 0.002, 0.001).unwrap();
+        assert!(w.cost(&view(5, 0.002, 0.001).unwrap()) > w.cost(&lean), "queue");
+        assert!(w.cost(&view(1, 0.050, 0.001).unwrap()) > w.cost(&lean), "cpu");
+        assert!(w.cost(&view(1, 0.002, 0.200).unwrap()) > w.cost(&lean), "link");
+    }
+
+    #[test]
+    fn retire_picks_the_worst_eligible() {
+        let w = ScoreWeights::default();
+        let views = vec![
+            None,                      // 0: controller — no self view
+            view(2, 0.002, 0.001),     // 1: healthy
+            view(9, 0.010, 0.020),     // 2: deep queue, slow, far
+            view(1, 0.002, 0.001),     // 3: healthiest
+            view(9, 0.010, 0.020),     // 4: ties with 2
+        ];
+        assert_eq!(retire_candidate(&w, &views, |_| true), Some(4), "ties go high-id");
+        assert_eq!(retire_candidate(&w, &views, |m| m != 4), Some(2));
+        assert_eq!(retire_candidate(&w, &views, |m| m == 0), None, "no view, no verdict");
+    }
+
+    #[test]
+    fn spawn_picks_the_lowest_eligible_id() {
+        assert_eq!(spawn_candidate(6, |m| m >= 3), Some(3));
+        assert_eq!(spawn_candidate(6, |_| false), None);
+    }
+
+    #[test]
+    fn weight_validation() {
+        assert!(ScoreWeights::default().validate().is_ok());
+        assert!(ScoreWeights { cpu: -1.0, ..Default::default() }.validate().is_err());
+        assert!(ScoreWeights { link: f64::NAN, ..Default::default() }.validate().is_err());
+    }
+}

@@ -2,6 +2,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::cluster::{ClusterConfig, ScoreWeights};
 use crate::policy::{AdaptConfig, PolicyConfig};
 use crate::routing::{Placement, SourceSpec};
 use crate::sched::{CoalesceMode, DisciplineKind, SchedConfig};
@@ -98,6 +99,11 @@ pub struct ExperimentConfig {
     /// recorder and the hot path stays byte-identical to the seed. TOML
     /// `[telemetry]`, CLI `--trace`/`--metrics`/`--metrics-interval`.
     pub telemetry: TelemetryConfig,
+    /// Elastic fleet control plane: heartbeat health checking, occupancy
+    /// autoscaling, live re-layering (`crate::cluster`). Default: disabled —
+    /// no beats ride gossip and the seed wire accounting stays bit-for-bit.
+    /// TOML `[cluster]`, CLI `--cluster` plus `--cluster-*` knobs.
+    pub cluster: ClusterConfig,
     pub seed: u64,
 }
 
@@ -126,6 +132,7 @@ impl ExperimentConfig {
             workload: WorkloadConfig::default(),
             gossip_piggyback: false,
             telemetry: TelemetryConfig::default(),
+            cluster: ClusterConfig::default(),
             seed: 7,
         }
     }
@@ -183,6 +190,9 @@ impl ExperimentConfig {
         }
         if let Err(e) = self.telemetry.validate() {
             bail!("telemetry config: {e}");
+        }
+        if let Err(e) = self.cluster.validate() {
+            bail!("cluster config: {e}");
         }
         Ok(())
     }
@@ -245,6 +255,7 @@ impl ExperimentConfig {
         cfg.workload = Self::workload_from_toml(toml)?;
         cfg.gossip_piggyback = toml.try_bool("gossip_piggyback")?.unwrap_or(false);
         cfg.telemetry = Self::telemetry_from_toml(toml)?;
+        cfg.cluster = Self::cluster_from_toml(toml)?;
         cfg.seed = toml.try_i64("seed")?.unwrap_or(7) as u64;
         cfg.validate()?;
         Ok(cfg)
@@ -446,8 +457,54 @@ impl ExperimentConfig {
         })
     }
 
+    /// `[cluster]` section: the elastic fleet control plane
+    /// (`crate::cluster`; validated with the rest of the config).
+    ///
+    /// ```toml
+    /// [cluster]
+    /// enabled = true
+    /// check_interval_s = 0.5    # controller health/load sweep cadence
+    /// timeout_beats = 3.0       # missed-beat death threshold
+    /// jitter_frac = 0.2         # per-peer deadline slack in [0, 1)
+    /// scale_up_occupancy = 3.0  # mean queued tasks/worker to grow at
+    /// scale_down_occupancy = 0.5
+    /// cooldown_s = 1.0          # minimum gap between load decisions
+    /// min_workers = 1
+    /// max_workers = 6
+    /// initial_workers = 2       # optional: park the rest at t = 0
+    /// weight_cpu = 50.0         # retirement score: cpu / queue / link
+    /// weight_queue = 1.0
+    /// weight_link = 20.0
+    /// ```
+    fn cluster_from_toml(toml: &Toml) -> Result<ClusterConfig> {
+        let d = ClusterConfig::default();
+        Ok(ClusterConfig {
+            enabled: toml.try_bool("cluster.enabled")?.unwrap_or(false),
+            check_interval_s: toml.try_f64("cluster.check_interval_s")?.unwrap_or(d.check_interval_s),
+            timeout_beats: toml.try_f64("cluster.timeout_beats")?.unwrap_or(d.timeout_beats),
+            jitter_frac: toml.try_f64("cluster.jitter_frac")?.unwrap_or(d.jitter_frac),
+            weights: ScoreWeights {
+                cpu: toml.try_f64("cluster.weight_cpu")?.unwrap_or(d.weights.cpu),
+                queue: toml.try_f64("cluster.weight_queue")?.unwrap_or(d.weights.queue),
+                link: toml.try_f64("cluster.weight_link")?.unwrap_or(d.weights.link),
+            },
+            scale_up_occupancy: toml
+                .try_f64("cluster.scale_up_occupancy")?
+                .unwrap_or(d.scale_up_occupancy),
+            scale_down_occupancy: toml
+                .try_f64("cluster.scale_down_occupancy")?
+                .unwrap_or(d.scale_down_occupancy),
+            cooldown_s: toml.try_f64("cluster.cooldown_s")?.unwrap_or(d.cooldown_s),
+            min_workers: toml.try_usize("cluster.min_workers")?.unwrap_or(d.min_workers),
+            max_workers: toml.try_usize("cluster.max_workers")?.unwrap_or(d.max_workers),
+            initial_workers: toml.try_usize("cluster.initial_workers")?,
+        })
+    }
+
     /// `[workload]` section: the arrival process each source runs
-    /// (`crate::workload`; validated there).
+    /// (`crate::workload`; validated there). `[workload.sources.N]`
+    /// sub-tables give individual sources their own spec — sources without
+    /// one run the shared `[workload]` spec.
     ///
     /// ```toml
     /// [workload]
@@ -459,28 +516,64 @@ impl ExperimentConfig {
     /// period_s = 60.0           # diurnal cycle length
     /// depth = 0.5               # diurnal modulation depth in [0, 1)
     /// trace = "gaps.txt"        # interarrival trace for arrival = "trace"
+    ///
+    /// [workload.sources.3]      # node 3 only: its own mix
+    /// arrival = "poisson"
     /// ```
     fn workload_from_toml(toml: &Toml) -> Result<WorkloadConfig> {
-        let arrival = match toml.try_str("workload.arrival")?.unwrap_or("legacy") {
+        let shared = toml.try_str("workload.arrival")?.unwrap_or("legacy");
+        let arrival = Self::arrival_from_toml(toml, "workload.", shared)?;
+        // Discover `[workload.sources.N]` sub-tables by key prefix (the
+        // flat dotted-path store has no table nesting to walk).
+        let mut nodes: Vec<usize> = Vec::new();
+        for key in toml.keys() {
+            let Some(rest) = key.strip_prefix("workload.sources.") else { continue };
+            let Some((id, _)) = rest.split_once('.') else {
+                bail!("workload.sources entries must be tables ([workload.sources.N]): {key:?}");
+            };
+            match id.parse::<usize>() {
+                Ok(n) if !nodes.contains(&n) => nodes.push(n),
+                Ok(_) => {}
+                Err(_) => bail!("workload.sources.{id}: source id must be a non-negative integer"),
+            }
+        }
+        nodes.sort_unstable();
+        let mut sources = Vec::with_capacity(nodes.len());
+        for n in nodes {
+            let prefix = format!("workload.sources.{n}.");
+            let name = match toml.try_str(&format!("{prefix}arrival"))? {
+                Some(name) => name,
+                None => bail!("[workload.sources.{n}] needs an arrival = \"...\" key"),
+            };
+            sources.push((n, Self::arrival_from_toml(toml, &prefix, name)?));
+        }
+        Ok(WorkloadConfig { arrival, sources })
+    }
+
+    /// Parse one named [`ArrivalSpec`] whose parameter keys live under
+    /// `prefix` (`"workload."` for the shared spec, `"workload.sources.N."`
+    /// for a per-source override).
+    fn arrival_from_toml(toml: &Toml, prefix: &str, name: &str) -> Result<ArrivalSpec> {
+        let key = |k: &str| format!("{prefix}{k}");
+        Ok(match name {
             "legacy" => ArrivalSpec::Legacy,
             "constant" => ArrivalSpec::Constant,
             "poisson" => ArrivalSpec::Poisson,
             "flash-crowd" => ArrivalSpec::FlashCrowd {
-                peak_mult: toml.try_f64("workload.peak_mult")?.unwrap_or(8.0),
-                at_s: toml.try_f64("workload.flash_at_s")?.unwrap_or(30.0),
-                ramp_s: toml.try_f64("workload.flash_ramp_s")?.unwrap_or(5.0),
+                peak_mult: toml.try_f64(&key("peak_mult"))?.unwrap_or(8.0),
+                at_s: toml.try_f64(&key("flash_at_s"))?.unwrap_or(30.0),
+                ramp_s: toml.try_f64(&key("flash_ramp_s"))?.unwrap_or(5.0),
             },
             "diurnal" => ArrivalSpec::Diurnal {
-                period_s: toml.try_f64("workload.period_s")?.unwrap_or(60.0),
-                depth: toml.try_f64("workload.depth")?.unwrap_or(0.5),
+                period_s: toml.try_f64(&key("period_s"))?.unwrap_or(60.0),
+                depth: toml.try_f64(&key("depth"))?.unwrap_or(0.5),
             },
-            "trace" => match toml.get("workload.trace").and_then(|v| v.as_str()) {
+            "trace" => match toml.get(&key("trace")).and_then(|v| v.as_str()) {
                 Some(path) => ArrivalSpec::trace_from_file(path)?,
-                None => bail!("workload.arrival = \"trace\" needs workload.trace = \"PATH\""),
+                None => bail!("{prefix}arrival = \"trace\" needs {prefix}trace = \"PATH\""),
             },
-            other => bail!("unknown workload.arrival {other:?}"),
-        };
-        Ok(WorkloadConfig { arrival })
+            other => bail!("unknown {prefix}arrival {other:?}"),
+        })
     }
 
     /// The fixed threshold in effect, if the mode has one.
@@ -570,6 +663,8 @@ bandwidth_mbps = 24.0
             ("[adapt]\nt_q1 = -4\n", "adapt.t_q1"),
             ("[sched]\nmax_batch = \"big\"\n", "sched.max_batch"),
             ("[telemetry]\ntrace = \"yes\"\n", "telemetry.trace"),
+            ("[cluster]\nenabled = \"yes\"\n", "cluster.enabled"),
+            ("[cluster]\nenabled = true\nmax_workers = -2\n", "cluster.max_workers"),
             ("[workload]\narrival = \"diurnal\"\ndepth = \"deep\"\n", "workload.depth"),
             ("use_ae = 1\n", "use_ae"),
         ] {
@@ -797,6 +892,66 @@ batch_marginal = 0.1
         assert!(!c.telemetry.enabled());
         // Bad cadence fails validation.
         let toml = Toml::parse("[telemetry]\nmetrics = true\ninterval = 0.0\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+    }
+
+    #[test]
+    fn from_toml_parses_cluster_section() {
+        let toml = Toml::parse(
+            "[cluster]\nenabled = true\ncheck_interval_s = 0.25\ntimeout_beats = 4.0\n\
+             scale_up_occupancy = 2.0\nmin_workers = 2\nmax_workers = 5\n\
+             initial_workers = 3\nweight_cpu = 10.0\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert!(c.cluster.enabled);
+        assert!((c.cluster.check_interval_s - 0.25).abs() < 1e-12);
+        assert!((c.cluster.timeout_beats - 4.0).abs() < 1e-12);
+        assert!((c.cluster.scale_up_occupancy - 2.0).abs() < 1e-12);
+        assert_eq!(c.cluster.min_workers, 2);
+        assert_eq!(c.cluster.max_workers, 5);
+        assert_eq!(c.cluster.initial_workers, Some(3));
+        assert!((c.cluster.weights.cpu - 10.0).abs() < 1e-12);
+        // Unset knobs keep the documented defaults.
+        let d = ClusterConfig::default();
+        assert!((c.cluster.cooldown_s - d.cooldown_s).abs() < 1e-12);
+        assert!((c.cluster.weights.queue - d.weights.queue).abs() < 1e-12);
+        // Default: control plane off, everything else irrelevant.
+        let c = ExperimentConfig::from_toml(&Toml::parse("model = \"tiny\"\n").unwrap()).unwrap();
+        assert_eq!(c.cluster, ClusterConfig::default());
+        assert!(!c.cluster.enabled);
+        // Bad knobs fail validation once enabled.
+        let toml = Toml::parse("[cluster]\nenabled = true\nmin_workers = 0\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+    }
+
+    #[test]
+    fn from_toml_parses_per_source_workloads() {
+        let toml = Toml::parse(
+            "[placement]\nsources = [0, 2, 3]\n\
+             [workload]\narrival = \"poisson\"\n\
+             [workload.sources.3]\narrival = \"flash-crowd\"\npeak_mult = 6.0\n\
+             [workload.sources.2]\narrival = \"constant\"\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&toml).unwrap();
+        assert_eq!(c.workload.arrival, ArrivalSpec::Poisson);
+        assert_eq!(
+            c.workload.sources,
+            vec![
+                (2, ArrivalSpec::Constant),
+                (3, ArrivalSpec::FlashCrowd { peak_mult: 6.0, at_s: 30.0, ramp_s: 5.0 }),
+            ]
+        );
+        // spec_for: listed sources get their mix, the rest share [workload].
+        assert_eq!(*c.workload.spec_for(2), ArrivalSpec::Constant);
+        assert_eq!(*c.workload.spec_for(0), ArrivalSpec::Poisson);
+        // A sub-table without an arrival key is an error, not a silent
+        // fallback.
+        let toml = Toml::parse("[workload.sources.1]\npeak_mult = 2.0\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&toml).is_err());
+        // Non-numeric source ids are rejected.
+        let toml = Toml::parse("[workload.sources.all]\narrival = \"poisson\"\n").unwrap();
         assert!(ExperimentConfig::from_toml(&toml).is_err());
     }
 

@@ -220,6 +220,15 @@ pub struct RunReport {
     /// Final controller values.
     pub final_mu_s: Option<f64>,
     pub final_t_e: Option<f64>,
+    /// Fleet changes ordered by the elastic control plane (spawns /
+    /// retirements actually applied — stale decisions don't count).
+    pub scale_ups: u64,
+    pub scale_downs: u64,
+    /// Active-fleet cost: ∫ active-node-count dt over the measured
+    /// window (node-seconds). A static n-node fleet reports
+    /// `n × duration_s`; an autoscaled fleet reports what it actually
+    /// kept awake — the cost axis of the cluster ablation bench.
+    pub worker_seconds: f64,
     /// Events processed by the DES event loop (0 on the realtime driver).
     pub sim_events: u64,
     /// High-water mark of the DES event queue (0 on the realtime driver).
@@ -256,6 +265,9 @@ impl RunReport {
                 .collect(),
             final_mu_s: None,
             final_t_e: None,
+            scale_ups: 0,
+            scale_downs: 0,
+            worker_seconds: 0.0,
             sim_events: 0,
             peak_event_queue: 0,
             trace: Vec::new(),
@@ -484,6 +496,9 @@ impl RunReport {
             ("wire_bytes_saved", (self.wire_bytes_saved() as i64).into()),
             ("rehomed", (self.rehomed as i64).into()),
             ("dropped", (self.dropped as i64).into()),
+            ("scale_ups", (self.scale_ups as i64).into()),
+            ("scale_downs", (self.scale_downs as i64).into()),
+            ("worker_seconds", self.worker_seconds.into()),
             ("sim_events", (self.sim_events as i64).into()),
             ("peak_event_queue", (self.peak_event_queue as i64).into()),
             ("final_mu_s", self.final_mu_s.map(Json::from).unwrap_or(Json::Null)),

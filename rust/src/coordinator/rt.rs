@@ -29,7 +29,7 @@
 
 use std::collections::VecDeque;
 use std::sync::mpsc::channel;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
@@ -40,10 +40,11 @@ use super::task::{InferenceResult, Task};
 use super::worker::{
     encode_batch, execute_batch, Action, Clock, ModelMeta, TaskOrigin, WallClock, WorkerCore,
 };
+use crate::cluster::ScaleDecision;
 use crate::dataset::Dataset;
 use crate::log_info;
 use crate::net::Envelope;
-use crate::routing::RoutingTable;
+use crate::routing::{Role, RoutingTable};
 use crate::runtime::InferenceEngine;
 use crate::simnet::transport::{DelayNet, Endpoint};
 use crate::simnet::{ChurnEvent, Topology};
@@ -51,6 +52,19 @@ use crate::telemetry::{self, TelemetryData, TelemetryEvent};
 use crate::util::stats::Samples;
 
 const IDLE_PARK: Duration = Duration::from_micros(200);
+
+/// The shared scale bus: the controller thread appends every applied-for
+/// [`ScaleDecision`] with its wallclock timestamp; every worker thread walks
+/// the bus with a cursor (like the scripted churn timeline) and applies each
+/// entry to its own core + routing. Single producer, append-only, so cursors
+/// never miss or reorder entries.
+type ScaleBus = Arc<Mutex<Vec<(f64, ScaleDecision)>>>;
+
+fn lock_bus(bus: &ScaleBus) -> std::sync::MutexGuard<'_, Vec<(f64, ScaleDecision)>> {
+    // A poisoned bus only means another thread panicked mid-push; the data
+    // is still a well-formed prefix, so keep going rather than cascade.
+    bus.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Run the system with real threads + wallclock. `duration_s` of the config
 /// is interpreted as wallclock seconds (keep it small in tests). Called via
@@ -94,6 +108,15 @@ pub(super) fn run_realtime(
         channel::<(usize, super::report::WorkerStats, SourceTally, Option<TelemetryData>)>();
     let t0 = Instant::now();
     let horizon = Duration::from_secs_f64(cfg.warmup_s + cfg.duration_s);
+    // Elastic control plane: the initial parking set is a pure function of
+    // the config, and the scale bus carries controller decisions to every
+    // thread (and, after join, to the cost accounting below).
+    let parked: Arc<Vec<usize>> = Arc::new(crate::cluster::initial_parked(
+        cfg.cluster.enabled.then_some(cfg.cluster.initial_workers).flatten(),
+        &cfg.placement.source_nodes(),
+        n,
+    ));
+    let scale_bus: ScaleBus = Arc::new(Mutex::new(Vec::new()));
 
     std::thread::scope(|scope| -> Result<()> {
         for id in 0..n {
@@ -103,6 +126,8 @@ pub(super) fn run_realtime(
             let routing = routing.clone();
             let cfg = cfg.clone();
             let meta = meta.clone();
+            let parked = parked.clone();
+            let scale_bus = scale_bus.clone();
             scope.spawn(move || {
                 let engine = match factory(id) {
                     Ok(e) => e,
@@ -145,7 +170,12 @@ pub(super) fn run_realtime(
                     pending: None,
                     churn,
                     churn_idx: 0,
+                    topo,
+                    active: vec![true; n],
+                    scale_bus,
+                    scale_idx: 0,
                 };
+                w.park_initial(&parked);
                 w.run(horizon);
                 let id = w.id;
                 let (stats, tally, tdata) = w.finish();
@@ -200,9 +230,74 @@ pub(super) fn run_realtime(
             report.final_t_e = tally.final_t_e;
         }
     }
+    let bus = lock_bus(&scale_bus);
+    let (ups, downs, ws) = fleet_accounting(cfg, n, &parked, &bus);
+    report.scale_ups = ups;
+    report.scale_downs = downs;
+    report.worker_seconds = ws;
+    drop(bus);
     report.fold_worker_drops();
     report.fold_wire_totals();
     Ok(report)
+}
+
+/// Replay the fleet timeline (initial parking, scripted churn, scale-bus
+/// entries) on the main thread after join, producing the scale counters and
+/// the worker-seconds cost integral over the measured window. The bus is
+/// single-producer and timestamped at publish, so the replay bills each
+/// segment at the fleet size that ran it — same integral the DES driver
+/// accumulates inline. A static n-node fleet lands on exactly
+/// n x duration_s.
+fn fleet_accounting(
+    cfg: &ExperimentConfig,
+    n: usize,
+    parked: &[usize],
+    bus: &[(f64, ScaleDecision)],
+) -> (u64, u64, f64) {
+    let mut active = vec![true; n];
+    for &p in parked {
+        active[p] = false;
+    }
+    // (t, worker, join, from_bus): scripted churn flips count toward the
+    // integral but not the scale counters.
+    let mut events: Vec<(f64, usize, bool, bool)> = Vec::new();
+    for e in &cfg.churn {
+        events.push((e.at_s, e.worker, e.join, false));
+    }
+    for (t, d) in bus {
+        events.push((*t, d.worker, d.join, true));
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let from0 = cfg.warmup_s;
+    let end = cfg.warmup_s + cfg.duration_s;
+    let (mut ups, mut downs) = (0u64, 0u64);
+    let mut ws = 0.0f64;
+    let mut last = 0.0f64;
+    for (t, worker, join, from_bus) in events {
+        let t_c = t.min(end);
+        let lo = last.max(from0);
+        if t_c > lo {
+            ws += active.iter().filter(|&&a| a).count() as f64 * (t_c - lo);
+        }
+        last = last.max(t_c);
+        // Stale entries (target already in the desired state) are skipped,
+        // mirroring each thread's own guard.
+        if active[worker] != join {
+            active[worker] = join;
+            if from_bus {
+                if join {
+                    ups += 1;
+                } else {
+                    downs += 1;
+                }
+            }
+        }
+    }
+    let lo = last.max(from0);
+    if end > lo {
+        ws += active.iter().filter(|&&a| a).count() as f64 * (end - lo);
+    }
+    (ups, downs, ws)
 }
 
 /// Source-side accounting carried out of each source's worker thread.
@@ -235,6 +330,14 @@ struct RtWorker<'a> {
     pending: Option<Vec<Task>>,
     churn: Vec<ChurnEvent>,
     churn_idx: usize,
+    topo: Arc<Topology>,
+    /// This thread's mirror of the fleet's join/leave state, fed by the
+    /// scale bus and (cluster runs) the churn timeline; it drives the local
+    /// routing rebuilds, so all threads converge on the same layout.
+    active: Vec<bool>,
+    scale_bus: ScaleBus,
+    /// Cursor into the scale bus: entries before it are already applied.
+    scale_idx: usize,
 }
 
 impl<'a> RtWorker<'a> {
@@ -242,10 +345,26 @@ impl<'a> RtWorker<'a> {
         now >= self.cfg.warmup_s
     }
 
+    /// Apply the initial parking set before the loop starts: flip the
+    /// parked nodes out on this thread's core and adopt the boot layout.
+    /// Every thread runs this against the same set, so the fleet boots
+    /// identically everywhere (mirrors the DES driver's pre-run parking).
+    fn park_initial(&mut self, parked: &[usize]) {
+        for &p in parked {
+            self.active[p] = false;
+            let acts = self.core.on_churn(0.0, p, false);
+            self.dispatch(acts);
+        }
+        if !parked.is_empty() {
+            self.relayout();
+        }
+    }
+
     fn run(&mut self, horizon: Duration) {
         let mut next_admit = 0.0f64;
         let mut next_adapt = self.cfg.adapt.sleep_s;
         let mut next_gossip = 0.0f64;
+        let mut next_cluster = self.cfg.cluster.check_interval_s;
         // Metrics cadence: same `interval_s` the DES driver schedules; an
         // infinite first deadline disables the timer when metrics are off.
         let mut next_metrics = if self.cfg.telemetry.metrics {
@@ -269,9 +388,37 @@ impl<'a> RtWorker<'a> {
             while self.churn_idx < self.churn.len() && self.churn[self.churn_idx].at_s <= now {
                 let e = self.churn[self.churn_idx];
                 self.churn_idx += 1;
-                let acts = self.core.on_churn(now, e.worker, e.join);
-                self.dispatch(acts);
+                if self.cfg.cluster.enabled {
+                    // With the control plane on, scripted churn rides the
+                    // same fleet-change path as scale decisions, so routing
+                    // follows the live fleet on every thread.
+                    if self.active[e.worker] != e.join {
+                        self.apply_fleet_change(now, e.worker, e.join);
+                    }
+                } else {
+                    let acts = self.core.on_churn(now, e.worker, e.join);
+                    self.dispatch(acts);
+                }
                 progressed = true;
+            }
+
+            // 2b. elastic control plane: the controller core sweeps health
+            //     + autoscaling on its cadence (decisions leave via the
+            //     scale bus), and every thread drains the bus with its
+            //     cursor, applying each decision to its own core/routing.
+            if self.cfg.cluster.enabled {
+                if self.core.runs_cluster_controller() && now >= next_cluster {
+                    let acts = self.core.on_cluster_tick(now);
+                    self.dispatch(acts);
+                    next_cluster = now + self.cfg.cluster.check_interval_s;
+                }
+                loop {
+                    let entry = lock_bus(&self.scale_bus).get(self.scale_idx).copied();
+                    let Some((_, d)) = entry else { break };
+                    self.scale_idx += 1;
+                    self.apply_scale(now, d);
+                    progressed = true;
+                }
             }
 
             // 3. source duties: admission + adaptation. Admit *every* due
@@ -448,8 +595,57 @@ impl<'a> RtWorker<'a> {
                     }
                 }
                 Action::RecordResult { result } => self.record_result(result),
+                Action::Scale(d) => {
+                    // Only the controller core emits these; publishing on
+                    // the bus (rather than applying directly) keeps one
+                    // fleet-change path for every thread, controller
+                    // included — it picks the entry up on its own cursor.
+                    let now = self.clock.now();
+                    lock_bus(&self.scale_bus).push((now, d));
+                }
             }
         }
+    }
+
+    /// Apply one scale-bus entry to this thread. Stale decisions (the
+    /// target already flipped, e.g. scripted churn raced the controller)
+    /// are dropped, exactly as in the DES driver.
+    fn apply_scale(&mut self, now: f64, d: ScaleDecision) {
+        if self.active[d.worker] == d.join {
+            return;
+        }
+        self.apply_fleet_change(now, d.worker, d.join);
+        // The telemetry Scale mark is cut on the target's own thread so it
+        // lands in that worker's recorder, like every other lifecycle event.
+        if d.worker == self.id && self.core.has_recorder() {
+            let fleet = self.active.iter().filter(|&&a| a).count();
+            let ev = TelemetryEvent::Scale {
+                t: now,
+                worker: d.worker,
+                join: d.join,
+                reason: d.reason.label(),
+                fleet,
+            };
+            self.core.record_event(&ev);
+        }
+    }
+
+    /// The thread-local half of a fleet change: notify the core (in-flight
+    /// batches finish where they are queued) and rebuild routing over the
+    /// surviving fleet. Each thread rebuilds its own row; the build is
+    /// deterministic in (topo, active), so all threads converge on the
+    /// same layout without sharing the table.
+    fn apply_fleet_change(&mut self, now: f64, worker: usize, join: bool) {
+        self.active[worker] = join;
+        let acts = self.core.on_churn(now, worker, join);
+        self.dispatch(acts);
+        self.relayout();
+    }
+
+    fn relayout(&mut self) {
+        let routing = RoutingTable::build_active(&self.topo, &self.active);
+        let role = Role::of(self.id, &self.cfg.placement, &routing);
+        self.core.apply_relayout(routing.row(self.id), role);
     }
 
     fn on_msg(&mut self, from: usize, env: Envelope) {

@@ -52,6 +52,10 @@ use super::queues::WorkerQueues;
 use super::report::WorkerStats;
 use super::task::{InferenceResult, Task};
 use crate::artifact::ModelInfo;
+use crate::cluster::{
+    retire_candidate, spawn_candidate, Autoscaler, HealthChecker, ScaleDecision,
+    ScaleDirection, ScaleReason, ScoreWeights,
+};
 use crate::net::Envelope;
 use crate::policy::{
     AdaptPolicy, ExitCtx, ExitDecision, ExitPolicy, LocalState, NeighborSummary, OffloadCtx,
@@ -149,6 +153,13 @@ pub enum Action {
     StartCompute { batch: Vec<Task>, est_cost_s: f64 },
     /// A completed inference reached its admitting source: record it.
     RecordResult { result: InferenceResult },
+    /// The elastic control plane ordered a fleet change (controller node
+    /// only — see [`crate::cluster`]). The driver applies it through the
+    /// shared churn path (`on_churn` on every core, so a retiring worker
+    /// re-homes its backlog), then re-layers: rebuild the routing table
+    /// over the active fleet and hand every core its new next-hop row and
+    /// role via [`WorkerCore::apply_relayout`].
+    Scale(ScaleDecision),
 }
 
 /// One outbound consequence of a finished batch element, kept in batch
@@ -171,6 +182,28 @@ pub enum TaskOrigin {
     Wire,
     /// Re-homed to the source after a worker left.
     Rehomed,
+}
+
+// ---------------------------------------------------------------------------
+// Elastic control plane (per-core runtime state)
+// ---------------------------------------------------------------------------
+
+/// Control-plane state carried by every core when `cfg.cluster.enabled`
+/// (absent otherwise — the default config builds none of this and stamps
+/// no heartbeat, keeping the seed's wire accounting bit for bit).
+struct ClusterState {
+    /// Monotone heartbeat sequence, stamped into every minted summary.
+    beat: u64,
+    /// Controller-only loop state (the lowest-id source runs it).
+    controller: Option<ControllerState>,
+}
+
+/// The closed loop the controller node runs each cluster tick: missed-beat
+/// detection, composite scoring, and occupancy-driven scaling.
+struct ControllerState {
+    health: HealthChecker,
+    scaler: Autoscaler,
+    weights: ScoreWeights,
 }
 
 // ---------------------------------------------------------------------------
@@ -246,6 +279,11 @@ pub struct WorkerCore {
     /// `State` or piggyback). Only maintained when `cfg.gossip_piggyback`
     /// is on; used to suppress redundant gossip-tick sends.
     last_state_at: Vec<f64>,
+    /// Elastic control plane (`None` unless `cfg.cluster.enabled`): every
+    /// enabled node keeps a heartbeat counter; the controller node (the
+    /// lowest-id source) additionally runs the health checker and the
+    /// autoscaler and emits [`Action::Scale`] on its cluster ticks.
+    cluster: Option<ClusterState>,
     /// Telemetry observer (`None` by default — the zero-cost-when-off
     /// contract: every hook is one `is_some()` branch, with event
     /// construction inside it). Installed by the drivers when the run's
@@ -306,7 +344,27 @@ impl WorkerCore {
             AdmissionMode::Fixed { threshold, .. } => threshold,
         };
         let arrival =
-            if role.is_source { cfg.workload.arrival.build(cfg.seed, id) } else { None };
+            if role.is_source { cfg.workload.spec_for(id).build(cfg.seed, id) } else { None };
+        let cluster = cfg.cluster.enabled.then(|| {
+            // The controller is the lowest-id source: deterministic on any
+            // placement, and a node every worker already routes results to.
+            let is_controller =
+                cfg.placement.source_nodes().iter().min() == Some(&id);
+            ClusterState {
+                beat: 0,
+                controller: is_controller.then(|| ControllerState {
+                    health: HealthChecker::new(
+                        cfg.seed,
+                        id,
+                        cfg.gossip_interval_s,
+                        cfg.cluster.timeout_beats,
+                        cfg.cluster.jitter_frac,
+                    ),
+                    scaler: Autoscaler::new(&cfg.cluster),
+                    weights: cfg.cluster.weights,
+                }),
+            }
+        });
 
         WorkerCore {
             id,
@@ -341,6 +399,7 @@ impl WorkerCore {
             measure_from: cfg.warmup_s,
             cand_buf: Vec::new(),
             arrival,
+            cluster,
             last_state_at: vec![f64::NEG_INFINITY; n],
             recorder: None,
         }
@@ -1198,6 +1257,13 @@ impl WorkerCore {
     fn mint_summary(&mut self, now: f64) -> NeighborSummary {
         let input_len = self.queues.input.len();
         let mut summary = NeighborSummary::base(input_len, self.gamma.get_or(0.01), self.t_e);
+        if let Some(cl) = self.cluster.as_mut() {
+            // Heartbeat: one fresh (strictly monotone) beat per minted
+            // summary — piggybacked duplicates of an *old* summary can
+            // never keep a dead sender alive at the checker.
+            cl.beat += 1;
+            summary.beat = Some(cl.beat);
+        }
         self.offload.annotate(
             &mut summary,
             &LocalState {
@@ -1227,6 +1293,9 @@ impl WorkerCore {
     pub fn on_gossip(&mut self, now: f64, from: usize, summary: NeighborSummary) -> Vec<Action> {
         let mut summary = summary;
         summary.d_nm_s = self.d_est[from].get_or(self.link_default_delay[from].unwrap_or(0.01));
+        if let Some(ctrl) = self.cluster.as_mut().and_then(|c| c.controller.as_mut()) {
+            ctrl.health.observe(now, from, summary.beat);
+        }
         self.offload.observe(from, &summary, now);
         if !self.role.is_source && self.next_hop[self.role.home_source] == Some(from) {
             self.t_e = summary.t_e;
@@ -1290,9 +1359,110 @@ impl WorkerCore {
             if !join {
                 self.views[worker] = None;
                 self.offload.forget(worker);
+                if let Some(ctrl) = self.cluster.as_mut().and_then(|c| c.controller.as_mut()) {
+                    // The fleet retired this peer on purpose (scale-down or
+                    // scripted churn): drop it from the missed-beat tracker
+                    // so its silence is never read as a failure.
+                    ctrl.health.forget(worker);
+                }
             }
         }
         out
+    }
+
+    // -- elastic control plane (cluster ticks) -------------------------------
+
+    /// Whether this core hosts the cluster controller loop — drivers
+    /// schedule cluster ticks only where this is true (the lowest-id
+    /// source, when `cfg.cluster.enabled`).
+    pub fn runs_cluster_controller(&self) -> bool {
+        self.cluster.as_ref().is_some_and(|c| c.controller.is_some())
+    }
+
+    /// One control-loop step on the controller node: sweep the health
+    /// checker (failure-driven retirements bypass the cooldown but reset
+    /// it) and, when the cooldown allows, make one load-driven scaling
+    /// decision off aggregate occupancy — mean queued tasks per active
+    /// worker over the gossip horizon (this node's own queues plus every
+    /// active peer's gossiped input depth). Every decision leaves as an
+    /// [`Action::Scale`]; the driver applies it through the shared churn +
+    /// re-layer path. No-op on non-controller cores and while churned out.
+    pub fn on_cluster_tick(&mut self, now: f64) -> Vec<Action> {
+        let mut out = Vec::new();
+        if !self.active {
+            return out;
+        }
+        let Some(ctrl) = self.cluster.as_mut().and_then(|c| c.controller.as_mut()) else {
+            return out;
+        };
+        // 1. Failure-driven retirement: peers newly past their (jittered)
+        //    missed-beat deadline. Sources are never retired — admission
+        //    must stay covered; a silent source is a topology problem the
+        //    control plane cannot fix by unplugging it.
+        let mut failed = false;
+        for peer in ctrl.health.check(now) {
+            if self.peer_active[peer] && !self.cfg.placement.is_source(peer) {
+                failed = true;
+                out.push(Action::Scale(ScaleDecision {
+                    worker: peer,
+                    join: false,
+                    reason: ScaleReason::Failure,
+                }));
+            }
+        }
+        if failed {
+            ctrl.scaler.note_failure(now);
+        }
+        // 2. Load-driven decision. Candidates are resolved first so the
+        //    scaler only fires when a concrete target exists.
+        let spawn = spawn_candidate(self.num_workers, |m| {
+            m != self.id && !self.peer_active[m] && !self.cfg.placement.is_source(m)
+        });
+        let retire = retire_candidate(&ctrl.weights, &self.views, |m| {
+            m != self.id
+                && self.peer_active[m]
+                && !self.cfg.placement.is_source(m)
+                && !ctrl.health.is_dead(m)
+        });
+        let active_count = (0..self.num_workers)
+            .filter(|&m| if m == self.id { self.active } else { self.peer_active[m] })
+            .count();
+        let mut queued = self.queues.total_len() as f64;
+        for m in 0..self.num_workers {
+            if m == self.id || !self.peer_active[m] {
+                continue;
+            }
+            if let Some(v) = self.views[m].as_ref() {
+                queued += v.input_len as f64;
+            }
+        }
+        let occupancy = queued / active_count.max(1) as f64;
+        let decision = ctrl.scaler.decide(
+            now,
+            occupancy,
+            active_count,
+            spawn.is_some(),
+            retire.is_some(),
+        );
+        let target = match decision {
+            Some(ScaleDirection::Up) => spawn.map(|m| (m, true)),
+            Some(ScaleDirection::Down) => retire.map(|m| (m, false)),
+            None => None,
+        };
+        if let Some((worker, join)) = target {
+            out.push(Action::Scale(ScaleDecision { worker, join, reason: ScaleReason::Load }));
+        }
+        out
+    }
+
+    /// The fleet re-layered (a scale action or churn event was applied and
+    /// the driver rebuilt routing over the active fleet): adopt the new
+    /// next-hop row and placement role. In-flight tasks are untouched —
+    /// they finish on the layout they started on, wherever they are
+    /// queued; only traffic emitted after this call rides the new routes.
+    pub fn apply_relayout(&mut self, next_hop: Vec<Option<usize>>, role: Role) {
+        self.next_hop = next_hop;
+        self.role = role;
     }
 
     // -- transfers -----------------------------------------------------------
@@ -2391,5 +2561,156 @@ mod tests {
         let (_, dt) = w.poll_admission(0.0);
         // Fixed 50 Hz at share 2.0 paces at 100 Hz.
         assert!((dt - 0.01).abs() < 1e-12, "dt {dt}");
+    }
+
+    // -- elastic control plane through the core --------------------------------
+
+    fn cfg_cluster(topology: &str) -> ExperimentConfig {
+        let mut cfg = cfg_fixed(topology, 50.0, 0.9);
+        cfg.warmup_s = 0.0;
+        cfg.cluster.enabled = true;
+        cfg
+    }
+
+    #[test]
+    fn cluster_off_builds_no_state_and_stamps_no_beat() {
+        let cfg = cfg_fixed("2-node", 50.0, 0.9);
+        let mut w = core(0, &cfg, "2-node");
+        assert!(!w.runs_cluster_controller());
+        let acts = w.on_gossip_tick(0.0);
+        let Some(Action::Send { env: Envelope::State(s), .. }) = acts.first() else {
+            panic!("expected state send: {acts:?}");
+        };
+        assert_eq!(s.beat, None, "default config keeps the seed wire");
+        assert_eq!(s.encoded_bytes(), crate::policy::BASE_SUMMARY_BYTES);
+        assert!(w.on_cluster_tick(1.0).is_empty(), "no controller, no decisions");
+    }
+
+    #[test]
+    fn cluster_beats_ride_gossip_and_silence_retires_a_peer() {
+        let cfg = cfg_cluster("3-node-mesh");
+        let mut w0 = core(0, &cfg, "3-node-mesh");
+        let mut w1 = core(1, &cfg, "3-node-mesh");
+        let mut w2 = core(2, &cfg, "3-node-mesh");
+        assert!(w0.runs_cluster_controller(), "lowest-id source hosts the loop");
+        assert!(!w1.runs_cluster_controller());
+        // Minted summaries carry monotone beats, charged +8 B on the wire.
+        let acts = w1.on_gossip_tick(0.0);
+        let Some(Action::Send { env: Envelope::State(s1), .. }) = acts.first() else {
+            panic!("expected state send: {acts:?}");
+        };
+        assert_eq!(s1.beat, Some(1));
+        assert_eq!(s1.encoded_bytes(), crate::policy::BASE_SUMMARY_BYTES + 8);
+        let _ = w0.on_gossip(0.0, 1, s1.clone());
+        let acts = w2.on_gossip_tick(0.0);
+        let Some(Action::Send { env: Envelope::State(s2), .. }) = acts.first() else {
+            panic!("expected state send: {acts:?}");
+        };
+        let _ = w0.on_gossip(0.0, 2, s2.clone());
+        // Hold occupancy in the deadband so only the health path can fire
+        // (3 tasks / 3 active = 1.0, between 0.5 and 3.0).
+        for i in 0..3 {
+            w0.queues.input.push(Task::initial(i, 0, None, 0.0));
+        }
+        // Worker 1 keeps beating; worker 2 goes silent past its deadline
+        // (gossip 0.1 s × 3 beats × jitter ≤ 1.2 → at most 0.36 s).
+        let acts = w1.on_gossip_tick(0.3);
+        let Some(Action::Send { env: Envelope::State(s1), .. }) = acts.first() else {
+            panic!("expected state send: {acts:?}");
+        };
+        let _ = w0.on_gossip(0.3, 1, s1.clone());
+        let acts = w0.on_cluster_tick(0.5);
+        assert_eq!(acts.len(), 1, "{acts:?}");
+        let Action::Scale(d) = &acts[0] else { panic!("{acts:?}") };
+        assert_eq!((d.worker, d.join), (2, false), "the silent peer is retired");
+        assert_eq!(d.reason, ScaleReason::Failure);
+        // The driver applies the retirement; the failover resets the
+        // cooldown, so the next tick inside it stays quiet.
+        let _ = w0.on_churn(0.5, 2, false);
+        assert!(w0.on_cluster_tick(1.0).is_empty(), "cooldown after failover");
+    }
+
+    #[test]
+    fn cluster_tick_scales_up_under_load_and_down_when_idle() {
+        let cfg = cfg_cluster("3-node-mesh");
+        let mut w0 = core(0, &cfg, "3-node-mesh");
+        // Park worker 2: the run starts with a fleet of two.
+        let _ = w0.on_churn(0.0, 2, false);
+        // Occupancy (7 local + 1 gossiped) / 2 active = 4.0 ≥ 3.0: grow.
+        for i in 0..7 {
+            w0.queues.input.push(Task::initial(i, 0, None, 0.0));
+        }
+        let mut s = NeighborSummary::base(1, 0.002, 0.9);
+        s.beat = Some(1);
+        let _ = w0.on_gossip(0.0, 1, s);
+        let acts = w0.on_cluster_tick(0.1);
+        assert_eq!(acts.len(), 1, "{acts:?}");
+        let Action::Scale(d) = &acts[0] else { panic!("{acts:?}") };
+        assert_eq!((d.worker, d.join), (2, true), "wakes the lowest parked id");
+        assert_eq!(d.reason, ScaleReason::Load);
+        assert!(w0.on_cluster_tick(0.2).is_empty(), "cooldown blocks thrash");
+
+        // Idle fleet: the worst-scored (slowest) worker is retired.
+        let mut w0 = core(0, &cfg, "3-node-mesh");
+        let mut lean = NeighborSummary::base(0, 0.002, 0.9);
+        lean.beat = Some(1);
+        let mut slow = NeighborSummary::base(0, 0.050, 0.9);
+        slow.beat = Some(1);
+        let _ = w0.on_gossip(0.0, 1, lean);
+        let _ = w0.on_gossip(0.0, 2, slow);
+        let acts = w0.on_cluster_tick(0.1);
+        assert_eq!(acts.len(), 1, "{acts:?}");
+        let Action::Scale(d) = &acts[0] else { panic!("{acts:?}") };
+        assert_eq!((d.worker, d.join), (2, false), "highest composite cost retires");
+        assert_eq!(d.reason, ScaleReason::Load);
+    }
+
+    #[test]
+    fn cluster_never_scales_a_source_and_sleeps_while_churned_out() {
+        let cfg = cfg_cluster("2-node");
+        let mut w0 = core(0, &cfg, "2-node");
+        // Worker 1 is the only non-source; make IT the source instead so
+        // nothing is eligible for retirement.
+        let mut cfg2 = cfg_cluster("2-node");
+        cfg2.placement = Placement::multi(&[0, 1]);
+        let mut both = WorkerCore::new(0, &cfg2, meta2(), &topo("2-node"), 8);
+        let mut s = NeighborSummary::base(0, 0.002, 0.9);
+        s.beat = Some(1);
+        let _ = both.on_gossip(0.0, 1, s.clone());
+        // Idle (occ 0 ≤ 0.5) but every node is a source: nothing retires,
+        // and a silent source is never failure-retired either.
+        assert!(both.on_cluster_tick(0.1).is_empty());
+        assert!(both.on_cluster_tick(5.0).is_empty(), "sources never retire");
+        // A churned-out controller makes no decisions.
+        let _ = w0.on_gossip(0.0, 1, s);
+        let _ = w0.on_churn(0.05, 0, false);
+        assert!(w0.on_cluster_tick(5.0).is_empty());
+    }
+
+    #[test]
+    fn relayout_adopts_new_routes_and_role() {
+        let cfg = cfg_sources("3-node-mesh", &[0]);
+        let mut w2 = WorkerCore::new(2, &cfg, meta2(), &topo("3-node-mesh"), 8);
+        w2.busy = true;
+        let acts =
+            w2.on_compute_done(0.01, vec![Task::initial(1, 0, None, 0.0)], vec![(out(0.99), 1)], 0.002);
+        assert!(
+            matches!(&acts[0], Action::Send { to: 0, env: Envelope::Result(_), .. }),
+            "mesh default routes results direct: {acts:?}"
+        );
+        // Re-layer with a detour row (as the driver would after a fleet
+        // change): subsequent results ride the new route.
+        let routing = RoutingTable::build(&topo("3-node-mesh"));
+        let role = Role::of(2, &cfg.placement, &routing);
+        let mut row = routing.row(2);
+        row[0] = Some(1);
+        w2.apply_relayout(row, role);
+        w2.busy = true;
+        let acts =
+            w2.on_compute_done(0.02, vec![Task::initial(2, 0, None, 0.0)], vec![(out(0.99), 1)], 0.002);
+        assert!(
+            matches!(&acts[0], Action::Send { to: 1, env: Envelope::Result(_), .. }),
+            "re-layered route via 1: {acts:?}"
+        );
     }
 }

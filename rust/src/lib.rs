@@ -45,6 +45,8 @@
 
 pub mod artifact;
 pub mod cli;
+#[cfg_attr(not(test), warn(clippy::unwrap_used))]
+pub mod cluster;
 // The panic-budget modules additionally carry clippy's unwrap lint in
 // non-test code (xtask's `panic-budget` rule is the deny-by-default gate;
 // the clippy warning catches sites in-editor before CI does).

@@ -95,6 +95,15 @@ fn print_help() {
            --arrival A       workload arrival model at the sources:\n\
                              legacy (default) | constant | poisson |\n\
                              flash-crowd | diurnal | trace:FILE\n\
+           --arrival-source \"N:SPEC,...\"  per-source arrival overrides,\n\
+                             e.g. \"0:poisson,3:flash-crowd\" (others keep\n\
+                             --arrival)\n\
+           --cluster         elastic fleet control plane: heartbeats,\n\
+                             health-driven failover, occupancy autoscaling\n\
+                             with live re-layering (see [cluster] in TOML)\n\
+           --cluster-min N --cluster-max N   fleet size bounds\n\
+           --cluster-initial N   nodes active at t=0 (sources + lowest ids)\n\
+           --cluster-cooldown S --cluster-interval S   scaling cadence\n\
            --piggyback       ride gossip summaries on outbound task/result\n\
                              envelopes headed to the same neighbor\n\
            --timeline [FILE] controller/queue timeline JSON (was --trace)\n\
@@ -256,6 +265,40 @@ fn build_config(args: &Args) -> Result<ExperimentConfig> {
     // keeps the seed's pacing bit for bit).
     cfg.workload.arrival = mdi_exit::workload::ArrivalSpec::parse_cli(args.str_or("arrival", "legacy"))
         .map_err(|e| anyhow::anyhow!("--arrival: {e}"))?;
+    // Per-source mixes: --arrival-source "3:flash-crowd,5:poisson" gives the
+    // listed sources their own model (the rest keep --arrival). One flag
+    // carries every pair — repeated flags overwrite each other.
+    let mixes = args.str_or("arrival-source", "");
+    if !mixes.is_empty() {
+        let mut sources = Vec::new();
+        for pair in mixes.split(',') {
+            let (node, spec) = pair.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("--arrival-source: expected N:SPEC, got {pair:?}")
+            })?;
+            let node: usize = node
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--arrival-source: bad node id {node:?}"))?;
+            let spec = mdi_exit::workload::ArrivalSpec::parse_cli(spec)
+                .map_err(|e| anyhow::anyhow!("--arrival-source: {e}"))?;
+            sources.push((node, spec));
+        }
+        sources.sort_by_key(|(n, _)| *n);
+        cfg.workload.sources = sources;
+    }
+    // Elastic fleet control plane (crate::cluster): --cluster flips it on;
+    // unset knobs keep the [cluster]-section defaults.
+    cfg.cluster.enabled = args.bool_or("cluster", false)?;
+    if cfg.cluster.enabled {
+        cfg.cluster.min_workers = args.usize_or("cluster-min", cfg.cluster.min_workers)?;
+        cfg.cluster.max_workers = args.usize_or("cluster-max", cfg.cluster.max_workers)?;
+        cfg.cluster.cooldown_s = args.f64_or("cluster-cooldown", cfg.cluster.cooldown_s)?;
+        cfg.cluster.check_interval_s =
+            args.f64_or("cluster-interval", cfg.cluster.check_interval_s)?;
+        if args.has("cluster-initial") {
+            cfg.cluster.initial_workers = Some(args.usize_or("cluster-initial", 1)?);
+        }
+    }
     cfg.gossip_piggyback = args.bool_or("piggyback", false)?;
     cfg.seed = args.u64_or("seed", 7)?;
     apply_telemetry_flags(&mut cfg, args)?;

@@ -26,6 +26,10 @@ const SLACK_BYTES: usize = 8;
 /// Wire bytes per transitive region-load entry (node u16 + load u32 +
 /// hops u8 + pad).
 const REGION_ENTRY_BYTES: usize = 8;
+/// Wire bytes for the cluster heartbeat sequence number (u64). Only
+/// charged when the control plane is on and stamps it — default runs
+/// gossip exactly the seed's bytes.
+const HEARTBEAT_BYTES: usize = 8;
 
 /// One node's load as seen (possibly several hops away) by a gossiping
 /// worker: the payload of the multi-hop region table.
@@ -65,6 +69,12 @@ pub struct NeighborSummary {
     /// multi-hop offloading. Entries describe nodes other than the sender
     /// (whose own load is `input_len`).
     pub region: Vec<RegionLoad>,
+    /// Cluster heartbeat sequence number, stamped by the sender once per
+    /// minted summary when the elastic control plane is enabled
+    /// (`crate::cluster`). The receiver's health checker treats a strictly
+    /// increasing beat as proof of life; `None` (the default) keeps the
+    /// summary — and its wire charge — exactly at the seed's.
+    pub beat: Option<u64>,
 }
 
 impl NeighborSummary {
@@ -78,6 +88,7 @@ impl NeighborSummary {
             per_class_input: Vec::new(),
             min_slack_s: None,
             region: Vec::new(),
+            beat: None,
         }
     }
 
@@ -90,6 +101,7 @@ impl NeighborSummary {
             + self.per_class_input.len() * PER_CLASS_ENTRY_BYTES
             + self.min_slack_s.map_or(0, |_| SLACK_BYTES)
             + self.region.len() * REGION_ENTRY_BYTES
+            + self.beat.map_or(0, |_| HEARTBEAT_BYTES)
     }
 
     /// Overwrite `self` with `src`, reusing the existing `Vec`
@@ -104,6 +116,7 @@ impl NeighborSummary {
         self.per_class_input.clone_from(&src.per_class_input);
         self.min_slack_s = src.min_slack_s;
         self.region.clone_from(&src.region);
+        self.beat = src.beat;
     }
 
     /// The base-field view the pure Alg. 2 functions consume.
@@ -138,6 +151,8 @@ mod tests {
             RegionLoad { node: 4, input_len: 7, hops: 2 },
         ];
         assert_eq!(s.encoded_bytes(), 32 + 8 + 8 + 16);
+        s.beat = Some(12);
+        assert_eq!(s.encoded_bytes(), 32 + 8 + 8 + 16 + 8, "heartbeat charges 8 B when stamped");
     }
 
     #[test]
@@ -147,6 +162,7 @@ mod tests {
         src.per_class_input = vec![3, 2];
         src.min_slack_s = Some(0.1);
         src.region = vec![RegionLoad { node: 2, input_len: 9, hops: 1 }];
+        src.beat = Some(3);
         let mut dst = NeighborSummary::base(0, 0.01, 0.9);
         dst.per_class_input = vec![7; 8]; // stale content must be replaced
         dst.copy_from(&src);

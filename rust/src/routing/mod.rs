@@ -38,11 +38,20 @@
 //!    transport (virtual link delay, threaded `DelayNet`) can carry the
 //!    send without knowing anything about the rest of the route.
 //!
-//! Routes are computed once per run from the static topology. Churn does
-//! not re-route: a leaving worker stops *computing*, but its radio keeps
-//! forwarding (the fabric's no-data-loss guarantee; the alternative —
-//! recomputing routes on every churn event — would let one flapping node
-//! strand every in-flight result behind it).
+//! ## Re-routing under churn
+//!
+//! The static table ([`RoutingTable::build`]) is computed once per run;
+//! by itself, churn does not re-route — a leaving worker stops
+//! *computing*, but its radio keeps forwarding (the fabric's no-data-loss
+//! guarantee). When the elastic control plane (`crate::cluster`) is on,
+//! drivers instead rebuild the table on every join/leave with
+//! [`RoutingTable::build_active`]: new traffic avoids inactive *relays*,
+//! while the in-flight forwarding rules keep the old guarantee —
+//! a departed node still forwards what it holds (its own row stays
+//! routable), and any destination stranded behind dead relays falls back
+//! to its static route rather than blackholing. One flapping node can
+//! therefore never strand an in-flight result, with or without the
+//! control plane.
 
 use anyhow::{bail, Result};
 
@@ -93,6 +102,58 @@ impl RoutingTable {
             let (d, first) = dijkstra(&adj, from);
             dist[from] = d;
             next[from] = first;
+        }
+        RoutingTable { n, next, dist }
+    }
+
+    /// Churn-aware variant: shortest paths that only *relay* through
+    /// active nodes. The rules (see the module docs):
+    ///
+    /// * an inactive node never forwards **new** traffic — edges out of
+    ///   inactive nodes are not relaxed, except out of the path's origin
+    ///   (a departed worker must still drain what it already holds);
+    /// * inactive nodes remain valid **destinations** (one terminal hop
+    ///   onto a parked radio is allowed; it just never extends a path);
+    /// * pairs left unreachable by the gating fall back to the static
+    ///   table's route, so re-routing can only improve — never sever —
+    ///   connectivity.
+    ///
+    /// The mixture stays loop-free: a gated route never relays through a
+    /// node whose own gated route is missing (no active path through it
+    /// exists either), so a fallback hop always lands on a node that makes
+    /// static-route progress or resumes a gated route.
+    pub fn build_active(topo: &Topology, active: &[bool]) -> RoutingTable {
+        let full = RoutingTable::build(topo);
+        if active.len() != topo.n || active.iter().all(|&a| a) {
+            return full;
+        }
+        let n = topo.n;
+        let adj: Vec<Vec<(usize, f64)>> = (0..n)
+            .map(|u| {
+                topo.neighbors(u)
+                    .into_iter()
+                    .filter_map(|v| {
+                        topo.link(u, v).map(|w| (v, w.mean_delay_s(REF_BYTES)))
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut next = vec![vec![None; n]; n];
+        let mut dist = vec![vec![f64::INFINITY; n]; n];
+        for from in 0..n {
+            let (d, first) = dijkstra_gated(&adj, from, active);
+            dist[from] = d;
+            next[from] = first;
+        }
+        // Fallback merge: any pair the gating disconnected keeps its
+        // static route (dead radios keep forwarding in-flight traffic).
+        for from in 0..n {
+            for to in 0..n {
+                if !dist[from][to].is_finite() && full.dist[from][to].is_finite() {
+                    dist[from][to] = full.dist[from][to];
+                    next[from][to] = full.next[from][to];
+                }
+            }
         }
         RoutingTable { n, next, dist }
     }
@@ -194,6 +255,43 @@ fn dijkstra(adj: &[Vec<(usize, f64)>], src: usize) -> (Vec<f64>, Vec<Option<usiz
     (dist, first)
 }
 
+/// Dijkstra with relay gating: edges are only relaxed out of `src` itself
+/// and out of active nodes, so inactive nodes terminate — never extend —
+/// paths. Tie-breaking matches [`dijkstra`] exactly (ascending `(d, id)`
+/// settle order, strict-improvement relaxation), so on an all-active
+/// fleet the two produce identical tables.
+fn dijkstra_gated(
+    adj: &[Vec<(usize, f64)>],
+    src: usize,
+    active: &[bool],
+) -> (Vec<f64>, Vec<Option<usize>>) {
+    let n = adj.len();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut first = vec![None; n];
+    let mut done = vec![false; n];
+    let mut heap = std::collections::BinaryHeap::new();
+    dist[src] = 0.0;
+    heap.push(HeapKey { d: 0.0, u: src });
+    while let Some(HeapKey { d, u }) = heap.pop() {
+        if done[u] || d > dist[u] {
+            continue;
+        }
+        done[u] = true;
+        if u != src && !active.get(u).copied().unwrap_or(true) {
+            continue; // parked radio: terminal hop only
+        }
+        for &(v, w) in &adj[u] {
+            let nd = d + w;
+            if nd < dist[v] {
+                dist[v] = nd;
+                first[v] = if u == src { Some(v) } else { first[u] };
+                heap.push(HeapKey { d: nd, u: v });
+            }
+        }
+    }
+    (dist, first)
+}
+
 // ---------------------------------------------------------------------------
 // Placement
 // ---------------------------------------------------------------------------
@@ -265,9 +363,13 @@ impl Placement {
     }
 
     /// Structural validation against a topology of `n` nodes and its churn
-    /// schedule. Sources must exist, be unique, be in range, carry positive
-    /// shares — and never churn (an admitting node leaving mid-run would
-    /// orphan its whole task lineage).
+    /// schedule. Sources must exist, be unique, be in range, and carry
+    /// positive shares. A source *may* appear in the churn schedule — the
+    /// elastic control plane retires source nodes after failover — as long
+    /// as at least one source never leaves, so admission always has
+    /// surviving coverage. A schedule that would churn out every source is
+    /// rejected (nothing would admit, and every orphaned lineage would have
+    /// nowhere to re-home).
     pub fn validate(&self, n: usize, churn: &[ChurnEvent]) -> Result<()> {
         if self.sources.is_empty() {
             bail!("placement declares no sources");
@@ -283,10 +385,17 @@ impl Placement {
                 bail!("placement source {} declared twice", s.node);
             }
         }
-        for e in churn {
-            if self.is_source(e.worker) {
-                bail!("churn schedule touches source node {} (sources cannot churn)", e.worker);
-            }
+        let covering = self
+            .sources
+            .iter()
+            .filter(|s| !churn.iter().any(|e| e.worker == s.node && !e.join))
+            .count();
+        if covering == 0 && churn.iter().any(|e| self.is_source(e.worker) && !e.join) {
+            bail!(
+                "churn schedule retires every source ({:?}) — at least one source \
+                 must stay up to cover admission",
+                self.source_nodes()
+            );
         }
         Ok(())
     }
@@ -455,8 +564,64 @@ mod tests {
                 .is_err(),
             "zero share"
         );
-        assert!(Placement::multi(&[0, 3]).validate(4, &churn_3).is_err(), "source churns");
+        // A source may churn out as long as another source stays up to
+        // cover admission (the control plane retires sources after
+        // failover); a schedule that retires *every* source is rejected.
+        assert!(
+            Placement::multi(&[0, 3]).validate(4, &churn_3).is_ok(),
+            "source 3 may retire: source 0 covers"
+        );
         assert!(Placement::single(0).validate(4, &churn_3).is_ok());
+        let churn_0 = vec![ChurnEvent { at_s: 1.0, worker: 0, join: false }];
+        assert!(Placement::single(0).validate(4, &churn_0).is_err(), "no covering source");
+        let churn_both = vec![
+            ChurnEvent { at_s: 1.0, worker: 0, join: false },
+            ChurnEvent { at_s: 2.0, worker: 3, join: false },
+        ];
+        assert!(
+            Placement::multi(&[0, 3]).validate(4, &churn_both).is_err(),
+            "all sources retire"
+        );
+    }
+
+    #[test]
+    fn build_active_avoids_parked_relays() {
+        // Line 0-1-2-3 with node 1 parked: 0 can no longer relay through
+        // 1... but the line has no detour, so the static fallback keeps
+        // 0 → 3 routable through 1's still-forwarding radio.
+        let t = topo("line-4");
+        let mut active = vec![true; 4];
+        active[1] = false;
+        let rt = RoutingTable::build_active(&t, &active);
+        assert_eq!(rt.next_hop(0, 3), Some(1), "no detour: static fallback");
+        // The parked node itself still drains what it holds.
+        assert_eq!(rt.next_hop(1, 3), Some(2));
+        assert_eq!(rt.next_hop(1, 0), Some(0));
+        // Terminal hops onto the parked radio stay valid.
+        assert_eq!(rt.next_hop(0, 1), Some(1));
+
+        // Diamond 0-1-3 / 0-2-3 with 1 parked: traffic takes the detour.
+        let mut d = Topology::empty("diamond", 4);
+        let l = LinkSpec::wifi();
+        d.connect(0, 1, l);
+        d.connect(0, 2, l);
+        d.connect(1, 3, l);
+        d.connect(2, 3, l);
+        let mut active = vec![true; 4];
+        active[1] = false;
+        let rt = RoutingTable::build_active(&d, &active);
+        assert_eq!(rt.next_hop(0, 3), Some(2), "re-routed around the parked relay");
+        assert_eq!(rt.next_hop(3, 0), Some(2));
+        assert_eq!(rt.next_hop(1, 3), Some(3), "parked node still forwards out");
+
+        // All-active must reproduce the static table bit for bit.
+        let full = RoutingTable::build(&d);
+        let all = RoutingTable::build_active(&d, &vec![true; 4]);
+        for a in 0..4 {
+            for b in 0..4 {
+                assert_eq!(all.next_hop(a, b), full.next_hop(a, b));
+            }
+        }
     }
 
     #[test]

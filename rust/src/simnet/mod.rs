@@ -64,7 +64,8 @@ impl Default for WorkerSpec {
 }
 
 /// A worker joining or leaving mid-run (paper §III: "workers join and
-/// leave the system anytime"). Source nodes never churn — enforced by
+/// leave the system anytime"). A source may leave as long as at least one
+/// covering source survives the whole schedule — enforced by
 /// `routing::Placement::validate`, which knows where the sources are.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ChurnEvent {
@@ -413,8 +414,9 @@ impl Topology {
     }
 
     /// Attach a churn schedule. Which nodes may churn is a *placement*
-    /// question (sources cannot leave) and is validated by
-    /// `routing::Placement::validate`, where the source set lives.
+    /// question (admission must stay covered by at least one source) and is
+    /// validated by `routing::Placement::validate`, where the source set
+    /// lives.
     pub fn with_churn(mut self, churn: Vec<ChurnEvent>) -> Topology {
         for e in &churn {
             assert!(e.worker < self.n, "churn worker {} out of range", e.worker);

@@ -235,6 +235,13 @@ pub enum TelemetryEvent {
     ChurnRehome { t: f64, worker: usize, drained: usize },
     /// Work was lost (with accounting) — see [`DropReason`].
     Drop { t: f64, worker: usize, task: u64, class: u8, count: usize, reason: DropReason },
+    /// The elastic control plane resized the fleet: `worker` joined
+    /// (spawned from parking) or left (load retirement / failover).
+    /// `reason` is the [`ScaleReason`](crate::cluster::ScaleReason) label;
+    /// `fleet` is the active-node count after the change. Retirements
+    /// snapshot the flight ring — the events leading up to a shrink are
+    /// exactly what post-hoc scaling analysis needs.
+    Scale { t: f64, worker: usize, join: bool, reason: &'static str, fleet: usize },
     /// A metrics-cadence snapshot of the core's gauges and counters.
     MetricsTick(CoreSample),
 }
@@ -252,7 +259,8 @@ impl TelemetryEvent {
             | TelemetryEvent::WireSend { t, .. }
             | TelemetryEvent::WireRecv { t, .. }
             | TelemetryEvent::ChurnRehome { t, .. }
-            | TelemetryEvent::Drop { t, .. } => *t,
+            | TelemetryEvent::Drop { t, .. }
+            | TelemetryEvent::Scale { t, .. } => *t,
             TelemetryEvent::MetricsTick(s) => s.t_s,
         }
     }
@@ -348,6 +356,14 @@ impl TelemetryEvent {
                 ("class", (*class as usize).into()),
                 ("count", (*count).into()),
                 ("reason", reason.label().into()),
+            ]),
+            TelemetryEvent::Scale { t, worker, join, reason, fleet } => obj(vec![
+                ("ev", "scale".into()),
+                ("t_s", (*t).into()),
+                ("worker", (*worker).into()),
+                ("join", (*join).into()),
+                ("reason", (*reason).into()),
+                ("fleet", (*fleet).into()),
             ]),
             TelemetryEvent::MetricsTick(s) => obj(vec![
                 ("ev", "metrics-tick".into()),
@@ -1084,6 +1100,16 @@ impl Recorder for TelemetrySink {
             TelemetryEvent::Drop { t, count, reason, .. } => {
                 self.anomaly(t, format!("drop ({count} tasks, {})", reason.label()));
             }
+            TelemetryEvent::Scale { t, worker, join, reason, fleet } => {
+                // A shrink is the anomaly-shaped half: snapshot what led
+                // up to losing a worker. Spawns just ride the ring.
+                if !join {
+                    self.anomaly(
+                        t,
+                        format!("scale ({reason}: worker {worker} retired, fleet {fleet})"),
+                    );
+                }
+            }
             TelemetryEvent::MetricsTick(ref s) => {
                 let s = s.clone();
                 self.sample(&s);
@@ -1250,6 +1276,33 @@ mod tests {
         assert!(matches!(d.events[3], TelemetryEvent::Drop { .. }));
         // JSONL export carries the dump.
         assert!(data.metrics_jsonl().contains("flight-dump"));
+    }
+
+    #[test]
+    fn scale_retirement_dumps_the_flight_ring_but_spawn_does_not() {
+        let mut s = sink(false, false, 4);
+        s.record(&admit(1.0, 1));
+        s.record(&TelemetryEvent::Scale {
+            t: 2.0,
+            worker: 3,
+            join: true,
+            reason: "load",
+            fleet: 4,
+        });
+        assert!(s.dumps.is_empty(), "a spawn is not an anomaly");
+        s.record(&TelemetryEvent::Scale {
+            t: 3.0,
+            worker: 2,
+            join: false,
+            reason: "failure",
+            fleet: 3,
+        });
+        let data = Box::new(s).finish();
+        assert_eq!(data.dumps.len(), 1);
+        let d = &data.dumps[0];
+        assert!(d.reason.contains("failure"), "{}", d.reason);
+        assert!(d.reason.contains("worker 2"), "{}", d.reason);
+        assert!(matches!(d.events.last(), Some(TelemetryEvent::Scale { join: false, .. })));
     }
 
     #[test]

@@ -62,6 +62,15 @@ pub mod streams {
     /// `testkit::prop` per-case derivation stream.
     pub const PROP_CASES: u64 = 42;
 
+    /// Per-node cluster health-checker jitter: `CLUSTER_HEALTH_BASE + id`.
+    /// Dedicated range (fresh, above the arrival streams) so enabling the
+    /// control plane never perturbs admission, offload, or link-jitter
+    /// draws — the seed wire accounting stays bit-for-bit when the
+    /// heartbeat deadline jitter is the only new randomness.
+    pub const CLUSTER_HEALTH_BASE: u64 = 1_100_000;
+    /// Width of the [`CLUSTER_HEALTH_BASE`] range.
+    pub const CLUSTER_HEALTH_SPAN: u64 = 4096;
+
     /// All reservations as `(name, base, span)`; plain constants have
     /// span 1. Used by the disjointness test and kept in sync with the
     /// declarations above (xtask checks the declarations themselves).
@@ -74,6 +83,7 @@ pub mod streams {
             ("DES_LINK_JITTER", DES_LINK_JITTER, 1),
             ("ARRIVAL_STREAM", ARRIVAL_STREAM_BASE, ARRIVAL_STREAM_SPAN),
             ("PROP_CASES", PROP_CASES, 1),
+            ("CLUSTER_HEALTH", CLUSTER_HEALTH_BASE, CLUSTER_HEALTH_SPAN),
         ]
     }
 }

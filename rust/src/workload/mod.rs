@@ -180,16 +180,44 @@ impl ArrivalSpec {
 }
 
 /// Workload description attached to [`crate::coordinator::ExperimentConfig`].
-/// A struct (not a bare spec) so later growth — per-source model mixes,
-/// mobility — lands here without another config migration.
+/// A struct (not a bare spec) so later growth — mobility, correlated
+/// bursts — lands here without another config migration.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct WorkloadConfig {
+    /// The arrival process every source runs unless overridden below.
     pub arrival: ArrivalSpec,
+    /// Per-source overrides: `(source node, spec)` pairs, sorted by node
+    /// (TOML `[workload.sources.N]`, CLI `--arrival-source N:SPEC,...`).
+    /// Sources not listed share `arrival`. Entries for nodes that are not
+    /// sources are harmless — only [`WorkloadConfig::spec_for`] calls from
+    /// admitting cores ever read them.
+    pub sources: Vec<(usize, ArrivalSpec)>,
 }
 
 impl WorkloadConfig {
+    /// The arrival spec source `node` runs: its override if listed, the
+    /// shared spec otherwise.
+    pub fn spec_for(&self, node: usize) -> &ArrivalSpec {
+        self.sources
+            .iter()
+            .find(|(n, _)| *n == node)
+            .map(|(_, spec)| spec)
+            .unwrap_or(&self.arrival)
+    }
+
     pub fn validate(&self) -> Result<()> {
-        self.arrival.validate()
+        self.arrival.validate()?;
+        for (node, spec) in &self.sources {
+            spec.validate()
+                .map_err(|e| anyhow::anyhow!("workload.sources.{node}: {e}"))?;
+        }
+        let mut nodes: Vec<usize> = self.sources.iter().map(|(n, _)| *n).collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        if nodes.len() != self.sources.len() {
+            bail!("workload.sources lists a source twice");
+        }
+        Ok(())
     }
 }
 
@@ -412,5 +440,31 @@ mod tests {
         assert!(ArrivalSpec::Trace { dts: vec![] }.validate().is_err());
         assert!(ArrivalSpec::Trace { dts: vec![0.1, 0.0] }.validate().is_err());
         assert!(WorkloadConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn spec_for_prefers_the_override() {
+        let cfg = WorkloadConfig {
+            arrival: ArrivalSpec::Poisson,
+            sources: vec![(3, ArrivalSpec::Constant)],
+        };
+        assert!(cfg.validate().is_ok());
+        assert_eq!(*cfg.spec_for(3), ArrivalSpec::Constant);
+        assert_eq!(*cfg.spec_for(0), ArrivalSpec::Poisson, "unlisted sources share");
+    }
+
+    #[test]
+    fn per_source_validation_names_the_source() {
+        let cfg = WorkloadConfig {
+            arrival: ArrivalSpec::Legacy,
+            sources: vec![(2, ArrivalSpec::Diurnal { period_s: 0.0, depth: 0.5 })],
+        };
+        let err = cfg.validate().expect_err("bad override").to_string();
+        assert!(err.contains("workload.sources.2"), "{err}");
+        let cfg = WorkloadConfig {
+            arrival: ArrivalSpec::Legacy,
+            sources: vec![(1, ArrivalSpec::Poisson), (1, ArrivalSpec::Constant)],
+        };
+        assert!(cfg.validate().is_err(), "duplicate source rejected");
     }
 }

@@ -590,3 +590,56 @@ fn realtime_churn_rehomes_like_des() {
     assert!(rt.rehomed > 0, "realtime: no re-homing on churn (rehomed = 0)");
     assert!(des.completed > 0 && rt.completed > 0);
 }
+
+#[test]
+fn cluster_relayers_around_a_midpath_leave_on_both_drivers() {
+    use mdi_exit::simnet::ChurnEvent;
+    let _g = serialized();
+    let (_, labels) = oracle3();
+    // Elastic control plane ON, worker 1 (a mid-path relay on the grid,
+    // adjacent to the corner source) leaves at t = 1 s while the
+    // stage-3-heavy overload keeps continuing work and results flowing
+    // through it. Both drivers must re-home its queued tasks, rebuild
+    // routing around the hole (the grid offers alternate paths), and keep
+    // delivering every completion to the admitting source. Load-driven
+    // scaling is neutralized (thresholds no sane occupancy can cross, and
+    // `min_workers` at the full fleet blocks retirements) so the autoscaler
+    // cannot respawn the leaver or park idle nodes — the test isolates the
+    // churn -> re-home -> re-layer path.
+    let cl = |mut c: ExperimentConfig| {
+        c.cluster.enabled = true;
+        c.cluster.scale_up_occupancy = 1e18;
+        c.cluster.min_workers = 9;
+        c.warmup_s = 0.0;
+        c.churn = vec![ChurnEvent { at_s: 1.0, worker: 1, join: false }];
+        c
+    };
+    let des = run_des3(cl(cfg("grid-3x3", 700.0, 6.0)), &labels);
+    let rt = run_rt3(cl(cfg("grid-3x3", 700.0, 3.0)), &labels);
+
+    for (name, r) in [("DES", &des), ("realtime", &rt)] {
+        assert!(r.completed > 100, "{name}: completed {}", r.completed);
+        assert!(r.rehomed > 0, "{name}: the leaver's queued tasks must re-home");
+        // Work continued on the surviving fleet past the leaver.
+        let remote: u64 = r.per_worker[2..].iter().map(|w| w.processed).sum();
+        assert!(remote > 0, "{name}: survivors never processed tasks");
+        // Nothing lost or duplicated across the re-layout: every completion
+        // the run counted landed at a source's per-source row.
+        let by_source: u64 = r.per_source.iter().map(|s| s.completed).sum();
+        assert_eq!(by_source, r.completed, "{name}: per-source counters conserve");
+        // The cost integral bills the live fleet: 9 nodes for 1 s, 8 after.
+        let expect = 9.0 + 8.0 * (r.duration_s - 1.0);
+        assert!(
+            (r.worker_seconds - expect).abs() < 1e-6,
+            "{name}: worker_seconds {} (expected {expect})",
+            r.worker_seconds
+        );
+    }
+
+    // The two drivers agree on behaviour, not just survival.
+    let (fd, fr) = (des.exit_fractions(), rt.exit_fractions());
+    assert!(
+        (fd[0] - fr[0]).abs() < 0.15,
+        "exit-1 fraction diverged: DES {fd:?} vs realtime {fr:?}"
+    );
+}

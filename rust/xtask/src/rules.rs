@@ -12,7 +12,7 @@
 //! * `telemetry-purity` — no RNG or clock identifiers inside
 //!   `telemetry/` (recorders observe; they never perturb).
 //! * `panic-budget` — no `unwrap`/`expect`/`panic!`-family in non-test
-//!   code under `coordinator/`, `net/`, `policy/`, `sched/`.
+//!   code under `cluster/`, `coordinator/`, `net/`, `policy/`, `sched/`.
 //!
 //! Rules operate on cleaned text + test mask from [`crate::scan`] and
 //! report against the original line text so allowlist entries can match
@@ -424,7 +424,8 @@ pub fn telemetry_purity(
 // panic-budget
 // ---------------------------------------------------------------------------
 
-const PANIC_DIRS: [&str; 4] = ["/coordinator/", "/net/", "/policy/", "/sched/"];
+const PANIC_DIRS: [&str; 5] =
+    ["/cluster/", "/coordinator/", "/net/", "/policy/", "/sched/"];
 const PANIC_PATTERNS: [&[u8]; 6] =
     [b".unwrap()", b".expect(", b"panic!", b"unreachable!", b"todo!", b"unimplemented!"];
 
@@ -581,6 +582,8 @@ mod tests {
         ] {
             assert_eq!(rules_of(&run("src/net/mod.rs", pat_src)), ["panic-budget"], "{pat_src}");
         }
+        // The elastic control plane is decision-critical too.
+        assert_eq!(rules_of(&run("src/cluster/health.rs", bad)), ["panic-budget"], "{bad}");
         // Out-of-scope dirs and test code are exempt.
         assert!(run("src/simnet/transport.rs", bad).is_empty());
         let in_test = "#[cfg(test)]\nmod tests { fn t() { Some(1).unwrap(); } }";
