@@ -38,7 +38,7 @@ use super::config::ExperimentConfig;
 use super::report::{ClassStats, RunReport};
 use super::task::{InferenceResult, Task};
 use super::worker::{
-    encode_batch, execute_batch, Action, Clock, ModelMeta, TaskOrigin, WallClock, WorkerCore,
+    execute_batch, Action, Clock, ModelMeta, TaskOrigin, WallClock, WorkerCore,
 };
 use crate::cluster::ScaleDecision;
 use crate::dataset::Dataset;
@@ -537,24 +537,14 @@ impl<'a> RtWorker<'a> {
                     let mut env = env;
                     let is_task = env.is_task_batch();
                     if needs_encode {
-                        let pre_bytes = env.encoded_bytes(self.meta);
-                        if let Some(tasks) = env.task_batch_mut() {
-                            // Shared with the DES driver: encode each
-                            // tensor, ship raw on failure (the charge
-                            // function then prices the raw tensor). The
-                            // encoded count only matters to the DES
-                            // driver's virtual cost charge.
-                            let _ = encode_batch(self.engine, tasks);
-                        }
-                        // Reconcile the core's wire counter when a
-                        // fallback shipped raw tensors (the emit-time
-                        // count used the code size).
-                        let post_bytes = env.encoded_bytes(self.meta);
-                        if post_bytes > pre_bytes {
-                            let now = self.clock.now();
-                            self.core
-                                .note_wire_recharge(now, (post_bytes - pre_bytes) as u64);
-                        }
+                        // Shared with the DES driver: one batched encoder
+                        // forward for the whole envelope, raw fallback per
+                        // tensor (the charge function then prices the raw
+                        // tensor), wire-counter reconciliation included.
+                        // The forward count only matters to the DES
+                        // driver's virtual cost charge.
+                        let now = self.clock.now();
+                        let _ = self.core.encode_for_wire(self.engine, now, &mut env);
                     }
                     // One shared charging function with the DES driver —
                     // sized after the AE step, framed once per envelope.

@@ -35,7 +35,7 @@ use super::equeue::{EventQueue, QueueKind};
 use super::report::{RunReport, TracePoint};
 use super::task::{InferenceResult, Task};
 use super::worker::{
-    encode_batch, execute_batch, Action, Clock, TaskOrigin, VirtualClock, WorkerCore,
+    execute_batch, Action, Clock, TaskOrigin, VirtualClock, WorkerCore,
 };
 use crate::cluster::ScaleDecision;
 use crate::log_debug;
@@ -310,19 +310,13 @@ impl<'a> Simulation<'a> {
                     let mut env = env;
                     let mut enc_cost = 0.0;
                     if needs_encode {
-                        let pre_bytes = env.encoded_bytes(&self.meta);
-                        if let Some(tasks) = env.task_batch_mut() {
-                            enc_cost =
-                                encode_batch(self.engine, tasks) as f64 * self.enc_cost_s(n);
-                        }
-                        // An encode fallback shipped raw tensors: the core
-                        // counted code bytes at emit time, so reconcile
-                        // its wire counter with the actual charge.
-                        let post_bytes = env.encoded_bytes(&self.meta);
-                        if post_bytes > pre_bytes {
-                            self.workers[n]
-                                .note_wire_recharge(now, (post_bytes - pre_bytes) as u64);
-                        }
+                        // Shared with the realtime driver: one batched
+                        // encoder forward for the whole envelope, raw
+                        // fallback per tensor, wire-counter reconciliation
+                        // when a fallback shipped raw.
+                        let forwards =
+                            self.workers[n].encode_for_wire(self.engine, now, &mut env);
+                        enc_cost = forwards as f64 * self.enc_cost_s(n);
                     }
                     let bytes = env.encoded_bytes(&self.meta);
                     // Encoding costs compute on the sender; fold it into

@@ -332,7 +332,12 @@ impl WorkerCore {
 
         let next_hop = routing.row(id);
         let exit_policy = cfg.policy.build_exit();
-        let offload = cfg.policy.build_offload(id, n);
+        let mut offload = cfg.policy.build_offload(id, n);
+        if cfg.sched.coalesce == CoalesceMode::Adaptive {
+            // Decorate the configured policy with the contention-driven
+            // run-sizing seam; every offload decision still belongs to it.
+            offload = Box::new(crate::policy::AdaptiveCoalesce::new(offload));
+        }
         let adapt = if role.is_source {
             cfg.policy.build_adapt(&cfg.admission, cfg.adapt)
         } else {
@@ -900,7 +905,7 @@ impl WorkerCore {
     fn coalesce_cap(&self) -> usize {
         match self.cfg.sched.coalesce {
             CoalesceMode::Off => 1,
-            CoalesceMode::Stage | CoalesceMode::StageClass => {
+            CoalesceMode::Stage | CoalesceMode::StageClass | CoalesceMode::Adaptive => {
                 self.cfg.sched.coalesce_max.max(1)
             }
         }
@@ -1484,6 +1489,31 @@ impl WorkerCore {
         }
     }
 
+    /// The sender-side AE step both drivers run on a `needs_encode` send,
+    /// in one place: batch-encode the envelope's tasks (one shared
+    /// encoder forward — see [`encode_batch`]), then reconcile this
+    /// worker's wire counter if a fallback shipped raw tensors (the core
+    /// counted code bytes at emit time). Returns the number of encoder
+    /// forward passes, which only the DES driver prices (`enc_cost_s`);
+    /// non-task envelopes encode nothing and return 0.
+    pub fn encode_for_wire(
+        &mut self,
+        engine: &dyn InferenceEngine,
+        now: f64,
+        env: &mut Envelope,
+    ) -> usize {
+        let pre = env.encoded_bytes(&self.meta);
+        let forwards = match env.task_batch_mut() {
+            Some(tasks) => encode_batch(engine, tasks),
+            None => 0,
+        };
+        let post = env.encoded_bytes(&self.meta);
+        if post > pre {
+            self.note_wire_recharge(now, (post - pre) as u64);
+        }
+        forwards
+    }
+
     /// Optimistic default for a peer never heard from (empty queue, fast
     /// compute, measured-or-default transfer delay).
     fn default_summary(&self, m: usize) -> NeighborSummary {
@@ -1578,11 +1608,21 @@ impl WorkerCore {
                     candidates: &self.cand_buf,
                     next_hop: &self.next_hop,
                 };
-                self.offload.choose_coalesced(&ctx, run_len, &mut self.rng)
+                match self.offload.choose_coalesced(&ctx, run_len, &mut self.rng) {
+                    // The accepted target fixes the link; the sizing seam
+                    // may now shrink the drained run (adaptive
+                    // coalescing). Clamped: never longer than priced.
+                    Some(m) => {
+                        let take =
+                            self.offload.coalesce_take(&ctx, m, run_len).clamp(1, run_len);
+                        Some((m, take))
+                    }
+                    None => None,
+                }
             };
 
             match chosen {
-                Some(m) => {
+                Some((m, take)) => {
                     debug_assert!(
                         self.cand_buf.iter().any(|(c, _)| *c == m),
                         "policy chose {m}, not an active neighbor"
@@ -1602,18 +1642,20 @@ impl WorkerCore {
                     if self.cfg.sched.coalesce != CoalesceMode::Off {
                         // Drain the same-stage (same-class under
                         // stage-class) run behind the head into the same
-                        // envelope — capped at `run_len`, the run the
-                        // policy actually priced (a conservative hint
-                        // ships a shorter run, never a longer one).
-                        // `expire` ran above, so peeks are truthful about
-                        // what a pop returns.
-                        while batch.len() < run_len {
-                            let take = self.queues.output.peek().is_some_and(|t| {
+                        // envelope — capped at `take`, the size the policy
+                        // seam settled on (at most the `run_len` it
+                        // priced; a conservative hint ships a shorter run,
+                        // never a longer one). `expire` ran above, so
+                        // peeks are truthful about what a pop returns.
+                        while batch.len() < take {
+                            let drain = self.queues.output.peek().is_some_and(|t| {
                                 t.stage == stage
-                                    && (self.cfg.sched.coalesce == CoalesceMode::Stage
-                                        || t.class == class)
+                                    && (!matches!(
+                                        self.cfg.sched.coalesce,
+                                        CoalesceMode::StageClass
+                                    ) || t.class == class)
                             });
-                            if !take {
+                            if !drain {
                                 break;
                             }
                             let t = self
@@ -1674,35 +1716,55 @@ impl WorkerCore {
 // ---------------------------------------------------------------------------
 
 /// Sender-side autoencoder step for an outgoing task batch, shared by
-/// both drivers (`needs_encode` sends only). For every task the core
-/// marked `encoded`: a real feature tensor is run through the engine's
-/// encoder; when the engine has none (or errors), the task ships raw —
-/// `encoded` flips back so the shared charge function prices the raw
-/// tensor; on the oracle path (`features: None`) encoding is virtual and
-/// the byte/cost accounting stands. Returns how many tensors were
-/// (really or virtually) encoded — the count the DES driver charges
-/// `enc_cost_s` for.
+/// both drivers (`needs_encode` sends only). Every task the core marked
+/// `encoded` rides **one** [`InferenceEngine::encode_batch`] forward —
+/// the k same-stage tensors on a coalesced envelope share the encoder
+/// pass instead of paying k per-tensor encodes. Per-item fallback is
+/// unchanged: a tensor the engine declines (returns `None`, or the whole
+/// call errors) ships raw and `encoded` flips back so the shared charge
+/// function prices the raw tensor; on the oracle path (`features: None`)
+/// encoding is virtual and the byte/cost accounting stands. Returns how
+/// many encoder *forward passes* ran — 1 when anything (really or
+/// virtually) encoded, else 0 — the count the DES driver charges
+/// `enc_cost_s` for. (At batch size 1 this equals the old per-tensor
+/// count, so un-coalesced runs are bit-for-bit unchanged.)
 pub fn encode_batch(engine: &dyn InferenceEngine, tasks: &mut [Task]) -> usize {
-    let mut encoded = 0;
-    for task in tasks.iter_mut() {
+    // Split the marked tasks: real tensors go through the batched
+    // forward below; oracle-path tasks (no features) encode virtually.
+    let mut virtual_cnt = 0usize;
+    let mut real: Vec<(usize, Tensor)> = Vec::new();
+    for (i, task) in tasks.iter_mut().enumerate() {
         if !task.encoded {
             continue;
         }
         match task.features.take() {
-            Some(f) => match engine.encode(&f) {
-                Ok(Some(code)) => {
-                    task.features = Some(code);
-                    encoded += 1;
-                }
-                _ => {
-                    task.features = Some(f);
-                    task.encoded = false;
-                }
-            },
-            None => encoded += 1,
+            Some(f) => real.push((i, f)),
+            None => virtual_cnt += 1,
         }
     }
-    encoded
+    let mut real_ok = 0usize;
+    if !real.is_empty() {
+        let refs: Vec<&Tensor> = real.iter().map(|(_, f)| f).collect();
+        let codes = match engine.encode_batch(&refs) {
+            // A whole-call error (or a length-confused engine) means no
+            // tensor was coded: everyone ships raw.
+            Ok(codes) if codes.len() == real.len() => codes,
+            _ => vec![None; real.len()],
+        };
+        for ((i, f), code) in real.into_iter().zip(codes) {
+            match code {
+                Some(c) => {
+                    tasks[i].features = Some(c);
+                    real_ok += 1;
+                }
+                None => {
+                    tasks[i].features = Some(f);
+                    tasks[i].encoded = false;
+                }
+            }
+        }
+    }
+    usize::from(virtual_cnt > 0 || real_ok > 0)
 }
 
 /// Run a same-stage batch through the engine the way both drivers must:
@@ -2712,5 +2774,177 @@ mod tests {
             matches!(&acts[0], Action::Send { to: 1, env: Envelope::Result(_), .. }),
             "re-layered route via 1: {acts:?}"
         );
+    }
+
+    // ---- batched AE encode & wire recharge (PR 10) ------------------------
+
+    use crate::dataset::ExitTable;
+    use crate::testkit::TensorEngine;
+
+    fn meta_ae() -> ModelMeta {
+        let mut m = meta2();
+        m.ae = Some(AeMeta { enc_cost_s: 0.001, dec_cost_s: 0.001, code_bytes: 2048 });
+        m
+    }
+
+    fn tensor_engine() -> TensorEngine {
+        TensorEngine::new(ExitTable::synthetic(4, 2, vec![0.9; 8], vec![1; 8]), 16, 4)
+    }
+
+    /// A stage-2 task marked for encoding, carrying the engine's real
+    /// feature tensor for `sample` (or none, for the oracle path).
+    fn ae_task(eng: &TensorEngine, sample: usize, real: bool) -> Task {
+        let features = real.then(|| eng.features_for(sample));
+        Task {
+            stage: 2,
+            encoded: true,
+            ..Task::initial(sample as u64, sample, features, 0.0)
+        }
+    }
+
+    #[test]
+    fn batched_ae_matches_k_singles_and_charges_fewer_bytes() {
+        let m = meta_ae();
+        let k = 3usize;
+        let eng = tensor_engine();
+        let mut batch: Vec<Task> = (0..k).map(|s| ae_task(&eng, s, true)).collect();
+        assert_eq!(encode_batch(&eng, &mut batch), 1, "one priced forward for the run");
+        assert_eq!(eng.batch_forwards(), 1, "k tensors share one encoder pass");
+
+        // The same tensors encoded one by one (a fresh engine) must yield
+        // identical codes — hence identical per-task reconstruction error.
+        let solo = tensor_engine();
+        let mut singles: Vec<Task> = (0..k).map(|s| ae_task(&solo, s, true)).collect();
+        let mut forwards = 0;
+        for t in singles.iter_mut() {
+            forwards += encode_batch(&solo, std::slice::from_mut(t));
+        }
+        assert_eq!(forwards, k, "k un-coalesced sends pay k forwards");
+        for (b, s) in batch.iter().zip(&singles) {
+            assert!(b.encoded && s.encoded);
+            let code = b.features.as_ref().unwrap();
+            assert_eq!(code, s.features.as_ref().unwrap(), "batched code == single code");
+            let orig = eng.features_for(b.sample);
+            let rec = eng.decode(code).unwrap().unwrap();
+            let err: f32 = orig
+                .data()
+                .iter()
+                .zip(rec.data())
+                .map(|(a, r)| (a - r) * (a - r))
+                .sum();
+            assert!(err > 0.0, "pooling is lossy, so the error is measurable");
+        }
+
+        // One coalesced envelope of k codes undercuts k singletons by
+        // exactly the shed frames.
+        let coalesced = Envelope::TaskBatch(batch).encoded_bytes(&m);
+        let separate: usize = singles
+            .into_iter()
+            .map(|t| Envelope::TaskBatch(vec![t]).encoded_bytes(&m))
+            .sum();
+        assert_eq!(separate, k * 2048, "a singleton charges the AE code size");
+        assert_eq!(separate - coalesced, (k - 1) * ENVELOPE_HEADER_BYTES);
+    }
+
+    #[test]
+    fn encode_for_wire_recharges_declined_tensors_raw() {
+        let mut cfg = cfg_fixed("2-node", 50.0, 0.9);
+        cfg.warmup_s = 0.0;
+        cfg.use_ae = true;
+        let m = meta_ae();
+        let mut w = WorkerCore::new(0, &cfg, meta_ae(), &topo("2-node"), 8);
+        let eng = tensor_engine().declining([1]);
+        let tasks: Vec<Task> = (0..3).map(|s| ae_task(&eng, s, true)).collect();
+        let mut env = Envelope::TaskBatch(tasks);
+        let pre = env.encoded_bytes(&m);
+        assert_eq!(w.encode_for_wire(&eng, 0.5, &mut env), 1);
+        let post = env.encoded_bytes(&m);
+        // The declined middle tensor ships raw: its item charge grows from
+        // the code size to the full stage-2 activation.
+        assert_eq!(post - pre, 8192 - 2048);
+        let batch = env.task_batch().unwrap();
+        assert!(batch[0].encoded && batch[2].encoded, "the others stay coded");
+        assert!(!batch[1].encoded, "declined tensor flips raw");
+        let raw = batch[1].features.as_ref().unwrap();
+        assert_eq!(raw.data()[0], 1.0, "raw payload travels intact");
+        assert_eq!(raw.numel(), 16, "full tensor, not a code");
+        assert_eq!(
+            w.into_stats().wire_bytes,
+            (8192 - 2048) as u64,
+            "the sender re-charges exactly the fallback delta"
+        );
+    }
+
+    #[test]
+    fn encoder_error_ships_the_whole_batch_raw() {
+        let mut cfg = cfg_fixed("2-node", 50.0, 0.9);
+        cfg.warmup_s = 0.0;
+        let m = meta_ae();
+        let mut w = WorkerCore::new(0, &cfg, meta_ae(), &topo("2-node"), 8);
+        let eng = tensor_engine().erroring();
+        let tasks: Vec<Task> = (0..2).map(|s| ae_task(&eng, s, true)).collect();
+        let mut env = Envelope::TaskBatch(tasks);
+        let pre = env.encoded_bytes(&m);
+        assert_eq!(w.encode_for_wire(&eng, 0.5, &mut env), 0, "no forward completed");
+        assert_eq!(env.encoded_bytes(&m) - pre, 2 * (8192 - 2048));
+        assert!(env
+            .task_batch()
+            .unwrap()
+            .iter()
+            .all(|t| !t.encoded && t.features.is_some()));
+        assert_eq!(w.into_stats().wire_bytes, 2 * (8192 - 2048) as u64);
+    }
+
+    #[test]
+    fn virtual_encodes_price_one_forward_and_never_recharge() {
+        let mut cfg = cfg_fixed("2-node", 50.0, 0.9);
+        cfg.warmup_s = 0.0;
+        let m = meta_ae();
+        let mut w = WorkerCore::new(0, &cfg, meta_ae(), &topo("2-node"), 8);
+        // Oracle path (SimEngine-style): no tensors, the encode is virtual.
+        let eng = tensor_engine();
+        let tasks: Vec<Task> = (0..2).map(|s| ae_task(&eng, s, false)).collect();
+        let mut env = Envelope::TaskBatch(tasks);
+        let pre = env.encoded_bytes(&m);
+        assert_eq!(w.encode_for_wire(&eng, 0.5, &mut env), 1, "still one priced forward");
+        assert_eq!(eng.batch_forwards(), 0, "but no real encoder call runs");
+        assert_eq!(env.encoded_bytes(&m), pre, "code-size charge stands");
+        assert!(env.task_batch().unwrap().iter().all(|t| t.encoded));
+        assert_eq!(w.into_stats().wire_bytes, 0, "nothing to recharge");
+    }
+
+    #[test]
+    fn adaptive_coalescing_singles_when_idle_and_drains_under_pressure() {
+        let cfg = cfg_coalesce(CoalesceMode::Adaptive);
+        let mut w = WorkerCore::new(0, &cfg, meta2(), &topo("2-node"), 8);
+        w.busy = true;
+        // One measured transfer fixes the link's uncontended floor; the
+        // D_nm estimate equals it, so the medium reads as idle.
+        w.note_transfer_delay(1, 0.001);
+        for id in [1u64, 2, 3] {
+            w.queues.output.push(stage2(id, 0, 0.0));
+        }
+        let mut acts = Vec::new();
+        w.try_offload(0.0, &mut acts);
+        assert_eq!(acts.len(), 3, "idle medium pipelines singles: {acts:?}");
+        assert!(acts.iter().all(|a| matches!(
+            a,
+            Action::Send { env: Envelope::TaskBatch(b), .. } if b.len() == 1
+        )));
+        // Inflate the estimate far past the floor: a saturated medium
+        // flips the same queue state to one deep coalesced run.
+        for _ in 0..50 {
+            w.note_transfer_delay(1, 0.02);
+        }
+        for id in [4u64, 5, 6] {
+            w.queues.output.push(stage2(id, 0, 0.0));
+        }
+        let mut acts = Vec::new();
+        w.try_offload(0.0, &mut acts);
+        assert_eq!(acts.len(), 1, "contended medium coalesces: {acts:?}");
+        match &acts[0] {
+            Action::Send { env: Envelope::TaskBatch(batch), .. } => assert_eq!(batch.len(), 3),
+            other => panic!("expected one coalesced send, got {other:?}"),
+        }
     }
 }

@@ -14,7 +14,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::tensor::Tensor;
+use crate::tensor::{Tensor, TensorBuf};
 
 pub const DATASET_MAGIC: u32 = 0x4D44_4945; // "MDIE"
 pub const EXITS_MAGIC: u32 = 0x4D44_4958; // "MDIX"
@@ -26,10 +26,17 @@ pub struct Dataset {
     pub h: usize,
     pub w: usize,
     pub c: usize,
-    /// Quantized pixels, n*h*w*c, row-major.
-    pixels: Vec<u8>,
+    /// Dequantized pixels, n*h*w*c, row-major, shared: `image(i)` hands
+    /// out zero-copy views into this one buffer, so admission never
+    /// allocates or copies per task.
+    features: TensorBuf,
     pub labels: Vec<u8>,
     pub difficulty: Vec<f32>,
+}
+
+/// Invert `python/compile/data.py::quantize_u8` exactly: x = q/255 * 8 - 4.
+fn dequantize(pixels: &[u8]) -> TensorBuf {
+    TensorBuf::from_vec(pixels.iter().map(|&q| q as f32 / 255.0 * 8.0 - 4.0).collect())
 }
 
 fn read_u32s(buf: &[u8], n: usize) -> Result<Vec<u32>> {
@@ -59,24 +66,21 @@ impl Dataset {
         if buf.len() != expect {
             bail!("dataset size {} != expected {}", buf.len(), expect);
         }
-        let pixels = buf[24..24 + px].to_vec();
+        let features = dequantize(&buf[24..24 + px]);
         let labels = buf[24 + px..24 + px + n].to_vec();
         let difficulty = buf[24 + px + n..]
             .chunks_exact(4)
             .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
             .collect();
-        Ok(Dataset { n, h, w, c, pixels, labels, difficulty })
+        Ok(Dataset { n, h, w, c, features, labels, difficulty })
     }
 
-    /// Dequantize image `i` to the f32 tensor the stage-1 HLO expects.
-    /// Must invert `python/compile/data.py::quantize_u8` exactly:
-    /// x = q/255 * 8 - 4.
+    /// Image `i` as the f32 tensor the stage-1 HLO expects: a zero-copy
+    /// view into the dataset's shared, pre-dequantized feature buffer.
     pub fn image(&self, i: usize) -> Tensor {
         assert!(i < self.n, "image index {i} out of range {}", self.n);
         let sz = self.h * self.w * self.c;
-        let px = &self.pixels[i * sz..(i + 1) * sz];
-        let data = px.iter().map(|&q| q as f32 / 255.0 * 8.0 - 4.0).collect();
-        Tensor::new(vec![self.h, self.w, self.c], data)
+        Tensor::view(self.features.clone(), i * sz, vec![self.h, self.w, self.c])
     }
 
     pub fn label(&self, i: usize) -> u8 {
@@ -87,9 +91,9 @@ impl Dataset {
     /// labelled `h`×`w`×`c` images with deterministic pixel fill.
     pub fn synthetic(n: usize, h: usize, w: usize, c: usize, labels: Vec<u8>) -> Dataset {
         assert_eq!(labels.len(), n);
-        let pixels = (0..n * h * w * c).map(|i| (i % 256) as u8).collect();
+        let pixels: Vec<u8> = (0..n * h * w * c).map(|i| (i % 256) as u8).collect();
         let difficulty = (0..n).map(|i| i as f32 / n.max(1) as f32).collect();
-        Dataset { n, h, w, c, pixels, labels, difficulty }
+        Dataset { n, h, w, c, features: dequantize(&pixels), labels, difficulty }
     }
 }
 
@@ -182,6 +186,17 @@ mod tests {
         // pixel value 0 -> -4.0; pixel 255 -> +4.0
         assert!((img.data()[0] - (-4.0)).abs() < 1e-6);
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn images_are_views_over_one_shared_buffer() {
+        let ds = Dataset::synthetic(4, 2, 2, 3, vec![0, 1, 2, 3]);
+        let a = ds.image(0);
+        let b = ds.image(3);
+        assert!(a.aliases(&b), "images must alias the dataset store");
+        assert_eq!(a.numel(), 12);
+        // pixel value 0 -> -4.0 under the exact dequantize transform
+        assert!((a.data()[0] - (-4.0)).abs() < 1e-6);
     }
 
     #[test]

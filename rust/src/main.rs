@@ -89,8 +89,9 @@ fn print_help() {
            --drop-late       EDF: discard tasks whose deadline passed\n\
            --batch N         max same-stage tasks per batched engine call\n\
            --coalesce M      cross-worker batch coalescing: off (default) |\n\
-                             stage | stage-class — offloads drain same-stage\n\
-                             runs into one wire envelope\n\
+                             stage | stage-class | adaptive — offloads drain\n\
+                             same-stage runs into one wire envelope (adaptive\n\
+                             sizes the run from measured link contention)\n\
            --coalesce-max N  cap on tasks per coalesced envelope (default 8)\n\
            --arrival A       workload arrival model at the sources:\n\
                              legacy (default) | constant | poisson |\n\

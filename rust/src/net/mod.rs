@@ -62,6 +62,21 @@
 //!   result / re-home envelope, reproducing the seed's per-task wire
 //!   behaviour bit for bit — same message count, same byte charges, same
 //!   RNG draws.
+//!
+//! ## Zero-copy payloads (the buffer-aliasing contract)
+//!
+//! Feature tensors inside an envelope are offset/len *views* over shared,
+//! refcounted [`crate::tensor::TensorBuf`]s: putting a task on the wire,
+//! relaying it, re-homing it, or cloning a batch never copies activation
+//! data — only headers and refcounts move. The physical codec in
+//! [`wire`] upholds the same discipline ([`wire::encode`] borrows the
+//! senders' buffers; [`wire::decode`] reconstructs every view over ONE
+//! received allocation) and is deliberately independent of
+//! [`Envelope::encoded_bytes`]: the *simulated charge* is metadata-driven
+//! (`stage_in_bytes` / AE `code_bytes`) and stays bit-for-bit identical
+//! to the seed no matter how payloads are represented in memory.
+
+pub mod wire;
 
 use crate::coordinator::task::{InferenceResult, Task};
 use crate::coordinator::worker::ModelMeta;

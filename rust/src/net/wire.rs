@@ -1,0 +1,794 @@
+//! The physical envelope codec: zero-copy serialize / one-allocation
+//! deserialize for [`Envelope`].
+//!
+//! Two size notions coexist in `net/` and must not be confused:
+//!
+//! * [`Envelope::encoded_bytes`] is the *charging contract* — the paper's
+//!   metadata-driven cost model (`stage_in_bytes` / AE `code_bytes` per
+//!   item plus shared framing). It is what both drivers bill the medium
+//!   and what every counter records, and it is independent of how — or
+//!   whether — an envelope is ever rendered to physical bytes.
+//! * [`WireFrame`] is the *physical layout* — what would actually cross a
+//!   socket. Its length ([`WireFrame::byte_len`]) tracks the real f32
+//!   payload, which the simulation deliberately abstracts away.
+//!
+//! Changing this codec can therefore never change a simulated byte charge.
+//!
+//! ## Zero-copy discipline
+//!
+//! [`encode`] builds a [`WireFrame`]: a fixed 32-byte stack header, a
+//! small item-metadata vector, and a list of payload *segments* that are
+//! refcount-clones of the tasks' shared [`TensorBuf`]s
+//! (`crate::tensor`) — activation data is never copied to stage a send.
+//! [`WireFrame::to_bytes`] is the single place payload bytes are
+//! materialized (the physical transmit). [`decode`] parses the header and
+//! metadata, gathers *all* payload floats into ONE allocation, and hands
+//! every reconstructed task a [`Tensor::view`] into that one buffer — a
+//! k-task batch costs one allocation on receive, not k.
+//!
+//! The receiver-local `NeighborSummary::d_nm_s` field never travels the
+//! wire (see `policy::summary`); decoded summaries carry `0.0` until the
+//! receiver's estimator fills it, exactly like every other gossip arrival.
+
+use crate::coordinator::task::{InferenceResult, Task};
+use crate::policy::{NeighborSummary, RegionLoad};
+use crate::tensor::{Tensor, TensorBuf};
+
+use super::{Envelope, ENVELOPE_HEADER_BYTES};
+
+/// Leading magic of every physical frame ("MW" little-endian).
+const WIRE_MAGIC: u16 = 0x574D;
+/// Physical layout version.
+const WIRE_VERSION: u8 = 1;
+
+/// Header flag: a piggybacked gossip summary trails the item metadata.
+const FLAG_PIGGYBACK: u8 = 0x80;
+const KIND_TASKS: u8 = 0;
+const KIND_RESULTS: u8 = 1;
+const KIND_REHOME: u8 = 2;
+const KIND_STATE: u8 = 3;
+const KIND_MASK: u8 = 0x0f;
+
+/// Physical-codec failure: every malformed input is an error, never a
+/// panic (`net/` sits inside the panic budget — see rust/CONTRACTS.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// Input ended before the structure it promised.
+    Truncated,
+    /// Leading magic was not a wire frame.
+    BadMagic,
+    /// Unknown layout version.
+    BadVersion(u8),
+    /// Unknown envelope kind tag.
+    BadKind(u8),
+    /// Structurally invalid frame (reason names the field).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "wire frame truncated"),
+            WireError::BadMagic => write!(f, "bad wire magic"),
+            WireError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::BadKind(k) => write!(f, "unknown envelope kind {k}"),
+            WireError::Malformed(what) => write!(f, "malformed wire frame: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// A staged, zero-copy physical frame: stack header + item metadata +
+/// refcounted payload segments. Build with [`encode`]; materialize with
+/// [`WireFrame::to_bytes`].
+#[derive(Debug)]
+pub struct WireFrame {
+    header: [u8; ENVELOPE_HEADER_BYTES],
+    meta: Vec<u8>,
+    /// Payload tensors in item order — refcount clones aliasing the
+    /// senders' buffers, never copies.
+    segments: Vec<Tensor>,
+    payload_elems: usize,
+}
+
+impl WireFrame {
+    /// Physical length of the serialized frame in bytes.
+    pub fn byte_len(&self) -> usize {
+        ENVELOPE_HEADER_BYTES + self.meta.len() + self.payload_elems * 4
+    }
+
+    /// The payload segments this frame borrows (diagnostics/tests: each
+    /// aliases its source tensor's buffer).
+    pub fn segments(&self) -> &[Tensor] {
+        &self.segments
+    }
+
+    /// Materialize the frame for a physical medium — the one place
+    /// payload floats are rendered to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_len());
+        out.extend_from_slice(&self.header);
+        out.extend_from_slice(&self.meta);
+        for seg in &self.segments {
+            for v in seg.data() {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writers (little-endian throughout)
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_task(meta: &mut Vec<u8>, segments: &mut Vec<Tensor>, t: &Task) -> Result<(), WireError> {
+    put_u64(meta, t.id);
+    put_u64(meta, t.sample as u64);
+    put_u32(meta, u32::try_from(t.stage).map_err(|_| WireError::Malformed("stage"))?);
+    put_u32(meta, u32::try_from(t.source).map_err(|_| WireError::Malformed("source"))?);
+    put_f64(meta, t.admitted_at);
+    put_f64(meta, t.deadline);
+    put_u32(meta, t.hops);
+    meta.push(t.class);
+    meta.push(t.encoded as u8);
+    match &t.features {
+        Some(f) => {
+            let ndims =
+                u8::try_from(f.shape().len()).map_err(|_| WireError::Malformed("ndims"))?;
+            meta.push(1);
+            meta.push(ndims);
+            for &d in f.shape() {
+                put_u32(meta, u32::try_from(d).map_err(|_| WireError::Malformed("dim"))?);
+            }
+            segments.push(f.clone()); // refcount bump — the zero-copy borrow
+        }
+        None => {
+            meta.push(0);
+            meta.push(0);
+        }
+    }
+    Ok(())
+}
+
+fn put_result(meta: &mut Vec<u8>, r: &InferenceResult) -> Result<(), WireError> {
+    put_u64(meta, r.sample as u64);
+    put_u32(meta, u32::try_from(r.exit_point).map_err(|_| WireError::Malformed("exit_point"))?);
+    put_u32(meta, u32::try_from(r.exited_on).map_err(|_| WireError::Malformed("exited_on"))?);
+    put_u32(meta, u32::try_from(r.source).map_err(|_| WireError::Malformed("source"))?);
+    meta.push(r.prediction);
+    meta.push(r.class);
+    put_u16(meta, 0); // pad
+    put_f32(meta, r.confidence);
+    put_f64(meta, r.admitted_at);
+    put_f64(meta, r.deadline);
+    Ok(())
+}
+
+fn put_summary(meta: &mut Vec<u8>, s: &NeighborSummary) -> Result<(), WireError> {
+    // d_nm_s is receiver-local by contract and deliberately absent.
+    put_u64(meta, s.input_len as u64);
+    put_f64(meta, s.gamma_s);
+    put_f32(meta, s.t_e);
+    let n_class =
+        u16::try_from(s.per_class_input.len()).map_err(|_| WireError::Malformed("classes"))?;
+    let n_region = u16::try_from(s.region.len()).map_err(|_| WireError::Malformed("region"))?;
+    put_u16(meta, n_class);
+    put_u16(meta, n_region);
+    meta.push(s.min_slack_s.is_some() as u8);
+    meta.push(s.beat.is_some() as u8);
+    for &c in &s.per_class_input {
+        put_u32(meta, c);
+    }
+    if let Some(slack) = s.min_slack_s {
+        put_f64(meta, slack);
+    }
+    if let Some(beat) = s.beat {
+        put_u64(meta, beat);
+    }
+    for r in &s.region {
+        put_u32(meta, u32::try_from(r.node).map_err(|_| WireError::Malformed("region node"))?);
+        put_u32(
+            meta,
+            u32::try_from(r.input_len).map_err(|_| WireError::Malformed("region load"))?,
+        );
+        meta.push(r.hops);
+    }
+    Ok(())
+}
+
+/// Stage `env` for the wire: headers and metadata are written out, payload
+/// tensors are *borrowed* (refcount clones) — no activation data moves.
+pub fn encode(env: &Envelope) -> Result<WireFrame, WireError> {
+    let (kind, flags, payload, summary) = match env {
+        Envelope::TaskBatch(_) => (KIND_TASKS, 0u8, env, None),
+        Envelope::Result(_) => (KIND_RESULTS, 0, env, None),
+        Envelope::Rehome(_) => (KIND_REHOME, 0, env, None),
+        Envelope::State(s) => (KIND_STATE, 0, env, Some(s)),
+        Envelope::Piggybacked(inner, s) => {
+            let kind = match inner.as_ref() {
+                Envelope::TaskBatch(_) => KIND_TASKS,
+                Envelope::Result(_) => KIND_RESULTS,
+                Envelope::Rehome(_) => KIND_REHOME,
+                // Never nested / never wrapping gossip, by contract.
+                Envelope::State(_) | Envelope::Piggybacked(..) => {
+                    return Err(WireError::Malformed("piggyback wraps a payload envelope"))
+                }
+            };
+            (kind, FLAG_PIGGYBACK, inner.as_ref(), Some(s))
+        }
+    };
+
+    let mut meta = Vec::new();
+    let mut segments = Vec::new();
+    let items: u32 = match payload {
+        Envelope::TaskBatch(ts) | Envelope::Rehome(ts) => {
+            for t in ts {
+                put_task(&mut meta, &mut segments, t)?;
+            }
+            u32::try_from(ts.len()).map_err(|_| WireError::Malformed("items"))?
+        }
+        Envelope::Result(rs) => {
+            for r in rs {
+                put_result(&mut meta, r)?;
+            }
+            u32::try_from(rs.len()).map_err(|_| WireError::Malformed("items"))?
+        }
+        Envelope::State(_) => 1,
+        // `payload` above is never `Piggybacked` (matched out), but the
+        // compiler cannot see that; treat it as malformed rather than
+        // panic.
+        Envelope::Piggybacked(..) => return Err(WireError::Malformed("nested piggyback")),
+    };
+    if let Some(s) = summary {
+        put_summary(&mut meta, s)?;
+    }
+
+    let payload_elems: usize = segments.iter().map(|t| t.numel()).sum();
+    let mut header = [0u8; ENVELOPE_HEADER_BYTES];
+    header[0..2].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+    header[2] = WIRE_VERSION;
+    header[3] = kind | flags;
+    header[4..8].copy_from_slice(&items.to_le_bytes());
+    header[8..12].copy_from_slice(
+        &u32::try_from(payload_elems).map_err(|_| WireError::Malformed("payload"))?.to_le_bytes(),
+    );
+    // bytes 12..32 reserved (routing ids live here on a real medium)
+    Ok(WireFrame { header, meta, segments, payload_elems })
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated)?;
+        let s = self.buf.get(self.pos..end).ok_or(WireError::Truncated)?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        b.try_into().map(u16::from_le_bytes).map_err(|_| WireError::Truncated)
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        b.try_into().map(u32::from_le_bytes).map_err(|_| WireError::Truncated)
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        b.try_into().map(u64::from_le_bytes).map_err(|_| WireError::Truncated)
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        let b = self.take(4)?;
+        b.try_into().map(f32::from_le_bytes).map_err(|_| WireError::Truncated)
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        let b = self.take(8)?;
+        b.try_into().map(f64::from_le_bytes).map_err(|_| WireError::Truncated)
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len().saturating_sub(self.pos)
+    }
+}
+
+/// Task metadata plus the pending view description (shape + element
+/// count) to be resolved once the shared payload buffer exists.
+struct TaskMeta {
+    task: Task,
+    shape: Option<Vec<usize>>,
+}
+
+fn get_task(r: &mut Reader<'_>) -> Result<TaskMeta, WireError> {
+    let id = r.u64()?;
+    let sample = r.u64()? as usize;
+    let stage = r.u32()? as usize;
+    let source = r.u32()? as usize;
+    let admitted_at = r.f64()?;
+    let deadline = r.f64()?;
+    let hops = r.u32()?;
+    let class = r.u8()?;
+    let encoded = r.u8()? != 0;
+    let has_features = r.u8()? != 0;
+    let ndims = r.u8()? as usize;
+    let shape = if has_features {
+        let mut shape = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            shape.push(r.u32()? as usize);
+        }
+        Some(shape)
+    } else {
+        if ndims != 0 {
+            return Err(WireError::Malformed("dims without features"));
+        }
+        None
+    };
+    if stage == 0 {
+        return Err(WireError::Malformed("stage is 1-based"));
+    }
+    let task = Task {
+        id,
+        sample,
+        stage,
+        source,
+        features: None, // view attached after the payload buffer is read
+        encoded,
+        admitted_at,
+        hops,
+        class,
+        deadline,
+    };
+    Ok(TaskMeta { task, shape })
+}
+
+fn get_result(r: &mut Reader<'_>) -> Result<InferenceResult, WireError> {
+    let sample = r.u64()? as usize;
+    let exit_point = r.u32()? as usize;
+    let exited_on = r.u32()? as usize;
+    let source = r.u32()? as usize;
+    let prediction = r.u8()?;
+    let class = r.u8()?;
+    let _pad = r.u16()?;
+    let confidence = r.f32()?;
+    let admitted_at = r.f64()?;
+    let deadline = r.f64()?;
+    Ok(InferenceResult {
+        sample,
+        exit_point,
+        prediction,
+        confidence,
+        admitted_at,
+        deadline,
+        exited_on,
+        source,
+        class,
+    })
+}
+
+fn get_summary(r: &mut Reader<'_>) -> Result<NeighborSummary, WireError> {
+    let input_len = r.u64()? as usize;
+    let gamma_s = r.f64()?;
+    let t_e = r.f32()?;
+    let n_class = r.u16()? as usize;
+    let n_region = r.u16()? as usize;
+    let has_slack = r.u8()? != 0;
+    let has_beat = r.u8()? != 0;
+    let mut per_class_input = Vec::with_capacity(n_class.min(1024));
+    for _ in 0..n_class {
+        per_class_input.push(r.u32()?);
+    }
+    let min_slack_s = if has_slack { Some(r.f64()?) } else { None };
+    let beat = if has_beat { Some(r.u64()?) } else { None };
+    let mut region = Vec::with_capacity(n_region.min(1024));
+    for _ in 0..n_region {
+        let node = r.u32()? as usize;
+        let load = r.u32()? as usize;
+        let hops = r.u8()?;
+        region.push(RegionLoad { node, input_len: load, hops });
+    }
+    Ok(NeighborSummary {
+        input_len,
+        gamma_s,
+        t_e,
+        d_nm_s: 0.0, // receiver-local; the estimator fills it on arrival
+        per_class_input,
+        min_slack_s,
+        region,
+        beat,
+    })
+}
+
+/// Attach payload views to the decoded tasks: every task with features
+/// gets a [`Tensor::view`] into the ONE shared buffer, in item order.
+fn attach_views(metas: Vec<TaskMeta>, buf: &TensorBuf) -> Result<Vec<Task>, WireError> {
+    let mut tasks = Vec::with_capacity(metas.len());
+    let mut offset = 0usize;
+    for m in metas {
+        let mut task = m.task;
+        if let Some(shape) = m.shape {
+            let len: usize = shape.iter().product();
+            let end = offset.checked_add(len).ok_or(WireError::Malformed("payload overflow"))?;
+            if end > buf.len() {
+                return Err(WireError::Malformed("payload shorter than views"));
+            }
+            task.features = Some(Tensor::view(buf.clone(), offset, shape));
+            offset = end;
+        }
+        tasks.push(task);
+    }
+    if offset != buf.len() {
+        return Err(WireError::Malformed("payload longer than views"));
+    }
+    Ok(tasks)
+}
+
+/// Decode a physical frame. All payload floats land in ONE allocation;
+/// every reconstructed feature tensor is a view into it.
+pub fn decode(bytes: &[u8]) -> Result<Envelope, WireError> {
+    let mut r = Reader::new(bytes);
+    let header = r.take(ENVELOPE_HEADER_BYTES)?;
+    let magic = u16::from_le_bytes([header[0], header[1]]);
+    if magic != WIRE_MAGIC {
+        return Err(WireError::BadMagic);
+    }
+    if header[2] != WIRE_VERSION {
+        return Err(WireError::BadVersion(header[2]));
+    }
+    let kind = header[3] & KIND_MASK;
+    let piggyback = header[3] & FLAG_PIGGYBACK != 0;
+    let items = u32::from_le_bytes([header[4], header[5], header[6], header[7]]) as usize;
+    let payload_elems =
+        u32::from_le_bytes([header[8], header[9], header[10], header[11]]) as usize;
+
+    let payload = match kind {
+        KIND_TASKS | KIND_REHOME => {
+            // Capacity is a hint, clamped: a corrupt count must not
+            // reserve unbounded memory before parsing fails.
+            let mut metas = Vec::with_capacity(items.min(1024));
+            for _ in 0..items {
+                metas.push(get_task(&mut r)?);
+            }
+            let summary = if piggyback { Some(get_summary(&mut r)?) } else { None };
+            // ONE allocation for the whole batch's activations.
+            if r.remaining() != payload_elems * 4 {
+                return Err(WireError::Truncated);
+            }
+            let mut data = Vec::with_capacity(payload_elems);
+            for _ in 0..payload_elems {
+                data.push(r.f32()?);
+            }
+            let buf = TensorBuf::from_vec(data);
+            let tasks = attach_views(metas, &buf)?;
+            let inner = if kind == KIND_TASKS {
+                Envelope::TaskBatch(tasks)
+            } else {
+                Envelope::Rehome(tasks)
+            };
+            return Ok(match summary {
+                Some(s) => Envelope::Piggybacked(Box::new(inner), s),
+                None => inner,
+            });
+        }
+        KIND_RESULTS => {
+            let mut rs = Vec::with_capacity(items.min(1024));
+            for _ in 0..items {
+                rs.push(get_result(&mut r)?);
+            }
+            let summary = if piggyback { Some(get_summary(&mut r)?) } else { None };
+            let inner = Envelope::Result(rs);
+            match summary {
+                Some(s) => Envelope::Piggybacked(Box::new(inner), s),
+                None => inner,
+            }
+        }
+        KIND_STATE => {
+            if piggyback {
+                return Err(WireError::Malformed("gossip cannot piggyback on gossip"));
+            }
+            Envelope::State(get_summary(&mut r)?)
+        }
+        k => return Err(WireError::BadKind(k)),
+    };
+    if payload_elems != 0 || r.remaining() != 0 {
+        return Err(WireError::Malformed("trailing bytes"));
+    }
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::ModelMeta;
+    use crate::util::rng::{streams, Pcg64};
+
+    fn meta2() -> ModelMeta {
+        ModelMeta::synthetic(vec![0.002, 0.003], vec![12288, 8192])
+    }
+
+    fn task(id: u64, stage: usize, features: Option<Tensor>) -> Task {
+        Task {
+            stage,
+            class: (id % 3) as u8,
+            deadline: if id % 2 == 0 { f64::INFINITY } else { 1.5 + id as f64 },
+            hops: id as u32 % 4,
+            source: (id % 5) as usize,
+            encoded: false,
+            ..Task::initial(id, id as usize * 7, features, 0.125 * id as f64)
+        }
+    }
+
+    fn tensor(rng: &mut Pcg64, n: usize) -> Tensor {
+        Tensor::new(vec![n], (0..n).map(|_| rng.f64() as f32).collect())
+    }
+
+    fn summary_rich() -> NeighborSummary {
+        let mut s = NeighborSummary::base(9, 0.013, 0.85);
+        s.per_class_input = vec![4, 5];
+        s.min_slack_s = Some(-0.25);
+        s.region = vec![
+            RegionLoad { node: 3, input_len: 2, hops: 1 },
+            RegionLoad { node: 7, input_len: 0, hops: 2 },
+        ];
+        s.beat = Some(41);
+        s
+    }
+
+    fn assert_task_eq(a: &Task, b: &Task) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.sample, b.sample);
+        assert_eq!(a.stage, b.stage);
+        assert_eq!(a.source, b.source);
+        assert_eq!(a.encoded, b.encoded);
+        assert_eq!(a.admitted_at.to_bits(), b.admitted_at.to_bits());
+        assert_eq!(a.hops, b.hops);
+        assert_eq!(a.class, b.class);
+        assert_eq!(a.deadline.to_bits(), b.deadline.to_bits());
+        match (&a.features, &b.features) {
+            (None, None) => {}
+            (Some(x), Some(y)) => assert_eq!(x, y, "task {} features", a.id),
+            _ => panic!("task {}: feature presence diverged", a.id),
+        }
+    }
+
+    fn assert_env_eq(a: &Envelope, b: &Envelope) {
+        match (a, b) {
+            (Envelope::TaskBatch(x), Envelope::TaskBatch(y))
+            | (Envelope::Rehome(x), Envelope::Rehome(y)) => {
+                assert_eq!(x.len(), y.len());
+                for (t, u) in x.iter().zip(y) {
+                    assert_task_eq(t, u);
+                }
+            }
+            (Envelope::Result(x), Envelope::Result(y)) => assert_eq!(x, y),
+            (Envelope::State(x), Envelope::State(y)) => assert_eq!(x, y),
+            (Envelope::Piggybacked(xi, xs), Envelope::Piggybacked(yi, ys)) => {
+                assert_env_eq(xi, yi);
+                assert_eq!(xs, ys);
+            }
+            _ => panic!("envelope kind diverged"),
+        }
+    }
+
+    /// Roundtrip + re-encode byte identity + unchanged simulated charge.
+    fn roundtrip(env: &Envelope) -> Envelope {
+        let m = meta2();
+        let charge_before = env.encoded_bytes(&m);
+        let frame = encode(env).expect("encode");
+        let bytes = frame.to_bytes();
+        assert_eq!(bytes.len(), frame.byte_len());
+        let back = decode(&bytes).expect("decode");
+        assert_eq!(
+            back.encoded_bytes(&m),
+            charge_before,
+            "physical codec must not perturb the simulated charge"
+        );
+        let bytes2 = encode(&back).expect("re-encode").to_bytes();
+        assert_eq!(bytes, bytes2, "re-encoded frame must be byte-identical");
+        back
+    }
+
+    #[test]
+    fn task_batch_roundtrips_with_mixed_payloads() {
+        let mut rng = Pcg64::new(7, streams::PROP_CASES);
+        let env = Envelope::TaskBatch(vec![
+            task(1, 2, Some(tensor(&mut rng, 6))),
+            task(2, 2, None), // oracle/DES path: no materialized features
+            task(3, 2, Some(tensor(&mut rng, 10))),
+        ]);
+        let back = roundtrip(&env);
+        assert_env_eq(&env, &back);
+        // All decoded views share ONE received allocation.
+        if let Envelope::TaskBatch(ts) = &back {
+            let views: Vec<&Tensor> = ts.iter().filter_map(|t| t.features.as_ref()).collect();
+            assert_eq!(views.len(), 2);
+            assert!(views[0].aliases(views[1]), "views must share the receive buffer");
+        } else {
+            panic!("kind changed");
+        }
+    }
+
+    #[test]
+    fn encode_borrows_payload_buffers() {
+        let mut rng = Pcg64::new(8, streams::PROP_CASES);
+        let t = task(4, 1, Some(tensor(&mut rng, 12)));
+        let src = t.features.clone().expect("features");
+        let env = Envelope::TaskBatch(vec![t]);
+        let frame = encode(&env).expect("encode");
+        assert_eq!(frame.segments().len(), 1);
+        assert!(
+            frame.segments()[0].aliases(&src),
+            "staging a send must borrow, not copy, the activation buffer"
+        );
+    }
+
+    #[test]
+    fn encoded_flag_and_rehome_roundtrip() {
+        let mut rng = Pcg64::new(9, streams::PROP_CASES);
+        let mut t = task(5, 2, Some(tensor(&mut rng, 4)));
+        t.encoded = true;
+        let env = Envelope::Rehome(vec![t, task(6, 2, None)]);
+        let back = roundtrip(&env);
+        assert_env_eq(&env, &back);
+    }
+
+    #[test]
+    fn result_batch_roundtrips() {
+        let r1 = InferenceResult {
+            sample: 3,
+            exit_point: 1,
+            prediction: 7,
+            confidence: 0.91,
+            admitted_at: 0.5,
+            deadline: f64::INFINITY,
+            exited_on: 2,
+            source: 0,
+            class: 1,
+        };
+        let r2 = InferenceResult { sample: 4, exit_point: 2, deadline: 2.25, ..r1 };
+        let env = Envelope::Result(vec![r1, r2]);
+        assert_env_eq(&env, &roundtrip(&env));
+    }
+
+    #[test]
+    fn state_roundtrips_except_receiver_local_delay() {
+        let mut s = summary_rich();
+        s.d_nm_s = 0.375; // must NOT travel
+        let env = Envelope::State(s.clone());
+        let back = roundtrip(&env);
+        if let Envelope::State(got) = back {
+            assert_eq!(got.d_nm_s, 0.0, "d_nm_s is receiver-local");
+            let mut expect = s;
+            expect.d_nm_s = 0.0;
+            assert_eq!(got, expect);
+        } else {
+            panic!("kind changed");
+        }
+    }
+
+    #[test]
+    fn piggybacked_roundtrips() {
+        let mut rng = Pcg64::new(10, streams::PROP_CASES);
+        let inner = Envelope::TaskBatch(vec![
+            task(7, 1, Some(tensor(&mut rng, 5))),
+            task(8, 1, Some(tensor(&mut rng, 5))),
+        ]);
+        let mut s = summary_rich();
+        s.d_nm_s = 0.0;
+        let env = Envelope::Piggybacked(Box::new(inner), s);
+        assert_env_eq(&env, &roundtrip(&env));
+    }
+
+    #[test]
+    fn nested_or_state_piggyback_is_rejected() {
+        let s = NeighborSummary::base(1, 0.01, 0.9);
+        let env = Envelope::Piggybacked(
+            Box::new(Envelope::State(NeighborSummary::base(2, 0.01, 0.9))),
+            s.clone(),
+        );
+        assert!(encode(&env).is_err());
+        let env = Envelope::Piggybacked(
+            Box::new(Envelope::Piggybacked(
+                Box::new(Envelope::Result(vec![])),
+                s.clone(),
+            )),
+            s,
+        );
+        assert!(encode(&env).is_err());
+    }
+
+    #[test]
+    fn malformed_inputs_error_instead_of_panicking() {
+        assert!(matches!(decode(&[]), Err(WireError::Truncated)));
+        let mut rng = Pcg64::new(11, streams::PROP_CASES);
+        let env = Envelope::TaskBatch(vec![task(9, 1, Some(tensor(&mut rng, 8)))]);
+        let good = encode(&env).expect("encode").to_bytes();
+        // Truncations at every prefix length must error, never panic.
+        for cut in 0..good.len() {
+            assert!(decode(&good[..cut]).is_err(), "prefix {cut} decoded");
+        }
+        // Bad magic / version / kind.
+        let mut bad = good.clone();
+        bad[0] ^= 0xff;
+        assert!(matches!(decode(&bad), Err(WireError::BadMagic)));
+        let mut bad = good.clone();
+        bad[2] = 99;
+        assert!(matches!(decode(&bad), Err(WireError::BadVersion(99))));
+        let mut bad = good.clone();
+        bad[3] = 9;
+        assert!(matches!(decode(&bad), Err(WireError::BadKind(9))));
+        // Trailing garbage is rejected.
+        let mut bad = good;
+        bad.push(0);
+        assert!(decode(&bad).is_err());
+    }
+
+    /// Seeded mini-fuzz: random envelopes roundtrip byte-identically.
+    /// Sizes stay tiny so the Miri `net::` lane interprets this quickly.
+    #[test]
+    fn random_envelopes_roundtrip_byte_identically() {
+        let mut rng = Pcg64::new(13, streams::PROP_CASES);
+        for case in 0..12u64 {
+            let k = 1 + (rng.next_u64() % 3) as usize;
+            let tasks: Vec<Task> = (0..k)
+                .map(|i| {
+                    let id = case * 10 + i as u64;
+                    let feats = if rng.next_u64() % 4 == 0 {
+                        None
+                    } else {
+                        Some(tensor(&mut rng, 1 + (rng.next_u64() % 6) as usize))
+                    };
+                    let mut t = task(id, 1 + (id % 3) as usize, feats);
+                    t.encoded = rng.next_u64() % 5 == 0;
+                    t
+                })
+                .collect();
+            let env = if case % 3 == 0 {
+                Envelope::Piggybacked(Box::new(Envelope::TaskBatch(tasks)), summary_rich())
+            } else if case % 3 == 1 {
+                Envelope::Rehome(tasks)
+            } else {
+                Envelope::TaskBatch(tasks)
+            };
+            assert_env_eq(&env, &roundtrip(&env));
+        }
+    }
+}

@@ -59,6 +59,7 @@
 
 pub mod alg;
 mod baseline;
+mod coalesce;
 mod deadline;
 mod multihop;
 mod summary;
@@ -70,6 +71,7 @@ pub use alg::{
     NeighborView, OffloadRule, RateController, ThresholdController,
 };
 pub use baseline::{BaselineAdapt, BaselineExit, BaselineOffload, LocalOnlyExit};
+pub use coalesce::AdaptiveCoalesce;
 pub use deadline::DeadlineAware;
 pub use multihop::MultiHop;
 pub use summary::{NeighborSummary, RegionLoad, BASE_SUMMARY_BYTES};
@@ -194,6 +196,17 @@ pub trait OffloadPolicy: Send + std::fmt::Debug {
     ) -> Option<usize> {
         let _ = run_len;
         self.choose(ctx, rng)
+    }
+
+    /// After [`OffloadPolicy::choose_coalesced`] accepted `target`: how
+    /// many of the `run_len` coalescible tasks to actually drain into the
+    /// envelope. The core clamps the answer to `[1, run_len]`; shipping
+    /// fewer than the policy priced is always safe (a shorter run, never a
+    /// longer one). The default takes the whole run — only
+    /// [`crate::sched::CoalesceMode::Adaptive`] installs a sizing policy
+    /// ([`AdaptiveCoalesce`]) that shrinks it on an idle medium.
+    fn coalesce_take(&mut self, _ctx: &OffloadCtx<'_>, _target: usize, run_len: usize) -> usize {
+        run_len
     }
 }
 

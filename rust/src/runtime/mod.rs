@@ -83,6 +83,18 @@ pub trait InferenceEngine {
         Ok(None)
     }
 
+    /// Autoencoder-encode a batch of same-stage feature tensors with
+    /// **one** engine call, returning one code per input in order — the
+    /// wire-side analogue of [`InferenceEngine::run_stage_batch`]: k
+    /// tensors riding one coalesced envelope share a single AE forward
+    /// (its fixed dispatch/compute is charged once per batch by the
+    /// drivers), instead of paying k per-tensor encodes. The default
+    /// loops [`InferenceEngine::encode`]; engines with a real batched AE
+    /// forward override it.
+    fn encode_batch(&self, features: &[&Tensor]) -> Result<Vec<Option<Tensor>>> {
+        features.iter().map(|f| self.encode(f)).collect()
+    }
+
     /// Autoencoder decode (inverse of [`InferenceEngine::encode`]).
     fn decode(&self, _code: &Tensor) -> Result<Option<Tensor>> {
         Ok(None)

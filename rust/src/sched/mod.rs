@@ -62,6 +62,14 @@ pub enum CoalesceMode {
     /// Coalesce only same-stage *and* same-class runs, so one envelope
     /// never mixes traffic classes (strictest per-class semantics).
     StageClass,
+    /// Same-stage coalescing with an *adaptively sized* run: the offload
+    /// policy's [`crate::policy::OffloadPolicy::coalesce_take`] seam
+    /// shrinks the drained run from measured link contention (D_nm
+    /// inflation over its best-observed floor) — singles on an idle
+    /// medium, where pipelined transfers beat one long envelope; runs up
+    /// to `coalesce_max` under pressure, where shed headers and saved
+    /// contention slots win.
+    Adaptive,
 }
 
 impl CoalesceMode {
@@ -70,9 +78,10 @@ impl CoalesceMode {
             "off" => CoalesceMode::Off,
             "stage" => CoalesceMode::Stage,
             "stage-class" => CoalesceMode::StageClass,
+            "adaptive" => CoalesceMode::Adaptive,
             other => {
                 return Err(format!(
-                    "unknown coalesce mode {other:?} (off|stage|stage-class)"
+                    "unknown coalesce mode {other:?} (off|stage|stage-class|adaptive)"
                 ))
             }
         })
@@ -229,6 +238,7 @@ mod tests {
         assert_eq!(CoalesceMode::parse("off").unwrap(), CoalesceMode::Off);
         assert_eq!(CoalesceMode::parse("stage").unwrap(), CoalesceMode::Stage);
         assert_eq!(CoalesceMode::parse("stage-class").unwrap(), CoalesceMode::StageClass);
+        assert_eq!(CoalesceMode::parse("adaptive").unwrap(), CoalesceMode::Adaptive);
         assert!(CoalesceMode::parse("warp").is_err());
         let s = SchedConfig { coalesce_max: 0, ..SchedConfig::default() };
         assert!(s.validate().is_err(), "coalesce_max 0 is rejected");

@@ -4,14 +4,78 @@
 //! coordinator only moves feature tensors between queues, links, and the
 //! runtime. Kept free of `xla` types so coordinator tests never need PJRT
 //! (the Literal conversions live in `runtime::xla_engine`).
+//!
+//! # Buffer aliasing (the zero-copy contract)
+//!
+//! A [`Tensor`] is an *offset/len view* over a shared, immutable
+//! [`TensorBuf`] (an `Arc<Vec<f32>>`). Cloning a tensor bumps a refcount;
+//! it never copies activation data. This is what lets the coordinator
+//! enqueue, offload, re-home, and relay tasks — and let `net::Envelope`
+//! encode/decode — without materializing payload bytes per hop:
+//!
+//! * many tensors may alias one buffer (e.g. every view decoded from one
+//!   received wire allocation, or every image view over the dataset's
+//!   pre-dequantized store);
+//! * buffers are write-once: mutation goes through [`Tensor::data_mut`],
+//!   which copies-on-write iff the buffer is shared or the view is
+//!   partial, so aliasing views can never observe each other's writes;
+//! * code outside `tensor/`, `runtime/`, and `net/` must not materialize
+//!   payloads (`into_data()`, `.data().to_vec()`) — the `wire-charge`
+//!   xtask rule flags reintroduced copies on the task path.
 
 use std::fmt;
+use std::sync::Arc;
 
-/// A dense row-major f32 tensor.
-#[derive(Clone, PartialEq)]
+/// A shared, immutable f32 buffer. Cheap to clone (refcount bump); many
+/// [`Tensor`] views may alias one buffer.
+#[derive(Clone)]
+pub struct TensorBuf {
+    data: Arc<Vec<f32>>,
+}
+
+impl TensorBuf {
+    pub fn from_vec(data: Vec<f32>) -> TensorBuf {
+        TensorBuf { data: Arc::new(data) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Do `a` and `b` share one allocation?
+    pub fn ptr_eq(a: &TensorBuf, b: &TensorBuf) -> bool {
+        Arc::ptr_eq(&a.data, &b.data)
+    }
+}
+
+impl fmt::Debug for TensorBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TensorBuf[{} elems, rc={}]", self.data.len(), Arc::strong_count(&self.data))
+    }
+}
+
+/// A dense row-major f32 tensor: a shaped offset/len view over a shared
+/// [`TensorBuf`]. `Clone` is a refcount bump, never a data copy.
+#[derive(Clone)]
 pub struct Tensor {
     shape: Vec<usize>,
-    data: Vec<f32>,
+    buf: TensorBuf,
+    offset: usize,
+    len: usize,
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.shape == other.shape && self.data() == other.data()
+    }
 }
 
 impl Tensor {
@@ -22,16 +86,28 @@ impl Tensor {
             "shape {shape:?} does not match {} elements",
             data.len()
         );
-        Tensor { shape, data }
+        let len = data.len();
+        Tensor { shape, buf: TensorBuf::from_vec(data), offset: 0, len }
+    }
+
+    /// A view of `buf[offset..offset + shape.product()]` — no copy.
+    pub fn view(buf: TensorBuf, offset: usize, shape: Vec<usize>) -> Tensor {
+        let len = shape.iter().product::<usize>();
+        assert!(
+            offset + len <= buf.len(),
+            "view [{offset}, {offset}+{len}) out of buffer ({} elems)",
+            buf.len()
+        );
+        Tensor { shape, buf, offset, len }
     }
 
     pub fn zeros(shape: Vec<usize>) -> Tensor {
         let n = shape.iter().product();
-        Tensor { shape, data: vec![0.0; n] }
+        Tensor { shape, buf: TensorBuf::from_vec(vec![0.0; n]), offset: 0, len: n }
     }
 
     pub fn scalar(v: f32) -> Tensor {
-        Tensor { shape: vec![], data: vec![v] }
+        Tensor { shape: vec![], buf: TensorBuf::from_vec(vec![v]), offset: 0, len: 1 }
     }
 
     pub fn shape(&self) -> &[usize] {
@@ -39,31 +115,65 @@ impl Tensor {
     }
 
     pub fn numel(&self) -> usize {
-        self.data.len()
+        self.len
     }
 
     /// Serialized size on a simulated link (f32 payload).
     pub fn wire_bytes(&self) -> usize {
-        self.data.len() * 4
+        self.len * 4
     }
 
     pub fn data(&self) -> &[f32] {
-        &self.data
+        &self.buf.as_slice()[self.offset..self.offset + self.len]
     }
 
+    /// The backing buffer this view aliases (refcount bump to clone).
+    pub fn buf(&self) -> &TensorBuf {
+        &self.buf
+    }
+
+    /// Does this tensor alias the same allocation as `other`?
+    pub fn aliases(&self, other: &Tensor) -> bool {
+        TensorBuf::ptr_eq(&self.buf, &other.buf)
+    }
+
+    /// Mutable access, copy-on-write: if the backing buffer is shared (or
+    /// this view covers only part of it), the view's elements are first
+    /// copied into a fresh exclusive buffer so aliasing views never observe
+    /// the writes.
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        let exclusive = self.offset == 0
+            && self.len == self.buf.len()
+            && Arc::strong_count(&self.buf.data) == 1;
+        if !exclusive {
+            let owned: Vec<f32> = self.data().to_vec();
+            self.buf = TensorBuf::from_vec(owned);
+            self.offset = 0;
+        }
+        let data = Arc::get_mut(&mut self.buf.data)
+            .expect("buffer is exclusive after copy-on-write");
+        &mut data[..]
     }
 
+    /// Extract the element data, copying only if the buffer is shared or
+    /// the view is partial.
     pub fn into_data(self) -> Vec<f32> {
-        self.data
+        if self.offset == 0 && self.len == self.buf.len() {
+            match Arc::try_unwrap(self.buf.data) {
+                Ok(v) => v,
+                Err(arc) => arc.as_slice().to_vec(),
+            }
+        } else {
+            self.data().to_vec()
+        }
     }
 
     /// Index of the largest element (class prediction from a probs vector).
     pub fn argmax(&self) -> usize {
+        let data = self.data();
         let mut best = 0;
-        for (i, &v) in self.data.iter().enumerate() {
-            if v > self.data[best] {
+        for (i, &v) in data.iter().enumerate() {
+            if v > data[best] {
                 best = i;
             }
         }
@@ -72,12 +182,12 @@ impl Tensor {
 
     /// Largest element — the paper's confidence level C_k(d), eq. (2).
     pub fn max(&self) -> f32 {
-        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+        self.data().iter().copied().fold(f32::NEG_INFINITY, f32::max)
     }
 
     /// Reinterpret with a new shape of identical element count.
     pub fn reshaped(mut self, shape: Vec<usize>) -> Tensor {
-        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        assert_eq!(shape.iter().product::<usize>(), self.len);
         self.shape = shape;
         self
     }
@@ -85,7 +195,7 @@ impl Tensor {
 
 impl fmt::Debug for Tensor {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.len)
     }
 }
 
@@ -133,5 +243,55 @@ mod tests {
         let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).reshaped(vec![4]);
         assert_eq!(t.shape(), &[4]);
         assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn clone_aliases_same_buffer() {
+        let t = Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let c = t.clone();
+        assert!(t.aliases(&c), "clone must share the allocation");
+        assert_eq!(t, c);
+    }
+
+    #[test]
+    fn views_share_one_buffer() {
+        let buf = TensorBuf::from_vec(vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let a = Tensor::view(buf.clone(), 0, vec![3]);
+        let b = Tensor::view(buf.clone(), 3, vec![3]);
+        assert_eq!(a.data(), &[0.0, 1.0, 2.0]);
+        assert_eq!(b.data(), &[3.0, 4.0, 5.0]);
+        assert!(a.aliases(&b));
+        assert_eq!(a.wire_bytes(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of buffer")]
+    fn view_out_of_range_panics() {
+        let buf = TensorBuf::from_vec(vec![0.0; 4]);
+        Tensor::view(buf, 2, vec![3]);
+    }
+
+    #[test]
+    fn data_mut_copies_on_write_when_shared() {
+        let t = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let mut c = t.clone();
+        c.data_mut()[0] = 9.0;
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0], "alias must not see the write");
+        assert_eq!(c.data(), &[9.0, 2.0, 3.0]);
+        assert!(!t.aliases(&c), "write must have detached the buffer");
+    }
+
+    #[test]
+    fn data_mut_in_place_when_exclusive() {
+        let mut t = Tensor::new(vec![2], vec![1.0, 2.0]);
+        t.data_mut()[1] = 7.0;
+        assert_eq!(t.data(), &[1.0, 7.0]);
+    }
+
+    #[test]
+    fn into_data_on_partial_view_copies_view_only() {
+        let buf = TensorBuf::from_vec(vec![0.0, 1.0, 2.0, 3.0]);
+        let v = Tensor::view(buf, 1, vec![2]);
+        assert_eq!(v.into_data(), vec![1.0, 2.0]);
     }
 }

@@ -1,0 +1,228 @@
+//! An engine-free [`InferenceEngine`] with REAL feature tensors and a
+//! deterministic autoencoder — the test substrate for the zero-copy wire
+//! and the batched-AE seam.
+//!
+//! [`crate::runtime::sim_engine::SimEngine`] replays oracle confidences
+//! but produces `features: None`, so every sender-side encode is
+//! *virtual* and the AE fallback/recharge machinery never runs under it.
+//! [`TensorEngine`] replays the same oracle table **and** materializes a
+//! deterministic feature tensor per (sample, stage), so full runs on
+//! either driver exercise the physical path: views travel the queues, the
+//! AE encodes real tensors (average-pool by `pool`, decode repeats — a
+//! fixed, engine-independent reconstruction error), and failure injection
+//! covers the mid-batch fallback:
+//!
+//! * [`TensorEngine::declining`] — the AE declines (`Ok(None)`) the given
+//!   samples, which then ship raw and re-charge the wire;
+//! * [`TensorEngine::declining_all`] — every encode declines;
+//! * [`TensorEngine::erroring`] — the whole encoder call fails (`Err`).
+//!
+//! Encoder invocations are counted ([`TensorEngine::batch_forwards`],
+//! [`TensorEngine::single_encodes`]) so tests can assert that k coalesced
+//! tensors ride ONE batched forward.
+//!
+//! The first element of every feature tensor is the sample id, which is
+//! how the encoder recovers the sample for failure injection — and how a
+//! test can tell whose payload it is looking at.
+
+use std::cell::Cell;
+use std::collections::HashSet;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::dataset::ExitTable;
+use crate::runtime::{InferenceEngine, StageOutput};
+use crate::tensor::Tensor;
+
+/// Oracle-replay engine with real tensors and a pooling autoencoder.
+#[derive(Debug)]
+pub struct TensorEngine {
+    table: ExitTable,
+    /// Elements of every inter-stage feature tensor (divisible by `pool`).
+    feat: usize,
+    /// AE pooling factor: code length is `feat / pool`.
+    pool: usize,
+    declined: HashSet<usize>,
+    decline_all: bool,
+    error_encodes: bool,
+    batch_forwards: Cell<usize>,
+    single_encodes: Cell<usize>,
+}
+
+impl TensorEngine {
+    pub fn new(table: ExitTable, feat: usize, pool: usize) -> TensorEngine {
+        assert!(pool >= 1, "pool factor must be >= 1");
+        assert!(feat >= pool && feat % pool == 0, "feat {feat} not divisible by pool {pool}");
+        TensorEngine {
+            table,
+            feat,
+            pool,
+            declined: HashSet::new(),
+            decline_all: false,
+            error_encodes: false,
+            batch_forwards: Cell::new(0),
+            single_encodes: Cell::new(0),
+        }
+    }
+
+    /// The AE declines (`Ok(None)`) tensors of these samples: they ship
+    /// raw and the sender re-charges the wire.
+    pub fn declining(mut self, samples: impl IntoIterator<Item = usize>) -> TensorEngine {
+        self.declined.extend(samples);
+        self
+    }
+
+    /// Every encode declines — the run behaves byte-for-byte like a run
+    /// without an AE, which is exactly what the recharge tests assert.
+    pub fn declining_all(mut self) -> TensorEngine {
+        self.decline_all = true;
+        self
+    }
+
+    /// The whole encoder call errors (`Err`): the entire batch ships raw.
+    pub fn erroring(mut self) -> TensorEngine {
+        self.error_encodes = true;
+        self
+    }
+
+    /// How many batched encoder forwards ran ([`InferenceEngine::encode_batch`]).
+    pub fn batch_forwards(&self) -> usize {
+        self.batch_forwards.get()
+    }
+
+    /// How many per-tensor encodes ran ([`InferenceEngine::encode`]).
+    pub fn single_encodes(&self) -> usize {
+        self.single_encodes.get()
+    }
+
+    /// The deterministic feature tensor entering the stage after `sample`'s
+    /// current one: element 0 is the sample id, the rest a fixed pattern.
+    pub fn features_for(&self, sample: usize) -> Tensor {
+        let mut data = Vec::with_capacity(self.feat);
+        data.push(sample as f32);
+        for i in 1..self.feat {
+            data.push(((sample * 31 + i * 7) % 17) as f32 * 0.25 - 2.0);
+        }
+        Tensor::new(vec![self.feat], data)
+    }
+
+    fn encode_one(&self, features: &Tensor) -> Result<Option<Tensor>> {
+        if self.error_encodes {
+            bail!("injected encoder failure");
+        }
+        let data = features.data();
+        let sample = data.first().copied().unwrap_or(0.0) as usize;
+        if self.decline_all || self.declined.contains(&sample) {
+            return Ok(None);
+        }
+        let code: Vec<f32> = data
+            .chunks(self.pool)
+            .map(|c| c.iter().sum::<f32>() / c.len() as f32)
+            .collect();
+        Ok(Some(Tensor::new(vec![code.len()], code)))
+    }
+}
+
+impl InferenceEngine for TensorEngine {
+    fn num_stages(&self) -> usize {
+        self.table.num_exits
+    }
+
+    fn run_stage(
+        &self,
+        k: usize,
+        sample: usize,
+        _features: Option<&Tensor>,
+    ) -> Result<StageOutput> {
+        let exits = self.table.num_exits;
+        ensure!(k >= 1 && k <= exits, "stage {k} out of 1..={exits}");
+        ensure!(sample < self.table.n, "sample {sample} out of table ({})", self.table.n);
+        let features = if k < exits { Some(self.features_for(sample)) } else { None };
+        Ok(StageOutput {
+            features,
+            confidence: self.table.confidence(sample, k - 1),
+            prediction: self.table.prediction(sample, k - 1),
+        })
+    }
+
+    fn encode(&self, features: &Tensor) -> Result<Option<Tensor>> {
+        self.single_encodes.set(self.single_encodes.get() + 1);
+        self.encode_one(features)
+    }
+
+    fn encode_batch(&self, features: &[&Tensor]) -> Result<Vec<Option<Tensor>>> {
+        self.batch_forwards.set(self.batch_forwards.get() + 1);
+        features.iter().map(|f| self.encode_one(f)).collect()
+    }
+
+    fn decode(&self, code: &Tensor) -> Result<Option<Tensor>> {
+        let mut out = Vec::with_capacity(code.numel() * self.pool);
+        for &v in code.data() {
+            for _ in 0..self.pool {
+                out.push(v);
+            }
+        }
+        Ok(Some(Tensor::new(vec![out.len()], out)))
+    }
+
+    fn has_autoencoder(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> ExitTable {
+        ExitTable::synthetic(4, 2, vec![0.9; 8], vec![1; 8])
+    }
+
+    #[test]
+    fn stages_replay_the_table_with_real_features() {
+        let eng = TensorEngine::new(table(), 16, 4);
+        let out = eng.run_stage(1, 2, None).unwrap();
+        let f = out.features.expect("mid-pipeline stage produces features");
+        assert_eq!(f.numel(), 16);
+        assert_eq!(f.data()[0], 2.0, "element 0 carries the sample id");
+        assert!((out.confidence - 0.9).abs() < 1e-6);
+        assert!(eng.run_stage(2, 0, None).unwrap().features.is_none(), "final stage");
+        assert!(eng.run_stage(3, 0, None).is_err());
+    }
+
+    #[test]
+    fn encode_pools_and_decode_repeats() {
+        let eng = TensorEngine::new(table(), 8, 4);
+        let f = Tensor::new(vec![8], vec![0.0, 4.0, 0.0, 4.0, 1.0, 1.0, 3.0, 3.0]);
+        let code = eng.encode(&f).unwrap().expect("encodes");
+        assert_eq!(code.data(), &[2.0, 2.0]);
+        let rec = eng.decode(&code).unwrap().expect("decodes");
+        assert_eq!(rec.numel(), 8);
+        assert_eq!(rec.data()[0], 2.0);
+        assert_eq!(eng.single_encodes(), 1);
+        assert_eq!(eng.batch_forwards(), 0);
+    }
+
+    #[test]
+    fn failure_injection_declines_and_errors() {
+        let eng = TensorEngine::new(table(), 8, 2).declining([3]);
+        assert!(eng.encode(&eng.features_for(3)).unwrap().is_none(), "sample 3 declines");
+        assert!(eng.encode(&eng.features_for(1)).unwrap().is_some());
+        let eng = TensorEngine::new(table(), 8, 2).declining_all();
+        assert!(eng.encode(&eng.features_for(1)).unwrap().is_none());
+        let eng = TensorEngine::new(table(), 8, 2).erroring();
+        assert!(eng.encode(&eng.features_for(1)).is_err());
+        assert!(eng.encode_batch(&[&eng.features_for(1)]).is_err());
+    }
+
+    #[test]
+    fn batch_encode_counts_one_forward() {
+        let eng = TensorEngine::new(table(), 8, 2);
+        let (a, b) = (eng.features_for(0), eng.features_for(1));
+        let codes = eng.encode_batch(&[&a, &b]).unwrap();
+        assert_eq!(codes.len(), 2);
+        assert!(codes.iter().all(|c| c.is_some()));
+        assert_eq!(eng.batch_forwards(), 1);
+        assert_eq!(eng.single_encodes(), 0);
+    }
+}

@@ -1,4 +1,7 @@
 //! Test & bench substrates (criterion / proptest substitutes, DESIGN.md §1).
 
 pub mod bench;
+pub mod engine;
 pub mod prop;
+
+pub use engine::TensorEngine;

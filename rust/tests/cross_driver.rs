@@ -12,13 +12,14 @@ use std::sync::Mutex;
 use anyhow::Result;
 
 use mdi_exit::coordinator::{
-    AdmissionMode, Driver, ExperimentConfig, Mode, ModelMeta, OffloadKind, Placement, Run,
-    RunReport, ENVELOPE_HEADER_BYTES,
+    AdmissionMode, AeMeta, Driver, ExperimentConfig, Mode, ModelMeta, OffloadKind, Placement,
+    Run, RunReport, ENVELOPE_HEADER_BYTES,
 };
 use mdi_exit::dataset::{Dataset, ExitTable};
 use mdi_exit::runtime::sim_engine::SimEngine;
 use mdi_exit::runtime::InferenceEngine;
 use mdi_exit::sched::{BatchPolicy, CoalesceMode, DisciplineKind};
+use mdi_exit::testkit::TensorEngine;
 use mdi_exit::workload::ArrivalSpec;
 
 /// The realtime runs busy-spin one thread per worker for cost emulation;
@@ -641,5 +642,142 @@ fn cluster_relayers_around_a_midpath_leave_on_both_drivers() {
     assert!(
         (fd[0] - fr[0]).abs() < 0.15,
         "exit-1 fraction diverged: DES {fd:?} vs realtime {fr:?}"
+    );
+}
+
+// ---- autoencoder wire legs (real tensors through the zero-copy path) ------
+
+fn meta_ae() -> ModelMeta {
+    let mut m = meta();
+    m.ae = Some(AeMeta { enc_cost_s: 0.001, dec_cost_s: 0.001, code_bytes: 2048 });
+    m
+}
+
+fn tensor_engine() -> TensorEngine {
+    let (table, _) = oracle();
+    TensorEngine::new(table, 16, 4)
+}
+
+/// DES run over real feature tensors: the dataset supplies stage-1 image
+/// views and the [`TensorEngine`] materializes inter-stage tensors, so the
+/// sender-side AE step is physical (batched forward + per-item fallback),
+/// not the oracle's virtual bookkeeping.
+fn run_des_tensor(cfg: ExperimentConfig, ds: &Dataset, engine: &TensorEngine) -> RunReport {
+    Run::builder()
+        .config(cfg)
+        .model(meta_ae())
+        .engine(engine)
+        .dataset(ds)
+        .driver(Driver::Des)
+        .execute()
+        .expect("DES run")
+}
+
+/// Round-robin offloading pushes every continuing stage-2 task to a
+/// neighbor regardless of load — the decision is queue-independent, so the
+/// AE and raw runs offload the same work and their byte totals compare.
+fn rr(mut c: ExperimentConfig, use_ae: bool) -> ExperimentConfig {
+    c.policy.offload = OffloadKind::RoundRobin;
+    c.use_ae = use_ae;
+    c
+}
+
+#[test]
+fn des_ae_fail_all_is_byte_identical_to_a_raw_run() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    let ds = Dataset::synthetic(labels.len(), 2, 2, 3, labels.to_vec());
+    // Every encode declines: zero encoder forwards are priced, zero decode
+    // costs are charged (only `encoded` tasks pay them), and every payload
+    // ships raw after the sender-side `note_wire_recharge` reconciliation —
+    // so the run must be indistinguishable from `use_ae = false`, event for
+    // event and byte for byte.
+    let declining = tensor_engine().declining_all();
+    let ae = run_des_tensor(rr(cfg("3-node-mesh", 150.0, 5.0), true), &ds, &declining);
+    let plain = tensor_engine();
+    let raw = run_des_tensor(rr(cfg("3-node-mesh", 150.0, 5.0), false), &ds, &plain);
+
+    assert!(ae.task_transfers > 100, "no offload traffic to compare");
+    assert_eq!(ae.bytes_on_wire, raw.bytes_on_wire, "recharge must land on raw bytes");
+    assert_eq!(ae.task_transfers, raw.task_transfers);
+    assert_eq!(ae.completed, raw.completed);
+    assert_eq!(ae.exit_fractions(), raw.exit_fractions());
+    // The charging identity survives the recharge path: run totals are
+    // still exactly the per-worker envelope sums.
+    let wire: u64 = ae.per_worker.iter().map(|w| w.wire_bytes).sum();
+    assert_eq!(ae.bytes_on_wire, wire);
+}
+
+#[test]
+fn des_ae_codes_cut_wire_bytes_without_hurting_accuracy() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    let ds = Dataset::synthetic(labels.len(), 2, 2, 3, labels.to_vec());
+    let eng = tensor_engine();
+    let ae = run_des_tensor(rr(cfg("3-node-mesh", 150.0, 5.0), true), &ds, &eng);
+    let plain = tensor_engine();
+    let raw = run_des_tensor(rr(cfg("3-node-mesh", 150.0, 5.0), false), &ds, &plain);
+
+    assert!(ae.task_transfers > 100, "round-robin must push stage-2 work out");
+    assert!(eng.batch_forwards() > 0, "the physical encoder actually ran");
+    assert_eq!(eng.single_encodes(), 0, "sends ride the batched forward, not per-item encodes");
+    // Stage-2 codes (2048 B) replace raw activations (8192 B) on every
+    // offload; results are unchanged, so non-gossip bytes collapse to
+    // roughly a quarter.
+    let task_bytes = |r: &RunReport| r.bytes_on_wire - r.gossip_bytes();
+    assert!(
+        (task_bytes(&ae) as f64) < 0.55 * task_bytes(&raw) as f64,
+        "AE {} bytes vs raw {} bytes",
+        task_bytes(&ae),
+        task_bytes(&raw)
+    );
+    // Decode feeds the oracle replay untouched: accuracy survives coding.
+    assert!((ae.accuracy() - 1.0).abs() < 1e-9, "accuracy {}", ae.accuracy());
+    let wire: u64 = ae.per_worker.iter().map(|w| w.wire_bytes).sum();
+    assert_eq!(ae.bytes_on_wire, wire, "charging identity holds with AE codes");
+}
+
+#[test]
+fn realtime_ae_codes_and_recharges_account_like_des() {
+    let _g = serialized();
+    let (_, labels) = oracle();
+    let ds = Dataset::synthetic(labels.len(), 2, 2, 3, labels.to_vec());
+    let rt_ae = |decline: bool| {
+        let factory = move |_w: usize| -> Result<Box<dyn InferenceEngine>> {
+            let (table, _) = oracle();
+            let eng = TensorEngine::new(table, 16, 4);
+            let eng = if decline { eng.declining_all() } else { eng };
+            Ok(Box::new(eng) as Box<dyn InferenceEngine>)
+        };
+        Run::builder()
+            .config(rr(cfg("3-node-mesh", 150.0, 2.5), true))
+            .model(meta_ae())
+            .engine_factory(factory)
+            .dataset(&ds)
+            .driver(Driver::Realtime)
+            .execute()
+            .expect("realtime run")
+    };
+    let coded = rt_ae(false);
+    let declined = rt_ae(true);
+
+    for (name, r) in [("coded", &coded), ("declined", &declined)] {
+        assert!(r.task_transfers > 50, "{name}: no offload traffic");
+        assert!((r.accuracy() - 1.0).abs() < 1e-9, "{name}: accuracy {}", r.accuracy());
+        // Same identity the DES legs assert: one charging function, no
+        // driver-private byte path — including the realtime recharge.
+        let wire: u64 = r.per_worker.iter().map(|w| w.wire_bytes).sum();
+        assert_eq!(r.bytes_on_wire, wire, "{name}: charging identity");
+    }
+    // Wallclock jitter moves the *counts*, never the per-envelope sizes:
+    // a coded stage-2 envelope carries 2048 B against the declined run's
+    // recharged 8192 B raw activation.
+    let per_env =
+        |r: &RunReport| (r.bytes_on_wire - r.gossip_bytes()) as f64 / r.task_transfers as f64;
+    assert!(
+        per_env(&coded) < 0.55 * per_env(&declined),
+        "coded {:.0} B/envelope vs declined {:.0} B/envelope",
+        per_env(&coded),
+        per_env(&declined)
     );
 }

@@ -8,7 +8,9 @@
 //!   `coordinator/rt.rs`, `util/logging.rs`, `coordinator/clock.rs`.
 //! * `wire-charge` — envelope byte-size identifiers only appear in `net/`
 //!   and the driver choke points; no arithmetic on `encoded_bytes()`
-//!   outside `net/`.
+//!   outside `net/`; no owned payload copies (`into_data()`,
+//!   `.data().to_vec()`) outside `tensor/`, `runtime/`, `net/` —
+//!   activations travel the queues and the wire as shared-buffer views.
 //! * `telemetry-purity` — no RNG or clock identifiers inside
 //!   `telemetry/` (recorders observe; they never perturb).
 //! * `panic-budget` — no `unwrap`/`expect`/`panic!`-family in non-test
@@ -55,6 +57,7 @@ pub fn run_all(path: &str, orig: &[u8], cleaned: &[u8], mask: &[bool], out: &mut
     rng_streams(path, orig, cleaned, mask, out);
     clock_purity(path, orig, cleaned, mask, out);
     wire_charge(path, orig, cleaned, mask, out);
+    payload_copy(path, orig, cleaned, mask, out);
     telemetry_purity(path, orig, cleaned, mask, out);
     panic_budget(path, orig, cleaned, mask, out);
 }
@@ -366,6 +369,67 @@ pub fn wire_charge(
     }
 }
 
+/// Call patterns that materialize an owned copy of a tensor payload.
+/// `into_data` gets identifier-boundary matching; the method chain is
+/// matched literally (same line, no interior spaces — the idiomatic
+/// spelling both escape hatches document).
+const COPY_PATTERNS: [&[u8]; 2] = [b"into_data", b".data().to_vec()"];
+
+/// Directories that may materialize owned payload copies: the tensor
+/// module (defines the escape hatches), engines under `runtime/`
+/// (marshalling activations across an FFI boundary is their job), and
+/// the wire codec.
+const COPY_ALLOWED: [&str; 3] = ["/tensor/", "/runtime/", "/net/"];
+
+/// Everything between admission and the wire moves `Tensor` views
+/// (refcount bumps), never owned `Vec<f32>` copies — that is what the
+/// zero-copy hot path is made of. A payload copy outside the allowed
+/// modules silently reintroduces the pre-zero-copy cost without
+/// changing any observable byte accounting, so only a lint can catch it.
+pub fn payload_copy(
+    path: &str,
+    orig: &[u8],
+    cleaned: &[u8],
+    mask: &[bool],
+    out: &mut Vec<Finding>,
+) {
+    if COPY_ALLOWED.iter().any(|d| path.contains(d)) {
+        return;
+    }
+    for pat in COPY_PATTERNS {
+        let hits: Vec<usize> = if pat == b"into_data" {
+            scan::word_hits(cleaned, pat)
+        } else {
+            let mut hs = Vec::new();
+            let mut start = 0;
+            while let Some(a) = scan::find(cleaned, pat, start) {
+                hs.push(a);
+                start = a + 1;
+            }
+            hs
+        };
+        for a in hits {
+            if mask[a] || scan::is_use_line(cleaned, a) {
+                continue;
+            }
+            let shown = String::from_utf8_lossy(pat).into_owned();
+            emit(
+                out,
+                "wire-charge",
+                path,
+                orig,
+                cleaned,
+                a,
+                format!(
+                    "owned payload copy ({shown}) outside tensor/, runtime/, net/ \
+                     (activations travel as shared-buffer views; copying here \
+                     silently reintroduces the pre-zero-copy hot path)"
+                ),
+            );
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // telemetry-purity
 // ---------------------------------------------------------------------------
@@ -548,6 +612,30 @@ mod tests {
         // Re-export lines are exempt everywhere.
         let reexport = "pub use crate::net::{Envelope, ENVELOPE_HEADER_BYTES, RESULT_BYTES};";
         assert!(run("src/coordinator/mod.rs", reexport).is_empty());
+    }
+
+    #[test]
+    fn wire_rule_catches_payload_copies_outside_the_wire() {
+        let copy = "fn f(t: &Tensor) -> Vec<f32> { t.data().to_vec() }";
+        let fs = run("src/coordinator/worker.rs", copy);
+        assert_eq!(rules_of(&fs), ["wire-charge"], "{fs:?}");
+        assert!(fs[0].msg.contains("payload copy"), "{}", fs[0].msg);
+
+        let consume = "fn f(t: Tensor) -> Vec<f32> { t.into_data() }";
+        assert_eq!(rules_of(&run("src/policy/mod.rs", consume)), ["wire-charge"]);
+
+        // The escape hatches' home, engines, and the wire codec may copy.
+        assert!(run("src/tensor/mod.rs", copy).is_empty());
+        assert!(run("src/runtime/sim_engine.rs", consume).is_empty());
+        assert!(run("src/net/wire.rs", copy).is_empty());
+
+        // Test code, use lines, and unrelated identifiers are exempt.
+        let in_test = "#[cfg(test)]\nmod tests { fn t(x: &Tensor) { x.data().to_vec(); } }";
+        assert!(run("src/coordinator/worker.rs", in_test).is_empty());
+        let reexport = "pub use crate::tensor::into_data;";
+        assert!(run("src/coordinator/mod.rs", reexport).is_empty());
+        let other_ident = "fn f() { let turn_into_database = 1; }";
+        assert!(run("src/coordinator/worker.rs", other_ident).is_empty());
     }
 
     #[test]
